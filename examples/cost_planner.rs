@@ -1,0 +1,76 @@
+//! Deployment-cost planner: the paper's §3 analysis end to end.
+//!
+//! Takes the diurnal day curve (Fig. 2), provisions an embedding fleet
+//! three ways — average-rate (Eq. 5), peak NPU-only (Eq. 6), peak with
+//! WindVE CPU offloading — and replays the day through the open-loop
+//! simulator to show what each choice does to SLO attainment and rejects.
+
+use windve::costmodel::{self, CostInputs};
+use windve::devices::profile::DeviceProfile;
+use windve::sim::des::OpenLoopSim;
+use windve::workload::diurnal::DiurnalCurve;
+
+fn main() {
+    let slo = 1.0;
+    let npu = DeviceProfile::v100_bge();
+    let cpu = DeviceProfile::xeon_e5_2690_bge();
+    let c_npu = npu.true_max_concurrency(slo, 75);
+    let c_cpu = cpu.true_max_concurrency(slo, 75);
+
+    // A consumer app's day, scaled so the evening peak needs ~3 instances.
+    let curve = DiurnalCurve::typical(20.0, 10.0);
+    let mean = curve.mean_rate();
+    let peak = curve.peak_rate();
+    println!("day curve: mean {mean:.1} q/s, peak {peak:.1} q/s (peak/mean {:.2}x)", peak / mean);
+
+    let inp = CostInputs { devices_per_instance: 1.0, price_per_device: 10_000.0 };
+    // Throughput of one instance ≈ C / t(C) at the SLO point.
+    let t_at_c = npu.service_time(c_npu, 75);
+    let inst_qps = c_npu as f64 / t_at_c;
+    let n_slots = costmodel::waiting_slots(slo, t_at_c / c_npu as f64);
+
+    let cost_avg = costmodel::cost_average(mean, n_slots, inst_qps, inp);
+    let cost_peak_npu = costmodel::cost_peak(peak, c_npu as f64, inp);
+    let cost_peak_windve = costmodel::cost_peak(peak, (c_npu + c_cpu) as f64, inp);
+    println!("\nprovisioning costs (Eq. 5 / Eq. 6, arbitrary $ scale):");
+    println!("  average-rate (Eq. 5):        ${cost_avg:>10.0}");
+    println!("  peak NPU-only (Eq. 6):       ${cost_peak_npu:>10.0}");
+    println!("  peak WindVE (NPU+CPU):       ${cost_peak_windve:>10.0}");
+    println!(
+        "  WindVE saves {:.1}% of peak provisioning (paper bound C_CPU/(C_CPU+C_NPU) = {:.1}%)",
+        100.0 * (1.0 - cost_peak_windve / cost_peak_npu),
+        100.0 * costmodel::savings_peak(c_npu, c_cpu),
+    );
+
+    // Replay the evening peak hour through the open-loop simulator with
+    // an average-provisioned single instance, with and without offload.
+    println!("\nreplaying the 20:30 peak hour (one instance):");
+    let peak_rate = curve.rate(20.5);
+    let arrivals = OpenLoopSim::poisson_arrivals(|_| peak_rate, peak_rate, 120.0, 7);
+    for (name, cpu_prof, cpu_depth) in [
+        ("NPU only (baseline)", None, 0usize),
+        ("WindVE (CPU offload)", Some(cpu.clone()), c_cpu),
+    ] {
+        let sim = OpenLoopSim {
+            npu: npu.clone(),
+            cpu: cpu_prof,
+            npu_depth: c_npu,
+            cpu_depth,
+            qlen: 75,
+            slo,
+            seed: 11,
+        };
+        let st = sim.run(&arrivals);
+        println!(
+            "  {:<22} arrived {:>5}  served {:>5}  rejected {:>4} ({:>4.1}%)  SLO attainment {:>5.1}%  p99 {:>6.0} ms",
+            name,
+            st.arrived,
+            st.served(),
+            st.rejected,
+            100.0 * st.reject_rate(),
+            100.0 * st.slo_attainment(),
+            st.latency_us.p99() as f64 / 1e3,
+        );
+    }
+    println!("\ncost_planner OK");
+}

@@ -1,0 +1,226 @@
+//! END-TO-END DRIVER: the full WindVE system on a real workload.
+//!
+//! 1. Calibrate this host's real PJRT engine (§4.2.2: fit t = α·C + β,
+//!    solve queue depths for a host-scaled SLO).
+//! 2. Start the WindVE service — queue manager + two real engine
+//!    instances ("NPU" role and "CPU" offload role, each its own model
+//!    copy) — and drive closed-loop concurrent clients through it.
+//! 3. Compare against the non-offloading baseline (CPU queue disabled,
+//!    what FlagEmbedding gives you) at the same concurrency: report
+//!    throughput, p50/p99 latency, SLO attainment and busy rejects.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use windve::coordinator::instance::BackendFactory;
+use windve::coordinator::{ServiceConfig, WindVE};
+use windve::coordinator::service::ServeError;
+use windve::devices::executor::RealBackend;
+use windve::metrics::Histogram;
+use windve::repro::calibrate::calibrate_host;
+use windve::workload::queries::QueryGen;
+
+struct PhaseResult {
+    name: String,
+    served: u64,
+    busy: u64,
+    timeouts: u64,
+    qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    slo_attainment: f64,
+    npu_share: f64,
+}
+
+fn real_factory(artifacts: std::path::PathBuf, model: String) -> BackendFactory {
+    Box::new(move || {
+        Ok(Box::new(RealBackend::load(&artifacts, &model)?)
+            as Box<dyn windve::devices::executor::Backend>)
+    })
+}
+
+/// Closed-loop phase: `clients` threads, each embeds sequentially for
+/// `duration`.
+fn run_phase(
+    name: &str,
+    svc: &Arc<WindVE>,
+    clients: usize,
+    duration: Duration,
+    slo: Duration,
+    qlen: usize,
+) -> PhaseResult {
+    let hist = Arc::new(Histogram::new());
+    let served = Arc::new(AtomicU64::new(0));
+    let busy = Arc::new(AtomicU64::new(0));
+    let violations = Arc::new(AtomicU64::new(0));
+    let timeouts = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicU64::new(0));
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|cid| {
+            let svc = Arc::clone(svc);
+            let hist = Arc::clone(&hist);
+            let served = Arc::clone(&served);
+            let busy = Arc::clone(&busy);
+            let violations = Arc::clone(&violations);
+            let timeouts = Arc::clone(&timeouts);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut gen = QueryGen::new(qlen, 0x9A55 + cid as u64);
+                while stop.load(Ordering::Relaxed) == 0 {
+                    let q = gen.query();
+                    let t = Instant::now();
+                    match svc.embed_blocking(q, slo.mul_f64(40.0)) {
+                        Ok(_) => {
+                            let el = t.elapsed();
+                            hist.record(el.as_nanos() as u64);
+                            served.fetch_add(1, Ordering::Relaxed);
+                            if el > slo {
+                                violations.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(ServeError::Busy) => {
+                            busy.fetch_add(1, Ordering::Relaxed);
+                            // paper client: back off briefly on 'busy'
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(ServeError::Timeout) => {
+                            // Count as a (gross) SLO violation; the slot is
+                            // still released by the worker when the batch
+                            // completes.
+                            timeouts.fetch_add(1, Ordering::Relaxed);
+                            violations.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("serve error: {e}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    std::thread::sleep(duration);
+    stop.store(1, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (rn, rc, _rej) = svc.queue_manager().stats();
+    let served_n = served.load(Ordering::Relaxed);
+    PhaseResult {
+        name: name.to_string(),
+        served: served_n,
+        busy: busy.load(Ordering::Relaxed),
+        timeouts: timeouts.load(Ordering::Relaxed),
+        qps: served_n as f64 / wall,
+        p50_ms: hist.p50() as f64 / 1e6,
+        p99_ms: hist.p99() as f64 / 1e6,
+        slo_attainment: {
+            let v = violations.load(Ordering::Relaxed);
+            let total = served_n + timeouts.load(Ordering::Relaxed);
+            if total == 0 { 1.0 } else { 1.0 - v as f64 / total as f64 }
+        },
+        npu_share: if rn + rc == 0 { 1.0 } else { rn as f64 / (rn + rc) as f64 },
+    }
+}
+
+fn print_result(r: &PhaseResult, slo: Duration) {
+    println!(
+        "  {:<26} served {:>5} ({:>6.1} q/s)  p50 {:>7.1} ms  p99 {:>7.1} ms  SLO({}ms) {:>5.1}%  busy {:>4}  timeouts {:>3}  npu-share {:>4.0}%",
+        r.name, r.served, r.qps, r.p50_ms, r.p99_ms,
+        slo.as_millis(), 100.0 * r.slo_attainment, r.busy, r.timeouts, 100.0 * r.npu_share
+    );
+}
+
+/// Block until the service's backends are compiled and serving (engine
+/// warmup happens on the worker threads; measuring it would charge AOT
+/// compile time to the serving phase).
+fn wait_ready(svc: &Arc<WindVE>, probes: usize) {
+    let t0 = Instant::now();
+    for i in 0..probes.max(1) {
+        let _ = svc.embed_blocking(format!("warmup probe {i}"), Duration::from_secs(300));
+    }
+    println!("  (service ready in {:?})", t0.elapsed());
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("WINDVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let qlen = 75; // the paper's canonical RAG segment length
+    println!("== phase 0: host calibration (paper §4.2.2 on the real engine) ==");
+    let cal = calibrate_host(&artifacts, "bge_micro", qlen, 1.0, 3)?;
+    windve::repro::calibrate::print(&cal);
+
+    // Host-scaled SLO: tight enough that the queue-depth decision matters
+    // on this machine — 4x the fitted batch-8 latency.
+    let slo_s = (cal.fit.predict(8.0) * 4.0).clamp(0.05, 2.0);
+    let slo = Duration::from_secs_f64(slo_s);
+    let npu_depth = cal.fit.max_concurrency(slo_s).clamp(1, 16);
+    let cpu_depth = (npu_depth / 3).max(2);
+    println!(
+        "\nhost-scaled SLO {:.0} ms → NPU-role depth {npu_depth}, CPU-role depth {cpu_depth}",
+        slo_s * 1e3
+    );
+
+    let peak_clients = npu_depth + cpu_depth; // paper: peak = joint capacity
+    let phase_len = Duration::from_secs(10);
+
+    println!("\n== phase 1: WindVE (hetero offloading ON) ==");
+    let windve_svc = Arc::new(WindVE::start(
+        ServiceConfig {
+            npu_depth,
+            cpu_depth,
+            hetero: true,
+            npu_workers: 1,
+            cpu_workers: 1,
+            cpu_pin_cores: None,
+            cache_entries: 0,
+            cache_key_space: (8192, 128),
+        },
+        vec![real_factory(artifacts.clone(), "bge_micro".into())],
+        vec![real_factory(artifacts.clone(), "bge_micro".into())],
+    )?);
+    wait_ready(&windve_svc, peak_clients);
+    let windve_res = run_phase("WindVE (offloading)", &windve_svc, peak_clients, phase_len, slo, qlen);
+    print_result(&windve_res, slo);
+    drop(windve_svc);
+
+    println!("\n== phase 2: baseline (no offloading — FlagEmbedding-style) ==");
+    let base_svc = Arc::new(WindVE::start(
+        ServiceConfig {
+            npu_depth,
+            cpu_depth: 0,
+            hetero: false,
+            npu_workers: 1,
+            cpu_workers: 0,
+            cpu_pin_cores: None,
+            cache_entries: 0,
+            cache_key_space: (8192, 128),
+        },
+        vec![real_factory(artifacts.clone(), "bge_micro".into())],
+        vec![],
+    )?);
+    wait_ready(&base_svc, peak_clients);
+    let base_res = run_phase("baseline (NPU only)", &base_svc, peak_clients, phase_len, slo, qlen);
+    print_result(&base_res, slo);
+    drop(base_svc);
+
+    println!("\n== summary ==");
+    print_result(&base_res, slo);
+    print_result(&windve_res, slo);
+    let uplift = 100.0 * (windve_res.qps / base_res.qps - 1.0);
+    println!(
+        "\nWindVE serves {:.1}% more throughput at peak concurrency {} \
+         (busy rejects: baseline {}, WindVE {})",
+        uplift, peak_clients, base_res.busy, windve_res.busy
+    );
+    anyhow::ensure!(
+        windve_res.busy < base_res.busy || windve_res.qps > base_res.qps,
+        "offloading should reduce rejects or raise throughput"
+    );
+    println!("peak_offload E2E OK");
+    Ok(())
+}

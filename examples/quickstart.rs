@@ -1,0 +1,44 @@
+//! Quickstart: load the AOT-compiled embedding model and embed a few
+//! queries — the minimal "is everything wired" example.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use windve::runtime::{engine::cosine, EmbeddingEngine};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("WINDVE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    println!("loading bge_micro from {} ...", artifacts.display());
+    let mut engine = EmbeddingEngine::load(&artifacts, "bge_micro")?;
+    println!(
+        "loaded in {:?} (d_model={}, max batch={})",
+        engine.load_time,
+        engine.d_model(),
+        engine.max_batch()
+    );
+
+    let texts = vec![
+        "retrieval augmented generation for large language models".to_string(),
+        "rag systems ground llm answers in retrieved documents".to_string(),
+        "the evening traffic peak overwhelms the embedding service".to_string(),
+    ];
+    let t0 = std::time::Instant::now();
+    let vecs = engine.embed(&texts)?;
+    println!("embedded {} texts in {:?}", texts.len(), t0.elapsed());
+
+    for (t, v) in texts.iter().zip(&vecs) {
+        let head: Vec<String> = v.iter().take(5).map(|x| format!("{x:+.3}")).collect();
+        println!("  {:<60} -> [{} ...]", format!("{t:?}"), head.join(" "));
+    }
+    println!("\npairwise cosine similarities:");
+    for i in 0..vecs.len() {
+        for j in (i + 1)..vecs.len() {
+            println!("  ({i}, {j}): {:+.4}", cosine(&vecs[i], &vecs[j]));
+        }
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,184 @@
+"""AOT export: lower the L2 model (with L1 Pallas kernels) to HLO text.
+
+Python runs ONCE, here. Outputs per model:
+  artifacts/<model>_b{B}_s{S}.hlo.txt   one static-shape executable per
+                                        (batch, seq) bucket
+  artifacts/<model>.wtar                weights archive (runtime params)
+  artifacts/manifest.json               parameter ABI + bucket index
+  artifacts/golden.json                 input/output pairs + tokenizer
+                                        parity vectors for Rust tests
+
+HLO *text* is the interchange format: jax >= 0.5 serialises HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import tokenizer, wtar
+
+DEFAULT_BUCKETS = {
+    # (batches, seqs) exported per model. 80 covers the paper's canonical
+    # 75-token RAG segment length (padded to a multiple of 16).
+    "bge_micro": ([1, 2, 4, 8, 16], [32, 80, 128]),
+    "jina_micro": ([1, 2, 4, 8], [32, 80]),
+}
+
+GOLDEN_TEXTS = [
+    "Retrieval augmented generation enhances large language models",
+    "WindVE offloads peak concurrent queries from the NPU to idle host CPUs",
+    "vector embedding maps text to high dimensional semantic vectors",
+    "the queue manager rejects excess queries with a busy status",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(cfg, batch: int, seq: int) -> str:
+    """Lower embed(weights..., ids, mask) for one static bucket."""
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in model_lib.param_specs(cfg)
+    ]
+    ids_spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    mask_spec = jax.ShapeDtypeStruct((batch, seq), jnp.float32)
+
+    def fn(*args):
+        params = model_lib.params_from_list(cfg, args[: len(specs)])
+        ids, mask = args[len(specs)], args[len(specs) + 1]
+        return (model_lib.forward(cfg, params, ids, mask, use_pallas=True),)
+
+    lowered = jax.jit(fn).lower(*specs, ids_spec, mask_spec)
+    return to_hlo_text(lowered)
+
+
+def source_digest() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip cleanly."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(base)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()
+
+
+def export_model(cfg, out_dir: str, seed: int, batches, seqs, entry: dict) -> None:
+    params = model_lib.init_params(cfg, seed=seed)
+    flat = model_lib.params_to_list(cfg, params)
+    wtar_path = os.path.join(out_dir, f"{cfg.name}.wtar")
+    wtar.write(wtar_path, [(n, a) for (n, _), a in zip(model_lib.param_specs(cfg), flat)])
+
+    entry["config"] = {
+        "name": cfg.name, "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq, "pad_id": cfg.pad_id,
+        "param_count": cfg.param_count,
+    }
+    entry["weights"] = os.path.basename(wtar_path)
+    entry["params"] = [
+        {"name": n, "shape": list(s), "dtype": "f32"}
+        for n, s in model_lib.param_specs(cfg)
+    ]
+    entry["artifacts"] = []
+    for b in batches:
+        for s in seqs:
+            t0 = time.time()
+            text = lower_bucket(cfg, b, s)
+            fname = f"{cfg.name}_b{b}_s{s}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry["artifacts"].append({"batch": b, "seq": s, "file": fname})
+            print(f"  lowered {fname}  ({len(text)//1024} KiB, {time.time()-t0:.1f}s)",
+                  flush=True)
+
+
+def export_golden(out_dir: str, seed: int) -> None:
+    """Golden embeddings + tokenizer parity vectors for the Rust tests."""
+    cfg = model_lib.CONFIGS["bge_micro"]
+    params = model_lib.init_params(cfg, seed=seed)
+    seq = 32
+    ids_rows, mask_rows = [], []
+    for t in GOLDEN_TEXTS:
+        ids, mask = tokenizer.encode(t, cfg.vocab_size, seq)
+        ids_rows.append(ids)
+        mask_rows.append(mask)
+    ids = jnp.asarray(ids_rows, dtype=jnp.int32)
+    mask = jnp.asarray(mask_rows, dtype=jnp.float32)
+    emb = model_lib.forward(cfg, {k: jnp.asarray(v) for k, v in params.items()},
+                            ids, mask, use_pallas=True)
+    parity = {
+        w: tokenizer.fnv1a64(w.encode("utf-8")) % (cfg.vocab_size - 2) + 2
+        for w in ["retrieval", "windve", "npu", "queue", "a", "0", "embedding"]
+    }
+    golden = {
+        "model": cfg.name,
+        "seq": seq,
+        "texts": GOLDEN_TEXTS,
+        "token_ids": [list(map(int, r)) for r in ids_rows],
+        "mask": [list(map(float, r)) for r in mask_rows],
+        "embeddings": np.asarray(emb).tolist(),
+        "tokenizer_parity": parity,
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print("  wrote golden.json", flush=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="bge_micro,jina_micro")
+    ap.add_argument("--seed", type=int, default=1234)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    digest = source_digest()
+    stamp = os.path.join(args.out_dir, ".stamp")
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read().strip() == digest:
+                print("artifacts up to date (source digest match); skipping")
+                return 0
+
+    manifest = {"version": 1, "seed": args.seed, "models": {}}
+    for name in args.models.split(","):
+        cfg = model_lib.CONFIGS[name]
+        batches, seqs = DEFAULT_BUCKETS[name]
+        print(f"exporting {name} ({cfg.param_count/1e6:.1f}M params)", flush=True)
+        entry: dict = {}
+        export_model(cfg, args.out_dir, args.seed, batches, seqs, entry)
+        manifest["models"][name] = entry
+    export_golden(args.out_dir, args.seed)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(digest)
+    print("manifest.json written; AOT export complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

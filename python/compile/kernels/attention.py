@@ -1,0 +1,113 @@
+"""L1: flash-style fused multi-head self-attention as a Pallas kernel.
+
+TPU adaptation of the paper's encoder hot spot (see DESIGN.md
+§Hardware-Adaptation): K/V stream through VMEM-sized tiles selected by
+``BlockSpec``; a running-max/rescale ("flash") accumulator bounds the VMEM
+footprint at O(block_q * d_head) instead of materialising the full S x S
+score matrix. Contractions are plain ``jnp.dot`` so the TPU backend maps
+them onto the MXU. ``interpret=True`` is mandatory on this image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (>= 1)."""
+    b = min(n, cap)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _mha_kernel(q_ref, k_ref, v_ref, m_ref, o_ref, *, block_k: int, seq: int):
+    """One (batch*head, q-block) grid cell of flash attention.
+
+    Refs (leading singleton = the bh grid dim):
+      q_ref: [1, block_q, d]   VMEM-resident query tile
+      k_ref: [1, seq, d]       keys (streamed block_k at a time below)
+      v_ref: [1, seq, d]       values
+      m_ref: [1, seq]          1.0 = real token, 0.0 = padding
+      o_ref: [1, block_q, d]
+    """
+    q = q_ref[0].astype(jnp.float32)  # [bq, d]
+    bq, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(k_ref, (0, pl.dslice(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (0, pl.dslice(i * block_k, block_k), slice(None)))
+        msk = pl.load(m_ref, (0, pl.dslice(i * block_k, block_k)))
+        # [bq, bk] scores on the MXU; additive -1e9 on padded keys.
+        s = jnp.dot(q, k.astype(jnp.float32).T, preferred_element_type=jnp.float32)
+        s = s * scale + (msk.astype(jnp.float32) - 1.0) * 1e9
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v.astype(jnp.float32), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    _, l_f, acc = jax.lax.fori_loop(0, seq // block_k, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l_f[:, None]).astype(o_ref.dtype)
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    mask: jax.Array,
+    *,
+    block_q: int = 16,
+    block_k: int = 16,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused multi-head attention.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, d_head]``.
+      mask: ``[batch, seq]`` with 1.0 on real tokens, 0.0 on padding.
+
+    Returns:
+      ``[batch, heads, seq, d_head]`` attention output. Rows whose query
+      token is padding attend uniformly over real tokens; callers mask them
+      out at pooling time (identical to the pure-jnp oracle).
+    """
+    b, h, s, d = q.shape
+    bq = _pick_block(s, block_q)
+    bk = _pick_block(s, block_k)
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    # Broadcast the per-batch mask across heads up front (cheap: [b*h, s]).
+    mf = jnp.repeat(mask, h, axis=0)
+
+    grid = (b * h, s // bq)
+    out = pl.pallas_call(
+        functools.partial(_mha_kernel, block_k=bk, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf, mf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,53 @@
+"""L1: fused masked mean-pool + L2-normalise Pallas kernel.
+
+bge-style sentence embeddings are the mask-weighted token mean, unit-L2
+normalised (so retrieval can use a plain dot product). One grid cell per
+batch row keeps the whole ``[seq, d]`` slab in VMEM for the reduction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, m_ref, o_ref, *, eps: float):
+    x = x_ref[0].astype(jnp.float32)  # [s, d]
+    m = m_ref[0].astype(jnp.float32)  # [s]
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    pooled = jnp.sum(x * m[:, None], axis=0) / denom  # [d]
+    norm = jax.lax.rsqrt(jnp.sum(jnp.square(pooled)) + eps)
+    o_ref[0] = (pooled * norm).astype(o_ref.dtype)
+
+
+def masked_mean_pool(
+    x: jax.Array,
+    mask: jax.Array,
+    *,
+    eps: float = 1e-12,
+    interpret: bool = True,
+) -> jax.Array:
+    """Masked mean over ``seq`` then L2-normalise.
+
+    Args:
+      x: ``[batch, seq, d]`` final hidden states.
+      mask: ``[batch, seq]`` 1.0/0.0 validity mask.
+
+    Returns:
+      ``[batch, d]`` unit-norm embeddings.
+    """
+    b, s, d = x.shape
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, eps=eps),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=interpret,
+    )(x, mask)

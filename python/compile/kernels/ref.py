@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for every Pallas kernel and the full model.
+
+These are the ground truth the pytest/hypothesis suite checks the kernels
+against; they deliberately use the most direct (unfused, materialise-
+everything) formulation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, mask):
+    """Direct softmax attention. Shapes as kernels.attention.mha."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) / math.sqrt(d)
+    bias = (mask.astype(jnp.float32) - 1.0) * 1e9  # [b, s]
+    s = s + bias[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def residual_layernorm_ref(x, residual, gamma, beta, eps=1e-6):
+    h = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    y = (h - mu) / jnp.sqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    h = jax.nn.gelu(x.astype(jnp.float32) @ w1 + b1)
+    return (h @ w2 + b2).astype(x.dtype)
+
+
+def masked_mean_pool_ref(x, mask, eps=1e-12):
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(x.astype(jnp.float32) * m[:, :, None], axis=1) / denom
+    norm = jnp.sqrt(jnp.sum(jnp.square(pooled), axis=-1, keepdims=True) + eps)
+    return (pooled / norm).astype(x.dtype)

@@ -1,0 +1,167 @@
+"""L2: the embedding model — a BERT-style bi-encoder in JAX.
+
+Mirrors the architecture family of the paper's models (bge-large-zh-v1.5,
+jina-v2): token+position embeddings, post-LN transformer blocks, masked
+mean-pooling with L2 normalisation. Weights are seeded-PRNG synthetic
+(no network access on this image — see DESIGN.md §2); serving behaviour
+depends on compute shape, and numerics are validated kernel-vs-oracle.
+
+The forward pass calls the L1 Pallas kernels (``use_pallas=True``) or the
+pure-jnp oracles (``use_pallas=False``) so the whole model can be
+cross-checked end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention, ffn as ffn_k, layernorm, pooling
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description; serialised into the manifest."""
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    pad_id: int = 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_specs(self))
+
+
+#: Scaled-down stand-ins for the paper's 326M bge / 570M jina models.
+CONFIGS: Dict[str, ModelConfig] = {
+    "bge_micro": ModelConfig(
+        name="bge_micro", vocab_size=8192, d_model=256, n_layers=4,
+        n_heads=4, d_ff=1024, max_seq=512,
+    ),
+    "jina_micro": ModelConfig(
+        name="jina_micro", vocab_size=8192, d_model=384, n_layers=4,
+        n_heads=6, d_ff=1536, max_seq=512,
+    ),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Deterministic (name, shape) order — the AOT parameter ABI.
+
+    The Rust runtime feeds weights positionally in exactly this order,
+    followed by ``token_ids`` and ``mask`` (see runtime/manifest.rs).
+    """
+    d, f, v, s = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.max_seq
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_emb", (v, d)),
+        ("pos_emb", (s, d)),
+        ("emb_ln_g", (d,)),
+        ("emb_ln_b", (d,)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "wq", (d, d)), (p + "bq", (d,)),
+            (p + "wk", (d, d)), (p + "bk", (d,)),
+            (p + "wv", (d, d)), (p + "bv", (d,)),
+            (p + "wo", (d, d)), (p + "bo", (d,)),
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "w1", (d, f)), (p + "b1", (f,)),
+            (p + "w2", (f, d)), (p + "b2", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+        ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Seeded synthetic weights: N(0, 0.02) matrices, identity layernorms."""
+    rng = np.random.RandomState(seed)
+    params: Dict[str, np.ndarray] = {}
+    for name, shape in param_specs(cfg):
+        if name.endswith(("_g",)):
+            params[name] = np.ones(shape, dtype=np.float32)
+        elif name.endswith(("_b", "bq", "bk", "bv", "bo", "b1", "b2")):
+            params[name] = np.zeros(shape, dtype=np.float32)
+        else:
+            params[name] = (rng.randn(*shape) * 0.02).astype(np.float32)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: Dict[str, np.ndarray]) -> List[np.ndarray]:
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, flat) -> Dict[str, jax.Array]:
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    token_ids: jax.Array,
+    mask: jax.Array,
+    *,
+    use_pallas: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """Embed ``token_ids [B, S] int32`` with mask ``[B, S] f32`` → ``[B, d]``.
+
+    Output rows are unit-L2-normalised sentence embeddings.
+    """
+    b, s = token_ids.shape
+    h = cfg.n_heads
+    dh = cfg.d_head
+
+    def ln(x, res, g, bta):
+        if use_pallas:
+            return layernorm.residual_layernorm(x, res, g, bta, interpret=interpret)
+        return ref.residual_layernorm_ref(x, res, g, bta)
+
+    x = jnp.take(params["tok_emb"], token_ids, axis=0)
+    x = x + params["pos_emb"][:s][None, :, :]
+    x = ln(x, jnp.zeros_like(x), params["emb_ln_g"], params["emb_ln_b"])
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        # QKV projections stay in L2 jax — XLA fuses them; attention itself
+        # is the L1 kernel.
+        q = (x @ params[p + "wq"] + params[p + "bq"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        k = (x @ params[p + "wk"] + params[p + "bk"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        v = (x @ params[p + "wv"] + params[p + "bv"]).reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+        if use_pallas:
+            a = attention.mha(q, k, v, mask, interpret=interpret)
+        else:
+            a = ref.mha_ref(q, k, v, mask)
+        a = a.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        a = a @ params[p + "wo"] + params[p + "bo"]
+        x = ln(a, x, params[p + "ln1_g"], params[p + "ln1_b"])
+
+        if use_pallas:
+            f = ffn_k.ffn(
+                x, params[p + "w1"], params[p + "b1"],
+                params[p + "w2"], params[p + "b2"], interpret=interpret,
+            )
+        else:
+            f = ref.ffn_ref(
+                x, params[p + "w1"], params[p + "b1"],
+                params[p + "w2"], params[p + "b2"],
+            )
+        x = ln(f, x, params[p + "ln2_g"], params[p + "ln2_b"])
+
+    if use_pallas:
+        return pooling.masked_mean_pool(x, mask, interpret=interpret)
+    return ref.masked_mean_pool_ref(x, mask)

@@ -1,0 +1,46 @@
+"""Deterministic hash tokenizer — Python half of the Rust/Python pair.
+
+The paper (§5.1.3) notes that for embedding *serving* only query length
+matters; token identity just has to be deterministic and identical on both
+sides of the AOT boundary so golden outputs line up. FNV-1a 64 over the
+lower-cased word maps into ``[2, vocab)``; id 0 is PAD, id 1 is CLS.
+
+Must stay byte-for-byte in sync with ``rust/src/runtime/tokenizer.rs``
+(parity vectors in artifacts/golden.json and both test suites).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+PAD_ID = 0
+CLS_ID = 1
+
+_WORD = re.compile(r"[A-Za-z0-9]+")
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK = (1 << 64) - 1
+
+
+def fnv1a64(data: bytes) -> int:
+    h = _FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * _FNV_PRIME) & _MASK
+    return h
+
+
+def encode(text: str, vocab_size: int, max_len: int) -> Tuple[List[int], List[float]]:
+    """Tokenise ``text`` to (ids, mask), CLS-prefixed, padded to ``max_len``."""
+    ids = [CLS_ID]
+    for word in _WORD.findall(text.lower()):
+        if len(ids) >= max_len:
+            break
+        ids.append(2 + fnv1a64(word.encode("utf-8")) % (vocab_size - 2))
+    mask = [1.0] * len(ids)
+    while len(ids) < max_len:
+        ids.append(PAD_ID)
+        mask.append(0.0)
+    return ids[:max_len], mask[:max_len]

@@ -1,0 +1,60 @@
+"""Writer for the ``.wtar`` tensor archive consumed by the Rust runtime.
+
+Layout (little-endian):
+  magic   b"WTAR1\\0"
+  u32     tensor count
+  per tensor:
+    u32   name length, then name bytes (utf-8)
+    u8    dtype tag (0 = f32, 1 = i32)
+    u8    rank
+    u64*  dims
+    raw   payload (row-major)
+
+Mirror reader: ``rust/src/runtime/wtar.rs``.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Iterable, Tuple
+
+import numpy as np
+
+MAGIC = b"WTAR1\x00"
+DTYPE_TAGS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write(path: str, tensors: Iterable[Tuple[str, np.ndarray]]) -> None:
+    tensors = list(tensors)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            tag = DTYPE_TAGS[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", tag, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read(path: str):
+    """Round-trip reader (used by the Python tests only)."""
+    inv = {v: k for k, v in DTYPE_TAGS.items()}
+    out = []
+    with open(path, "rb") as f:
+        assert f.read(6) == MAGIC, "bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            tag, rank = struct.unpack("<BB", f.read(2))
+            dims = [struct.unpack("<Q", f.read(8))[0] for _ in range(rank)]
+            dt = inv[tag]
+            n = int(np.prod(dims)) if dims else 1
+            arr = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+            out.append((name, arr))
+    return out

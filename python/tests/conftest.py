@@ -1,0 +1,15 @@
+import os
+import sys
+
+# Tests may be launched from the repo root or from python/; make `compile`
+# importable either way.
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+# Pallas interpret mode is numpy-speed: keep example counts modest and
+# disable deadlines so CI boxes don't flake.
+settings.register_profile("windve", max_examples=12, deadline=None)
+settings.load_profile("windve")

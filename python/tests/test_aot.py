@@ -1,0 +1,56 @@
+"""AOT export path: HLO text shape, manifest ABI, digest stability."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+def test_lower_bucket_produces_hlo_text():
+    cfg = M.ModelConfig(name="t", vocab_size=64, d_model=16, n_layers=1,
+                        n_heads=2, d_ff=32, max_seq=32)
+    text = aot.lower_bucket(cfg, 1, 8)
+    assert "HloModule" in text
+    # One parameter per weight + ids + mask.
+    n_params = len(M.param_specs(cfg)) + 2
+    assert text.count("parameter(") >= n_params
+
+
+def test_source_digest_stable():
+    assert aot.source_digest() == aot.source_digest()
+    assert len(aot.source_digest()) == 64
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_exported_files():
+    base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(base, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    for name, entry in manifest["models"].items():
+        assert os.path.exists(os.path.join(base, entry["weights"]))
+        assert entry["config"]["name"] == name
+        specs = M.param_specs(M.CONFIGS[name])
+        assert [p["name"] for p in entry["params"]] == [n for n, _ in specs]
+        assert [tuple(p["shape"]) for p in entry["params"]] == [s for _, s in specs]
+        for art in entry["artifacts"]:
+            assert os.path.exists(os.path.join(base, art["file"]))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/golden.json")),
+    reason="artifacts not built",
+)
+def test_golden_embeddings_unit_norm():
+    import numpy as np
+    base = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(base, "golden.json")) as f:
+        golden = json.load(f)
+    emb = np.asarray(golden["embeddings"], dtype=np.float32)
+    assert emb.shape[0] == len(golden["texts"])
+    np.testing.assert_allclose(np.linalg.norm(emb, axis=-1), 1.0, atol=1e-4)

@@ -1,0 +1,97 @@
+"""L1 attention kernel vs pure-jnp oracle (hypothesis shape/mask sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import attention, ref
+
+
+def make_inputs(b, h, s, d, seed, mask_kind="random"):
+    rng = np.random.RandomState(seed)
+    q, k, v = (jnp.asarray(rng.randn(b, h, s, d).astype(np.float32)) for _ in range(3))
+    if mask_kind == "full":
+        mask = np.ones((b, s), np.float32)
+    elif mask_kind == "prefix":
+        mask = np.zeros((b, s), np.float32)
+        for i in range(b):
+            mask[i, : rng.randint(1, s + 1)] = 1.0
+    else:
+        mask = (rng.rand(b, s) > 0.3).astype(np.float32)
+        mask[:, 0] = 1.0  # at least one real token per row
+    return q, k, v, jnp.asarray(mask)
+
+
+def check(b, h, s, d, seed=0, mask_kind="random", **kw):
+    q, k, v, mask = make_inputs(b, h, s, d, seed, mask_kind)
+    out = attention.mha(q, k, v, mask, **kw)
+    exp = ref.mha_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 16, 32, 48, 80]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 10_000),
+    mask_kind=st.sampled_from(["full", "prefix", "random"]),
+)
+def test_mha_matches_ref_hypothesis(b, h, s, d, seed, mask_kind):
+    check(b, h, s, d, seed, mask_kind)
+
+
+@pytest.mark.parametrize("s", [8, 16, 32, 80, 128])
+def test_mha_seq_buckets(s):
+    check(2, 4, s, 64)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(4, 4), (8, 16), (16, 8), (32, 32)])
+def test_mha_block_shapes(block_q, block_k):
+    check(2, 2, 32, 32, block_q=block_q, block_k=block_k)
+
+
+def test_mha_single_real_token():
+    # Only the CLS token real: attention must collapse to that key exactly.
+    b, h, s, d = 1, 2, 16, 32
+    rng = np.random.RandomState(7)
+    q, k, v = (jnp.asarray(rng.randn(b, h, s, d).astype(np.float32)) for _ in range(3))
+    mask = np.zeros((b, s), np.float32)
+    mask[:, 0] = 1.0
+    out = attention.mha(q, k, v, jnp.asarray(mask))
+    np.testing.assert_allclose(
+        np.asarray(out[0, :, 3]), np.asarray(v[0, :, 0]), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mha_bf16_tolerance():
+    b, h, s, d = 2, 2, 32, 32
+    rng = np.random.RandomState(3)
+    q, k, v = (
+        jnp.asarray(rng.randn(b, h, s, d).astype(np.float32)).astype(jnp.bfloat16)
+        for _ in range(3)
+    )
+    mask = jnp.ones((b, s), jnp.float32)
+    out = attention.mha(q, k, v, mask)
+    exp = ref.mha_ref(q, k, v, mask)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32), np.asarray(exp, dtype=np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
+
+
+def test_mha_is_deterministic():
+    q, k, v, mask = make_inputs(2, 2, 32, 32, seed=11)
+    a = np.asarray(attention.mha(q, k, v, mask))
+    b2 = np.asarray(attention.mha(q, k, v, mask))
+    np.testing.assert_array_equal(a, b2)
+
+
+def test_pick_block_divides():
+    for n in [1, 2, 7, 16, 75, 80, 128, 500]:
+        for cap in [1, 8, 16, 32]:
+            b = attention._pick_block(n, cap)
+            assert 1 <= b <= cap or b == min(n, cap)
+            assert n % b == 0

@@ -1,0 +1,56 @@
+"""L1 fused FFN kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ffn, ref
+
+
+def run(rows, d, f, seed=0, **kw):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, d).astype(np.float32))
+    w1 = jnp.asarray((rng.randn(d, f) * 0.05).astype(np.float32))
+    b1 = jnp.asarray(rng.randn(f).astype(np.float32) * 0.1)
+    w2 = jnp.asarray((rng.randn(f, d) * 0.05).astype(np.float32))
+    b2 = jnp.asarray(rng.randn(d).astype(np.float32) * 0.1)
+    out = ffn.ffn(x, w1, b1, w2, b2, **kw)
+    exp = ref.ffn_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=3e-5, atol=3e-5)
+
+
+@given(
+    rows=st.integers(1, 48),
+    d=st.sampled_from([16, 64, 256]),
+    f=st.sampled_from([32, 128, 512]),
+    seed=st.integers(0, 10_000),
+)
+def test_ffn_hypothesis(rows, d, f, seed):
+    run(rows, d, f, seed)
+
+
+@pytest.mark.parametrize("block_rows", [1, 8, 32, 64])
+def test_ffn_block_rows(block_rows):
+    run(32, 64, 128, block_rows=block_rows)
+
+
+def test_ffn_3d_input():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(2, 16, 32).astype(np.float32))
+    w1 = jnp.asarray((rng.randn(32, 64) * 0.05).astype(np.float32))
+    b1 = jnp.zeros(64); w2 = jnp.asarray((rng.randn(64, 32) * 0.05).astype(np.float32))
+    b2 = jnp.zeros(32)
+    out = ffn.ffn(x, w1, b1, w2, b2)
+    exp = ref.ffn_ref(x, w1, b1, w2, b2)
+    assert out.shape == (2, 16, 32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=3e-5, atol=3e-5)
+
+
+def test_ffn_zero_input_gives_bias_path():
+    d, f = 16, 32
+    x = jnp.zeros((4, d), jnp.float32)
+    w1 = jnp.ones((d, f), jnp.float32)
+    b1 = jnp.zeros(f); w2 = jnp.zeros((f, d)); b2 = jnp.full((d,), 5.0, jnp.float32)
+    out = np.asarray(ffn.ffn(x, w1, b1, w2, b2))
+    np.testing.assert_allclose(out, 5.0, atol=1e-6)

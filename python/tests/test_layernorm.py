@@ -1,0 +1,56 @@
+"""L1 fused residual+layernorm kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import layernorm, ref
+
+
+def run(shape, d, seed=0, **kw):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(*shape, d).astype(np.float32))
+    r = jnp.asarray(rng.randn(*shape, d).astype(np.float32))
+    g = jnp.asarray(rng.randn(d).astype(np.float32))
+    b = jnp.asarray(rng.randn(d).astype(np.float32))
+    out = layernorm.residual_layernorm(x, r, g, b, **kw)
+    exp = ref.residual_layernorm_ref(x, r, g, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    rows=st.integers(1, 64),
+    d=st.sampled_from([8, 32, 64, 256]),
+    seed=st.integers(0, 10_000),
+)
+def test_ln_rows_hypothesis(rows, d, seed):
+    run((rows,), d, seed)
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (2, 32), (4, 80), (1, 128), (3, 7)])
+def test_ln_3d_shapes(shape):
+    run(shape, 64)
+
+
+@pytest.mark.parametrize("block_rows", [1, 4, 32, 128])
+def test_ln_block_rows(block_rows):
+    run((2, 32), 64, block_rows=block_rows)
+
+
+def test_ln_zero_residual_is_plain_layernorm():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(8, 32).astype(np.float32))
+    g = jnp.ones(32, jnp.float32)
+    b = jnp.zeros(32, jnp.float32)
+    out = np.asarray(layernorm.residual_layernorm(x, jnp.zeros_like(x), g, b))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-6)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-3)
+
+
+def test_ln_constant_row_stays_finite():
+    # var == 0 row: eps must keep the output finite.
+    x = jnp.full((4, 16), 3.0, jnp.float32)
+    g = jnp.ones(16); b = jnp.zeros(16)
+    out = np.asarray(layernorm.residual_layernorm(x, jnp.zeros_like(x), g, b))
+    assert np.isfinite(out).all()

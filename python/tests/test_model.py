@@ -1,0 +1,107 @@
+"""L2 model: pallas path vs pure-jnp reference path, shapes, invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tokenizer
+
+
+def tiny_cfg(name="tiny"):
+    return M.ModelConfig(name=name, vocab_size=128, d_model=32, n_layers=2,
+                         n_heads=2, d_ff=64, max_seq=64)
+
+
+def embed(cfg, b, s, seed=0, use_pallas=True):
+    rng = np.random.RandomState(seed)
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, seed=seed).items()}
+    ids = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), dtype=jnp.int32)
+    mask = np.ones((b, s), np.float32)
+    for i in range(b):
+        mask[i, rng.randint(1, s + 1):] = 0.0
+    return M.forward(cfg, params, ids, jnp.asarray(mask), use_pallas=use_pallas), ids, mask
+
+
+@pytest.mark.parametrize("b,s", [(1, 8), (2, 16), (4, 32)])
+def test_pallas_matches_reference(b, s):
+    cfg = tiny_cfg()
+    out_k, ids, mask = embed(cfg, b, s, seed=b * 100 + s)
+    rng = np.random.RandomState(b * 100 + s)
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, seed=b * 100 + s).items()}
+    out_r = M.forward(cfg, params, ids, jnp.asarray(mask), use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=5e-5, atol=5e-5)
+
+
+def test_output_shape_and_norm():
+    cfg = tiny_cfg()
+    out, _, _ = embed(cfg, 3, 16)
+    assert out.shape == (3, cfg.d_model)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(out), axis=-1), 1.0, atol=1e-5)
+
+
+def test_padding_invariance():
+    # Embedding a query padded to a longer bucket must give the same vector.
+    cfg = tiny_cfg()
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, seed=0).items()}
+    rng = np.random.RandomState(0)
+    real = 8
+    ids_short = rng.randint(2, cfg.vocab_size, (1, real)).astype(np.int32)
+    for s in (16, 32):
+        ids = np.zeros((1, s), np.int32)
+        ids[0, :real] = ids_short
+        mask = np.zeros((1, s), np.float32)
+        mask[0, :real] = 1.0
+        out = M.forward(cfg, params, jnp.asarray(ids), jnp.asarray(mask))
+        if s == 16:
+            base = np.asarray(out)
+        else:
+            np.testing.assert_allclose(np.asarray(out), base, rtol=1e-4, atol=1e-4)
+
+
+def test_batch_consistency():
+    # A query embedded alone equals the same query inside a batch.
+    cfg = tiny_cfg()
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, seed=1).items()}
+    rng = np.random.RandomState(1)
+    ids = rng.randint(2, cfg.vocab_size, (4, 16)).astype(np.int32)
+    mask = np.ones((4, 16), np.float32)
+    full = np.asarray(M.forward(cfg, params, jnp.asarray(ids), jnp.asarray(mask)))
+    solo = np.asarray(M.forward(cfg, params, jnp.asarray(ids[:1]), jnp.asarray(mask[:1])))
+    np.testing.assert_allclose(full[0], solo[0], rtol=1e-4, atol=1e-4)
+
+
+def test_param_specs_deterministic_and_complete():
+    cfg = M.CONFIGS["bge_micro"]
+    a = M.param_specs(cfg)
+    b = M.param_specs(cfg)
+    assert a == b
+    names = [n for n, _ in a]
+    assert len(names) == len(set(names))
+    assert len(a) == 4 + 16 * cfg.n_layers
+
+
+def test_param_count_matches_design():
+    cfg = M.CONFIGS["bge_micro"]
+    assert 4e6 < cfg.param_count < 10e6  # "~5M params" per DESIGN.md
+    cfgj = M.CONFIGS["jina_micro"]
+    assert cfgj.param_count > cfg.param_count
+
+
+def test_init_params_seeded_reproducible():
+    cfg = tiny_cfg()
+    p1 = M.init_params(cfg, seed=42)
+    p2 = M.init_params(cfg, seed=42)
+    p3 = M.init_params(cfg, seed=43)
+    for k in p1:
+        np.testing.assert_array_equal(p1[k], p2[k])
+    assert any(not np.array_equal(p1[k], p3[k]) for k in p1)
+
+
+def test_tokenized_roundtrip_embeds():
+    cfg = tiny_cfg()
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg, seed=0).items()}
+    ids, mask = tokenizer.encode("hello world from windve", cfg.vocab_size, 16)
+    out = M.forward(cfg, params, jnp.asarray([ids], dtype=jnp.int32),
+                    jnp.asarray([mask], dtype=jnp.float32))
+    assert np.isfinite(np.asarray(out)).all()

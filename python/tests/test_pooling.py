@@ -1,0 +1,57 @@
+"""L1 masked mean-pool + L2-normalise kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import pooling, ref
+
+
+def make(b, s, d, seed, mask_kind="random"):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, s, d).astype(np.float32))
+    if mask_kind == "full":
+        m = np.ones((b, s), np.float32)
+    else:
+        m = (rng.rand(b, s) > 0.4).astype(np.float32)
+        m[:, 0] = 1.0
+    return x, jnp.asarray(m)
+
+
+@given(
+    b=st.integers(1, 8),
+    s=st.sampled_from([1, 8, 32, 80]),
+    d=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 10_000),
+    mask_kind=st.sampled_from(["full", "random"]),
+)
+def test_pool_hypothesis(b, s, d, seed, mask_kind):
+    x, m = make(b, s, d, seed, mask_kind)
+    out = pooling.masked_mean_pool(x, m)
+    exp = ref.masked_mean_pool_ref(x, m)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+def test_pool_output_is_unit_norm():
+    x, m = make(4, 32, 64, 5)
+    out = np.asarray(pooling.masked_mean_pool(x, m))
+    np.testing.assert_allclose(np.linalg.norm(out, axis=-1), 1.0, atol=1e-5)
+
+
+def test_pool_ignores_padded_positions():
+    x, m = make(2, 16, 32, 6, "full")
+    m2 = np.asarray(m).copy()
+    m2[:, 8:] = 0.0
+    x2 = np.asarray(x).copy()
+    x2[:, 8:, :] = 1e6  # garbage in padding must not leak
+    a = pooling.masked_mean_pool(jnp.asarray(x2), jnp.asarray(m2))
+    b = pooling.masked_mean_pool(x[:, :8], m[:, :8])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_pool_all_masked_row_is_finite():
+    x = jnp.asarray(np.random.RandomState(0).randn(1, 8, 16).astype(np.float32))
+    m = jnp.zeros((1, 8), jnp.float32)
+    out = np.asarray(pooling.masked_mean_pool(x, m))
+    assert np.isfinite(out).all()

@@ -1,0 +1,78 @@
+"""int8 weight-quantized matmul kernel: quantization error bounds and
+kernel-vs-oracle equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import quant
+
+
+def make(rows, d_in, d_out, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(rows, d_in).astype(np.float32)
+    w = (rng.randn(d_in, d_out) * 0.05).astype(np.float32)
+    return x, w
+
+
+@given(
+    rows=st.integers(1, 32),
+    d_in=st.sampled_from([8, 32, 64]),
+    d_out=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_qmatmul_matches_ref_hypothesis(rows, d_in, d_out, seed):
+    x, w = make(rows, d_in, d_out, seed)
+    w_q, scale = quant.quantize_weights(w)
+    out = quant.qmatmul(jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale))
+    exp = quant.qmatmul_ref(jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)
+
+
+def test_quantization_error_bounded():
+    # W8 per-channel: dequantised weights within one quantization step.
+    _, w = make(1, 64, 128, 3)
+    w_q, scale = quant.quantize_weights(w)
+    w_back = w_q.astype(np.float32) * scale[None, :]
+    step = scale[None, :]  # one LSB per channel
+    assert (np.abs(w - w_back) <= step / 2 + 1e-7).all()
+
+
+def test_end_to_end_error_small_vs_fp32():
+    x, w = make(16, 64, 64, 4)
+    w_q, scale = quant.quantize_weights(w)
+    exact = x @ w
+    approx = np.asarray(
+        quant.qmatmul(jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale))
+    )
+    rel = np.abs(approx - exact).max() / (np.abs(exact).max() + 1e-9)
+    assert rel < 0.02, f"relative error {rel}"
+
+
+def test_scale_positive_and_int8_range():
+    _, w = make(1, 32, 16, 5)
+    w_q, scale = quant.quantize_weights(w)
+    assert (scale > 0).all()
+    assert w_q.dtype == np.int8
+    assert w_q.min() >= -127 and w_q.max() <= 127
+
+
+def test_zero_channel_safe():
+    w = np.zeros((8, 4), np.float32)
+    w_q, scale = quant.quantize_weights(w)
+    assert np.isfinite(scale).all()
+    x = np.ones((2, 8), np.float32)
+    out = np.asarray(quant.qmatmul(jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale)))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("block_rows", [1, 8, 64])
+def test_block_row_invariance(block_rows):
+    x, w = make(16, 32, 32, 6)
+    w_q, scale = quant.quantize_weights(w)
+    out = quant.qmatmul(
+        jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale), block_rows=block_rows
+    )
+    exp = quant.qmatmul_ref(jnp.asarray(x), jnp.asarray(w_q), jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=2e-5)

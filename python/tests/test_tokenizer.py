@@ -1,0 +1,55 @@
+"""Hash tokenizer: determinism, padding, truncation, rust parity anchors."""
+
+import pytest
+
+from compile import tokenizer as tok
+
+
+def test_fnv1a64_known_vectors():
+    # Published FNV-1a 64 test vectors.
+    assert tok.fnv1a64(b"") == 0xCBF29CE484222325
+    assert tok.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert tok.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_encode_pads_and_masks():
+    ids, mask = tok.encode("one two", 1000, 8)
+    assert len(ids) == len(mask) == 8
+    assert ids[0] == tok.CLS_ID
+    assert mask[:3] == [1.0, 1.0, 1.0]
+    assert mask[3:] == [0.0] * 5
+    assert ids[3:] == [tok.PAD_ID] * 5
+
+
+def test_encode_truncates():
+    text = " ".join(f"w{i}" for i in range(100))
+    ids, mask = tok.encode(text, 1000, 16)
+    assert len(ids) == 16
+    assert all(m == 1.0 for m in mask)
+
+
+def test_encode_case_insensitive():
+    assert tok.encode("Hello WORLD", 500, 8) == tok.encode("hello world", 500, 8)
+
+
+def test_encode_splits_punctuation():
+    a, _ = tok.encode("hello, world!", 500, 8)
+    b, _ = tok.encode("hello world", 500, 8)
+    assert a == b
+
+
+def test_ids_in_range():
+    ids, _ = tok.encode("alpha beta gamma delta", 64, 8)
+    for i in ids:
+        assert 0 <= i < 64
+
+
+def test_empty_text():
+    ids, mask = tok.encode("", 100, 4)
+    assert ids == [tok.CLS_ID, 0, 0, 0]
+    assert mask == [1.0, 0.0, 0.0, 0.0]
+
+
+def test_deterministic_across_calls():
+    for _ in range(3):
+        assert tok.encode("stable output", 8192, 12) == tok.encode("stable output", 8192, 12)

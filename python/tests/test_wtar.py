@@ -1,0 +1,42 @@
+"""wtar tensor-archive round-trip (python writer <-> python reader)."""
+
+import numpy as np
+import pytest
+
+from compile import wtar
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.wtar")
+    tensors = [
+        ("a", np.arange(12, dtype=np.float32).reshape(3, 4)),
+        ("b.scalar", np.asarray([7], dtype=np.int32)),
+        ("c/deep/name", np.random.RandomState(0).randn(2, 3, 4).astype(np.float32)),
+    ]
+    wtar.write(path, tensors)
+    out = wtar.read(path)
+    assert [n for n, _ in out] == [n for n, _ in tensors]
+    for (_, exp), (_, got) in zip(tensors, out):
+        np.testing.assert_array_equal(exp, got)
+        assert exp.dtype == got.dtype
+
+
+def test_empty_archive(tmp_path):
+    path = str(tmp_path / "e.wtar")
+    wtar.write(path, [])
+    assert wtar.read(path) == []
+
+
+def test_order_preserved(tmp_path):
+    path = str(tmp_path / "o.wtar")
+    names = [f"t{i}" for i in range(20)]
+    wtar.write(path, [(n, np.full((2,), i, np.float32)) for i, n in enumerate(names)])
+    assert [n for n, _ in wtar.read(path)] == names
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.wtar")
+    with open(path, "wb") as f:
+        f.write(b"NOTWTAR\x00\x00\x00")
+    with pytest.raises(AssertionError):
+        wtar.read(path)

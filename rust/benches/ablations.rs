@@ -1,0 +1,133 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//! 1. Queue-depth sensitivity — why fine-tuning matters (mis-set depths
+//!    either waste capacity or violate the SLO).
+//! 2. OLS vs Theil-Sen on the outlier-heavy device (Kunpeng, §5.3).
+//! 3. Embedding cache — repeats served without queue slots.
+//! 4. Balancer policy — round-robin vs least-loaded under skew.
+
+use windve::coordinator::balancer::{Balancer, Policy};
+use windve::coordinator::cache::EmbeddingCache;
+use windve::devices::profile::DeviceProfile;
+use windve::estimator::robust::theil_sen;
+use windve::estimator::LinearFit;
+use windve::sim::cluster::ClosedLoopSim;
+use windve::util::rng::Pcg;
+
+fn main() {
+    depth_sensitivity();
+    estimator_ablation();
+    cache_ablation();
+    balancer_ablation();
+    println!("\nablations OK");
+}
+
+/// 1: sweep the NPU depth around the fine-tuned 44 and report capacity
+/// vs SLO violations — the asymmetric cost of mis-calibration.
+fn depth_sensitivity() {
+    println!("\n=== ablation 1: queue-depth sensitivity (V100, SLO 1s) ===");
+    println!("{:>7} {:>12} {:>14}", "depth", "capacity", "SLO met@cap?");
+    let npu = DeviceProfile::v100_bge();
+    for delta in [-8i64, -4, 0, 4, 8] {
+        let depth = (44i64 + delta) as usize;
+        let mut sim = ClosedLoopSim::new(npu.clone(), None, depth, 0, 75, 1);
+        sim.noisy = false;
+        // Capacity is bounded by admission (depth) — but does a full batch
+        // still meet the SLO?
+        let r = sim.round(depth);
+        println!(
+            "{:>7} {:>12} {:>14}",
+            depth,
+            depth,
+            if r.meets_slo(1.0) { "yes" } else { "VIOLATED" }
+        );
+        if depth < 44 {
+            assert!(r.meets_slo(1.0), "under-depth must be safe");
+        }
+        if depth > 44 {
+            assert!(!r.meets_slo(1.0), "over-depth must violate");
+        }
+    }
+    println!("→ under-provisioning wastes capacity; over-provisioning breaks the SLO.");
+}
+
+/// 2: OLS vs Theil-Sen depth error on a Kunpeng-like outlier process.
+fn estimator_ablation() {
+    println!("\n=== ablation 2: OLS vs Theil-Sen on outlier-heavy probes (Kunpeng, 2s) ===");
+    let dev = DeviceProfile::kunpeng_920_bge();
+    let truth = dev.true_max_concurrency(2.0, 75);
+    let mut ols_err = 0.0;
+    let mut ts_err = 0.0;
+    let trials = 40;
+    for seed in 0..trials {
+        let mut rng = Pcg::new(seed);
+        let pts: Vec<(f64, f64)> = (1..=8)
+            .map(|c| (c as f64, dev.noisy_service_time(c, 75, &mut rng)))
+            .collect();
+        let ols = LinearFit::fit(&pts).max_concurrency(2.0).min(64);
+        let ts = theil_sen(&pts).max_concurrency(2.0).min(64);
+        ols_err += (ols as f64 - truth as f64).abs();
+        ts_err += (ts as f64 - truth as f64).abs();
+    }
+    ols_err /= trials as f64;
+    ts_err /= trials as f64;
+    println!("truth {truth}; mean |error|: OLS {ols_err:.2}, Theil-Sen {ts_err:.2} ({trials} trials)");
+    assert!(
+        ts_err <= ols_err + 0.5,
+        "robust fit should not be worse on outlier device"
+    );
+}
+
+/// 3: cache hit rate vs repeat fraction, and the equivalent capacity gain.
+fn cache_ablation() {
+    println!("\n=== ablation 3: embedding cache vs query repeat rate ===");
+    println!("{:>9} {:>9} {:>22}", "repeat%", "hit%", "queue-slots saved/1k");
+    for repeat_pct in [0u32, 20, 50, 80] {
+        let cache = EmbeddingCache::new(512);
+        let mut rng = Pcg::new(7);
+        let mut saved = 0u32;
+        for i in 0..1000u32 {
+            let text = if rng.chance(repeat_pct as f64 / 100.0) && i > 0 {
+                format!("repeat query {}", rng.range(0, 50))
+            } else {
+                format!("unique query {i}")
+            };
+            let key = EmbeddingCache::key(&text, 8192, 80);
+            if cache.get(key).is_some() {
+                saved += 1;
+            } else {
+                cache.put(key, vec![0.0; 8]);
+            }
+        }
+        let (_, _, rate) = cache.stats();
+        println!("{:>8}% {:>8.1}% {:>22}", repeat_pct, rate * 100.0, saved);
+    }
+    println!("→ every hit is a query served without an NPU/CPU queue slot.");
+}
+
+/// 4: round-robin vs least-loaded with one slow instance.
+fn balancer_ablation() {
+    println!("\n=== ablation 4: balancer policy with one degraded instance ===");
+    for (name, policy) in [("round-robin", Policy::RoundRobin), ("least-loaded", Policy::LeastLoaded)] {
+        let b = Balancer::new(4, policy);
+        // Instance 0 completes at 1/4 the rate of the others.
+        let mut stuck: Vec<usize> = Vec::new();
+        let mut on_slow = 0usize;
+        for step in 0..400 {
+            let i = b.pick();
+            if i == 0 {
+                on_slow += 1;
+                stuck.push(step);
+                if stuck.len() >= 4 {
+                    b.complete(0); // slow drain
+                    stuck.pop();
+                }
+            } else {
+                b.complete(i);
+            }
+        }
+        println!("  {name:<13} sent {on_slow:>3}/400 queries to the degraded instance");
+        if policy == Policy::LeastLoaded {
+            assert!(on_slow < 150, "least-loaded should route around the slow instance");
+        }
+    }
+}

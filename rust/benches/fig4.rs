@@ -1,0 +1,39 @@
+//! Bench target regenerating Figure 4: latency-vs-concurrency fits.
+//! Asserts the paper's fitted-coefficient relations: β_CPU > β_NPU per
+//! pair and α ratios ≈ 0.21 (V100/Xeon) and ≈ 0.12 (Atlas/Kunpeng).
+
+use windve::repro::fig4;
+
+fn main() {
+    let fits = fig4::run(42);
+    fig4::print(&fits);
+
+    let mut failures = Vec::new();
+    for f in &fits {
+        if (f.beta - f.paper_beta).abs() > 0.15 {
+            failures.push(format!("{} β {:.3} vs paper {:.2}", f.device, f.beta, f.paper_beta));
+        }
+    }
+    if fits[1].beta <= fits[0].beta {
+        failures.push("β_Xeon must exceed β_V100 (Ineq. 15)".into());
+    }
+    if fits[3].beta <= fits[2].beta {
+        failures.push("β_Kunpeng must exceed β_Atlas (Ineq. 15)".into());
+    }
+    let r1 = fits[0].alpha / fits[1].alpha;
+    let r2 = fits[2].alpha / fits[3].alpha;
+    if (r1 - 0.21).abs() > 0.06 {
+        failures.push(format!("V100/Xeon α ratio {r1:.3} vs paper 0.21"));
+    }
+    if (r2 - 0.12).abs() > 0.06 {
+        failures.push(format!("Atlas/Kunpeng α ratio {r2:.3} vs paper 0.12"));
+    }
+    if failures.is_empty() {
+        println!("\nSHAPE OK — Figure 4 coefficient structure reproduced");
+    } else {
+        for f in &failures {
+            println!("SHAPE MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench target regenerating Figure 5: concurrency vs query length.
+//! Asserts the crossovers the paper reports: CPU additional concurrency
+//! reaches 0 at 500 tokens under the 1 s SLO but survives (~2) under 2 s.
+
+use windve::repro::fig5;
+
+fn main() {
+    let pts = fig5::run(42);
+    fig5::print(&pts);
+
+    let at = |slo: f64, qlen: usize| pts.iter().find(|p| p.slo == slo && p.qlen == qlen).unwrap();
+    let mut failures = Vec::new();
+
+    for &slo in &[1.0, 2.0] {
+        let series: Vec<_> = pts.iter().filter(|p| p.slo == slo).collect();
+        for w in series.windows(2) {
+            if w[1].original > w[0].original || w[1].additional > w[0].additional {
+                failures.push(format!("series not monotone at {} tokens/{}s", w[1].qlen, slo));
+            }
+        }
+    }
+    if at(1.0, 500).additional != 0 {
+        failures.push(format!(
+            "paper: additional→0 at 500tok/1s, got {}",
+            at(1.0, 500).additional
+        ));
+    }
+    let a2 = at(2.0, 500).additional;
+    if !(1..=4).contains(&a2) {
+        failures.push(format!("paper: ≈2 additional at 500tok/2s, got {a2}"));
+    }
+    if at(1.0, 75).original != 44 || at(1.0, 75).additional != 8 {
+        failures.push("75-token anchor should match Table 1 (44+8)".into());
+    }
+    if failures.is_empty() {
+        println!("\nSHAPE OK — Figure 5 length-scaling crossovers reproduced");
+    } else {
+        for f in &failures {
+            println!("SHAPE MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench target regenerating Figure 6: CPU additional concurrency vs
+//! core count. Asserts the paper's benefit floors: no CPU gain below
+//! ~44 cores at 1 s, below ~36 cores at 2 s.
+
+use windve::repro::fig6;
+
+fn main() {
+    let pts = fig6::run(42);
+    fig6::print(&pts);
+
+    let at = |slo: f64, cores: usize| {
+        pts.iter().find(|p| p.slo == slo && p.cores == cores).unwrap().additional
+    };
+    let mut failures = Vec::new();
+    if at(1.0, 44) < 1 {
+        failures.push("44 cores should still help at 1s".to_string());
+    }
+    if at(1.0, 36) != 0 {
+        failures.push(format!("36 cores must not help at 1s (got {})", at(1.0, 36)));
+    }
+    if at(2.0, 36) < 1 {
+        failures.push("36 cores should still help at 2s".to_string());
+    }
+    if at(2.0, 24) != 0 {
+        failures.push(format!("24 cores must not help at 2s (got {})", at(2.0, 24)));
+    }
+    if at(1.0, 96) != 8 {
+        failures.push(format!("96 cores @1s should give Table 1's 8 (got {})", at(1.0, 96)));
+    }
+    for &slo in &[1.0, 2.0] {
+        let series: Vec<_> = pts.iter().filter(|p| p.slo == slo).collect();
+        for w in series.windows(2) {
+            if w[1].additional > w[0].additional {
+                failures.push(format!("non-monotone at {} cores/{}s", w[1].cores, slo));
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("\nSHAPE OK — Figure 6 core-count floors reproduced");
+    } else {
+        for f in &failures {
+            println!("SHAPE MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,140 @@
+//! L3 hot-path microbenchmarks (the §Perf baseline): queue-manager
+//! dispatch, batcher drain, tokenizer, histogram record, JSON encode,
+//! cost model, linear fit, closed-loop sim round.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use windve::benchkit::{bench, section};
+use windve::coordinator::batcher::{DeviceQueue, Pending};
+use windve::coordinator::queue_manager::{QueueManager, Route};
+use windve::devices::profile::DeviceProfile;
+use windve::estimator::LinearFit;
+use windve::metrics::Histogram;
+use windve::runtime::tokenizer;
+use windve::sim::cluster::ClosedLoopSim;
+use windve::util::json::{self, Json};
+use windve::workload::queries::QueryGen;
+
+fn main() {
+    section("queue manager (Algorithm 1)");
+    {
+        let qm = QueueManager::new(44, 8, true);
+        bench("dispatch+release (NPU fastpath)", || {
+            let r = qm.dispatch();
+            qm.release(r);
+        })
+        .report();
+
+        let qm_full = QueueManager::new(0, 0, true);
+        bench("dispatch (BUSY path)", || {
+            let _ = qm_full.dispatch();
+        })
+        .report();
+
+        // Contended: 4 threads hammering one queue manager.
+        let qm = Arc::new(QueueManager::new(44, 8, true));
+        let iters = 200_000u64;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let qm = Arc::clone(&qm);
+                std::thread::spawn(move || {
+                    for _ in 0..iters {
+                        let r = qm.dispatch();
+                        if r != Route::Busy {
+                            qm.release(r);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / (4 * iters) as f64;
+        println!("{:<44} {:>12.1} ns/op   (4-thread contended)", "dispatch+release contended", ns);
+    }
+
+    section("device queue / batcher");
+    {
+        let q: DeviceQueue<u32> = DeviceQueue::new();
+        bench("push+drain_batch(16)", || {
+            for i in 0..16 {
+                q.push(Pending {
+                    text: String::new(),
+                    enqueued: Instant::now(),
+                    reply: i,
+                });
+            }
+            let b = q.drain_batch(16).unwrap();
+            std::hint::black_box(b.len());
+        })
+        .report();
+    }
+
+    section("tokenizer");
+    {
+        let mut gen = QueryGen::new(75, 1);
+        let text = gen.query();
+        bench("encode 75-token query (seq 80)", || {
+            std::hint::black_box(tokenizer::encode(&text, 8192, 80));
+        })
+        .report();
+        bench("token_count 75-token query", || {
+            std::hint::black_box(tokenizer::token_count(&text));
+        })
+        .report();
+    }
+
+    section("metrics");
+    {
+        let h = Histogram::new();
+        bench("histogram record", || h.record(123_456)).report();
+        for i in 0..10_000 {
+            h.record(i * 37);
+        }
+        bench("histogram p99", || {
+            std::hint::black_box(h.quantile(0.99));
+        })
+        .report();
+    }
+
+    section("json");
+    {
+        let v = Json::obj(vec![
+            ("texts", Json::Arr(vec![Json::str("hello world embedding query"); 8])),
+            ("slo", Json::num(1.0)),
+        ]);
+        let s = v.to_string();
+        bench("encode /v1/embed-ish body", || {
+            std::hint::black_box(v.to_string());
+        })
+        .report();
+        bench("parse /v1/embed-ish body", || {
+            std::hint::black_box(json::parse(&s).unwrap());
+        })
+        .report();
+    }
+
+    section("estimator + sim (table regeneration cost)");
+    {
+        let pts: Vec<(f64, f64)> = (1..=32).map(|c| (c as f64, 0.0166 * c as f64 + 0.27)).collect();
+        bench("OLS fit (32 points)", || {
+            std::hint::black_box(LinearFit::fit(&pts));
+        })
+        .report();
+        let mut sim = ClosedLoopSim::new(
+            DeviceProfile::v100_bge(),
+            Some(DeviceProfile::xeon_e5_2690_bge()),
+            44,
+            8,
+            75,
+            1,
+        );
+        bench("closed-loop sim round (52 clients)", || {
+            std::hint::black_box(sim.round(52));
+        })
+        .report();
+    }
+}

@@ -1,0 +1,49 @@
+//! Bench target regenerating the paper's Table 1 (bge: WindVE vs
+//! FlagEmbedding max concurrency) and asserting the expected shape:
+//! offloading wins, looser SLO wins more, the small-gap pair wins most.
+
+use windve::repro::{pct, table1};
+
+fn main() {
+    let seed = 42;
+    let rows = table1::run(seed);
+    table1::print(&rows, "Table 1 — bge model, WindVE vs FlagEmbedding", "FlagEmb");
+
+    // Shape assertions (who wins, by roughly what factor).
+    let mut failures = Vec::new();
+    for r in &rows {
+        let base_err =
+            (r.baseline as f64 - r.paper_baseline as f64).abs() / r.paper_baseline as f64;
+        if base_err > 0.10 {
+            failures.push(format!(
+                "{}@{}s baseline {} vs paper {}",
+                r.npu_name, r.slo, r.baseline, r.paper_baseline
+            ));
+        }
+        let paper_pct = pct(r.paper_baseline, r.paper_additional);
+        if (r.improvement_pct - paper_pct).abs() > 8.0 {
+            failures.push(format!(
+                "{}@{}s improvement {:.1}% vs paper {:.1}%",
+                r.npu_name, r.slo, r.improvement_pct, paper_pct
+            ));
+        }
+    }
+    if !(rows[1].improvement_pct > rows[0].improvement_pct) {
+        failures.push("2s SLO should outgain 1s SLO (paper phenomenon 1)".into());
+    }
+    if !(rows[0].improvement_pct > rows[2].improvement_pct) {
+        failures.push("V100+Xeon should outgain Atlas+Kunpeng (phenomenon 2)".into());
+    }
+    report(failures);
+}
+
+fn report(failures: Vec<String>) {
+    if failures.is_empty() {
+        println!("\nSHAPE OK — all paper phenomena reproduced");
+    } else {
+        for f in &failures {
+            println!("SHAPE MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

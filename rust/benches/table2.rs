@@ -1,0 +1,47 @@
+//! Bench target regenerating the paper's Table 2 (jina: WindVE vs
+//! PyTorch). Faster model → larger offloading gains than Table 1.
+
+use windve::repro::{pct, table1, table2};
+
+fn main() {
+    let seed = 42;
+    let rows = table2::run(seed);
+    table2::print(&rows);
+
+    let bge = table1::run(seed);
+    let mut failures = Vec::new();
+    for r in &rows {
+        let base_err =
+            (r.baseline as f64 - r.paper_baseline as f64).abs() / r.paper_baseline as f64;
+        if base_err > 0.10 {
+            failures.push(format!(
+                "{}@{}s baseline {} vs paper {}",
+                r.npu_name, r.slo, r.baseline, r.paper_baseline
+            ));
+        }
+        let paper_pct = pct(r.paper_baseline, r.paper_additional);
+        if (r.improvement_pct - paper_pct).abs() > 8.0 {
+            failures.push(format!(
+                "{}@{}s improvement {:.1}% vs paper {:.1}%",
+                r.npu_name, r.slo, r.improvement_pct, paper_pct
+            ));
+        }
+    }
+    // Paper phenomenon 3: jina (faster inference) gains more than bge.
+    for (j, b) in rows.iter().zip(&bge) {
+        if j.improvement_pct + 1.0 <= b.improvement_pct {
+            failures.push(format!(
+                "jina should outgain bge: {:.1}% vs {:.1}% ({}@{}s)",
+                j.improvement_pct, b.improvement_pct, j.npu_name, j.slo
+            ));
+        }
+    }
+    if failures.is_empty() {
+        println!("\nSHAPE OK — jina gains exceed bge gains as in the paper");
+    } else {
+        for f in &failures {
+            println!("SHAPE MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

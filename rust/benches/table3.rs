@@ -1,0 +1,45 @@
+//! Bench target regenerating the paper's Table 3: queue-depth prediction
+//! via linear regression vs stress test (step 8) vs fine-tuning, plus the
+//! probe-economy claim that motivates the estimator.
+
+use windve::devices::profile::DeviceProfile;
+use windve::repro::table3;
+
+fn main() {
+    let rows = table3::run(42);
+    table3::print(&rows);
+
+    let mut failures = Vec::new();
+    for r in &rows {
+        let truth = DeviceProfile::by_name(&r.device)
+            .expect("profile")
+            .true_max_concurrency(r.slo, 75);
+        // Fine-tuning must land on the device's true capacity.
+        if r.fine_tuned != truth {
+            failures.push(format!(
+                "{}@{}s fine-tuned {} != truth {truth}",
+                r.device, r.slo, r.fine_tuned
+            ));
+        }
+        // Stress results quantise to the step (the paper's observed
+        // weakness of large increments).
+        if !(r.stress_test == 0 || r.stress_test == 1 || r.stress_test % 8 == 0) {
+            failures.push(format!("stress {} not step-quantised", r.stress_test));
+        }
+        // Probe economy on large devices (the estimator's raison d'être).
+        if truth > 90 && r.lr_probes >= r.stress_probes {
+            failures.push(format!(
+                "{}@{}s LR probes {} not cheaper than stress {}",
+                r.device, r.slo, r.lr_probes, r.stress_probes
+            ));
+        }
+    }
+    if failures.is_empty() {
+        println!("\nSHAPE OK — estimator comparable to stress at a fraction of the probes");
+    } else {
+        for f in &failures {
+            println!("SHAPE MISMATCH: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,99 @@
+//! criterion-lite measurement harness (criterion is unavailable offline).
+//!
+//! Used by `benches/*.rs` (`harness = false`). Reports ns/op mean, p50 and
+//! p99 from timed batches, after warmup.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>12.1} ns/op   p50 {:>12.1}   p99 {:>12.1}   ({} iters)",
+            self.name, self.mean_ns, self.p50_ns, self.p99_ns, self.iters
+        );
+    }
+}
+
+/// Measure `f`, auto-scaling iteration count to ~`target_ms` of runtime.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_with(name, 300, &mut f)
+}
+
+pub fn bench_with<F: FnMut()>(name: &str, target_ms: u64, f: &mut F) -> Measurement {
+    // Warmup + calibration: find iters/batch so one batch is ~1ms.
+    let mut batch = 1u64;
+    loop {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let el = t.elapsed().as_nanos() as u64;
+        if el > 1_000_000 || batch >= 1 << 24 {
+            break;
+        }
+        batch *= 2;
+    }
+
+    let t0 = Instant::now();
+    let mut samples = Vec::new();
+    let mut total_iters = 0u64;
+    while t0.elapsed().as_millis() < target_ms as u128 || samples.len() < 10 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        total_iters += batch;
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p = |q: f64| samples[((q * (samples.len() - 1) as f64) as usize).min(samples.len() - 1)];
+    Measurement {
+        name: name.to_string(),
+        iters: total_iters,
+        mean_ns: mean,
+        p50_ns: p(0.5),
+        p99_ns: p(0.99),
+    }
+}
+
+/// Print a section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench_with("noop-ish", 20, &mut || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters > 0);
+        assert!(m.p50_ns <= m.p99_ns * 1.001);
+    }
+
+    #[test]
+    fn bench_scales_to_slow_ops() {
+        let m = bench_with("sleepy", 20, &mut || {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(m.mean_ns > 100_000.0, "mean {}", m.mean_ns);
+    }
+}

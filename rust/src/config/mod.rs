@@ -1,0 +1,166 @@
+//! Serving configuration: JSON config file + CLI overrides.
+//!
+//! ```json
+//! {
+//!   "model": "bge_micro",
+//!   "artifacts": "artifacts",
+//!   "slo_seconds": 1.0,
+//!   "hetero": true,
+//!   "npu_depth": 44, "cpu_depth": 8,
+//!   "npu_workers": 1, "cpu_workers": 1,
+//!   "listen": "127.0.0.1:8316",
+//!   "pin_cpu_cores": 8
+//! }
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Top-level serving configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub model: String,
+    pub artifacts: PathBuf,
+    pub slo_seconds: f64,
+    pub hetero: bool,
+    pub npu_depth: usize,
+    pub cpu_depth: usize,
+    pub npu_workers: usize,
+    pub cpu_workers: usize,
+    pub listen: String,
+    /// Cores to pin the CPU instance to (0 = no pinning), picked
+    /// reversed/NUMA-local per paper §4.4.
+    pub pin_cpu_cores: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "bge_micro".into(),
+            artifacts: PathBuf::from("artifacts"),
+            slo_seconds: 1.0,
+            hetero: true,
+            npu_depth: 44,
+            cpu_depth: 8,
+            npu_workers: 1,
+            cpu_workers: 1,
+            listen: "127.0.0.1:8316".into(),
+            pin_cpu_cores: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let root = json::parse(&text).context("parse config json")?;
+        Ok(Self::from_json(&root))
+    }
+
+    pub fn from_json(root: &Json) -> Config {
+        let d = Config::default();
+        let gs = |k: &str, dv: &str| {
+            root.get(k).and_then(Json::as_str).unwrap_or(dv).to_string()
+        };
+        Config {
+            model: gs("model", &d.model),
+            artifacts: PathBuf::from(gs("artifacts", &d.artifacts.to_string_lossy())),
+            slo_seconds: root.get("slo_seconds").and_then(Json::as_f64).unwrap_or(d.slo_seconds),
+            hetero: root.get("hetero").and_then(Json::as_bool).unwrap_or(d.hetero),
+            npu_depth: root.get("npu_depth").and_then(Json::as_usize).unwrap_or(d.npu_depth),
+            cpu_depth: root.get("cpu_depth").and_then(Json::as_usize).unwrap_or(d.cpu_depth),
+            npu_workers: root.get("npu_workers").and_then(Json::as_usize).unwrap_or(d.npu_workers),
+            cpu_workers: root.get("cpu_workers").and_then(Json::as_usize).unwrap_or(d.cpu_workers),
+            listen: gs("listen", &d.listen),
+            pin_cpu_cores: root
+                .get("pin_cpu_cores")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.pin_cpu_cores),
+        }
+    }
+
+    /// Apply CLI overrides (`--model`, `--slo`, `--npu-depth`, ...).
+    pub fn apply_args(mut self, args: &Args) -> Config {
+        if let Some(m) = args.str_opt("model") {
+            self.model = m.to_string();
+        }
+        if let Some(a) = args.str_opt("artifacts") {
+            self.artifacts = PathBuf::from(a);
+        }
+        self.slo_seconds = args.f64_or("slo", self.slo_seconds);
+        if args.flag("hetero") {
+            self.hetero = true;
+        }
+        if args.flag("no-hetero") {
+            self.hetero = false;
+        }
+        self.npu_depth = args.usize_or("npu-depth", self.npu_depth);
+        self.cpu_depth = args.usize_or("cpu-depth", self.cpu_depth);
+        self.npu_workers = args.usize_or("npu-workers", self.npu_workers);
+        self.cpu_workers = args.usize_or("cpu-workers", self.cpu_workers);
+        if let Some(l) = args.str_opt("listen") {
+            self.listen = l.to_string();
+        }
+        self.pin_cpu_cores = args.usize_or("pin-cpu-cores", self.pin_cpu_cores);
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("artifacts", Json::str(self.artifacts.to_string_lossy())),
+            ("slo_seconds", Json::num(self.slo_seconds)),
+            ("hetero", Json::Bool(self.hetero)),
+            ("npu_depth", Json::num(self.npu_depth as f64)),
+            ("cpu_depth", Json::num(self.cpu_depth as f64)),
+            ("npu_workers", Json::num(self.npu_workers as f64)),
+            ("cpu_workers", Json::num(self.cpu_workers as f64)),
+            ("listen", Json::str(self.listen.clone())),
+            ("pin_cpu_cores", Json::num(self.pin_cpu_cores as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_roundtrip_json() {
+        let c = Config::default();
+        let j = c.to_json();
+        let c2 = Config::from_json(&j);
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.npu_depth, c.npu_depth);
+        assert_eq!(c2.slo_seconds, c.slo_seconds);
+        assert_eq!(c2.hetero, c.hetero);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = json::parse(r#"{"model":"jina_micro","cpu_depth":3}"#).unwrap();
+        let c = Config::from_json(&j);
+        assert_eq!(c.model, "jina_micro");
+        assert_eq!(c.cpu_depth, 3);
+        assert_eq!(c.npu_depth, Config::default().npu_depth);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let args = Args::parse(
+            ["x", "--model", "jina_micro", "--slo", "2.0", "--no-hetero"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::default().apply_args(&args);
+        assert_eq!(c.model, "jina_micro");
+        assert_eq!(c.slo_seconds, 2.0);
+        assert!(!c.hetero);
+    }
+}

@@ -1,0 +1,141 @@
+//! Multi-instance load balancing within a device class.
+//!
+//! Algorithm 2 allows `worker_num_main = I` NPU instances; the paper
+//! keeps the per-class queue single (one queue feeding I workers is
+//! naturally work-conserving). For deployments that want *partitioned*
+//! queues (per-card VRAM isolation, §4.3's one-instance-per-machine CPU
+//! guidance), this module provides the dispatch policies to choose the
+//! instance: round-robin and least-loaded (join-shortest-queue).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Instance-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    /// Join-shortest-queue over reported instance loads.
+    LeastLoaded,
+}
+
+/// Balancer over `n` instances of one device class.
+pub struct Balancer {
+    policy: Policy,
+    rr: AtomicUsize,
+    loads: Vec<AtomicUsize>,
+}
+
+impl Balancer {
+    pub fn new(n: usize, policy: Policy) -> Balancer {
+        assert!(n > 0);
+        Balancer {
+            policy,
+            rr: AtomicUsize::new(0),
+            loads: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Pick the instance for the next query and bump its load. Pair with
+    /// [`Balancer::complete`].
+    pub fn pick(&self) -> usize {
+        let idx = match self.policy {
+            Policy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.loads.len(),
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, l) in self.loads.iter().enumerate() {
+                    let v = l.load(Ordering::Relaxed);
+                    if v < best_load {
+                        best = i;
+                        best_load = v;
+                    }
+                }
+                best
+            }
+        };
+        self.loads[idx].fetch_add(1, Ordering::AcqRel);
+        idx
+    }
+
+    /// Report a query finished on `idx`.
+    pub fn complete(&self, idx: usize) {
+        let prev = self.loads[idx].fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0);
+    }
+
+    pub fn load(&self, idx: usize) -> usize {
+        self.loads[idx].load(Ordering::Relaxed)
+    }
+
+    pub fn total_load(&self) -> usize {
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let b = Balancer::new(3, Policy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| b.pick()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let b = Balancer::new(3, Policy::LeastLoaded);
+        let a = b.pick(); // load [1,0,0] → 0
+        let c = b.pick(); // → 1
+        let d = b.pick(); // → 2
+        assert_eq!((a, c, d), (0, 1, 2));
+        b.complete(1); // loads [1,0,1]
+        assert_eq!(b.pick(), 1);
+    }
+
+    #[test]
+    fn least_loaded_balances_unequal_service_times() {
+        // Instance 0's queries never complete; everything else should
+        // drift to instances 1 and 2.
+        let b = Balancer::new(3, Policy::LeastLoaded);
+        let mut on_zero = 0;
+        for _ in 0..30 {
+            let i = b.pick();
+            if i == 0 {
+                on_zero += 1; // stuck: never complete
+            } else {
+                b.complete(i);
+            }
+        }
+        assert!(on_zero <= 2, "slow instance took {on_zero} picks");
+    }
+
+    #[test]
+    fn load_accounting_consistent_under_threads() {
+        use std::sync::Arc;
+        let b = Arc::new(Balancer::new(4, Policy::LeastLoaded));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        let i = b.pick();
+                        b.complete(i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(b.total_load(), 0);
+    }
+}

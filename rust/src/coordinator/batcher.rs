@@ -1,0 +1,203 @@
+//! Device queues and dynamic batching.
+//!
+//! Each device (NPU / CPU) owns one [`DeviceQueue`]: admitted queries are
+//! "grouped into batches and processed by the corresponding instances"
+//! (paper §4.1). Workers block on the queue and drain up to their
+//! backend's max batch in FIFO order — under closed-loop peak load this
+//! naturally forms the full-depth batches the paper's latency model
+//! assumes, while staying work-conserving at low load (batch of 1 leaves
+//! immediately; no artificial batching delay is ever added to the SLO).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// One admitted query travelling through a device queue.
+pub struct Pending<T> {
+    pub text: String,
+    pub enqueued: Instant,
+    /// Response slot (a per-request channel in the real service).
+    pub reply: T,
+}
+
+/// Blocking MPMC FIFO with batch drain and shutdown.
+pub struct DeviceQueue<T> {
+    inner: Mutex<VecDeque<Pending<T>>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl<T> Default for DeviceQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> DeviceQueue<T> {
+    pub fn new() -> DeviceQueue<T> {
+        DeviceQueue {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Push one admitted query (admission control already happened in the
+    /// queue manager; this queue never refuses).
+    pub fn push(&self, p: Pending<T>) {
+        let mut q = self.inner.lock().unwrap();
+        q.push_back(p);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    /// Block until at least one query is available (or shutdown), then
+    /// drain up to `max` in arrival order. `None` = shut down and empty.
+    pub fn drain_batch(&self, max: usize) -> Option<Vec<Pending<T>>> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if !q.is_empty() {
+                let n = q.len().min(max.max(1));
+                return Some(q.drain(..n).collect());
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wake all workers and let them exit once the queue is empty.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.cv.notify_all();
+    }
+}
+
+/// Pick the (batch, seq) bucket shape for a drained batch: the max token
+/// count decides seq, the batch length decides batch. Returned values are
+/// *requested* sizes; the engine rounds up to exported buckets.
+pub fn batch_shape(token_counts: &[usize]) -> (usize, usize) {
+    let b = token_counts.len();
+    let s = token_counts.iter().copied().max().unwrap_or(1);
+    (b, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn pending(text: &str) -> Pending<u32> {
+        Pending { text: text.to_string(), enqueued: Instant::now(), reply: 0 }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let q: DeviceQueue<u32> = DeviceQueue::new();
+        for i in 0..5 {
+            q.push(pending(&format!("q{i}")));
+        }
+        let batch = q.drain_batch(10).unwrap();
+        let texts: Vec<_> = batch.iter().map(|p| p.text.as_str()).collect();
+        assert_eq!(texts, vec!["q0", "q1", "q2", "q3", "q4"]);
+    }
+
+    #[test]
+    fn drain_respects_max() {
+        let q: DeviceQueue<u32> = DeviceQueue::new();
+        for i in 0..10 {
+            q.push(pending(&format!("q{i}")));
+        }
+        assert_eq!(q.drain_batch(4).unwrap().len(), 4);
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.drain_batch(100).unwrap().len(), 6);
+    }
+
+    #[test]
+    fn drain_blocks_until_push() {
+        let q: Arc<DeviceQueue<u32>> = Arc::new(DeviceQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.drain_batch(8));
+        std::thread::sleep(Duration::from_millis(30));
+        q.push(pending("late"));
+        let batch = h.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].text, "late");
+    }
+
+    #[test]
+    fn close_unblocks_with_none() {
+        let q: Arc<DeviceQueue<u32>> = Arc::new(DeviceQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.drain_batch(8));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn close_drains_remaining_first() {
+        let q: DeviceQueue<u32> = DeviceQueue::new();
+        q.push(pending("left over"));
+        q.close();
+        assert_eq!(q.drain_batch(8).unwrap().len(), 1);
+        assert!(q.drain_batch(8).is_none());
+    }
+
+    #[test]
+    fn batch_shape_uses_max_len() {
+        assert_eq!(batch_shape(&[3, 75, 12]), (3, 75));
+        assert_eq!(batch_shape(&[1]), (1, 1));
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_items() {
+        let q: Arc<DeviceQueue<u32>> = Arc::new(DeviceQueue::new());
+        let total = 4 * 500;
+        let mut producers = Vec::new();
+        for t in 0..4 {
+            let q = Arc::clone(&q);
+            producers.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    q.push(Pending {
+                        text: format!("{t}-{i}"),
+                        enqueued: Instant::now(),
+                        reply: 0,
+                    });
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = Arc::clone(&q);
+            consumers.push(std::thread::spawn(move || {
+                let mut seen = 0usize;
+                while let Some(batch) = q.drain_batch(16) {
+                    seen += batch.len();
+                }
+                seen
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        // Let consumers finish the backlog, then close.
+        while !q.is_empty() {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        q.close();
+        let seen: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(seen, total);
+    }
+}

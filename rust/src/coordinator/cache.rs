@@ -1,0 +1,181 @@
+//! Embedding cache: LRU over token-stream hashes.
+//!
+//! The paper's motivation (§1) notes the embedding service is called
+//! "tens of millions of times within a month" with every request passing
+//! through it online; production RAG traffic repeats queries heavily
+//! (reformulations, pagination, retries). A cache in front of the queue
+//! manager serves repeats without consuming NPU/CPU queue slots — a
+//! natural WindVE extension that compounds the concurrency gains.
+//!
+//! Keyed by the FNV-1a hash of the *token stream* (not raw text), so
+//! "Hello, World" and "hello world" share an entry exactly when they
+//! embed identically.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::runtime::tokenizer;
+
+/// Thread-safe LRU embedding cache.
+pub struct EmbeddingCache {
+    inner: Mutex<Lru>,
+}
+
+struct Lru {
+    capacity: usize,
+    map: HashMap<u64, Node>,
+    /// Monotone access clock (usize ticks; eviction = smallest tick).
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+struct Node {
+    vector: Vec<f32>,
+    last_used: u64,
+}
+
+impl EmbeddingCache {
+    pub fn new(capacity: usize) -> EmbeddingCache {
+        EmbeddingCache {
+            inner: Mutex::new(Lru {
+                capacity,
+                map: HashMap::new(),
+                clock: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Cache key for a query: hash of its normalised token ids.
+    pub fn key(text: &str, vocab_size: u32, max_len: usize) -> u64 {
+        let e = tokenizer::encode(text, vocab_size, max_len);
+        let mut bytes = Vec::with_capacity(e.len * 4);
+        for id in &e.ids[..e.len] {
+            bytes.extend_from_slice(&id.to_le_bytes());
+        }
+        tokenizer::fnv1a64(&bytes)
+    }
+
+    pub fn get(&self, key: u64) -> Option<Vec<f32>> {
+        let mut lru = self.inner.lock().unwrap();
+        lru.clock += 1;
+        let clock = lru.clock;
+        match lru.map.get_mut(&key) {
+            Some(node) => {
+                node.last_used = clock;
+                let v = node.vector.clone();
+                lru.hits += 1;
+                Some(v)
+            }
+            None => {
+                lru.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: u64, vector: Vec<f32>) {
+        let mut lru = self.inner.lock().unwrap();
+        if lru.capacity == 0 {
+            return;
+        }
+        lru.clock += 1;
+        let clock = lru.clock;
+        if lru.map.len() >= lru.capacity && !lru.map.contains_key(&key) {
+            // Evict the least recently used entry.
+            if let Some((&victim, _)) = lru.map.iter().min_by_key(|(_, n)| n.last_used) {
+                lru.map.remove(&victim);
+            }
+        }
+        lru.map.insert(key, Node { vector, last_used: clock });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses, hit-rate).
+    pub fn stats(&self) -> (u64, u64, f64) {
+        let lru = self.inner.lock().unwrap();
+        let total = lru.hits + lru.misses;
+        let rate = if total == 0 { 0.0 } else { lru.hits as f64 / total as f64 };
+        (lru.hits, lru.misses, rate)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_put() {
+        let c = EmbeddingCache::new(8);
+        let k = EmbeddingCache::key("hello world", 8192, 80);
+        assert!(c.get(k).is_none());
+        c.put(k, vec![1.0, 2.0]);
+        assert_eq!(c.get(k), Some(vec![1.0, 2.0]));
+        let (h, m, rate) = c.stats();
+        assert_eq!((h, m), (1, 1));
+        assert!((rate - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalised_texts_share_entries() {
+        let a = EmbeddingCache::key("Hello, World!", 8192, 80);
+        let b = EmbeddingCache::key("hello world", 8192, 80);
+        let c = EmbeddingCache::key("hello worlds", 8192, 80);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let c = EmbeddingCache::new(2);
+        c.put(1, vec![1.0]);
+        c.put(2, vec![2.0]);
+        assert!(c.get(1).is_some()); // touch 1 → 2 becomes LRU
+        c.put(3, vec![3.0]);
+        assert!(c.get(2).is_none(), "2 should be evicted");
+        assert!(c.get(1).is_some());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let c = EmbeddingCache::new(0);
+        c.put(1, vec![1.0]);
+        assert!(c.get(1).is_none());
+    }
+
+    #[test]
+    fn concurrent_access_consistent() {
+        use std::sync::Arc;
+        let c = Arc::new(EmbeddingCache::new(64));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let k = i % 32;
+                        if let Some(v) = c.get(k) {
+                            assert_eq!(v[0] as u64, k, "thread {t} read torn value");
+                        } else {
+                            c.put(k, vec![k as f32]);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(c.len() <= 64);
+    }
+}

@@ -1,0 +1,133 @@
+//! The device detector — Algorithm 2 of the paper.
+//!
+//! At service initialisation the detector enumerates available devices
+//! and decides the main/auxiliary roles plus worker counts; heterogeneous
+//! computing is *forced off* unless both device classes are present and
+//! the operator asked for it.
+
+use crate::devices::profile::DeviceKind;
+
+/// Detected hardware (paper inputs NPU_i, CPU_j).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Inventory {
+    /// Number of NPU/GPU cards (I in Algorithm 2).
+    pub npus: usize,
+    /// Number of CPU instances worth of cores (J in Algorithm 2; the
+    /// paper recommends one CPU instance per machine, §4.3).
+    pub cpus: usize,
+}
+
+impl Inventory {
+    /// Detect the running host. This image has no NPUs; NPU count can be
+    /// injected for simulation via `WINDVE_NPUS`.
+    pub fn detect() -> Inventory {
+        let npus = std::env::var("WINDVE_NPUS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let cpus = 1; // one CPU instance per machine (paper §4.3)
+        Inventory { npus, cpus }
+    }
+}
+
+/// Algorithm 2's outputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Detection {
+    pub device_main: Option<DeviceKind>,
+    pub device_auxiliary: Option<DeviceKind>,
+    pub worker_num_main: usize,
+    pub worker_num_auxiliary: usize,
+    pub heter_enable: bool,
+}
+
+/// Algorithm 2, line for line. `heter_requested` is the operator's
+/// heterogeneous-computing option.
+pub fn detect(inv: Inventory, heter_requested: bool) -> Detection {
+    if inv.npus > 0 {
+        if heter_requested && inv.cpus > 0 {
+            Detection {
+                device_main: Some(DeviceKind::Npu),
+                device_auxiliary: Some(DeviceKind::Cpu),
+                worker_num_main: inv.npus,
+                worker_num_auxiliary: inv.cpus,
+                heter_enable: true,
+            }
+        } else {
+            // NPUs only establish a queue "to ensure high performance".
+            Detection {
+                device_main: Some(DeviceKind::Npu),
+                device_auxiliary: None,
+                worker_num_main: inv.npus,
+                worker_num_auxiliary: 0,
+                heter_enable: false,
+            }
+        }
+    } else if inv.cpus > 0 {
+        // CPU-only host: single queue, hetero forced off.
+        Detection {
+            device_main: Some(DeviceKind::Cpu),
+            device_auxiliary: None,
+            worker_num_main: inv.cpus,
+            worker_num_auxiliary: 0,
+            heter_enable: false,
+        }
+    } else {
+        Detection {
+            device_main: None,
+            device_auxiliary: None,
+            worker_num_main: 0,
+            worker_num_auxiliary: 0,
+            heter_enable: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_plus_cpu_with_hetero() {
+        let d = detect(Inventory { npus: 2, cpus: 1 }, true);
+        assert_eq!(d.device_main, Some(DeviceKind::Npu));
+        assert_eq!(d.device_auxiliary, Some(DeviceKind::Cpu));
+        assert_eq!(d.worker_num_main, 2);
+        assert_eq!(d.worker_num_auxiliary, 1);
+        assert!(d.heter_enable);
+    }
+
+    #[test]
+    fn npu_plus_cpu_hetero_declined() {
+        // Option off → only the NPU queue is created.
+        let d = detect(Inventory { npus: 1, cpus: 1 }, false);
+        assert_eq!(d.device_main, Some(DeviceKind::Npu));
+        assert_eq!(d.device_auxiliary, None);
+        assert_eq!(d.worker_num_auxiliary, 0);
+        assert!(!d.heter_enable);
+    }
+
+    #[test]
+    fn cpu_only_forces_hetero_off() {
+        // Algorithm 2's else-branch: single device type → hetero disabled.
+        let d = detect(Inventory { npus: 0, cpus: 1 }, true);
+        assert_eq!(d.device_main, Some(DeviceKind::Cpu));
+        assert_eq!(d.device_auxiliary, None);
+        assert_eq!(d.worker_num_main, 1);
+        assert!(!d.heter_enable);
+    }
+
+    #[test]
+    fn nothing_detected() {
+        let d = detect(Inventory { npus: 0, cpus: 0 }, true);
+        assert_eq!(d.device_main, None);
+        assert!(!d.heter_enable);
+    }
+
+    #[test]
+    fn npu_only_host() {
+        let d = detect(Inventory { npus: 4, cpus: 0 }, true);
+        assert_eq!(d.device_main, Some(DeviceKind::Npu));
+        assert_eq!(d.worker_num_main, 4);
+        assert!(!d.heter_enable, "no CPU to offload to");
+    }
+}

@@ -1,0 +1,242 @@
+//! Worker instances: one OS thread per instance, each owning its own
+//! model copy (paper §4.1: "Each instance employs its own model copy").
+//!
+//! Backends are constructed *on* the worker thread via a factory because
+//! PJRT handles are not `Send`. Workers contain failures: a panicking or
+//! erroring backend call fails only the queries in that batch (reported
+//! as `Backend` errors to their callers) and the worker keeps serving —
+//! exercised by `rust/tests/failure_injection.rs`.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::batcher::DeviceQueue;
+use crate::coordinator::queue_manager::{QueueManager, Route};
+use crate::devices::executor::Backend;
+use crate::devices::affinity;
+use crate::metrics::Registry;
+
+/// What a query's submitter receives.
+pub type Reply = Sender<Result<Vec<f32>, String>>;
+
+/// Factory building the worker's backend on its own thread.
+pub type BackendFactory = Box<dyn FnOnce() -> anyhow::Result<Box<dyn Backend>> + Send>;
+
+/// Spawn one worker draining `queue`, releasing `route` slots on `qm`.
+///
+/// `pin_cores`: optional CPU affinity set (paper §4.4 reversed/NUMA-local
+/// picking is done by the service; this just applies it).
+pub fn spawn_worker(
+    name: String,
+    queue: Arc<DeviceQueue<Reply>>,
+    qm: Arc<QueueManager>,
+    route: Route,
+    factory: BackendFactory,
+    metrics: Registry,
+    pin_cores: Option<Vec<usize>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(move || {
+            if let Some(cores) = pin_cores {
+                if let Err(e) = affinity::pin_current_thread(&cores) {
+                    log::warn!("{name}: affinity pin failed: {e:#}");
+                }
+            }
+            let mut backend = match factory() {
+                Ok(b) => b,
+                Err(e) => {
+                    // Fail every query this queue will ever see.
+                    log::error!("{name}: backend init failed: {e:#}");
+                    while let Some(batch) = queue.drain_batch(64) {
+                        for p in batch {
+                            qm.release(route);
+                            let _ = p.reply.send(Err(format!("backend init failed: {e:#}")));
+                        }
+                    }
+                    return;
+                }
+            };
+            log::info!("{name}: serving with {}", backend.describe());
+            let lat = metrics.histogram(&format!("worker.{name}.batch_ns"));
+            let batches = metrics.counter(&format!("worker.{name}.batches"));
+            let queries = metrics.counter(&format!("worker.{name}.queries"));
+            let failures = metrics.counter(&format!("worker.{name}.failures"));
+
+            while let Some(batch) = queue.drain_batch(backend.max_batch()) {
+                // Take ownership of the texts (no per-query clone on the
+                // hot path — perf pass §Perf); keep replies alongside.
+                let (texts, batch): (Vec<String>, Vec<Reply>) = batch
+                    .into_iter()
+                    .map(|p| (p.text, p.reply))
+                    .unzip();
+                let t0 = std::time::Instant::now();
+                let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    backend.embed(&texts)
+                }));
+                lat.record(t0.elapsed().as_nanos() as u64);
+                batches.inc();
+                queries.add(batch.len() as u64);
+                match result {
+                    Ok(Ok(vectors)) if vectors.len() == batch.len() => {
+                        for (reply, v) in batch.into_iter().zip(vectors) {
+                            qm.release(route);
+                            let _ = reply.send(Ok(v));
+                        }
+                    }
+                    Ok(Ok(vectors)) => {
+                        failures.inc();
+                        let msg = format!(
+                            "backend returned {} vectors for {} queries",
+                            vectors.len(),
+                            batch.len()
+                        );
+                        for reply in batch {
+                            qm.release(route);
+                            let _ = reply.send(Err(msg.clone()));
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        failures.inc();
+                        for reply in batch {
+                            qm.release(route);
+                            let _ = reply.send(Err(format!("backend error: {e:#}")));
+                        }
+                    }
+                    Err(panic) => {
+                        failures.inc();
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "worker panic".into());
+                        log::error!("{name}: backend panicked: {msg}");
+                        for reply in batch {
+                            qm.release(route);
+                            let _ = reply.send(Err(format!("backend panic: {msg}")));
+                        }
+                    }
+                }
+            }
+            log::info!("{name}: queue closed, exiting");
+        })
+        .expect("spawn worker thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Pending;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    struct OkBackend;
+    impl Backend for OkBackend {
+        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+            Ok(texts.iter().map(|t| vec![t.len() as f32]).collect())
+        }
+        fn describe(&self) -> String {
+            "ok".into()
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+    }
+
+    struct PanicOnceBackend {
+        panicked: bool,
+    }
+    impl Backend for PanicOnceBackend {
+        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+            if !self.panicked {
+                self.panicked = true;
+                panic!("injected kernel fault");
+            }
+            Ok(texts.iter().map(|_| vec![1.0]).collect())
+        }
+        fn describe(&self) -> String {
+            "panic-once".into()
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    fn submit(queue: &DeviceQueue<Reply>, qm: &QueueManager, text: &str) -> mpsc::Receiver<Result<Vec<f32>, String>> {
+        assert_eq!(qm.dispatch(), Route::Npu);
+        let (tx, rx) = mpsc::channel();
+        queue.push(Pending { text: text.to_string(), enqueued: Instant::now(), reply: tx });
+        rx
+    }
+
+    #[test]
+    fn worker_serves_and_releases_slots() {
+        let queue = Arc::new(DeviceQueue::new());
+        let qm = Arc::new(QueueManager::new(16, 0, false));
+        let h = spawn_worker(
+            "npu0".into(),
+            Arc::clone(&queue),
+            Arc::clone(&qm),
+            Route::Npu,
+            Box::new(|| Ok(Box::new(OkBackend) as Box<dyn Backend>)),
+            Registry::new(),
+            None,
+        );
+        let rxs: Vec<_> = (0..6).map(|i| submit(&queue, &qm, &format!("query {i}"))).collect();
+        for rx in rxs {
+            let v = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap();
+            assert_eq!(v.len(), 1);
+        }
+        // All slots released.
+        assert_eq!(qm.npu_occupancy(), 0);
+        queue.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn backend_panic_fails_batch_but_worker_survives() {
+        let queue = Arc::new(DeviceQueue::new());
+        let qm = Arc::new(QueueManager::new(16, 0, false));
+        let h = spawn_worker(
+            "npu0".into(),
+            Arc::clone(&queue),
+            Arc::clone(&qm),
+            Route::Npu,
+            Box::new(|| Ok(Box::new(PanicOnceBackend { panicked: false }) as Box<dyn Backend>)),
+            Registry::new(),
+            None,
+        );
+        let rx1 = submit(&queue, &qm, "doomed");
+        let err = rx1.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("injected kernel fault"), "{err}");
+        // Worker must still serve afterwards.
+        let rx2 = submit(&queue, &qm, "survivor");
+        assert!(rx2.recv_timeout(std::time::Duration::from_secs(5)).unwrap().is_ok());
+        assert_eq!(qm.npu_occupancy(), 0);
+        queue.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn failed_factory_fails_queries_cleanly() {
+        let queue = Arc::new(DeviceQueue::new());
+        let qm = Arc::new(QueueManager::new(16, 0, false));
+        let h = spawn_worker(
+            "npu0".into(),
+            Arc::clone(&queue),
+            Arc::clone(&qm),
+            Route::Npu,
+            Box::new(|| anyhow::bail!("no artifacts")),
+            Registry::new(),
+            None,
+        );
+        let rx = submit(&queue, &qm, "orphan");
+        let err = rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap_err();
+        assert!(err.contains("backend init failed"), "{err}");
+        assert_eq!(qm.npu_occupancy(), 0);
+        queue.close();
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`queue_manager`] — Algorithm 1: NPU-priority dispatch with bounded
+//!   per-device queues and BUSY rejection.
+//! * [`device_detector`] — Algorithm 2: device discovery → main/auxiliary
+//!   roles and worker counts.
+//! * [`batcher`] — drains a device queue into bucket-sized batches.
+//! * [`instance`] — worker threads, each owning one model copy (engine).
+//! * [`service`] — the WindVE facade wiring all of it together.
+
+pub mod balancer;
+pub mod batcher;
+pub mod cache;
+pub mod device_detector;
+pub mod instance;
+pub mod queue_manager;
+pub mod service;
+
+pub use device_detector::{detect, Detection, Inventory};
+pub use queue_manager::{QueueManager, Route};
+pub use service::{ServiceConfig, WindVE};

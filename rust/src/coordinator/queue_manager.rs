@@ -1,0 +1,239 @@
+//! The queue manager — Algorithm 1 of the paper, verbatim semantics:
+//!
+//! ```text
+//! foreach query:
+//!   if NPU queue is not full:        push NPU,  return 'NPU'
+//!   elif heterogeneous enabled:
+//!     if CPU queue is not full:      push CPU,  return 'CPU'
+//!     else:                          return 'BUSY'
+//!   else:                            return 'BUSY'
+//! ```
+//!
+//! Queue *depths* are the paper's C^max_NPU / C^max_CPU (Eqs. 7-10),
+//! calibrated by [`crate::estimator`]. Occupancy counts queries from
+//! dispatch until their batch completes, so "depth" bounds the device's
+//! in-flight concurrency exactly as the paper's C_d does.
+//!
+//! Lock-free: occupancy is a pair of atomics with CAS admission, making
+//! dispatch safe from any number of front-end threads (and cheap — see
+//! benches/micro.rs).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Dispatch decision for one query (Algorithm 1's return value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Route {
+    Npu,
+    Cpu,
+    /// Both queues full (or CPU disabled): reject with 'busy'.
+    Busy,
+}
+
+impl std::fmt::Display for Route {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Route::Npu => write!(f, "NPU"),
+            Route::Cpu => write!(f, "CPU"),
+            Route::Busy => write!(f, "BUSY"),
+        }
+    }
+}
+
+/// Bounded two-queue admission state.
+#[derive(Debug)]
+pub struct QueueManager {
+    npu_depth: usize,
+    cpu_depth: usize,
+    hetero: bool,
+    npu_len: AtomicUsize,
+    cpu_len: AtomicUsize,
+    // counters for /stats
+    routed_npu: AtomicU64,
+    routed_cpu: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl QueueManager {
+    /// `cpu_depth` is ignored unless `hetero` (Algorithm 2 forces the
+    /// option off when only one device class exists).
+    pub fn new(npu_depth: usize, cpu_depth: usize, hetero: bool) -> QueueManager {
+        QueueManager {
+            npu_depth,
+            cpu_depth: if hetero { cpu_depth } else { 0 },
+            hetero,
+            npu_len: AtomicUsize::new(0),
+            cpu_len: AtomicUsize::new(0),
+            routed_npu: AtomicU64::new(0),
+            routed_cpu: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// Algorithm 1 for one query. On `Npu`/`Cpu` the corresponding
+    /// occupancy is incremented; the caller must [`QueueManager::release`]
+    /// when the query's batch completes (or the submit fails downstream).
+    pub fn dispatch(&self) -> Route {
+        if try_acquire(&self.npu_len, self.npu_depth) {
+            self.routed_npu.fetch_add(1, Ordering::Relaxed);
+            return Route::Npu;
+        }
+        if self.hetero && try_acquire(&self.cpu_len, self.cpu_depth) {
+            self.routed_cpu.fetch_add(1, Ordering::Relaxed);
+            return Route::Cpu;
+        }
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        Route::Busy
+    }
+
+    /// Return one slot. Must match a prior successful dispatch.
+    pub fn release(&self, route: Route) {
+        let q = match route {
+            Route::Npu => &self.npu_len,
+            Route::Cpu => &self.cpu_len,
+            Route::Busy => return,
+        };
+        let prev = q.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "release without matching dispatch");
+    }
+
+    pub fn npu_occupancy(&self) -> usize {
+        self.npu_len.load(Ordering::Acquire)
+    }
+
+    pub fn cpu_occupancy(&self) -> usize {
+        self.cpu_len.load(Ordering::Acquire)
+    }
+
+    pub fn npu_depth(&self) -> usize {
+        self.npu_depth
+    }
+
+    pub fn cpu_depth(&self) -> usize {
+        self.cpu_depth
+    }
+
+    pub fn hetero(&self) -> bool {
+        self.hetero
+    }
+
+    /// Total admitted capacity (paper: C_NPU + C_CPU).
+    pub fn total_depth(&self) -> usize {
+        self.npu_depth + self.cpu_depth
+    }
+
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.routed_npu.load(Ordering::Relaxed),
+            self.routed_cpu.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// CAS-increment `len` if below `cap`.
+fn try_acquire(len: &AtomicUsize, cap: usize) -> bool {
+    let mut cur = len.load(Ordering::Relaxed);
+    loop {
+        if cur >= cap {
+            return false;
+        }
+        match len.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn npu_priority_then_cpu_then_busy() {
+        // Algorithm 1's dispatch order, exactly.
+        let qm = QueueManager::new(2, 1, true);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Busy);
+        assert_eq!(qm.npu_occupancy(), 2);
+        assert_eq!(qm.cpu_occupancy(), 1);
+    }
+
+    #[test]
+    fn hetero_disabled_skips_cpu() {
+        let qm = QueueManager::new(1, 5, false);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Busy); // CPU never considered
+        assert_eq!(qm.cpu_depth(), 0);
+    }
+
+    #[test]
+    fn release_frees_slot_for_reuse() {
+        let qm = QueueManager::new(1, 0, false);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Busy);
+        qm.release(Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+    }
+
+    #[test]
+    fn busy_release_is_noop() {
+        let qm = QueueManager::new(0, 0, true);
+        assert_eq!(qm.dispatch(), Route::Busy);
+        qm.release(Route::Busy);
+        assert_eq!(qm.npu_occupancy(), 0);
+    }
+
+    #[test]
+    fn zero_depths_always_busy() {
+        let qm = QueueManager::new(0, 0, true);
+        for _ in 0..5 {
+            assert_eq!(qm.dispatch(), Route::Busy);
+        }
+        assert_eq!(qm.stats().2, 5);
+    }
+
+    #[test]
+    fn stats_count_routes() {
+        let qm = QueueManager::new(1, 1, true);
+        qm.dispatch();
+        qm.dispatch();
+        qm.dispatch();
+        assert_eq!(qm.stats(), (1, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_dispatch_never_exceeds_depths() {
+        let qm = Arc::new(QueueManager::new(40, 10, true));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let qm = Arc::clone(&qm);
+            handles.push(std::thread::spawn(move || {
+                let mut got = (0u32, 0u32, 0u32);
+                for _ in 0..1000 {
+                    match qm.dispatch() {
+                        Route::Npu => got.0 += 1,
+                        Route::Cpu => got.1 += 1,
+                        Route::Busy => got.2 += 1,
+                    }
+                    // occupancy invariant must hold at every instant
+                    assert!(qm.npu_occupancy() <= 40);
+                    assert!(qm.cpu_occupancy() <= 10);
+                }
+                got
+            }));
+        }
+        let mut total = (0u32, 0u32, 0u32);
+        for h in handles {
+            let g = h.join().unwrap();
+            total = (total.0 + g.0, total.1 + g.1, total.2 + g.2);
+        }
+        // conservation: every dispatch returned exactly one route
+        assert_eq!(total.0 + total.1 + total.2, 8000);
+        // admission never exceeded depth
+        assert_eq!(total.0 as usize, 40);
+        assert_eq!(total.1 as usize, 10);
+    }
+}

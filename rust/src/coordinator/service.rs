@@ -1,0 +1,416 @@
+//! The WindVE service facade (paper Figure 3 (B)).
+//!
+//! Wires the device detector's decision into a [`QueueManager`], one
+//! [`DeviceQueue`] per device class, and worker instances. The request
+//! path is:
+//!
+//! ```text
+//! submit(text) → QueueManager::dispatch (Algorithm 1)
+//!     Npu → NPU queue → NPU worker batch → reply
+//!     Cpu → CPU queue → CPU worker batch → reply
+//!     Busy → ServeError::Busy ("service declines excessive queries and
+//!            responds with a 'busy' status")
+//! ```
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{DeviceQueue, Pending};
+use super::cache::EmbeddingCache;
+use super::instance::{spawn_worker, BackendFactory, Reply};
+use super::queue_manager::{QueueManager, Route};
+use crate::metrics::Registry;
+
+/// Why a request did not produce an embedding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Rejected at admission — both queues full (Algorithm 1's 'BUSY').
+    Busy,
+    /// The owning worker failed the batch.
+    Backend(String),
+    /// The caller's deadline passed.
+    Timeout,
+    /// Service shut down while the query was in flight.
+    Shutdown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Busy => write!(f, "busy"),
+            ServeError::Backend(m) => write!(f, "backend: {m}"),
+            ServeError::Timeout => write!(f, "timeout"),
+            ServeError::Shutdown => write!(f, "shutdown"),
+        }
+    }
+}
+
+/// Static service wiring.
+pub struct ServiceConfig {
+    /// NPU queue depth (C^max_NPU, Eqs. 7-8).
+    pub npu_depth: usize,
+    /// CPU queue depth (C^max_CPU, Eqs. 9-10). Ignored unless `hetero`.
+    pub cpu_depth: usize,
+    /// Heterogeneous-computing option (Algorithm 2 may force it off).
+    pub hetero: bool,
+    /// Worker instances per device class.
+    pub npu_workers: usize,
+    pub cpu_workers: usize,
+    /// Optional core pinning for CPU workers (paper §4.4).
+    pub cpu_pin_cores: Option<Vec<usize>>,
+    /// Embedding-cache entries (0 disables). Hits are served without
+    /// consuming a queue slot — see coordinator::cache.
+    pub cache_entries: usize,
+    /// Tokenizer params for cache keys (vocab, max_len); defaults match
+    /// bge_micro buckets.
+    pub cache_key_space: (u32, usize),
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            npu_depth: 44,
+            cpu_depth: 8,
+            hetero: true,
+            npu_workers: 1,
+            cpu_workers: 1,
+            cpu_pin_cores: None,
+            cache_entries: 0,
+            cache_key_space: (8192, 128),
+        }
+    }
+}
+
+/// In-flight request handle.
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket").field("route", &self.route).finish()
+    }
+}
+
+pub struct Ticket {
+    pub route: Route,
+    rx: Receiver<Result<Vec<f32>, String>>,
+    submitted: Instant,
+}
+
+impl Ticket {
+    /// Wait for the embedding (bounded by `timeout`).
+    pub fn wait(self, timeout: Duration) -> Result<Vec<f32>, ServeError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(m)) => Err(ServeError::Backend(m)),
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Shutdown),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.submitted.elapsed()
+    }
+}
+
+/// The running WindVE service.
+pub struct WindVE {
+    qm: Arc<QueueManager>,
+    npu_queue: Arc<DeviceQueue<Reply>>,
+    cpu_queue: Option<Arc<DeviceQueue<Reply>>>,
+    workers: Vec<JoinHandle<()>>,
+    cache: Option<Arc<EmbeddingCache>>,
+    cache_key_space: (u32, usize),
+    pub metrics: Registry,
+}
+
+impl WindVE {
+    /// Start workers. `npu_factories` / `cpu_factories` supply one backend
+    /// factory per worker (backends are built on the worker threads —
+    /// PJRT handles are not `Send`).
+    pub fn start(
+        cfg: ServiceConfig,
+        npu_factories: Vec<BackendFactory>,
+        cpu_factories: Vec<BackendFactory>,
+    ) -> Result<WindVE> {
+        anyhow::ensure!(
+            npu_factories.len() == cfg.npu_workers,
+            "need {} npu factories, got {}",
+            cfg.npu_workers,
+            npu_factories.len()
+        );
+        let hetero = cfg.hetero && cfg.cpu_workers > 0;
+        anyhow::ensure!(
+            !hetero || cpu_factories.len() == cfg.cpu_workers,
+            "need {} cpu factories, got {}",
+            cfg.cpu_workers,
+            cpu_factories.len()
+        );
+
+        let metrics = Registry::new();
+        let qm = Arc::new(QueueManager::new(cfg.npu_depth, cfg.cpu_depth, hetero));
+        let npu_queue = Arc::new(DeviceQueue::new());
+        let cpu_queue = hetero.then(|| Arc::new(DeviceQueue::new()));
+
+        let mut workers = Vec::new();
+        for (i, f) in npu_factories.into_iter().enumerate() {
+            workers.push(spawn_worker(
+                format!("npu{i}"),
+                Arc::clone(&npu_queue),
+                Arc::clone(&qm),
+                Route::Npu,
+                f,
+                metrics.clone(),
+                None,
+            ));
+        }
+        if let Some(cq) = &cpu_queue {
+            for (i, f) in cpu_factories.into_iter().enumerate() {
+                workers.push(spawn_worker(
+                    format!("cpu{i}"),
+                    Arc::clone(cq),
+                    Arc::clone(&qm),
+                    Route::Cpu,
+                    f,
+                    metrics.clone(),
+                    cfg.cpu_pin_cores.clone(),
+                ));
+            }
+        }
+        let cache = (cfg.cache_entries > 0)
+            .then(|| Arc::new(EmbeddingCache::new(cfg.cache_entries)));
+        Ok(WindVE {
+            qm,
+            npu_queue,
+            cpu_queue,
+            workers,
+            cache,
+            cache_key_space: cfg.cache_key_space,
+            metrics,
+        })
+    }
+
+    /// Admit and enqueue one query (Algorithm 1). Non-blocking.
+    pub fn submit(&self, text: impl Into<String>) -> Result<Ticket, ServeError> {
+        let route = self.qm.dispatch();
+        let queue = match route {
+            Route::Npu => &self.npu_queue,
+            Route::Cpu => self.cpu_queue.as_ref().expect("cpu route implies cpu queue"),
+            Route::Busy => {
+                self.metrics.counter("service.busy").inc();
+                return Err(ServeError::Busy);
+            }
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        queue.push(Pending { text: text.into(), enqueued: Instant::now(), reply: tx });
+        self.metrics.counter("service.accepted").inc();
+        Ok(Ticket { route, rx, submitted: Instant::now() })
+    }
+
+    /// Convenience: submit and wait. Consults the embedding cache first
+    /// (a hit never touches the queue manager) and fills it on success.
+    pub fn embed_blocking(
+        &self,
+        text: impl Into<String>,
+        timeout: Duration,
+    ) -> Result<Vec<f32>, ServeError> {
+        let text = text.into();
+        let cache_key = self.cache.as_ref().map(|c| {
+            let (vocab, max_len) = self.cache_key_space;
+            (Arc::clone(c), EmbeddingCache::key(&text, vocab, max_len))
+        });
+        if let Some((cache, key)) = &cache_key {
+            if let Some(v) = cache.get(*key) {
+                self.metrics.counter("service.cache_hits").inc();
+                return Ok(v);
+            }
+        }
+        let ticket = self.submit(text)?;
+        let route = ticket.route;
+        let t0 = Instant::now();
+        let out = ticket.wait(timeout);
+        if let (Some((cache, key)), Ok(v)) = (&cache_key, &out) {
+            cache.put(*key, v.clone());
+        }
+        let h = match route {
+            Route::Npu => self.metrics.histogram("service.e2e_npu_ns"),
+            Route::Cpu => self.metrics.histogram("service.e2e_cpu_ns"),
+            Route::Busy => unreachable!(),
+        };
+        h.record(t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    pub fn queue_manager(&self) -> &QueueManager {
+        &self.qm
+    }
+
+    /// Close queues and join workers.
+    pub fn shutdown(mut self) {
+        self.npu_queue.close();
+        if let Some(cq) = &self.cpu_queue {
+            cq.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for WindVE {
+    fn drop(&mut self) {
+        self.npu_queue.close();
+        if let Some(cq) = &self.cpu_queue {
+            cq.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::executor::Backend;
+
+    struct EchoBackend {
+        tag: f32,
+        delay: Duration,
+    }
+    impl Backend for EchoBackend {
+        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(self.delay);
+            Ok(texts.iter().map(|_| vec![self.tag]).collect())
+        }
+        fn describe(&self) -> String {
+            format!("echo{}", self.tag)
+        }
+        fn max_batch(&self) -> usize {
+            16
+        }
+    }
+
+    fn echo_factory(tag: f32, delay_ms: u64) -> BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(EchoBackend { tag, delay: Duration::from_millis(delay_ms) })
+                as Box<dyn Backend>)
+        })
+    }
+
+    fn small_service(npu_depth: usize, cpu_depth: usize, hetero: bool) -> WindVE {
+        WindVE::start(
+            ServiceConfig {
+                npu_depth,
+                cpu_depth,
+                hetero,
+                npu_workers: 1,
+                cpu_workers: if hetero { 1 } else { 0 },
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+            },
+            vec![echo_factory(1.0, 5)],
+            if hetero { vec![echo_factory(2.0, 5)] } else { vec![] },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn basic_embed_roundtrip() {
+        let svc = small_service(4, 2, true);
+        let v = svc.embed_blocking("hello", Duration::from_secs(5)).unwrap();
+        assert_eq!(v, vec![1.0]); // NPU-priority: tag 1.0
+        svc.shutdown();
+    }
+
+    #[test]
+    fn overflow_routes_to_cpu_then_busy() {
+        // Slow NPU worker so its queue stays occupied.
+        let svc = WindVE::start(
+            ServiceConfig {
+                npu_depth: 1,
+                cpu_depth: 1,
+                hetero: true,
+                npu_workers: 1,
+                cpu_workers: 1,
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+            },
+            vec![echo_factory(1.0, 300)],
+            vec![echo_factory(2.0, 300)],
+        )
+        .unwrap();
+        let t1 = svc.submit("a").unwrap();
+        assert_eq!(t1.route, Route::Npu);
+        let t2 = svc.submit("b").unwrap();
+        assert_eq!(t2.route, Route::Cpu);
+        assert_eq!(svc.submit("c").unwrap_err(), ServeError::Busy);
+        // Wait them out; slots free again.
+        assert_eq!(t1.wait(Duration::from_secs(5)).unwrap(), vec![1.0]);
+        assert_eq!(t2.wait(Duration::from_secs(5)).unwrap(), vec![2.0]);
+        let t4 = svc.submit("d").unwrap();
+        assert_eq!(t4.route, Route::Npu);
+        t4.wait(Duration::from_secs(5)).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn hetero_disabled_never_uses_cpu() {
+        let svc = small_service(2, 8, false);
+        let mut routes = Vec::new();
+        for i in 0..3 {
+            match svc.submit(format!("q{i}")) {
+                Ok(t) => routes.push(t.route),
+                Err(e) => {
+                    assert_eq!(e, ServeError::Busy);
+                    routes.push(Route::Busy);
+                }
+            }
+        }
+        assert!(!routes.contains(&Route::Cpu));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete_or_busy() {
+        let svc = Arc::new(small_service(8, 4, true));
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let svc = Arc::clone(&svc);
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                let mut busy = 0;
+                for i in 0..30 {
+                    match svc.embed_blocking(format!("{t}-{i}"), Duration::from_secs(10)) {
+                        Ok(_) => ok += 1,
+                        Err(ServeError::Busy) => busy += 1,
+                        Err(e) => panic!("unexpected error {e}"),
+                    }
+                }
+                (ok, busy)
+            }));
+        }
+        let mut total_ok = 0;
+        for h in handles {
+            let (ok, _busy) = h.join().unwrap();
+            total_ok += ok;
+        }
+        assert!(total_ok > 0);
+        // After the storm, occupancy must drain to zero.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+        assert_eq!(svc.queue_manager().cpu_occupancy(), 0);
+    }
+
+    #[test]
+    fn metrics_track_accept_and_busy() {
+        let svc = small_service(1, 0, false);
+        let _t = svc.submit("hold").unwrap();
+        let _ = svc.submit("reject").unwrap_err();
+        assert_eq!(svc.metrics.counter("service.accepted").get(), 1);
+        assert_eq!(svc.metrics.counter("service.busy").get(), 1);
+    }
+}

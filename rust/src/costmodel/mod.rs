@@ -1,0 +1,120 @@
+//! The paper's §3 deployment-cost model (Eqs. 1-6) and the §3.2 savings
+//! bounds for CPU peak-query offloading.
+
+/// Inputs shared by both deployment strategies.
+#[derive(Debug, Clone, Copy)]
+pub struct CostInputs {
+    /// Devices per serving instance (paper D).
+    pub devices_per_instance: f64,
+    /// Price per device, $ (paper P).
+    pub price_per_device: f64,
+}
+
+/// Eq. 4: how many other queries can be processed while one waits,
+/// given the max acceptable total latency and the per-query processing
+/// time: `n = floor((t_total_max - t_proc) / t_proc)`.
+pub fn waiting_slots(t_total_max: f64, t_proc: f64) -> u64 {
+    assert!(t_proc > 0.0, "t_proc must be positive");
+    if t_total_max <= t_proc {
+        return 0;
+    }
+    ((t_total_max - t_proc) / t_proc).floor() as u64
+}
+
+/// Eq. 5: average-rate deployment cost. `n_per_sec` = queries/s received
+/// (paper N), `n_slots` = Eq. 4's n, `throughput` = queries/s one
+/// instance sustains (paper T).
+pub fn cost_average(n_per_sec: f64, n_slots: u64, throughput: f64, inp: CostInputs) -> f64 {
+    assert!(throughput > 0.0 && n_slots > 0);
+    (n_per_sec / n_slots as f64) / throughput
+        * inp.devices_per_instance
+        * inp.price_per_device
+}
+
+/// Eq. 6: peak-provisioned deployment cost. `n_peak` = peak concurrent
+/// queries (paper N_peak), `capacity` = instance max concurrency (C).
+pub fn cost_peak(n_peak: f64, capacity: f64, inp: CostInputs) -> f64 {
+    assert!(capacity > 0.0);
+    (n_peak / capacity) * inp.devices_per_instance * inp.price_per_device
+}
+
+/// §3.2: fractional cost saved under *peak* provisioning when offloading
+/// lifts capacity from C_NPU to C_NPU + C_CPU:
+/// `C_CPU / (C_CPU + C_NPU)`.
+pub fn savings_peak(c_npu: usize, c_cpu: usize) -> f64 {
+    if c_npu + c_cpu == 0 {
+        return 0.0;
+    }
+    c_cpu as f64 / (c_cpu + c_npu) as f64
+}
+
+/// §3.2: throughput (and max cost) improvement under *average*
+/// provisioning: `C_CPU / C_NPU`.
+pub fn improvement_average(c_npu: usize, c_cpu: usize) -> f64 {
+    assert!(c_npu > 0);
+    c_cpu as f64 / c_npu as f64
+}
+
+/// Theoretical offloading-gain ceiling, Inequality 19:
+/// `C_CPU / C_NPU < α_NPU / α_CPU`. Returns the bound.
+pub fn concurrency_gain_bound(alpha_npu: f64, alpha_cpu: f64) -> f64 {
+    assert!(alpha_cpu > 0.0);
+    alpha_npu / alpha_cpu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const INP: CostInputs = CostInputs { devices_per_instance: 1.0, price_per_device: 10_000.0 };
+
+    #[test]
+    fn waiting_slots_eq4() {
+        // t_max = 1s, t_proc = 0.3s → n = floor(0.7/0.3) = 2
+        assert_eq!(waiting_slots(1.0, 0.3), 2);
+        assert_eq!(waiting_slots(1.0, 1.0), 0);
+        assert_eq!(waiting_slots(2.0, 0.5), 3);
+        assert_eq!(waiting_slots(0.5, 1.0), 0);
+    }
+
+    #[test]
+    fn average_cost_scales_with_load() {
+        let c1 = cost_average(100.0, 2, 10.0, INP);
+        let c2 = cost_average(200.0, 2, 10.0, INP);
+        assert!((c2 / c1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_cost_inverse_in_capacity() {
+        let base = cost_peak(1000.0, 44.0, INP);
+        let boosted = cost_peak(1000.0, 52.0, INP); // 44 + 8 offloaded
+        assert!(boosted < base);
+        let saved = 1.0 - boosted / base;
+        // paper: 8/(44+8) = 15.4% at 1s... and 22/(96+22) = 18.6% at 2s.
+        assert!((saved - savings_peak(44, 8)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_headline_numbers() {
+        // Table 1 bge @ 2s: 96 + 22 → 18.6% peak savings, 22.9% throughput.
+        assert!((savings_peak(96, 22) - 0.186).abs() < 0.005);
+        assert!((improvement_average(96, 22) - 0.229).abs() < 0.005);
+        // Table 2 jina @ 2s: 112 + 30 → 21.1% / 26.7%.
+        assert!((savings_peak(112, 30) - 0.211).abs() < 0.005);
+        assert!((improvement_average(112, 30) - 0.267).abs() < 0.005);
+    }
+
+    #[test]
+    fn gain_bound_ineq19() {
+        // V100/Xeon: α ratio ≈ 0.195 bounds C_CPU/C_NPU; observed
+        // 8/44 = 0.18 respects the bound.
+        let bound = concurrency_gain_bound(0.0166, 0.085);
+        assert!(8.0 / 44.0 < bound);
+    }
+
+    #[test]
+    fn zero_capacity_degenerate() {
+        assert_eq!(savings_peak(0, 0), 0.0);
+        assert_eq!(savings_peak(10, 0), 0.0);
+    }
+}

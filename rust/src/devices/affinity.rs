@@ -1,0 +1,206 @@
+//! CPU affinity + NUMA placement (paper §4.4).
+//!
+//! The paper's empirical guidance for ARM hosts: pin embedding workers to
+//! cores **in reversed index order** (the service framework and OS settle
+//! on low-index cores) and **never cross a NUMA node** within one worker.
+//! This module implements that plan: a topology model, the reversed
+//! non-crossing core picker, and the actual `sched_setaffinity` call.
+
+use anyhow::{bail, Result};
+
+/// Host CPU topology: total cores grouped into equal NUMA nodes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub cores: usize,
+    pub numa_nodes: usize,
+}
+
+impl Topology {
+    pub fn new(cores: usize, numa_nodes: usize) -> Topology {
+        assert!(numa_nodes > 0 && cores >= numa_nodes);
+        Topology { cores, numa_nodes }
+    }
+
+    /// Detect the running host (cores from the OS; NUMA from sysfs,
+    /// defaulting to 1 when unavailable).
+    pub fn detect() -> Topology {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let numa_nodes = std::fs::read_dir("/sys/devices/system/node")
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        e.file_name()
+                            .to_string_lossy()
+                            .strip_prefix("node")
+                            .map(|s| s.chars().all(|c| c.is_ascii_digit()))
+                            .unwrap_or(false)
+                    })
+                    .count()
+                    .max(1)
+            })
+            .unwrap_or(1);
+        Topology { cores, numa_nodes }
+    }
+
+    pub fn cores_per_node(&self) -> usize {
+        self.cores / self.numa_nodes
+    }
+
+    /// NUMA node of a core index.
+    pub fn node_of(&self, core: usize) -> usize {
+        (core / self.cores_per_node()).min(self.numa_nodes - 1)
+    }
+
+    /// Pick `n` cores for one worker per the paper's §4.4 heuristic:
+    /// highest indices first, truncated so the set never crosses a NUMA
+    /// boundary. Returns an error if `n` exceeds one node's cores (the
+    /// paper recommends one CPU instance per machine sized within a node
+    /// group; callers wanting more spawn multiple workers).
+    pub fn pick_cores_reversed(&self, n: usize, already_taken: usize) -> Result<Vec<usize>> {
+        if n == 0 {
+            bail!("cannot pin to zero cores");
+        }
+        if n > self.cores_per_node() * self.numa_nodes {
+            bail!("requested {n} cores > {} available", self.cores);
+        }
+        // Walk from the top core downward, skipping cores already handed
+        // out, and cut the allocation at a NUMA boundary.
+        let mut picked = Vec::with_capacity(n);
+        let start = self
+            .cores
+            .checked_sub(already_taken)
+            .ok_or_else(|| anyhow::anyhow!("cores exhausted"))?;
+        if start == 0 {
+            bail!("cores exhausted");
+        }
+        let first = start - 1;
+        let node = self.node_of(first);
+        for core in (0..=first).rev() {
+            if self.node_of(core) != node {
+                break; // §4.4: no NUMA crossing
+            }
+            picked.push(core);
+            if picked.len() == n {
+                return Ok(picked);
+            }
+        }
+        bail!(
+            "cannot allocate {n} cores within NUMA node {node} (got {})",
+            picked.len()
+        )
+    }
+}
+
+/// Pin the calling thread to the given cores (Linux `sched_setaffinity`).
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cores: &[usize]) -> Result<()> {
+    if cores.is_empty() {
+        bail!("empty core set");
+    }
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        for &c in cores {
+            libc::CPU_SET(c, &mut set);
+        }
+        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
+        if rc != 0 {
+            bail!("sched_setaffinity failed: {}", std::io::Error::last_os_error());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cores: &[usize]) -> Result<()> {
+    Ok(()) // no-op off Linux
+}
+
+/// Current thread's allowed cores (for tests).
+#[cfg(target_os = "linux")]
+pub fn current_affinity() -> Result<Vec<usize>> {
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        let rc = libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set);
+        if rc != 0 {
+            bail!("sched_getaffinity failed");
+        }
+        Ok((0..libc::CPU_SETSIZE as usize)
+            .filter(|&c| libc::CPU_ISSET(c, &set))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kunpeng_like_topology() {
+        // 128 cores, 4 numas (the paper's Atlas 800 host).
+        let t = Topology::new(128, 4);
+        assert_eq!(t.cores_per_node(), 32);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(127), 3);
+        assert_eq!(t.node_of(95), 2);
+    }
+
+    #[test]
+    fn reversed_pick_starts_at_top_core() {
+        let t = Topology::new(128, 4);
+        let cores = t.pick_cores_reversed(8, 0).unwrap();
+        assert_eq!(cores, vec![127, 126, 125, 124, 123, 122, 121, 120]);
+    }
+
+    #[test]
+    fn pick_never_crosses_numa() {
+        let t = Topology::new(128, 4);
+        // From offset 30 taken, the walk starts at core 97 (node 3) and may
+        // only descend to core 96 before hitting node 2 → only 2 available.
+        let err = t.pick_cores_reversed(8, 30).unwrap_err();
+        assert!(err.to_string().contains("NUMA"), "{err}");
+        let ok = t.pick_cores_reversed(2, 30).unwrap();
+        assert_eq!(ok, vec![97, 96]);
+        for w in ok.windows(2) {
+            assert_eq!(t.node_of(w[0]), t.node_of(w[1]));
+        }
+    }
+
+    #[test]
+    fn single_numa_topology_behaves() {
+        let t = Topology::new(8, 1);
+        assert_eq!(t.pick_cores_reversed(8, 0).unwrap().len(), 8);
+        assert!(t.pick_cores_reversed(9, 0).is_err());
+        assert!(t.pick_cores_reversed(0, 0).is_err());
+    }
+
+    #[test]
+    fn exhausted_cores_error() {
+        let t = Topology::new(8, 1);
+        assert!(t.pick_cores_reversed(1, 8).is_err());
+    }
+
+    #[test]
+    fn detect_reports_positive_counts() {
+        let t = Topology::detect();
+        assert!(t.cores >= 1);
+        assert!(t.numa_nodes >= 1);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn pin_and_read_back() {
+        let all = current_affinity().unwrap();
+        if all.len() < 2 {
+            return; // single-core CI box: nothing to assert
+        }
+        let target = vec![all[0]];
+        pin_current_thread(&target).unwrap();
+        let now = current_affinity().unwrap();
+        assert_eq!(now, target);
+        // restore
+        pin_current_thread(&all).unwrap();
+    }
+}

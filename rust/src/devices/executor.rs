@@ -1,0 +1,166 @@
+//! Batch execution backends for worker instances.
+//!
+//! [`Backend`] is what a `coordinator::instance::Worker` drives: give it a
+//! batch of texts, get embeddings back. Two implementations:
+//!
+//! * **Real** — wraps [`crate::runtime::EmbeddingEngine`]: PJRT-compiled
+//!   AOT artifacts on the CPU PJRT client (the production path). Because
+//!   PJRT handles are not `Send`, workers construct this backend on their
+//!   own thread via the factory passed to the service.
+//! * **[`SyntheticBackend`]** — profile-driven: sleeps for the calibrated
+//!   `t(batch, qlen)` and returns deterministic pseudo-embeddings. Used by
+//!   the paper-scale experiments (our testbed has no V100/Atlas — see
+//!   DESIGN.md §2) and by tests that must not depend on built artifacts.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::profile::DeviceProfile;
+use crate::runtime::{tokenizer, EmbeddingEngine};
+use crate::util::rng::Pcg;
+
+/// A batch embedding executor owned by one worker instance.
+pub trait Backend {
+    /// Embed a batch; one vector per input text.
+    fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>>;
+    /// Human-readable backend description (for /stats and logs).
+    fn describe(&self) -> String;
+    /// Largest batch worth submitting at once (bucket cap for real
+    /// engines; queue depth elsewhere).
+    fn max_batch(&self) -> usize;
+}
+
+/// Real PJRT backend.
+pub struct RealBackend {
+    engine: EmbeddingEngine,
+}
+
+impl RealBackend {
+    pub fn load(artifacts: &PathBuf, model: &str) -> Result<RealBackend> {
+        let mut engine = EmbeddingEngine::load(artifacts, model)?;
+        engine.warmup()?;
+        Ok(RealBackend { engine })
+    }
+}
+
+impl Backend for RealBackend {
+    fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        self.engine.embed(texts)
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt:{}", self.engine.model_name())
+    }
+
+    fn max_batch(&self) -> usize {
+        self.engine.max_batch()
+    }
+}
+
+/// Profile-driven synthetic backend: calibrated latency + deterministic
+/// hash pseudo-embeddings (so routing/batching tests can assert payloads).
+pub struct SyntheticBackend {
+    pub profile: DeviceProfile,
+    pub d_model: usize,
+    /// Wall-clock scale: 1.0 replays paper-scale seconds, small values
+    /// (e.g. 1e-3) keep tests fast while preserving ratios.
+    pub time_scale: f64,
+    rng: Pcg,
+}
+
+impl SyntheticBackend {
+    pub fn new(profile: DeviceProfile, time_scale: f64, seed: u64) -> SyntheticBackend {
+        SyntheticBackend { profile, d_model: 64, time_scale, rng: Pcg::new(seed) }
+    }
+
+    fn pseudo_embedding(&self, text: &str, d: usize) -> Vec<f32> {
+        // Deterministic unit vector derived from the token stream.
+        let mut state = tokenizer::fnv1a64(text.as_bytes());
+        let mut v: Vec<f32> = (0..d)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect();
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= norm);
+        v
+    }
+}
+
+impl Backend for SyntheticBackend {
+    fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        let qlen = texts
+            .iter()
+            .map(|t| tokenizer::token_count(t))
+            .max()
+            .unwrap_or(1);
+        let secs = self
+            .profile
+            .noisy_service_time(texts.len(), qlen, &mut self.rng)
+            * self.time_scale;
+        if secs > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+        Ok(texts
+            .iter()
+            .map(|t| self.pseudo_embedding(t, self.d_model))
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("synthetic:{}", self.profile.name)
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_synth() -> SyntheticBackend {
+        let mut p = DeviceProfile::v100_bge();
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        SyntheticBackend::new(p, 1e-6, 1)
+    }
+
+    #[test]
+    fn synthetic_returns_unit_vectors() {
+        let mut b = fast_synth();
+        let out = b.embed(&["hello world".into(), "other".into()]).unwrap();
+        assert_eq!(out.len(), 2);
+        for v in &out {
+            let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_per_text() {
+        let mut b = fast_synth();
+        let a = b.embed(&["same text".into()]).unwrap();
+        let c = b.embed(&["same text".into()]).unwrap();
+        assert_eq!(a, c);
+        let d = b.embed(&["different".into()]).unwrap();
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn synthetic_sleeps_scaled_time() {
+        let mut p = DeviceProfile::v100_bge();
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        let mut b = SyntheticBackend::new(p.clone(), 1e-3, 1); // ms instead of s
+        let t0 = std::time::Instant::now();
+        b.embed(&vec!["q".to_string(); 10]).unwrap();
+        let el = t0.elapsed().as_secs_f64();
+        let want = p.service_time(10, 2) * 1e-3;
+        assert!(el >= want * 0.8, "slept {el}, want >= {want}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Device layer: calibrated performance profiles of the paper's testbed
+//! devices, the executor abstraction (real PJRT vs profile-driven
+//! synthetic), and CPU affinity/NUMA placement (paper §4.4).
+
+pub mod affinity;
+pub mod executor;
+pub mod profile;
+
+pub use executor::{Backend, SyntheticBackend};
+pub use profile::{DeviceKind, DeviceProfile};

@@ -1,0 +1,380 @@
+//! Calibrated device performance profiles.
+//!
+//! The paper reduces each device to the linear latency model of Eq. 12,
+//! `t_proc = α·C + β` (C = concurrency = batch size under the paper's
+//! batch-synchronous closed-loop measurement, §5.1.3). We carry a
+//! **piecewise-linear** true curve anchored on the paper's *fine-tuned*
+//! queue depths at the 1 s and 2 s SLOs, so that the paper's own
+//! phenomena re-emerge from our estimator code rather than being wired
+//! in: the linear fit over low-concurrency probes slightly over-predicts
+//! capacity under the looser SLO (convexity), stress tests quantise to
+//! their step, and noisy devices (Kunpeng, §5.3) scatter the fit.
+//!
+//! Calibration sources (see DESIGN.md §5 for the derivations):
+//! * β from the paper's Figure 4 fits: V100 0.27, Xeon 0.32,
+//!   Atlas 0.24, Kunpeng 0.85.
+//! * anchors from Tables 1-3 fine-tuned depths (bge: V100 44/96,
+//!   Xeon 8/22, Atlas 84/172, Kunpeng 2/8; jina: Table 2).
+//! * noise/outliers: Kunpeng's elevated outlier rate reproduces the
+//!   Table 3 estimator-vs-stress discrepancy the paper reports.
+
+use crate::util::rng::Pcg;
+
+/// SLO comparison with an absolute epsilon: calibrated anchor points land
+/// exactly on the SLO and must not fail to float rounding.
+pub fn slo_met(t: f64, slo: f64) -> bool {
+    t <= slo + 1e-9
+}
+
+/// Device class, per the paper's NPU/GPU-vs-CPU split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Accelerator (NPU or GPU — the paper treats them interchangeably).
+    Npu,
+    /// Host CPU sockets.
+    Cpu,
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceKind::Npu => write!(f, "NPU"),
+            DeviceKind::Cpu => write!(f, "CPU"),
+        }
+    }
+}
+
+/// Calibrated latency model for one device (one embedding instance).
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    pub kind: DeviceKind,
+    /// Intercept β (seconds): model-load/launch overhead, Eq. 12/13.
+    pub beta: f64,
+    /// Slope α₁ (s/query) below the first anchor.
+    pub alpha1: f64,
+    /// Slope α₂ (s/query) above the first anchor (convexity; = α₁ for a
+    /// perfectly linear device).
+    pub alpha2: f64,
+    /// Concurrency at which the slope changes (the 1 s-SLO anchor).
+    pub knee: usize,
+    /// Query length (tokens) at which α/β were calibrated (paper: 75).
+    pub ref_len: usize,
+    /// Exponent of the compute-term length scaling: α ∝ (len/ref_len)^e.
+    pub len_alpha_exp: f64,
+    /// Exponent of the intercept length scaling (IO grows slower).
+    pub len_beta_exp: f64,
+    /// Relative gaussian noise on each measured latency.
+    pub noise_sigma: f64,
+    /// Probability a measurement is an outlier (late by `outlier_scale`x).
+    pub outlier_prob: f64,
+    pub outlier_scale: f64,
+    /// CPU-only: cores available / cores the calibration used.
+    pub cores: usize,
+    pub ref_cores: usize,
+}
+
+impl DeviceProfile {
+    /// Noise-free service time (seconds) for a batch of `batch` queries of
+    /// `qlen` tokens. This is the paper's t_proc for concurrency C=batch.
+    pub fn service_time(&self, batch: usize, qlen: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let lf = qlen as f64 / self.ref_len as f64;
+        let alpha_scale = lf.powf(self.len_alpha_exp) * self.core_slowdown();
+        let beta_scale = lf.powf(self.len_beta_exp) * self.core_slowdown();
+        let b = batch as f64;
+        let knee = self.knee as f64;
+        let lin = if b <= knee || self.alpha1 == self.alpha2 {
+            self.alpha1 * b
+        } else {
+            self.alpha1 * knee + self.alpha2 * (b - knee)
+        };
+        lin * alpha_scale + self.beta * beta_scale
+    }
+
+    /// Service time with measurement noise/outliers (stress tests and the
+    /// simulator sample this; the estimator sees these values).
+    pub fn noisy_service_time(&self, batch: usize, qlen: usize, rng: &mut Pcg) -> f64 {
+        let t = self.service_time(batch, qlen);
+        let mut v = t * (1.0 + self.noise_sigma * rng.normal());
+        if rng.chance(self.outlier_prob) {
+            v = t * self.outlier_scale * (1.0 + 0.5 * rng.f64());
+        }
+        v.max(t * 0.5)
+    }
+
+    /// Core-count slowdown for CPU devices (Fig. 6 calibration).
+    ///
+    /// `s(c) = 1 + k·((ref/c)^e − 1)` with (k, e) tuned so the CPU stops
+    /// helping below 44 cores at the 1 s SLO and below 36 cores at 2 s
+    /// (the crossovers the paper reports). NPUs return 1.0.
+    pub fn core_slowdown(&self) -> f64 {
+        if self.kind != DeviceKind::Cpu || self.cores >= self.ref_cores {
+            return 1.0;
+        }
+        const K: f64 = 0.035;
+        const E: f64 = 4.8;
+        let r = self.ref_cores as f64 / self.cores.max(1) as f64;
+        1.0 + K * (r.powf(E) - 1.0)
+    }
+
+    /// Largest noise-free concurrency meeting `slo` seconds at `qlen`
+    /// tokens (ground truth the estimators are judged against).
+    pub fn true_max_concurrency(&self, slo: f64, qlen: usize) -> usize {
+        if !slo_met(self.service_time(1, qlen), slo) {
+            return 0; // paper Eq. 11: device unusable at this SLO
+        }
+        let mut c = 1usize;
+        // Exponential then binary search; curve is monotone in batch.
+        while slo_met(self.service_time(c * 2, qlen), slo) && c < 1 << 20 {
+            c *= 2;
+        }
+        let (mut lo, mut hi) = (c, c * 2);
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if slo_met(self.service_time(mid, qlen), slo) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    pub fn with_cores(&self, cores: usize) -> DeviceProfile {
+        let mut p = self.clone();
+        p.cores = cores;
+        p
+    }
+
+    // ----- the paper's testbed, bge-large-zh-v1.5 calibration -----
+
+    /// Tesla V100 GPU (bge): fine-tuned anchors 44 @ 1 s, 96 @ 2 s.
+    pub fn v100_bge() -> DeviceProfile {
+        DeviceProfile::anchored("tesla_v100", DeviceKind::Npu, 0.27, 44, 96, 0.015, 0.002, 3.0)
+    }
+
+    /// 2x Intel Xeon E5-2690 (bge): anchors 8 @ 1 s, 22 @ 2 s.
+    pub fn xeon_e5_2690_bge() -> DeviceProfile {
+        DeviceProfile::anchored("xeon_e5_2690", DeviceKind::Cpu, 0.32, 8, 22, 0.02, 0.005, 3.0)
+    }
+
+    /// Atlas 300I DUO NPU (bge): anchors 84 @ 1 s, 172 @ 2 s.
+    pub fn atlas_300i_duo_bge() -> DeviceProfile {
+        DeviceProfile::anchored("atlas_300i_duo", DeviceKind::Npu, 0.24, 84, 172, 0.02, 0.01, 4.0)
+    }
+
+    /// 2x Kunpeng 920 (bge): anchors 2 @ 1 s, 8 @ 2 s. Elevated outlier
+    /// rate per the paper's §5.3 observation.
+    pub fn kunpeng_920_bge() -> DeviceProfile {
+        DeviceProfile::anchored("kunpeng_920", DeviceKind::Cpu, 0.85, 2, 8, 0.05, 0.06, 2.5)
+    }
+
+    // ----- jina calibration (Table 2) -----
+
+    /// Tesla V100 (jina): anchors 48 @ 1 s, 112 @ 2 s.
+    pub fn v100_jina() -> DeviceProfile {
+        DeviceProfile::anchored("tesla_v100_jina", DeviceKind::Npu, 0.25, 48, 112, 0.015, 0.002, 3.0)
+    }
+
+    /// 2x Xeon E5-2690 (jina): anchors 11 @ 1 s, 30 @ 2 s.
+    pub fn xeon_e5_2690_jina() -> DeviceProfile {
+        DeviceProfile::anchored("xeon_e5_2690_jina", DeviceKind::Cpu, 0.35, 11, 30, 0.02, 0.005, 3.0)
+    }
+
+    /// Atlas 300I DUO (jina): anchors 128 @ 1 s, 256 @ 2 s.
+    pub fn atlas_300i_duo_jina() -> DeviceProfile {
+        DeviceProfile::anchored("atlas_300i_duo_jina", DeviceKind::Npu, 0.2, 128, 256, 0.02, 0.01, 4.0)
+    }
+
+    /// 2x Kunpeng 920 (jina): anchors 6 @ 1 s, 20 @ 2 s.
+    pub fn kunpeng_920_jina() -> DeviceProfile {
+        DeviceProfile::anchored("kunpeng_920_jina", DeviceKind::Cpu, 0.55, 6, 20, 0.05, 0.06, 2.5)
+    }
+
+    /// Registry lookup by name (CLI/config use).
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        Some(match name {
+            "v100_bge" | "v100" | "tesla_v100" => Self::v100_bge(),
+            "xeon_bge" | "xeon" | "xeon_e5_2690" => Self::xeon_e5_2690_bge(),
+            "atlas_bge" | "atlas" | "atlas_300i_duo" => Self::atlas_300i_duo_bge(),
+            "kunpeng_bge" | "kunpeng" | "kunpeng_920" => Self::kunpeng_920_bge(),
+            "v100_jina" | "tesla_v100_jina" => Self::v100_jina(),
+            "xeon_jina" | "xeon_e5_2690_jina" => Self::xeon_e5_2690_jina(),
+            "atlas_jina" | "atlas_300i_duo_jina" => Self::atlas_300i_duo_jina(),
+            "kunpeng_jina" | "kunpeng_920_jina" => Self::kunpeng_920_jina(),
+            _ => return None,
+        })
+    }
+
+    /// Build a profile from SLO anchor points: latency hits 1.0 s at
+    /// `c_1s` concurrent queries and 2.0 s at `c_2s` (paper fine-tuned
+    /// depths), with intercept `beta` from the Figure 4 fit.
+    fn anchored(
+        name: &str,
+        kind: DeviceKind,
+        beta: f64,
+        c_1s: usize,
+        c_2s: usize,
+        noise_sigma: f64,
+        outlier_prob: f64,
+        outlier_scale: f64,
+    ) -> DeviceProfile {
+        let alpha1 = (1.0 - beta) / c_1s as f64;
+        let alpha2 = 1.0 / (c_2s - c_1s) as f64;
+        let cores = if kind == DeviceKind::Cpu { 96 } else { 0 };
+        DeviceProfile {
+            name: name.to_string(),
+            kind,
+            beta,
+            alpha1,
+            alpha2,
+            knee: c_1s,
+            ref_len: 75,
+            len_alpha_exp: 1.0,
+            len_beta_exp: 0.3,
+            noise_sigma,
+            outlier_prob,
+            outlier_scale,
+            cores,
+            ref_cores: if kind == DeviceKind::Cpu { 96 } else { 0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_hit_paper_fine_tuned_depths() {
+        // bge, Table 1 / Table 3 fine-tuned values.
+        assert_eq!(DeviceProfile::v100_bge().true_max_concurrency(1.0, 75), 44);
+        assert_eq!(DeviceProfile::v100_bge().true_max_concurrency(2.0, 75), 96);
+        assert_eq!(DeviceProfile::xeon_e5_2690_bge().true_max_concurrency(1.0, 75), 8);
+        assert_eq!(DeviceProfile::xeon_e5_2690_bge().true_max_concurrency(2.0, 75), 22);
+        assert_eq!(DeviceProfile::atlas_300i_duo_bge().true_max_concurrency(1.0, 75), 84);
+        assert_eq!(DeviceProfile::atlas_300i_duo_bge().true_max_concurrency(2.0, 75), 172);
+        assert_eq!(DeviceProfile::kunpeng_920_bge().true_max_concurrency(1.0, 75), 2);
+        assert_eq!(DeviceProfile::kunpeng_920_bge().true_max_concurrency(2.0, 75), 8);
+    }
+
+    #[test]
+    fn jina_anchors_match_table2() {
+        assert_eq!(DeviceProfile::v100_jina().true_max_concurrency(1.0, 75), 48);
+        assert_eq!(DeviceProfile::v100_jina().true_max_concurrency(2.0, 75), 112);
+        assert_eq!(DeviceProfile::xeon_e5_2690_jina().true_max_concurrency(1.0, 75), 11);
+        assert_eq!(DeviceProfile::xeon_e5_2690_jina().true_max_concurrency(2.0, 75), 30);
+        assert_eq!(DeviceProfile::atlas_300i_duo_jina().true_max_concurrency(1.0, 75), 128);
+        assert_eq!(DeviceProfile::atlas_300i_duo_jina().true_max_concurrency(2.0, 75), 256);
+        assert_eq!(DeviceProfile::kunpeng_920_jina().true_max_concurrency(1.0, 75), 6);
+        assert_eq!(DeviceProfile::kunpeng_920_jina().true_max_concurrency(2.0, 75), 20);
+    }
+
+    #[test]
+    fn beta_cpu_exceeds_beta_npu() {
+        // Paper inequality (15): β_CPU > β_NPU for each pairing.
+        assert!(DeviceProfile::xeon_e5_2690_bge().beta > DeviceProfile::v100_bge().beta);
+        assert!(DeviceProfile::kunpeng_920_bge().beta > DeviceProfile::atlas_300i_duo_bge().beta);
+    }
+
+    #[test]
+    fn alpha_cpu_exceeds_alpha_npu() {
+        // Paper inequality (14): α_CPU > α_NPU.
+        assert!(
+            DeviceProfile::xeon_e5_2690_bge().alpha1 > DeviceProfile::v100_bge().alpha1
+        );
+        assert!(
+            DeviceProfile::kunpeng_920_bge().alpha1 > DeviceProfile::atlas_300i_duo_bge().alpha1
+        );
+    }
+
+    #[test]
+    fn alpha_ratio_matches_paper_fig4() {
+        // Paper: α_NPU/α_CPU ≈ 0.21 (V100/Xeon) and ≈ 0.12 (Atlas/Kunpeng).
+        let r1 = DeviceProfile::v100_bge().alpha1 / DeviceProfile::xeon_e5_2690_bge().alpha1;
+        let r2 =
+            DeviceProfile::atlas_300i_duo_bge().alpha1 / DeviceProfile::kunpeng_920_bge().alpha1;
+        assert!((r1 - 0.21).abs() < 0.03, "V100/Xeon α ratio {r1}");
+        assert!((r2 - 0.12).abs() < 0.03, "Atlas/Kunpeng α ratio {r2}");
+    }
+
+    #[test]
+    fn service_time_monotone_in_batch_and_length() {
+        let p = DeviceProfile::v100_bge();
+        let mut prev = 0.0;
+        for b in 1..200 {
+            let t = p.service_time(b, 75);
+            assert!(t > prev);
+            prev = t;
+        }
+        assert!(p.service_time(10, 500) > p.service_time(10, 75));
+    }
+
+    #[test]
+    fn core_scaling_crossovers_match_fig6() {
+        // CPU benefit vanishes below ~44 cores at 1 s and ~36 at 2 s.
+        let p = DeviceProfile::xeon_e5_2690_bge();
+        assert!(p.with_cores(96).true_max_concurrency(1.0, 75) >= 8);
+        assert!(p.with_cores(48).true_max_concurrency(1.0, 75) >= 1);
+        assert_eq!(p.with_cores(40).true_max_concurrency(1.0, 75), 0);
+        assert!(p.with_cores(40).true_max_concurrency(2.0, 75) >= 1);
+        assert_eq!(p.with_cores(32).true_max_concurrency(2.0, 75), 0);
+    }
+
+    #[test]
+    fn npu_ignores_core_scaling() {
+        let p = DeviceProfile::v100_bge();
+        assert_eq!(p.core_slowdown(), 1.0);
+    }
+
+    #[test]
+    fn fig5_length_scaling_kills_cpu_at_500_tokens_1s() {
+        // Paper Fig. 5: CPU additional concurrency → 0 at 500 tokens / 1 s,
+        // but still ≈2 at 500 tokens / 2 s.
+        let cpu = DeviceProfile::xeon_e5_2690_bge();
+        assert_eq!(cpu.true_max_concurrency(1.0, 500), 0);
+        let at2s = cpu.true_max_concurrency(2.0, 500);
+        assert!((1..=4).contains(&at2s), "CPU @500tok/2s: {at2s}");
+        // NPU retains some capacity at 500 tokens.
+        assert!(DeviceProfile::v100_bge().true_max_concurrency(2.0, 500) >= 5);
+    }
+
+    #[test]
+    fn noisy_service_time_is_reproducible_and_positive() {
+        let p = DeviceProfile::kunpeng_920_bge();
+        let mut a = Pcg::new(3);
+        let mut b = Pcg::new(3);
+        for batch in 1..20 {
+            let x = p.noisy_service_time(batch, 75, &mut a);
+            let y = p.noisy_service_time(batch, 75, &mut b);
+            assert_eq!(x, y);
+            assert!(x > 0.0);
+        }
+    }
+
+    #[test]
+    fn kunpeng_is_noisier_than_xeon() {
+        let k = DeviceProfile::kunpeng_920_bge();
+        let x = DeviceProfile::xeon_e5_2690_bge();
+        assert!(k.outlier_prob > x.outlier_prob);
+    }
+
+    #[test]
+    fn registry_lookup() {
+        assert!(DeviceProfile::by_name("v100").is_some());
+        assert!(DeviceProfile::by_name("kunpeng_jina").is_some());
+        assert!(DeviceProfile::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn single_query_timeout_case_eq11() {
+        // A hypothetical very slow CPU: even one query misses the SLO →
+        // the offloading opportunity disappears (paper Eq. 11).
+        let mut p = DeviceProfile::kunpeng_920_bge();
+        p.beta = 1.2;
+        assert_eq!(p.true_max_concurrency(1.0, 75), 0);
+    }
+}

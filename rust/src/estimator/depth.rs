@@ -1,0 +1,206 @@
+//! The paper's fast queue-depth estimator (§4.2.2) and the collaborative
+//! fine-tuning pass that refines it.
+//!
+//! Procedure (mirrors the paper): run a handful of profiling sessions at
+//! low concurrencies, fit `t = α·C + β` (OLS; Theil-Sen fallback when the
+//! fit is outlier-degraded), solve for the largest C with `αC + β ≤ SLO`,
+//! then locally fine-tune by measuring around the estimate.
+
+use super::linreg::LinearFit;
+use super::robust::theil_sen;
+
+/// Result of a depth estimation.
+#[derive(Debug, Clone)]
+pub struct DepthEstimate {
+    pub fit: LinearFit,
+    /// Depth from the linear model (the paper's "linear regression" row).
+    pub predicted: usize,
+    /// Probes spent (the efficiency claim vs stress testing).
+    pub probes: usize,
+    /// True if the robust fallback was engaged.
+    pub robust: bool,
+    /// Profiling points used.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// R² below which the OLS fit is considered outlier-degraded and the
+/// Theil-Sen fallback engages (Kunpeng case, paper §5.3).
+const R2_ROBUST_THRESHOLD: f64 = 0.90;
+
+/// Estimate the queue depth from a small set of profiling sessions.
+///
+/// `probe_points` are the concurrency levels to measure (the paper uses a
+/// "limited number of profiling sessions"; 5-8 points are plenty).
+/// `measure(C)` returns observed latency in seconds.
+pub fn estimate_depth(
+    slo: f64,
+    probe_points: &[usize],
+    mut measure: impl FnMut(usize) -> f64,
+) -> DepthEstimate {
+    assert!(probe_points.len() >= 2, "need >= 2 probe points");
+    let points: Vec<(f64, f64)> = probe_points
+        .iter()
+        .map(|&c| (c as f64, measure(c)))
+        .collect();
+    let ols = LinearFit::fit(&points);
+    let (fit, robust) = if ols.r2 < R2_ROBUST_THRESHOLD {
+        (theil_sen(&points), true)
+    } else {
+        (ols, false)
+    };
+    DepthEstimate {
+        predicted: fit.max_concurrency(slo),
+        probes: points.len(),
+        fit,
+        robust,
+        points,
+    }
+}
+
+/// Collaborative fine-tuning (paper §5.2: "the queue depth is fine-tuned
+/// according to the estimated value with CPUs and NPUs/GPUs running
+/// collaboratively"): hill-climb from the estimate, measuring the real
+/// end-to-end latency at each candidate depth, and return the largest
+/// depth meeting the SLO within `radius` of the estimate.
+pub fn fine_tune_depths(
+    slo: f64,
+    estimate: usize,
+    radius: usize,
+    mut measure: impl FnMut(usize) -> f64,
+) -> usize {
+    if estimate == 0 {
+        // The estimator may under-predict to zero on noisy devices; walk
+        // up from 1 and keep the highest depth that still meets the SLO.
+        let mut best = 0;
+        for c in 1..=radius.max(1) {
+            if crate::devices::profile::slo_met(measure(c), slo) {
+                best = c;
+            } else {
+                break;
+            }
+        }
+        return best;
+    }
+    let lo = estimate.saturating_sub(radius).max(1);
+    let hi = estimate + radius;
+    let mut best = 0;
+    // Walk upward; latency is monotone in depth so stop at first failure
+    // past the estimate (but always scan the low side in case the
+    // estimate itself violates the SLO).
+    for c in lo..=hi {
+        if crate::devices::profile::slo_met(measure(c), slo) {
+            best = c;
+        } else if c >= estimate {
+            break;
+        }
+    }
+    if best == 0 {
+        // The whole window overshot (noisy over-prediction): walk down
+        // from the window floor to the highest depth that still passes.
+        let mut c = lo.saturating_sub(1);
+        while c >= 1 {
+            if crate::devices::profile::slo_met(measure(c), slo) {
+                return c;
+            }
+            c -= 1;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::profile::DeviceProfile;
+    use crate::util::rng::Pcg;
+
+    /// Default probe schedule used across the repo: geometric-ish ramp.
+    pub fn probes_for(cap: usize) -> Vec<usize> {
+        [1usize, 2, 4, 8, 16, 24, 32]
+            .iter()
+            .copied()
+            .filter(|&c| c <= cap.max(2))
+            .collect()
+    }
+
+    #[test]
+    fn clean_device_estimate_close_to_truth() {
+        let p = DeviceProfile::v100_bge();
+        let est = estimate_depth(1.0, &probes_for(32), |c| p.service_time(c, 75));
+        let truth = p.true_max_concurrency(1.0, 75);
+        let err = (est.predicted as f64 - truth as f64).abs() / truth as f64;
+        assert!(err < 0.10, "predicted {} vs true {truth}", est.predicted);
+        assert!(!est.robust);
+        assert!(est.probes <= 7);
+    }
+
+    #[test]
+    fn estimator_uses_far_fewer_probes_than_stress() {
+        let p = DeviceProfile::atlas_300i_duo_bge();
+        let est = estimate_depth(2.0, &probes_for(32), |c| p.service_time(c, 75));
+        let stress = crate::estimator::stress::stress_search(2.0, 8, 512, |c| {
+            p.service_time(c, 75)
+        });
+        assert!(est.probes * 3 < stress.probes, "{} vs {}", est.probes, stress.probes);
+    }
+
+    #[test]
+    fn outlier_device_engages_robust_fallback() {
+        let p = DeviceProfile::kunpeng_920_bge();
+        let mut rng = Pcg::new(11);
+        // Probe with heavy synthetic outliers: every 3rd probe is 4x late.
+        let mut i = 0;
+        let est = estimate_depth(2.0, &[1, 2, 3, 4, 5, 6, 7, 8], |c| {
+            i += 1;
+            let t = p.service_time(c, 75);
+            if i % 3 == 0 {
+                t * 4.0
+            } else {
+                t * (1.0 + 0.02 * rng.normal())
+            }
+        });
+        assert!(est.robust, "robust fallback should engage on outliers");
+        let truth = p.true_max_concurrency(2.0, 75);
+        // Robust estimate within a factor ~2 of truth despite 33% outliers.
+        assert!(
+            est.predicted >= truth / 2 && est.predicted <= truth * 2,
+            "predicted {} vs true {truth}",
+            est.predicted
+        );
+    }
+
+    #[test]
+    fn fine_tune_recovers_exact_depth() {
+        let p = DeviceProfile::v100_bge();
+        // Estimator predicts 43-ish from the linear fit; fine-tuning against
+        // the true curve must land exactly on 44 (the paper's Table 3 row).
+        let est = estimate_depth(1.0, &probes_for(32), |c| p.service_time(c, 75));
+        let tuned = fine_tune_depths(1.0, est.predicted, 8, |c| p.service_time(c, 75));
+        assert_eq!(tuned, 44);
+    }
+
+    #[test]
+    fn fine_tune_handles_zero_estimate() {
+        // Constant sub-SLO latency: the zero-estimate walk climbs to the
+        // scan radius; constant over-SLO latency: stays at zero (Eq. 11).
+        assert_eq!(fine_tune_depths(1.0, 0, 8, |_| 0.5), 8);
+        assert_eq!(fine_tune_depths(1.0, 0, 8, |_| 1.5), 0);
+        // Monotone curve: stops exactly at the SLO boundary.
+        assert_eq!(fine_tune_depths(1.0, 0, 8, |c| 0.3 * c as f64), 3);
+    }
+
+    #[test]
+    fn fine_tune_corrects_overestimate() {
+        let p = DeviceProfile::v100_bge();
+        // Hand the tuner a wildly high estimate; it must fall back to the
+        // highest passing depth within the radius.
+        let tuned = fine_tune_depths(1.0, 50, 8, |c| p.service_time(c, 75));
+        assert_eq!(tuned, 44);
+    }
+
+    #[test]
+    fn unusable_device_estimates_zero() {
+        let est = estimate_depth(1.0, &[1, 2, 3], |_| 3.0);
+        assert_eq!(est.predicted, 0);
+    }
+}

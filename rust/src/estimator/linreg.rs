@@ -1,0 +1,146 @@
+//! Ordinary least squares for the paper's Eq. 12: `t = α·C + β`,
+//! constrained to α, β ≥ 0 (the paper's stated constraint).
+
+/// A fitted latency-vs-concurrency line.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinearFit {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Coefficient of determination on the fitting data.
+    pub r2: f64,
+}
+
+impl LinearFit {
+    /// OLS fit over (concurrency, latency) points with the α, β ≥ 0
+    /// constraint applied by projection (clamp + refit of the free term).
+    ///
+    /// Panics if fewer than 2 points are supplied.
+    pub fn fit(points: &[(f64, f64)]) -> LinearFit {
+        assert!(points.len() >= 2, "need >= 2 profiling points");
+        let n = points.len() as f64;
+        let sx: f64 = points.iter().map(|p| p.0).sum();
+        let sy: f64 = points.iter().map(|p| p.1).sum();
+        let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        let (mut alpha, mut beta);
+        if denom.abs() < 1e-12 {
+            // All x identical: flat line through the mean.
+            alpha = 0.0;
+            beta = sy / n;
+        } else {
+            alpha = (n * sxy - sx * sy) / denom;
+            beta = (sy - alpha * sx) / n;
+        }
+        // α, β ≥ 0 projection (paper constraint): clamp the violated
+        // coefficient and refit the other unconstrained.
+        if alpha < 0.0 {
+            alpha = 0.0;
+            beta = (sy / n).max(0.0);
+        } else if beta < 0.0 {
+            beta = 0.0;
+            alpha = if sxx.abs() < 1e-12 { 0.0 } else { (sxy / sxx).max(0.0) };
+        }
+
+        let mean_y = sy / n;
+        let ss_tot: f64 = points.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+        let ss_res: f64 = points
+            .iter()
+            .map(|p| (p.1 - (alpha * p.0 + beta)).powi(2))
+            .sum();
+        let r2 = if ss_tot < 1e-12 { 1.0 } else { 1.0 - ss_res / ss_tot };
+        LinearFit { alpha, beta, r2 }
+    }
+
+    /// Predicted latency at concurrency `c` (Eq. 12).
+    pub fn predict(&self, c: f64) -> f64 {
+        self.alpha * c + self.beta
+    }
+
+    /// Largest concurrency whose predicted latency meets `slo` — the
+    /// paper's fast estimate of the queue depth (Eqs. 7-10 via Eq. 12).
+    pub fn max_concurrency(&self, slo: f64) -> usize {
+        if self.beta > slo {
+            return 0; // even one query times out (Eq. 11)
+        }
+        if self.alpha <= 0.0 {
+            return usize::MAX; // flat line under SLO: unbounded by model
+        }
+        ((slo - self.beta) / self.alpha).floor() as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn exact_line_recovered() {
+        let pts: Vec<(f64, f64)> = (1..=10).map(|c| (c as f64, 0.02 * c as f64 + 0.3)).collect();
+        let f = LinearFit::fit(&pts);
+        assert!((f.alpha - 0.02).abs() < 1e-9);
+        assert!((f.beta - 0.3).abs() < 1e-9);
+        assert!(f.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_line_recovered_approximately() {
+        let mut rng = Pcg::new(1);
+        let pts: Vec<(f64, f64)> = (1..=40)
+            .map(|c| {
+                let t = 0.0166 * c as f64 + 0.27;
+                (c as f64, t * (1.0 + 0.02 * rng.normal()))
+            })
+            .collect();
+        let f = LinearFit::fit(&pts);
+        assert!((f.alpha - 0.0166).abs() < 0.002, "alpha {}", f.alpha);
+        assert!((f.beta - 0.27).abs() < 0.05, "beta {}", f.beta);
+        assert!(f.r2 > 0.97);
+    }
+
+    #[test]
+    fn max_concurrency_solves_slo() {
+        let f = LinearFit { alpha: 0.0166, beta: 0.27, r2: 1.0 };
+        // (1 - 0.27)/0.0166 = 43.98 → 43; (2 - 0.27)/0.0166 = 104.2 → 104
+        assert_eq!(f.max_concurrency(1.0), 43);
+        assert_eq!(f.max_concurrency(2.0), 104);
+    }
+
+    #[test]
+    fn beta_above_slo_gives_zero() {
+        let f = LinearFit { alpha: 0.1, beta: 1.5, r2: 1.0 };
+        assert_eq!(f.max_concurrency(1.0), 0); // Eq. 11 territory
+        assert!(f.max_concurrency(2.0) > 0);
+    }
+
+    #[test]
+    fn negative_slope_clamped_to_zero() {
+        let pts = vec![(1.0, 0.9), (2.0, 0.8), (3.0, 0.7)];
+        let f = LinearFit::fit(&pts);
+        assert_eq!(f.alpha, 0.0);
+        assert!(f.beta >= 0.0);
+    }
+
+    #[test]
+    fn negative_intercept_clamped_to_zero() {
+        let pts = vec![(10.0, 0.05), (20.0, 0.2), (30.0, 0.35)];
+        let f = LinearFit::fit(&pts);
+        assert!(f.beta >= 0.0);
+        assert!(f.alpha > 0.0);
+    }
+
+    #[test]
+    fn identical_x_degenerates_to_mean() {
+        let pts = vec![(5.0, 1.0), (5.0, 2.0), (5.0, 3.0)];
+        let f = LinearFit::fit(&pts);
+        assert_eq!(f.alpha, 0.0);
+        assert!((f.beta - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "need >= 2")]
+    fn single_point_panics() {
+        LinearFit::fit(&[(1.0, 1.0)]);
+    }
+}

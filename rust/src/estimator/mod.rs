@@ -1,0 +1,13 @@
+//! Queue-depth estimation (paper §4.2.2): the linear-regression fast
+//! estimator, the robust (Theil-Sen) variant for outlier-heavy devices,
+//! the stress-test baseline it replaces, and the SLO → depth solver.
+
+pub mod depth;
+pub mod linreg;
+pub mod online;
+pub mod robust;
+pub mod stress;
+
+pub use depth::{estimate_depth, fine_tune_depths, DepthEstimate};
+pub use linreg::LinearFit;
+pub use stress::{stress_search, StressResult};

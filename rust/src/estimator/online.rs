@@ -1,0 +1,167 @@
+//! Online re-calibration — the operational extension of §4.2.2.
+//!
+//! The paper calibrates queue depths offline. In production, α drifts
+//! (thermal throttling, co-located tenants, model updates); this module
+//! keeps an EWMA of observed (concurrency, latency) samples, refits the
+//! line periodically, and recommends a depth change when the drift
+//! exceeds a hysteresis band. Pairs with [`crate::metrics::slo`] for the
+//! breach signal.
+
+use std::collections::VecDeque;
+
+use super::linreg::LinearFit;
+use super::robust::theil_sen;
+
+/// Streaming recalibrator.
+pub struct OnlineCalibrator {
+    slo: f64,
+    window: usize,
+    /// Relative change in recommended depth needed to emit an update.
+    hysteresis: f64,
+    samples: VecDeque<(f64, f64)>,
+    current_depth: usize,
+}
+
+impl OnlineCalibrator {
+    pub fn new(slo: f64, window: usize, hysteresis: f64, initial_depth: usize) -> Self {
+        assert!(window >= 8);
+        OnlineCalibrator {
+            slo,
+            window,
+            hysteresis,
+            samples: VecDeque::new(),
+            current_depth: initial_depth,
+        }
+    }
+
+    /// Feed one observation: the batch size a device just processed and
+    /// the latency it took.
+    pub fn observe(&mut self, concurrency: usize, latency: f64) {
+        if concurrency == 0 {
+            return;
+        }
+        self.samples.push_back((concurrency as f64, latency));
+        if self.samples.len() > self.window {
+            self.samples.pop_front();
+        }
+    }
+
+    pub fn current_depth(&self) -> usize {
+        self.current_depth
+    }
+
+    pub fn ready(&self) -> bool {
+        self.samples.len() >= self.window / 2
+    }
+
+    /// Refit and return a new recommended depth if it moved beyond the
+    /// hysteresis band (robust fit — production samples have outliers).
+    pub fn recommend(&mut self) -> Option<usize> {
+        if !self.ready() {
+            return None;
+        }
+        let pts: Vec<(f64, f64)> = self.samples.iter().copied().collect();
+        // Need at least two distinct concurrency levels to fit a slope.
+        let first = pts[0].0;
+        if pts.iter().all(|p| (p.0 - first).abs() < 1e-9) {
+            return None;
+        }
+        let fit = theil_sen(&pts);
+        let depth = fit.max_concurrency(self.slo);
+        if depth == usize::MAX {
+            return None; // flat fit: no evidence of saturation yet
+        }
+        let cur = self.current_depth.max(1) as f64;
+        if (depth as f64 - cur).abs() / cur > self.hysteresis {
+            self.current_depth = depth;
+            Some(depth)
+        } else {
+            None
+        }
+    }
+
+    /// Current fit (for dashboards).
+    pub fn fit(&self) -> Option<LinearFit> {
+        if self.samples.len() < 2 {
+            return None;
+        }
+        Some(theil_sen(&self.samples.iter().copied().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn feed(cal: &mut OnlineCalibrator, alpha: f64, beta: f64, n: usize, rng: &mut Pcg) {
+        for _ in 0..n {
+            let c = rng.usize(1, 48);
+            let t = alpha * c as f64 + beta + 0.002 * rng.normal();
+            cal.observe(c, t);
+        }
+    }
+
+    #[test]
+    fn stable_device_no_update() {
+        let mut cal = OnlineCalibrator::new(1.0, 64, 0.1, 44);
+        let mut rng = Pcg::new(1);
+        feed(&mut cal, 0.0166, 0.27, 64, &mut rng);
+        // Recommended ≈ 44 = current → inside hysteresis → None.
+        assert_eq!(cal.recommend(), None);
+        assert_eq!(cal.current_depth(), 44);
+    }
+
+    #[test]
+    fn degraded_device_shrinks_depth() {
+        let mut cal = OnlineCalibrator::new(1.0, 64, 0.1, 44);
+        let mut rng = Pcg::new(2);
+        // Device got 2x slower (α doubles): true capacity ≈ 21.
+        feed(&mut cal, 0.0332, 0.27, 64, &mut rng);
+        let rec = cal.recommend().expect("drift must trigger update");
+        assert!((18..=25).contains(&rec), "rec {rec}");
+        assert_eq!(cal.current_depth(), rec);
+    }
+
+    #[test]
+    fn improved_device_grows_depth() {
+        let mut cal = OnlineCalibrator::new(1.0, 64, 0.1, 20);
+        let mut rng = Pcg::new(3);
+        feed(&mut cal, 0.0166, 0.27, 64, &mut rng);
+        let rec = cal.recommend().expect("improvement must trigger update");
+        assert!(rec > 35, "rec {rec}");
+    }
+
+    #[test]
+    fn outliers_do_not_trigger_false_updates() {
+        let mut cal = OnlineCalibrator::new(1.0, 64, 0.15, 44);
+        let mut rng = Pcg::new(4);
+        for _ in 0..64 {
+            let c = rng.usize(1, 48);
+            let mut t = 0.0166 * c as f64 + 0.27 + 0.002 * rng.normal();
+            if rng.chance(0.15) {
+                t *= 4.0; // transient hiccups
+            }
+            cal.observe(c, t);
+        }
+        assert_eq!(cal.recommend(), None, "robust fit should ride out outliers");
+    }
+
+    #[test]
+    fn not_ready_without_samples() {
+        let mut cal = OnlineCalibrator::new(1.0, 64, 0.1, 44);
+        assert!(!cal.ready());
+        assert_eq!(cal.recommend(), None);
+        cal.observe(0, 1.0); // ignored
+        assert_eq!(cal.fit(), None);
+    }
+
+    #[test]
+    fn single_concurrency_level_cannot_fit() {
+        let mut cal = OnlineCalibrator::new(1.0, 8, 0.1, 10);
+        for _ in 0..8 {
+            cal.observe(5, 0.5);
+        }
+        assert_eq!(cal.recommend(), None);
+    }
+}

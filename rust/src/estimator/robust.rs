@@ -1,0 +1,93 @@
+//! Theil–Sen robust regression.
+//!
+//! The paper observes (§5.3) that the Kunpeng 920 "generates a larger
+//! number of outliers when mapping the relationship between concurrency
+//! and end-to-end latency", degrading the OLS depth prediction. Theil–Sen
+//! (median of pairwise slopes) tolerates up to ~29% outliers; WindVE uses
+//! it automatically when the OLS fit's R² is poor. This is the repo's
+//! implementation of the paper's noted-but-unsolved accuracy gap.
+
+use super::linreg::LinearFit;
+
+/// Theil–Sen fit: slope = median of pairwise slopes, intercept = median
+/// of `y - slope·x`. Same α, β ≥ 0 projection as the OLS fit.
+pub fn theil_sen(points: &[(f64, f64)]) -> LinearFit {
+    assert!(points.len() >= 2, "need >= 2 profiling points");
+    let mut slopes = Vec::with_capacity(points.len() * (points.len() - 1) / 2);
+    for i in 0..points.len() {
+        for j in (i + 1)..points.len() {
+            let dx = points[j].0 - points[i].0;
+            if dx.abs() > 1e-12 {
+                slopes.push((points[j].1 - points[i].1) / dx);
+            }
+        }
+    }
+    let alpha = if slopes.is_empty() { 0.0 } else { median(&mut slopes) }.max(0.0);
+    let mut residuals: Vec<f64> = points.iter().map(|p| p.1 - alpha * p.0).collect();
+    let beta = median(&mut residuals).max(0.0);
+
+    let mean_y = points.iter().map(|p| p.1).sum::<f64>() / points.len() as f64;
+    let ss_tot: f64 = points.iter().map(|p| (p.1 - mean_y).powi(2)).sum();
+    let ss_res: f64 = points
+        .iter()
+        .map(|p| (p.1 - (alpha * p.0 + beta)).powi(2))
+        .sum();
+    let r2 = if ss_tot < 1e-12 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    LinearFit { alpha, beta, r2 }
+}
+
+fn median(v: &mut [f64]) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn clean_line_recovered_exactly() {
+        let pts: Vec<(f64, f64)> = (1..=10).map(|c| (c as f64, 0.05 * c as f64 + 0.2)).collect();
+        let f = theil_sen(&pts);
+        assert!((f.alpha - 0.05).abs() < 1e-9);
+        assert!((f.beta - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outliers_do_not_move_the_fit() {
+        // 20% gross outliers (the Kunpeng case): OLS drifts, Theil-Sen holds.
+        let mut rng = Pcg::new(2);
+        let mut pts: Vec<(f64, f64)> = (1..=20)
+            .map(|c| (c as f64, 0.0754 * c as f64 + 0.85 + 0.01 * rng.normal()))
+            .collect();
+        pts[3].1 *= 3.0;
+        pts[9].1 *= 4.0;
+        pts[15].1 *= 2.5;
+        pts[18].1 *= 3.5;
+        let ts = theil_sen(&pts);
+        let ols = LinearFit::fit(&pts);
+        let ts_err = (ts.alpha - 0.0754).abs() / 0.0754;
+        let ols_err = (ols.alpha - 0.0754).abs() / 0.0754;
+        assert!(ts_err < 0.15, "theil-sen alpha rel err {ts_err}");
+        assert!(ts_err < ols_err, "robust ({ts_err}) must beat OLS ({ols_err})");
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn constraint_projection_applies() {
+        let pts = vec![(1.0, 1.0), (2.0, 0.5), (3.0, 0.1)];
+        let f = theil_sen(&pts);
+        assert!(f.alpha >= 0.0 && f.beta >= 0.0);
+    }
+}

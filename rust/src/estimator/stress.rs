@@ -1,0 +1,102 @@
+//! Stress-test queue-depth search — the slow baseline the paper's linear
+//! estimator replaces (§4.2.2, and the "stress test" column of Table 3).
+//!
+//! Walks concurrency upward in `step` increments until the SLO breaks,
+//! then reports the last passing level. The paper notes both failure
+//! modes this has: cost (one measurement per step) and quantisation (a
+//! large step "risks overlooking the optimal maximum value" — visible in
+//! Table 3 where step 8 under-finds Atlas@2s).
+
+/// Outcome of a stress search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StressResult {
+    /// Largest concurrency that met the SLO (0 = even C=1 failed, Eq. 11).
+    pub max_concurrency: usize,
+    /// Number of measurements taken (the cost the estimator saves).
+    pub probes: usize,
+    /// (concurrency, latency) trace for reporting.
+    pub trace: Vec<(usize, f64)>,
+}
+
+/// Search with increment `step`, measuring via `measure(C) -> seconds`.
+/// `cap` bounds the walk (guard against unbounded devices).
+pub fn stress_search(
+    slo: f64,
+    step: usize,
+    cap: usize,
+    mut measure: impl FnMut(usize) -> f64,
+) -> StressResult {
+    assert!(step >= 1);
+    let mut trace = Vec::new();
+    // C=1 first: the paper's Eq. 11 check (can this device serve at all?).
+    let t1 = measure(1);
+    trace.push((1, t1));
+    if !crate::devices::profile::slo_met(t1, slo) {
+        return StressResult { max_concurrency: 0, probes: trace.len(), trace };
+    }
+    let mut last_ok = 1;
+    let mut c = step.max(2);
+    while c <= cap {
+        let t = measure(c);
+        trace.push((c, t));
+        if !crate::devices::profile::slo_met(t, slo) {
+            return StressResult { max_concurrency: last_ok, probes: trace.len(), trace };
+        }
+        last_ok = c;
+        c += step;
+    }
+    StressResult { max_concurrency: last_ok, probes: trace.len(), trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::profile::DeviceProfile;
+
+    #[test]
+    fn finds_exact_boundary_with_step_1() {
+        let p = DeviceProfile::v100_bge();
+        let r = stress_search(1.0, 1, 512, |c| p.service_time(c, 75));
+        assert_eq!(r.max_concurrency, 44); // fine-tuned anchor
+    }
+
+    #[test]
+    fn step_8_quantises_below_true_max() {
+        let p = DeviceProfile::v100_bge();
+        let r = stress_search(1.0, 8, 512, |c| p.service_time(c, 75));
+        // true max 44 → step-8 walk passes 40, fails 48 (paper Table 3
+        // reports 40 for exactly this reason).
+        assert_eq!(r.max_concurrency, 40);
+    }
+
+    #[test]
+    fn device_too_slow_reports_zero() {
+        let r = stress_search(1.0, 8, 512, |_| 1.5);
+        assert_eq!(r.max_concurrency, 0);
+        assert_eq!(r.probes, 1); // gave up after the C=1 probe
+    }
+
+    #[test]
+    fn cap_bounds_the_walk() {
+        let r = stress_search(10.0, 8, 64, |_| 0.1);
+        assert_eq!(r.max_concurrency, 64); // walk 8,16,...,64 all pass, stop at cap
+    }
+
+    #[test]
+    fn probe_count_grows_linearly_with_capacity() {
+        let p = DeviceProfile::atlas_300i_duo_bge();
+        let r = stress_search(2.0, 8, 512, |c| p.service_time(c, 75));
+        // Atlas true 172 @ 2 s → ~23 probes; the estimator needs ~6.
+        assert!(r.probes > 20, "probes {}", r.probes);
+        assert!((160..=176).contains(&r.max_concurrency), "{}", r.max_concurrency);
+    }
+
+    #[test]
+    fn trace_is_monotone_in_concurrency() {
+        let p = DeviceProfile::xeon_e5_2690_bge();
+        let r = stress_search(1.0, 2, 64, |c| p.service_time(c, 75));
+        for w in r.trace.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! # WindVE — Collaborative CPU-NPU Vector Embedding
+//!
+//! Reproduction of Huang et al., *WindVE: Collaborative CPU-NPU Vector
+//! Embedding* (SPAA '25). An NPU/GPU serves the steady-state embedding
+//! query stream while otherwise-idle host CPUs absorb peak bursts through
+//! a second bounded queue; a linear-regression estimator calibrates the
+//! queue depths against the SLO.
+//!
+//! Layering (see `DESIGN.md`):
+//! * **L3 (this crate)** — the coordinator: [`coordinator`] (queue manager,
+//!   device detector, batcher, worker instances), [`server`] (HTTP front
+//!   end), [`estimator`] (queue-depth calibration), [`sim`] (discrete-event
+//!   cluster simulator used by the paper-reproduction benches).
+//! * **L2/L1 (build time)** — `python/compile/` lowers a JAX encoder whose
+//!   hot spots are Pallas kernels to HLO text; [`runtime`] loads those
+//!   artifacts via PJRT and executes them on the request path with **no
+//!   Python anywhere at runtime**.
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod devices;
+pub mod estimator;
+pub mod metrics;
+pub mod repro;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod vecstore;
+pub mod workload;

@@ -1,0 +1,295 @@
+//! `windve` — CLI entrypoint for the WindVE serving system.
+//!
+//! Subcommands:
+//! * `serve`      — start the HTTP embedding service (real PJRT engines)
+//! * `embed`      — one-shot embedding from the command line
+//! * `calibrate`  — fit t = α·C + β on this host's real engine (§4.2.2)
+//! * `estimate`   — queue-depth estimation on a calibrated device profile
+//! * `stress`     — stress-test baseline search on a profile
+//! * `cost`       — §3 deployment-cost calculator
+//! * `repro`      — regenerate paper tables/figures: table1|table2|table3|
+//!                  fig2|fig4|fig5|fig6|all
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use windve::config::Config;
+use windve::coordinator::instance::BackendFactory;
+use windve::coordinator::{detect, Inventory, ServiceConfig, WindVE};
+use windve::costmodel;
+use windve::devices::affinity::Topology;
+use windve::devices::executor::RealBackend;
+use windve::devices::profile::DeviceProfile;
+use windve::estimator::{estimate_depth, stress_search};
+use windve::repro;
+use windve::runtime::EmbeddingEngine;
+use windve::sim::cluster::ClosedLoopSim;
+use windve::util::cli::Args;
+use windve::util::logging;
+
+fn main() {
+    logging::init();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("serve") => serve(args),
+        Some("embed") => embed(args),
+        Some("calibrate") => calibrate(args),
+        Some("estimate") => estimate(args),
+        Some("stress") => stress(args),
+        Some("cost") => cost(args),
+        Some("repro") => repro_cmd(args),
+        Some("detect") => detect_cmd(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "windve — collaborative CPU-NPU vector embedding (SPAA'25 reproduction)
+
+USAGE: windve <subcommand> [options]
+
+  serve      --model bge_micro --listen 127.0.0.1:8316 --npu-depth 44 --cpu-depth 8 [--no-hetero]
+  embed      --model bge_micro <text...>
+  calibrate  --model bge_micro --qlen 75 --slo 1.0 [--repeats 3]
+  estimate   --device v100 --slo 1.0
+  stress     --device v100 --slo 1.0 --step 8
+  cost       --n-peak 1000 --slo 1.0 --device v100 [--cpu-device xeon]
+  repro      table1|table2|table3|fig2|fig4|fig5|fig6|all [--seed 42]
+  detect     show device detector decision (Algorithm 2)
+
+Profiles: v100, xeon, atlas, kunpeng (+ _jina variants)."
+    );
+}
+
+fn artifacts_path(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// Build the real-backend factories for the service; the "NPU" role on
+/// this CPU-only image is the PJRT engine with all cores, the "CPU" role
+/// is a second engine instance pinned per §4.4.
+fn real_factories(cfg: &Config) -> (Vec<BackendFactory>, Vec<BackendFactory>) {
+    let mk = |artifacts: PathBuf, model: String| -> BackendFactory {
+        Box::new(move || {
+            Ok(Box::new(RealBackend::load(&artifacts, &model)?)
+                as Box<dyn windve::devices::executor::Backend>)
+        })
+    };
+    let npu = (0..cfg.npu_workers)
+        .map(|_| mk(cfg.artifacts.clone(), cfg.model.clone()))
+        .collect();
+    let cpu = (0..cfg.cpu_workers)
+        .map(|_| mk(cfg.artifacts.clone(), cfg.model.clone()))
+        .collect();
+    (npu, cpu)
+}
+
+fn service_config(cfg: &Config) -> ServiceConfig {
+    // Reversed, NUMA-local core picking for the CPU instance (§4.4).
+    let pin = if cfg.pin_cpu_cores > 0 {
+        Topology::detect()
+            .pick_cores_reversed(cfg.pin_cpu_cores, 0)
+            .ok()
+    } else {
+        None
+    };
+    ServiceConfig {
+        npu_depth: cfg.npu_depth,
+        cpu_depth: cfg.cpu_depth,
+        hetero: cfg.hetero,
+        npu_workers: cfg.npu_workers,
+        cpu_workers: if cfg.hetero { cfg.cpu_workers } else { 0 },
+        cpu_pin_cores: pin,
+        cache_entries: 4096,
+        cache_key_space: (8192, 128),
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = match args.str_opt("config") {
+        Some(p) => Config::from_file(std::path::Path::new(p))?,
+        None => Config::default(),
+    }
+    .apply_args(args);
+    let (npu_f, cpu_f) = real_factories(&cfg);
+    let svc = Arc::new(WindVE::start(service_config(&cfg), npu_f, cpu_f)?);
+    let server = windve::server::Server::start(
+        &cfg.listen,
+        Arc::clone(&svc),
+        Duration::from_secs_f64(cfg.slo_seconds),
+    )?;
+    println!("windve serving {} on http://{}", cfg.model, server.addr());
+    println!("  POST /v1/embed   GET /healthz /metrics /stats   (Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn embed(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "bge_micro");
+    let texts: Vec<String> = if args.positional.is_empty() {
+        vec!["hello from windve".to_string()]
+    } else {
+        args.positional.clone()
+    };
+    let mut engine = EmbeddingEngine::load(&artifacts_path(args), &model)?;
+    let out = engine.embed(&texts)?;
+    for (t, v) in texts.iter().zip(&out) {
+        let head: Vec<String> = v.iter().take(6).map(|x| format!("{x:.4}")).collect();
+        println!("{t:?} -> [{}, ...] (d={})", head.join(", "), v.len());
+    }
+    Ok(())
+}
+
+fn calibrate(args: &Args) -> Result<()> {
+    let c = repro::calibrate::calibrate_host(
+        &artifacts_path(args),
+        &args.str_or("model", "bge_micro"),
+        args.usize_or("qlen", 75),
+        args.f64_or("slo", 1.0),
+        args.usize_or("repeats", 3),
+    )?;
+    repro::calibrate::print(&c);
+    Ok(())
+}
+
+fn profile_from_args(args: &Args, key: &str, default: &str) -> Result<DeviceProfile> {
+    let name = args.str_or(key, default);
+    DeviceProfile::by_name(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown device profile {name:?} (try: v100, xeon, atlas, kunpeng)")
+    })
+}
+
+fn estimate(args: &Args) -> Result<()> {
+    let dev = profile_from_args(args, "device", "v100")?;
+    let slo = args.f64_or("slo", 1.0);
+    let qlen = args.usize_or("qlen", 75);
+    let seed = args.u64_or("seed", 42);
+    let mut sim = ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, qlen, seed);
+    let est = estimate_depth(slo, &[1, 2, 4, 8, 12, 16, 24, 32], |c| {
+        sim.measure_latency(c, 3)
+    });
+    println!(
+        "{}: t = {:.4}·C + {:.3} (R² {:.3}{}) → depth {} at SLO {slo}s ({} probes)",
+        dev.name,
+        est.fit.alpha,
+        est.fit.beta,
+        est.fit.r2,
+        if est.robust { ", robust" } else { "" },
+        est.predicted,
+        est.probes
+    );
+    println!("true max concurrency: {}", dev.true_max_concurrency(slo, qlen));
+    Ok(())
+}
+
+fn stress(args: &Args) -> Result<()> {
+    let dev = profile_from_args(args, "device", "v100")?;
+    let slo = args.f64_or("slo", 1.0);
+    let step = args.usize_or("step", 8);
+    let qlen = args.usize_or("qlen", 75);
+    let mut sim =
+        ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, qlen, args.u64_or("seed", 42));
+    let r = stress_search(slo, step, 512, |c| sim.measure_latency(c, 3));
+    println!(
+        "{}: stress (step {step}) → {} at SLO {slo}s in {} probes",
+        dev.name, r.max_concurrency, r.probes
+    );
+    Ok(())
+}
+
+fn cost(args: &Args) -> Result<()> {
+    let npu = profile_from_args(args, "device", "v100")?;
+    let cpu = profile_from_args(args, "cpu-device", "xeon")?;
+    let slo = args.f64_or("slo", 1.0);
+    let n_peak = args.f64_or("n-peak", 1000.0);
+    let price = args.f64_or("price", 10_000.0);
+    let c_npu = npu.true_max_concurrency(slo, 75);
+    let c_cpu = cpu.true_max_concurrency(slo, 75);
+    let inputs = costmodel::CostInputs { devices_per_instance: 1.0, price_per_device: price };
+    let base = costmodel::cost_peak(n_peak, c_npu as f64, inputs);
+    let offl = costmodel::cost_peak(n_peak, (c_npu + c_cpu) as f64, inputs);
+    println!(
+        "deployment for N_peak={n_peak} @ SLO {slo}s ({} + {}):",
+        npu.name, cpu.name
+    );
+    println!("  C_NPU = {c_npu}, C_CPU = {c_cpu}");
+    println!("  peak-provisioned cost:   ${base:>12.0} (NPU only)");
+    println!("  with CPU offloading:     ${offl:>12.0}");
+    println!(
+        "  savings: {:.1}% (bound C_CPU/(C_CPU+C_NPU) = {:.1}%)",
+        100.0 * (1.0 - offl / base),
+        100.0 * costmodel::savings_peak(c_npu, c_cpu)
+    );
+    println!(
+        "  avg-provisioning throughput uplift: {:.1}%",
+        100.0 * costmodel::improvement_average(c_npu, c_cpu)
+    );
+    Ok(())
+}
+
+fn detect_cmd() -> Result<()> {
+    let inv = Inventory::detect();
+    let d = detect(inv, true);
+    println!(
+        "inventory: {} NPUs, {} CPU instances (set WINDVE_NPUS to simulate NPUs)",
+        inv.npus, inv.cpus
+    );
+    println!("detection: {d:?}");
+    let topo = Topology::detect();
+    println!("topology: {} cores, {} NUMA nodes", topo.cores, topo.numa_nodes);
+    Ok(())
+}
+
+fn repro_cmd(args: &Args) -> Result<()> {
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let seed = args.u64_or("seed", 42);
+    let all = what == "all";
+    if all || what == "table1" {
+        repro::table1::print(
+            &repro::table1::run(seed),
+            "Table 1 — bge model, WindVE vs FlagEmbedding",
+            "FlagEmb",
+        );
+    }
+    if all || what == "table2" {
+        repro::table2::print(&repro::table2::run(seed));
+    }
+    if all || what == "table3" {
+        repro::table3::print(&repro::table3::run(seed));
+    }
+    if all || what == "fig2" {
+        repro::fig2::print(&repro::fig2::run());
+    }
+    if all || what == "fig4" {
+        repro::fig4::print(&repro::fig4::run(seed));
+    }
+    if all || what == "fig5" {
+        repro::fig5::print(&repro::fig5::run(seed));
+    }
+    if all || what == "fig6" {
+        repro::fig6::print(&repro::fig6::run(seed));
+    }
+    if !all && !["table1", "table2", "table3", "fig2", "fig4", "fig5", "fig6"].contains(&what) {
+        bail!("unknown repro target {what:?}");
+    }
+    Ok(())
+}

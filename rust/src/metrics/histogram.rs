@@ -1,0 +1,222 @@
+//! Log-bucketed latency histogram (HDR-style, lock-free recording).
+//!
+//! Values (nanoseconds or any u64 unit) land in buckets of ~2.5% relative
+//! width: 64 base-2 magnitudes x 32 linear sub-buckets. Quantile error is
+//! bounded by bucket width, plenty for SLO accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per magnitude
+const SUB: usize = 1 << SUB_BITS;
+const MAGNITUDES: usize = 64;
+const BUCKETS: usize = MAGNITUDES * SUB;
+
+/// Concurrent histogram; `record` is wait-free (one atomic add).
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    fn index(value: u64) -> usize {
+        let v = value.max(1);
+        let mag = 63 - v.leading_zeros() as usize;
+        if mag < SUB_BITS as usize {
+            // Small values: identity mapping within the first magnitudes.
+            return v as usize;
+        }
+        let sub = ((v >> (mag as u32 - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        mag * SUB + sub
+    }
+
+    /// Representative (upper-bound) value for a bucket index.
+    fn bucket_high(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64 + 1;
+        }
+        let mag = idx / SUB;
+        let sub = (idx % SUB) as u64;
+        let base = 1u64 << mag;
+        base + ((sub + 1) << (mag as u32 - SUB_BITS)) - 1
+    }
+
+    pub fn record(&self, value: u64) {
+        self.counts[Self::index(value)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Quantile in `[0, 1]`; returns 0 when empty. Within-bucket error only.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_high(i).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Reset all counts (not concurrent-safe with recorders; test/bench use).
+    pub fn clear(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.total.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let h = Histogram::new();
+        h.record(1000);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 1000);
+        let p = h.quantile(0.5);
+        assert!((950..=1050).contains(&p), "p50 {p}");
+    }
+
+    #[test]
+    fn quantile_relative_error_bounded() {
+        let h = Histogram::new();
+        let mut rng = Pcg::new(5);
+        let mut vals: Vec<u64> = (0..20_000).map(|_| rng.range(100, 10_000_000)).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for &q in &[0.5, 0.9, 0.99, 0.999] {
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let est = h.quantile(q);
+            let rel = (est as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.08, "q={q} exact={exact} est={est} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let h = Histogram::new();
+        let mut rng = Pcg::new(6);
+        for _ in 0..5000 {
+            h.record(rng.range(1, 1_000_000));
+        }
+        let mut prev = 0;
+        for i in 0..=100 {
+            let q = h.quantile(i as f64 / 100.0);
+            assert!(q >= prev, "quantiles must be monotone");
+            prev = q;
+        }
+    }
+
+    #[test]
+    fn mean_and_max_exact() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 40] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 25.0);
+        assert_eq!(h.max(), 40);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let h = Histogram::new();
+        h.record(5);
+        h.clear();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let h = Histogram::new();
+        for v in 1..=16u64 {
+            h.record(v);
+        }
+        // identity-mapped region: p100 == 16
+        assert_eq!(h.quantile(1.0), 16);
+    }
+}

@@ -1,0 +1,9 @@
+//! Serving metrics: counters, latency histograms, percentile reports.
+
+pub mod histogram;
+pub mod registry;
+pub mod slo;
+
+pub use histogram::Histogram;
+pub use registry::{Counter, Registry};
+pub use slo::SloMonitor;

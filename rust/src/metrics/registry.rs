@@ -1,0 +1,119 @@
+//! Named counters + histograms with a JSON snapshot (served at /metrics).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::histogram::Histogram;
+use crate::util::json::Json;
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1)
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Process-wide metrics registry. Cheap to clone (Arc inside).
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.inner.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.inner.histograms.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new())),
+        )
+    }
+
+    /// JSON snapshot of everything (histograms as percentile summaries, ns).
+    pub fn snapshot(&self) -> Json {
+        let counters = self.inner.counters.lock().unwrap();
+        let histograms = self.inner.histograms.lock().unwrap();
+        let mut out: Vec<(String, Json)> = Vec::new();
+        for (name, c) in counters.iter() {
+            out.push((name.clone(), Json::Num(c.get() as f64)));
+        }
+        for (name, h) in histograms.iter() {
+            out.push((
+                name.clone(),
+                Json::obj(vec![
+                    ("count", Json::num(h.count() as f64)),
+                    ("mean_ns", Json::num(h.mean())),
+                    ("p50_ns", Json::num(h.p50() as f64)),
+                    ("p99_ns", Json::num(h.p99() as f64)),
+                    ("max_ns", Json::num(h.max() as f64)),
+                ]),
+            ));
+        }
+        Json::Obj(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_shared_by_name() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.counter("a").add(4);
+        assert_eq!(r.counter("a").get(), 5);
+        assert_eq!(r.counter("b").get(), 0);
+    }
+
+    #[test]
+    fn histograms_shared_by_name() {
+        let r = Registry::new();
+        r.histogram("lat").record(100);
+        assert_eq!(r.histogram("lat").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_contains_everything() {
+        let r = Registry::new();
+        r.counter("requests").add(3);
+        r.histogram("lat").record(500);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("requests").unwrap().as_u64(), Some(3));
+        assert_eq!(snap.path("lat.count").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        r.counter("x").inc();
+        assert_eq!(r2.counter("x").get(), 1);
+    }
+}

@@ -1,0 +1,133 @@
+//! Sliding-window SLO monitor.
+//!
+//! Tracks per-request SLO outcomes over the most recent `window` requests
+//! and flags breach when attainment drops below target — the signal an
+//! operator (or the online re-calibrator) acts on.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Windowed SLO attainment tracker.
+pub struct SloMonitor {
+    slo_nanos: u64,
+    target: f64,
+    window: usize,
+    state: Mutex<State>,
+}
+
+struct State {
+    outcomes: VecDeque<bool>, // true = met
+    met: usize,
+}
+
+impl SloMonitor {
+    /// `target` is the required attainment fraction (e.g. 0.999).
+    pub fn new(slo: std::time::Duration, target: f64, window: usize) -> SloMonitor {
+        assert!(window > 0 && (0.0..=1.0).contains(&target));
+        SloMonitor {
+            slo_nanos: slo.as_nanos() as u64,
+            target,
+            window,
+            state: Mutex::new(State { outcomes: VecDeque::new(), met: 0 }),
+        }
+    }
+
+    /// Record one request's e2e latency.
+    pub fn record(&self, latency_nanos: u64) {
+        let met = latency_nanos <= self.slo_nanos;
+        let mut s = self.state.lock().unwrap();
+        s.outcomes.push_back(met);
+        if met {
+            s.met += 1;
+        }
+        if s.outcomes.len() > self.window {
+            if s.outcomes.pop_front() == Some(true) {
+                s.met -= 1;
+            }
+        }
+    }
+
+    /// Attainment over the current window (1.0 when empty).
+    pub fn attainment(&self) -> f64 {
+        let s = self.state.lock().unwrap();
+        if s.outcomes.is_empty() {
+            1.0
+        } else {
+            s.met as f64 / s.outcomes.len() as f64
+        }
+    }
+
+    /// True when the window is full and attainment is below target.
+    pub fn breached(&self) -> bool {
+        let s = self.state.lock().unwrap();
+        s.outcomes.len() >= self.window
+            && (s.met as f64 / s.outcomes.len() as f64) < self.target
+    }
+
+    pub fn samples(&self) -> usize {
+        self.state.lock().unwrap().outcomes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn monitor(target: f64, window: usize) -> SloMonitor {
+        SloMonitor::new(Duration::from_millis(100), target, window)
+    }
+
+    #[test]
+    fn empty_monitor_is_healthy() {
+        let m = monitor(0.99, 10);
+        assert_eq!(m.attainment(), 1.0);
+        assert!(!m.breached());
+    }
+
+    #[test]
+    fn attainment_tracks_outcomes() {
+        let m = monitor(0.9, 10);
+        for _ in 0..8 {
+            m.record(50_000_000); // 50ms ok
+        }
+        for _ in 0..2 {
+            m.record(200_000_000); // 200ms violation
+        }
+        assert!((m.attainment() - 0.8).abs() < 1e-9);
+        assert!(m.breached());
+    }
+
+    #[test]
+    fn no_breach_until_window_full() {
+        let m = monitor(0.99, 10);
+        for _ in 0..5 {
+            m.record(500_000_000);
+        }
+        assert_eq!(m.attainment(), 0.0);
+        assert!(!m.breached(), "insufficient samples must not page anyone");
+    }
+
+    #[test]
+    fn window_slides() {
+        let m = monitor(0.5, 4);
+        for _ in 0..4 {
+            m.record(500_000_000); // all bad
+        }
+        assert!(m.breached());
+        for _ in 0..4 {
+            m.record(1_000_000); // all good → violations age out
+        }
+        assert_eq!(m.attainment(), 1.0);
+        assert!(!m.breached());
+        assert_eq!(m.samples(), 4);
+    }
+
+    #[test]
+    fn boundary_latency_counts_as_met() {
+        let m = monitor(1.0, 2);
+        m.record(100_000_000); // exactly the SLO
+        m.record(100_000_001); // one nano over
+        assert!((m.attainment() - 0.5).abs() < 1e-9);
+    }
+}

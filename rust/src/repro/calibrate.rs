@@ -1,0 +1,74 @@
+//! Real-hardware calibration: the paper's §4.2.2 procedure run against
+//! the actual PJRT engine on this host (not the simulated profiles).
+//!
+//! Measures batch embedding latency at a ramp of batch sizes, fits
+//! `t = α·C + β`, and solves the queue depth for a given SLO — exactly
+//! what an operator deploying WindVE on new hardware would run
+//! (`windve calibrate`). Also produces the host's own Figure-4-style fit.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::estimator::LinearFit;
+use crate::runtime::EmbeddingEngine;
+use crate::workload::queries::QueryGen;
+
+#[derive(Debug, Clone)]
+pub struct HostCalibration {
+    pub model: String,
+    pub points: Vec<(f64, f64)>,
+    pub fit: LinearFit,
+    pub depth_at_slo: usize,
+    pub slo: f64,
+}
+
+/// Measure the real engine at batch sizes up to its largest bucket.
+pub fn calibrate_host(
+    artifacts: &Path,
+    model: &str,
+    qlen: usize,
+    slo: f64,
+    repeats: usize,
+) -> Result<HostCalibration> {
+    let mut engine = EmbeddingEngine::load(artifacts, model)?;
+    engine.warmup()?;
+    let mut gen = QueryGen::new(qlen, 0xCA11B);
+    let max_b = engine.max_batch();
+    let mut points = Vec::new();
+    let batches: Vec<usize> = [1usize, 2, 4, 8, 16, 32]
+        .into_iter()
+        .filter(|&b| b <= max_b)
+        .collect();
+    for &b in &batches {
+        let texts = gen.batch(b);
+        // warm this bucket
+        let _ = engine.embed(&texts)?;
+        let mut total = 0.0;
+        for _ in 0..repeats.max(1) {
+            let t0 = std::time::Instant::now();
+            let _ = engine.embed(&texts)?;
+            total += t0.elapsed().as_secs_f64();
+        }
+        points.push((b as f64, total / repeats.max(1) as f64));
+    }
+    let fit = LinearFit::fit(&points);
+    Ok(HostCalibration {
+        model: model.to_string(),
+        depth_at_slo: fit.max_concurrency(slo),
+        points,
+        fit,
+        slo,
+    })
+}
+
+pub fn print(c: &HostCalibration) {
+    println!("\n=== Host calibration ({}; real PJRT engine) ===", c.model);
+    for (b, t) in &c.points {
+        println!("  batch {:>3.0}: {:>8.2} ms", b, t * 1e3);
+    }
+    println!(
+        "fit: t = {:.5}·C + {:.5}  (R² {:.3}) → depth {} at SLO {}s",
+        c.fit.alpha, c.fit.beta, c.fit.r2, c.depth_at_slo, c.slo
+    );
+}

@@ -1,0 +1,46 @@
+//! Figure 2 (motivation): diurnal query-rate curve, plus the §3 cost
+//! consequence — average-provisioned capacity misses the evening peak.
+
+use crate::workload::diurnal::DiurnalCurve;
+
+pub struct Fig2 {
+    pub series: Vec<(f64, f64)>,
+    pub mean: f64,
+    pub peak: f64,
+}
+
+pub fn run() -> Fig2 {
+    let curve = DiurnalCurve::typical(2.0, 10.0);
+    Fig2 {
+        series: curve.series(2),
+        mean: curve.mean_rate(),
+        peak: curve.peak_rate(),
+    }
+}
+
+pub fn print(f: &Fig2) {
+    println!("\n=== Figure 2 — query rate over a day ===");
+    let max = f.peak;
+    for (h, r) in &f.series {
+        if (h * 2.0) as u64 % 2 == 0 {
+            let bars = ((r / max) * 56.0) as usize;
+            println!("  {:>5.1}h {:<56} {:.1} q/s", h, "#".repeat(bars), r);
+        }
+    }
+    println!(
+        "mean {:.1} q/s, peak {:.1} q/s → peak/mean = {:.2}x (why §3 provisions for peaks)",
+        f.mean,
+        f.peak,
+        f.peak / f.mean
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn peak_dominates_mean() {
+        let f = super::run();
+        assert!(f.peak / f.mean > 2.0);
+        assert_eq!(f.series.len(), 48);
+    }
+}

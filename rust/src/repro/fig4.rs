@@ -1,0 +1,120 @@
+//! Figure 4: latency-vs-concurrency scatter + linear fits for the four
+//! devices. The paper reports β = 0.27 (V100), 0.32 (Xeon), 0.24 (Atlas),
+//! 0.85 (Kunpeng) and α ratios 0.21 / 0.12.
+
+use crate::devices::profile::DeviceProfile;
+use crate::estimator::robust::theil_sen;
+use crate::sim::cluster::ClosedLoopSim;
+
+#[derive(Debug, Clone)]
+pub struct Fit {
+    pub device: String,
+    pub alpha: f64,
+    pub beta: f64,
+    pub r2: f64,
+    pub paper_beta: f64,
+    pub points: Vec<(f64, f64)>,
+}
+
+pub fn run(seed: u64) -> Vec<Fit> {
+    let devices = [
+        (DeviceProfile::v100_bge(), 0.27),
+        (DeviceProfile::xeon_e5_2690_bge(), 0.32),
+        (DeviceProfile::atlas_300i_duo_bge(), 0.24),
+        (DeviceProfile::kunpeng_920_bge(), 0.85),
+    ];
+    devices
+        .iter()
+        .enumerate()
+        .map(|(i, (dev, paper_beta))| {
+            let mut sim =
+                ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, 75, seed + i as u64);
+            // Fit within the device's SLO-1s operating region (C ≤ knee) —
+            // Eq. 12 models exactly this regime. Small devices (Kunpeng:
+            // knee = 2) get repeated measurements per level instead of a
+            // wider sweep so the fit still has >= 8 points.
+            let cmax = dev.knee.max(2);
+            let step = (cmax / 16).max(1);
+            let mut points: Vec<(f64, f64)> = Vec::new();
+            let repeats = (32 / (cmax / step).max(1)).max(1);
+            for c in (1..=cmax).step_by(step) {
+                for _ in 0..repeats {
+                    points.push((c as f64, sim.measure_latency(c, 1)));
+                }
+            }
+            // Theil-Sen: the Kunpeng samples carry the paper's §5.3
+            // outliers, which would drag an OLS slope on so few levels.
+            let fit = theil_sen(&points);
+            Fit {
+                device: dev.name.clone(),
+                alpha: fit.alpha,
+                beta: fit.beta,
+                r2: fit.r2,
+                paper_beta: *paper_beta,
+                points,
+            }
+        })
+        .collect()
+}
+
+pub fn print(fits: &[Fit]) {
+    println!("\n=== Figure 4 — latency vs concurrency fits (t = α·C + β) ===");
+    println!(
+        "{:<16} {:>9} {:>9} {:>7} | {:>10}",
+        "device", "α (s/q)", "β (s)", "R²", "paper β"
+    );
+    for f in fits {
+        println!(
+            "{:<16} {:>9.4} {:>9.3} {:>7.3} | {:>10.2}",
+            f.device, f.alpha, f.beta, f.r2, f.paper_beta
+        );
+    }
+    let a_ratio_1 = fits[0].alpha / fits[1].alpha;
+    let a_ratio_2 = fits[2].alpha / fits[3].alpha;
+    println!("α_NPU/α_CPU: V100/Xeon = {a_ratio_1:.2} (paper 0.21), Atlas/Kunpeng = {a_ratio_2:.2} (paper 0.12)");
+    // ascii scatter of the first device
+    if let Some(f) = fits.first() {
+        println!("\n{} latency curve:", f.device);
+        let tmax = f.points.iter().map(|p| p.1).fold(0.0f64, f64::max);
+        for (c, t) in &f.points {
+            let bars = ((t / tmax) * 48.0) as usize;
+            println!("  C={c:>4.0} {:<48} {t:.3}s", "#".repeat(bars));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn betas_track_paper_fig4() {
+        let fits = run(5);
+        for f in &fits {
+            assert!(
+                (f.beta - f.paper_beta).abs() < 0.15,
+                "{}: β {} vs paper {}",
+                f.device, f.beta, f.paper_beta
+            );
+        }
+        // β_CPU > β_NPU within each pairing.
+        assert!(fits[1].beta > fits[0].beta);
+        assert!(fits[3].beta > fits[2].beta);
+    }
+
+    #[test]
+    fn alpha_ratios_track_paper() {
+        let fits = run(5);
+        let r1 = fits[0].alpha / fits[1].alpha;
+        let r2 = fits[2].alpha / fits[3].alpha;
+        assert!((r1 - 0.21).abs() < 0.06, "V100/Xeon α ratio {r1}");
+        assert!((r2 - 0.12).abs() < 0.06, "Atlas/Kunpeng α ratio {r2}");
+    }
+
+    #[test]
+    fn fits_are_high_quality_except_outlier_devices() {
+        let fits = run(5);
+        assert!(fits[0].r2 > 0.95); // V100 clean
+        assert!(fits[1].r2 > 0.9); // Xeon clean-ish
+    }
+}

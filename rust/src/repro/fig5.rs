@@ -1,0 +1,104 @@
+//! Figure 5: scalability with input query length (V100 + Xeon).
+//!
+//! "original" = NPU-only concurrency; "additional" = CPU offload capacity.
+//! Paper phenomena: longer queries degrade both; at 500 tokens the CPU's
+//! additional concurrency hits 0 under the 1 s SLO but stays ≈2 under 2 s.
+
+use super::DevicePair;
+use crate::sim::cluster::ClosedLoopSim;
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub qlen: usize,
+    pub slo: f64,
+    pub original: usize,
+    pub additional: usize,
+}
+
+pub const QLENS: [usize; 6] = [75, 150, 250, 350, 450, 500];
+
+pub fn run(seed: u64) -> Vec<Point> {
+    let pair = DevicePair::v100_xeon_bge();
+    let mut out = Vec::new();
+    for &slo in &[1.0, 2.0] {
+        for &qlen in &QLENS {
+            // Ground-truth capacities at this length (fine-tuning would
+            // find these; noise-free for the figure's smooth series).
+            let original = pair.npu.true_max_concurrency(slo, qlen);
+            let additional = pair.cpu.true_max_concurrency(slo, qlen);
+            // Validate jointly through the queue manager.
+            if original + additional > 0 {
+                let mut joint = ClosedLoopSim::new(
+                    pair.npu.clone(),
+                    Some(pair.cpu.clone()),
+                    original.max(1),
+                    additional,
+                    qlen,
+                    seed,
+                );
+                joint.noisy = false;
+                debug_assert!(joint.round(original + additional).meets_slo(slo) || original == 0);
+            }
+            out.push(Point { qlen, slo, original, additional });
+        }
+    }
+    out
+}
+
+pub fn print(points: &[Point]) {
+    println!("\n=== Figure 5 — concurrency vs query length (V100 + Xeon) ===");
+    for &slo in &[1.0, 2.0] {
+        println!("SLO {slo}s:");
+        println!("  {:<8} {:>10} {:>12} {:>8}", "tokens", "original", "additional", "impr%");
+        for p in points.iter().filter(|p| p.slo == slo) {
+            println!(
+                "  {:<8} {:>10} {:>12} {:>7.1}%",
+                p.qlen,
+                p.original,
+                p.additional,
+                if p.original > 0 {
+                    100.0 * p.additional as f64 / p.original as f64
+                } else {
+                    0.0
+                }
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longer_queries_degrade_both_series() {
+        let pts = run(3);
+        for &slo in &[1.0, 2.0] {
+            let series: Vec<&Point> = pts.iter().filter(|p| p.slo == slo).collect();
+            for w in series.windows(2) {
+                assert!(w[1].original <= w[0].original, "original must fall with length");
+                assert!(w[1].additional <= w[0].additional, "additional must fall with length");
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_additional_dies_at_500_tokens_1s_but_not_2s() {
+        let pts = run(3);
+        let at = |slo: f64, qlen: usize| {
+            pts.iter().find(|p| p.slo == slo && p.qlen == qlen).unwrap()
+        };
+        assert_eq!(at(1.0, 500).additional, 0, "paper: additional→0 @500tok/1s");
+        let a2 = at(2.0, 500).additional;
+        assert!((1..=4).contains(&a2), "paper: ≈2 additional @500tok/2s, got {a2}");
+        assert!(at(2.0, 500).original > 0);
+    }
+
+    #[test]
+    fn baseline_75_tokens_matches_table1() {
+        let pts = run(3);
+        let p = pts.iter().find(|p| p.slo == 1.0 && p.qlen == 75).unwrap();
+        assert_eq!(p.original, 44);
+        assert_eq!(p.additional, 8);
+    }
+}

@@ -1,0 +1,81 @@
+//! Figure 6: scalability with CPU core count (V100 + Xeon).
+//!
+//! Paper: below 44 usable cores the CPU brings no benefit at the 1 s SLO;
+//! the floor drops to 36 cores at 2 s. Of 128 physical cores only 96 are
+//! usable (the first NUMA node hosts the service framework, §5.4).
+
+use crate::devices::profile::DeviceProfile;
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub cores: usize,
+    pub slo: f64,
+    pub additional: usize,
+}
+
+pub const CORES: [usize; 9] = [96, 88, 80, 64, 56, 48, 44, 36, 24];
+
+pub fn run(_seed: u64) -> Vec<Point> {
+    let cpu = DeviceProfile::xeon_e5_2690_bge();
+    let mut out = Vec::new();
+    for &slo in &[1.0, 2.0] {
+        for &cores in &CORES {
+            let scaled = cpu.with_cores(cores);
+            out.push(Point {
+                cores,
+                slo,
+                additional: scaled.true_max_concurrency(slo, 75),
+            });
+        }
+    }
+    out
+}
+
+pub fn print(points: &[Point]) {
+    println!("\n=== Figure 6 — CPU additional concurrency vs core count (Xeon E5-2690) ===");
+    for &slo in &[1.0, 2.0] {
+        println!("SLO {slo}s:");
+        for p in points.iter().filter(|p| p.slo == slo) {
+            let bars = "#".repeat(p.additional.min(60));
+            println!("  cores={:>3} {:<24} {}", p.cores, bars, p.additional);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fewer_cores_never_help() {
+        let pts = run(0);
+        for &slo in &[1.0, 2.0] {
+            let series: Vec<&Point> = pts.iter().filter(|p| p.slo == slo).collect();
+            for w in series.windows(2) {
+                assert!(w[1].additional <= w[0].additional);
+            }
+        }
+    }
+
+    #[test]
+    fn benefit_floor_at_44_cores_1s() {
+        let pts = run(0);
+        let at = |slo: f64, cores: usize| {
+            pts.iter().find(|p| p.slo == slo && p.cores == cores).unwrap().additional
+        };
+        // Paper: "using less than 44 CPU cores does not bring any benefit"
+        // at the 1 s limit...
+        assert!(at(1.0, 44) >= 1, "44 cores should still help at 1s");
+        assert_eq!(at(1.0, 36), 0, "36 cores must not help at 1s");
+        // ... and the boundary drops to 36 cores at 2 s.
+        assert!(at(2.0, 36) >= 1, "36 cores should still help at 2s");
+        assert_eq!(at(2.0, 24), 0, "24 cores must not help at 2s");
+    }
+
+    #[test]
+    fn full_cores_match_table1_additional() {
+        let pts = run(0);
+        let p = pts.iter().find(|p| p.slo == 1.0 && p.cores == 96).unwrap();
+        assert_eq!(p.additional, 8);
+    }
+}

@@ -1,0 +1,135 @@
+//! Table 1: WindVE vs FlagEmbedding (non-offloading) max concurrency on
+//! the bge model, SLO ∈ {1 s, 2 s}, on (V100 + Xeon) and (Atlas + Kunpeng).
+
+use super::{calibrate_pair, pct, DevicePair};
+use crate::sim::cluster::ClosedLoopSim;
+
+/// One column of the table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub npu_name: String,
+    pub cpu_name: String,
+    pub slo: f64,
+    /// Non-offloading baseline (FlagEmbedding): NPU-only max concurrency.
+    pub baseline: usize,
+    /// WindVE: baseline + CPU additional.
+    pub additional: usize,
+    pub improvement_pct: f64,
+    /// Paper's reported values for the same cell.
+    pub paper_baseline: usize,
+    pub paper_additional: usize,
+}
+
+/// The paper's reported cells, for side-by-side printing.
+const PAPER: [(usize, usize); 4] = [(44, 8), (96, 22), (84, 1), (172, 8)];
+
+/// Regenerate the table. `seed` drives all measurement noise.
+pub fn run(seed: u64) -> Vec<Row> {
+    run_pairs(
+        &[DevicePair::v100_xeon_bge(), DevicePair::atlas_kunpeng_bge()],
+        &PAPER,
+        seed,
+    )
+}
+
+pub(super) fn run_pairs(
+    pairs: &[DevicePair],
+    paper: &[(usize, usize)],
+    seed: u64,
+) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for (pi, pair) in pairs.iter().enumerate() {
+        for (si, &slo) in [1.0f64, 2.0].iter().enumerate() {
+            let (npu_depth, cpu_depth) = calibrate_pair(pair, slo, 75, seed + pi as u64 * 17);
+            // Validate the joint capacity through the queue manager.
+            let mut joint = ClosedLoopSim::new(
+                pair.npu.clone(),
+                Some(pair.cpu.clone()),
+                npu_depth,
+                cpu_depth,
+                75,
+                seed,
+            );
+            joint.noisy = false;
+            let windve = joint.max_concurrency(slo, npu_depth.max(1), npu_depth + cpu_depth + 4, 1);
+            let additional = windve.saturating_sub(npu_depth);
+            let (pb, pa) = paper[pi * 2 + si];
+            rows.push(Row {
+                npu_name: pair.npu.name.clone(),
+                cpu_name: pair.cpu.name.clone(),
+                slo,
+                baseline: npu_depth,
+                additional,
+                improvement_pct: pct(npu_depth, additional),
+                paper_baseline: pb,
+                paper_additional: pa,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print(rows: &[Row], title: &str, baseline_name: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<18} {:<16} {:>5} | {:>14} {:>14} {:>8} | {:>14} {:>8}",
+        "NPU/GPU", "CPU", "SLO", format!("{baseline_name} C"), "WindVE C", "impr%",
+        "paper C", "paper%"
+    );
+    for r in rows {
+        println!(
+            "{:<18} {:<16} {:>4}s | {:>14} {:>10}+{:<3} {:>7.1}% | {:>10}+{:<3} {:>7.1}%",
+            r.npu_name,
+            r.cpu_name,
+            r.slo,
+            r.baseline,
+            r.baseline,
+            r.additional,
+            r.improvement_pct,
+            r.paper_baseline,
+            r.paper_additional,
+            pct(r.paper_baseline, r.paper_additional),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let rows = run(42);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            // Baseline within 10% of paper's fine-tuned depth.
+            let base_err =
+                (r.baseline as f64 - r.paper_baseline as f64).abs() / r.paper_baseline as f64;
+            assert!(base_err <= 0.10, "{}@{}s baseline {} vs paper {}",
+                r.npu_name, r.slo, r.baseline, r.paper_baseline);
+            // Offloading always helps (additional ≥ paper - small slack).
+            assert!(
+                r.additional + 2 >= r.paper_additional.min(2),
+                "additional {} suspiciously low",
+                r.additional
+            );
+        }
+        // Phenomenon 1 (paper §5.2): 2 s improvement > 1 s improvement.
+        assert!(rows[1].improvement_pct > rows[0].improvement_pct);
+        // Phenomenon 2: V100+Xeon gains more than Atlas+Kunpeng.
+        assert!(rows[0].improvement_pct > rows[2].improvement_pct);
+        assert!(rows[1].improvement_pct > rows[3].improvement_pct);
+    }
+
+    #[test]
+    fn headline_numbers_close_to_paper() {
+        let rows = run(42);
+        // V100+Xeon @2s: paper 22.3-22.9%; require >15% and <30%.
+        let r = &rows[1];
+        assert!(
+            r.improvement_pct > 15.0 && r.improvement_pct < 30.0,
+            "improvement {}%",
+            r.improvement_pct
+        );
+    }
+}

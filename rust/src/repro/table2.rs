@@ -1,0 +1,56 @@
+//! Table 2: WindVE vs plain PyTorch serving on the jina model (same grid
+//! as Table 1; jina's faster inference yields larger gains).
+
+use super::{table1, DevicePair};
+
+pub use super::table1::Row;
+
+/// The paper's reported cells (baseline, additional).
+const PAPER: [(usize, usize); 4] = [(48, 11), (112, 30), (128, 6), (256, 20)];
+
+pub fn run(seed: u64) -> Vec<Row> {
+    table1::run_pairs(
+        &[DevicePair::v100_xeon_jina(), DevicePair::atlas_kunpeng_jina()],
+        &PAPER,
+        seed,
+    )
+}
+
+pub fn print(rows: &[Row]) {
+    table1::print(rows, "Table 2 — jina model, WindVE vs PyTorch", "PyTorch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::repro::pct;
+
+    #[test]
+    fn jina_gains_exceed_bge_gains() {
+        // Paper phenomenon 3 (§5.2): faster models gain more from
+        // offloading on the same hardware pair.
+        let jina = run(7);
+        let bge = crate::repro::table1::run(7);
+        for (j, b) in jina.iter().zip(&bge) {
+            assert!(
+                j.improvement_pct + 1.0 > b.improvement_pct,
+                "jina {}% vs bge {}% ({} @{}s)",
+                j.improvement_pct, b.improvement_pct, j.npu_name, j.slo
+            );
+        }
+    }
+
+    #[test]
+    fn values_track_paper() {
+        let rows = run(7);
+        for r in &rows {
+            let err =
+                (r.baseline as f64 - r.paper_baseline as f64).abs() / r.paper_baseline as f64;
+            assert!(err <= 0.10, "{} baseline {} vs paper {}", r.npu_name, r.baseline, r.paper_baseline);
+        }
+        // Headline: V100+Xeon @2s ≈ 26.7%.
+        let head = &rows[1];
+        let paper_pct = pct(head.paper_baseline, head.paper_additional);
+        assert!((head.improvement_pct - paper_pct).abs() < 8.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Table 3: queue-depth prediction — linear regression vs stress test
+//! (step 8) vs collaborative fine-tuning, for all four devices × two SLOs.
+
+use super::calibrate_device;
+use crate::devices::profile::DeviceProfile;
+use crate::estimator::stress::stress_search;
+use crate::sim::cluster::ClosedLoopSim;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub device: String,
+    pub slo: f64,
+    pub linear_regression: usize,
+    pub stress_test: usize,
+    pub fine_tuned: usize,
+    pub lr_probes: usize,
+    pub stress_probes: usize,
+    /// Paper's (LR, stress, fine-tuned) triple.
+    pub paper: (usize, usize, usize),
+}
+
+/// Paper Table 3 values keyed by (device, slo).
+fn paper_cell(device: &str, slo: f64) -> (usize, usize, usize) {
+    match (device, slo as u64) {
+        ("tesla_v100", 1) => (40, 40, 44),
+        ("tesla_v100", 2) => (96, 88, 96),
+        ("xeon_e5_2690", 1) => (8, 6, 8),
+        ("xeon_e5_2690", 2) => (20, 18, 22),
+        ("atlas_300i_duo", 1) => (84, 80, 84),
+        ("atlas_300i_duo", 2) => (195, 176, 172),
+        ("kunpeng_920", 1) => (2, 2, 2),
+        ("kunpeng_920", 2) => (15, 12, 8),
+        _ => (0, 0, 0),
+    }
+}
+
+pub fn run(seed: u64) -> Vec<Row> {
+    let devices = [
+        DeviceProfile::v100_bge(),
+        DeviceProfile::xeon_e5_2690_bge(),
+        DeviceProfile::atlas_300i_duo_bge(),
+        DeviceProfile::kunpeng_920_bge(),
+    ];
+    let mut rows = Vec::new();
+    for (di, dev) in devices.iter().enumerate() {
+        for &slo in &[1.0, 2.0] {
+            let (lr, tuned, lr_probes) = calibrate_device(dev, slo, 75, seed + di as u64 * 31);
+            // Stress test with the paper's increment step of 8, measuring
+            // noisy closed-loop rounds like the real procedure would.
+            let mut sim =
+                ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, 75, seed ^ 0xF00D + di as u64);
+            let stress = stress_search(slo, 8, 512, |c| sim.measure_latency(c, 3));
+            rows.push(Row {
+                device: dev.name.clone(),
+                slo,
+                linear_regression: lr,
+                stress_test: stress.max_concurrency,
+                fine_tuned: tuned,
+                lr_probes,
+                stress_probes: stress.probes,
+                paper: paper_cell(&dev.name, slo),
+            });
+        }
+    }
+    rows
+}
+
+pub fn print(rows: &[Row]) {
+    println!("\n=== Table 3 — queue depth: linear regression vs stress test vs fine-tuned ===");
+    println!(
+        "{:<16} {:>4} | {:>6} {:>7} {:>6} | {:>6} {:>7} {:>6} | {:>9} {:>9}",
+        "device", "SLO", "LR", "stress", "tuned", "pLR", "pstress", "ptuned", "LRprobes", "STprobes"
+    );
+    for r in rows {
+        println!(
+            "{:<16} {:>3}s | {:>6} {:>7} {:>6} | {:>6} {:>7} {:>6} | {:>9} {:>9}",
+            r.device, r.slo, r.linear_regression, r.stress_test, r.fine_tuned,
+            r.paper.0, r.paper.1, r.paper.2, r.lr_probes, r.stress_probes,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimator_tracks_truth_and_beats_stress_on_probe_count() {
+        for r in run(11) {
+            let truth = DeviceProfile::by_name(
+                r.device.strip_suffix("_jina").unwrap_or(&r.device),
+            )
+            .unwrap()
+            .true_max_concurrency(r.slo, 75);
+            // LR within 25% of truth for the clean devices. Kunpeng is the
+            // paper's own counter-example (§5.3: outliers degrade its LR
+            // prediction — their Table 3 shows LR 15 vs fine-tuned 8), so
+            // it only gets a factor-2.5 sanity bound.
+            if r.device.starts_with("kunpeng") {
+                assert!(
+                    r.linear_regression as f64 <= truth as f64 * 2.5 + 2.0
+                        && r.linear_regression as f64 >= truth as f64 / 2.5 - 2.0,
+                    "{} @{}s LR {} wildly off truth {truth}",
+                    r.device, r.slo, r.linear_regression
+                );
+            } else if truth >= 4 {
+                let err = (r.linear_regression as f64 - truth as f64).abs() / truth as f64;
+                assert!(err < 0.25, "{} @{}s LR {} vs truth {truth}", r.device, r.slo, r.linear_regression);
+            } else {
+                assert!(r.linear_regression.abs_diff(truth) <= 2);
+            }
+            // Stress quantises to multiples of 8 (plus the C=1 floor).
+            assert!(r.stress_test == 1 || r.stress_test % 8 == 0 || r.stress_test == 0);
+            // Probe economy: LR needs far fewer measurements for big devices.
+            if truth > 90 {
+                assert!(r.lr_probes < r.stress_probes);
+            }
+        }
+    }
+
+    #[test]
+    fn fine_tuned_matches_anchor_depths() {
+        for r in run(11) {
+            let truth = DeviceProfile::by_name(&r.device)
+                .unwrap()
+                .true_max_concurrency(r.slo, 75);
+            assert_eq!(r.fine_tuned, truth, "{} @{}s", r.device, r.slo);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! The embedding engine: tokenize → pad to bucket → PJRT execute → vectors.
+//!
+//! One engine = one model copy on one device context (the paper's "each
+//! instance employs its own model copy", §4.1). Weights are uploaded to
+//! device buffers once at load time and stay resident; per request only
+//! the `[batch, seq]` ids/mask tensors cross the host/device boundary.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{Manifest, ModelEntry};
+use super::pjrt::{Context, DeviceBuffer, Executable};
+use super::{tokenizer, wtar};
+
+/// Embedding engine for a single model. Not `Send`: construct on the
+/// worker thread that will own it.
+pub struct EmbeddingEngine {
+    ctx: Context,
+    entry: ModelEntry,
+    dir: PathBuf,
+    weights: Vec<DeviceBuffer>,
+    executables: HashMap<(usize, usize), Executable>,
+    /// Wall time spent in `load` (model + weights), exposed for t_model
+    /// accounting in the latency decomposition (paper Eq. 13).
+    pub load_time: std::time::Duration,
+}
+
+impl EmbeddingEngine {
+    /// Load manifest + weights for `model`, compiling bucket executables
+    /// lazily on first use (call [`EmbeddingEngine::warmup`] to preload).
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<EmbeddingEngine> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(artifacts_dir)?;
+        let entry = manifest.model(model)?.clone();
+        let ctx = Context::cpu()?;
+
+        // Upload weights once, in ABI order, validating shapes against the
+        // manifest so a stale .wtar fails loudly here rather than in XLA.
+        let tensors = wtar::read(&artifacts_dir.join(&entry.weights_file))?;
+        if tensors.len() != entry.params.len() {
+            bail!(
+                "weights archive has {} tensors, manifest declares {}",
+                tensors.len(),
+                entry.params.len()
+            );
+        }
+        let mut weights = Vec::with_capacity(tensors.len());
+        for (t, spec) in tensors.iter().zip(&entry.params) {
+            if t.name != spec.name || t.dims != spec.shape {
+                bail!(
+                    "weight mismatch: archive {}{:?} vs manifest {}{:?}",
+                    t.name, t.dims, spec.name, spec.shape
+                );
+            }
+            weights.push(ctx.upload_f32(&t.f32_data, &t.dims)?);
+        }
+
+        Ok(EmbeddingEngine {
+            ctx,
+            entry,
+            dir: artifacts_dir.to_path_buf(),
+            weights,
+            executables: HashMap::new(),
+            load_time: t0.elapsed(),
+        })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.entry.config.name
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.entry.config.d_model
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.entry.max_batch()
+    }
+
+    pub fn entry(&self) -> &ModelEntry {
+        &self.entry
+    }
+
+    /// Compile every bucket up front (serving deployments do this so the
+    /// first request doesn't pay compile latency).
+    pub fn warmup(&mut self) -> Result<()> {
+        let buckets = self.entry.buckets.clone();
+        for b in buckets {
+            self.executable(b.batch, b.seq)?;
+        }
+        Ok(())
+    }
+
+    fn executable(&mut self, batch: usize, seq: usize) -> Result<&Executable> {
+        if !self.executables.contains_key(&(batch, seq)) {
+            let bucket = self
+                .entry
+                .buckets
+                .iter()
+                .find(|b| b.batch == batch && b.seq == seq)
+                .ok_or_else(|| anyhow!("no artifact for bucket b{batch}_s{seq}"))?;
+            let exe = self.ctx.load_hlo_text(&self.dir.join(&bucket.file))?;
+            self.executables.insert((batch, seq), exe);
+        }
+        Ok(&self.executables[&(batch, seq)])
+    }
+
+    /// Embed up to `max_batch()` texts; returns one unit-norm `d_model`
+    /// vector per text. Chunks internally if the batch exceeds the largest
+    /// exported bucket.
+    pub fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        if texts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let max_b = self.entry.max_batch();
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(max_b.max(1)) {
+            out.extend(self.embed_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn embed_chunk(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+        let vocab = self.entry.config.vocab_size;
+        let need_seq = texts
+            .iter()
+            .map(|t| tokenizer::token_count(t))
+            .max()
+            .unwrap_or(1)
+            .min(self.entry.max_bucket_seq());
+        let bucket = self
+            .entry
+            .select_bucket(texts.len(), need_seq)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no bucket fits batch={} seq={} (max exported: b{} s{})",
+                    texts.len(), need_seq,
+                    self.entry.max_batch(), self.entry.max_bucket_seq()
+                )
+            })?
+            .clone();
+
+        // Tokenize into one contiguous [bucket.batch, bucket.seq] pair of
+        // tensors; phantom padding rows are fully masked (the kernels keep
+        // them finite and we drop them below).
+        let (bb, ss) = (bucket.batch, bucket.seq);
+        let mut ids = vec![tokenizer::PAD_ID; bb * ss];
+        let mut mask = vec![0.0f32; bb * ss];
+        for (i, text) in texts.iter().enumerate() {
+            let e = tokenizer::encode(text, vocab, ss);
+            ids[i * ss..(i + 1) * ss].copy_from_slice(&e.ids);
+            mask[i * ss..(i + 1) * ss].copy_from_slice(&e.mask);
+        }
+
+        let ids_buf = self.ctx.upload_i32(&ids, &[bb, ss])?;
+        let mask_buf = self.ctx.upload_f32(&mask, &[bb, ss])?;
+        // Keep exe lookup after uploads (borrow of self ends before args).
+        let d = self.entry.config.d_model;
+        let n_weights = self.weights.len();
+        let exe = {
+            // split borrows: executables map vs weights
+            if !self.executables.contains_key(&(bb, ss)) {
+                let file = bucket.file.clone();
+                let exe = self.ctx.load_hlo_text(&self.dir.join(&file))?;
+                self.executables.insert((bb, ss), exe);
+            }
+            &self.executables[&(bb, ss)]
+        };
+        let mut args: Vec<&DeviceBuffer> = Vec::with_capacity(n_weights + 2);
+        args.extend(self.weights.iter());
+        args.push(&ids_buf);
+        args.push(&mask_buf);
+        let flat = exe.run(&args)?;
+        if flat.len() != bb * d {
+            bail!("unexpected output size {} (want {})", flat.len(), bb * d);
+        }
+        Ok(texts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| flat[i * d..(i + 1) * d].to_vec())
+            .collect())
+    }
+}
+
+/// Cosine similarity between two embeddings (they are unit-norm, so this
+/// is just the dot product; exposed for the retrieval examples).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_of_identical_unit_vectors_is_one() {
+        let v = vec![0.6f32, 0.8];
+        assert!((cosine(&v, &v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_orthogonal_is_zero() {
+        assert_eq!(cosine(&[1.0, 0.0], &[0.0, 1.0]), 0.0);
+    }
+    // Engine tests that require built artifacts live in
+    // rust/tests/runtime_artifacts.rs.
+}

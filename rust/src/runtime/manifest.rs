@@ -1,0 +1,251 @@
+//! Artifact manifest: the parameter ABI and (batch, seq) bucket index
+//! written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One static-shape executable bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bucket {
+    pub batch: usize,
+    pub seq: usize,
+    pub file: String,
+}
+
+/// Declared shape of one weight parameter (AOT positional ABI).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Model architecture constants mirrored from python `ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: u32,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub param_count: u64,
+}
+
+/// Everything the runtime needs to serve one model.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub weights_file: String,
+    pub params: Vec<ParamSpec>,
+    pub buckets: Vec<Bucket>,
+}
+
+impl ModelEntry {
+    /// Smallest bucket that fits (batch, seq); `None` if nothing fits.
+    pub fn select_bucket(&self, batch: usize, seq: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.batch >= batch && b.seq >= seq)
+            .min_by_key(|b| (b.batch * b.seq, b.batch))
+    }
+
+    /// Largest exported batch size (the batcher's cap).
+    pub fn max_batch(&self) -> usize {
+        self.buckets.iter().map(|b| b.batch).max().unwrap_or(0)
+    }
+
+    pub fn max_bucket_seq(&self) -> usize {
+        self.buckets.iter().map(|b| b.seq).max().unwrap_or(0)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let root = json::parse(&text).context("parse manifest.json")?;
+        Self::from_json(dir, &root)
+    }
+
+    pub fn from_json(dir: &Path, root: &Json) -> Result<Manifest> {
+        let version = root
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let seed = root.get("seed").and_then(Json::as_u64).unwrap_or(0);
+        let models_obj = root
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+
+        let mut models = Vec::new();
+        for (name, entry) in models_obj {
+            let cfg = entry
+                .get("config")
+                .ok_or_else(|| anyhow!("model {name} missing config"))?;
+            let get = |k: &str| -> Result<usize> {
+                cfg.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name} config missing {k}"))
+            };
+            let config = ModelConfig {
+                name: name.clone(),
+                vocab_size: get("vocab_size")? as u32,
+                d_model: get("d_model")?,
+                n_layers: get("n_layers")?,
+                n_heads: get("n_heads")?,
+                d_ff: get("d_ff")?,
+                max_seq: get("max_seq")?,
+                param_count: get("param_count")? as u64,
+            };
+            let params = entry
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .ok_or_else(|| anyhow!("model {name} missing params"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: p
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let buckets = entry
+                .get("artifacts")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("model {name} missing artifacts"))?
+                .iter()
+                .map(|a| {
+                    Ok(Bucket {
+                        batch: a
+                            .get("batch")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("artifact missing batch"))?,
+                        seq: a
+                            .get("seq")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("artifact missing seq"))?,
+                        file: a
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("artifact missing file"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let weights_file = entry
+                .get("weights")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("model {name} missing weights"))?
+                .to_string();
+            models.push(ModelEntry { config, weights_file, params, buckets });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), seed, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.config.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model {name} not in manifest (have: {})",
+                    self.models
+                        .iter()
+                        .map(|m| m.config.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        json::parse(
+            r#"{
+          "version": 1, "seed": 7,
+          "models": {
+            "m": {
+              "config": {"name":"m","vocab_size":128,"d_model":16,"n_layers":1,
+                         "n_heads":2,"d_ff":32,"max_seq":64,"pad_id":0,"param_count":1000},
+              "weights": "m.wtar",
+              "params": [{"name":"tok_emb","shape":[128,16],"dtype":"f32"}],
+              "artifacts": [
+                {"batch":1,"seq":32,"file":"m_b1_s32.hlo.txt"},
+                {"batch":4,"seq":32,"file":"m_b4_s32.hlo.txt"},
+                {"batch":4,"seq":80,"file":"m_b4_s80.hlo.txt"},
+                {"batch":8,"seq":80,"file":"m_b8_s80.hlo.txt"}
+              ]
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_models_params_buckets() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample_manifest()).unwrap();
+        assert_eq!(m.seed, 7);
+        let entry = m.model("m").unwrap();
+        assert_eq!(entry.config.vocab_size, 128);
+        assert_eq!(entry.params[0].shape, vec![128, 16]);
+        assert_eq!(entry.buckets.len(), 4);
+        assert_eq!(entry.max_batch(), 8);
+    }
+
+    #[test]
+    fn bucket_selection_smallest_fit() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample_manifest()).unwrap();
+        let e = m.model("m").unwrap();
+        assert_eq!(e.select_bucket(1, 20).unwrap().file, "m_b1_s32.hlo.txt");
+        assert_eq!(e.select_bucket(2, 32).unwrap().file, "m_b4_s32.hlo.txt");
+        assert_eq!(e.select_bucket(3, 50).unwrap().file, "m_b4_s80.hlo.txt");
+        assert_eq!(e.select_bucket(8, 80).unwrap().file, "m_b8_s80.hlo.txt");
+        assert!(e.select_bucket(9, 32).is_none());
+        assert!(e.select_bucket(1, 128).is_none());
+    }
+
+    #[test]
+    fn unknown_model_error_lists_available() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample_manifest()).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("m"));
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let j = json::parse(r#"{"version": 2, "models": {}}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+}

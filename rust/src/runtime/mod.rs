@@ -1,0 +1,11 @@
+//! L3 runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the PJRT CPU client. No Python on the request path.
+
+pub mod engine;
+pub mod manifest;
+pub mod pjrt;
+pub mod tokenizer;
+pub mod wtar;
+
+pub use engine::EmbeddingEngine;
+pub use manifest::{Bucket, Manifest, ModelEntry};

@@ -1,0 +1,106 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute_b`. HLO *text* is the interchange format —
+//! xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit ids).
+//!
+//! `PjRtClient` holds raw pointers and is not `Send`; worker instances
+//! construct their own [`Context`] on their own thread (one "device
+//! context" per worker, matching the paper's one-model-copy-per-instance).
+
+use std::path::Path;
+
+use anyhow::{Context as _, Result};
+
+/// One PJRT client plus helpers. Not `Send` — build per worker thread.
+pub struct Context {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable bound to the context's device.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A device-resident input buffer (weights stay uploaded across calls).
+pub struct DeviceBuffer {
+    pub(crate) buf: xla::PjRtBuffer,
+}
+
+impl Context {
+    /// CPU PJRT client (the only backend available on this image).
+    pub fn cpu() -> Result<Context> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Context { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load HLO text and compile it for this device.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload f32 {dims:?}: {e}"))?;
+        Ok(DeviceBuffer { buf })
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload i32 {dims:?}: {e}"))?;
+        Ok(DeviceBuffer { buf })
+    }
+}
+
+impl Executable {
+    /// Execute with device-resident inputs; returns the flattened f32
+    /// payload of the first tuple element (AOT lowers with
+    /// `return_tuple=True`, so outputs arrive as a 1-tuple).
+    pub fn run(&self, args: &[&DeviceBuffer]) -> Result<Vec<f32>> {
+        let bufs: Vec<&xla::PjRtBuffer> = args.iter().map(|b| &b.buf).collect();
+        let outs = self
+            .exe
+            .execute_b(&bufs)
+            .map_err(|e| anyhow::anyhow!("pjrt execute: {e}"))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch output: {e}"))?;
+        let first = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple output: {e}"))?;
+        first
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("output to f32 vec: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full context tests live in rust/tests/runtime_artifacts.rs (they need
+    // built artifacts); here only client creation, which needs no files.
+    #[test]
+    fn cpu_client_comes_up() {
+        let ctx = Context::cpu().unwrap();
+        assert!(!ctx.platform().is_empty());
+    }
+}

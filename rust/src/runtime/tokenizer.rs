@@ -1,0 +1,156 @@
+//! Deterministic hash tokenizer — Rust half of the Python/Rust pair.
+//!
+//! Must stay byte-for-byte in sync with `python/compile/tokenizer.py`:
+//! lowercase, split on `[A-Za-z0-9]+`, FNV-1a 64 of the word mapped into
+//! `[2, vocab)`; id 0 = PAD, id 1 = CLS. Parity is enforced against the
+//! vectors exported in `artifacts/golden.json`.
+
+pub const PAD_ID: i32 = 0;
+pub const CLS_ID: i32 = 1;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// FNV-1a 64-bit hash.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Map one lower-case word to its token id.
+pub fn word_id(word: &str, vocab_size: u32) -> i32 {
+    (2 + fnv1a64(word.as_bytes()) % (vocab_size as u64 - 2)) as i32
+}
+
+/// Tokenised query: CLS-prefixed ids plus 1.0/0.0 validity mask.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Encoded {
+    pub ids: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// Number of real (non-padding) tokens including CLS.
+    pub len: usize,
+}
+
+/// Tokenise `text` padded/truncated to `max_len`.
+///
+/// Allocation-free inner loop (perf pass §Perf: the per-word `String` of
+/// the first version dominated the front-end cost): words are hashed
+/// byte-by-byte as they stream past, never materialised.
+pub fn encode(text: &str, vocab_size: u32, max_len: usize) -> Encoded {
+    if max_len == 0 {
+        return Encoded { ids: Vec::new(), mask: Vec::new(), len: 0 };
+    }
+    let mut ids = vec![PAD_ID; max_len];
+    let mut mask = vec![0.0f32; max_len];
+    ids[0] = CLS_ID;
+    mask[0] = 1.0;
+    let mut n = 1usize;
+    let mut h = FNV_OFFSET;
+    let mut in_word = false;
+    for &b in text.as_bytes() {
+        if b.is_ascii_alphanumeric() {
+            h ^= b.to_ascii_lowercase() as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+            in_word = true;
+        } else if in_word {
+            if n >= max_len {
+                return Encoded { ids, mask, len: max_len };
+            }
+            ids[n] = (2 + h % (vocab_size as u64 - 2)) as i32;
+            mask[n] = 1.0;
+            n += 1;
+            h = FNV_OFFSET;
+            in_word = false;
+        }
+    }
+    if in_word && n < max_len {
+        ids[n] = (2 + h % (vocab_size as u64 - 2)) as i32;
+        mask[n] = 1.0;
+        n += 1;
+    }
+    Encoded { ids, mask, len: n }
+}
+
+/// Number of tokens (incl. CLS) `text` produces before padding.
+/// Allocation-free single pass.
+pub fn token_count(text: &str) -> usize {
+    let mut count = 1usize; // CLS
+    let mut in_word = false;
+    for &b in text.as_bytes() {
+        if b.is_ascii_alphanumeric() {
+            in_word = true;
+        } else if in_word {
+            count += 1;
+            in_word = false;
+        }
+    }
+    count + usize::from(in_word)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Published FNV-1a 64 vectors (also asserted on the python side).
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_F739_67E8);
+    }
+
+    #[test]
+    fn encode_pads_and_masks() {
+        let e = encode("one two", 1000, 8);
+        assert_eq!(e.ids.len(), 8);
+        assert_eq!(e.ids[0], CLS_ID);
+        assert_eq!(e.len, 3);
+        assert_eq!(&e.mask[..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&e.mask[3..], &[0.0; 5]);
+        assert!(e.ids[3..].iter().all(|&i| i == PAD_ID));
+    }
+
+    #[test]
+    fn encode_truncates_long_text() {
+        let text = (0..100).map(|i| format!("w{i}")).collect::<Vec<_>>().join(" ");
+        let e = encode(&text, 1000, 16);
+        assert_eq!(e.ids.len(), 16);
+        assert_eq!(e.len, 16);
+        assert!(e.mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn case_and_punctuation_insensitive() {
+        assert_eq!(encode("Hello, WORLD!", 500, 8), encode("hello world", 500, 8));
+    }
+
+    #[test]
+    fn unicode_separators_ignored() {
+        // non-ascii chars act as separators, like the python \w-ish regex
+        assert_eq!(encode("héllo", 500, 8).len, 3); // "h" + "llo"
+    }
+
+    #[test]
+    fn empty_text_is_cls_only() {
+        let e = encode("", 100, 4);
+        assert_eq!(e.ids, vec![CLS_ID, 0, 0, 0]);
+        assert_eq!(e.len, 1);
+    }
+
+    #[test]
+    fn ids_in_vocab_range() {
+        let e = encode("alpha beta gamma delta epsilon", 64, 8);
+        assert!(e.ids.iter().all(|&i| (0..64).contains(&i)));
+    }
+
+    #[test]
+    fn token_count_matches_encode() {
+        let text = "a b c d";
+        assert_eq!(token_count(text), 5);
+        assert_eq!(encode(text, 100, 32).len, 5);
+    }
+}

@@ -1,0 +1,184 @@
+//! Reader for the `.wtar` tensor archive written by `python/compile/wtar.py`.
+//!
+//! Layout (little-endian): `WTAR1\0` magic, u32 count, then per tensor:
+//! u32 name-len + utf-8 name, u8 dtype tag (0=f32, 1=i32), u8 rank,
+//! rank x u64 dims, row-major payload.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 6] = b"WTAR1\x00";
+
+/// Element type of an archived tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One named tensor. Payload is kept as f32 or i32 words.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub f32_data: Vec<f32>,
+    pub i32_data: Vec<i32>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Read a whole archive (order preserved).
+pub fn read(path: &Path) -> Result<Vec<Tensor>> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic).context("read magic")?;
+    if &magic != MAGIC {
+        bail!("{}: bad wtar magic {:?}", path.display(), magic);
+    }
+    let count = read_u32(&mut r)? as usize;
+    if count > 1_000_000 {
+        bail!("implausible tensor count {count}");
+    }
+
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("implausible name length {name_len}");
+        }
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name utf-8")?;
+
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let dtype = match hdr[0] {
+            0 => DType::F32,
+            1 => DType::I32,
+            t => bail!("unknown dtype tag {t} for tensor {name}"),
+        };
+        let rank = hdr[1] as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        if n > 512 * 1024 * 1024 {
+            bail!("implausible tensor size {n} for {name}");
+        }
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)
+            .with_context(|| format!("payload of {name}"))?;
+        let mut t = Tensor {
+            name,
+            dtype,
+            dims,
+            f32_data: Vec::new(),
+            i32_data: Vec::new(),
+        };
+        match dtype {
+            DType::F32 => {
+                t.f32_data = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            }
+            DType::I32 => {
+                t.i32_data = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect()
+            }
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_archive(path: &Path, tensors: &[(&str, &[usize], &[f32])]) {
+        let mut f = File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&(tensors.len() as u32).to_le_bytes()).unwrap();
+        for (name, dims, data) in tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+            f.write_all(name.as_bytes()).unwrap();
+            f.write_all(&[0u8, dims.len() as u8]).unwrap();
+            for d in *dims {
+                f.write_all(&(*d as u64).to_le_bytes()).unwrap();
+            }
+            for v in *data {
+                f.write_all(&v.to_le_bytes()).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("windve_wtar_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.wtar");
+        write_archive(
+            &path,
+            &[("a", &[2, 3], &[1., 2., 3., 4., 5., 6.]), ("b", &[1], &[9.])],
+        );
+        let ts = read(&path).unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].name, "a");
+        assert_eq!(ts[0].dims, vec![2, 3]);
+        assert_eq!(ts[0].f32_data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(ts[1].name, "b");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("windve_wtar_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.wtar");
+        std::fs::write(&path, b"GARBAGE___").unwrap();
+        assert!(read(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = std::env::temp_dir().join("windve_wtar_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.wtar");
+        write_archive(&path, &[("a", &[4], &[1., 2., 3., 4.])]);
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        assert!(read(&path).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_contextual_error() {
+        let err = read(Path::new("/nonexistent/x.wtar")).unwrap_err();
+        assert!(format!("{err:#}").contains("x.wtar"));
+    }
+}

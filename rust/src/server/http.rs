@@ -1,0 +1,195 @@
+//! HTTP/1.1 request parsing and response serialisation (no framework).
+
+use std::collections::HashMap;
+use std::io::Read;
+
+use anyhow::{bail, Result};
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: HashMap<String, String>,
+    pub body: String,
+}
+
+/// Maximum request size we accept (embedding batches are small).
+const MAX_BODY: usize = 4 * 1024 * 1024;
+const MAX_HEAD: usize = 64 * 1024;
+
+/// Read a full request from the stream (blocking, Content-Length framed).
+pub fn read_request(stream: &mut impl Read) -> Result<Request> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_end;
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if let Some(pos) = find_head_end(&buf) {
+            head_end = pos;
+            break;
+        }
+        if buf.len() > MAX_HEAD {
+            bail!("headers too large");
+        }
+    }
+
+    let head = std::str::from_utf8(&buf[..head_end])?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    if method.is_empty() || path.is_empty() {
+        bail!("malformed request line: {request_line:?}");
+    }
+
+    let mut headers = HashMap::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let content_len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if content_len > MAX_BODY {
+        bail!("body too large ({content_len} bytes)");
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_len {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_len);
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body: String::from_utf8(body)?,
+    })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// An HTTP response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub reason: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn ok_json(body: crate::util::json::Json) -> Response {
+        Response { status: 200, reason: "OK", body: body.to_string() }
+    }
+
+    pub fn bad_request(msg: &str) -> Response {
+        Response {
+            status: 400,
+            reason: "Bad Request",
+            body: err_body(msg),
+        }
+    }
+
+    pub fn not_found() -> Response {
+        Response { status: 404, reason: "Not Found", body: err_body("not found") }
+    }
+
+    /// The paper's 'busy' status: both queues full.
+    pub fn busy() -> Response {
+        Response {
+            status: 503,
+            reason: "Service Unavailable",
+            body: err_body("busy"),
+        }
+    }
+
+    pub fn server_error(msg: &str) -> Response {
+        Response {
+            status: 500,
+            reason: "Internal Server Error",
+            body: err_body(msg),
+        }
+    }
+
+    pub fn serialize(&self) -> String {
+        format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            self.reason,
+            self.body.len(),
+            self.body
+        )
+    }
+}
+
+fn err_body(msg: &str) -> String {
+    crate::util::json::Json::obj(vec![(
+        "error",
+        crate::util::json::Json::str(msg),
+    )])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = "POST /v1/embed HTTP/1.1\r\nHost: x\r\nContent-Length: 17\r\n\r\n{\"texts\":[\"abc\"]}";
+        let req = read_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/embed");
+        assert_eq!(req.body, "{\"texts\":[\"abc\"]}");
+        assert_eq!(req.headers.get("host").map(|s| s.as_str()), Some("x"));
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.body, "");
+    }
+
+    #[test]
+    fn rejects_malformed_request_line() {
+        let raw = "NONSENSE\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_body() {
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\nshort";
+        assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn response_serialises_with_content_length() {
+        let r = Response::ok_json(crate::util::json::Json::Bool(true));
+        let s = r.serialize();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Content-Length: 4"));
+        assert!(s.ends_with("true"));
+    }
+
+    #[test]
+    fn busy_is_503() {
+        assert_eq!(Response::busy().status, 503);
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal HTTP/1.1 front end (std::net + in-repo thread pool).
+//!
+//! Endpoints:
+//! * `POST /v1/embed` — body `{"texts": ["...", ...]}`; each text goes
+//!   through Algorithm 1 admission independently; response carries the
+//!   route per text. Full-queue rejection maps to **503** with
+//!   `{"error":"busy"}` — the paper's 'busy' status.
+//! * `GET /healthz` — liveness.
+//! * `GET /metrics` — metrics registry snapshot (JSON).
+//! * `GET /stats` — queue depths/occupancy + route counters.
+
+pub mod http;
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::service::{ServeError, WindVE};
+use crate::util::json::{self, Json};
+use crate::util::threadpool::ThreadPool;
+use http::{Request, Response};
+
+/// Running HTTP server handle.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `listen` and serve `svc` until [`Server::stop`] (or drop).
+    pub fn start(listen: &str, svc: Arc<WindVE>, slo: Duration) -> Result<Server> {
+        let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let join = std::thread::Builder::new()
+            .name("windve-http".into())
+            .spawn(move || {
+                let pool = ThreadPool::new(16);
+                loop {
+                    if stop2.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let svc = Arc::clone(&svc);
+                            pool.execute(move || {
+                                let _ = handle_connection(stream, &svc, slo);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            log::warn!("accept error: {e}");
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+            })?;
+        Ok(Server { addr, stop, join: Some(join) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_nodelay(true)?;
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(e) => {
+            let resp = Response::bad_request(&format!("{e:#}"));
+            let _ = stream.write_all(resp.serialize().as_bytes());
+            return Ok(());
+        }
+    };
+    let resp = route(&req, svc, slo);
+    stream.write_all(resp.serialize().as_bytes())?;
+    Ok(())
+}
+
+fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::ok_json(Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/metrics") => Response::ok_json(svc.metrics.snapshot()),
+        ("GET", "/stats") => {
+            let qm = svc.queue_manager();
+            let (npu, cpu, busy) = qm.stats();
+            Response::ok_json(Json::obj(vec![
+                ("npu_depth", Json::num(qm.npu_depth() as f64)),
+                ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
+                ("npu_occupancy", Json::num(qm.npu_occupancy() as f64)),
+                ("cpu_occupancy", Json::num(qm.cpu_occupancy() as f64)),
+                ("hetero", Json::Bool(qm.hetero())),
+                ("routed_npu", Json::num(npu as f64)),
+                ("routed_cpu", Json::num(cpu as f64)),
+                ("rejected", Json::num(busy as f64)),
+            ]))
+        }
+        ("POST", "/v1/embed") => embed_endpoint(req, svc, slo),
+        _ => Response::not_found(),
+    }
+}
+
+fn embed_endpoint(req: &Request, svc: &WindVE, slo: Duration) -> Response {
+    let body = match json::parse(&req.body) {
+        Ok(b) => b,
+        Err(e) => return Response::bad_request(&format!("bad json: {e}")),
+    };
+    let texts: Vec<String> = if let Some(arr) = body.get("texts").and_then(|t| t.as_arr()) {
+        arr.iter()
+            .filter_map(|t| t.as_str().map(|s| s.to_string()))
+            .collect()
+    } else if let Some(t) = body.get("text").and_then(Json::as_str) {
+        vec![t.to_string()]
+    } else {
+        return Response::bad_request("expected {\"texts\": [...]} or {\"text\": \"...\"}");
+    };
+    if texts.is_empty() {
+        return Response::bad_request("no texts");
+    }
+
+    // Admit all texts first (each is one Algorithm-1 query), then wait.
+    let mut tickets = Vec::with_capacity(texts.len());
+    for t in &texts {
+        match svc.submit(t.clone()) {
+            Ok(ticket) => tickets.push(ticket),
+            Err(ServeError::Busy) => {
+                // Busy any → reject the whole request with 'busy' status
+                // (tickets already admitted still complete and release
+                // their slots; their results are dropped).
+                for tk in tickets {
+                    let _ = tk.wait(slo.mul_f64(4.0));
+                }
+                return Response::busy();
+            }
+            Err(e) => return Response::server_error(&e.to_string()),
+        }
+    }
+    let mut embeddings = Vec::with_capacity(tickets.len());
+    let mut routes = Vec::with_capacity(tickets.len());
+    for tk in tickets {
+        routes.push(tk.route.to_string());
+        match tk.wait(slo.mul_f64(4.0)) {
+            Ok(v) => embeddings.push(Json::Arr(
+                v.into_iter().map(|x| Json::Num(x as f64)).collect(),
+            )),
+            Err(e) => return Response::server_error(&e.to_string()),
+        }
+    }
+    Response::ok_json(Json::obj(vec![
+        ("embeddings", Json::Arr(embeddings)),
+        (
+            "routes",
+            Json::Arr(routes.into_iter().map(Json::Str).collect()),
+        ),
+    ]))
+}

@@ -1,0 +1,204 @@
+//! Closed-loop cluster simulation — the paper's measurement methodology.
+//!
+//! §5.1.3: "Input queries are sent concurrently and organized in batches.
+//! A new batch of queries will be sent only after the responses of
+//! previous batches have been received." Under that protocol, C
+//! concurrent clients form device batches of exactly the queue-manager
+//! admission split, and a device at concurrency C_d exhibits
+//! `t = α·C_d + β` — Eq. 12's setting.
+//!
+//! The simulation routes every query through the **production**
+//! [`QueueManager`] (Algorithm 1), then advances virtual time by the
+//! profiles' service times. Nothing sleeps; stress tests over hundreds of
+//! concurrency levels finish in microseconds.
+
+use crate::coordinator::queue_manager::{QueueManager, Route};
+use crate::devices::profile::DeviceProfile;
+use crate::util::rng::Pcg;
+
+/// One batch-synchronous round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundResult {
+    pub npu_batch: usize,
+    pub cpu_batch: usize,
+    pub busy: usize,
+    /// Batch latency per device (s); every query in a batch shares it.
+    pub npu_latency: f64,
+    pub cpu_latency: f64,
+}
+
+impl RoundResult {
+    /// Worst per-query e2e latency of the round.
+    pub fn max_latency(&self) -> f64 {
+        self.npu_latency.max(self.cpu_latency)
+    }
+
+    /// SLO check for the round: every admitted query within `slo`, no
+    /// rejects (a rejected query is an SLO violation for capacity search).
+    pub fn meets_slo(&self, slo: f64) -> bool {
+        self.busy == 0 && crate::devices::profile::slo_met(self.max_latency(), slo)
+    }
+}
+
+/// Closed-loop simulator over one NPU instance and (optionally) one CPU
+/// instance, fronted by the real queue manager.
+pub struct ClosedLoopSim {
+    pub npu: DeviceProfile,
+    pub cpu: Option<DeviceProfile>,
+    pub npu_depth: usize,
+    pub cpu_depth: usize,
+    /// Query length in tokens (paper default 75).
+    pub qlen: usize,
+    /// Deterministic measurement noise stream.
+    pub rng: Pcg,
+    /// When false, latencies are noise-free (used for ground-truth runs).
+    pub noisy: bool,
+}
+
+impl ClosedLoopSim {
+    pub fn new(
+        npu: DeviceProfile,
+        cpu: Option<DeviceProfile>,
+        npu_depth: usize,
+        cpu_depth: usize,
+        qlen: usize,
+        seed: u64,
+    ) -> ClosedLoopSim {
+        ClosedLoopSim { npu, cpu, npu_depth, cpu_depth, qlen, rng: Pcg::new(seed), noisy: true }
+    }
+
+    /// Run one round with `clients` concurrent queries.
+    pub fn round(&mut self, clients: usize) -> RoundResult {
+        // Fresh occupancy each round: the closed loop fully drains between
+        // rounds (clients wait for all responses before resending).
+        let hetero = self.cpu.is_some();
+        let qm = QueueManager::new(self.npu_depth, if hetero { self.cpu_depth } else { 0 }, hetero);
+        let mut npu_batch = 0usize;
+        let mut cpu_batch = 0usize;
+        let mut busy = 0usize;
+        for _ in 0..clients {
+            match qm.dispatch() {
+                Route::Npu => npu_batch += 1,
+                Route::Cpu => cpu_batch += 1,
+                Route::Busy => busy += 1,
+            }
+        }
+        let npu_latency = self.service(true, npu_batch);
+        let cpu_latency = self.service(false, cpu_batch);
+        RoundResult { npu_batch, cpu_batch, busy, npu_latency, cpu_latency }
+    }
+
+    fn service(&mut self, npu: bool, batch: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let profile = if npu { &self.npu } else { self.cpu.as_ref().unwrap() };
+        if self.noisy {
+            profile.noisy_service_time(batch, self.qlen, &mut self.rng)
+        } else {
+            profile.service_time(batch, self.qlen)
+        }
+    }
+
+    /// Measure mean round latency at `clients` over `rounds` rounds —
+    /// the "profiling session" primitive both estimators consume.
+    pub fn measure_latency(&mut self, clients: usize, rounds: usize) -> f64 {
+        let total: f64 = (0..rounds).map(|_| self.round(clients).max_latency()).sum();
+        total / rounds.max(1) as f64
+    }
+
+    /// Largest client count whose rounds all meet `slo` (fine-tuning /
+    /// ground-truth search). Scans `lo..=hi`.
+    pub fn max_concurrency(&mut self, slo: f64, lo: usize, hi: usize, rounds: usize) -> usize {
+        let mut best = 0;
+        for c in lo..=hi {
+            let ok = (0..rounds).all(|_| {
+                let r = self.round(c);
+                r.meets_slo(slo)
+            });
+            if ok {
+                best = c;
+            } else if best > 0 {
+                break; // monotone beyond the first success
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(mut p: DeviceProfile) -> DeviceProfile {
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        p
+    }
+
+    fn bge_pair() -> (DeviceProfile, DeviceProfile) {
+        (quiet(DeviceProfile::v100_bge()), quiet(DeviceProfile::xeon_e5_2690_bge()))
+    }
+
+    #[test]
+    fn npu_fills_before_cpu() {
+        let (npu, cpu) = bge_pair();
+        let mut sim = ClosedLoopSim::new(npu, Some(cpu), 44, 8, 75, 1);
+        let r = sim.round(50);
+        assert_eq!(r.npu_batch, 44);
+        assert_eq!(r.cpu_batch, 6);
+        assert_eq!(r.busy, 0);
+    }
+
+    #[test]
+    fn overflow_past_both_depths_is_busy() {
+        let (npu, cpu) = bge_pair();
+        let mut sim = ClosedLoopSim::new(npu, Some(cpu), 44, 8, 75, 1);
+        let r = sim.round(60);
+        assert_eq!(r.busy, 60 - 52);
+        assert!(!r.meets_slo(1.0));
+    }
+
+    #[test]
+    fn paper_table1_v100_xeon_1s() {
+        // WindVE @ 1 s on V100+Xeon: 44 + 8 = 52 concurrent (Table 1).
+        let (npu, cpu) = bge_pair();
+        let mut sim = ClosedLoopSim::new(npu, Some(cpu), 44, 8, 75, 2);
+        sim.noisy = false;
+        assert!(sim.round(52).meets_slo(1.0));
+        // The non-offloading baseline caps at 44.
+        let npu2 = quiet(DeviceProfile::v100_bge());
+        let mut solo = ClosedLoopSim::new(npu2, None, 44, 0, 75, 2);
+        solo.noisy = false;
+        assert!(solo.round(44).meets_slo(1.0));
+        assert!(!solo.round(45).meets_slo(1.0)); // busy reject
+    }
+
+    #[test]
+    fn max_concurrency_finds_joint_capacity() {
+        let (npu, cpu) = bge_pair();
+        let mut sim = ClosedLoopSim::new(npu, Some(cpu), 44, 8, 75, 3);
+        sim.noisy = false;
+        assert_eq!(sim.max_concurrency(1.0, 1, 80, 1), 52);
+    }
+
+    #[test]
+    fn latency_grows_with_clients() {
+        let (npu, _) = bge_pair();
+        let mut sim = ClosedLoopSim::new(npu, None, 512, 0, 75, 4);
+        sim.noisy = false;
+        let t10 = sim.measure_latency(10, 1);
+        let t40 = sim.measure_latency(40, 1);
+        assert!(t40 > t10);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (npu, cpu) = bge_pair();
+        let mut a = ClosedLoopSim::new(npu.clone(), Some(cpu.clone()), 44, 8, 75, 7);
+        let mut b = ClosedLoopSim::new(npu, Some(cpu), 44, 8, 75, 7);
+        for c in [10, 30, 50] {
+            assert_eq!(a.round(c), b.round(c));
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Open-loop discrete-event simulation.
+//!
+//! Arrival-driven companion to [`super::cluster`]: queries arrive on a
+//! timestamp stream (e.g. Poisson thinning of the Fig. 2 diurnal curve),
+//! are admitted by the production [`QueueManager`], wait in their device
+//! queue, and are served batch-at-a-time. Virtual time, no sleeping.
+//!
+//! Used by the motivation experiments: what happens to SLO attainment and
+//! reject rate when evening-peak traffic hits an average-provisioned
+//! NPU — and how much of it the CPU queue absorbs.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::coordinator::queue_manager::{QueueManager, Route};
+use crate::devices::profile::DeviceProfile;
+use crate::metrics::Histogram;
+use crate::util::rng::Pcg;
+
+/// Aggregate results of an open-loop run.
+pub struct SimStats {
+    pub arrived: u64,
+    pub served_npu: u64,
+    pub served_cpu: u64,
+    pub rejected: u64,
+    /// e2e latency (wait + service) in microseconds of virtual time.
+    pub latency_us: Histogram,
+    pub slo_violations: u64,
+    pub makespan: f64,
+}
+
+impl SimStats {
+    pub fn served(&self) -> u64 {
+        self.served_npu + self.served_cpu
+    }
+
+    pub fn reject_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.arrived as f64
+        }
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        let s = self.served();
+        if s == 0 {
+            1.0
+        } else {
+            1.0 - self.slo_violations as f64 / s as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    Arrival,
+    DeviceDone(bool), // true = NPU
+}
+
+/// Open-loop simulator: one NPU instance + optional CPU instance.
+pub struct OpenLoopSim {
+    pub npu: DeviceProfile,
+    pub cpu: Option<DeviceProfile>,
+    pub npu_depth: usize,
+    pub cpu_depth: usize,
+    pub qlen: usize,
+    pub slo: f64,
+    pub seed: u64,
+}
+
+impl OpenLoopSim {
+    /// Run over explicit arrival timestamps (seconds, ascending).
+    pub fn run(&self, arrivals: &[f64]) -> SimStats {
+        let hetero = self.cpu.is_some();
+        let qm = QueueManager::new(self.npu_depth, if hetero { self.cpu_depth } else { 0 }, hetero);
+        let mut rng = Pcg::new(self.seed);
+
+        // Event heap keyed by (time, seq) — seq breaks ties deterministically.
+        let mut heap: BinaryHeap<Reverse<(u64, u64, u8)>> = BinaryHeap::new();
+        let to_key = |t: f64| (t * 1e9) as u64;
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<_>, t: f64, e: Event, seq: &mut u64| {
+            let tag = match e {
+                Event::Arrival => 0u8,
+                Event::DeviceDone(true) => 1,
+                Event::DeviceDone(false) => 2,
+            };
+            heap.push(Reverse((to_key(t), *seq, tag)));
+            *seq += 1;
+        };
+
+        for &t in arrivals {
+            push(&mut heap, t, Event::Arrival, &mut seq);
+        }
+        let mut next_arrival = 0usize;
+
+        let mut npu_q: VecDeque<f64> = VecDeque::new(); // enqueue times
+        let mut cpu_q: VecDeque<f64> = VecDeque::new();
+        let mut npu_busy = false;
+        let mut cpu_busy = false;
+        let mut npu_inflight: Vec<f64> = Vec::new();
+        let mut cpu_inflight: Vec<f64> = Vec::new();
+
+        let mut stats = SimStats {
+            arrived: 0,
+            served_npu: 0,
+            served_cpu: 0,
+            rejected: 0,
+            latency_us: Histogram::new(),
+            slo_violations: 0,
+            makespan: 0.0,
+        };
+
+        while let Some(Reverse((tkey, _, tag))) = heap.pop() {
+            let now = tkey as f64 / 1e9;
+            stats.makespan = now;
+            match tag {
+                0 => {
+                    // Arrival → Algorithm 1 admission.
+                    stats.arrived += 1;
+                    next_arrival += 1;
+                    let _ = next_arrival;
+                    match qm.dispatch() {
+                        Route::Npu => npu_q.push_back(now),
+                        Route::Cpu => cpu_q.push_back(now),
+                        Route::Busy => stats.rejected += 1,
+                    }
+                    // Kick idle devices.
+                    if !npu_busy && !npu_q.is_empty() {
+                        let b = npu_q.len().min(self.npu_depth.max(1));
+                        npu_inflight = npu_q.drain(..b).collect();
+                        let st = self.npu.noisy_service_time(b, self.qlen, &mut rng);
+                        npu_busy = true;
+                        push(&mut heap, now + st, Event::DeviceDone(true), &mut seq);
+                    }
+                    if hetero && !cpu_busy && !cpu_q.is_empty() {
+                        let b = cpu_q.len().min(self.cpu_depth.max(1));
+                        cpu_inflight = cpu_q.drain(..b).collect();
+                        let st = self
+                            .cpu
+                            .as_ref()
+                            .unwrap()
+                            .noisy_service_time(b, self.qlen, &mut rng);
+                        cpu_busy = true;
+                        push(&mut heap, now + st, Event::DeviceDone(false), &mut seq);
+                    }
+                }
+                1 | 2 => {
+                    let is_npu = tag == 1;
+                    let (inflight, q, busy, depth) = if is_npu {
+                        (&mut npu_inflight, &mut npu_q, &mut npu_busy, self.npu_depth)
+                    } else {
+                        (&mut cpu_inflight, &mut cpu_q, &mut cpu_busy, self.cpu_depth)
+                    };
+                    for enq in inflight.drain(..) {
+                        let lat = now - enq;
+                        stats.latency_us.record((lat * 1e6) as u64);
+                        if lat > self.slo {
+                            stats.slo_violations += 1;
+                        }
+                        if is_npu {
+                            stats.served_npu += 1;
+                        } else {
+                            stats.served_cpu += 1;
+                        }
+                        qm.release(if is_npu { Route::Npu } else { Route::Cpu });
+                    }
+                    *busy = false;
+                    if !q.is_empty() {
+                        let b = q.len().min(depth.max(1));
+                        let batch: Vec<f64> = q.drain(..b).collect();
+                        let profile = if is_npu { &self.npu } else { self.cpu.as_ref().unwrap() };
+                        let st = profile.noisy_service_time(b, self.qlen, &mut rng);
+                        *inflight = batch;
+                        *busy = true;
+                        push(
+                            &mut heap,
+                            now + st,
+                            Event::DeviceDone(is_npu),
+                            &mut seq,
+                        );
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+        stats
+    }
+
+    /// Poisson arrivals at `rate(t)` q/s over `[0, horizon)` seconds via
+    /// thinning against `peak_rate`.
+    pub fn poisson_arrivals(
+        rate: impl Fn(f64) -> f64,
+        peak_rate: f64,
+        horizon: f64,
+        seed: u64,
+    ) -> Vec<f64> {
+        let mut rng = Pcg::new(seed);
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        while t < horizon {
+            t += rng.exp(peak_rate);
+            if t < horizon && rng.f64() < rate(t) / peak_rate {
+                out.push(t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(mut p: DeviceProfile) -> DeviceProfile {
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        p
+    }
+
+    fn sim(hetero: bool) -> OpenLoopSim {
+        OpenLoopSim {
+            npu: quiet(DeviceProfile::v100_bge()),
+            cpu: hetero.then(|| quiet(DeviceProfile::xeon_e5_2690_bge())),
+            npu_depth: 44,
+            cpu_depth: 8,
+            qlen: 75,
+            slo: 1.0,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn conservation_served_plus_rejected_equals_arrived() {
+        let s = sim(true);
+        let arrivals: Vec<f64> = (0..500).map(|i| i as f64 * 0.01).collect();
+        let st = s.run(&arrivals);
+        assert_eq!(st.arrived, 500);
+        assert_eq!(st.served() + st.rejected, st.arrived);
+    }
+
+    #[test]
+    fn light_load_all_served_in_slo() {
+        let s = sim(false);
+        // One query per 2 s: every batch has size 1, latency β + α ≈ 0.29 s.
+        let arrivals: Vec<f64> = (0..50).map(|i| i as f64 * 2.0).collect();
+        let st = s.run(&arrivals);
+        assert_eq!(st.rejected, 0);
+        assert_eq!(st.slo_violations, 0);
+        assert_eq!(st.served_npu, 50);
+    }
+
+    #[test]
+    fn burst_overflows_to_cpu_with_hetero() {
+        // 50-query instantaneous burst: NPU takes 44, CPU the rest.
+        let arrivals = vec![0.0; 50];
+        let st = sim(true).run(&arrivals);
+        assert_eq!(st.rejected, 0);
+        assert!(st.served_cpu >= 6, "cpu served {}", st.served_cpu);
+        // Without hetero the same burst rejects.
+        let st2 = sim(false).run(&arrivals);
+        assert!(st2.rejected >= 6, "rejected {}", st2.rejected);
+    }
+
+    #[test]
+    fn heavier_sustained_load_violates_slo_or_rejects() {
+        let mut s = sim(false);
+        s.npu_depth = 16;
+        // 100 q/s sustained far beyond one instance's ~40 q/s capacity.
+        let arrivals: Vec<f64> = (0..400).map(|i| i as f64 * 0.01).collect();
+        let st = s.run(&arrivals);
+        assert!(st.rejected > 0 || st.slo_violations > 0);
+    }
+
+    #[test]
+    fn poisson_thinning_rate_roughly_matches() {
+        let arr = OpenLoopSim::poisson_arrivals(|_| 20.0, 20.0, 100.0, 3);
+        let rate = arr.len() as f64 / 100.0;
+        assert!((rate - 20.0).abs() < 2.5, "rate {rate}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = sim(true);
+        let arrivals: Vec<f64> = (0..100).map(|i| i as f64 * 0.02).collect();
+        let a = s.run(&arrivals);
+        let b = s.run(&arrivals);
+        assert_eq!(a.served_npu, b.served_npu);
+        assert_eq!(a.rejected, b.rejected);
+    }
+}

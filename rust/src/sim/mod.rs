@@ -1,0 +1,18 @@
+//! Simulation layer.
+//!
+//! Our testbed has none of the paper's accelerators (V100, Atlas 300I
+//! DUO), so the paper-scale experiments run the **real coordinator code**
+//! (queue manager, estimator, fine-tuning) against calibrated device
+//! profiles in virtual time:
+//!
+//! * [`cluster`] — the paper's measurement methodology (§5.1.3):
+//!   batch-synchronous closed-loop clients; used to regenerate every
+//!   table and figure.
+//! * [`des`] — open-loop discrete-event simulation for arrival-driven
+//!   workloads (the Fig. 2 diurnal demo, admission-control studies).
+
+pub mod cluster;
+pub mod des;
+
+pub use cluster::{ClosedLoopSim, RoundResult};
+pub use des::{OpenLoopSim, SimStats};

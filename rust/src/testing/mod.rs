@@ -1,0 +1,3 @@
+//! In-repo property-testing framework (proptest is unavailable offline).
+
+pub mod prop;

@@ -1,0 +1,137 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Grammar: `windve <subcommand> [--key value]... [--flag]... [positional]...`
+//! Option keys are normalised (leading `--` stripped); `--key=value` works.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(arg);
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || self
+                .str_opt(key)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse(&["serve", "extra1", "extra2"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn options_with_space_and_equals() {
+        let a = parse(&["run", "--model", "bge_micro", "--slo=1.5"]);
+        assert_eq!(a.str_opt("model"), Some("bge_micro"));
+        assert_eq!(a.f64_or("slo", 0.0), 1.5);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["run", "--hetero", "--model", "x", "--verbose"]);
+        assert!(a.flag("hetero"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.str_opt("model"), Some("x"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.usize_or("depth", 7), 7);
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert_eq!(a.u64_or("seed", 3), 3);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--devices", "v100, xeon ,atlas"]);
+        assert_eq!(a.list_or("devices", &[]), vec!["v100", "xeon", "atlas"]);
+        assert_eq!(a.list_or("other", &["a"]), vec!["a"]);
+    }
+
+    #[test]
+    fn flag_via_value() {
+        let a = parse(&["x", "--hetero", "true", "--off", "0"]);
+        assert!(a.flag("hetero"));
+        assert!(!a.flag("off"));
+    }
+}

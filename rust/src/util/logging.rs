@@ -1,0 +1,60 @@
+//! Minimal `log` backend writing to stderr.
+//!
+//! Level comes from `WINDVE_LOG` (error|warn|info|debug|trace, default
+//! info). Install once with [`init`].
+
+use std::io::Write;
+use std::sync::Once;
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            let _ = writeln!(
+                std::io::stderr(),
+                "[{:<5} {}] {}",
+                record.level(),
+                record.target(),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the stderr logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("WINDVE_LOG").as_deref() {
+            Ok("error") => log::LevelFilter::Error,
+            Ok("warn") => log::LevelFilter::Warn,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("trace") => log::LevelFilter::Trace,
+            _ => log::LevelFilter::Info,
+        };
+        let logger = Box::new(StderrLogger { level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

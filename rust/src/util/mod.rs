@@ -1,0 +1,8 @@
+//! Infrastructure substrates built in-repo (the offline vendor set has no
+//! serde_json/clap/rand/tokio — see DESIGN.md §2).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,104 @@
+//! Exact brute-force index: contiguous row-major storage, linear scan.
+
+use super::{dot, Hit, Index, TopK};
+
+/// Flat (exact) inner-product index.
+pub struct FlatIndex {
+    dim: usize,
+    ids: Vec<u64>,
+    data: Vec<f32>, // row-major [n, dim]
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize) -> FlatIndex {
+        assert!(dim > 0);
+        FlatIndex { dim, ids: Vec::new(), data: Vec::new() }
+    }
+
+    pub fn vector(&self, row: usize) -> &[f32] {
+        &self.data[row * self.dim..(row + 1) * self.dim]
+    }
+}
+
+impl Index for FlatIndex {
+    fn add(&mut self, id: u64, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim, "dimension mismatch");
+        self.ids.push(id);
+        self.data.extend_from_slice(vector);
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "dimension mismatch");
+        let mut tk = TopK::new(k);
+        for (row, &id) in self.ids.iter().enumerate() {
+            tk.push(id, dot(query, self.vector(row)));
+        }
+        tk.into_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn unit(rng: &mut Pcg, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    #[test]
+    fn finds_itself_first() {
+        let mut rng = Pcg::new(1);
+        let mut idx = FlatIndex::new(32);
+        let mut vs = Vec::new();
+        for i in 0..100 {
+            let v = unit(&mut rng, 32);
+            idx.add(i, &v);
+            vs.push(v);
+        }
+        for (i, v) in vs.iter().enumerate() {
+            let hits = idx.search(v, 1);
+            assert_eq!(hits[0].id, i as u64);
+            assert!((hits[0].score - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scores_sorted_descending() {
+        let mut rng = Pcg::new(2);
+        let mut idx = FlatIndex::new(16);
+        for i in 0..50 {
+            idx.add(i, &unit(&mut rng, 16));
+        }
+        let hits = idx.search(&unit(&mut rng, 16), 10);
+        assert_eq!(hits.len(), 10);
+        assert!(hits.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let mut idx = FlatIndex::new(4);
+        idx.add(7, &[1.0, 0.0, 0.0, 0.0]);
+        let hits = idx.search(&[1.0, 0.0, 0.0, 0.0], 5);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].id, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimension mismatch")]
+    fn wrong_dim_panics() {
+        let mut idx = FlatIndex::new(4);
+        idx.add(1, &[1.0, 2.0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! IVF-Flat approximate index: k-means coarse quantizer + inverted lists.
+//!
+//! Build: train centroids over the (buffered) corpus, bucket each vector
+//! into its nearest cell. Search: score the `nprobe` nearest cells only.
+
+use super::kmeans;
+use super::{dot, Hit, Index, TopK};
+
+/// IVF-Flat index. Vectors are buffered until [`IvfIndex::build`]; before
+/// that, search falls back to exact scan over the buffer.
+pub struct IvfIndex {
+    dim: usize,
+    nlist: usize,
+    pub nprobe: usize,
+    // Buffered (pre-build) rows.
+    pending: Vec<(u64, Vec<f32>)>,
+    centroids: Vec<f32>,
+    lists: Vec<Vec<(u64, Vec<f32>)>>,
+    built: bool,
+    len: usize,
+}
+
+impl IvfIndex {
+    pub fn new(dim: usize, nlist: usize, nprobe: usize) -> IvfIndex {
+        assert!(dim > 0 && nlist > 0 && nprobe > 0);
+        IvfIndex {
+            dim,
+            nlist,
+            nprobe: nprobe.min(nlist),
+            pending: Vec::new(),
+            centroids: Vec::new(),
+            lists: Vec::new(),
+            built: false,
+            len: 0,
+        }
+    }
+
+    /// Train the quantizer and assign all buffered vectors.
+    pub fn build(&mut self, seed: u64) {
+        let n = self.pending.len();
+        if n == 0 {
+            return;
+        }
+        let k = self.nlist.min(n);
+        let mut flat = Vec::with_capacity(n * self.dim);
+        for (_, v) in &self.pending {
+            flat.extend_from_slice(v);
+        }
+        self.centroids = kmeans::train(&flat, self.dim, k, 15, seed);
+        self.lists = (0..k).map(|_| Vec::new()).collect();
+        for (id, v) in self.pending.drain(..) {
+            let (c, _) = kmeans::nearest(&v, &self.centroids, self.dim);
+            self.lists[c].push((id, v));
+        }
+        self.built = true;
+    }
+
+    pub fn is_built(&self) -> bool {
+        self.built
+    }
+
+    /// Fraction of searches that would hit each list (balance diagnostic).
+    pub fn list_sizes(&self) -> Vec<usize> {
+        self.lists.iter().map(|l| l.len()).collect()
+    }
+}
+
+impl Index for IvfIndex {
+    fn add(&mut self, id: u64, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim, "dimension mismatch");
+        self.len += 1;
+        if self.built {
+            let (c, _) = kmeans::nearest(vector, &self.centroids, self.dim);
+            self.lists[c].push((id, vector.to_vec()));
+        } else {
+            self.pending.push((id, vector.to_vec()));
+        }
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        assert_eq!(query.len(), self.dim, "dimension mismatch");
+        let mut tk = TopK::new(k);
+        if !self.built {
+            for (id, v) in &self.pending {
+                tk.push(*id, dot(query, v));
+            }
+            return tk.into_vec();
+        }
+        // Rank cells by centroid similarity, probe the top nprobe.
+        let ncells = self.lists.len();
+        let mut cell_scores: Vec<(usize, f32)> = (0..ncells)
+            .map(|c| (c, dot(query, &self.centroids[c * self.dim..(c + 1) * self.dim])))
+            .collect();
+        cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for &(c, _) in cell_scores.iter().take(self.nprobe) {
+            for (id, v) in &self.lists[c] {
+                tk.push(*id, dot(query, v));
+            }
+        }
+        tk.into_vec()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::FlatIndex;
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn unit(rng: &mut Pcg, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    }
+
+    fn corpus(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| unit(&mut rng, d)).collect()
+    }
+
+    #[test]
+    fn unbuilt_index_is_exact() {
+        let vs = corpus(50, 16, 1);
+        let mut ivf = IvfIndex::new(16, 8, 2);
+        let mut flat = FlatIndex::new(16);
+        for (i, v) in vs.iter().enumerate() {
+            ivf.add(i as u64, v);
+            flat.add(i as u64, v);
+        }
+        let q = &vs[7];
+        assert_eq!(ivf.search(q, 5), flat.search(q, 5));
+    }
+
+    #[test]
+    fn full_probe_equals_exact() {
+        // nprobe == nlist must recover exact results.
+        let vs = corpus(200, 16, 2);
+        let mut ivf = IvfIndex::new(16, 8, 8);
+        let mut flat = FlatIndex::new(16);
+        for (i, v) in vs.iter().enumerate() {
+            ivf.add(i as u64, v);
+            flat.add(i as u64, v);
+        }
+        ivf.build(3);
+        let mut rng = Pcg::new(9);
+        for _ in 0..10 {
+            let q = unit(&mut rng, 16);
+            let a: Vec<u64> = ivf.search(&q, 5).into_iter().map(|h| h.id).collect();
+            let b: Vec<u64> = flat.search(&q, 5).into_iter().map(|h| h.id).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn recall_improves_with_nprobe() {
+        let vs = corpus(500, 24, 4);
+        let mut flat = FlatIndex::new(24);
+        for (i, v) in vs.iter().enumerate() {
+            flat.add(i as u64, v);
+        }
+        let mut recalls = Vec::new();
+        for nprobe in [1usize, 4, 16] {
+            let mut ivf = IvfIndex::new(24, 16, nprobe);
+            for (i, v) in vs.iter().enumerate() {
+                ivf.add(i as u64, v);
+            }
+            ivf.build(5);
+            let mut rng = Pcg::new(11);
+            let mut hit = 0;
+            let trials = 50;
+            for _ in 0..trials {
+                let q = unit(&mut rng, 24);
+                let truth: Vec<u64> = flat.search(&q, 10).into_iter().map(|h| h.id).collect();
+                let approx = ivf.search(&q, 10);
+                hit += approx.iter().filter(|h| truth.contains(&h.id)).count();
+            }
+            recalls.push(hit as f64 / (trials * 10) as f64);
+        }
+        assert!(recalls[0] <= recalls[1] + 0.05, "{recalls:?}");
+        assert!(recalls[1] <= recalls[2] + 0.05, "{recalls:?}");
+        assert!(recalls[2] > 0.95, "full-ish probe should be near exact: {recalls:?}");
+    }
+
+    #[test]
+    fn post_build_adds_are_searchable() {
+        let vs = corpus(64, 8, 6);
+        let mut ivf = IvfIndex::new(8, 4, 4);
+        for (i, v) in vs.iter().enumerate() {
+            ivf.add(i as u64, v);
+        }
+        ivf.build(7);
+        let late = vs[0].clone();
+        ivf.add(999, &late);
+        let hits = ivf.search(&late, 2);
+        assert!(hits.iter().any(|h| h.id == 999));
+        assert_eq!(ivf.len(), 65);
+    }
+
+    #[test]
+    fn list_sizes_cover_corpus() {
+        let vs = corpus(100, 8, 8);
+        let mut ivf = IvfIndex::new(8, 5, 1);
+        for (i, v) in vs.iter().enumerate() {
+            ivf.add(i as u64, v);
+        }
+        ivf.build(1);
+        assert_eq!(ivf.list_sizes().iter().sum::<usize>(), 100);
+    }
+}

@@ -1,0 +1,117 @@
+//! Vector store substrate — the retrieval half of the paper's Figure 1
+//! RAG workflow ("external database" the embeddings are matched against).
+//!
+//! Two indexes over unit-norm embeddings:
+//! * [`FlatIndex`] — exact brute-force inner-product search.
+//! * [`IvfIndex`] — IVF-Flat: k-means coarse quantizer + inverted lists,
+//!   probing `nprobe` nearest cells. The standard recall/latency trade.
+
+pub mod flat;
+pub mod ivf;
+pub mod kmeans;
+
+pub use flat::FlatIndex;
+pub use ivf::IvfIndex;
+
+/// A scored search hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hit {
+    pub id: u64,
+    pub score: f32,
+}
+
+/// Common index interface.
+pub trait Index {
+    /// Add a vector under `id`. Vectors should be unit-norm (the engine's
+    /// output already is); scores are inner products.
+    fn add(&mut self, id: u64, vector: &[f32]);
+    /// Top-k most similar.
+    fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn dim(&self) -> usize;
+}
+
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled dot product — the hot loop of retrieval.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Keep the top-k (id, score) pairs with a bounded insertion sort —
+/// cheaper than a heap for the small k retrieval uses.
+pub(crate) struct TopK {
+    k: usize,
+    hits: Vec<Hit>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        TopK { k, hits: Vec::with_capacity(k + 1) }
+    }
+
+    pub fn push(&mut self, id: u64, score: f32) {
+        if self.hits.len() == self.k
+            && score <= self.hits.last().map(|h| h.score).unwrap_or(f32::MIN)
+        {
+            return;
+        }
+        let pos = self
+            .hits
+            .iter()
+            .position(|h| h.score < score)
+            .unwrap_or(self.hits.len());
+        self.hits.insert(pos, Hit { id, score });
+        self.hits.truncate(self.k);
+    }
+
+    pub fn into_vec(self) -> Vec<Hit> {
+        self.hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..37).map(|i| (36 - i) as f32 * 0.2).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn topk_keeps_best_sorted() {
+        let mut tk = TopK::new(3);
+        for (id, s) in [(1, 0.5), (2, 0.9), (3, 0.1), (4, 0.7), (5, 0.8)] {
+            tk.push(id, s);
+        }
+        let hits = tk.into_vec();
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![2, 5, 4]);
+        assert!(hits.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn topk_fewer_than_k() {
+        let mut tk = TopK::new(10);
+        tk.push(1, 0.3);
+        assert_eq!(tk.into_vec().len(), 1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Diurnal traffic model (paper Figure 2: "query number changes in a day").
+//!
+//! Industrial embedding traffic has a strong day/night cycle with lunchtime
+//! and evening peaks; deployment by *average* rate under-provisions the
+//! peaks (the paper's motivation for maximum-concurrency provisioning).
+//! This model is a sum of Gaussian bumps over a base rate, normalised so
+//! `rate(t)` is queries/second.
+
+/// Piecewise-smooth day curve.
+#[derive(Debug, Clone)]
+pub struct DiurnalCurve {
+    /// Base (overnight) rate, q/s.
+    pub base: f64,
+    /// (center hour, width hours, extra q/s) bumps.
+    pub peaks: Vec<(f64, f64, f64)>,
+}
+
+impl DiurnalCurve {
+    /// A typical business-app day: morning ramp, lunch spike, evening peak
+    /// (shape of the paper's Fig. 2 illustration).
+    pub fn typical(base: f64, scale: f64) -> DiurnalCurve {
+        DiurnalCurve {
+            base,
+            peaks: vec![
+                (10.0, 1.8, 3.0 * scale), // morning work peak
+                (13.0, 1.0, 2.0 * scale), // lunch spike
+                (20.5, 2.2, 4.0 * scale), // evening peak (the day's max)
+            ],
+        }
+    }
+
+    /// Rate (queries/s) at hour-of-day `h ∈ [0, 24)`.
+    pub fn rate(&self, h: f64) -> f64 {
+        let h = h.rem_euclid(24.0);
+        let mut r = self.base;
+        for &(c, w, a) in &self.peaks {
+            // wrap-around distance so 23:30 feels a 00:30 peak
+            let d = (h - c).abs().min(24.0 - (h - c).abs());
+            r += a * (-0.5 * (d / w).powi(2)).exp();
+        }
+        r
+    }
+
+    /// Peak rate over the day (sampled minutely — Eq. 6's N_peak).
+    pub fn peak_rate(&self) -> f64 {
+        (0..24 * 60)
+            .map(|m| self.rate(m as f64 / 60.0))
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Mean rate over the day (Eq. 5's N).
+    pub fn mean_rate(&self) -> f64 {
+        let n = 24 * 60;
+        (0..n).map(|m| self.rate(m as f64 / 60.0)).sum::<f64>() / n as f64
+    }
+
+    /// Sampled series for plotting (hour, rate) — `windve repro fig2`.
+    pub fn series(&self, samples_per_hour: usize) -> Vec<(f64, f64)> {
+        let n = 24 * samples_per_hour;
+        (0..n)
+            .map(|i| {
+                let h = i as f64 / samples_per_hour as f64;
+                (h, self.rate(h))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_positive_everywhere() {
+        let c = DiurnalCurve::typical(2.0, 10.0);
+        for m in 0..24 * 60 {
+            assert!(c.rate(m as f64 / 60.0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn peak_exceeds_mean_substantially() {
+        // The premise of §3: bursts far above average exist.
+        let c = DiurnalCurve::typical(2.0, 10.0);
+        assert!(c.peak_rate() > 2.0 * c.mean_rate());
+    }
+
+    #[test]
+    fn evening_peak_is_global_max() {
+        let c = DiurnalCurve::typical(2.0, 10.0);
+        let peak = c.peak_rate();
+        assert!((c.rate(20.5) - peak).abs() / peak < 0.05);
+    }
+
+    #[test]
+    fn wraps_midnight() {
+        let c = DiurnalCurve::typical(2.0, 10.0);
+        assert!((c.rate(0.0) - c.rate(24.0)).abs() < 1e-9);
+        assert!((c.rate(-1.0) - c.rate(23.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_has_expected_len() {
+        let c = DiurnalCurve::typical(1.0, 1.0);
+        assert_eq!(c.series(4).len(), 96);
+    }
+}

@@ -1,0 +1,9 @@
+//! Workload generation: query text of controlled token length, and the
+//! diurnal arrival-rate curve of the paper's Figure 2.
+
+pub mod diurnal;
+pub mod queries;
+pub mod trace;
+
+pub use diurnal::DiurnalCurve;
+pub use queries::QueryGen;

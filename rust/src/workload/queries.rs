@@ -1,0 +1,73 @@
+//! Query-text generator with controlled token length.
+//!
+//! Per the paper (§5.1.3) "the length rather than the content of input
+//! queries matters for vector embedding service"; the default 75 tokens
+//! mirrors the paper's canonical RAG text-segmentation setting.
+
+use crate::util::rng::Pcg;
+
+/// Generates deterministic pseudo-text queries of an exact token count.
+#[derive(Debug)]
+pub struct QueryGen {
+    rng: Pcg,
+    /// Tokens per query, *including* the CLS token the tokenizer adds.
+    pub tokens: usize,
+}
+
+impl QueryGen {
+    /// `tokens` counts the CLS token, matching the paper's "query length".
+    pub fn new(tokens: usize, seed: u64) -> QueryGen {
+        assert!(tokens >= 1);
+        QueryGen { rng: Pcg::new(seed), tokens }
+    }
+
+    /// One query with exactly `self.tokens` tokens.
+    pub fn query(&mut self) -> String {
+        let words = self.tokens - 1; // CLS provides the first token
+        (0..words)
+            .map(|_| {
+                let n = self.rng.usize(3, 9);
+                (0..n)
+                    .map(|_| (b'a' + self.rng.usize(0, 26) as u8) as char)
+                    .collect::<String>()
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// A batch of `n` queries.
+    pub fn batch(&mut self, n: usize) -> Vec<String> {
+        (0..n).map(|_| self.query()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tokenizer;
+
+    #[test]
+    fn token_count_is_exact() {
+        for &len in &[1usize, 2, 10, 75, 128, 500] {
+            let mut g = QueryGen::new(len, 1);
+            for _ in 0..5 {
+                let q = g.query();
+                assert_eq!(tokenizer::token_count(&q), len, "len {len} q {q:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = QueryGen::new(75, 9);
+        let mut b = QueryGen::new(75, 9);
+        assert_eq!(a.batch(5), b.batch(5));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = QueryGen::new(75, 1);
+        let mut b = QueryGen::new(75, 2);
+        assert_ne!(a.query(), b.query());
+    }
+}

@@ -1,0 +1,165 @@
+//! Arrival-trace recording and replay.
+//!
+//! Serialises arrival timestamps + query lengths to a simple line format
+//! (`<t_seconds> <tokens>`), so production traces (or synthetic ones from
+//! the diurnal model) can be replayed bit-exactly through the open-loop
+//! simulator or a live service.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One trace record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Record {
+    pub t: f64,
+    pub tokens: usize,
+}
+
+/// A recorded workload trace (sorted by time).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub records: Vec<Record>,
+}
+
+impl Trace {
+    pub fn new(mut records: Vec<Record>) -> Trace {
+        records.sort_by(|a, b| a.t.partial_cmp(&b.t).unwrap());
+        Trace { records }
+    }
+
+    /// Synthesize from arrival times with a fixed query length.
+    pub fn from_arrivals(arrivals: &[f64], tokens: usize) -> Trace {
+        Trace::new(arrivals.iter().map(|&t| Record { t, tokens }).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.records.last().map(|r| r.t).unwrap_or(0.0)
+    }
+
+    /// Mean arrival rate (q/s).
+    pub fn rate(&self) -> f64 {
+        if self.duration() <= 0.0 {
+            0.0
+        } else {
+            self.len() as f64 / self.duration()
+        }
+    }
+
+    pub fn arrival_times(&self) -> Vec<f64> {
+        self.records.iter().map(|r| r.t).collect()
+    }
+
+    /// Write as `t tokens` lines.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "# windve trace v1: <t_seconds> <tokens>")?;
+        for r in &self.records {
+            writeln!(w, "{:.9} {}", r.t, r.tokens)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut records = Vec::new();
+        for (ln, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let t: f64 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .with_context(|| format!("bad time at line {}", ln + 1))?;
+            let tokens: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .with_context(|| format!("bad token count at line {}", ln + 1))?;
+            records.push(Record { t, tokens });
+        }
+        Ok(Trace::new(records))
+    }
+
+    /// Scale arrival rate by `factor` (compress time for faster replay).
+    pub fn speedup(&self, factor: f64) -> Trace {
+        assert!(factor > 0.0);
+        Trace::new(
+            self.records
+                .iter()
+                .map(|r| Record { t: r.t / factor, tokens: r.tokens })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("windve_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let t = Trace::new(vec![
+            Record { t: 0.5, tokens: 75 },
+            Record { t: 0.1, tokens: 128 },
+            Record { t: 2.25, tokens: 75 },
+        ]);
+        let path = tmp("t1.trace");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back, t);
+        // sorted on construction
+        assert!(back.records.windows(2).all(|w| w[0].t <= w[1].t));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let path = tmp("t2.trace");
+        std::fs::write(&path, "# header\n\n0.5 75\n# mid\n1.0 80\n").unwrap();
+        let t = Trace::load(&path).unwrap();
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let path = tmp("t3.trace");
+        std::fs::write(&path, "0.5 notanumber\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+    }
+
+    #[test]
+    fn rate_and_speedup() {
+        let t = Trace::from_arrivals(&[0.0, 1.0, 2.0, 3.0, 4.0], 75);
+        assert!((t.rate() - 1.25).abs() < 1e-9); // 5 arrivals / 4s
+        let fast = t.speedup(2.0);
+        assert!((fast.duration() - 2.0).abs() < 1e-9);
+        assert_eq!(fast.len(), t.len());
+    }
+
+    #[test]
+    fn empty_trace_degenerate() {
+        let t = Trace::default();
+        assert_eq!(t.rate(), 0.0);
+        assert_eq!(t.duration(), 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Failure-injection tests: worker faults, poisoned backends, BUSY
+//! storms, slot-leak detection — the service must degrade, not wedge.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use windve::coordinator::instance::BackendFactory;
+use windve::coordinator::service::ServeError;
+use windve::coordinator::{ServiceConfig, WindVE};
+use windve::devices::executor::Backend;
+
+/// Backend that panics every `nth` batch.
+struct FlakyBackend {
+    calls: usize,
+    nth: usize,
+}
+
+impl Backend for FlakyBackend {
+    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.calls += 1;
+        if self.calls % self.nth == 0 {
+            panic!("injected fault on batch {}", self.calls);
+        }
+        Ok(texts.iter().map(|_| vec![1.0]).collect())
+    }
+    fn describe(&self) -> String {
+        "flaky".into()
+    }
+    fn max_batch(&self) -> usize {
+        4
+    }
+}
+
+/// Backend that errors (not panics) on odd batches.
+struct ErroringBackend {
+    calls: AtomicUsize,
+}
+
+impl Backend for ErroringBackend {
+    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        if self.calls.fetch_add(1, Ordering::Relaxed) % 2 == 0 {
+            anyhow::bail!("transient device error");
+        }
+        Ok(texts.iter().map(|_| vec![2.0]).collect())
+    }
+    fn describe(&self) -> String {
+        "erroring".into()
+    }
+    fn max_batch(&self) -> usize {
+        2
+    }
+}
+
+/// Backend that returns the wrong number of vectors.
+struct ShortBackend;
+
+impl Backend for ShortBackend {
+    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(texts.iter().skip(1).map(|_| vec![3.0]).collect())
+    }
+    fn describe(&self) -> String {
+        "short".into()
+    }
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+fn service_with(factory: BackendFactory, depth: usize) -> WindVE {
+    WindVE::start(
+        ServiceConfig {
+            npu_depth: depth,
+            cpu_depth: 0,
+            hetero: false,
+            npu_workers: 1,
+            cpu_workers: 0,
+            cpu_pin_cores: None,
+            cache_entries: 0,
+            cache_key_space: (8192, 128),
+        },
+        vec![factory],
+        vec![],
+    )
+    .unwrap()
+}
+
+#[test]
+fn panicking_backend_never_wedges_service() {
+    let svc = service_with(
+        Box::new(|| Ok(Box::new(FlakyBackend { calls: 0, nth: 3 }) as Box<dyn Backend>)),
+        64,
+    );
+    let mut ok = 0;
+    let mut failed = 0;
+    for i in 0..60 {
+        match svc.embed_blocking(format!("q{i}"), Duration::from_secs(10)) {
+            Ok(_) => ok += 1,
+            Err(ServeError::Backend(msg)) => {
+                assert!(msg.contains("injected fault"), "{msg}");
+                failed += 1;
+            }
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(ok > 0, "some queries must survive");
+    assert!(failed > 0, "injected faults must surface as Backend errors");
+    // No slots leaked despite the panics.
+    std::thread::sleep(Duration::from_millis(50));
+    assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn erroring_backend_reports_and_recovers() {
+    let svc = service_with(
+        Box::new(|| {
+            Ok(Box::new(ErroringBackend { calls: AtomicUsize::new(0) }) as Box<dyn Backend>)
+        }),
+        64,
+    );
+    let mut saw_error = false;
+    let mut saw_ok = false;
+    for i in 0..20 {
+        match svc.embed_blocking(format!("q{i}"), Duration::from_secs(10)) {
+            Ok(_) => saw_ok = true,
+            Err(ServeError::Backend(m)) => {
+                assert!(m.contains("transient device error"));
+                saw_error = true;
+            }
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(saw_error && saw_ok);
+    assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+}
+
+#[test]
+fn wrong_arity_backend_fails_batch_safely() {
+    let svc = service_with(Box::new(|| Ok(Box::new(ShortBackend) as Box<dyn Backend>)), 64);
+    let err = svc
+        .embed_blocking("only query", Duration::from_secs(10))
+        .unwrap_err();
+    match err {
+        ServeError::Backend(m) => assert!(m.contains("vectors"), "{m}"),
+        e => panic!("unexpected {e}"),
+    }
+    assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+}
+
+#[test]
+fn busy_storm_recovers_after_drain() {
+    // Slow backend + tiny queue: hammer it, collect BUSYs, then verify
+    // the service is fully usable afterwards.
+    struct SlowBackend;
+    impl Backend for SlowBackend {
+        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+            std::thread::sleep(Duration::from_millis(30));
+            Ok(texts.iter().map(|_| vec![1.0]).collect())
+        }
+        fn describe(&self) -> String {
+            "slow".into()
+        }
+        fn max_batch(&self) -> usize {
+            2
+        }
+    }
+    let svc = Arc::new(service_with(
+        Box::new(|| Ok(Box::new(SlowBackend) as Box<dyn Backend>)),
+        2,
+    ));
+    let mut busy = 0;
+    let mut tickets = Vec::new();
+    for i in 0..50 {
+        match svc.submit(format!("storm {i}")) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Busy) => busy += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    assert!(busy >= 40, "storm should mostly reject (busy={busy})");
+    for t in tickets {
+        t.wait(Duration::from_secs(10)).unwrap();
+    }
+    // Recovered: a fresh query goes straight through.
+    assert!(svc.embed_blocking("after storm", Duration::from_secs(10)).is_ok());
+    assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+}
+
+#[test]
+fn failed_backend_init_degrades_to_errors_not_hangs() {
+    let svc = service_with(Box::new(|| anyhow::bail!("artifacts missing")), 8);
+    for i in 0..5 {
+        let err = svc
+            .embed_blocking(format!("doomed {i}"), Duration::from_secs(10))
+            .unwrap_err();
+        match err {
+            ServeError::Backend(m) => assert!(m.contains("backend init failed"), "{m}"),
+            e => panic!("unexpected {e}"),
+        }
+    }
+    assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+}

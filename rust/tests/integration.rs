@@ -1,0 +1,181 @@
+//! Cross-module integration tests: estimator + sim + coordinator + cost
+//! model composing the paper's §5.2 procedure end to end (no artifacts
+//! needed — these run on calibrated profiles).
+
+use windve::coordinator::queue_manager::{QueueManager, Route};
+use windve::costmodel;
+use windve::devices::profile::DeviceProfile;
+use windve::estimator::{estimate_depth, fine_tune_depths, stress_search};
+use windve::repro::{self, DevicePair};
+use windve::sim::cluster::ClosedLoopSim;
+use windve::sim::des::OpenLoopSim;
+use windve::workload::diurnal::DiurnalCurve;
+
+/// The full §5.2 pipeline: estimate → fine-tune → collaborative serving,
+/// for every device pair and both SLOs.
+#[test]
+fn full_calibration_pipeline_all_pairs() {
+    for pair in [
+        DevicePair::v100_xeon_bge(),
+        DevicePair::atlas_kunpeng_bge(),
+        DevicePair::v100_xeon_jina(),
+        DevicePair::atlas_kunpeng_jina(),
+    ] {
+        for slo in [1.0, 2.0] {
+            let (npu_depth, cpu_depth) = repro::calibrate_pair(&pair, slo, 75, 99);
+            assert!(npu_depth > 0, "{} must serve at {slo}s", pair.npu.name);
+            // Joint validation through the production queue manager.
+            let mut sim = ClosedLoopSim::new(
+                pair.npu.clone(),
+                Some(pair.cpu.clone()),
+                npu_depth,
+                cpu_depth,
+                75,
+                1,
+            );
+            sim.noisy = false;
+            let joint = sim.max_concurrency(slo, 1, npu_depth + cpu_depth + 8, 1);
+            assert_eq!(
+                joint,
+                npu_depth + cpu_depth,
+                "{}+{} @{slo}s joint capacity",
+                pair.npu.name,
+                pair.cpu.name
+            );
+        }
+    }
+}
+
+/// The theoretical §3.2 savings bound holds for every measured pair.
+#[test]
+fn savings_bound_respected_by_measurements() {
+    for pair in [DevicePair::v100_xeon_bge(), DevicePair::atlas_kunpeng_bge()] {
+        let slo = 1.0; // the bound's derivation assumes the α₁ regime
+        let c_npu = pair.npu.true_max_concurrency(slo, 75);
+        let c_cpu = pair.cpu.true_max_concurrency(slo, 75);
+        // Ineq. 19: C_CPU/C_NPU < α_NPU/α_CPU (α measured in the same
+        // low-concurrency regime the derivation uses).
+        let bound = costmodel::concurrency_gain_bound(pair.npu.alpha1, pair.cpu.alpha1);
+        let observed = c_cpu as f64 / c_npu as f64;
+        assert!(
+            observed <= bound + 0.05,
+            "{}: observed {observed:.3} vs bound {bound:.3}",
+            pair.npu.name
+        );
+    }
+}
+
+/// Estimator + stress + fine-tune agree within the stress step on clean
+/// devices (the paper's Table 3 claim).
+#[test]
+fn estimator_stress_finetune_triangle() {
+    let dev = DeviceProfile::v100_bge();
+    let slo = 1.0;
+    let mut sim1 = ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, 75, 5);
+    let est = estimate_depth(slo, &[1, 2, 4, 8, 16, 24, 32], |c| sim1.measure_latency(c, 3));
+    let mut sim2 = ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, 75, 6);
+    let stress = stress_search(slo, 8, 256, |c| sim2.measure_latency(c, 3));
+    let mut sim3 = ClosedLoopSim::new(dev.clone(), None, usize::MAX >> 1, 0, 75, 7);
+    sim3.noisy = false;
+    let tuned = fine_tune_depths(slo, est.predicted, 8, |c| sim3.measure_latency(c, 1));
+    assert!(
+        est.predicted.abs_diff(tuned) <= 8,
+        "LR {} vs tuned {tuned}",
+        est.predicted
+    );
+    assert!(
+        stress.max_concurrency.abs_diff(tuned) <= 8,
+        "stress {} vs tuned {tuned}",
+        stress.max_concurrency
+    );
+    assert_eq!(tuned, 44);
+}
+
+/// Queue conservation under a simulated stretch of diurnal traffic.
+#[test]
+fn open_loop_day_replay_conserves_queries() {
+    let curve = DiurnalCurve::typical(5.0, 4.0);
+    let peak = curve.peak_rate();
+    let arrivals = OpenLoopSim::poisson_arrivals(|h| curve.rate(h / 3600.0), peak, 600.0, 3);
+    let sim = OpenLoopSim {
+        npu: DeviceProfile::v100_bge(),
+        cpu: Some(DeviceProfile::xeon_e5_2690_bge()),
+        npu_depth: 44,
+        cpu_depth: 8,
+        qlen: 75,
+        slo: 1.0,
+        seed: 4,
+    };
+    let st = sim.run(&arrivals);
+    assert_eq!(st.arrived as usize, arrivals.len());
+    assert_eq!(st.served() + st.rejected, st.arrived);
+    assert!(st.served() > 0);
+}
+
+/// Offloading strictly reduces rejects under a burst (the system claim).
+#[test]
+fn offloading_reduces_rejects_under_burst() {
+    let burst: Vec<f64> = vec![0.0; 60];
+    let mk = |cpu: Option<DeviceProfile>, cpu_depth: usize| OpenLoopSim {
+        npu: DeviceProfile::v100_bge(),
+        cpu,
+        npu_depth: 44,
+        cpu_depth,
+        qlen: 75,
+        slo: 1.0,
+        seed: 5,
+    };
+    let b = mk(None, 0).run(&burst);
+    let w = mk(Some(DeviceProfile::xeon_e5_2690_bge()), 8).run(&burst);
+    assert!(w.rejected < b.rejected, "windve {} vs baseline {}", w.rejected, b.rejected);
+    assert_eq!(b.rejected - w.rejected, 8, "CPU queue absorbs exactly its depth");
+}
+
+/// Algorithm 1 + Algorithm 2 compose: detector decision drives manager
+/// construction.
+#[test]
+fn detector_decision_shapes_queue_manager() {
+    use windve::coordinator::{detect, Inventory};
+    // NPU + CPU, hetero on → two queues.
+    let d = detect(Inventory { npus: 1, cpus: 1 }, true);
+    let qm = QueueManager::new(4, 2, d.heter_enable);
+    assert_eq!(qm.dispatch(), Route::Npu);
+    for _ in 0..3 {
+        qm.dispatch();
+    }
+    assert_eq!(qm.dispatch(), Route::Cpu);
+    // CPU-only → hetero forced off; Algorithm 2 wins over the operator.
+    let d = detect(Inventory { npus: 0, cpus: 1 }, true);
+    assert!(!d.heter_enable);
+    let qm = QueueManager::new(4, 2, d.heter_enable);
+    for _ in 0..4 {
+        assert_ne!(qm.dispatch(), Route::Cpu);
+    }
+    assert_eq!(qm.dispatch(), Route::Busy);
+}
+
+/// Fig. 5 / Fig. 6 / Table 1 are mutually consistent at their shared
+/// anchor (75 tokens, 96 cores, 1 s SLO).
+#[test]
+fn cross_experiment_anchor_consistency() {
+    let t1 = repro::table1::run(13);
+    let f5 = repro::fig5::run(13);
+    let f6 = repro::fig6::run(13);
+    let t1_row = &t1[0]; // v100+xeon @1s
+    let f5_pt = f5.iter().find(|p| p.slo == 1.0 && p.qlen == 75).unwrap();
+    let f6_pt = f6.iter().find(|p| p.slo == 1.0 && p.cores == 96).unwrap();
+    assert_eq!(t1_row.baseline, f5_pt.original);
+    assert_eq!(t1_row.additional, f5_pt.additional);
+    assert_eq!(t1_row.additional, f6_pt.additional);
+}
+
+/// Eq. 11: a CPU too slow for even one query is excluded by calibration.
+#[test]
+fn eq11_unusable_cpu_calibrates_to_zero() {
+    let mut cpu = DeviceProfile::kunpeng_920_bge();
+    cpu.beta = 1.5; // single query violates the 1 s SLO
+    let pair = DevicePair { npu: DeviceProfile::atlas_300i_duo_bge(), cpu };
+    let (npu_depth, cpu_depth) = repro::calibrate_pair(&pair, 1.0, 75, 21);
+    assert!(npu_depth > 0);
+    assert_eq!(cpu_depth, 0, "unusable CPU must get a zero-depth queue");
+}

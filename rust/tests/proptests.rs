@@ -1,0 +1,361 @@
+//! Property-based tests (in-repo quickcheck-lite) over the coordinator
+//! invariants: routing, batching, admission state, plus the estimator and
+//! substrate laws the system leans on.
+
+use std::sync::Arc;
+
+use windve::coordinator::batcher::{DeviceQueue, Pending};
+use windve::coordinator::queue_manager::{QueueManager, Route};
+use windve::devices::profile::DeviceProfile;
+use windve::estimator::robust::theil_sen;
+use windve::estimator::LinearFit;
+use windve::metrics::Histogram;
+use windve::sim::cluster::ClosedLoopSim;
+use windve::testing::prop::{property, Gen};
+use windve::util::json::{self, Json};
+
+/// Every dispatched query gets exactly one route; occupancy never exceeds
+/// depth; total admitted == depth when demand exceeds capacity.
+#[test]
+fn prop_queue_manager_conservation_and_bounds() {
+    property("queue manager conservation", 200, |g: &mut Gen| {
+        let npu_depth = g.usize(0, 64);
+        let cpu_depth = g.usize(0, 32);
+        let hetero = g.bool();
+        let demand = g.usize(0, 160);
+        let qm = QueueManager::new(npu_depth, cpu_depth, hetero);
+        let mut counts = (0usize, 0usize, 0usize);
+        for _ in 0..demand {
+            match qm.dispatch() {
+                Route::Npu => counts.0 += 1,
+                Route::Cpu => counts.1 += 1,
+                Route::Busy => counts.2 += 1,
+            }
+            if qm.npu_occupancy() > npu_depth {
+                return Err(format!("npu occupancy {} > depth {npu_depth}", qm.npu_occupancy()));
+            }
+            if qm.cpu_occupancy() > if hetero { cpu_depth } else { 0 } {
+                return Err(format!("cpu occupancy {} over depth", qm.cpu_occupancy()));
+            }
+        }
+        if counts.0 + counts.1 + counts.2 != demand {
+            return Err("conservation violated".into());
+        }
+        let cpu_cap = if hetero { cpu_depth } else { 0 };
+        if counts.0 != demand.min(npu_depth) {
+            return Err(format!("npu admitted {} != min(demand, depth)", counts.0));
+        }
+        if counts.1 != demand.saturating_sub(npu_depth).min(cpu_cap) {
+            return Err(format!("cpu admitted {} wrong", counts.1));
+        }
+        Ok(())
+    });
+}
+
+/// Release always restores capacity: after any interleaving of dispatch
+/// and release, a drained manager admits again.
+#[test]
+fn prop_release_restores_capacity() {
+    property("release restores capacity", 100, |g: &mut Gen| {
+        let depth = g.usize(1, 16);
+        let qm = QueueManager::new(depth, 0, false);
+        let mut live: Vec<Route> = Vec::new();
+        for _ in 0..g.usize(1, 200) {
+            if g.bool() || live.is_empty() {
+                match qm.dispatch() {
+                    Route::Busy => {
+                        if live.len() != depth {
+                            return Err(format!(
+                                "busy with {} in flight (depth {depth})",
+                                live.len()
+                            ));
+                        }
+                    }
+                    r => live.push(r),
+                }
+            } else {
+                let r = live.pop().unwrap();
+                qm.release(r);
+            }
+        }
+        for r in live.drain(..) {
+            qm.release(r);
+        }
+        if qm.npu_occupancy() != 0 {
+            return Err("occupancy nonzero after full release".into());
+        }
+        if qm.dispatch() != Route::Npu {
+            return Err("drained manager must admit".into());
+        }
+        Ok(())
+    });
+}
+
+/// Batch drains preserve FIFO order, lose nothing, and never exceed max.
+#[test]
+fn prop_device_queue_fifo_conservation() {
+    property("device queue fifo conservation", 100, |g: &mut Gen| {
+        let q: DeviceQueue<usize> = DeviceQueue::new();
+        let n = g.usize(1, 200);
+        for i in 0..n {
+            q.push(Pending {
+                text: format!("q{i}"),
+                enqueued: std::time::Instant::now(),
+                reply: i,
+            });
+        }
+        let max = g.usize(1, 33);
+        let mut seen = Vec::new();
+        while !q.is_empty() {
+            let batch = q.drain_batch(max).unwrap();
+            if batch.is_empty() || batch.len() > max {
+                return Err(format!("batch size {} out of bounds", batch.len()));
+            }
+            seen.extend(batch.into_iter().map(|p| p.reply));
+        }
+        if seen != (0..n).collect::<Vec<_>>() {
+            return Err("FIFO order or conservation violated".into());
+        }
+        Ok(())
+    });
+}
+
+/// OLS recovers planted lines through noise; prediction respects slope.
+#[test]
+fn prop_linreg_recovers_planted_line() {
+    property("ols recovers planted line", 120, |g: &mut Gen| {
+        let alpha = g.f64(0.001, 0.2);
+        let beta = g.f64(0.0, 1.0);
+        let noise = g.f64(0.0, 0.01);
+        let n = g.usize(5, 40);
+        let mut rng = windve::util::rng::Pcg::new(g.u64(0, 1 << 60));
+        let pts: Vec<(f64, f64)> = (1..=n)
+            .map(|c| {
+                let t = alpha * c as f64 + beta;
+                (c as f64, t + noise * rng.normal())
+            })
+            .collect();
+        let fit = LinearFit::fit(&pts);
+        let rel = (fit.alpha - alpha).abs() / alpha;
+        if rel > 0.5 && (fit.alpha - alpha).abs() > 0.02 {
+            return Err(format!("alpha {} vs planted {alpha}", fit.alpha));
+        }
+        if fit.beta < 0.0 || fit.alpha < 0.0 {
+            return Err("constraint violated".into());
+        }
+        Ok(())
+    });
+}
+
+/// Theil-Sen survives up to ~25% outliers where planted.
+#[test]
+fn prop_theil_sen_outlier_robust() {
+    property("theil-sen outlier robust", 60, |g: &mut Gen| {
+        let alpha = g.f64(0.01, 0.1);
+        let beta = g.f64(0.1, 0.9);
+        let mut rng = windve::util::rng::Pcg::new(g.u64(0, 1 << 60));
+        // Exactly 5/24 gross outliers (~21%) — safely under Theil-Sen's
+        // ~29% breakdown point (Bernoulli sampling can exceed it by luck).
+        let mut outlier_at = [false; 25];
+        let mut placed = 0;
+        while placed < 5 {
+            let i = rng.usize(1, 25);
+            if !outlier_at[i] {
+                outlier_at[i] = true;
+                placed += 1;
+            }
+        }
+        let pts: Vec<(f64, f64)> = (1..=24)
+            .map(|c| {
+                let mut t = alpha * c as f64 + beta + 0.002 * rng.normal();
+                if outlier_at[c] {
+                    t *= 3.0; // gross outlier
+                }
+                (c as f64, t)
+            })
+            .collect();
+        let fit = theil_sen(&pts);
+        let rel = (fit.alpha - alpha).abs() / alpha;
+        if rel > 0.6 {
+            return Err(format!("alpha {} vs planted {alpha} (rel {rel:.2})", fit.alpha));
+        }
+        Ok(())
+    });
+}
+
+/// Histogram quantiles are monotone and bounded by min/max for any input.
+#[test]
+fn prop_histogram_quantiles_sane() {
+    property("histogram quantile sanity", 80, |g: &mut Gen| {
+        let h = Histogram::new();
+        let n = g.usize(1, 500);
+        let mut max = 0u64;
+        for _ in 0..n {
+            let v = g.u64(1, 10_000_000);
+            max = max.max(v);
+            h.record(v);
+        }
+        let mut prev = 0;
+        for i in 0..=20 {
+            let q = h.quantile(i as f64 / 20.0);
+            if q < prev {
+                return Err("quantiles not monotone".into());
+            }
+            prev = q;
+        }
+        if h.quantile(1.0) > max {
+            return Err("p100 exceeds max".into());
+        }
+        Ok(())
+    });
+}
+
+/// JSON round-trips arbitrary generated values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(g: &mut Gen, depth: usize) -> Json {
+        match g.usize(0, if depth == 0 { 4 } else { 6 }) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num((g.f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => Json::Str(g.sentence(4)),
+            4 => Json::Str(format!("esc\"{}\n\t", g.word())),
+            5 => Json::Arr((0..g.usize(0, 4)).map(|_| gen_value(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize(0, 4))
+                    .map(|i| (format!("k{i}"), gen_value(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    property("json roundtrip", 200, |g: &mut Gen| {
+        let v = gen_value(g, 3);
+        let s = v.to_string();
+        match json::parse(&s) {
+            Ok(v2) if v2 == v => Ok(()),
+            Ok(v2) => Err(format!("roundtrip drift: {v} -> {v2}")),
+            Err(e) => Err(format!("parse failed on {s}: {e}")),
+        }
+    });
+}
+
+/// Closed-loop sim: admitted batches never exceed depths, busy only when
+/// demand exceeds total depth (for any profile pair and client count).
+#[test]
+fn prop_sim_round_respects_depths() {
+    property("sim round respects depths", 150, |g: &mut Gen| {
+        let profiles = [
+            DeviceProfile::v100_bge(),
+            DeviceProfile::xeon_e5_2690_bge(),
+            DeviceProfile::atlas_300i_duo_bge(),
+            DeviceProfile::kunpeng_920_bge(),
+        ];
+        let npu = (*g.pick(&profiles)).clone();
+        let cpu = g.bool().then(|| (*g.pick(&profiles)).clone());
+        let npu_depth = g.usize(0, 100);
+        let cpu_depth = g.usize(0, 40);
+        let clients = g.usize(0, 200);
+        let mut sim = ClosedLoopSim::new(npu, cpu.clone(), npu_depth, cpu_depth, 75, g.u64(0, 1 << 40));
+        let r = sim.round(clients);
+        if r.npu_batch > npu_depth {
+            return Err("npu batch over depth".into());
+        }
+        let cpu_cap = if cpu.is_some() { cpu_depth } else { 0 };
+        if r.cpu_batch > cpu_cap {
+            return Err("cpu batch over depth".into());
+        }
+        if r.npu_batch + r.cpu_batch + r.busy != clients {
+            return Err("round conservation violated".into());
+        }
+        let cap = npu_depth + cpu_cap;
+        if clients <= cap && r.busy > 0 {
+            return Err("busy below capacity".into());
+        }
+        Ok(())
+    });
+}
+
+/// Profile service time is monotone in batch and query length for all
+/// registry devices (the assumption everything else rests on).
+#[test]
+fn prop_profiles_monotone() {
+    property("profiles monotone", 100, |g: &mut Gen| {
+        let names = ["v100", "xeon", "atlas", "kunpeng", "v100_jina", "kunpeng_jina"];
+        let p = DeviceProfile::by_name(names[g.usize(0, names.len())]).unwrap();
+        let b = g.usize(1, 300);
+        let l = g.usize(2, 512);
+        let t = p.service_time(b, l);
+        if p.service_time(b + 1, l) < t {
+            return Err("not monotone in batch".into());
+        }
+        if p.service_time(b, l + 16) < t {
+            return Err("not monotone in length".into());
+        }
+        if t <= 0.0 {
+            return Err("non-positive service time".into());
+        }
+        Ok(())
+    });
+}
+
+/// Worker pipeline: any mix of texts through the service yields exactly
+/// one reply per admitted query (conservation through threads).
+#[test]
+fn prop_service_reply_conservation() {
+    use windve::coordinator::instance::spawn_worker;
+    use windve::metrics::Registry;
+
+    struct CountBackend;
+    impl windve::devices::executor::Backend for CountBackend {
+        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+            Ok(texts.iter().map(|t| vec![t.len() as f32]).collect())
+        }
+        fn describe(&self) -> String {
+            "count".into()
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    property("service reply conservation", 20, |g: &mut Gen| {
+        let queue = Arc::new(DeviceQueue::new());
+        let qm = Arc::new(QueueManager::new(1024, 0, false));
+        let worker = spawn_worker(
+            "npu0".into(),
+            Arc::clone(&queue),
+            Arc::clone(&qm),
+            Route::Npu,
+            Box::new(|| Ok(Box::new(CountBackend) as Box<dyn windve::devices::executor::Backend>)),
+            Registry::new(),
+            None,
+        );
+        let n = g.usize(1, 60);
+        let mut rxs = Vec::new();
+        for i in 0..n {
+            qm.dispatch();
+            let (tx, rx) = std::sync::mpsc::channel();
+            queue.push(Pending {
+                text: format!("{}", "x".repeat(i % 17 + 1)),
+                enqueued: std::time::Instant::now(),
+                reply: tx,
+            });
+            rxs.push((i % 17 + 1, rx));
+        }
+        for (len, rx) in rxs {
+            let v = rx
+                .recv_timeout(std::time::Duration::from_secs(5))
+                .map_err(|e| format!("missing reply: {e}"))?
+                .map_err(|e| format!("backend err: {e}"))?;
+            if v != vec![len as f32] {
+                return Err(format!("reply mismatch: {v:?} vs {len}"));
+            }
+        }
+        queue.close();
+        worker.join().map_err(|_| "worker panicked".to_string())?;
+        if qm.npu_occupancy() != 0 {
+            return Err("slots leaked".into());
+        }
+        Ok(())
+    });
+}

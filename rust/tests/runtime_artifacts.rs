@@ -1,0 +1,190 @@
+//! Integration tests over the built AOT artifacts: the full
+//! python-AOT → HLO text → PJRT compile → execute path, checked against
+//! the golden outputs exported by `python/compile/aot.py`.
+//!
+//! Skipped (with a notice) when `artifacts/` has not been built — run
+//! `make artifacts` first.
+
+use std::path::PathBuf;
+
+use windve::runtime::{engine::cosine, tokenizer, EmbeddingEngine, Manifest};
+use windve::util::json::{self, Json};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn load_golden(dir: &PathBuf) -> Json {
+    let text = std::fs::read_to_string(dir.join("golden.json")).expect("golden.json");
+    json::parse(&text).expect("parse golden.json")
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(!m.models.is_empty());
+    for entry in &m.models {
+        assert!(entry.max_batch() >= 1);
+        for b in &entry.buckets {
+            assert!(dir.join(&b.file).exists(), "missing {}", b.file);
+        }
+        assert!(dir.join(&entry.weights_file).exists());
+    }
+}
+
+#[test]
+fn tokenizer_parity_with_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = load_golden(&dir);
+    let vocab = 8192u32;
+    for (word, expected) in golden.get("tokenizer_parity").unwrap().as_obj().unwrap() {
+        let got = tokenizer::word_id(word, vocab);
+        assert_eq!(
+            got as u64,
+            expected.as_u64().unwrap(),
+            "token id mismatch for word {word:?}"
+        );
+    }
+    // Full-text parity: re-encode the golden texts and compare ids+mask.
+    let seq = golden.get("seq").unwrap().as_usize().unwrap();
+    let texts = golden.get("texts").unwrap().as_arr().unwrap();
+    let ids = golden.get("token_ids").unwrap().as_arr().unwrap();
+    let masks = golden.get("mask").unwrap().as_arr().unwrap();
+    for ((t, id_row), mask_row) in texts.iter().zip(ids).zip(masks) {
+        let e = tokenizer::encode(t.as_str().unwrap(), vocab, seq);
+        let want_ids: Vec<i32> = id_row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        let want_mask: Vec<f32> = mask_row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(e.ids, want_ids, "ids for {:?}", t.as_str().unwrap());
+        assert_eq!(e.mask, want_mask);
+    }
+}
+
+#[test]
+fn golden_embeddings_match_jax() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden = load_golden(&dir);
+    let model = golden.get("model").unwrap().as_str().unwrap();
+    let texts: Vec<String> = golden
+        .get("texts")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_str().unwrap().to_string())
+        .collect();
+
+    let mut engine = EmbeddingEngine::load(&dir, model).unwrap();
+    let got = engine.embed(&texts).unwrap();
+
+    let want = golden.get("embeddings").unwrap().as_arr().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (row_got, row_want) in got.iter().zip(want) {
+        let row_want: Vec<f32> = row_want
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(row_got.len(), row_want.len());
+        for (a, b) in row_got.iter().zip(&row_want) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "embedding mismatch: rust={a} jax={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn embeddings_are_unit_norm_and_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = EmbeddingEngine::load(&dir, "bge_micro").unwrap();
+    let texts = vec![
+        "the quick brown fox".to_string(),
+        "jumps over the lazy dog".to_string(),
+    ];
+    let a = engine.embed(&texts).unwrap();
+    let b = engine.embed(&texts).unwrap();
+    assert_eq!(a, b, "same input must embed identically");
+    for row in &a {
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+    }
+}
+
+#[test]
+fn batch_equals_solo_embedding() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = EmbeddingEngine::load(&dir, "bge_micro").unwrap();
+    let texts: Vec<String> = (0..4).map(|i| format!("query number {i} about rag")).collect();
+    let batched = engine.embed(&texts).unwrap();
+    let solo = engine.embed(&texts[..1].to_vec()).unwrap();
+    for (a, b) in batched[0].iter().zip(&solo[0]) {
+        assert!((a - b).abs() < 1e-4, "batch vs solo drift: {a} vs {b}");
+    }
+}
+
+#[test]
+fn oversized_batch_chunks_transparently() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = EmbeddingEngine::load(&dir, "bge_micro").unwrap();
+    let n = engine.max_batch() * 2 + 3;
+    let texts: Vec<String> = (0..n).map(|i| format!("chunked query {i}")).collect();
+    let out = engine.embed(&texts).unwrap();
+    assert_eq!(out.len(), n);
+}
+
+#[test]
+fn long_text_truncates_to_max_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = EmbeddingEngine::load(&dir, "bge_micro").unwrap();
+    let long = (0..2000).map(|i| format!("tok{i}")).collect::<Vec<_>>().join(" ");
+    let out = engine.embed(&[long]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), engine.d_model());
+}
+
+#[test]
+fn same_tokens_same_vector_different_tokens_different_vector() {
+    // With random weights this is a *consistency* check (same tokens →
+    // same vector; different tokens → different vector), not semantics.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = EmbeddingEngine::load(&dir, "bge_micro").unwrap();
+    let out = engine
+        .embed(&[
+            "alpha beta gamma".to_string(),
+            "ALPHA beta; gamma!".to_string(), // same tokens after normalisation
+            "completely different words here".to_string(),
+        ])
+        .unwrap();
+    let same = cosine(&out[0], &out[1]);
+    let diff = cosine(&out[0], &out[2]);
+    assert!((same - 1.0).abs() < 1e-4, "identical token streams: {same}");
+    assert!(diff < 0.999, "different texts suspiciously identical: {diff}");
+}
+
+#[test]
+fn jina_model_also_serves() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = EmbeddingEngine::load(&dir, "jina_micro").unwrap();
+    let out = engine.embed(&["jina micro smoke".to_string()]).unwrap();
+    assert_eq!(out[0].len(), engine.d_model());
+    assert_eq!(engine.d_model(), 384);
+}

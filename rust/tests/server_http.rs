@@ -1,0 +1,178 @@
+//! HTTP front-end integration: a live server over a synthetic-backend
+//! service, exercised with a raw TCP client (no HTTP client crate).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use windve::coordinator::instance::BackendFactory;
+use windve::coordinator::{ServiceConfig, WindVE};
+use windve::devices::executor::{Backend, SyntheticBackend};
+use windve::devices::profile::DeviceProfile;
+use windve::server::Server;
+use windve::util::json;
+
+fn synth_factory(seed: u64) -> BackendFactory {
+    Box::new(move || {
+        let mut p = DeviceProfile::v100_bge();
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        Ok(Box::new(SyntheticBackend::new(p, 1e-6, seed)) as Box<dyn Backend>)
+    })
+}
+
+fn start_server(npu_depth: usize, cpu_depth: usize) -> (Server, Arc<WindVE>) {
+    let svc = Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth,
+                cpu_depth,
+                hetero: cpu_depth > 0,
+                npu_workers: 1,
+                cpu_workers: if cpu_depth > 0 { 1 } else { 0 },
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+            },
+            vec![synth_factory(1)],
+            if cpu_depth > 0 { vec![synth_factory(2)] } else { vec![] },
+        )
+        .unwrap(),
+    );
+    let server = Server::start("127.0.0.1:0", Arc::clone(&svc), Duration::from_secs(2)).unwrap();
+    (server, svc)
+}
+
+fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            format!(
+                "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut buf = String::new();
+    stream.read_to_string(&mut buf).unwrap();
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+#[test]
+fn healthz_responds_ok() {
+    let (server, _svc) = start_server(8, 4);
+    let (status, body) = request(server.addr(), "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert_eq!(json::parse(&body).unwrap().get("ok").unwrap().as_bool(), Some(true));
+    server.stop();
+}
+
+#[test]
+fn embed_endpoint_returns_vectors_and_routes() {
+    let (server, _svc) = start_server(8, 4);
+    let (status, body) = request(
+        server.addr(),
+        "POST",
+        "/v1/embed",
+        r#"{"texts":["hello world","second query"]}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    let emb = v.get("embeddings").unwrap().as_arr().unwrap();
+    assert_eq!(emb.len(), 2);
+    assert!(!emb[0].as_arr().unwrap().is_empty());
+    let routes = v.get("routes").unwrap().as_arr().unwrap();
+    assert_eq!(routes[0].as_str(), Some("NPU"));
+    server.stop();
+}
+
+#[test]
+fn single_text_form_accepted() {
+    let (server, _svc) = start_server(4, 0);
+    let (status, body) = request(server.addr(), "POST", "/v1/embed", r#"{"text":"solo"}"#);
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("embeddings").unwrap().as_arr().unwrap().len(), 1);
+    server.stop();
+}
+
+#[test]
+fn overload_returns_503_busy() {
+    // Depth 0: every submission is an Algorithm-1 BUSY.
+    let (server, _svc) = start_server(0, 0);
+    let (status, body) = request(server.addr(), "POST", "/v1/embed", r#"{"texts":["x"]}"#);
+    assert_eq!(status, 503, "{body}");
+    assert_eq!(
+        json::parse(&body).unwrap().get("error").unwrap().as_str(),
+        Some("busy")
+    );
+    server.stop();
+}
+
+#[test]
+fn malformed_json_is_400() {
+    let (server, _svc) = start_server(4, 0);
+    let (status, _) = request(server.addr(), "POST", "/v1/embed", "{not json");
+    assert_eq!(status, 400);
+    let (status, _) = request(server.addr(), "POST", "/v1/embed", r#"{"nope":1}"#);
+    assert_eq!(status, 400);
+    server.stop();
+}
+
+#[test]
+fn unknown_path_is_404() {
+    let (server, _svc) = start_server(4, 0);
+    let (status, _) = request(server.addr(), "GET", "/nope", "");
+    assert_eq!(status, 404);
+    server.stop();
+}
+
+#[test]
+fn stats_reflect_traffic() {
+    let (server, _svc) = start_server(8, 4);
+    let _ = request(server.addr(), "POST", "/v1/embed", r#"{"texts":["a","b"]}"#);
+    let (status, body) = request(server.addr(), "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("npu_depth").unwrap().as_u64(), Some(8));
+    assert!(v.get("routed_npu").unwrap().as_u64().unwrap() >= 2);
+    assert_eq!(v.get("hetero").unwrap().as_bool(), Some(true));
+    let (_, mbody) = request(server.addr(), "GET", "/metrics", "");
+    assert!(json::parse(&mbody).unwrap().get("service.accepted").is_some());
+    server.stop();
+}
+
+#[test]
+fn concurrent_http_clients() {
+    let (server, _svc) = start_server(32, 8);
+    let addr = server.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let (status, body) = request(
+                    addr,
+                    "POST",
+                    "/v1/embed",
+                    &format!(r#"{{"texts":["client {i} query"]}}"#),
+                );
+                assert!(status == 200 || status == 503, "{status} {body}");
+                status
+            })
+        })
+        .collect();
+    let ok = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .filter(|&s| s == 200)
+        .count();
+    assert!(ok >= 6, "most concurrent clients should succeed ({ok}/8)");
+    server.stop();
+}

@@ -1,0 +1,198 @@
+//! Service-level end-to-end tests over synthetic backends (fast, no
+//! artifacts): the paper's serving semantics through real threads.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use windve::coordinator::instance::BackendFactory;
+use windve::coordinator::service::ServeError;
+use windve::coordinator::{Route, ServiceConfig, WindVE};
+use windve::devices::executor::{Backend, SyntheticBackend};
+use windve::devices::profile::DeviceProfile;
+
+/// Synthetic factory at microsecond scale (ratios preserved).
+fn synth_factory(profile: DeviceProfile, seed: u64) -> BackendFactory {
+    Box::new(move || {
+        let mut p = profile.clone();
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        Ok(Box::new(SyntheticBackend::new(p, 1e-5, seed)) as Box<dyn Backend>)
+    })
+}
+
+fn windve_service(npu_depth: usize, cpu_depth: usize, hetero: bool) -> WindVE {
+    WindVE::start(
+        ServiceConfig {
+            npu_depth,
+            cpu_depth,
+            hetero,
+            npu_workers: 1,
+            cpu_workers: if hetero { 1 } else { 0 },
+            cpu_pin_cores: None,
+            cache_entries: 0,
+            cache_key_space: (8192, 128),
+        },
+        vec![synth_factory(DeviceProfile::v100_bge(), 1)],
+        if hetero {
+            vec![synth_factory(DeviceProfile::xeon_e5_2690_bge(), 2)]
+        } else {
+            vec![]
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn sustained_closed_loop_traffic_all_served() {
+    let svc = Arc::new(windve_service(44, 8, true));
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0u32;
+            for i in 0..50 {
+                match svc.embed_blocking(format!("{t}-{i} query text"), Duration::from_secs(10)) {
+                    Ok(v) => {
+                        assert!(!v.is_empty());
+                        ok += 1;
+                    }
+                    Err(ServeError::Busy) => {}
+                    Err(e) => panic!("unexpected: {e}"),
+                }
+            }
+            ok
+        }));
+    }
+    let total: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total >= 8 * 50 - 20, "served {total}");
+    let (rn, _rc, _busy) = svc.queue_manager().stats();
+    assert!(rn > 0);
+}
+
+#[test]
+fn peak_burst_spills_to_cpu_exactly_by_depth() {
+    let svc = windve_service(4, 3, true);
+    // Submit a burst of 10 without waiting: 4 NPU, 3 CPU, 3 busy.
+    let mut routes = Vec::new();
+    let mut tickets = Vec::new();
+    for i in 0..10 {
+        match svc.submit(format!("burst {i}")) {
+            Ok(t) => {
+                routes.push(t.route);
+                tickets.push(t);
+            }
+            Err(ServeError::Busy) => routes.push(Route::Busy),
+            Err(e) => panic!("{e}"),
+        }
+    }
+    assert_eq!(routes.iter().filter(|r| **r == Route::Npu).count(), 4);
+    assert_eq!(routes.iter().filter(|r| **r == Route::Cpu).count(), 3);
+    assert_eq!(routes.iter().filter(|r| **r == Route::Busy).count(), 3);
+    for t in tickets {
+        t.wait(Duration::from_secs(10)).unwrap();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn no_hetero_service_rejects_overflow_instead_of_cpu() {
+    let svc = windve_service(4, 8, false);
+    let mut busy = 0;
+    let mut tickets = Vec::new();
+    for i in 0..8 {
+        match svc.submit(format!("q{i}")) {
+            Ok(t) => {
+                assert_eq!(t.route, Route::Npu);
+                tickets.push(t);
+            }
+            Err(ServeError::Busy) => busy += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    assert_eq!(busy, 4);
+    for t in tickets {
+        t.wait(Duration::from_secs(10)).unwrap();
+    }
+}
+
+#[test]
+fn cpu_latency_exceeds_npu_latency_as_calibrated() {
+    // β_CPU > β_NPU must be visible through the served latencies.
+    let svc = windve_service(1, 1, true);
+    let t_npu = svc.submit("to npu").unwrap();
+    let t_cpu = svc.submit("to cpu").unwrap();
+    assert_eq!(t_npu.route, Route::Npu);
+    assert_eq!(t_cpu.route, Route::Cpu);
+    let t0 = std::time::Instant::now();
+    t_npu.wait(Duration::from_secs(10)).unwrap();
+    let npu_el = t0.elapsed();
+    t_cpu.wait(Duration::from_secs(10)).unwrap();
+    let cpu_el = t0.elapsed();
+    assert!(cpu_el >= npu_el, "CPU reply should not beat NPU reply");
+    svc.shutdown();
+}
+
+#[test]
+fn metrics_expose_per_route_latency() {
+    let svc = windve_service(2, 2, true);
+    for i in 0..4 {
+        let _ = svc.embed_blocking(format!("m{i}"), Duration::from_secs(10));
+    }
+    let snap = svc.metrics.snapshot();
+    let npu_hist = snap.get("service.e2e_npu_ns").expect("npu histogram present");
+    assert!(npu_hist.get("count").and_then(|v| v.as_u64()).unwrap_or(0) > 0);
+    assert_eq!(svc.metrics.counter("service.accepted").get(), 4);
+}
+
+#[test]
+fn shutdown_drains_cleanly_under_load() {
+    let svc = windve_service(16, 8, true);
+    let mut tickets = Vec::new();
+    for i in 0..12 {
+        if let Ok(t) = svc.submit(format!("drain {i}")) {
+            tickets.push(t);
+        }
+    }
+    // Shutdown must complete (queues closed, workers joined) without
+    // hanging even with queries in flight.
+    svc.shutdown();
+    // Replies either arrived before close or the channel disconnected.
+    for t in tickets {
+        match t.wait(Duration::from_secs(5)) {
+            Ok(_) | Err(ServeError::Shutdown) | Err(ServeError::Backend(_)) => {}
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+}
+
+#[test]
+fn cache_serves_repeats_without_queue_slots() {
+    // Depth 1 + cache: the first query fills the cache; repeats must be
+    // served even while the single slot is held by another query.
+    let svc = WindVE::start(
+        ServiceConfig {
+            npu_depth: 1,
+            cpu_depth: 0,
+            hetero: false,
+            npu_workers: 1,
+            cpu_workers: 0,
+            cpu_pin_cores: None,
+            cache_entries: 64,
+            cache_key_space: (8192, 128),
+        },
+        vec![synth_factory(DeviceProfile::v100_bge(), 3)],
+        vec![],
+    )
+    .unwrap();
+    let v1 = svc.embed_blocking("popular query", Duration::from_secs(10)).unwrap();
+    // Hold the only slot.
+    let _holder = svc.submit("slot holder").unwrap();
+    assert_eq!(svc.submit("anything else").unwrap_err(), ServeError::Busy);
+    // The cached repeat still succeeds, identical vector, no queue slot.
+    let v2 = svc.embed_blocking("popular query", Duration::from_secs(1)).unwrap();
+    assert_eq!(v1, v2);
+    assert_eq!(svc.metrics.counter("service.cache_hits").get(), 1);
+    // Token-normalised variant hits the same entry.
+    let v3 = svc.embed_blocking("POPULAR, query!", Duration::from_secs(1)).unwrap();
+    assert_eq!(v1, v3);
+}
