@@ -107,7 +107,8 @@ fn run_phase(
         h.join().unwrap();
     }
     let wall = t0.elapsed().as_secs_f64();
-    let (rn, rc, _rej) = svc.queue_manager().stats();
+    let stats = svc.queue_manager().stats();
+    let (rn, rc) = (stats.routed_npu, stats.routed_cpu);
     let served_n = served.load(Ordering::Relaxed);
     PhaseResult {
         name: name.to_string(),

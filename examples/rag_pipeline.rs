@@ -3,10 +3,13 @@
 //! motivates (vector embedding inside a RAG stack).
 //!
 //! Uses the real PJRT engine end to end: corpus embedding is batched
-//! through the same buckets the serving path uses, retrieval is a plain
-//! dot product over the unit-norm embeddings.
+//! through the same buckets the serving path uses, and retrieval runs on
+//! the vecstore's SIMD-dispatched batched scan ([`Index::search_batch`])
+//! — all queries share one sharded top-k pass instead of scanning the
+//! corpus once per query.
 
-use windve::runtime::{engine::cosine, EmbeddingEngine};
+use windve::runtime::EmbeddingEngine;
+use windve::vecstore::{kernels, FlatIndex, Index};
 
 const CORPUS: &[&str] = &[
     "WindVE offloads peak embedding queries from the NPU to host CPUs",
@@ -40,12 +43,17 @@ fn main() -> anyhow::Result<()> {
     // Index the corpus (one batched pass; engine chunks to its buckets).
     let docs: Vec<String> = CORPUS.iter().map(|s| s.to_string()).collect();
     let t0 = std::time::Instant::now();
-    let index = engine.embed(&docs)?;
+    let embedded = engine.embed(&docs)?;
+    let mut index = FlatIndex::new(embedded[0].len());
+    for (i, dv) in embedded.iter().enumerate() {
+        index.add(i as u64, dv);
+    }
     println!(
-        "indexed {} documents in {:?} ({:.1} docs/s)",
+        "indexed {} documents in {:?} ({:.1} docs/s, scan kernel: {})",
         docs.len(),
         t0.elapsed(),
-        docs.len() as f64 / t0.elapsed().as_secs_f64()
+        docs.len() as f64 / t0.elapsed().as_secs_f64(),
+        kernels::name()
     );
 
     let queries = [
@@ -54,17 +62,18 @@ fn main() -> anyhow::Result<()> {
         "numa and core pinning advice",
         "what does mean pooling do with padding",
     ];
-    for q in queries {
-        let qv = &engine.embed(&[q.to_string()])?[0];
-        let mut scored: Vec<(f32, &str)> = index
-            .iter()
-            .zip(CORPUS)
-            .map(|(dv, d)| (cosine(qv, dv), *d))
-            .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // Embed the whole query panel in one engine batch, then answer every
+    // query with a single batched top-k scan.
+    let texts: Vec<String> = queries.iter().map(|q| q.to_string()).collect();
+    let qvecs = engine.embed(&texts)?;
+    let qrefs: Vec<&[f32]> = qvecs.iter().map(|v| v.as_slice()).collect();
+    let t1 = std::time::Instant::now();
+    let results = index.search_batch(&qrefs, 3);
+    println!("batched retrieval of {} queries in {:?}", queries.len(), t1.elapsed());
+    for (q, hits) in queries.iter().zip(&results) {
         println!("\nquery: {q:?}");
-        for (score, doc) in scored.iter().take(3) {
-            println!("  {score:+.4}  {doc}");
+        for h in hits {
+            println!("  {:+.4}  {}", h.score, CORPUS[h.id as usize]);
         }
     }
     println!("\nrag_pipeline OK");

@@ -1,6 +1,6 @@
-//! L3 hot-path microbenchmarks (the §Perf baseline): queue-manager
-//! dispatch, batcher drain, tokenizer, histogram record, JSON encode,
-//! cost model, linear fit, closed-loop sim round.
+//! L3 hot-path microbenchmarks (the §Perf baseline): retrieval kernels,
+//! queue-manager dispatch, batcher drain, tokenizer, histogram record,
+//! JSON encode, cost model, linear fit, closed-loop sim round.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -14,9 +14,94 @@ use windve::metrics::Histogram;
 use windve::runtime::tokenizer;
 use windve::sim::cluster::ClosedLoopSim;
 use windve::util::json::{self, Json};
+use windve::util::rng::Pcg;
+use windve::vecstore::{kernels, FlatIndex, Index};
 use windve::workload::queries::QueryGen;
 
 fn main() {
+    section("vecstore kernels (dim 768)");
+    {
+        const DIM: usize = 768;
+        const ROWS: usize = 1024;
+        const NQ: usize = 8;
+        let mut rng = Pcg::new(42);
+        let mut randv = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal() as f32).collect() };
+        let rows = randv(ROWS * DIM);
+        let queries = randv(NQ * DIM);
+        let q0 = &queries[..DIM];
+        println!("dispatched kernel: {}", kernels::name());
+
+        bench("dot scalar (seed 4-lane)", || {
+            std::hint::black_box(kernels::dot_scalar(q0, &rows[..DIM]));
+        })
+        .report();
+        bench("dot dispatched (SIMD)", || {
+            std::hint::black_box(kernels::dot(q0, &rows[..DIM]));
+        })
+        .report();
+
+        // Full scans: ns/row so the three variants compare directly.
+        let mut out1 = vec![0.0f32; ROWS];
+        let scalar_scan = bench("scalar scan 1q x 1024 rows", || {
+            for (r, o) in out1.iter_mut().enumerate() {
+                *o = kernels::dot_scalar(q0, &rows[r * DIM..(r + 1) * DIM]);
+            }
+            std::hint::black_box(&out1);
+        });
+        scalar_scan.report();
+        let simd_scan = bench("SIMD scan 1q x 1024 rows", || {
+            kernels::scores_into(q0, &rows, ROWS, DIM, &mut out1);
+            std::hint::black_box(&out1);
+        });
+        simd_scan.report();
+        let mut out8 = vec![0.0f32; NQ * ROWS];
+        let panel_scan = bench("SIMD panel 8q x 1024 rows", || {
+            kernels::panel_scores_into(&queries, NQ, &rows, ROWS, DIM, &mut out8);
+            std::hint::black_box(&out8);
+        });
+        panel_scan.report();
+        let per_pair_scalar = scalar_scan.mean_ns / ROWS as f64;
+        let per_pair_simd = simd_scan.mean_ns / ROWS as f64;
+        let per_pair_panel = panel_scan.mean_ns / (NQ * ROWS) as f64;
+        println!(
+            "{:<44} scalar {:.1} / simd {:.1} / batched {:.1} ns per (q,row): {:.1}x and {:.1}x",
+            "per-pair speedup vs seed scalar",
+            per_pair_scalar,
+            per_pair_simd,
+            per_pair_panel,
+            per_pair_scalar / per_pair_simd,
+            per_pair_scalar / per_pair_panel
+        );
+    }
+
+    section("vecstore top-k + batched search");
+    {
+        let mut rng = Pcg::new(7);
+        let dim = 64;
+        let n = 4096;
+        let mut idx = FlatIndex::new(dim);
+        for i in 0..n {
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            idx.add(i as u64, &v);
+        }
+        let queries: Vec<Vec<f32>> = (0..16)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        bench("flat search k=10 (4096 x 64)", || {
+            std::hint::black_box(idx.search(&queries[0], 10));
+        })
+        .report();
+        bench("flat search_batch 16q k=10 (seq)", || {
+            std::hint::black_box(idx.search_batch_with_threads(&qrefs, 10, 1));
+        })
+        .report();
+        bench("flat search_batch 16q k=10 (4 shards)", || {
+            std::hint::black_box(idx.search_batch_with_threads(&qrefs, 10, 4));
+        })
+        .report();
+    }
+
     section("queue manager (Algorithm 1)");
     {
         let qm = QueueManager::new(44, 8, true);

@@ -1,0 +1,95 @@
+//! Retrieval throughput: the concurrent-query capacity the batched,
+//! SIMD-dispatched scan buys over the seed's one-query-at-a-time scalar
+//! path — the retrieval half of the paper's cost formula.
+//!
+//! Compares, on a dim-768 corpus (env-tunable):
+//! * per-query `search` (the seed serving pattern),
+//! * `search_batch` sequential (panel kernel, one thread),
+//! * `search_batch` sharded (panel kernel + scoped-thread scan),
+//! for FlatIndex, plus the IvfIndex probe path.
+//!
+//! Env knobs: `WINDVE_BENCH_ROWS` (default 16384), `WINDVE_BENCH_BATCH`
+//! (default 32), `WINDVE_SIMD=scalar` for a forced-scalar baseline run.
+
+use windve::benchkit::{bench_with, section};
+use windve::util::rng::Pcg;
+use windve::vecstore::{kernels, FlatIndex, Index, IvfIndex};
+
+const DIM: usize = 768;
+const K: usize = 10;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn unit(rng: &mut Pcg, d: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    v.iter_mut().for_each(|x| *x /= n);
+    v
+}
+
+/// Measure `f` with the shared benchkit harness and report it as
+/// queries/second given `queries_per_call` per invocation.
+fn qps<F: FnMut()>(name: &str, queries_per_call: usize, target_ms: u64, mut f: F) -> f64 {
+    let m = bench_with(name, target_ms, &mut f);
+    let rate = queries_per_call as f64 * 1e9 / m.mean_ns;
+    println!("{name:<52} {rate:>12.0} queries/s   (p99 call {:.2} ms)", m.p99_ns / 1e6);
+    rate
+}
+
+fn main() {
+    let rows = env_usize("WINDVE_BENCH_ROWS", 16384);
+    let batch = env_usize("WINDVE_BENCH_BATCH", 32);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "corpus {rows} x {DIM}, k={K}, batch={batch}, {threads} cores, kernel={}",
+        kernels::name()
+    );
+
+    let mut rng = Pcg::new(1);
+    let mut flat = FlatIndex::new(DIM);
+    let mut ivf = IvfIndex::new(DIM, 64, 8);
+    for i in 0..rows {
+        let v = unit(&mut rng, DIM);
+        flat.add(i as u64, &v);
+        ivf.add(i as u64, &v);
+    }
+    ivf.build(2);
+    let queries: Vec<Vec<f32>> = (0..batch).map(|_| unit(&mut rng, DIM)).collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+
+    section("flat (exact) retrieval throughput");
+    let per_query = qps("per-query search (seed pattern)", batch, 2000, || {
+        for q in &qrefs {
+            std::hint::black_box(flat.search(q, K));
+        }
+    });
+    let batched_seq = qps("search_batch, 1 shard (panel kernel)", batch, 2000, || {
+        std::hint::black_box(flat.search_batch_with_threads(&qrefs, K, 1));
+    });
+    let batched_par = qps("search_batch, auto shards", batch, 2000, || {
+        std::hint::black_box(flat.search_batch(&qrefs, K));
+    });
+    println!(
+        "{:<52} batch/seq {:.2}x, +shards {:.2}x",
+        "speedup vs per-query search",
+        batched_seq / per_query,
+        batched_par / per_query
+    );
+
+    section("ivf (nlist 64, nprobe 8) retrieval throughput");
+    let ivf_per_query = qps("per-query search", batch, 2000, || {
+        for q in &qrefs {
+            std::hint::black_box(ivf.search(q, K));
+        }
+    });
+    let ivf_batched = qps("search_batch (per-probe-list parallel)", batch, 2000, || {
+        std::hint::black_box(ivf.search_batch(&qrefs, K));
+    });
+    println!(
+        "{:<52} {:.2}x",
+        "speedup vs per-query search",
+        ivf_batched / ivf_per_query
+    );
+}

@@ -39,6 +39,18 @@ impl std::fmt::Display for Route {
     }
 }
 
+/// Dispatch/release counters (see [`QueueManager::stats`]). A named
+/// struct so new counters don't break existing destructuring call sites.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueueStats {
+    pub routed_npu: u64,
+    pub routed_cpu: u64,
+    pub rejected: u64,
+    /// Releases without a matching dispatch (see
+    /// [`QueueManager::release`]); 0 in a healthy service.
+    pub bad_releases: u64,
+}
+
 /// Bounded two-queue admission state.
 #[derive(Debug)]
 pub struct QueueManager {
@@ -51,6 +63,7 @@ pub struct QueueManager {
     routed_npu: AtomicU64,
     routed_cpu: AtomicU64,
     rejected: AtomicU64,
+    bad_releases: AtomicU64,
 }
 
 impl QueueManager {
@@ -66,6 +79,7 @@ impl QueueManager {
             routed_npu: AtomicU64::new(0),
             routed_cpu: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            bad_releases: AtomicU64::new(0),
         }
     }
 
@@ -86,14 +100,29 @@ impl QueueManager {
     }
 
     /// Return one slot. Must match a prior successful dispatch.
+    ///
+    /// Hardened against mismatched releases in release builds: the
+    /// decrement saturates at zero (a plain `fetch_sub` would wrap the
+    /// occupancy to `usize::MAX` and permanently wedge admission into
+    /// BUSY), and every mismatch is counted in [`QueueManager::stats`]
+    /// so operators can see the accounting bug instead of absorbing it.
     pub fn release(&self, route: Route) {
         let q = match route {
             Route::Npu => &self.npu_len,
             Route::Cpu => &self.cpu_len,
             Route::Busy => return,
         };
-        let prev = q.fetch_sub(1, Ordering::AcqRel);
-        debug_assert!(prev > 0, "release without matching dispatch");
+        let mut cur = q.load(Ordering::Acquire);
+        loop {
+            if cur == 0 {
+                self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            match q.compare_exchange_weak(cur, cur - 1, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
     }
 
     pub fn npu_occupancy(&self) -> usize {
@@ -121,12 +150,13 @@ impl QueueManager {
         self.npu_depth + self.cpu_depth
     }
 
-    pub fn stats(&self) -> (u64, u64, u64) {
-        (
-            self.routed_npu.load(Ordering::Relaxed),
-            self.routed_cpu.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-        )
+    pub fn stats(&self) -> QueueStats {
+        QueueStats {
+            routed_npu: self.routed_npu.load(Ordering::Relaxed),
+            routed_cpu: self.routed_cpu.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            bad_releases: self.bad_releases.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -192,7 +222,7 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(qm.dispatch(), Route::Busy);
         }
-        assert_eq!(qm.stats().2, 5);
+        assert_eq!(qm.stats().rejected, 5);
     }
 
     #[test]
@@ -201,7 +231,30 @@ mod tests {
         qm.dispatch();
         qm.dispatch();
         qm.dispatch();
-        assert_eq!(qm.stats(), (1, 1, 1));
+        assert_eq!(
+            qm.stats(),
+            QueueStats { routed_npu: 1, routed_cpu: 1, rejected: 1, bad_releases: 0 }
+        );
+    }
+
+    #[test]
+    fn mismatched_release_saturates_and_is_counted() {
+        let qm = QueueManager::new(2, 1, true);
+        // No dispatch yet: releases must not wrap occupancy below zero.
+        qm.release(Route::Npu);
+        qm.release(Route::Cpu);
+        assert_eq!(qm.npu_occupancy(), 0);
+        assert_eq!(qm.cpu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 2);
+        // Admission still works at full depth afterwards.
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Busy);
+        // Matched releases don't count as mismatches.
+        qm.release(Route::Npu);
+        assert_eq!(qm.stats().bad_releases, 2);
+        assert_eq!(qm.npu_occupancy(), 1);
     }
 
     #[test]

@@ -23,7 +23,9 @@ use super::batcher::{DeviceQueue, Pending};
 use super::cache::EmbeddingCache;
 use super::instance::{spawn_worker, BackendFactory, Reply};
 use super::queue_manager::{QueueManager, Route};
+use crate::devices::executor::RetrievalExecutor;
 use crate::metrics::Registry;
+use crate::vecstore::Hit;
 
 /// Why a request did not produce an embedding.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -122,6 +124,9 @@ pub struct WindVE {
     workers: Vec<JoinHandle<()>>,
     cache: Option<Arc<EmbeddingCache>>,
     cache_key_space: (u32, usize),
+    /// Attached post-start via [`WindVE::attach_retrieval`]; behind a
+    /// mutex so a shared (`Arc<WindVE>`) service can still be wired.
+    retrieval: std::sync::Mutex<Option<Arc<RetrievalExecutor>>>,
     pub metrics: Registry,
 }
 
@@ -187,8 +192,21 @@ impl WindVE {
             workers,
             cache,
             cache_key_space: cfg.cache_key_space,
+            retrieval: std::sync::Mutex::new(None),
             metrics,
         })
+    }
+
+    /// Attach the CPU-side retrieval executor (the vector index the
+    /// service answers retrieval queries against). Replaces any previous
+    /// attachment.
+    pub fn attach_retrieval(&self, exec: Arc<RetrievalExecutor>) {
+        *self.retrieval.lock().expect("retrieval lock poisoned") = Some(exec);
+    }
+
+    /// The attached retrieval executor, if any.
+    pub fn retrieval(&self) -> Option<Arc<RetrievalExecutor>> {
+        self.retrieval.lock().expect("retrieval lock poisoned").clone()
     }
 
     /// Admit and enqueue one query (Algorithm 1). Non-blocking.
@@ -208,6 +226,28 @@ impl WindVE {
         Ok(Ticket { route, rx, submitted: Instant::now() })
     }
 
+    /// Cache handle (cache + key) for `text`, if caching is enabled.
+    fn cache_entry(&self, text: &str) -> Option<(Arc<EmbeddingCache>, u64)> {
+        self.cache.as_ref().map(|c| {
+            let (vocab, max_len) = self.cache_key_space;
+            (Arc::clone(c), EmbeddingCache::key(text, vocab, max_len))
+        })
+    }
+
+    /// Cached embedding for `entry`, counting the hit.
+    fn cache_lookup(&self, entry: &Option<(Arc<EmbeddingCache>, u64)>) -> Option<Vec<f32>> {
+        let (cache, key) = entry.as_ref()?;
+        let v = cache.get(*key)?;
+        self.metrics.counter("service.cache_hits").inc();
+        Some(v)
+    }
+
+    fn cache_fill(entry: &Option<(Arc<EmbeddingCache>, u64)>, v: &[f32]) {
+        if let Some((cache, key)) = entry {
+            cache.put(*key, v.to_vec());
+        }
+    }
+
     /// Convenience: submit and wait. Consults the embedding cache first
     /// (a hit never touches the queue manager) and fills it on success.
     pub fn embed_blocking(
@@ -216,22 +256,16 @@ impl WindVE {
         timeout: Duration,
     ) -> Result<Vec<f32>, ServeError> {
         let text = text.into();
-        let cache_key = self.cache.as_ref().map(|c| {
-            let (vocab, max_len) = self.cache_key_space;
-            (Arc::clone(c), EmbeddingCache::key(&text, vocab, max_len))
-        });
-        if let Some((cache, key)) = &cache_key {
-            if let Some(v) = cache.get(*key) {
-                self.metrics.counter("service.cache_hits").inc();
-                return Ok(v);
-            }
+        let cache_key = self.cache_entry(&text);
+        if let Some(v) = self.cache_lookup(&cache_key) {
+            return Ok(v);
         }
         let ticket = self.submit(text)?;
         let route = ticket.route;
         let t0 = Instant::now();
         let out = ticket.wait(timeout);
-        if let (Some((cache, key)), Ok(v)) = (&cache_key, &out) {
-            cache.put(*key, v.clone());
+        if let Ok(v) = &out {
+            Self::cache_fill(&cache_key, v);
         }
         let h = match route {
             Route::Npu => self.metrics.histogram("service.e2e_npu_ns"),
@@ -239,6 +273,118 @@ impl WindVE {
             Route::Busy => unreachable!(),
         };
         h.record(t0.elapsed().as_nanos() as u64);
+        out
+    }
+
+    /// Admit a panel of queries in one pass (Algorithm 1 per query).
+    /// Each text gets its own admission verdict; accepted queries are
+    /// in flight concurrently, so waiting on the tickets afterwards
+    /// overlaps their service times instead of serializing them.
+    pub fn submit_batch(
+        &self,
+        texts: impl IntoIterator<Item = String>,
+    ) -> Vec<Result<Ticket, ServeError>> {
+        texts.into_iter().map(|t| self.submit(t)).collect()
+    }
+
+    /// Embed a panel of retrieval queries and answer all of them with
+    /// ONE batched top-k scan over the attached index (the paper's
+    /// Figure-1 RAG path). Queries the embedding stage rejects (BUSY) or
+    /// fails report their own error; the surviving panel still shares
+    /// the batched scan — this is how CPU-offloaded peak queries benefit
+    /// from the sharded SIMD kernels instead of scanning one by one.
+    pub fn retrieve_blocking(
+        &self,
+        queries: &[String],
+        k: usize,
+        timeout: Duration,
+    ) -> Vec<Result<Vec<Hit>, ServeError>> {
+        let exec = match self.retrieval() {
+            Some(e) => e,
+            None => {
+                return queries
+                    .iter()
+                    .map(|_| Err(ServeError::Backend("no retrieval index attached".into())))
+                    .collect()
+            }
+        };
+        // `checked_add`: huge timeouts (e.g. Duration::MAX as "no limit")
+        // must not panic the serving thread; None means unbounded below.
+        let deadline = Instant::now().checked_add(timeout);
+        let mut embeddings: Vec<Option<Vec<f32>>> = vec![None; queries.len()];
+        let mut failures: Vec<Option<ServeError>> = (0..queries.len()).map(|_| None).collect();
+
+        // Embedding stage: cache hits answer immediately, the rest are
+        // admitted in one pass and waited on together.
+        let mut tickets = Vec::new();
+        for (i, text) in queries.iter().enumerate() {
+            let cache_key = self.cache_entry(text);
+            if let Some(v) = self.cache_lookup(&cache_key) {
+                embeddings[i] = Some(v);
+                continue;
+            }
+            match self.submit(text.clone()) {
+                Ok(t) => tickets.push((i, t, cache_key)),
+                Err(e) => failures[i] = Some(e),
+            }
+        }
+        for (i, ticket, cache_key) in tickets {
+            let remain = match deadline {
+                Some(d) => d.saturating_duration_since(Instant::now()),
+                None => timeout,
+            };
+            match ticket.wait(remain) {
+                Ok(v) => {
+                    Self::cache_fill(&cache_key, &v);
+                    embeddings[i] = Some(v);
+                }
+                Err(e) => failures[i] = Some(e),
+            }
+        }
+
+        // Retrieval stage: one sharded scan for the whole surviving panel.
+        // A backend/index dimension mismatch is a deployment bug; report
+        // it per query instead of letting the index assert and panic the
+        // calling thread.
+        let index_dim = exec.dim();
+        let mut panel_idx = Vec::new();
+        let mut panel: Vec<&[f32]> = Vec::new();
+        for (i, e) in embeddings.iter().enumerate() {
+            if let Some(v) = e {
+                if v.len() != index_dim {
+                    failures[i] = Some(ServeError::Backend(format!(
+                        "embedding dim {} != index dim {index_dim}",
+                        v.len()
+                    )));
+                    continue;
+                }
+                panel_idx.push(i);
+                panel.push(v.as_slice());
+            }
+        }
+        // Nothing survived embedding (e.g. a full-BUSY burst): skip the
+        // scan so the latency histogram only records real scan work.
+        let mut hit_lists = if panel.is_empty() {
+            Vec::new()
+        } else {
+            let t0 = Instant::now();
+            let lists = exec.search_batch(&panel, k);
+            self.metrics
+                .histogram("service.retrieve_scan_ns")
+                .record(t0.elapsed().as_nanos() as u64);
+            self.metrics
+                .counter("service.retrievals")
+                .add(panel_idx.len() as u64);
+            lists
+        };
+
+        let mut out: Vec<Result<Vec<Hit>, ServeError>> = failures
+            .into_iter()
+            .map(|f| Err(f.unwrap_or(ServeError::Shutdown)))
+            .collect();
+        for (i, hits) in panel_idx.into_iter().zip(hit_lists.drain(..)) {
+            out[i] = Ok(hits);
+        }
         out
     }
 
@@ -403,6 +549,110 @@ mod tests {
         std::thread::sleep(Duration::from_millis(100));
         assert_eq!(svc.queue_manager().npu_occupancy(), 0);
         assert_eq!(svc.queue_manager().cpu_occupancy(), 0);
+    }
+
+    /// Deterministic text → unit-vector backend so retrieval tests can
+    /// assert exact nearest neighbours without PJRT artifacts.
+    fn pseudo_embedding(text: &str, d: usize) -> Vec<f32> {
+        let mut state = 0xcbf29ce484222325u64;
+        for b in text.bytes() {
+            state = (state ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let mut v: Vec<f32> = (0..d)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect();
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= norm);
+        v
+    }
+
+    struct HashBackend {
+        dim: usize,
+    }
+    impl Backend for HashBackend {
+        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+            Ok(texts.iter().map(|t| pseudo_embedding(t, self.dim)).collect())
+        }
+        fn describe(&self) -> String {
+            "hash".into()
+        }
+        fn max_batch(&self) -> usize {
+            16
+        }
+    }
+
+    #[test]
+    fn retrieve_blocking_serves_batched_topk() {
+        let dim = 16;
+        let svc = WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                npu_workers: 1,
+                cpu_workers: 1,
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+            },
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+        )
+        .unwrap();
+
+        // Without an index attached, retrieval reports a backend error.
+        let none = svc.retrieve_blocking(&["q".into()], 3, Duration::from_secs(5));
+        assert!(matches!(none[0], Err(ServeError::Backend(_))));
+
+        // Index a corpus under the same embedding the backend produces.
+        let docs: Vec<String> = (0..24).map(|i| format!("document number {i}")).collect();
+        let exec = Arc::new(crate::devices::executor::RetrievalExecutor::flat(dim));
+        for (i, d) in docs.iter().enumerate() {
+            exec.add(i as u64, &pseudo_embedding(d, dim));
+        }
+        svc.attach_retrieval(Arc::clone(&exec));
+        assert!(svc.retrieval().is_some());
+
+        // Each query is a corpus document: its own id must rank first,
+        // and the batched path must equal a direct index search.
+        let queries: Vec<String> = vec![docs[3].clone(), docs[17].clone(), docs[8].clone()];
+        let results = svc.retrieve_blocking(&queries, 4, Duration::from_secs(5));
+        assert_eq!(results.len(), 3);
+        for (q, r) in queries.iter().zip(&results) {
+            let hits = r.as_ref().expect("retrieval failed");
+            assert_eq!(hits.len(), 4);
+            let qv = pseudo_embedding(q, dim);
+            assert_eq!(hits, &exec.search(&qv, 4));
+            assert!((hits[0].score - 1.0).abs() < 1e-4);
+        }
+        assert_eq!(svc.metrics.counter("service.retrievals").get(), 3);
+
+        // Mis-sized index (deployment bug): a per-query error, not a panic.
+        svc.attach_retrieval(Arc::new(crate::devices::executor::RetrievalExecutor::flat(4)));
+        let bad = svc.retrieve_blocking(&queries, 2, Duration::from_secs(5));
+        for r in &bad {
+            match r {
+                Err(ServeError::Backend(m)) => assert!(m.contains("dim"), "{m}"),
+                other => panic!("expected dim-mismatch backend error, got {other:?}"),
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_batch_admits_per_query() {
+        let svc = small_service(1, 0, false);
+        let mut out = svc.submit_batch((0..3).map(|i| format!("q{i}")));
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok());
+        assert!(matches!(out[1], Err(ServeError::Busy)));
+        assert!(matches!(out[2], Err(ServeError::Busy)));
+        let t = out.remove(0).unwrap();
+        assert_eq!(t.wait(Duration::from_secs(5)).unwrap(), vec![1.0]);
+        svc.shutdown();
     }
 
     #[test]

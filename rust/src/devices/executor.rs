@@ -13,6 +13,7 @@
 //!   DESIGN.md §2) and by tests that must not depend on built artifacts.
 
 use std::path::PathBuf;
+use std::sync::RwLock;
 use std::time::Duration;
 
 use anyhow::Result;
@@ -20,6 +21,7 @@ use anyhow::Result;
 use super::profile::DeviceProfile;
 use crate::runtime::{tokenizer, EmbeddingEngine};
 use crate::util::rng::Pcg;
+use crate::vecstore::{FlatIndex, Hit, Index};
 
 /// A batch embedding executor owned by one worker instance.
 pub trait Backend {
@@ -119,6 +121,60 @@ impl Backend for SyntheticBackend {
     }
 }
 
+/// CPU-side batch retrieval executor: owns the vector index the service
+/// scans, behind a `RwLock` so concurrent front-end threads share read
+/// scans while corpus writers take the lock exclusively.
+///
+/// This is where CPU-offloaded peak queries converge: the service's
+/// retrieval path collects a panel of embedded queries (whether they were
+/// embedded on the NPU queue or the CPU overflow queue) and drives one
+/// [`Index::search_batch`] call, which shards the scan across host cores
+/// on the SIMD kernels instead of paying one sequential scan per query.
+pub struct RetrievalExecutor {
+    index: RwLock<Box<dyn Index + Send + Sync>>,
+}
+
+impl RetrievalExecutor {
+    pub fn new(index: Box<dyn Index + Send + Sync>) -> RetrievalExecutor {
+        RetrievalExecutor { index: RwLock::new(index) }
+    }
+
+    /// Convenience: an empty exact (flat) index of `dim`.
+    pub fn flat(dim: usize) -> RetrievalExecutor {
+        RetrievalExecutor::new(Box::new(FlatIndex::new(dim)))
+    }
+
+    /// Add one corpus vector (exclusive lock; cheap relative to scans).
+    pub fn add(&self, id: u64, vector: &[f32]) {
+        self.index.write().expect("index lock poisoned").add(id, vector);
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.read().expect("index lock poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.index.read().expect("index lock poisoned").dim()
+    }
+
+    /// Single-query top-k (shared lock).
+    pub fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        self.index.read().expect("index lock poisoned").search(query, k)
+    }
+
+    /// Batched top-k over a query panel (shared lock, sharded scan).
+    pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        self.index
+            .read()
+            .expect("index lock poisoned")
+            .search_batch(queries, k)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,6 +205,31 @@ mod tests {
         assert_eq!(a, c);
         let d = b.embed(&["different".into()]).unwrap();
         assert_ne!(a, d);
+    }
+
+    #[test]
+    fn retrieval_executor_batch_matches_single() {
+        let ex = RetrievalExecutor::flat(4);
+        assert!(ex.is_empty());
+        for i in 0..32u64 {
+            let a = (i as f32) * 0.1;
+            let v = [a.cos(), a.sin(), 0.0, 0.0];
+            ex.add(i, &v);
+        }
+        assert_eq!(ex.len(), 32);
+        assert_eq!(ex.dim(), 4);
+        let queries: Vec<[f32; 4]> = (0..5)
+            .map(|i| {
+                let a = (i as f32) * 0.7;
+                [a.cos(), a.sin(), 0.0, 0.0]
+            })
+            .collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let batch = ex.search_batch(&qrefs, 3);
+        assert_eq!(batch.len(), 5);
+        for (q, got) in qrefs.iter().zip(&batch) {
+            assert_eq!(got, &ex.search(q, 3));
+        }
     }
 
     #[test]

@@ -110,16 +110,17 @@ fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
         ("GET", "/metrics") => Response::ok_json(svc.metrics.snapshot()),
         ("GET", "/stats") => {
             let qm = svc.queue_manager();
-            let (npu, cpu, busy) = qm.stats();
+            let stats = qm.stats();
             Response::ok_json(Json::obj(vec![
                 ("npu_depth", Json::num(qm.npu_depth() as f64)),
                 ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
                 ("npu_occupancy", Json::num(qm.npu_occupancy() as f64)),
                 ("cpu_occupancy", Json::num(qm.cpu_occupancy() as f64)),
                 ("hetero", Json::Bool(qm.hetero())),
-                ("routed_npu", Json::num(npu as f64)),
-                ("routed_cpu", Json::num(cpu as f64)),
-                ("rejected", Json::num(busy as f64)),
+                ("routed_npu", Json::num(stats.routed_npu as f64)),
+                ("routed_cpu", Json::num(stats.routed_cpu as f64)),
+                ("rejected", Json::num(stats.rejected as f64)),
+                ("bad_releases", Json::num(stats.bad_releases as f64)),
             ]))
         }
         ("POST", "/v1/embed") => embed_endpoint(req, svc, slo),

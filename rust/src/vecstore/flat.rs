@@ -1,6 +1,19 @@
 //! Exact brute-force index: contiguous row-major storage, linear scan.
+//!
+//! Scans run on the dispatched SIMD kernels ([`super::kernels`]); the
+//! batched path tiles rows into cache-resident blocks, scores the whole
+//! query panel per block, and shards disjoint row ranges across scoped
+//! threads with a deterministic per-query top-k merge.
 
-use super::{dot, Hit, Index, TopK};
+use super::{kernels, Hit, Index, TopK};
+
+/// Row tile per kernel call: 64 rows × 768 dims × 4 B ≈ 192 KiB stays
+/// L2-resident while the query panel sweeps it.
+const SCAN_BLOCK_ROWS: usize = 64;
+
+/// Below this many rows per shard, thread spawn/merge overhead beats the
+/// scan itself — stay sequential.
+const MIN_ROWS_PER_SHARD: usize = 2048;
 
 /// Flat (exact) inner-product index.
 pub struct FlatIndex {
@@ -18,6 +31,86 @@ impl FlatIndex {
     pub fn vector(&self, row: usize) -> &[f32] {
         &self.data[row * self.dim..(row + 1) * self.dim]
     }
+
+    /// Shard count for a parallel scan over `rows` rows.
+    fn auto_shards(rows: usize) -> usize {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        avail.min(rows / MIN_ROWS_PER_SHARD).max(1)
+    }
+
+    /// Batched search with an explicit shard count (1 = sequential).
+    /// Results are identical to per-query [`Index::search`].
+    pub fn search_batch_with_threads(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        threads: usize,
+    ) -> Vec<Vec<Hit>> {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "dimension mismatch");
+        }
+        let nq = queries.len();
+        let n = self.ids.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        if n == 0 {
+            return vec![Vec::new(); nq];
+        }
+        // Contiguous query panel for the blocked kernel.
+        let mut qbuf = Vec::with_capacity(nq * self.dim);
+        for q in queries {
+            qbuf.extend_from_slice(q);
+        }
+        let threads = threads.max(1).min(n);
+        if threads == 1 {
+            let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+            let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
+            self.scan_rows(&qbuf, nq, 0, n, &mut tks, &mut scores);
+            return tks.into_iter().map(TopK::into_vec).collect();
+        }
+        let rows_per = n / threads + usize::from(n % threads != 0);
+        let finals = super::parallel_topk_scan(threads, nq, k, |t, tks| {
+            let lo = t * rows_per;
+            let hi = ((t + 1) * rows_per).min(n);
+            if lo < hi {
+                let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
+                self.scan_rows(&qbuf, nq, lo, hi, tks, &mut scores);
+            }
+        });
+        finals.into_iter().map(TopK::into_vec).collect()
+    }
+
+    /// Score rows `[lo, hi)` against the query panel, block by block,
+    /// pushing into one TopK per query with the global row index as the
+    /// tie-break sequence number. `scores` is caller-provided scratch of
+    /// at least `nq * SCAN_BLOCK_ROWS` (so the single-query hot path can
+    /// use a stack buffer instead of allocating per search).
+    fn scan_rows(
+        &self,
+        qbuf: &[f32],
+        nq: usize,
+        lo: usize,
+        hi: usize,
+        tks: &mut [TopK],
+        scores: &mut [f32],
+    ) {
+        let dim = self.dim;
+        debug_assert!(scores.len() >= nq * SCAN_BLOCK_ROWS);
+        let mut r0 = lo;
+        while r0 < hi {
+            let r1 = (r0 + SCAN_BLOCK_ROWS).min(hi);
+            let nr = r1 - r0;
+            let rows = &self.data[r0 * dim..r1 * dim];
+            kernels::panel_scores_into(qbuf, nq, rows, nr, dim, &mut scores[..nq * nr]);
+            for (qi, tk) in tks.iter_mut().enumerate() {
+                for r in 0..nr {
+                    tk.push_with_seq(self.ids[r0 + r], scores[qi * nr + r], (r0 + r) as u64);
+                }
+            }
+            r0 = r1;
+        }
+    }
 }
 
 impl Index for FlatIndex {
@@ -30,10 +123,14 @@ impl Index for FlatIndex {
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
         assert_eq!(query.len(), self.dim, "dimension mismatch");
         let mut tk = TopK::new(k);
-        for (row, &id) in self.ids.iter().enumerate() {
-            tk.push(id, dot(query, self.vector(row)));
-        }
+        // Stack scratch: the single-query request path allocates nothing.
+        let mut scores = [0.0f32; SCAN_BLOCK_ROWS];
+        self.scan_rows(query, 1, 0, self.ids.len(), std::slice::from_mut(&mut tk), &mut scores);
         tk.into_vec()
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        self.search_batch_with_threads(queries, k, Self::auto_shards(self.ids.len()))
     }
 
     fn len(&self) -> usize {
@@ -100,5 +197,52 @@ mod tests {
     fn wrong_dim_panics() {
         let mut idx = FlatIndex::new(4);
         idx.add(1, &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn search_batch_matches_per_query_search() {
+        let mut rng = Pcg::new(3);
+        let dim = 48; // not a multiple of the SIMD block
+        let mut idx = FlatIndex::new(dim);
+        for i in 0..500 {
+            idx.add(i, &unit(&mut rng, dim));
+        }
+        let queries: Vec<Vec<f32>> = (0..9).map(|_| unit(&mut rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        // Forced multi-shard, auto, and sequential must all agree.
+        for variant in [
+            idx.search_batch_with_threads(&qrefs, 7, 4),
+            idx.search_batch_with_threads(&qrefs, 7, 1),
+            idx.search_batch(&qrefs, 7),
+        ] {
+            assert_eq!(variant.len(), queries.len());
+            for (q, got) in queries.iter().zip(&variant) {
+                assert_eq!(got, &idx.search(q, 7));
+            }
+        }
+    }
+
+    #[test]
+    fn search_batch_duplicate_rows_tie_break_is_row_order() {
+        // Duplicate vectors ⇒ equal scores; both paths must keep the
+        // first-inserted (lowest row) ids, in insertion order.
+        let v = [0.6f32, 0.8, 0.0, 0.0];
+        let mut idx = FlatIndex::new(4);
+        for i in 0..20 {
+            idx.add(100 + i, &v);
+        }
+        let hits = idx.search(&v, 5);
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![100, 101, 102, 103, 104]);
+        let batch = idx.search_batch_with_threads(&[&v], 5, 3);
+        assert_eq!(batch[0], hits);
+    }
+
+    #[test]
+    fn search_batch_empty_inputs() {
+        let idx = FlatIndex::new(8);
+        assert!(idx.search_batch(&[], 3).is_empty());
+        let q = [0.0f32; 8];
+        let r = idx.search_batch(&[&q], 3);
+        assert_eq!(r, vec![Vec::new()]);
     }
 }

@@ -2,9 +2,18 @@
 //!
 //! Build: train centroids over the (buffered) corpus, bucket each vector
 //! into its nearest cell. Search: score the `nprobe` nearest cells only.
+//!
+//! The batched path ranks every query's cells against the contiguous
+//! centroid matrix with one panel-kernel call, then fans the resulting
+//! (query, probe-list) tasks out across scoped threads; per-list scan
+//! results merge through sequence-numbered top-k so the output is
+//! identical to per-query [`Index::search`].
 
 use super::kmeans;
-use super::{dot, Hit, Index, TopK};
+use super::{dot, kernels, Hit, Index, TopK};
+
+/// Don't spin up probe threads for less scan work than this many rows.
+const MIN_PROBED_ROWS_PARALLEL: usize = 4096;
 
 /// IVF-Flat index. Vectors are buffered until [`IvfIndex::build`]; before
 /// that, search falls back to exact scan over the buffer.
@@ -18,6 +27,14 @@ pub struct IvfIndex {
     lists: Vec<Vec<(u64, Vec<f32>)>>,
     built: bool,
     len: usize,
+}
+
+/// One unit of batched scan work: probe `cell` for query `qi`, with the
+/// query's cumulative row offset for deterministic tie-breaking.
+struct Probe {
+    qi: usize,
+    cell: usize,
+    seq_base: u64,
 }
 
 impl IvfIndex {
@@ -63,6 +80,24 @@ impl IvfIndex {
     pub fn list_sizes(&self) -> Vec<usize> {
         self.lists.iter().map(|l| l.len()).collect()
     }
+
+    /// Rank cells for `query` (best first). Centroid scores come from the
+    /// same kernel math the batched path uses.
+    fn ranked_cells(&self, query: &[f32]) -> Vec<(usize, f32)> {
+        let ncells = self.lists.len();
+        let mut cell_scores: Vec<(usize, f32)> = (0..ncells)
+            .map(|c| (c, dot(query, &self.centroids[c * self.dim..(c + 1) * self.dim])))
+            .collect();
+        cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        cell_scores
+    }
+
+    /// Scan one inverted list for one query.
+    fn scan_list(&self, query: &[f32], probe: &Probe, tk: &mut TopK) {
+        for (off, (id, v)) in self.lists[probe.cell].iter().enumerate() {
+            tk.push_with_seq(*id, dot(query, v), probe.seq_base + off as u64);
+        }
+    }
 }
 
 impl Index for IvfIndex {
@@ -87,17 +122,76 @@ impl Index for IvfIndex {
             return tk.into_vec();
         }
         // Rank cells by centroid similarity, probe the top nprobe.
-        let ncells = self.lists.len();
-        let mut cell_scores: Vec<(usize, f32)> = (0..ncells)
-            .map(|c| (c, dot(query, &self.centroids[c * self.dim..(c + 1) * self.dim])))
-            .collect();
-        cell_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        for &(c, _) in cell_scores.iter().take(self.nprobe) {
+        for &(c, _) in self.ranked_cells(query).iter().take(self.nprobe) {
             for (id, v) in &self.lists[c] {
                 tk.push(*id, dot(query, v));
             }
         }
         tk.into_vec()
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "dimension mismatch");
+        }
+        let nq = queries.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        if !self.built {
+            return queries.iter().map(|q| self.search(q, k)).collect();
+        }
+        let ncells = self.lists.len();
+        // Rank all queries' cells in one panel-kernel pass over the
+        // contiguous centroid matrix (same math as `ranked_cells`).
+        let mut qbuf = Vec::with_capacity(nq * self.dim);
+        for q in queries {
+            qbuf.extend_from_slice(q);
+        }
+        let mut cscores = vec![0.0f32; nq * ncells];
+        kernels::panel_scores_into(&qbuf, nq, &self.centroids, ncells, self.dim, &mut cscores);
+
+        let mut probes: Vec<Probe> = Vec::with_capacity(nq * self.nprobe);
+        let mut probed_rows = 0usize;
+        for qi in 0..nq {
+            let mut ranked: Vec<(usize, f32)> =
+                (0..ncells).map(|c| (c, cscores[qi * ncells + c])).collect();
+            ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut seq_base = 0u64;
+            for &(cell, _) in ranked.iter().take(self.nprobe) {
+                let rows = self.lists[cell].len();
+                probes.push(Probe { qi, cell, seq_base });
+                seq_base += rows as u64;
+                probed_rows += rows;
+            }
+        }
+
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = if probed_rows < MIN_PROBED_ROWS_PARALLEL {
+            1
+        } else {
+            avail.min(probes.len()).max(1)
+        };
+
+        if threads == 1 {
+            let mut finals: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+            for p in &probes {
+                self.scan_list(queries[p.qi], p, &mut finals[p.qi]);
+            }
+            return finals.into_iter().map(TopK::into_vec).collect();
+        }
+
+        // Per-probe-list parallelism: stripe the task list over threads;
+        // each thread keeps its own per-query TopK, merged afterwards.
+        let finals = super::parallel_topk_scan(threads, nq, k, |t, tks| {
+            let mut i = t;
+            while i < probes.len() {
+                let p = &probes[i];
+                self.scan_list(queries[p.qi], p, &mut tks[p.qi]);
+                i += threads;
+            }
+        });
+        finals.into_iter().map(TopK::into_vec).collect()
     }
 
     fn len(&self) -> usize {
@@ -214,5 +308,38 @@ mod tests {
         }
         ivf.build(1);
         assert_eq!(ivf.list_sizes().iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn search_batch_matches_per_query_search() {
+        let vs = corpus(400, 24, 12);
+        for nprobe in [1usize, 3, 8] {
+            let mut ivf = IvfIndex::new(24, 8, nprobe);
+            for (i, v) in vs.iter().enumerate() {
+                ivf.add(i as u64, v);
+            }
+            ivf.build(13);
+            let mut rng = Pcg::new(21);
+            let queries: Vec<Vec<f32>> = (0..7).map(|_| unit(&mut rng, 24)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = ivf.search_batch(&qrefs, 6);
+            for (q, got) in queries.iter().zip(&batch) {
+                assert_eq!(got, &ivf.search(q, 6), "nprobe={nprobe}");
+            }
+        }
+    }
+
+    #[test]
+    fn search_batch_unbuilt_matches_search() {
+        let vs = corpus(60, 12, 14);
+        let mut ivf = IvfIndex::new(12, 4, 2);
+        for (i, v) in vs.iter().enumerate() {
+            ivf.add(i as u64, v);
+        }
+        let qrefs: Vec<&[f32]> = vs[..4].iter().map(|q| q.as_slice()).collect();
+        let batch = ivf.search_batch(&qrefs, 3);
+        for (q, got) in qrefs.iter().zip(&batch) {
+            assert_eq!(got, &ivf.search(q, 3));
+        }
     }
 }

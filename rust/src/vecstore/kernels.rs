@@ -1,0 +1,494 @@
+//! Runtime-dispatched similarity kernels — the innermost loop of retrieval.
+//!
+//! # Dispatch strategy
+//!
+//! The CPU's vector ISA is probed **once** (first call) and the verdict is
+//! cached in a process-wide atomic, so the hot path pays one relaxed load
+//! per kernel call instead of a `cpuid` per dot product:
+//!
+//! * x86_64 with AVX2+FMA → 8-lane fused-multiply-add kernels
+//!   (`std::arch::x86_64`), detected via `is_x86_feature_detected!`.
+//! * aarch64 with NEON → 4-lane `vfmaq_f32` kernels
+//!   (`std::arch::aarch64`).
+//! * anything else → the portable 4-accumulator scalar loop the seed
+//!   shipped ([`dot_scalar`]).
+//!
+//! `WINDVE_SIMD=scalar|avx2|neon|auto` overrides detection (ops escape
+//! hatch and the lever the benches use for baselines). A forced variant the
+//! CPU cannot run falls back to scalar rather than faulting.
+//!
+//! # Determinism across batch shapes (per variant)
+//!
+//! Within one dispatched variant, every code path computes a given
+//! (query, row) pair with the **same floating-point evaluation order**:
+//! one accumulator per query, row-major chunks in ascending order,
+//! horizontal sum, then a scalar tail. The multi-query panel kernel
+//! ([`panel_scores_into`]) keeps one independent accumulator chain per
+//! query, so batching queries changes *bandwidth*, never *values*:
+//! `search_batch` returns bit-identical scores to per-query `search`
+//! under the same dispatched variant.
+//!
+//! **Across variants** (scalar vs AVX2 vs NEON) the summation order
+//! differs — scalar interleaves 4 width-1 accumulators, SIMD reduces
+//! 8/4 lanes — so scores agree only to floating-point reassociation
+//! error (~1e-4 relative on unit vectors; see the property tests). Do
+//! not assert bit-equality between runs with different `WINDVE_SIMD`
+//! settings or on different CPUs.
+//!
+//! # The panel micro-kernel
+//!
+//! [`panel_scores_into`] scores a panel of up to [`PANEL_QUERIES`] queries
+//! against a tile of rows in one pass. Each row chunk is loaded once and
+//! fed to all accumulators in the panel, cutting row-matrix bandwidth by
+//! the panel width and giving the FMA units independent dependency chains
+//! to hide latency behind — the cache-blocking half of the win is done by
+//! the callers in `flat.rs`/`ivf.rs`, which tile rows so a tile stays
+//! cache-resident across panels.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Queries scored per panel pass (bounded by architectural registers:
+/// 4 accumulators + row vector + query vector stay in-register on both
+/// AVX2 and NEON).
+pub const PANEL_QUERIES: usize = 4;
+
+/// The kernel variant selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Simd {
+    /// Portable 4-accumulator scalar loop.
+    Scalar,
+    /// x86_64 AVX2 + FMA, 8 f32 lanes.
+    Avx2Fma,
+    /// aarch64 NEON, 4 f32 lanes.
+    Neon,
+}
+
+impl Simd {
+    pub fn name(self) -> &'static str {
+        match self {
+            Simd::Scalar => "scalar",
+            Simd::Avx2Fma => "avx2+fma",
+            Simd::Neon => "neon",
+        }
+    }
+}
+
+const K_UNINIT: u8 = 0;
+const K_SCALAR: u8 = 1;
+const K_AVX2: u8 = 2;
+const K_NEON: u8 = 3;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(K_UNINIT);
+
+/// The dispatched variant (detected once, then cached).
+pub fn active() -> Simd {
+    match ACTIVE.load(Ordering::Relaxed) {
+        K_SCALAR => Simd::Scalar,
+        K_AVX2 => Simd::Avx2Fma,
+        K_NEON => Simd::Neon,
+        _ => {
+            let k = detect();
+            let code = match k {
+                Simd::Scalar => K_SCALAR,
+                Simd::Avx2Fma => K_AVX2,
+                Simd::Neon => K_NEON,
+            };
+            ACTIVE.store(code, Ordering::Relaxed);
+            k
+        }
+    }
+}
+
+/// Human-readable name of the dispatched variant (for logs and benches).
+pub fn name() -> &'static str {
+    active().name()
+}
+
+fn detect() -> Simd {
+    let forced = std::env::var("WINDVE_SIMD").unwrap_or_default();
+    match forced.as_str() {
+        "scalar" => return Simd::Scalar,
+        "avx2" => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                    return Simd::Avx2Fma;
+                }
+            }
+            return Simd::Scalar;
+        }
+        "neon" => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return Simd::Neon;
+                }
+            }
+            return Simd::Scalar;
+        }
+        _ => {}
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Simd::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Simd::Neon;
+        }
+    }
+    Simd::Scalar
+}
+
+/// Inner product, dispatched to the active variant.
+///
+/// The length check is a hard assert: the SIMD paths read `b` through
+/// raw pointers at `a`-derived offsets, so a mismatched `b` would be
+/// out-of-bounds UB from a safe fn, not just a wrong answer.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot length mismatch");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2Fma => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// The seed's portable dot product: 4-lane unrolled scalar loop. Kept as
+/// the fallback variant and as the baseline the benches compare against.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Score one query against `nrows` contiguous row-major rows:
+/// `out[r] = query · rows[r]`.
+pub fn scores_into(query: &[f32], rows: &[f32], nrows: usize, dim: usize, out: &mut [f32]) {
+    panel_scores_into(query, 1, rows, nrows, dim, out)
+}
+
+/// Blocked multi-query × multi-row micro-kernel:
+/// `out[q * nrows + r] = queries[q] · rows[r]` for a row-major query panel
+/// `[nq, dim]` and row tile `[nrows, dim]`. Queries are processed in
+/// panels of [`PANEL_QUERIES`]; each row chunk is loaded once per panel.
+pub fn panel_scores_into(
+    queries: &[f32],
+    nq: usize,
+    rows: &[f32],
+    nrows: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(queries.len(), nq * dim, "query panel shape mismatch");
+    assert_eq!(rows.len(), nrows * dim, "row tile shape mismatch");
+    assert_eq!(out.len(), nq * nrows, "score buffer shape mismatch");
+    if nq == 0 || nrows == 0 {
+        return;
+    }
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2Fma => unsafe { avx2::panel(queries, nq, rows, nrows, dim, out) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::panel(queries, nq, rows, nrows, dim, out) },
+        _ => panel_scalar(queries, nq, rows, nrows, dim, out),
+    }
+}
+
+/// Scalar panel: same per-pair math as [`dot_scalar`], pair by pair.
+pub fn panel_scalar(
+    queries: &[f32],
+    nq: usize,
+    rows: &[f32],
+    nrows: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    for q in 0..nq {
+        let qv = &queries[q * dim..(q + 1) * dim];
+        for r in 0..nrows {
+            out[q * nrows + r] = dot_scalar(qv, &rows[r * dim..(r + 1) * dim]);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the 8 lanes.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let shuf = _mm_movehdup_ps(s);
+        let sums = _mm_add_ps(s, shuf);
+        let shuf2 = _mm_movehl_ps(shuf, sums);
+        _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
+    }
+
+    /// Canonical per-pair evaluation: one accumulator, ascending 8-lane
+    /// chunks, horizontal sum, scalar tail. `panel` must keep this exact
+    /// order per query so batched and single-query scores are identical.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let j = c * 8;
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), acc);
+        }
+        let mut s = hsum(acc);
+        for j in chunks * 8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// Multi-query panel: one accumulator chain per query, row chunk
+    /// loaded once per panel. Bit-identical per pair to [`dot`].
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support; slice shapes are
+    /// checked by the dispatching wrapper.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn panel(
+        queries: &[f32],
+        nq: usize,
+        rows: &[f32],
+        nrows: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let chunks = dim / 8;
+        let pq = queries.as_ptr();
+        let pr = rows.as_ptr();
+        let mut q0 = 0;
+        while q0 < nq {
+            let pw = (nq - q0).min(super::PANEL_QUERIES);
+            for r in 0..nrows {
+                let row = pr.add(r * dim);
+                let mut acc = [_mm256_setzero_ps(); super::PANEL_QUERIES];
+                for c in 0..chunks {
+                    let j = c * 8;
+                    let rv = _mm256_loadu_ps(row.add(j));
+                    for p in 0..pw {
+                        let qv = _mm256_loadu_ps(pq.add((q0 + p) * dim + j));
+                        acc[p] = _mm256_fmadd_ps(qv, rv, acc[p]);
+                    }
+                }
+                for p in 0..pw {
+                    let mut s = hsum(acc[p]);
+                    for j in chunks * 8..dim {
+                        s += queries[(q0 + p) * dim + j] * rows[r * dim + j];
+                    }
+                    out[(q0 + p) * nrows + r] = s;
+                }
+            }
+            q0 += pw;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Canonical per-pair evaluation (see the avx2 twin): one accumulator,
+    /// ascending 4-lane chunks, horizontal sum, scalar tail.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let j = c * 4;
+            acc = vfmaq_f32(acc, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+        }
+        let mut s = vaddvq_f32(acc);
+        for j in chunks * 4..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// Multi-query panel, one accumulator chain per query; bit-identical
+    /// per pair to [`dot`].
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support; slice shapes are checked
+    /// by the dispatching wrapper.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn panel(
+        queries: &[f32],
+        nq: usize,
+        rows: &[f32],
+        nrows: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let chunks = dim / 4;
+        let pq = queries.as_ptr();
+        let pr = rows.as_ptr();
+        let mut q0 = 0;
+        while q0 < nq {
+            let pw = (nq - q0).min(super::PANEL_QUERIES);
+            for r in 0..nrows {
+                let row = pr.add(r * dim);
+                let mut acc = [vdupq_n_f32(0.0); super::PANEL_QUERIES];
+                for c in 0..chunks {
+                    let j = c * 4;
+                    let rv = vld1q_f32(row.add(j));
+                    for p in 0..pw {
+                        let qv = vld1q_f32(pq.add((q0 + p) * dim + j));
+                        acc[p] = vfmaq_f32(acc[p], qv, rv);
+                    }
+                }
+                for p in 0..pw {
+                    let mut s = vaddvq_f32(acc[p]);
+                    for j in chunks * 4..dim {
+                        s += queries[(q0 + p) * dim + j] * rows[r * dim + j];
+                    }
+                    out[(q0 + p) * nrows + r] = s;
+                }
+            }
+            q0 += pw;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randvec(rng: &mut Pcg, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    fn naive(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (*x as f64 * *y as f64) as f32).sum()
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_all_lengths() {
+        let mut rng = Pcg::new(1);
+        // Cover sub-lane, non-multiple-of-8, and large lengths.
+        for n in [1usize, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 100, 768, 1024] {
+            let a = randvec(&mut rng, n);
+            let b = randvec(&mut rng, n);
+            let want = dot_scalar(&a, &b);
+            let got = dot(&a, &b);
+            let tol = 1e-4 * (1.0 + want.abs());
+            assert!((got - want).abs() <= tol, "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_scalar_matches_naive() {
+        let mut rng = Pcg::new(2);
+        let a = randvec(&mut rng, 37);
+        let b = randvec(&mut rng, 37);
+        assert!((dot_scalar(&a, &b) - naive(&a, &b)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn panel_matches_per_pair_dot_exactly() {
+        // The panel kernel must be *bit-identical* per pair to the single
+        // dot under the same variant — that is what makes search_batch
+        // results equal per-query search results.
+        let mut rng = Pcg::new(3);
+        for (nq, nrows, dim) in [(1, 1, 8), (3, 5, 17), (4, 4, 32), (5, 9, 768), (9, 2, 1)] {
+            let queries = randvec(&mut rng, nq * dim);
+            let rows = randvec(&mut rng, nrows * dim);
+            let mut out = vec![0.0f32; nq * nrows];
+            panel_scores_into(&queries, nq, &rows, nrows, dim, &mut out);
+            for q in 0..nq {
+                for r in 0..nrows {
+                    let want = dot(&queries[q * dim..(q + 1) * dim], &rows[r * dim..(r + 1) * dim]);
+                    let got = out[q * nrows + r];
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "pair ({q},{r}) nq={nq} nrows={nrows} dim={dim}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_scalar_matches_dispatched_within_tolerance() {
+        let mut rng = Pcg::new(4);
+        let (nq, nrows, dim) = (6, 11, 96);
+        let queries = randvec(&mut rng, nq * dim);
+        let rows = randvec(&mut rng, nrows * dim);
+        let mut fast = vec![0.0f32; nq * nrows];
+        let mut slow = vec![0.0f32; nq * nrows];
+        panel_scores_into(&queries, nq, &rows, nrows, dim, &mut fast);
+        panel_scalar(&queries, nq, &rows, nrows, dim, &mut slow);
+        for (f, s) in fast.iter().zip(&slow) {
+            assert!((f - s).abs() <= 1e-4 * (1.0 + s.abs()), "{f} vs {s}");
+        }
+    }
+
+    #[test]
+    fn scores_into_is_single_query_panel() {
+        let mut rng = Pcg::new(5);
+        let dim = 24;
+        let q = randvec(&mut rng, dim);
+        let rows = randvec(&mut rng, 7 * dim);
+        let mut out = vec![0.0f32; 7];
+        scores_into(&q, &rows, 7, dim, &mut out);
+        for r in 0..7 {
+            assert_eq!(out[r].to_bits(), dot(&q, &rows[r * dim..(r + 1) * dim]).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_panel_is_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        panel_scores_into(&[], 0, &[], 0, 16, &mut out);
+        panel_scores_into(&[0.0; 16], 1, &[], 0, 16, &mut out);
+    }
+
+    #[test]
+    fn active_is_cached_and_named() {
+        let a = active();
+        let b = active();
+        assert_eq!(a, b);
+        assert!(!name().is_empty());
+    }
+}

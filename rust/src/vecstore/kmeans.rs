@@ -1,8 +1,15 @@
 //! Lloyd's k-means over unit vectors (the IVF coarse quantizer).
+//!
+//! The assignment step — the O(n·k·dim) hot loop of `build` — scores
+//! point blocks against the whole centroid matrix through the SIMD panel
+//! kernel instead of one scalar dot per (point, centroid) pair.
 
 use crate::util::rng::Pcg;
 
-use super::dot;
+use super::{dot, kernels};
+
+/// Points scored per panel-kernel call during assignment.
+const ASSIGN_BLOCK: usize = 64;
 
 /// Train `k` centroids on row-major `data [n, dim]` with `iters` Lloyd
 /// rounds. Returns row-major centroids `[k, dim]`. k-means++ seeding.
@@ -41,16 +48,36 @@ pub fn train(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Vec
     }
 
     let mut assign = vec![0usize; n];
+    let mut scores = vec![0.0f32; ASSIGN_BLOCK * k];
     for _ in 0..iters {
-        // Assign.
+        // Assign: block of points × all centroids per panel-kernel call.
         let mut moved = false;
-        for i in 0..n {
-            let v = &data[i * dim..(i + 1) * dim];
-            let best = nearest(v, &centroids, dim).0;
-            if assign[i] != best {
-                assign[i] = best;
-                moved = true;
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + ASSIGN_BLOCK).min(n);
+            let np = i1 - i0;
+            kernels::panel_scores_into(
+                &data[i0 * dim..i1 * dim],
+                np,
+                &centroids,
+                k,
+                dim,
+                &mut scores[..np * k],
+            );
+            for p in 0..np {
+                let row = &scores[p * k..(p + 1) * k];
+                let mut best = (0usize, f32::MIN);
+                for (c, &s) in row.iter().enumerate() {
+                    if s > best.1 {
+                        best = (c, s);
+                    }
+                }
+                if assign[i0 + p] != best.0 {
+                    assign[i0 + p] = best.0;
+                    moved = true;
+                }
             }
+            i0 = i1;
         }
         // Update.
         let mut sums = vec![0.0f64; k * dim];

@@ -5,13 +5,22 @@
 //! * [`FlatIndex`] — exact brute-force inner-product search.
 //! * [`IvfIndex`] — IVF-Flat: k-means coarse quantizer + inverted lists,
 //!   probing `nprobe` nearest cells. The standard recall/latency trade.
+//!
+//! Scoring runs on the runtime-dispatched SIMD kernels in [`kernels`];
+//! both indexes expose a batched [`Index::search_batch`] that shards the
+//! scan across scoped threads and merges per-shard top-k, which is what
+//! the serving path uses to absorb concurrent retrieval bursts.
 
 pub mod flat;
 pub mod ivf;
+pub mod kernels;
 pub mod kmeans;
 
 pub use flat::FlatIndex;
 pub use ivf::IvfIndex;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 /// A scored search hit.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,6 +36,14 @@ pub trait Index {
     fn add(&mut self, id: u64, vector: &[f32]);
     /// Top-k most similar.
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
+    /// Batched top-k: one result list per query, each identical (ids,
+    /// order, scores) to what per-query [`Index::search`] returns.
+    /// Implementations override this to amortize the scan across the
+    /// query panel and shard it over threads; the default is the naive
+    /// per-query loop.
+    fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        queries.iter().map(|q| self.search(q, k)).collect()
+    }
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -34,55 +51,150 @@ pub trait Index {
     fn dim(&self) -> usize;
 }
 
+/// Inner product on the dispatched kernel (see [`kernels`]).
 pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolled dot product — the hot loop of retrieval.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for j in chunks * 4..a.len() {
-        s += a[j] * b[j];
-    }
-    s
+    kernels::dot(a, b)
 }
 
-/// Keep the top-k (id, score) pairs with a bounded insertion sort —
-/// cheaper than a heap for the small k retrieval uses.
+/// One retained candidate: score plus the insertion sequence number that
+/// makes tie-breaking deterministic (first-inserted wins).
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    score: f32,
+    seq: u64,
+    id: u64,
+}
+
+impl Entry {
+    /// Ranking order: `Greater` means a better hit. Higher score first;
+    /// equal scores rank the earlier-inserted entry higher, so results
+    /// are stable across kernel variants and shard merge order.
+    fn rank_cmp(&self, other: &Entry) -> Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Max-heap wrapper whose maximum is the *worst-ranked* entry, so the
+/// heap root is the eviction candidate.
+#[derive(Debug, Clone, Copy)]
+struct Worst(Entry);
+
+impl PartialEq for Worst {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.rank_cmp(&other.0) == Ordering::Equal
+    }
+}
+impl Eq for Worst {}
+impl PartialOrd for Worst {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Worst {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.0.rank_cmp(&self.0)
+    }
+}
+
+/// Keep the top-k (id, score) pairs with a bounded binary heap: O(log k)
+/// per displacing push, O(1) rejection of sub-threshold candidates, and
+/// no per-push `Vec::insert` shifting — ordering is produced once, in
+/// [`TopK::into_vec`]. Ties on score keep the first-inserted entry.
 pub(crate) struct TopK {
     k: usize,
-    hits: Vec<Hit>,
+    seq: u64,
+    heap: BinaryHeap<Worst>,
 }
 
 impl TopK {
     pub fn new(k: usize) -> TopK {
-        TopK { k, hits: Vec::with_capacity(k + 1) }
+        TopK {
+            k,
+            seq: 0,
+            heap: BinaryHeap::with_capacity(k.min(1 << 20)),
+        }
     }
 
+    /// Push with an auto-incremented sequence number (single-scan use;
+    /// do not mix with [`TopK::push_with_seq`] on the same instance).
     pub fn push(&mut self, id: u64, score: f32) {
-        if self.hits.len() == self.k
-            && score <= self.hits.last().map(|h| h.score).unwrap_or(f32::MIN)
-        {
+        let seq = self.seq;
+        self.seq += 1;
+        self.push_with_seq(id, score, seq);
+    }
+
+    /// Push with an explicit sequence number — sharded scans pass the
+    /// global row position so a cross-shard merge ranks ties exactly as
+    /// a sequential scan would.
+    pub fn push_with_seq(&mut self, id: u64, score: f32, seq: u64) {
+        if self.k == 0 {
             return;
         }
-        let pos = self
-            .hits
-            .iter()
-            .position(|h| h.score < score)
-            .unwrap_or(self.hits.len());
-        self.hits.insert(pos, Hit { id, score });
-        self.hits.truncate(self.k);
+        let e = Entry { score, seq, id };
+        if self.heap.len() < self.k {
+            self.heap.push(Worst(e));
+            return;
+        }
+        if let Some(mut worst) = self.heap.peek_mut() {
+            if e.rank_cmp(&worst.0) == Ordering::Greater {
+                *worst = Worst(e);
+            }
+        }
     }
 
-    pub fn into_vec(self) -> Vec<Hit> {
-        self.hits
+    /// Fold another TopK (e.g. one shard's survivors) into this one,
+    /// preserving the entries' original sequence numbers.
+    pub fn merge_from(&mut self, other: TopK) {
+        for Worst(e) in other.heap {
+            self.push_with_seq(e.id, e.score, e.seq);
+        }
     }
+
+    /// Best-first (score desc, insertion order asc on ties).
+    pub fn into_vec(self) -> Vec<Hit> {
+        let mut entries: Vec<Entry> = self.heap.into_iter().map(|w| w.0).collect();
+        entries.sort_by(|a, b| b.rank_cmp(a));
+        entries
+            .into_iter()
+            .map(|e| Hit { id: e.id, score: e.score })
+            .collect()
+    }
+}
+
+/// Shared scaffolding for sharded scans: run `scan(shard, &mut topks)`
+/// on `threads` scoped threads — each shard filling one TopK per query —
+/// then merge the per-shard survivors into one TopK per query. Shards
+/// must push with explicit global sequence numbers so the merge is
+/// order-independent (see [`TopK::push_with_seq`]).
+pub(crate) fn parallel_topk_scan<F>(threads: usize, nq: usize, k: usize, scan: F) -> Vec<TopK>
+where
+    F: Fn(usize, &mut [TopK]) + Sync,
+{
+    let per_shard: Vec<Vec<TopK>> = std::thread::scope(|s| {
+        let scan = &scan;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+                    scan(t, &mut tks);
+                    tks
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scan shard panicked"))
+            .collect()
+    });
+    let mut finals: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+    for shard in per_shard {
+        for (qi, tk) in shard.into_iter().enumerate() {
+            finals[qi].merge_from(tk);
+        }
+    }
+    finals
 }
 
 #[cfg(test)]
@@ -113,5 +225,61 @@ mod tests {
         let mut tk = TopK::new(10);
         tk.push(1, 0.3);
         assert_eq!(tk.into_vec().len(), 1);
+    }
+
+    #[test]
+    fn topk_zero_k_accepts_nothing() {
+        let mut tk = TopK::new(0);
+        tk.push(1, 0.9);
+        assert!(tk.into_vec().is_empty());
+    }
+
+    /// Regression: equal scores must keep first-inserted order, both in
+    /// the retained set and in the output ordering.
+    #[test]
+    fn topk_equal_scores_keep_first_inserted() {
+        // All ties: later equal pushes must not displace earlier ones.
+        let mut tk = TopK::new(2);
+        for id in [10, 11, 12, 13] {
+            tk.push(id, 0.5);
+        }
+        let ids: Vec<u64> = tk.into_vec().iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![10, 11]);
+
+        // Mixed: a tie with the current worst is rejected, and output
+        // orders equal scores by insertion.
+        let mut tk = TopK::new(3);
+        for (id, s) in [(1, 0.5), (2, 0.9), (3, 0.5), (4, 0.5), (5, 0.7)] {
+            tk.push(id, s);
+        }
+        let hits = tk.into_vec();
+        assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![2, 5, 1]);
+    }
+
+    /// Cross-shard merge with explicit sequence numbers must equal the
+    /// sequential scan's result, whatever the merge order.
+    #[test]
+    fn topk_sharded_merge_equals_sequential() {
+        let scores: Vec<f32> = (0..40)
+            .map(|i| ((i * 7919) % 13) as f32 / 13.0) // plenty of ties
+            .collect();
+        let mut seq_tk = TopK::new(5);
+        for (i, &s) in scores.iter().enumerate() {
+            seq_tk.push(i as u64, s);
+        }
+        let want = seq_tk.into_vec();
+
+        // Shard into 3 ranges, merge in reverse order.
+        let mut merged = TopK::new(5);
+        for range in [&scores[27..40], &scores[13..27], &scores[0..13]] {
+            let base = range.as_ptr() as usize - scores.as_ptr() as usize;
+            let base = base / std::mem::size_of::<f32>();
+            let mut shard = TopK::new(5);
+            for (i, &s) in range.iter().enumerate() {
+                shard.push_with_seq((base + i) as u64, s, (base + i) as u64);
+            }
+            merged.merge_from(shard);
+        }
+        assert_eq!(merged.into_vec(), want);
     }
 }

@@ -359,3 +359,116 @@ fn prop_service_reply_conservation() {
         Ok(())
     });
 }
+
+/// SIMD and scalar kernels agree within 1e-4 (relative) on random panels
+/// of every awkward shape: sub-lane dims, non-multiples of 8, and the
+/// paper's dim-768 embeddings.
+#[test]
+fn prop_simd_and_scalar_kernels_agree() {
+    use windve::vecstore::kernels;
+    property("simd/scalar kernel agreement", 150, |g: &mut Gen| {
+        let dim = *g.pick(&[1usize, 3, 5, 8, 13, 16, 31, 64, 96, 768]);
+        let nq = g.usize(1, 7);
+        let nrows = g.usize(1, 12);
+        let queries: Vec<f32> = (0..nq * dim).map(|_| g.f64(-1.0, 1.0) as f32).collect();
+        let rows: Vec<f32> = (0..nrows * dim).map(|_| g.f64(-1.0, 1.0) as f32).collect();
+        let mut fast = vec![0.0f32; nq * nrows];
+        let mut slow = vec![0.0f32; nq * nrows];
+        kernels::panel_scores_into(&queries, nq, &rows, nrows, dim, &mut fast);
+        kernels::panel_scalar(&queries, nq, &rows, nrows, dim, &mut slow);
+        for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+            if (f - s).abs() > 1e-4 * (1.0 + s.abs()) {
+                return Err(format!("pair {i} (dim {dim}): simd {f} vs scalar {s}"));
+            }
+        }
+        // The dispatched single dot must agree with the panel's pairs.
+        let d = kernels::dot(&queries[..dim], &rows[..dim]);
+        if d.to_bits() != fast[0].to_bits() {
+            return Err(format!("dot/panel divergence: {d} vs {}", fast[0]));
+        }
+        Ok(())
+    });
+}
+
+/// `search_batch` returns exactly what per-query `search` returns (ids,
+/// order, and scores) for both index types, across shard counts — the
+/// acceptance bar for the batched retrieval engine.
+#[test]
+fn prop_search_batch_equals_per_query_search() {
+    use windve::vecstore::{FlatIndex, Index, IvfIndex};
+    property("search_batch == per-query search", 40, |g: &mut Gen| {
+        let dim = *g.pick(&[8usize, 24, 48]);
+        let n = g.usize(1, 300);
+        let nq = g.usize(1, 9);
+        let k = g.usize(1, 12);
+        let mut flat = FlatIndex::new(dim);
+        let mut ivf = IvfIndex::new(dim, 8, g.usize(1, 9));
+        for i in 0..n {
+            // Coarse grid values force plenty of exact score ties.
+            let v: Vec<f32> = (0..dim).map(|_| (g.u32(0, 5) as f32 - 2.0) * 0.5).collect();
+            flat.add(i as u64, &v);
+            ivf.add(i as u64, &v);
+        }
+        if g.bool() {
+            ivf.build(g.u64(0, 1000));
+        }
+        let queries: Vec<Vec<f32>> = (0..nq)
+            .map(|_| (0..dim).map(|_| g.f64(-1.0, 1.0) as f32).collect())
+            .collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let shards = g.usize(1, 5);
+        for (name, batch) in [
+            ("flat/auto", flat.search_batch(&qrefs, k)),
+            ("flat/sharded", flat.search_batch_with_threads(&qrefs, k, shards)),
+            ("ivf", ivf.search_batch(&qrefs, k)),
+        ] {
+            let reference: &dyn Index = if name.starts_with("flat") { &flat } else { &ivf };
+            for (qi, q) in queries.iter().enumerate() {
+                let single = reference.search(q, k);
+                if batch[qi] != single {
+                    return Err(format!(
+                        "{name} q{qi}: batch {:?} != single {:?}",
+                        batch[qi], single
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Mismatched queue releases saturate at zero occupancy, are counted,
+/// and never corrupt subsequent admission accounting.
+#[test]
+fn prop_queue_release_underflow_is_contained() {
+    property("release underflow containment", 100, |g: &mut Gen| {
+        let npu_depth = g.usize(1, 16);
+        let cpu_depth = g.usize(0, 8);
+        let qm = QueueManager::new(npu_depth, cpu_depth, true);
+        let extra_releases = g.usize(1, 10);
+        for _ in 0..extra_releases {
+            qm.release(if g.bool() { Route::Npu } else { Route::Cpu });
+        }
+        if qm.npu_occupancy() != 0 || qm.cpu_occupancy() != 0 {
+            return Err("occupancy went negative/wrapped".into());
+        }
+        if qm.stats().bad_releases != extra_releases as u64 {
+            return Err(format!(
+                "bad_releases {} != {extra_releases}",
+                qm.stats().bad_releases
+            ));
+        }
+        // Admission capacity is intact: we can still fill to exactly depth.
+        let mut npu = 0;
+        loop {
+            match qm.dispatch() {
+                Route::Npu => npu += 1,
+                _ => break,
+            }
+        }
+        if npu != npu_depth {
+            return Err(format!("admitted {npu} != depth {npu_depth}"));
+        }
+        Ok(())
+    });
+}
