@@ -15,7 +15,7 @@ use windve::runtime::tokenizer;
 use windve::sim::cluster::ClosedLoopSim;
 use windve::util::json::{self, Json};
 use windve::util::rng::Pcg;
-use windve::vecstore::{kernels, FlatIndex, Index};
+use windve::vecstore::{kernels, quant, FlatIndex, Index, Quant};
 use windve::workload::queries::QueryGen;
 
 fn main() {
@@ -60,6 +60,26 @@ fn main() {
             std::hint::black_box(&out8);
         });
         panel_scan.report();
+
+        // Quantized arenas: same panel shape, 2 B (f16) / 1 B (int8) per
+        // row element across the memory bus, decode in registers.
+        let rows_f16: Vec<u16> = rows.iter().map(|&x| quant::f32_to_f16(x)).collect();
+        let mut rows_i8 = vec![0i8; ROWS * DIM];
+        let mut scales = vec![0.0f32; ROWS];
+        for r in 0..ROWS {
+            let row = &rows[r * DIM..(r + 1) * DIM];
+            scales[r] = quant::quantize_i8_row(row, &mut rows_i8[r * DIM..(r + 1) * DIM]);
+        }
+        bench("SIMD panel 8q x 1024 rows [f16]", || {
+            kernels::panel_scores_f16_into(&queries, NQ, &rows_f16, ROWS, DIM, &mut out8);
+            std::hint::black_box(&out8);
+        })
+        .report();
+        bench("SIMD panel 8q x 1024 rows [int8]", || {
+            kernels::panel_scores_i8_into(&queries, NQ, &rows_i8, &scales, ROWS, DIM, &mut out8);
+            std::hint::black_box(&out8);
+        })
+        .report();
         let per_pair_scalar = scalar_scan.mean_ns / ROWS as f64;
         let per_pair_simd = simd_scan.mean_ns / ROWS as f64;
         let per_pair_panel = panel_scan.mean_ns / (NQ * ROWS) as f64;
@@ -98,6 +118,11 @@ fn main() {
         .report();
         bench("flat search_batch 16q k=10 (4 shards)", || {
             std::hint::black_box(idx.search_batch_with_threads(&qrefs, 10, 4));
+        })
+        .report();
+        let qidx = idx.quantize(Quant::Int8);
+        bench("int8 flat search_batch 16q k=10 (seq)", || {
+            std::hint::black_box(qidx.search_batch_with_threads(&qrefs, 10, 1));
         })
         .report();
     }

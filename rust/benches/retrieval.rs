@@ -1,19 +1,25 @@
 //! Retrieval throughput: the concurrent-query capacity the batched,
 //! SIMD-dispatched scan buys over the seed's one-query-at-a-time scalar
-//! path — the retrieval half of the paper's cost formula.
+//! path — the retrieval half of the paper's cost formula — plus the
+//! bandwidth win from scanning quantized (f16/int8) arenas.
 //!
 //! Compares, on a dim-768 corpus (env-tunable):
 //! * per-query `search` (the seed serving pattern),
 //! * `search_batch` sequential (panel kernel, one thread),
 //! * `search_batch` sharded (panel kernel + scoped-thread scan),
-//! for FlatIndex, plus the IvfIndex probe path.
+//! for FlatIndex, then the same batched scan over f16/int8 arenas
+//! ([`QuantizedFlatIndex`]), plus the IvfIndex probe path per codec.
 //!
 //! Env knobs: `WINDVE_BENCH_ROWS` (default 16384), `WINDVE_BENCH_BATCH`
-//! (default 32), `WINDVE_SIMD=scalar` for a forced-scalar baseline run.
+//! (default 32), `WINDVE_BENCH_MS` (per-case target, default 2000),
+//! `WINDVE_SIMD=scalar` for a forced-scalar baseline run, `WINDVE_QUANT`
+//! to pin one codec (default: all three), and `WINDVE_BENCH_JSON=<path>`
+//! to write the machine-readable record set CI uploads as an artifact.
 
-use windve::benchkit::{bench_with, section};
+use windve::benchkit::{bench_with, section, JsonReport};
+use windve::util::json::Json;
 use windve::util::rng::Pcg;
-use windve::vecstore::{kernels, FlatIndex, Index, IvfIndex};
+use windve::vecstore::{kernels, FlatIndex, Index, IvfIndex, Quant};
 
 const DIM: usize = 768;
 const K: usize = 10;
@@ -29,46 +35,73 @@ fn unit(rng: &mut Pcg, d: usize) -> Vec<f32> {
     v
 }
 
-/// Measure `f` with the shared benchkit harness and report it as
-/// queries/second given `queries_per_call` per invocation.
-fn qps<F: FnMut()>(name: &str, queries_per_call: usize, target_ms: u64, mut f: F) -> f64 {
-    let m = bench_with(name, target_ms, &mut f);
-    let rate = queries_per_call as f64 * 1e9 / m.mean_ns;
-    println!("{name:<52} {rate:>12.0} queries/s   (p99 call {:.2} ms)", m.p99_ns / 1e6);
-    rate
+/// Measure `f`, report queries/second, and append a JSON record.
+struct Harness {
+    rows: usize,
+    batch: usize,
+    target_ms: u64,
+    report: JsonReport,
+}
+
+impl Harness {
+    fn qps<F: FnMut()>(
+        &mut self,
+        name: &str,
+        quant: Quant,
+        queries_per_call: usize,
+        mut f: F,
+    ) -> f64 {
+        let m = bench_with(name, self.target_ms, &mut f);
+        let ns_per_query = m.mean_ns / queries_per_call as f64;
+        let rate = 1e9 / ns_per_query;
+        println!("{name:<52} {rate:>12.0} queries/s   (p99 call {:.2} ms)", m.p99_ns / 1e6);
+        self.report.push(vec![
+            ("bench", Json::str(name)),
+            ("rows", Json::num(self.rows as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("quant", Json::str(quant.name())),
+            ("kernel", Json::str(kernels::name())),
+            ("bytes_per_row", Json::num(quant.bytes_per_row(DIM) as f64)),
+            ("ns_per_query", Json::num(ns_per_query)),
+            ("queries_per_s", Json::num(rate)),
+        ]);
+        rate
+    }
 }
 
 fn main() {
     let rows = env_usize("WINDVE_BENCH_ROWS", 16384);
     let batch = env_usize("WINDVE_BENCH_BATCH", 32);
+    let target_ms = env_usize("WINDVE_BENCH_MS", 2000) as u64;
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let modes = Quant::modes_under_test();
     println!(
-        "corpus {rows} x {DIM}, k={K}, batch={batch}, {threads} cores, kernel={}",
-        kernels::name()
+        "corpus {rows} x {DIM}, k={K}, batch={batch}, {threads} cores, kernel={}, codecs {:?}",
+        kernels::name(),
+        modes.iter().map(|q| q.name()).collect::<Vec<_>>()
     );
 
     let mut rng = Pcg::new(1);
     let mut flat = FlatIndex::new(DIM);
-    let mut ivf = IvfIndex::new(DIM, 64, 8);
     for i in 0..rows {
         let v = unit(&mut rng, DIM);
         flat.add(i as u64, &v);
-        ivf.add(i as u64, &v);
     }
-    ivf.build(2);
     let queries: Vec<Vec<f32>> = (0..batch).map(|_| unit(&mut rng, DIM)).collect();
     let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
 
-    section("flat (exact) retrieval throughput");
-    let per_query = qps("per-query search (seed pattern)", batch, 2000, || {
+    let mut h = Harness { rows, batch, target_ms, report: JsonReport::new() };
+
+    section("flat (exact) retrieval throughput, f32 baseline");
+    let per_query = h.qps("per-query search (seed pattern)", Quant::F32, batch, || {
         for q in &qrefs {
             std::hint::black_box(flat.search(q, K));
         }
     });
-    let batched_seq = qps("search_batch, 1 shard (panel kernel)", batch, 2000, || {
+    let batched_seq = h.qps("search_batch, 1 shard (panel kernel)", Quant::F32, batch, || {
         std::hint::black_box(flat.search_batch_with_threads(&qrefs, K, 1));
     });
-    let batched_par = qps("search_batch, auto shards", batch, 2000, || {
+    let batched_par = h.qps("search_batch, auto shards", Quant::F32, batch, || {
         std::hint::black_box(flat.search_batch(&qrefs, K));
     });
     println!(
@@ -78,18 +111,64 @@ fn main() {
         batched_par / per_query
     );
 
+    section("flat quantized arenas (same scan, fewer bytes)");
+    for &quant in modes.iter().filter(|q| **q != Quant::F32) {
+        let qidx = flat.quantize(quant);
+        let f32_bytes = rows * Quant::F32.bytes_per_row(DIM);
+        println!(
+            "{:<52} {:.2}x fewer bytes scanned",
+            format!("[{}] arena {} B/row", quant.name(), quant.bytes_per_row(DIM)),
+            f32_bytes as f64 / qidx.arena_bytes() as f64
+        );
+        let seq_name = format!("search_batch, 1 shard [{}]", quant.name());
+        let q_seq = h.qps(&seq_name, quant, batch, || {
+            std::hint::black_box(qidx.search_batch_with_threads(&qrefs, K, 1));
+        });
+        let par_name = format!("search_batch, auto shards [{}]", quant.name());
+        let q_par = h.qps(&par_name, quant, batch, || {
+            std::hint::black_box(qidx.search_batch(&qrefs, K));
+        });
+        println!(
+            "{:<52} seq {:.2}x, sharded {:.2}x",
+            format!("[{}] speedup vs f32 search_batch", quant.name()),
+            q_seq / batched_seq,
+            q_par / batched_par
+        );
+    }
+
     section("ivf (nlist 64, nprobe 8) retrieval throughput");
-    let ivf_per_query = qps("per-query search", batch, 2000, || {
-        for q in &qrefs {
-            std::hint::black_box(ivf.search(q, K));
+    for &quant in &modes {
+        let mut ivf = IvfIndex::with_quant(DIM, 64, 8, quant);
+        // Rebuild from the flat corpus so every codec sees identical
+        // rows (FlatIndex keeps the f32 originals).
+        for i in 0..rows {
+            ivf.add(i as u64, flat.vector(i));
         }
-    });
-    let ivf_batched = qps("search_batch (per-probe-list parallel)", batch, 2000, || {
-        std::hint::black_box(ivf.search_batch(&qrefs, K));
-    });
-    println!(
-        "{:<52} {:.2}x",
-        "speedup vs per-query search",
-        ivf_batched / ivf_per_query
-    );
+        ivf.build(2);
+        let ivf_batched = h.qps(
+            &format!("ivf search_batch (probe-list parallel) [{}]", quant.name()),
+            quant,
+            batch,
+            || {
+                std::hint::black_box(ivf.search_batch(&qrefs, K));
+            },
+        );
+        if quant == Quant::F32 {
+            let ivf_per_query = h.qps("ivf per-query search [f32]", quant, batch, || {
+                for q in &qrefs {
+                    std::hint::black_box(ivf.search(q, K));
+                }
+            });
+            println!(
+                "{:<52} {:.2}x",
+                "ivf speedup vs per-query search",
+                ivf_batched / ivf_per_query
+            );
+        }
+    }
+
+    if let Ok(path) = std::env::var("WINDVE_BENCH_JSON") {
+        h.report.write(&path).expect("write bench JSON");
+        println!("\nwrote {} records to {path}", h.report.len());
+    }
 }

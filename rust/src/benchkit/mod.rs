@@ -5,6 +5,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -75,6 +77,40 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench records for CI artifacts (`BENCH_*.json`):
+/// one JSON object per measurement, written as
+/// `{"records": [{...}, ...]}` so downstream tooling can track the perf
+/// trajectory across commits without scraping bench stdout.
+#[derive(Default)]
+pub struct JsonReport {
+    records: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Append one record (field order is preserved in the output).
+    pub fn push(&mut self, fields: Vec<(&str, Json)>) {
+        self.records.push(Json::obj(fields));
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Write the report to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let doc = Json::obj(vec![("records", Json::Arr(self.records.clone()))]);
+        std::fs::write(path, doc.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +123,28 @@ mod tests {
         assert!(m.mean_ns > 0.0);
         assert!(m.iters > 0);
         assert!(m.p50_ns <= m.p99_ns * 1.001);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut rep = JsonReport::new();
+        assert!(rep.is_empty());
+        rep.push(vec![
+            ("bench", Json::str("flat search_batch")),
+            ("quant", Json::str("int8")),
+            ("ns_per_query", Json::num(12.5)),
+        ]);
+        assert_eq!(rep.len(), 1);
+        let path = std::env::temp_dir().join("windve_bench_report_test.json");
+        let path = path.to_str().unwrap().to_string();
+        rep.write(&path).unwrap();
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let records = parsed.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(records[0].get("quant").unwrap().as_str(), Some("int8"));
+        assert_eq!(records[0].get("ns_per_query").unwrap().as_f64(), Some(12.5));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use super::instance::{spawn_worker, BackendFactory, Reply};
 use super::queue_manager::{QueueManager, Route};
 use crate::devices::executor::RetrievalExecutor;
 use crate::metrics::Registry;
-use crate::vecstore::Hit;
+use crate::vecstore::{Hit, Quant};
 
 /// Why a request did not produce an embedding.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -375,6 +375,15 @@ impl WindVE {
             self.metrics
                 .counter("service.retrievals")
                 .add(panel_idx.len() as u64);
+            // Per-codec counter: which arena (f32/f16/int8) absorbed the
+            // scan — the capacity dial the quantized path exists for.
+            // Static names: no per-batch allocation on the serving path.
+            let codec_counter = match exec.quant() {
+                Quant::F32 => "service.retrievals_f32",
+                Quant::F16 => "service.retrievals_f16",
+                Quant::Int8 => "service.retrievals_int8",
+            };
+            self.metrics.counter(codec_counter).add(panel_idx.len() as u64);
             lists
         };
 
@@ -639,6 +648,49 @@ mod tests {
                 other => panic!("expected dim-mismatch backend error, got {other:?}"),
             }
         }
+        svc.shutdown();
+    }
+
+    /// The retrieval path must serve answers from a quantized arena the
+    /// same way it serves f32 — and count scans under the codec's name.
+    #[test]
+    fn retrieve_blocking_serves_from_quantized_arena() {
+        let dim = 16;
+        let svc = WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                npu_workers: 1,
+                cpu_workers: 1,
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+            },
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+        )
+        .unwrap();
+
+        let docs: Vec<String> = (0..24).map(|i| format!("document number {i}")).collect();
+        let exec =
+            Arc::new(crate::devices::executor::RetrievalExecutor::flat_quant(dim, Quant::Int8));
+        for (i, d) in docs.iter().enumerate() {
+            exec.add(i as u64, &pseudo_embedding(d, dim));
+        }
+        svc.attach_retrieval(Arc::clone(&exec));
+        assert_eq!(svc.retrieval().unwrap().quant(), Quant::Int8);
+
+        let queries: Vec<String> = vec![docs[5].clone(), docs[19].clone()];
+        let results = svc.retrieve_blocking(&queries, 3, Duration::from_secs(5));
+        for (want, r) in [5u64, 19].iter().zip(&results) {
+            let hits = r.as_ref().expect("retrieval failed");
+            // Self-similarity survives int8: own id first, score ≈ 1.
+            assert_eq!(hits[0].id, *want);
+            assert!((hits[0].score - 1.0).abs() < 0.05, "{}", hits[0].score);
+        }
+        assert_eq!(svc.metrics.counter("service.retrievals_int8").get(), 2);
+        assert_eq!(svc.metrics.counter("service.retrievals").get(), 2);
         svc.shutdown();
     }
 

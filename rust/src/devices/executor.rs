@@ -21,7 +21,7 @@ use anyhow::Result;
 use super::profile::DeviceProfile;
 use crate::runtime::{tokenizer, EmbeddingEngine};
 use crate::util::rng::Pcg;
-use crate::vecstore::{FlatIndex, Hit, Index};
+use crate::vecstore::{FlatIndex, Hit, Index, Quant, QuantizedFlatIndex};
 
 /// A batch embedding executor owned by one worker instance.
 pub trait Backend {
@@ -131,17 +131,32 @@ impl Backend for SyntheticBackend {
 /// [`Index::search_batch`] call, which shards the scan across host cores
 /// on the SIMD kernels instead of paying one sequential scan per query.
 pub struct RetrievalExecutor {
+    /// The index's storage codec, cached at construction (a boxed index
+    /// never changes codec) so hot-path callers don't take the lock.
+    quant: Quant,
     index: RwLock<Box<dyn Index + Send + Sync>>,
 }
 
 impl RetrievalExecutor {
     pub fn new(index: Box<dyn Index + Send + Sync>) -> RetrievalExecutor {
-        RetrievalExecutor { index: RwLock::new(index) }
+        RetrievalExecutor { quant: index.quant(), index: RwLock::new(index) }
     }
 
     /// Convenience: an empty exact (flat) index of `dim`.
     pub fn flat(dim: usize) -> RetrievalExecutor {
         RetrievalExecutor::new(Box::new(FlatIndex::new(dim)))
+    }
+
+    /// Convenience: an empty exact index of `dim` whose rows are stored
+    /// under `quant` — the compact arena CPU-offloaded peak queries scan
+    /// (2-4× less bandwidth per concurrent scan than f32).
+    pub fn flat_quant(dim: usize, quant: Quant) -> RetrievalExecutor {
+        RetrievalExecutor::new(Box::new(QuantizedFlatIndex::new(dim, quant)))
+    }
+
+    /// Storage codec of the attached index's row arena (lock-free).
+    pub fn quant(&self) -> Quant {
+        self.quant
     }
 
     /// Add one corpus vector (exclusive lock; cheap relative to scans).
@@ -205,6 +220,24 @@ mod tests {
         assert_eq!(a, c);
         let d = b.embed(&["different".into()]).unwrap();
         assert_ne!(a, d);
+    }
+
+    #[test]
+    fn retrieval_executor_quantized_flat() {
+        for quant in [Quant::F16, Quant::Int8] {
+            let ex = RetrievalExecutor::flat_quant(4, quant);
+            assert_eq!(ex.quant(), quant);
+            for i in 0..16u64 {
+                let a = (i as f32) * 0.3;
+                ex.add(i, &[a.cos(), a.sin(), 0.0, 0.0]);
+            }
+            let q = [0.6f32.cos(), 0.6f32.sin(), 0.0, 0.0];
+            let hits = ex.search(&q, 3);
+            assert_eq!(hits[0].id, 2, "{quant:?}"); // 0.6 == 2 * 0.3
+            let batch = ex.search_batch(&[&q[..]], 3);
+            assert_eq!(batch[0], hits);
+        }
+        assert_eq!(RetrievalExecutor::flat(4).quant(), Quant::F32);
     }
 
     #[test]

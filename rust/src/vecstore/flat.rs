@@ -32,6 +32,18 @@ impl FlatIndex {
         &self.data[row * self.dim..(row + 1) * self.dim]
     }
 
+    /// Re-encode the corpus into a [`QuantizedFlatIndex`] under `quant`
+    /// (ids and insertion order preserved, so tie-breaking matches). The
+    /// f32 original is left untouched — callers drop it to realize the
+    /// footprint win.
+    pub fn quantize(&self, quant: super::Quant) -> super::QuantizedFlatIndex {
+        let mut q = super::QuantizedFlatIndex::new(self.dim, quant);
+        for (row, &id) in self.ids.iter().enumerate() {
+            q.add(id, self.vector(row));
+        }
+        q
+    }
+
     /// Shard count for a parallel scan over `rows` rows.
     fn auto_shards(rows: usize) -> usize {
         let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);

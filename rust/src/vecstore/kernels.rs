@@ -26,7 +26,11 @@
 //! ([`panel_scores_into`]) keeps one independent accumulator chain per
 //! query, so batching queries changes *bandwidth*, never *values*:
 //! `search_batch` returns bit-identical scores to per-query `search`
-//! under the same dispatched variant.
+//! under the same dispatched variant. The quantized panels
+//! ([`panel_scores_f16_into`], [`panel_scores_i8_into`]) keep the same
+//! guarantee: codes are decoded in registers, fed to the same per-query
+//! accumulator chains, and (for int8) the row scale multiplies the
+//! finished sum exactly once.
 //!
 //! **Across variants** (scalar vs AVX2 vs NEON) the summation order
 //! differs — scalar interleaves 4 width-1 accumulators, SIMD reduces
@@ -212,6 +216,150 @@ pub fn panel_scores_into(
     }
 }
 
+/// Quantized f16 twin of [`panel_scores_into`]: rows are IEEE binary16
+/// bits, decoded to f32 **in registers** (`vcvtph2ps` on x86 with F16C,
+/// scalar bit-decode elsewhere) — the arena's 2 B/element is all that
+/// crosses the memory bus. Per (query, row) pair the accumulation order
+/// matches the f32 kernel of the same variant, so batching quantized
+/// queries is bit-identical to single-query quantized search.
+pub fn panel_scores_f16_into(
+    queries: &[f32],
+    nq: usize,
+    rows: &[u16],
+    nrows: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(queries.len(), nq * dim, "query panel shape mismatch");
+    assert_eq!(rows.len(), nrows * dim, "row tile shape mismatch");
+    assert_eq!(out.len(), nq * nrows, "score buffer shape mismatch");
+    if nq == 0 || nrows == 0 {
+        return;
+    }
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2Fma if f16c_available() => unsafe {
+            avx2::panel_f16(queries, nq, rows, nrows, dim, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::panel_f16(queries, nq, rows, nrows, dim, out) },
+        _ => panel_f16_scalar(queries, nq, rows, nrows, dim, out),
+    }
+}
+
+/// Quantized int8 twin of [`panel_scores_into`]: rows are symmetric
+/// per-row-scaled codes (`scales[r]`, see `quant::quantize_i8_row`),
+/// widened to f32 in registers and accumulated unscaled; the row scale
+/// multiplies the finished sum once. 1 B/element of bandwidth.
+pub fn panel_scores_i8_into(
+    queries: &[f32],
+    nq: usize,
+    rows: &[i8],
+    scales: &[f32],
+    nrows: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(queries.len(), nq * dim, "query panel shape mismatch");
+    assert_eq!(rows.len(), nrows * dim, "row tile shape mismatch");
+    assert_eq!(scales.len(), nrows, "row scale count mismatch");
+    assert_eq!(out.len(), nq * nrows, "score buffer shape mismatch");
+    if nq == 0 || nrows == 0 {
+        return;
+    }
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2Fma => unsafe { avx2::panel_i8(queries, nq, rows, scales, nrows, dim, out) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::panel_i8(queries, nq, rows, scales, nrows, dim, out) },
+        _ => panel_i8_scalar(queries, nq, rows, scales, nrows, dim, out),
+    }
+}
+
+/// F16C (`vcvtph2ps`) is a separate CPUID bit from AVX2 — probe it before
+/// taking the in-register f16 decode path. `is_x86_feature_detected!`
+/// caches the CPUID result process-wide, so this is one relaxed load.
+#[cfg(target_arch = "x86_64")]
+fn f16c_available() -> bool {
+    is_x86_feature_detected!("f16c")
+}
+
+/// Scalar f16 dot: [`dot_scalar`]'s 4-accumulator shape with a bit-decode
+/// per row element.
+fn dot_f16_scalar(a: &[f32], h: &[u16]) -> f32 {
+    debug_assert_eq!(a.len(), h.len());
+    let f16 = super::quant::f16_to_f32;
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * f16(h[j]);
+        acc[1] += a[j + 1] * f16(h[j + 1]);
+        acc[2] += a[j + 2] * f16(h[j + 2]);
+        acc[3] += a[j + 3] * f16(h[j + 3]);
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * f16(h[j]);
+    }
+    s
+}
+
+/// Scalar int8 dot: accumulate `query · code` unscaled in [`dot_scalar`]'s
+/// 4-accumulator shape, then apply the row scale once.
+fn dot_i8_scalar(a: &[f32], codes: &[i8], scale: f32) -> f32 {
+    debug_assert_eq!(a.len(), codes.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * codes[j] as f32;
+        acc[1] += a[j + 1] * codes[j + 1] as f32;
+        acc[2] += a[j + 2] * codes[j + 2] as f32;
+        acc[3] += a[j + 3] * codes[j + 3] as f32;
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for j in chunks * 4..a.len() {
+        s += a[j] * codes[j] as f32;
+    }
+    s * scale
+}
+
+/// Scalar f16 panel: same per-pair math as [`dot_f16_scalar`].
+pub fn panel_f16_scalar(
+    queries: &[f32],
+    nq: usize,
+    rows: &[u16],
+    nrows: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    for q in 0..nq {
+        let qv = &queries[q * dim..(q + 1) * dim];
+        for r in 0..nrows {
+            out[q * nrows + r] = dot_f16_scalar(qv, &rows[r * dim..(r + 1) * dim]);
+        }
+    }
+}
+
+/// Scalar int8 panel: same per-pair math as [`dot_i8_scalar`].
+pub fn panel_i8_scalar(
+    queries: &[f32],
+    nq: usize,
+    rows: &[i8],
+    scales: &[f32],
+    nrows: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    for q in 0..nq {
+        let qv = &queries[q * dim..(q + 1) * dim];
+        for r in 0..nrows {
+            out[q * nrows + r] = dot_i8_scalar(qv, &rows[r * dim..(r + 1) * dim], scales[r]);
+        }
+    }
+}
+
 /// Scalar panel: same per-pair math as [`dot_scalar`], pair by pair.
 pub fn panel_scalar(
     queries: &[f32],
@@ -315,6 +463,102 @@ mod avx2 {
             q0 += pw;
         }
     }
+
+    /// f16 panel: row chunks are 8 half-floats (16 B) widened in-register
+    /// with `vcvtph2ps`; accumulation order per pair matches [`panel`].
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2, FMA and F16C support; slice shapes
+    /// are checked by the dispatching wrapper.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    #[target_feature(enable = "f16c")]
+    pub unsafe fn panel_f16(
+        queries: &[f32],
+        nq: usize,
+        rows: &[u16],
+        nrows: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let f16 = crate::vecstore::quant::f16_to_f32;
+        let chunks = dim / 8;
+        let pq = queries.as_ptr();
+        let pr = rows.as_ptr();
+        let mut q0 = 0;
+        while q0 < nq {
+            let pw = (nq - q0).min(super::PANEL_QUERIES);
+            for r in 0..nrows {
+                let row = pr.add(r * dim);
+                let mut acc = [_mm256_setzero_ps(); super::PANEL_QUERIES];
+                for c in 0..chunks {
+                    let j = c * 8;
+                    let rv = _mm256_cvtph_ps(_mm_loadu_si128(row.add(j) as *const __m128i));
+                    for p in 0..pw {
+                        let qv = _mm256_loadu_ps(pq.add((q0 + p) * dim + j));
+                        acc[p] = _mm256_fmadd_ps(qv, rv, acc[p]);
+                    }
+                }
+                for p in 0..pw {
+                    let mut s = hsum(acc[p]);
+                    for j in chunks * 8..dim {
+                        s += queries[(q0 + p) * dim + j] * f16(rows[r * dim + j]);
+                    }
+                    out[(q0 + p) * nrows + r] = s;
+                }
+            }
+            q0 += pw;
+        }
+    }
+
+    /// int8 panel: row chunks are 8 codes (8 B) sign-extended and widened
+    /// to f32 in-register (`vpmovsxbd` + `vcvtdq2ps`); the row scale
+    /// multiplies the finished per-pair sum once.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 and FMA support; slice shapes are
+    /// checked by the dispatching wrapper.
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn panel_i8(
+        queries: &[f32],
+        nq: usize,
+        rows: &[i8],
+        scales: &[f32],
+        nrows: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let chunks = dim / 8;
+        let pq = queries.as_ptr();
+        let pr = rows.as_ptr();
+        let mut q0 = 0;
+        while q0 < nq {
+            let pw = (nq - q0).min(super::PANEL_QUERIES);
+            for r in 0..nrows {
+                let row = pr.add(r * dim);
+                let mut acc = [_mm256_setzero_ps(); super::PANEL_QUERIES];
+                for c in 0..chunks {
+                    let j = c * 8;
+                    let codes = _mm_loadl_epi64(row.add(j) as *const __m128i);
+                    let rv = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(codes));
+                    for p in 0..pw {
+                        let qv = _mm256_loadu_ps(pq.add((q0 + p) * dim + j));
+                        acc[p] = _mm256_fmadd_ps(qv, rv, acc[p]);
+                    }
+                }
+                let scale = scales[r];
+                for p in 0..pw {
+                    let mut s = hsum(acc[p]);
+                    for j in chunks * 8..dim {
+                        s += queries[(q0 + p) * dim + j] * rows[r * dim + j] as f32;
+                    }
+                    out[(q0 + p) * nrows + r] = s * scale;
+                }
+            }
+            q0 += pw;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -382,6 +626,103 @@ mod neon {
                         s += queries[(q0 + p) * dim + j] * rows[r * dim + j];
                     }
                     out[(q0 + p) * nrows + r] = s;
+                }
+            }
+            q0 += pw;
+        }
+    }
+
+    /// f16 panel: stable Rust has no aarch64 f16 vector intrinsics, so
+    /// each 4-element row chunk is bit-decoded once into a stack buffer
+    /// (shared across the whole query panel — rows still cross the memory
+    /// bus at 2 B/element) and fed to the f32 FMA lanes.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support; slice shapes are checked
+    /// by the dispatching wrapper.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn panel_f16(
+        queries: &[f32],
+        nq: usize,
+        rows: &[u16],
+        nrows: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let f16 = crate::vecstore::quant::f16_to_f32;
+        let chunks = dim / 4;
+        let pq = queries.as_ptr();
+        let mut q0 = 0;
+        while q0 < nq {
+            let pw = (nq - q0).min(super::PANEL_QUERIES);
+            for r in 0..nrows {
+                let row = &rows[r * dim..(r + 1) * dim];
+                let mut acc = [vdupq_n_f32(0.0); super::PANEL_QUERIES];
+                for c in 0..chunks {
+                    let j = c * 4;
+                    let buf = [f16(row[j]), f16(row[j + 1]), f16(row[j + 2]), f16(row[j + 3])];
+                    let rv = vld1q_f32(buf.as_ptr());
+                    for p in 0..pw {
+                        let qv = vld1q_f32(pq.add((q0 + p) * dim + j));
+                        acc[p] = vfmaq_f32(acc[p], qv, rv);
+                    }
+                }
+                for p in 0..pw {
+                    let mut s = vaddvq_f32(acc[p]);
+                    for j in chunks * 4..dim {
+                        s += queries[(q0 + p) * dim + j] * f16(row[j]);
+                    }
+                    out[(q0 + p) * nrows + r] = s;
+                }
+            }
+            q0 += pw;
+        }
+    }
+
+    /// int8 panel: 8 codes per chunk widened in-register
+    /// (`vmovl_s8`/`vmovl_s16`/`vcvtq_f32_s32`), two FMAs per chunk per
+    /// query; the row scale multiplies the finished sum once.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support; slice shapes are checked
+    /// by the dispatching wrapper.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn panel_i8(
+        queries: &[f32],
+        nq: usize,
+        rows: &[i8],
+        scales: &[f32],
+        nrows: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let chunks = dim / 8;
+        let pq = queries.as_ptr();
+        let pr = rows.as_ptr();
+        let mut q0 = 0;
+        while q0 < nq {
+            let pw = (nq - q0).min(super::PANEL_QUERIES);
+            for r in 0..nrows {
+                let row = pr.add(r * dim);
+                let mut acc = [vdupq_n_f32(0.0); super::PANEL_QUERIES];
+                for c in 0..chunks {
+                    let j = c * 8;
+                    let wide = vmovl_s8(vld1_s8(row.add(j)));
+                    let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(wide)));
+                    let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(wide)));
+                    for p in 0..pw {
+                        let qoff = (q0 + p) * dim + j;
+                        acc[p] = vfmaq_f32(acc[p], vld1q_f32(pq.add(qoff)), lo);
+                        acc[p] = vfmaq_f32(acc[p], vld1q_f32(pq.add(qoff + 4)), hi);
+                    }
+                }
+                let scale = scales[r];
+                for p in 0..pw {
+                    let mut s = vaddvq_f32(acc[p]);
+                    for j in chunks * 8..dim {
+                        s += queries[(q0 + p) * dim + j] * rows[r * dim + j] as f32;
+                    }
+                    out[(q0 + p) * nrows + r] = s * scale;
                 }
             }
             q0 += pw;
@@ -482,6 +823,80 @@ mod tests {
         let mut out: Vec<f32> = Vec::new();
         panel_scores_into(&[], 0, &[], 0, 16, &mut out);
         panel_scores_into(&[0.0; 16], 1, &[], 0, 16, &mut out);
+        panel_scores_f16_into(&[], 0, &[], 0, 16, &mut out);
+        panel_scores_i8_into(&[0.0; 16], 1, &[], &[], 0, 16, &mut out);
+    }
+
+    #[test]
+    fn f16_panel_matches_scalar_twin_and_is_batch_invariant() {
+        let mut rng = Pcg::new(6);
+        for (nq, nrows, dim) in [(1, 1, 8), (3, 5, 17), (5, 9, 768), (9, 2, 1), (4, 7, 96)] {
+            let queries = randvec(&mut rng, nq * dim);
+            let rows: Vec<u16> = randvec(&mut rng, nrows * dim)
+                .iter()
+                .map(|&x| crate::vecstore::quant::f32_to_f16(x))
+                .collect();
+            let mut fast = vec![0.0f32; nq * nrows];
+            let mut slow = vec![0.0f32; nq * nrows];
+            panel_scores_f16_into(&queries, nq, &rows, nrows, dim, &mut fast);
+            panel_f16_scalar(&queries, nq, &rows, nrows, dim, &mut slow);
+            for (f, s) in fast.iter().zip(&slow) {
+                assert!((f - s).abs() <= 1e-4 * (1.0 + s.abs()), "dim={dim}: {f} vs {s}");
+            }
+            // Batch shape must not change values: single-query calls give
+            // bit-identical pairs under the same dispatched variant.
+            for q in 0..nq {
+                let mut one = vec![0.0f32; nrows];
+                panel_scores_f16_into(
+                    &queries[q * dim..(q + 1) * dim],
+                    1,
+                    &rows,
+                    nrows,
+                    dim,
+                    &mut one,
+                );
+                for r in 0..nrows {
+                    assert_eq!(one[r].to_bits(), fast[q * nrows + r].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_panel_matches_scalar_twin_and_is_batch_invariant() {
+        let mut rng = Pcg::new(7);
+        for (nq, nrows, dim) in [(1, 1, 8), (3, 5, 17), (5, 9, 768), (9, 2, 1), (4, 7, 96)] {
+            let queries = randvec(&mut rng, nq * dim);
+            let mut rows = vec![0i8; nrows * dim];
+            let mut scales = vec![0.0f32; nrows];
+            for r in 0..nrows {
+                let v = randvec(&mut rng, dim);
+                scales[r] =
+                    crate::vecstore::quant::quantize_i8_row(&v, &mut rows[r * dim..(r + 1) * dim]);
+            }
+            let mut fast = vec![0.0f32; nq * nrows];
+            let mut slow = vec![0.0f32; nq * nrows];
+            panel_scores_i8_into(&queries, nq, &rows, &scales, nrows, dim, &mut fast);
+            panel_i8_scalar(&queries, nq, &rows, &scales, nrows, dim, &mut slow);
+            for (f, s) in fast.iter().zip(&slow) {
+                assert!((f - s).abs() <= 1e-4 * (1.0 + s.abs()), "dim={dim}: {f} vs {s}");
+            }
+            for q in 0..nq {
+                let mut one = vec![0.0f32; nrows];
+                panel_scores_i8_into(
+                    &queries[q * dim..(q + 1) * dim],
+                    1,
+                    &rows,
+                    &scales,
+                    nrows,
+                    dim,
+                    &mut one,
+                );
+                for r in 0..nrows {
+                    assert_eq!(one[r].to_bits(), fast[q * nrows + r].to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 use crate::util::rng::Pcg;
 
+use super::quant::RowArena;
 use super::{dot, kernels};
 
 /// Points scored per panel-kernel call during assignment.
@@ -108,6 +109,38 @@ pub fn train(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Vec
     centroids
 }
 
+/// Assign every arena row to its highest-scoring centroid (first wins on
+/// ties, matching [`nearest`]). Blocks of rows are scored against the
+/// whole centroid matrix through the arena's quant-aware panel kernel, so
+/// the assignment sees exactly the (possibly quantized) representation
+/// search-time scans will score — for an f32 arena this is bit-identical
+/// to per-row [`nearest`].
+pub fn assign_arena(arena: &RowArena, dim: usize, centroids: &[f32], assign: &mut [usize]) {
+    let k = centroids.len() / dim;
+    let n = arena.rows(dim);
+    assert_eq!(assign.len(), n, "assignment buffer size mismatch");
+    assert!(k >= 1, "need at least one centroid");
+    let mut scores = vec![0.0f32; k * ASSIGN_BLOCK];
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + ASSIGN_BLOCK).min(n);
+        let nr = r1 - r0;
+        // Centroids are the query panel here: out[c * nr + r].
+        arena.panel_scores_into(centroids, k, r0, r1, dim, &mut scores[..k * nr]);
+        for r in 0..nr {
+            let mut best = (0usize, f32::MIN);
+            for c in 0..k {
+                let s = scores[c * nr + r];
+                if s > best.1 {
+                    best = (c, s);
+                }
+            }
+            assign[r0 + r] = best.0;
+        }
+        r0 = r1;
+    }
+}
+
 /// Index and (inner-product) score of the nearest centroid.
 pub fn nearest(v: &[f32], centroids: &[f32], dim: usize) -> (usize, f32) {
     let k = centroids.len() / dim;
@@ -172,6 +205,41 @@ mod tests {
         let data = vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0];
         let cents = train(&data, 2, 3, 5, 2);
         assert_eq!(cents.len(), 6);
+    }
+
+    #[test]
+    fn assign_arena_matches_nearest_on_f32() {
+        let mut rng = Pcg::new(5);
+        let dim = 12;
+        let data: Vec<f32> = (0..40 * dim).map(|_| rng.normal() as f32).collect();
+        let cents = train(&data, dim, 4, 10, 6);
+        let mut arena = RowArena::new(crate::vecstore::Quant::F32);
+        for r in 0..40 {
+            arena.push(&data[r * dim..(r + 1) * dim]);
+        }
+        let mut assign = vec![0usize; 40];
+        assign_arena(&arena, dim, &cents, &mut assign);
+        for r in 0..40 {
+            let (c, _) = nearest(&data[r * dim..(r + 1) * dim], &cents, dim);
+            assert_eq!(assign[r], c, "row {r}");
+        }
+    }
+
+    #[test]
+    fn assign_arena_quantized_buckets_every_row() {
+        let mut rng = Pcg::new(6);
+        let dim = 8;
+        let data: Vec<f32> = (0..30 * dim).map(|_| rng.normal() as f32).collect();
+        let cents = train(&data, dim, 3, 10, 7);
+        for quant in [crate::vecstore::Quant::F16, crate::vecstore::Quant::Int8] {
+            let mut arena = RowArena::new(quant);
+            for r in 0..30 {
+                arena.push(&data[r * dim..(r + 1) * dim]);
+            }
+            let mut assign = vec![usize::MAX; 30];
+            assign_arena(&arena, dim, &cents, &mut assign);
+            assert!(assign.iter().all(|&c| c < 3), "{quant:?}: {assign:?}");
+        }
     }
 
     #[test]

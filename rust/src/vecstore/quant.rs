@@ -1,0 +1,416 @@
+//! Quantized row storage — the bandwidth half of the retrieval cost.
+//!
+//! The batched scan is memory-bound once the SIMD kernels saturate the FMA
+//! units, so bytes-per-row is the lever that raises concurrent-scan
+//! capacity per instance (the paper's deployment-cost formula): f16 halves
+//! it, per-row-scaled symmetric int8 quarters it. Codes are decoded **in
+//! registers** by the quantized panel kernels in [`super::kernels`] — the
+//! arena is never materialized back to f32.
+//!
+//! # Codecs
+//!
+//! * [`Quant::F16`] — IEEE 754 binary16, round-to-nearest-even. Exact
+//!   round-trip for every representable value; relative error ≤ 2⁻¹¹ per
+//!   element, so inner products of unit vectors err by ≲ 1e-3.
+//! * [`Quant::Int8`] — symmetric per-row scaling: `scale = max|x| / 127`,
+//!   `code = round(x / scale)`. Per-element absolute error ≤ `scale / 2`,
+//!   so a score errs by at most `‖query‖₁ · scale / 2`.
+//!
+//! Both codecs are deterministic, so re-encoding a row always yields the
+//! same bytes and quantized scan results are reproducible bit-for-bit
+//! under a fixed kernel variant.
+
+use super::kernels;
+
+/// Storage codec for an index's row arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quant {
+    /// Full-precision f32 rows (the seed layout).
+    F32,
+    /// IEEE binary16 rows: 2 bytes/element, ~1e-3 score error.
+    F16,
+    /// Symmetric per-row-scaled int8: 1 byte/element + 4 bytes/row scale.
+    Int8,
+}
+
+impl Quant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Quant::F32 => "f32",
+            Quant::F16 => "f16",
+            Quant::Int8 => "int8",
+        }
+    }
+
+    /// Parse `"f32" | "f16" | "int8" | "i8"` (case-insensitive).
+    pub fn parse(s: &str) -> Option<Quant> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Some(Quant::F32),
+            "f16" | "fp16" | "half" => Some(Quant::F16),
+            "int8" | "i8" => Some(Quant::Int8),
+            _ => None,
+        }
+    }
+
+    /// The `WINDVE_QUANT` override, if set to a recognized codec.
+    pub fn env_override() -> Option<Quant> {
+        std::env::var("WINDVE_QUANT").ok().and_then(|s| Quant::parse(&s))
+    }
+
+    /// `WINDVE_QUANT` or [`Quant::F32`].
+    pub fn from_env() -> Quant {
+        Quant::env_override().unwrap_or(Quant::F32)
+    }
+
+    /// Codecs a test run should cover: the `WINDVE_QUANT` cell when the CI
+    /// matrix pins one, otherwise all three.
+    pub fn modes_under_test() -> Vec<Quant> {
+        match Quant::env_override() {
+            Some(q) => vec![q],
+            None => vec![Quant::F32, Quant::F16, Quant::Int8],
+        }
+    }
+
+    /// Arena bytes one row of `dim` elements occupies (including the
+    /// per-row scale for int8).
+    pub fn bytes_per_row(self, dim: usize) -> usize {
+        match self {
+            Quant::F32 => dim * 4,
+            Quant::F16 => dim * 2,
+            Quant::Int8 => dim + 4,
+        }
+    }
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even. Overflow saturates to
+/// ±inf, NaN collapses to the canonical quiet NaN, sub-f16-subnormal
+/// magnitudes flush to signed zero.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf / NaN.
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+    let half_exp = exp - 112; // re-bias 127 → 15
+    if half_exp >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if half_exp <= 0 {
+        // Subnormal half (or underflow to zero). Shift the mantissa —
+        // with its implicit bit — into subnormal position, rounding to
+        // nearest-even: round bit set AND (result-LSB or any sticky bit).
+        if half_exp < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000;
+        let shift = (14 - half_exp) as u32;
+        let mut half_man = man >> shift;
+        let round_bit = 1u32 << (shift - 1);
+        if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+            half_man += 1;
+        }
+        return sign | half_man as u16;
+    }
+    let mut half = (((half_exp as u32) << 10) | (man >> 13)) as u16;
+    let round_bit = 0x1000u32;
+    if (man & round_bit) != 0 && (man & (3 * round_bit - 1)) != 0 {
+        // Mantissa carry propagates into the exponent bits — and on to
+        // the inf pattern at the very top — by construction.
+        half += 1;
+    }
+    sign | half
+}
+
+/// IEEE binary16 bits → f32 (exact: every f16 value is representable).
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    match exp {
+        0 => {
+            // Zero / subnormal: man · 2⁻²⁴, exact in f32.
+            let mag = man as f32 * f32::from_bits(0x3380_0000);
+            if sign != 0 {
+                -mag
+            } else {
+                mag
+            }
+        }
+        0x1F => f32::from_bits(sign | 0x7F80_0000 | (man << 13)),
+        _ => f32::from_bits(sign | ((exp + 112) << 23) | (man << 13)),
+    }
+}
+
+/// Symmetric per-row int8 quantization: writes codes into `out`, returns
+/// the row scale (`dequant = code · scale`). An all-zero row encodes to
+/// all-zero codes with scale 0.
+pub fn quantize_i8_row(v: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(v.len(), out.len());
+    let max_abs = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    if max_abs == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 127.0 / max_abs;
+    for (o, x) in out.iter_mut().zip(v) {
+        *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    max_abs / 127.0
+}
+
+/// Contiguous row-major row storage under one codec — the arena both flat
+/// and IVF indexes scan. Rows are quantized on [`RowArena::push`] and
+/// scored straight from the encoded bytes by the quantized panel kernels.
+pub enum RowArena {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    I8 { codes: Vec<i8>, scales: Vec<f32> },
+}
+
+impl RowArena {
+    pub fn new(quant: Quant) -> RowArena {
+        match quant {
+            Quant::F32 => RowArena::F32(Vec::new()),
+            Quant::F16 => RowArena::F16(Vec::new()),
+            Quant::Int8 => RowArena::I8 { codes: Vec::new(), scales: Vec::new() },
+        }
+    }
+
+    pub fn quant(&self) -> Quant {
+        match self {
+            RowArena::F32(_) => Quant::F32,
+            RowArena::F16(_) => Quant::F16,
+            RowArena::I8 { .. } => Quant::Int8,
+        }
+    }
+
+    /// Number of stored rows, given the row width.
+    pub fn rows(&self, dim: usize) -> usize {
+        match self {
+            RowArena::F32(d) => d.len() / dim,
+            RowArena::F16(d) => d.len() / dim,
+            RowArena::I8 { codes, .. } => codes.len() / dim,
+        }
+    }
+
+    /// Encode and append one row.
+    pub fn push(&mut self, v: &[f32]) {
+        match self {
+            RowArena::F32(d) => d.extend_from_slice(v),
+            RowArena::F16(d) => d.extend(v.iter().map(|&x| f32_to_f16(x))),
+            RowArena::I8 { codes, scales } => {
+                let start = codes.len();
+                codes.resize(start + v.len(), 0);
+                scales.push(quantize_i8_row(v, &mut codes[start..]));
+            }
+        }
+    }
+
+    /// Append row `r` of `src` (same codec, same row width) by copying
+    /// the already-encoded bytes — both codecs are deterministic, so this
+    /// equals re-encoding the original f32 row without paying for it.
+    pub fn push_row_from(&mut self, src: &RowArena, r: usize, dim: usize) {
+        match (self, src) {
+            (RowArena::F32(d), RowArena::F32(s)) => {
+                d.extend_from_slice(&s[r * dim..(r + 1) * dim])
+            }
+            (RowArena::F16(d), RowArena::F16(s)) => {
+                d.extend_from_slice(&s[r * dim..(r + 1) * dim])
+            }
+            (RowArena::I8 { codes, scales }, RowArena::I8 { codes: sc, scales: ss }) => {
+                codes.extend_from_slice(&sc[r * dim..(r + 1) * dim]);
+                scales.push(ss[r]);
+            }
+            _ => panic!("arena codec mismatch"),
+        }
+    }
+
+    /// Arena footprint in bytes (codes plus per-row scales).
+    pub fn bytes(&self) -> usize {
+        match self {
+            RowArena::F32(d) => d.len() * 4,
+            RowArena::F16(d) => d.len() * 2,
+            RowArena::I8 { codes, scales } => codes.len() + scales.len() * 4,
+        }
+    }
+
+    /// Decode row `r` back to f32 (tests and diagnostics; the scan path
+    /// never does this — it decodes in registers).
+    pub fn dequant_row(&self, r: usize, dim: usize) -> Vec<f32> {
+        match self {
+            RowArena::F32(d) => d[r * dim..(r + 1) * dim].to_vec(),
+            RowArena::F16(d) => d[r * dim..(r + 1) * dim].iter().map(|&h| f16_to_f32(h)).collect(),
+            RowArena::I8 { codes, scales } => codes[r * dim..(r + 1) * dim]
+                .iter()
+                .map(|&c| c as f32 * scales[r])
+                .collect(),
+        }
+    }
+
+    /// Score the query panel against rows `[lo, hi)` through the codec's
+    /// panel kernel: `out[q * (hi - lo) + r] = queries[q] · row[lo + r]`.
+    pub fn panel_scores_into(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        lo: usize,
+        hi: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let nr = hi - lo;
+        match self {
+            RowArena::F32(d) => {
+                kernels::panel_scores_into(queries, nq, &d[lo * dim..hi * dim], nr, dim, out)
+            }
+            RowArena::F16(d) => {
+                kernels::panel_scores_f16_into(queries, nq, &d[lo * dim..hi * dim], nr, dim, out)
+            }
+            RowArena::I8 { codes, scales } => kernels::panel_scores_i8_into(
+                queries,
+                nq,
+                &codes[lo * dim..hi * dim],
+                &scales[lo..hi],
+                nr,
+                dim,
+                out,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn f16_exact_values_roundtrip() {
+        for x in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 65504.0, 1024.0, -3.5] {
+            let h = f32_to_f16(x);
+            assert_eq!(f16_to_f32(h), x, "{x} not exact through f16");
+        }
+    }
+
+    #[test]
+    fn f16_signed_zero_and_specials() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // Overflow saturates to inf; 65520 is the f16 max + half an ulp
+        // and rounds to even (inf).
+        assert_eq!(f32_to_f16(1e6), 0x7C00);
+        assert_eq!(f32_to_f16(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16(-1e6), 0xFC00);
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        // Smallest positive f16 subnormal: 2^-24.
+        let tiny = f32::from_bits(0x3380_0000);
+        assert_eq!(f32_to_f16(tiny), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), tiny);
+        // Below half the smallest subnormal → flush to zero.
+        assert_eq!(f32_to_f16(tiny * 0.49), 0x0000);
+        // Largest subnormal.
+        let h = 0x03FF;
+        assert_eq!(f32_to_f16(f16_to_f32(h)), h);
+    }
+
+    #[test]
+    fn f16_all_finite_bit_patterns_roundtrip() {
+        // decode → encode must be the identity on every finite f16.
+        for h in 0u16..=0xFFFF {
+            if (h >> 10) & 0x1F == 0x1F {
+                continue; // inf/nan
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "bits {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16
+        // (1 + 2^-10); RNE keeps the even mantissa (1.0).
+        let halfway = 1.0f32 + f32::from_bits(0x3A00_0000); // 2^-11
+        assert_eq!(f32_to_f16(halfway), f32_to_f16(1.0));
+        // One f32-ulp above halfway rounds up.
+        let above = f32::from_bits(halfway.to_bits() + 1);
+        assert_eq!(f32_to_f16(above), f32_to_f16(1.0) + 1);
+        // 1 + 1.5·ulp is halfway between odd and even mantissa → even.
+        let odd_even = 1.0f32 + 3.0 * f32::from_bits(0x3A00_0000);
+        assert_eq!(f32_to_f16(odd_even), f32_to_f16(1.0) + 2);
+    }
+
+    #[test]
+    fn i8_roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Pcg::new(7);
+        for _ in 0..200 {
+            let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let mut codes = vec![0i8; v.len()];
+            let scale = quantize_i8_row(&v, &mut codes);
+            for (x, c) in v.iter().zip(&codes) {
+                let err = (*c as f32 * scale - x).abs();
+                assert!(err <= scale * 0.5001 + 1e-7, "err {err} vs scale {scale}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_zero_row_and_extremes() {
+        let mut codes = vec![7i8; 4];
+        assert_eq!(quantize_i8_row(&[0.0; 4], &mut codes), 0.0);
+        assert_eq!(codes, vec![0i8; 4]);
+        let v = [3.0f32, -3.0, 1.5, 0.0];
+        let scale = quantize_i8_row(&v, &mut codes);
+        assert_eq!(codes[0], 127);
+        assert_eq!(codes[1], -127);
+        assert!((127.0 * scale - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_parse_and_bytes() {
+        assert_eq!(Quant::parse("F16"), Some(Quant::F16));
+        assert_eq!(Quant::parse("i8"), Some(Quant::Int8));
+        assert_eq!(Quant::parse("fp32"), Some(Quant::F32));
+        assert_eq!(Quant::parse("pq4"), None);
+        assert_eq!(Quant::F32.bytes_per_row(768), 3072);
+        assert_eq!(Quant::F16.bytes_per_row(768), 1536);
+        assert_eq!(Quant::Int8.bytes_per_row(768), 772);
+        assert_eq!(Quant::Int8.name(), "int8");
+    }
+
+    #[test]
+    fn arena_push_scores_match_dequant_dot() {
+        let mut rng = Pcg::new(9);
+        let dim = 37; // awkward: exercises every kernel tail
+        for quant in [Quant::F32, Quant::F16, Quant::Int8] {
+            let mut arena = RowArena::new(quant);
+            let rows: Vec<Vec<f32>> =
+                (0..11).map(|_| (0..dim).map(|_| rng.normal() as f32).collect()).collect();
+            for r in &rows {
+                arena.push(r);
+            }
+            assert_eq!(arena.rows(dim), 11);
+            assert_eq!(arena.bytes(), 11 * quant.bytes_per_row(dim));
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let mut out = vec![0.0f32; 11];
+            arena.panel_scores_into(&q, 1, 0, 11, dim, &mut out);
+            for (r, got) in out.iter().enumerate() {
+                let deq = arena.dequant_row(r, dim);
+                let want: f32 = q.iter().zip(&deq).map(|(a, b)| a * b).sum();
+                // Kernel vs naive dot differ only by f32 reassociation.
+                assert!(
+                    (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                    "{quant:?} row {r}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -255,7 +255,8 @@ fn prop_sim_round_respects_depths() {
         let npu_depth = g.usize(0, 100);
         let cpu_depth = g.usize(0, 40);
         let clients = g.usize(0, 200);
-        let mut sim = ClosedLoopSim::new(npu, cpu.clone(), npu_depth, cpu_depth, 75, g.u64(0, 1 << 40));
+        let mut sim =
+            ClosedLoopSim::new(npu, cpu.clone(), npu_depth, cpu_depth, 75, g.u64(0, 1 << 40));
         let r = sim.round(clients);
         if r.npu_batch > npu_depth {
             return Err("npu batch over depth".into());
@@ -435,6 +436,225 @@ fn prop_search_batch_equals_per_query_search() {
         }
         Ok(())
     });
+}
+
+/// f16 round-trip: decode∘encode is the identity on every finite f16 bit
+/// pattern, and encode∘decode of an arbitrary f32 errs by at most half an
+/// f16 ulp (≤ |x|·2⁻¹¹ for normal magnitudes, ≤ 2⁻²⁵ in the subnormal
+/// range) — the bound the quantized scan's score epsilon rests on.
+#[test]
+fn prop_f16_roundtrip_within_ulp() {
+    use windve::vecstore::quant::{f16_to_f32, f32_to_f16};
+    property("f16 roundtrip within half ulp", 300, |g: &mut Gen| {
+        // Identity on representable values (random finite bit pattern).
+        let h = loop {
+            let h = g.u64(0, 0x10000) as u16;
+            if (h >> 10) & 0x1F != 0x1F {
+                break h;
+            }
+        };
+        let back = f32_to_f16(f16_to_f32(h));
+        if back != h {
+            return Err(format!("finite f16 {h:#06x} drifted to {back:#06x}"));
+        }
+        // Error bound on arbitrary f32 inside f16's normal range.
+        let x = g.f64(-60000.0, 60000.0) as f32;
+        let rt = f16_to_f32(f32_to_f16(x));
+        let bound = x.abs() * (1.0 / 2048.0) + 3.0e-8; // |x|·2⁻¹¹ + 2⁻²⁵
+        if (rt - x).abs() > bound {
+            return Err(format!("x={x}: roundtrip {rt}, err {} > {bound}", (rt - x).abs()));
+        }
+        Ok(())
+    });
+}
+
+/// int8 codec: every dequantized element is within scale/2 of the
+/// original, codes stay in [-127, 127], and the row max maps to ±127 —
+/// the per-row symmetric contract the score-error bound is derived from.
+#[test]
+fn prop_i8_roundtrip_max_abs_error() {
+    use windve::vecstore::quant::quantize_i8_row;
+    property("int8 roundtrip error <= scale/2", 200, |g: &mut Gen| {
+        let dim = g.usize(1, 256);
+        let amp = g.f64(1e-3, 100.0);
+        let v: Vec<f32> = (0..dim).map(|_| (g.f64(-1.0, 1.0) * amp) as f32).collect();
+        let mut codes = vec![0i8; dim];
+        let scale = quantize_i8_row(&v, &mut codes);
+        let max_abs = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        if max_abs == 0.0 {
+            return if scale == 0.0 && codes.iter().all(|&c| c == 0) {
+                Ok(())
+            } else {
+                Err("zero row must encode to zero codes with zero scale".into())
+            };
+        }
+        if (scale - max_abs / 127.0).abs() > 1e-6 * scale.abs() {
+            return Err(format!("scale {scale} != max_abs/127 {}", max_abs / 127.0));
+        }
+        for (x, c) in v.iter().zip(&codes) {
+            let err = (*c as f32 * scale - x).abs();
+            if err > scale * 0.5001 + 1e-7 {
+                return Err(format!("element err {err} > scale/2 {}", scale / 2.0));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized flat search: every returned score is within the codec's
+/// documented epsilon of the full-precision score of the same row —
+/// f16 within ~1e-3 on unit vectors, int8 within ‖q‖₁·scale/2.
+#[test]
+fn prop_quantized_scores_within_codec_epsilon() {
+    use windve::vecstore::quant::quantize_i8_row;
+    use windve::vecstore::{FlatIndex, Index, Quant};
+    property("quantized scores within codec epsilon", 25, |g: &mut Gen| {
+        let dim = *g.pick(&[16usize, 24, 48]);
+        let n = g.usize(10, 150);
+        let mut flat = FlatIndex::new(dim);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..n {
+            let mut v: Vec<f32> = (0..dim).map(|_| g.rng().normal() as f32).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+            v.iter_mut().for_each(|x| *x /= norm);
+            flat.add(i as u64, &v);
+            rows.push(v);
+        }
+        let mut q: Vec<f32> = (0..dim).map(|_| g.rng().normal() as f32).collect();
+        let qnorm = q.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        q.iter_mut().for_each(|x| *x /= qnorm);
+        let q_l1: f32 = q.iter().map(|x| x.abs()).sum();
+        for quant in Quant::modes_under_test() {
+            let qidx = flat.quantize(quant);
+            for hit in qidx.search(&q, 10) {
+                let row = &rows[hit.id as usize];
+                let exact: f32 = q.iter().zip(row).map(|(a, b)| a * b).sum();
+                let eps = match quant {
+                    Quant::F32 => 1e-4 * (1.0 + exact.abs()),
+                    Quant::F16 => 1.5e-3 * (1.0 + exact.abs()),
+                    Quant::Int8 => {
+                        let mut codes = vec![0i8; dim];
+                        let scale = quantize_i8_row(row, &mut codes);
+                        q_l1 * scale * 0.51 + 1e-4 * (1.0 + exact.abs())
+                    }
+                };
+                if (hit.score - exact).abs() > eps {
+                    return Err(format!(
+                        "{quant:?} id {}: score {} vs exact {exact} (eps {eps})",
+                        hit.id, hit.score
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Quantized `search_batch` returns exactly what per-query `search`
+/// returns (ids, order, scores) for the quantized flat and IVF indexes,
+/// across shard counts — batching quantized scans must change bandwidth,
+/// never results.
+#[test]
+fn prop_quantized_search_batch_equals_per_query() {
+    use windve::vecstore::{Index, IvfIndex, Quant, QuantizedFlatIndex};
+    property("quantized search_batch == per-query", 30, |g: &mut Gen| {
+        let dim = *g.pick(&[8usize, 24, 48]);
+        let n = g.usize(1, 250);
+        let nq = g.usize(1, 8);
+        let k = g.usize(1, 12);
+        for quant in Quant::modes_under_test() {
+            let mut qflat = QuantizedFlatIndex::new(dim, quant);
+            let mut ivf = IvfIndex::with_quant(dim, 8, g.usize(1, 9), quant);
+            for i in 0..n {
+                // Coarse grid values force plenty of exact score ties.
+                let v: Vec<f32> = (0..dim).map(|_| (g.u32(0, 5) as f32 - 2.0) * 0.5).collect();
+                qflat.add(i as u64, &v);
+                ivf.add(i as u64, &v);
+            }
+            if g.bool() {
+                ivf.build(g.u64(0, 1000));
+            }
+            let queries: Vec<Vec<f32>> = (0..nq)
+                .map(|_| (0..dim).map(|_| g.f64(-1.0, 1.0) as f32).collect())
+                .collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let shards = g.usize(1, 5);
+            for (name, batch) in [
+                ("qflat/auto", qflat.search_batch(&qrefs, k)),
+                ("qflat/sharded", qflat.search_batch_with_threads(&qrefs, k, shards)),
+                ("ivf", ivf.search_batch(&qrefs, k)),
+            ] {
+                let reference: &dyn Index =
+                    if name.starts_with("qflat") { &qflat } else { &ivf };
+                for (qi, q) in queries.iter().enumerate() {
+                    let single = reference.search(q, k);
+                    if batch[qi] != single {
+                        return Err(format!(
+                            "{name} {quant:?} q{qi}: batch {:?} != single {:?}",
+                            batch[qi], single
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Top-k overlap vs f32 ground truth on random Gaussian unit vectors:
+/// each quantized codec must keep aggregate overlap ≥ 0.9 (and never
+/// collapse on any single case) — the recall bar for scanning the
+/// compact arena instead of the f32 one.
+#[test]
+fn prop_quantized_topk_overlap_vs_f32() {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use windve::vecstore::{FlatIndex, Index, Quant};
+    let tally: RefCell<HashMap<&'static str, (u64, u64)>> = RefCell::new(HashMap::new());
+    let k = 10usize;
+    property("quantized top-k overlap >= 0.9", 25, |g: &mut Gen| {
+        let dim = 16;
+        let n = 200;
+        let mut flat = FlatIndex::new(dim);
+        for i in 0..n {
+            let mut v: Vec<f32> = (0..dim).map(|_| g.rng().normal() as f32).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+            v.iter_mut().for_each(|x| *x /= norm);
+            flat.add(i as u64, &v);
+        }
+        let queries: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v: Vec<f32> = (0..dim).map(|_| g.rng().normal() as f32).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+                v.iter_mut().for_each(|x| *x /= norm);
+                v
+            })
+            .collect();
+        for quant in Quant::modes_under_test() {
+            let qidx = flat.quantize(quant);
+            let mut case_hits = 0u64;
+            for q in &queries {
+                let truth: Vec<u64> = flat.search(q, k).into_iter().map(|h| h.id).collect();
+                let approx = qidx.search(q, k);
+                case_hits += approx.iter().filter(|h| truth.contains(&h.id)).count() as u64;
+            }
+            let mut t = tally.borrow_mut();
+            let e = t.entry(quant.name()).or_insert((0, 0));
+            e.0 += case_hits;
+            e.1 += (queries.len() * k) as u64;
+            // A single catastrophic case means the codec is broken, not
+            // just noisy at the k-boundary.
+            let case_overlap = case_hits as f64 / (queries.len() * k) as f64;
+            if case_overlap < 0.6 {
+                return Err(format!("{quant:?} case overlap {case_overlap:.2} < 0.6"));
+            }
+        }
+        Ok(())
+    });
+    for (codec, (hits, total)) in tally.borrow().iter() {
+        let overlap = *hits as f64 / *total as f64;
+        assert!(overlap >= 0.9, "{codec}: aggregate top-{k} overlap {overlap:.3} < 0.9");
+    }
 }
 
 /// Mismatched queue releases saturate at zero occupancy, are counted,
