@@ -180,6 +180,7 @@ fn main() -> anyhow::Result<()> {
             cpu_pin_cores: None,
             cache_entries: 0,
             cache_key_space: (8192, 128),
+            ..ServiceConfig::default()
         },
         vec![real_factory(artifacts.clone(), "bge_micro".into())],
         vec![real_factory(artifacts.clone(), "bge_micro".into())],
@@ -200,6 +201,7 @@ fn main() -> anyhow::Result<()> {
             cpu_pin_cores: None,
             cache_entries: 0,
             cache_key_space: (8192, 128),
+            ..ServiceConfig::default()
         },
         vec![real_factory(artifacts.clone(), "bge_micro".into())],
         vec![],

@@ -1,4 +1,7 @@
-//! The queue manager — Algorithm 1 of the paper, verbatim semantics:
+//! The queue manager — Algorithm 1 of the paper, extended from
+//! single-class slot counting to **weighted multi-class admission**.
+//!
+//! # Embedding admission (Algorithm 1, verbatim semantics)
 //!
 //! ```text
 //! foreach query:
@@ -14,9 +17,38 @@
 //! dispatch until their batch completes, so "depth" bounds the device's
 //! in-flight concurrency exactly as the paper's C_d does.
 //!
-//! Lock-free: occupancy is a pair of atomics with CAS admission, making
+//! # Retrieval admission (Eqs. 9-10 extended to scan work)
+//!
+//! The paper derives the CPU queue depth C^max_CPU (Eq. 9) from the
+//! largest concurrency whose latency still meets the SLO (Eq. 10) — a
+//! *budget of concurrent CPU work*, not a count of embedding queries
+//! specifically. PR 1/2 added batched top-k retrieval scans that run on
+//! the same host cores but outside this accounting, so mixed
+//! embed+retrieve traffic could oversubscribe the CPU past its
+//! calibrated depth. [`WorkClass`] closes that gap:
+//!
+//! * Each admitted unit of work holds `cost` **slots** (cost units) of
+//!   its device pool. An embedding query costs 1 slot — the unit the
+//!   depth was calibrated in.
+//! * A retrieval scan's cost is its scanned-bytes estimate normalized to
+//!   embed-query units: `cost = ceil(rows · bytes_per_row / U)` where
+//!   `bytes_per_row` comes from the active `vecstore::Quant` codec and
+//!   `U` is the embed cost unit ([`retrieval_slot_cost`]). The scan is
+//!   memory-bound, so bytes streamed is the honest proxy for how much of
+//!   the calibrated CPU budget one scan consumes.
+//! * The CPU pool is **shared**: embed slots + retrieval slot-cost never
+//!   exceed `cpu_depth` (the paper's C^max_CPU), and retrieval may
+//!   additionally be capped below the pool ([`QueueManager::with_retrieval_cap`])
+//!   using the per-class depths from
+//!   [`crate::estimator::depth::fine_tune_depths_mixed`].
+//! * Retrieval never routes to the NPU here — the "batched NPU retrieval
+//!   offload" ROADMAP item will add that leg on top of this accounting.
+//!
+//! Lock-free: occupancy is a set of atomics with CAS admission, making
 //! dispatch safe from any number of front-end threads (and cheap — see
-//! benches/micro.rs).
+//! benches/micro.rs). Per-class CPU occupancy is acquired before the
+//! shared pool (with rollback on pool exhaustion), so the cap and the
+//! pool bound both hold at every instant.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -39,6 +71,32 @@ impl std::fmt::Display for Route {
     }
 }
 
+/// Admission class of one unit of work (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkClass {
+    /// One embedding query — cost 1, the unit depths are calibrated in.
+    Embed,
+    /// One batched top-k scan — cost from [`retrieval_slot_cost`].
+    Retrieve,
+}
+
+impl std::fmt::Display for WorkClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkClass::Embed => write!(f, "embed"),
+            WorkClass::Retrieve => write!(f, "retrieve"),
+        }
+    }
+}
+
+/// Slot cost of one retrieval scan: `scan_bytes` (rows × bytes_per_row of
+/// the active codec) normalized to embed-query cost units of `unit_bytes`,
+/// rounded up, never below 1 — even a tiny scan holds a slot while it runs
+/// so occupancy accounting stays conservative.
+pub fn retrieval_slot_cost(scan_bytes: usize, unit_bytes: usize) -> usize {
+    scan_bytes.div_ceil(unit_bytes.max(1)).max(1)
+}
+
 /// Dispatch/release counters (see [`QueueManager::stats`]). A named
 /// struct so new counters don't break existing destructuring call sites.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -46,81 +104,170 @@ pub struct QueueStats {
     pub routed_npu: u64,
     pub routed_cpu: u64,
     pub rejected: u64,
+    /// Retrieval scans admitted to the CPU pool.
+    pub routed_retrieve: u64,
+    /// Retrieval scans rejected (cap or pool full): backpressure.
+    pub rejected_retrieve: u64,
     /// Releases without a matching dispatch (see
-    /// [`QueueManager::release`]); 0 in a healthy service.
+    /// [`QueueManager::release_class`]); 0 in a healthy service.
     pub bad_releases: u64,
 }
 
-/// Bounded two-queue admission state.
+/// Bounded multi-class admission state over the two device pools.
 #[derive(Debug)]
 pub struct QueueManager {
     npu_depth: usize,
+    /// Shared CPU pool in cost units (the paper's C^max_CPU).
     cpu_depth: usize,
     hetero: bool,
+    /// Per-class cap on retrieval's share of the CPU pool (≤ cpu_depth).
+    retrieve_cap: usize,
+    /// Total in-flight cost units per pool (authoritative for admission).
     npu_len: AtomicUsize,
     cpu_len: AtomicUsize,
+    /// Per-class CPU occupancy; embed_cpu + retr_cpu == cpu_len at rest.
+    embed_cpu: AtomicUsize,
+    retr_cpu: AtomicUsize,
     // counters for /stats
     routed_npu: AtomicU64,
     routed_cpu: AtomicU64,
     rejected: AtomicU64,
+    routed_retrieve: AtomicU64,
+    rejected_retrieve: AtomicU64,
     bad_releases: AtomicU64,
 }
 
 impl QueueManager {
     /// `cpu_depth` is ignored unless `hetero` (Algorithm 2 forces the
-    /// option off when only one device class exists).
+    /// option off when only one device class exists). Retrieval may use
+    /// the whole CPU pool; a disabled pool (non-hetero) leaves retrieval
+    /// with no budget — use [`QueueManager::with_retrieval_cap`] to
+    /// budget scans on an NPU-only embedding deployment.
     pub fn new(npu_depth: usize, cpu_depth: usize, hetero: bool) -> QueueManager {
+        let pool = if hetero { cpu_depth } else { 0 };
+        QueueManager::with_retrieval_cap(npu_depth, pool, hetero, pool)
+    }
+
+    /// Full multi-class wiring: `cpu_depth` is the shared CPU pool (NOT
+    /// zeroed by `!hetero` — a non-hetero manager with `cpu_depth > 0`
+    /// budgets the CPU purely for retrieval scans; embeds still never
+    /// route there), `retrieve_cap` bounds retrieval's share of it.
+    pub fn with_retrieval_cap(
+        npu_depth: usize,
+        cpu_depth: usize,
+        hetero: bool,
+        retrieve_cap: usize,
+    ) -> QueueManager {
         QueueManager {
             npu_depth,
-            cpu_depth: if hetero { cpu_depth } else { 0 },
+            cpu_depth,
             hetero,
+            retrieve_cap: retrieve_cap.min(cpu_depth),
             npu_len: AtomicUsize::new(0),
             cpu_len: AtomicUsize::new(0),
+            embed_cpu: AtomicUsize::new(0),
+            retr_cpu: AtomicUsize::new(0),
             routed_npu: AtomicU64::new(0),
             routed_cpu: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            routed_retrieve: AtomicU64::new(0),
+            rejected_retrieve: AtomicU64::new(0),
             bad_releases: AtomicU64::new(0),
         }
     }
 
-    /// Algorithm 1 for one query. On `Npu`/`Cpu` the corresponding
-    /// occupancy is incremented; the caller must [`QueueManager::release`]
-    /// when the query's batch completes (or the submit fails downstream).
+    /// Algorithm 1 for one embedding query. On `Npu`/`Cpu` the
+    /// corresponding occupancy is incremented; the caller must
+    /// [`QueueManager::release`] when the query's batch completes (or the
+    /// submit fails downstream).
     pub fn dispatch(&self) -> Route {
-        if try_acquire(&self.npu_len, self.npu_depth) {
-            self.routed_npu.fetch_add(1, Ordering::Relaxed);
-            return Route::Npu;
-        }
-        if self.hetero && try_acquire(&self.cpu_len, self.cpu_depth) {
-            self.routed_cpu.fetch_add(1, Ordering::Relaxed);
-            return Route::Cpu;
-        }
-        self.rejected.fetch_add(1, Ordering::Relaxed);
-        Route::Busy
+        self.dispatch_class(WorkClass::Embed, 1)
     }
 
-    /// Return one slot. Must match a prior successful dispatch.
-    ///
-    /// Hardened against mismatched releases in release builds: the
-    /// decrement saturates at zero (a plain `fetch_sub` would wrap the
-    /// occupancy to `usize::MAX` and permanently wedge admission into
-    /// BUSY), and every mismatch is counted in [`QueueManager::stats`]
-    /// so operators can see the accounting bug instead of absorbing it.
-    pub fn release(&self, route: Route) {
-        let q = match route {
-            Route::Npu => &self.npu_len,
-            Route::Cpu => &self.cpu_len,
-            Route::Busy => return,
-        };
-        let mut cur = q.load(Ordering::Acquire);
-        loop {
-            if cur == 0 {
-                self.bad_releases.fetch_add(1, Ordering::Relaxed);
-                return;
+    /// Weighted multi-class admission: acquire `cost` slots for one unit
+    /// of `class` work. Embeds follow Algorithm 1 (NPU first, CPU
+    /// overflow when hetero); retrieval scans acquire CPU slots only,
+    /// bounded by both the shared pool depth and the retrieval cap.
+    /// `cost` is clamped to ≥ 1. The caller must
+    /// [`QueueManager::release_class`] the same `(class, route, cost)`
+    /// when the work completes.
+    pub fn dispatch_class(&self, class: WorkClass, cost: usize) -> Route {
+        let cost = cost.max(1);
+        match class {
+            WorkClass::Embed => {
+                if try_acquire(&self.npu_len, self.npu_depth, cost) {
+                    self.routed_npu.fetch_add(1, Ordering::Relaxed);
+                    return Route::Npu;
+                }
+                if self.hetero && try_acquire(&self.cpu_len, self.cpu_depth, cost) {
+                    self.embed_cpu.fetch_add(cost, Ordering::AcqRel);
+                    self.routed_cpu.fetch_add(1, Ordering::Relaxed);
+                    return Route::Cpu;
+                }
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                Route::Busy
             }
-            match q.compare_exchange_weak(cur, cur - 1, Ordering::AcqRel, Ordering::Acquire) {
-                Ok(_) => return,
-                Err(now) => cur = now,
+            WorkClass::Retrieve => {
+                // Class cap first, shared pool second; roll the cap
+                // acquisition back if the pool is exhausted so a rejected
+                // scan leaves no residue.
+                if try_acquire(&self.retr_cpu, self.retrieve_cap, cost) {
+                    if try_acquire(&self.cpu_len, self.cpu_depth, cost) {
+                        self.routed_retrieve.fetch_add(1, Ordering::Relaxed);
+                        return Route::Cpu;
+                    }
+                    saturating_release(&self.retr_cpu, cost);
+                }
+                self.rejected_retrieve.fetch_add(1, Ordering::Relaxed);
+                Route::Busy
+            }
+        }
+    }
+
+    /// Return one embedding slot. Must match a prior successful dispatch.
+    pub fn release(&self, route: Route) {
+        self.release_class(WorkClass::Embed, route, 1);
+    }
+
+    /// Return `cost` slots of `class` work. Must match a prior successful
+    /// [`QueueManager::dispatch_class`].
+    ///
+    /// Hardened against mismatched releases in release builds, the same
+    /// way for every class: decrements saturate at zero (a plain
+    /// `fetch_sub` would wrap occupancy to `usize::MAX` and permanently
+    /// wedge admission into BUSY), the shared pool is only decremented by
+    /// what the per-class counter actually freed (so a double-released
+    /// retrieval slot can never liberate capacity an embed legitimately
+    /// holds), and every mismatch is counted in
+    /// [`QueueManager::stats`] so operators can see the accounting bug
+    /// instead of absorbing it.
+    pub fn release_class(&self, class: WorkClass, route: Route, cost: usize) {
+        let cost = cost.max(1);
+        match (class, route) {
+            (_, Route::Busy) => {}
+            (WorkClass::Embed, Route::Npu) => {
+                if saturating_release(&self.npu_len, cost) < cost {
+                    self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            (WorkClass::Embed, Route::Cpu) => {
+                let freed = saturating_release(&self.embed_cpu, cost);
+                if freed < cost {
+                    self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                }
+                saturating_release(&self.cpu_len, freed);
+            }
+            (WorkClass::Retrieve, Route::Cpu) => {
+                let freed = saturating_release(&self.retr_cpu, cost);
+                if freed < cost {
+                    self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                }
+                saturating_release(&self.cpu_len, freed);
+            }
+            // No admission path grants retrieval an NPU slot (yet); a
+            // release claiming one is a caller bug, not capacity.
+            (WorkClass::Retrieve, Route::Npu) => {
+                self.bad_releases.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -129,8 +276,19 @@ impl QueueManager {
         self.npu_len.load(Ordering::Acquire)
     }
 
+    /// Total CPU-pool occupancy in cost units (embed + retrieval).
     pub fn cpu_occupancy(&self) -> usize {
         self.cpu_len.load(Ordering::Acquire)
+    }
+
+    /// Embedding queries' share of the CPU pool.
+    pub fn embed_cpu_occupancy(&self) -> usize {
+        self.embed_cpu.load(Ordering::Acquire)
+    }
+
+    /// Retrieval scans' share of the CPU pool (cost units).
+    pub fn retrieve_cpu_occupancy(&self) -> usize {
+        self.retr_cpu.load(Ordering::Acquire)
     }
 
     pub fn npu_depth(&self) -> usize {
@@ -139,6 +297,11 @@ impl QueueManager {
 
     pub fn cpu_depth(&self) -> usize {
         self.cpu_depth
+    }
+
+    /// Retrieval's cap within the CPU pool (cost units).
+    pub fn retrieve_cap(&self) -> usize {
+        self.retrieve_cap
     }
 
     pub fn hetero(&self) -> bool {
@@ -155,20 +318,39 @@ impl QueueManager {
             routed_npu: self.routed_npu.load(Ordering::Relaxed),
             routed_cpu: self.routed_cpu.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            routed_retrieve: self.routed_retrieve.load(Ordering::Relaxed),
+            rejected_retrieve: self.rejected_retrieve.load(Ordering::Relaxed),
             bad_releases: self.bad_releases.load(Ordering::Relaxed),
         }
     }
 }
 
-/// CAS-increment `len` if below `cap`.
-fn try_acquire(len: &AtomicUsize, cap: usize) -> bool {
+/// CAS-increment `len` by `cost` if the result stays ≤ `cap`.
+fn try_acquire(len: &AtomicUsize, cap: usize, cost: usize) -> bool {
     let mut cur = len.load(Ordering::Relaxed);
     loop {
-        if cur >= cap {
-            return false;
-        }
-        match len.compare_exchange_weak(cur, cur + 1, Ordering::AcqRel, Ordering::Relaxed) {
+        let next = match cur.checked_add(cost) {
+            Some(n) if n <= cap => n,
+            _ => return false,
+        };
+        match len.compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Relaxed) {
             Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// CAS-decrement `len` by up to `cost`, saturating at zero; returns how
+/// much was actually freed.
+fn saturating_release(len: &AtomicUsize, cost: usize) -> usize {
+    let mut cur = len.load(Ordering::Acquire);
+    loop {
+        let freed = cur.min(cost);
+        if freed == 0 {
+            return 0;
+        }
+        match len.compare_exchange_weak(cur, cur - freed, Ordering::AcqRel, Ordering::Acquire) {
+            Ok(_) => return freed,
             Err(now) => cur = now,
         }
     }
@@ -233,7 +415,12 @@ mod tests {
         qm.dispatch();
         assert_eq!(
             qm.stats(),
-            QueueStats { routed_npu: 1, routed_cpu: 1, rejected: 1, bad_releases: 0 }
+            QueueStats {
+                routed_npu: 1,
+                routed_cpu: 1,
+                rejected: 1,
+                ..QueueStats::default()
+            }
         );
     }
 
@@ -255,6 +442,130 @@ mod tests {
         qm.release(Route::Npu);
         assert_eq!(qm.stats().bad_releases, 2);
         assert_eq!(qm.npu_occupancy(), 1);
+    }
+
+    #[test]
+    fn retrieval_cost_shares_cpu_pool_with_embeds() {
+        // Pool of 6: a cost-4 scan + 2 embed overflows fill it exactly.
+        let qm = QueueManager::with_retrieval_cap(1, 6, true, 6);
+        assert_eq!(qm.dispatch(), Route::Npu); // NPU fills first
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 4), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        // Pool is full: both classes now bounce.
+        assert_eq!(qm.dispatch(), Route::Busy);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 1), Route::Busy);
+        assert_eq!(qm.cpu_occupancy(), 6);
+        assert_eq!(qm.embed_cpu_occupancy(), 2);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 4);
+        // Releasing the scan frees exactly its cost.
+        qm.release_class(WorkClass::Retrieve, Route::Cpu, 4);
+        assert_eq!(qm.cpu_occupancy(), 2);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 4), Route::Cpu);
+        let st = qm.stats();
+        assert_eq!(st.routed_retrieve, 2);
+        assert_eq!(st.rejected_retrieve, 1);
+        assert_eq!(st.bad_releases, 0);
+    }
+
+    #[test]
+    fn retrieve_cap_bounds_class_below_pool() {
+        let qm = QueueManager::with_retrieval_cap(0, 8, true, 3);
+        assert_eq!(qm.retrieve_cap(), 3);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 3), Route::Cpu);
+        // Cap exhausted even though the pool has 5 free units.
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 1), Route::Busy);
+        // Embeds still fill the remaining pool.
+        for _ in 0..5 {
+            assert_eq!(qm.dispatch(), Route::Cpu);
+        }
+        assert_eq!(qm.dispatch(), Route::Busy);
+        assert_eq!(qm.cpu_occupancy(), 8);
+    }
+
+    #[test]
+    fn oversized_scan_cost_never_admits_but_leaves_no_residue() {
+        let qm = QueueManager::with_retrieval_cap(0, 4, true, 4);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 5), Route::Busy);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_eq!(qm.cpu_occupancy(), 0);
+        // A pool-sized scan still fits afterwards.
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 4), Route::Cpu);
+    }
+
+    #[test]
+    fn rejected_scan_rolls_back_cap_when_pool_is_full() {
+        // Cap 4 of pool 4; embeds hold 2 pool units, so a cost-3 scan
+        // passes the cap check but fails the pool check — the cap
+        // acquisition must be rolled back.
+        let qm = QueueManager::with_retrieval_cap(0, 4, true, 4);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 3), Route::Busy);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        // A scan that fits the pool remainder is admitted.
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 2), Route::Cpu);
+        assert_eq!(qm.cpu_occupancy(), 4);
+    }
+
+    #[test]
+    fn double_release_of_retrieval_slot_is_contained() {
+        // Regression (satellite): the class-aware release must be
+        // hardened exactly like the legacy one — saturating decrement,
+        // counted in bad_releases, and a double release must not free
+        // capacity another class holds.
+        let qm = QueueManager::with_retrieval_cap(0, 4, true, 4);
+        assert_eq!(qm.dispatch(), Route::Cpu); // embed holds 1 pool unit
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 2), Route::Cpu);
+        qm.release_class(WorkClass::Retrieve, Route::Cpu, 2);
+        assert_eq!(qm.cpu_occupancy(), 1);
+        assert_eq!(qm.stats().bad_releases, 0);
+        // The double release: retrieval holds nothing, so nothing may be
+        // freed — especially not the embed's pool unit.
+        qm.release_class(WorkClass::Retrieve, Route::Cpu, 2);
+        assert_eq!(qm.stats().bad_releases, 1);
+        assert_eq!(qm.cpu_occupancy(), 1);
+        assert_eq!(qm.embed_cpu_occupancy(), 1);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        // A retrieval release claiming an NPU slot is a pure caller bug.
+        qm.release_class(WorkClass::Retrieve, Route::Npu, 1);
+        assert_eq!(qm.stats().bad_releases, 2);
+        assert_eq!(qm.npu_occupancy(), 0);
+        // Accounting is intact: pool still admits exactly the remainder.
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 3), Route::Cpu);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 1), Route::Busy);
+    }
+
+    #[test]
+    fn zero_cost_dispatch_clamps_to_one_slot() {
+        let qm = QueueManager::with_retrieval_cap(0, 1, true, 1);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 0), Route::Cpu);
+        assert_eq!(qm.cpu_occupancy(), 1);
+        qm.release_class(WorkClass::Retrieve, Route::Cpu, 0);
+        assert_eq!(qm.cpu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 0);
+    }
+
+    #[test]
+    fn retrieval_slot_cost_formula() {
+        // ceil(bytes / unit), floor 1.
+        assert_eq!(retrieval_slot_cost(0, 1024), 1);
+        assert_eq!(retrieval_slot_cost(1, 1024), 1);
+        assert_eq!(retrieval_slot_cost(1024, 1024), 1);
+        assert_eq!(retrieval_slot_cost(1025, 1024), 2);
+        assert_eq!(retrieval_slot_cost(4096, 1024), 4);
+        // Degenerate unit never divides by zero.
+        assert_eq!(retrieval_slot_cost(7, 0), 7);
+    }
+
+    #[test]
+    fn non_hetero_with_retrieval_cap_budgets_scans_only() {
+        // NPU-only embedding deployment that still bounds scan work.
+        let qm = QueueManager::with_retrieval_cap(1, 4, false, 4);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Busy); // embeds never route CPU
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 4), Route::Cpu);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 1), Route::Busy);
     }
 
     #[test]
@@ -288,5 +599,37 @@ mod tests {
         // admission never exceeded depth
         assert_eq!(total.0 as usize, 40);
         assert_eq!(total.1 as usize, 10);
+    }
+
+    #[test]
+    fn concurrent_mixed_classes_never_exceed_pool() {
+        let qm = Arc::new(QueueManager::with_retrieval_cap(8, 16, true, 12));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let qm = Arc::clone(&qm);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500 {
+                    let (class, cost) = if (t + i) % 3 == 0 {
+                        (WorkClass::Retrieve, 1 + (i % 4))
+                    } else {
+                        (WorkClass::Embed, 1)
+                    };
+                    let route = qm.dispatch_class(class, cost);
+                    // pool + cap bounds hold at every instant
+                    assert!(qm.cpu_occupancy() <= 16);
+                    assert!(qm.retrieve_cpu_occupancy() <= 12);
+                    assert!(qm.npu_occupancy() <= 8);
+                    qm.release_class(class, route, cost);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(qm.npu_occupancy(), 0);
+        assert_eq!(qm.cpu_occupancy(), 0);
+        assert_eq!(qm.embed_cpu_occupancy(), 0);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 0);
     }
 }

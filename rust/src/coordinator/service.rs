@@ -22,7 +22,7 @@ use anyhow::Result;
 use super::batcher::{DeviceQueue, Pending};
 use super::cache::EmbeddingCache;
 use super::instance::{spawn_worker, BackendFactory, Reply};
-use super::queue_manager::{QueueManager, Route};
+use super::queue_manager::{QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
 use crate::metrics::Registry;
 use crate::vecstore::{Hit, Quant};
@@ -55,7 +55,11 @@ impl std::fmt::Display for ServeError {
 pub struct ServiceConfig {
     /// NPU queue depth (C^max_NPU, Eqs. 7-8).
     pub npu_depth: usize,
-    /// CPU queue depth (C^max_CPU, Eqs. 9-10). Ignored unless `hetero`.
+    /// CPU queue depth (C^max_CPU, Eqs. 9-10): the shared pool embed
+    /// overflow queries (when `hetero`) and admitted retrieval scans
+    /// draw from. With `cpu_depth == 0` there is no calibrated CPU
+    /// budget at all — embeds never overflow and retrieval scans run
+    /// unaccounted (admission needs a pool to meter against).
     pub cpu_depth: usize,
     /// Heterogeneous-computing option (Algorithm 2 may force it off).
     pub hetero: bool,
@@ -70,7 +74,31 @@ pub struct ServiceConfig {
     /// Tokenizer params for cache keys (vocab, max_len); defaults match
     /// bge_micro buckets.
     pub cache_key_space: (u32, usize),
+    /// Gate retrieval scans through the queue manager's CPU admission
+    /// (paper Eqs. 9-10 extended to scan work). When false — or when
+    /// `cpu_depth == 0`, where there is no calibrated budget to enforce
+    /// (an NPU-only deployment must not lose retrieval to a zero cap) —
+    /// scans run outside depth accounting, the PR-1/2 behavior.
+    /// Admission gates scheduling only, never scoring, so results are
+    /// identical either way.
+    pub retrieval_admission: bool,
+    /// Cap (cost units) on the CPU depth retrieval scans may hold
+    /// concurrently; `None` lets scans compete for the whole CPU pool.
+    /// Calibrate with `estimator::depth::fine_tune_depths_mixed`.
+    pub retrieval_depth: Option<usize>,
+    /// Scanned-arena bytes equal to one embed-query cost unit — the
+    /// normalizer in `queue_manager::retrieval_slot_cost`.
+    pub retrieval_cost_unit_bytes: usize,
 }
+
+/// Default embed-query cost unit: 32 MiB of scanned arena ≈ the memory
+/// traffic of one CPU embedding query's working set. At dim-768 f32
+/// (3 KiB/row) one unit is ~10k scanned rows; a 1M-row corpus scan
+/// nominally costs ~96 units — the service clamps the cost to the
+/// retrieval cap, so such a scan holds the whole retrieval budget and
+/// scans serialize (visible backpressure, never permanent starvation).
+/// Tune per deployment.
+pub const EMBED_COST_UNIT_BYTES: usize = 32 << 20;
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -83,7 +111,26 @@ impl Default for ServiceConfig {
             cpu_pin_cores: None,
             cache_entries: 0,
             cache_key_space: (8192, 128),
+            retrieval_admission: true,
+            retrieval_depth: None,
+            retrieval_cost_unit_bytes: EMBED_COST_UNIT_BYTES,
         }
+    }
+}
+
+/// RAII hold on an admitted retrieval scan's slots: releases on drop so
+/// the slots come back even if the scan panics (poisoned index lock,
+/// kernel assert) — a leaked scan admission would wedge retrieval into
+/// BUSY permanently.
+struct ScanAdmission<'a> {
+    qm: &'a QueueManager,
+    route: Route,
+    cost: usize,
+}
+
+impl Drop for ScanAdmission<'_> {
+    fn drop(&mut self) {
+        self.qm.release_class(WorkClass::Retrieve, self.route, self.cost);
     }
 }
 
@@ -127,6 +174,8 @@ pub struct WindVE {
     /// Attached post-start via [`WindVE::attach_retrieval`]; behind a
     /// mutex so a shared (`Arc<WindVE>`) service can still be wired.
     retrieval: std::sync::Mutex<Option<Arc<RetrievalExecutor>>>,
+    retrieval_admission: bool,
+    retrieval_cost_unit_bytes: usize,
     pub metrics: Registry,
 }
 
@@ -154,7 +203,16 @@ impl WindVE {
         );
 
         let metrics = Registry::new();
-        let qm = Arc::new(QueueManager::new(cfg.npu_depth, cfg.cpu_depth, hetero));
+        // The CPU pool exists regardless of hetero (retrieval scans run
+        // on host cores either way); `hetero` only gates whether embeds
+        // may overflow into it (Algorithm 1).
+        let retrieve_cap = cfg.retrieval_depth.unwrap_or(cfg.cpu_depth).min(cfg.cpu_depth);
+        let qm = Arc::new(QueueManager::with_retrieval_cap(
+            cfg.npu_depth,
+            cfg.cpu_depth,
+            hetero,
+            retrieve_cap,
+        ));
         let npu_queue = Arc::new(DeviceQueue::new());
         let cpu_queue = hetero.then(|| Arc::new(DeviceQueue::new()));
 
@@ -193,6 +251,11 @@ impl WindVE {
             cache,
             cache_key_space: cfg.cache_key_space,
             retrieval: std::sync::Mutex::new(None),
+            // A zero CPU pool means there is no calibrated budget to
+            // meter scans against; enforcing it would turn every
+            // retrieval into BUSY on an NPU-only deployment.
+            retrieval_admission: cfg.retrieval_admission && cfg.cpu_depth > 0,
+            retrieval_cost_unit_bytes: cfg.retrieval_cost_unit_bytes,
             metrics,
         })
     }
@@ -362,8 +425,39 @@ impl WindVE {
                 panel.push(v.as_slice());
             }
         }
-        // Nothing survived embedding (e.g. a full-BUSY burst): skip the
-        // scan so the latency histogram only records real scan work.
+        // Admission (Eqs. 9-10 extended to scan work): the one batched
+        // scan holds CPU slots in proportion to the bytes it will stream
+        // (`RetrievalExecutor::scan_cost`), sharing the calibrated CPU
+        // depth with embed overflow queries. BUSY is backpressure on the
+        // whole surviving panel — the service declines instead of
+        // oversubscribing the host past its calibrated depth.
+        let mut admitted: Option<ScanAdmission<'_>> = None;
+        if !panel.is_empty() && self.retrieval_admission {
+            // Clamp to the retrieval cap: a scan whose byte-cost exceeds
+            // the whole budget degenerates to a full-budget hold (scans
+            // serialize) instead of a permanently unschedulable request
+            // that would BUSY every retrieval on a large corpus.
+            let cap = self.qm.retrieve_cap();
+            let cost = exec.scan_cost(self.retrieval_cost_unit_bytes).min(cap.max(1));
+            match self.qm.dispatch_class(WorkClass::Retrieve, cost) {
+                Route::Busy => {
+                    self.metrics.counter("service.retrieve_busy").inc();
+                    for &i in &panel_idx {
+                        failures[i] = Some(ServeError::Busy);
+                    }
+                    panel_idx.clear();
+                    panel.clear();
+                }
+                route => {
+                    self.metrics.counter("service.retrieve_admitted").inc();
+                    self.metrics.counter("service.retrieve_cost_units").add(cost as u64);
+                    admitted = Some(ScanAdmission { qm: self.qm.as_ref(), route, cost });
+                }
+            }
+        }
+        // Nothing survived embedding (e.g. a full-BUSY burst) or the
+        // scan was declined: skip the scan so the latency histogram only
+        // records real scan work.
         let mut hit_lists = if panel.is_empty() {
             Vec::new()
         } else {
@@ -386,6 +480,9 @@ impl WindVE {
             self.metrics.counter(codec_counter).add(panel_idx.len() as u64);
             lists
         };
+        // Scan complete (or skipped): hand the slots back. On a panic
+        // inside the scan, unwinding drops the guard and releases too.
+        drop(admitted);
 
         let mut out: Vec<Result<Vec<Hit>, ServeError>> = failures
             .into_iter()
@@ -465,6 +562,7 @@ mod tests {
                 cpu_pin_cores: None,
                 cache_entries: 0,
                 cache_key_space: (8192, 128),
+                ..ServiceConfig::default()
             },
             vec![echo_factory(1.0, 5)],
             if hetero { vec![echo_factory(2.0, 5)] } else { vec![] },
@@ -493,6 +591,7 @@ mod tests {
                 cpu_pin_cores: None,
                 cache_entries: 0,
                 cache_key_space: (8192, 128),
+                ..ServiceConfig::default()
             },
             vec![echo_factory(1.0, 300)],
             vec![echo_factory(2.0, 300)],
@@ -560,23 +659,9 @@ mod tests {
         assert_eq!(svc.queue_manager().cpu_occupancy(), 0);
     }
 
-    /// Deterministic text → unit-vector backend so retrieval tests can
-    /// assert exact nearest neighbours without PJRT artifacts.
-    fn pseudo_embedding(text: &str, d: usize) -> Vec<f32> {
-        let mut state = 0xcbf29ce484222325u64;
-        for b in text.bytes() {
-            state = (state ^ b as u64).wrapping_mul(0x100000001b3);
-        }
-        let mut v: Vec<f32> = (0..d)
-            .map(|_| {
-                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
-                ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
-            })
-            .collect();
-        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
-        v.iter_mut().for_each(|x| *x /= norm);
-        v
-    }
+    // Deterministic text → unit-vector embedding so retrieval tests can
+    // assert exact nearest neighbours without PJRT artifacts.
+    use crate::testing::pseudo_embedding;
 
     struct HashBackend {
         dim: usize,
@@ -606,6 +691,7 @@ mod tests {
                 cpu_pin_cores: None,
                 cache_entries: 0,
                 cache_key_space: (8192, 128),
+                ..ServiceConfig::default()
             },
             vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
             vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
@@ -666,6 +752,7 @@ mod tests {
                 cpu_pin_cores: None,
                 cache_entries: 0,
                 cache_key_space: (8192, 128),
+                ..ServiceConfig::default()
             },
             vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
             vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
@@ -691,6 +778,136 @@ mod tests {
         }
         assert_eq!(svc.metrics.counter("service.retrievals_int8").get(), 2);
         assert_eq!(svc.metrics.counter("service.retrievals").get(), 2);
+        svc.shutdown();
+    }
+
+    /// Admission gates scheduling, never scoring: results under admission
+    /// are identical to the unaccounted path, and a held retrieval cap
+    /// turns into BUSY backpressure instead of queueing.
+    #[test]
+    fn retrieval_admission_gates_scheduling_not_scoring() {
+        let dim = 16;
+        let mk = |admission: bool| {
+            WindVE::start(
+                ServiceConfig {
+                    npu_depth: 8,
+                    cpu_depth: 4,
+                    hetero: true,
+                    retrieval_admission: admission,
+                    ..ServiceConfig::default()
+                },
+                vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+                vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            )
+            .unwrap()
+        };
+        let svc_on = mk(true);
+        let svc_off = mk(false);
+        let exec = Arc::new(crate::devices::executor::RetrievalExecutor::flat(dim));
+        let docs: Vec<String> = (0..32).map(|i| format!("doc {i}")).collect();
+        for (i, d) in docs.iter().enumerate() {
+            exec.add(i as u64, &pseudo_embedding(d, dim));
+        }
+        svc_on.attach_retrieval(Arc::clone(&exec));
+        svc_off.attach_retrieval(Arc::clone(&exec));
+        let queries: Vec<String> = vec![docs[1].clone(), docs[9].clone(), docs[30].clone()];
+        let a = svc_on.retrieve_blocking(&queries, 5, Duration::from_secs(5));
+        let b = svc_off.retrieve_blocking(&queries, 5, Duration::from_secs(5));
+        for (x, y) in a.iter().zip(&b) {
+            // Bit-identical hit lists: same ids, same scores, same order.
+            assert_eq!(x.as_ref().unwrap(), y.as_ref().unwrap());
+        }
+        assert_eq!(svc_on.queue_manager().stats().routed_retrieve, 1);
+        assert_eq!(svc_off.queue_manager().stats().routed_retrieve, 0);
+        assert_eq!(svc_on.metrics.counter("service.retrieve_admitted").get(), 1);
+
+        // Hold the whole retrieval cap: the next panel gets backpressure.
+        let qm = svc_on.queue_manager();
+        let cap = qm.retrieve_cap();
+        assert!(cap > 0);
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, cap), Route::Cpu);
+        let busy = svc_on.retrieve_blocking(&queries, 5, Duration::from_secs(5));
+        for r in &busy {
+            assert_eq!(r.as_ref().unwrap_err(), &ServeError::Busy);
+        }
+        assert_eq!(svc_on.metrics.counter("service.retrieve_busy").get(), 1);
+        qm.release_class(WorkClass::Retrieve, Route::Cpu, cap);
+        // Capacity restored: the same panel serves again, slots drain.
+        let again = svc_on.retrieve_blocking(&queries, 5, Duration::from_secs(5));
+        assert!(again.iter().all(|r| r.is_ok()));
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 0);
+        svc_on.shutdown();
+        svc_off.shutdown();
+    }
+
+    /// Regression: a corpus whose byte-cost exceeds the whole retrieval
+    /// budget must serialize scans at the cap, not become permanently
+    /// unschedulable (cost > cap would otherwise BUSY every retrieval).
+    #[test]
+    fn oversized_scan_cost_clamps_to_cap_instead_of_starving() {
+        let dim = 16;
+        let svc = WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                // 1-byte cost unit: the raw scan cost is the arena size
+                // in bytes — astronomically over the cap of 4.
+                retrieval_cost_unit_bytes: 1,
+                ..ServiceConfig::default()
+            },
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+        )
+        .unwrap();
+        let exec = Arc::new(crate::devices::executor::RetrievalExecutor::flat(dim));
+        for i in 0..32u64 {
+            exec.add(i, &pseudo_embedding(&format!("big {i}"), dim));
+        }
+        svc.attach_retrieval(Arc::clone(&exec));
+        assert!(exec.scan_cost(1) > 4, "test needs cost over the cap");
+        let out = svc.retrieve_blocking(&["big 9".into()], 3, Duration::from_secs(5));
+        let hits = out[0].as_ref().expect("clamped scan must be schedulable");
+        assert_eq!(hits[0].id, 9);
+        let st = svc.queue_manager().stats();
+        assert_eq!(st.routed_retrieve, 1);
+        assert_eq!(st.rejected_retrieve, 0);
+        // The clamped cost (the full cap) is what accounting recorded.
+        assert_eq!(svc.metrics.counter("service.retrieve_cost_units").get(), 4);
+        assert_eq!(svc.queue_manager().retrieve_cpu_occupancy(), 0);
+        svc.shutdown();
+    }
+
+    /// Regression: an NPU-only deployment (cpu_depth 0, no hetero) has
+    /// no calibrated CPU budget — default-on admission must NOT turn
+    /// every retrieval into BUSY; scans run unaccounted as before.
+    #[test]
+    fn npu_only_deployment_still_serves_retrieval() {
+        let dim = 16;
+        let svc = WindVE::start(
+            ServiceConfig {
+                npu_depth: 4,
+                cpu_depth: 0,
+                hetero: false,
+                cpu_workers: 0,
+                ..ServiceConfig::default()
+            },
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            vec![],
+        )
+        .unwrap();
+        let exec = Arc::new(crate::devices::executor::RetrievalExecutor::flat(dim));
+        for i in 0..16u64 {
+            exec.add(i, &pseudo_embedding(&format!("d{i}"), dim));
+        }
+        svc.attach_retrieval(Arc::clone(&exec));
+        let out = svc.retrieve_blocking(&["d7".into()], 3, Duration::from_secs(5));
+        let hits = out[0].as_ref().expect("NPU-only retrieval must serve");
+        assert_eq!(hits[0].id, 7);
+        // No admission accounting was engaged.
+        assert_eq!(svc.queue_manager().stats().routed_retrieve, 0);
+        assert_eq!(svc.metrics.counter("service.retrieve_admitted").get(), 0);
         svc.shutdown();
     }
 

@@ -176,6 +176,28 @@ impl RetrievalExecutor {
         self.index.read().expect("index lock poisoned").dim()
     }
 
+    /// Bytes one batched scan streams from the attached arena: the
+    /// index's scanned-rows estimate (full corpus for exhaustive scans,
+    /// the nprobe/nlist share for IVF) × bytes_per_row of the active
+    /// codec. This is the executor's per-scan cost report to admission —
+    /// the scan is memory-bound, so bytes scanned is the honest proxy
+    /// for how much of the calibrated CPU depth one scan consumes (see
+    /// `coordinator::queue_manager`).
+    pub fn scan_bytes_estimate(&self) -> usize {
+        let g = self.index.read().expect("index lock poisoned");
+        g.scan_rows_estimate() * self.quant.bytes_per_row(g.dim())
+    }
+
+    /// Admission slot cost of one batched scan, normalized to embed-query
+    /// cost units of `unit_bytes` (≥ 1: even a tiny scan holds a slot
+    /// while it runs).
+    pub fn scan_cost(&self, unit_bytes: usize) -> usize {
+        crate::coordinator::queue_manager::retrieval_slot_cost(
+            self.scan_bytes_estimate(),
+            unit_bytes,
+        )
+    }
+
     /// Single-query top-k (shared lock).
     pub fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
         self.index.read().expect("index lock poisoned").search(query, k)
@@ -238,6 +260,45 @@ mod tests {
             assert_eq!(batch[0], hits);
         }
         assert_eq!(RetrievalExecutor::flat(4).quant(), Quant::F32);
+    }
+
+    #[test]
+    fn scan_cost_tracks_codec_bytes_per_row() {
+        let dim = 16;
+        for (quant, bpr) in [(Quant::F32, 64), (Quant::F16, 32), (Quant::Int8, 20)] {
+            let ex = RetrievalExecutor::flat_quant(dim, quant);
+            assert_eq!(ex.scan_bytes_estimate(), 0);
+            // An empty index still costs one slot per scan.
+            assert_eq!(ex.scan_cost(1024), 1);
+            for i in 0..64u64 {
+                ex.add(i, &[0.5; 16]);
+            }
+            assert_eq!(quant.bytes_per_row(dim), bpr, "{quant:?}");
+            assert_eq!(ex.scan_bytes_estimate(), 64 * bpr);
+            // cost = ceil(bytes / unit), so the compact codecs cost
+            // strictly less than f32 at the same unit.
+            assert_eq!(ex.scan_cost(1024), (64 * bpr).div_ceil(1024));
+            // A huge unit collapses every scan to the 1-slot floor.
+            assert_eq!(ex.scan_cost(usize::MAX), 1);
+        }
+    }
+
+    #[test]
+    fn scan_cost_charges_ivf_only_for_probed_share() {
+        use crate::vecstore::IvfIndex;
+        let dim = 8;
+        let mut ivf = IvfIndex::new(dim, 8, 2);
+        for i in 0..64u64 {
+            let a = (i as f32) * 0.1;
+            ivf.add(i, &[a.cos(), a.sin(), 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        }
+        // Unbuilt: scans everything.
+        assert_eq!(ivf.scan_rows_estimate(), 64);
+        ivf.build(7);
+        // Built: nprobe/nlist share of the corpus, not the whole arena.
+        assert_eq!(ivf.scan_rows_estimate(), 16); // 64 · 2 / 8
+        let ex = RetrievalExecutor::new(Box::new(ivf));
+        assert_eq!(ex.scan_bytes_estimate(), 16 * Quant::F32.bytes_per_row(dim));
     }
 
     #[test]

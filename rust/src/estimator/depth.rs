@@ -108,6 +108,61 @@ pub fn fine_tune_depths(
     best
 }
 
+/// Per-class CPU depths from mixed-load fine-tuning: `embed` is the
+/// paper's C^max_CPU share left for embedding overflow queries, and
+/// `retrieve` is the cost-unit cap for concurrent retrieval scans (fed to
+/// `coordinator::QueueManager::with_retrieval_cap` /
+/// `ServiceConfig::retrieval_depth`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassDepths {
+    pub embed: usize,
+    pub retrieve: usize,
+}
+
+impl ClassDepths {
+    /// The shared CPU pool both classes draw from (Eq. 9's C^max_CPU).
+    pub fn total(&self) -> usize {
+        self.embed + self.retrieve
+    }
+}
+
+/// Split a total CPU depth along the retrieval-fraction axis: retrieval
+/// gets the rounded share of the pool, embedding the rest.
+fn split_depth(total: usize, retrieve_fraction: f64) -> ClassDepths {
+    let retrieve = ((total as f64) * retrieve_fraction).round() as usize;
+    let retrieve = retrieve.min(total);
+    ClassDepths { embed: total - retrieve, retrieve }
+}
+
+/// [`fine_tune_depths`] with a retrieval-fraction axis — the mixed
+/// embed+retrieve extension of the paper's collaborative fine-tuning.
+///
+/// `retrieve_fraction ∈ [0, 1]` is the share of CPU work that is
+/// retrieval scan cost under the expected mix (e.g. from a trace's
+/// observed fraction — see `workload::mixed`). Each candidate *total*
+/// CPU depth `C` is split per class by the fraction and `measure(embed,
+/// retrieve)` observes the real mixed-load latency at that operating
+/// point; the returned [`ClassDepths`] is the split of the largest total
+/// still meeting the SLO. A fraction of 0 degenerates to the pure-embed
+/// [`fine_tune_depths`] walk.
+pub fn fine_tune_depths_mixed(
+    slo: f64,
+    estimate: usize,
+    radius: usize,
+    retrieve_fraction: f64,
+    mut measure: impl FnMut(usize, usize) -> f64,
+) -> ClassDepths {
+    assert!(
+        (0.0..=1.0).contains(&retrieve_fraction),
+        "retrieve_fraction must be in [0, 1], got {retrieve_fraction}"
+    );
+    let best = fine_tune_depths(slo, estimate, radius, |c| {
+        let d = split_depth(c, retrieve_fraction);
+        measure(d.embed, d.retrieve)
+    });
+    split_depth(best, retrieve_fraction)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,5 +257,65 @@ mod tests {
     fn unusable_device_estimates_zero() {
         let est = estimate_depth(1.0, &[1, 2, 3], |_| 3.0);
         assert_eq!(est.predicted, 0);
+    }
+
+    /// Latency model for the mixed tests: embeds cost α each, retrieval
+    /// cost units β each (scans are heavier), plus a base — monotone in
+    /// both axes like the real mixed service.
+    fn mixed_latency(embed: usize, retrieve: usize) -> f64 {
+        0.1 + 0.02 * embed as f64 + 0.05 * retrieve as f64
+    }
+
+    #[test]
+    fn mixed_zero_fraction_matches_pure_embed_tuning() {
+        let p = DeviceProfile::v100_bge();
+        let est = estimate_depth(1.0, &probes_for(32), |c| p.service_time(c, 75));
+        let pure = fine_tune_depths(1.0, est.predicted, 8, |c| p.service_time(c, 75));
+        let mixed =
+            fine_tune_depths_mixed(1.0, est.predicted, 8, 0.0, |e, _r| p.service_time(e, 75));
+        assert_eq!(mixed.embed, pure);
+        assert_eq!(mixed.retrieve, 0);
+        assert_eq!(mixed.total(), pure);
+    }
+
+    #[test]
+    fn mixed_tuning_finds_largest_passing_split() {
+        // SLO 1.0 against the planted model: at fraction 0.5 a total C
+        // splits (C/2, C/2), latency 0.1 + 0.035·C ≤ 1.0 → C = 25 →
+        // split (12, 13) or (13, 12) by rounding. Verify the exact walk.
+        let d = fine_tune_depths_mixed(1.0, 20, 10, 0.5, mixed_latency);
+        assert_eq!(d.total(), 25);
+        assert!(mixed_latency(d.embed, d.retrieve) <= 1.0);
+        let worse = split_depth(d.total() + 1, 0.5);
+        assert!(mixed_latency(worse.embed, worse.retrieve) > 1.0);
+    }
+
+    #[test]
+    fn mixed_fraction_shifts_budget_between_classes() {
+        // Retrieval-heavier mixes must shrink the total (scans cost more
+        // per unit in the planted model) and grow retrieval's share.
+        let lo = fine_tune_depths_mixed(1.0, 25, 12, 0.2, mixed_latency);
+        let hi = fine_tune_depths_mixed(1.0, 25, 12, 0.8, mixed_latency);
+        assert!(lo.embed > lo.retrieve);
+        assert!(hi.retrieve > hi.embed);
+        assert!(hi.total() <= lo.total(), "{} vs {}", hi.total(), lo.total());
+        // Both operating points meet the SLO.
+        assert!(mixed_latency(lo.embed, lo.retrieve) <= 1.0);
+        assert!(mixed_latency(hi.embed, hi.retrieve) <= 1.0);
+    }
+
+    #[test]
+    fn mixed_full_fraction_budgets_scans_only() {
+        let d = fine_tune_depths_mixed(1.0, 10, 8, 1.0, |_e, r| 0.05 * r as f64);
+        // The walk is bounded by estimate + radius = 18, all of which
+        // passes (0.05 · 18 = 0.9 ≤ 1.0) and goes to retrieval.
+        assert_eq!(d.embed, 0);
+        assert_eq!(d.retrieve, 18);
+    }
+
+    #[test]
+    #[should_panic(expected = "retrieve_fraction")]
+    fn mixed_rejects_out_of_range_fraction() {
+        let _ = fine_tune_depths_mixed(1.0, 4, 2, 1.5, |_e, _r| 0.1);
     }
 }

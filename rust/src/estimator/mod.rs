@@ -8,6 +8,8 @@ pub mod online;
 pub mod robust;
 pub mod stress;
 
-pub use depth::{estimate_depth, fine_tune_depths, DepthEstimate};
+pub use depth::{
+    estimate_depth, fine_tune_depths, fine_tune_depths_mixed, ClassDepths, DepthEstimate,
+};
 pub use linreg::LinearFit;
 pub use stress::{stress_search, StressResult};

@@ -120,6 +120,7 @@ fn service_config(cfg: &Config) -> ServiceConfig {
         cpu_pin_cores: pin,
         cache_entries: 4096,
         cache_key_space: (8192, 128),
+        ..ServiceConfig::default()
     }
 }
 

@@ -116,10 +116,15 @@ fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
                 ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
                 ("npu_occupancy", Json::num(qm.npu_occupancy() as f64)),
                 ("cpu_occupancy", Json::num(qm.cpu_occupancy() as f64)),
+                ("embed_cpu_occupancy", Json::num(qm.embed_cpu_occupancy() as f64)),
+                ("retrieve_cpu_occupancy", Json::num(qm.retrieve_cpu_occupancy() as f64)),
+                ("retrieve_cap", Json::num(qm.retrieve_cap() as f64)),
                 ("hetero", Json::Bool(qm.hetero())),
                 ("routed_npu", Json::num(stats.routed_npu as f64)),
                 ("routed_cpu", Json::num(stats.routed_cpu as f64)),
                 ("rejected", Json::num(stats.rejected as f64)),
+                ("routed_retrieve", Json::num(stats.routed_retrieve as f64)),
+                ("rejected_retrieve", Json::num(stats.rejected_retrieve as f64)),
                 ("bad_releases", Json::num(stats.bad_releases as f64)),
             ]))
         }

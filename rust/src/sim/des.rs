@@ -9,10 +9,18 @@
 //! reject rate when evening-peak traffic hits an average-provisioned
 //! NPU — and how much of it the CPU queue absorbs.
 
+//! The mixed embed+retrieve extension ([`OpenLoopSim::run_mixed`])
+//! replays the paper's peak-offload scenario *with retrieval
+//! contention*: batched top-k scans arrive on their own stream, hold
+//! cost-weighted CPU slots through the production
+//! [`QueueManager::dispatch_class`] admission (or bypass it — the
+//! pre-admission baseline), and the sim records the peak combined CPU
+//! occupancy so oversubscription is measurable either way.
+
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::coordinator::queue_manager::{QueueManager, Route};
+use crate::coordinator::queue_manager::{QueueManager, Route, WorkClass};
 use crate::devices::profile::DeviceProfile;
 use crate::metrics::Histogram;
 use crate::util::rng::Pcg;
@@ -52,10 +60,48 @@ impl SimStats {
     }
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Event {
-    Arrival,
-    DeviceDone(bool), // true = NPU
+/// Retrieval side of a mixed embed+retrieve open-loop scenario.
+#[derive(Debug, Clone)]
+pub struct RetrievalLoad {
+    /// CPU cost units one batched scan holds while it runs (rows ×
+    /// bytes_per_row normalized by the embed cost unit — see
+    /// `coordinator::queue_manager::retrieval_slot_cost`).
+    pub cost: usize,
+    /// Virtual service time of one scan, seconds.
+    pub service_time: f64,
+    /// Retrieval's cap within the CPU pool (cost units, ≤ cpu_depth).
+    pub cap: usize,
+    /// When false, scans bypass admission — the pre-admission baseline —
+    /// and the run records the oversubscription accounting would have
+    /// prevented.
+    pub admission: bool,
+}
+
+/// Results of [`OpenLoopSim::run_mixed`].
+pub struct MixedStats {
+    /// The embedding side, same accounting as [`OpenLoopSim::run`].
+    pub embed: SimStats,
+    pub retrieve_arrived: u64,
+    pub retrieve_served: u64,
+    /// Scans declined by admission (always 0 in baseline mode).
+    pub retrieve_rejected: u64,
+    /// Peak of embed CPU slots + retrieval slot-cost over the run — the
+    /// acceptance metric: ≤ `cpu_depth` under admission.
+    pub peak_cpu_cost: usize,
+    /// Event instants at which that sum exceeded the calibrated depth.
+    pub oversub_events: u64,
+    /// The calibrated CPU pool the run was bounded by (0 if no CPU).
+    pub cpu_depth: usize,
+}
+
+impl MixedStats {
+    pub fn retrieve_reject_rate(&self) -> f64 {
+        if self.retrieve_arrived == 0 {
+            0.0
+        } else {
+            self.retrieve_rejected as f64 / self.retrieve_arrived as f64
+        }
+    }
 }
 
 /// Open-loop simulator: one NPU instance + optional CPU instance.
@@ -71,29 +117,62 @@ pub struct OpenLoopSim {
 
 impl OpenLoopSim {
     /// Run over explicit arrival timestamps (seconds, ascending).
+    ///
+    /// This is exactly [`OpenLoopSim::run_mixed`] with an empty retrieval
+    /// stream (one event engine, no drift between the pure and mixed
+    /// sims); the load parameters are irrelevant without scan arrivals.
     pub fn run(&self, arrivals: &[f64]) -> SimStats {
+        let no_scans = RetrievalLoad { cost: 0, service_time: 0.0, cap: 0, admission: true };
+        self.run_mixed(&no_scans, arrivals, &[]).embed
+    }
+
+    /// Mixed embed+retrieve open-loop run over two arrival streams
+    /// (seconds, ascending). Embedding queries follow the same Algorithm-1
+    /// path as [`OpenLoopSim::run`]; each retrieval arrival is one batched
+    /// scan that holds `load.cost` CPU cost units for `load.service_time`
+    /// virtual seconds.
+    ///
+    /// With `load.admission` the scan is admitted through
+    /// `dispatch_class(Retrieve, cost)` against the shared CPU pool
+    /// (embed slots + scan cost ≤ `cpu_depth`, scans additionally capped
+    /// at `load.cap`), so embeds and scans exert real backpressure on
+    /// each other. Without it, scans bypass accounting — the
+    /// pre-admission baseline — and the run records how far the combined
+    /// occupancy oversubscribes the calibrated depth.
+    ///
+    /// Fully deterministic per seed: identical inputs reproduce every
+    /// counter and latency sample bit-for-bit.
+    pub fn run_mixed(
+        &self,
+        load: &RetrievalLoad,
+        embed_arrivals: &[f64],
+        retrieve_arrivals: &[f64],
+    ) -> MixedStats {
         let hetero = self.cpu.is_some();
-        let qm = QueueManager::new(self.npu_depth, if hetero { self.cpu_depth } else { 0 }, hetero);
+        let cpu_pool = if hetero { self.cpu_depth } else { 0 };
+        let qm =
+            QueueManager::with_retrieval_cap(self.npu_depth, cpu_pool, hetero, load.cap);
         let mut rng = Pcg::new(self.seed);
 
-        // Event heap keyed by (time, seq) — seq breaks ties deterministically.
+        // Event heap keyed by (time, seq, tag) — seq breaks ties
+        // deterministically. Tags: 0 embed arrival, 1 NPU done, 2 CPU
+        // done, 3 retrieve arrival, 4 retrieve (scan) done.
         let mut heap: BinaryHeap<Reverse<(u64, u64, u8)>> = BinaryHeap::new();
         let to_key = |t: f64| (t * 1e9) as u64;
         let mut seq = 0u64;
-        let push = |heap: &mut BinaryHeap<_>, t: f64, e: Event, seq: &mut u64| {
-            let tag = match e {
-                Event::Arrival => 0u8,
-                Event::DeviceDone(true) => 1,
-                Event::DeviceDone(false) => 2,
-            };
+        let push = |heap: &mut BinaryHeap<Reverse<(u64, u64, u8)>>,
+                    t: f64,
+                    tag: u8,
+                    seq: &mut u64| {
             heap.push(Reverse((to_key(t), *seq, tag)));
             *seq += 1;
         };
-
-        for &t in arrivals {
-            push(&mut heap, t, Event::Arrival, &mut seq);
+        for &t in embed_arrivals {
+            push(&mut heap, t, 0, &mut seq);
         }
-        let mut next_arrival = 0usize;
+        for &t in retrieve_arrivals {
+            push(&mut heap, t, 3, &mut seq);
+        }
 
         let mut npu_q: VecDeque<f64> = VecDeque::new(); // enqueue times
         let mut cpu_q: VecDeque<f64> = VecDeque::new();
@@ -101,30 +180,50 @@ impl OpenLoopSim {
         let mut cpu_busy = false;
         let mut npu_inflight: Vec<f64> = Vec::new();
         let mut cpu_inflight: Vec<f64> = Vec::new();
+        // Scan cost units in flight — equals the manager's retrieval
+        // occupancy under admission, and the shadow the accounting
+        // *would* have tracked in baseline mode.
+        let mut retr_inflight: usize = 0;
 
-        let mut stats = SimStats {
-            arrived: 0,
-            served_npu: 0,
-            served_cpu: 0,
-            rejected: 0,
-            latency_us: Histogram::new(),
-            slo_violations: 0,
-            makespan: 0.0,
+        // Mirror the service's admission clamp (coordinator/service.rs):
+        // a scan whose cost exceeds the whole retrieval budget holds the
+        // full budget (scans serialize) instead of being permanently
+        // unschedulable. Baseline mode keeps the raw cost — the real,
+        // unaccounted footprint the accounting would have metered.
+        let scan_cost = if load.admission {
+            load.cost.clamp(1, qm.retrieve_cap().max(1))
+        } else {
+            load.cost.max(1)
+        };
+
+        let mut stats = MixedStats {
+            embed: SimStats {
+                arrived: 0,
+                served_npu: 0,
+                served_cpu: 0,
+                rejected: 0,
+                latency_us: Histogram::new(),
+                slo_violations: 0,
+                makespan: 0.0,
+            },
+            retrieve_arrived: 0,
+            retrieve_served: 0,
+            retrieve_rejected: 0,
+            peak_cpu_cost: 0,
+            oversub_events: 0,
+            cpu_depth: cpu_pool,
         };
 
         while let Some(Reverse((tkey, _, tag))) = heap.pop() {
             let now = tkey as f64 / 1e9;
-            stats.makespan = now;
+            stats.embed.makespan = now;
             match tag {
                 0 => {
-                    // Arrival → Algorithm 1 admission.
-                    stats.arrived += 1;
-                    next_arrival += 1;
-                    let _ = next_arrival;
+                    stats.embed.arrived += 1;
                     match qm.dispatch() {
                         Route::Npu => npu_q.push_back(now),
                         Route::Cpu => cpu_q.push_back(now),
-                        Route::Busy => stats.rejected += 1,
+                        Route::Busy => stats.embed.rejected += 1,
                     }
                     // Kick idle devices.
                     if !npu_busy && !npu_q.is_empty() {
@@ -132,7 +231,7 @@ impl OpenLoopSim {
                         npu_inflight = npu_q.drain(..b).collect();
                         let st = self.npu.noisy_service_time(b, self.qlen, &mut rng);
                         npu_busy = true;
-                        push(&mut heap, now + st, Event::DeviceDone(true), &mut seq);
+                        push(&mut heap, now + st, 1, &mut seq);
                     }
                     if hetero && !cpu_busy && !cpu_q.is_empty() {
                         let b = cpu_q.len().min(self.cpu_depth.max(1));
@@ -143,7 +242,7 @@ impl OpenLoopSim {
                             .unwrap()
                             .noisy_service_time(b, self.qlen, &mut rng);
                         cpu_busy = true;
-                        push(&mut heap, now + st, Event::DeviceDone(false), &mut seq);
+                        push(&mut heap, now + st, 2, &mut seq);
                     }
                 }
                 1 | 2 => {
@@ -155,14 +254,14 @@ impl OpenLoopSim {
                     };
                     for enq in inflight.drain(..) {
                         let lat = now - enq;
-                        stats.latency_us.record((lat * 1e6) as u64);
+                        stats.embed.latency_us.record((lat * 1e6) as u64);
                         if lat > self.slo {
-                            stats.slo_violations += 1;
+                            stats.embed.slo_violations += 1;
                         }
                         if is_npu {
-                            stats.served_npu += 1;
+                            stats.embed.served_npu += 1;
                         } else {
-                            stats.served_cpu += 1;
+                            stats.embed.served_cpu += 1;
                         }
                         qm.release(if is_npu { Route::Npu } else { Route::Cpu });
                     }
@@ -170,42 +269,60 @@ impl OpenLoopSim {
                     if !q.is_empty() {
                         let b = q.len().min(depth.max(1));
                         let batch: Vec<f64> = q.drain(..b).collect();
-                        let profile = if is_npu { &self.npu } else { self.cpu.as_ref().unwrap() };
+                        let profile =
+                            if is_npu { &self.npu } else { self.cpu.as_ref().unwrap() };
                         let st = profile.noisy_service_time(b, self.qlen, &mut rng);
                         *inflight = batch;
                         *busy = true;
-                        push(
-                            &mut heap,
-                            now + st,
-                            Event::DeviceDone(is_npu),
-                            &mut seq,
-                        );
+                        push(&mut heap, now + st, tag, &mut seq);
+                    }
+                }
+                3 => {
+                    stats.retrieve_arrived += 1;
+                    let admitted = if load.admission {
+                        qm.dispatch_class(WorkClass::Retrieve, scan_cost) != Route::Busy
+                    } else {
+                        true // baseline: scans run unaccounted
+                    };
+                    if admitted {
+                        retr_inflight += scan_cost;
+                        push(&mut heap, now + load.service_time, 4, &mut seq);
+                    } else {
+                        stats.retrieve_rejected += 1;
+                    }
+                }
+                4 => {
+                    stats.retrieve_served += 1;
+                    retr_inflight = retr_inflight.saturating_sub(scan_cost);
+                    if load.admission {
+                        qm.release_class(WorkClass::Retrieve, Route::Cpu, scan_cost);
                     }
                 }
                 _ => unreachable!(),
+            }
+            // Oversubscription probe at every event instant: embed CPU
+            // slots + retrieval slot-cost against the calibrated depth.
+            let combined = qm.embed_cpu_occupancy() + retr_inflight;
+            stats.peak_cpu_cost = stats.peak_cpu_cost.max(combined);
+            if combined > cpu_pool {
+                stats.oversub_events += 1;
             }
         }
         stats
     }
 
     /// Poisson arrivals at `rate(t)` q/s over `[0, horizon)` seconds via
-    /// thinning against `peak_rate`.
+    /// thinning against `peak_rate`. Delegates to the shared generator
+    /// in `workload::mixed`; fraction 0 skips the marking draw, so
+    /// seeded streams are draw-for-draw identical to the historic
+    /// implementation.
     pub fn poisson_arrivals(
         rate: impl Fn(f64) -> f64,
         peak_rate: f64,
         horizon: f64,
         seed: u64,
     ) -> Vec<f64> {
-        let mut rng = Pcg::new(seed);
-        let mut t = 0.0;
-        let mut out = Vec::new();
-        while t < horizon {
-            t += rng.exp(peak_rate);
-            if t < horizon && rng.f64() < rate(t) / peak_rate {
-                out.push(t);
-            }
-        }
-        out
+        crate::workload::mixed::MixedArrivals::thinned(rate, peak_rate, 0.0, horizon, seed).embed
     }
 }
 
@@ -288,5 +405,103 @@ mod tests {
         let b = s.run(&arrivals);
         assert_eq!(a.served_npu, b.served_npu);
         assert_eq!(a.rejected, b.rejected);
+    }
+
+    fn scan_load(admission: bool) -> RetrievalLoad {
+        RetrievalLoad { cost: 4, service_time: 0.5, cap: 8, admission }
+    }
+
+    #[test]
+    fn mixed_conservation_both_classes() {
+        let s = sim(true);
+        let embeds: Vec<f64> = (0..200).map(|i| i as f64 * 0.02).collect();
+        let scans: Vec<f64> = (0..40).map(|i| 0.01 + i as f64 * 0.1).collect();
+        let st = s.run_mixed(&scan_load(true), &embeds, &scans);
+        assert_eq!(st.embed.arrived, 200);
+        assert_eq!(st.embed.served() + st.embed.rejected, st.embed.arrived);
+        assert_eq!(st.retrieve_arrived, 40);
+        assert_eq!(st.retrieve_served + st.retrieve_rejected, st.retrieve_arrived);
+    }
+
+    #[test]
+    fn mixed_admission_bounds_cpu_baseline_oversubscribes() {
+        // 8 CPU units, cost-4 scans every 100 ms lasting 500 ms: ~5 scans
+        // (20 units) of steady-state demand, plus embed overflow filling
+        // the CPU queue. Admission must keep the combined occupancy at or
+        // under depth; the unaccounted baseline must blow through it.
+        let mut s = sim(true);
+        s.npu_depth = 4; // force embed overflow onto the CPU queue
+        let embeds: Vec<f64> = (0..300).map(|i| i as f64 * 0.01).collect();
+        let scans: Vec<f64> = (0..30).map(|i| i as f64 * 0.1).collect();
+        let on = s.run_mixed(&scan_load(true), &embeds, &scans);
+        assert_eq!(on.cpu_depth, 8);
+        assert!(on.peak_cpu_cost <= 8, "admitted peak {}", on.peak_cpu_cost);
+        assert_eq!(on.oversub_events, 0);
+        // Contention is real: some scans were declined.
+        assert!(on.retrieve_rejected > 0);
+        let off = s.run_mixed(&scan_load(false), &embeds, &scans);
+        assert_eq!(off.retrieve_rejected, 0); // baseline never declines
+        assert!(off.peak_cpu_cost > 8, "baseline peak {}", off.peak_cpu_cost);
+        assert!(off.oversub_events > on.oversub_events);
+    }
+
+    #[test]
+    fn mixed_determinism_bit_for_bit() {
+        let s = sim(true);
+        let embeds: Vec<f64> = (0..150).map(|i| i as f64 * 0.015).collect();
+        let scans: Vec<f64> = (0..25).map(|i| 0.05 + i as f64 * 0.08).collect();
+        let load = scan_load(true);
+        let a = s.run_mixed(&load, &embeds, &scans);
+        let b = s.run_mixed(&load, &embeds, &scans);
+        assert_eq!(a.embed.reject_rate().to_bits(), b.embed.reject_rate().to_bits());
+        assert_eq!(a.embed.slo_attainment().to_bits(), b.embed.slo_attainment().to_bits());
+        assert_eq!(a.retrieve_served, b.retrieve_served);
+        assert_eq!(a.retrieve_rejected, b.retrieve_rejected);
+        assert_eq!(a.peak_cpu_cost, b.peak_cpu_cost);
+        assert_eq!(a.oversub_events, b.oversub_events);
+    }
+
+    #[test]
+    fn mixed_without_cpu_rejects_scans_under_admission() {
+        let s = sim(false); // no CPU device: pool is 0
+        let scans: Vec<f64> = (0..5).map(|i| i as f64 * 0.1).collect();
+        let st = s.run_mixed(&scan_load(true), &[], &scans);
+        assert_eq!(st.retrieve_rejected, 5);
+        assert_eq!(st.peak_cpu_cost, 0);
+        // Baseline "runs" them anyway — every one an oversubscription.
+        let base = s.run_mixed(&scan_load(false), &[], &scans);
+        assert_eq!(base.retrieve_served, 5);
+        assert!(base.oversub_events > 0);
+    }
+
+    #[test]
+    fn mixed_oversized_scan_cost_clamps_like_the_service() {
+        // cost 20 against cap 8: the service clamps to the full budget
+        // and serializes; the DES must predict the same, not 100% reject.
+        let s = sim(true);
+        let load = RetrievalLoad { cost: 20, service_time: 0.1, cap: 8, admission: true };
+        let scans: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let st = s.run_mixed(&load, &[], &scans);
+        assert_eq!(st.retrieve_served, 5);
+        assert_eq!(st.retrieve_rejected, 0);
+        assert!(st.peak_cpu_cost <= 8, "peak {}", st.peak_cpu_cost);
+    }
+
+    #[test]
+    fn mixed_scans_backpressure_embeds_on_shared_pool() {
+        // A standing scan (cost = whole pool) admitted before an embed
+        // burst: with admission the burst's CPU overflow shrinks to zero
+        // and rejects rise vs. the baseline where the scan is invisible.
+        let mut s = sim(true);
+        s.npu_depth = 2;
+        let load = RetrievalLoad { cost: 8, service_time: 10.0, cap: 8, admission: true };
+        let embeds = vec![0.5; 20]; // burst while the scan holds the pool
+        let on = s.run_mixed(&load, &embeds, &[0.0]);
+        let base = RetrievalLoad { admission: false, ..load.clone() };
+        let off = s.run_mixed(&base, &embeds, &[0.0]);
+        assert_eq!(on.retrieve_served, 1);
+        assert!(on.embed.rejected > off.embed.rejected);
+        assert!(off.embed.served_cpu > 0);
+        assert_eq!(on.embed.served_cpu, 0);
     }
 }

@@ -1,3 +1,39 @@
-//! In-repo property-testing framework (proptest is unavailable offline).
+//! In-repo property-testing framework (proptest is unavailable offline)
+//! and shared test fixtures.
 
 pub mod prop;
+
+/// Deterministic text → unit-vector embedding (FNV-1a seed + LCG walk,
+/// L2-normalised). The single definition of the contract retrieval
+/// tests rely on: a backend built on this function and a corpus indexed
+/// with it agree exactly, so nearest-neighbour assertions are exact.
+/// Used by the service's test backend and the e2e saturation harness.
+pub fn pseudo_embedding(text: &str, d: usize) -> Vec<f32> {
+    let mut state = 0xcbf29ce484222325u64;
+    for b in text.bytes() {
+        state = (state ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut v: Vec<f32> = (0..d)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+        })
+        .collect();
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+    v.iter_mut().for_each(|x| *x /= norm);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pseudo_embedding_is_unit_norm_and_deterministic() {
+        let a = pseudo_embedding("same text", 32);
+        assert_eq!(a, pseudo_embedding("same text", 32));
+        assert_ne!(a, pseudo_embedding("other text", 32));
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+}

@@ -272,6 +272,16 @@ impl Index for IvfIndex {
     fn quant(&self) -> Quant {
         self.quant
     }
+
+    fn scan_rows_estimate(&self) -> usize {
+        if !self.is_built() {
+            // Pre-build search scans everything.
+            return self.len();
+        }
+        // A probe streams nprobe of nlist cells; assume balanced lists
+        // (the kmeans build targets that) and round up.
+        (self.len() * self.nprobe).div_ceil(self.nlist)
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,13 @@ pub trait Index {
     fn quant(&self) -> Quant {
         Quant::F32
     }
+    /// Rows one `search`/`search_batch` call actually streams — the
+    /// admission cost driver (see `coordinator::queue_manager`). Exact
+    /// for exhaustive scans (the default); pruning indexes override with
+    /// their expected probe coverage (e.g. IVF's nprobe/nlist share).
+    fn scan_rows_estimate(&self) -> usize {
+        self.len()
+    }
 }
 
 /// Inner product on the dispatched kernel (see [`kernels`]).

@@ -1,0 +1,178 @@
+//! Mixed embed+retrieve arrival processes.
+//!
+//! The paper's traffic model (Figure 2) covers embedding queries only;
+//! a RAG deployment interleaves them with batched retrieval scans that
+//! contend for the same host CPUs. [`MixedArrivals`] generates the two
+//! streams as one marked Poisson process — a single arrival stream in
+//! which each event is independently a retrieval with probability
+//! `retrieve_fraction` — so the relative phase of the two classes is
+//! physically plausible and every run reproduces bit-for-bit from its
+//! seed. Feed the streams to `sim::OpenLoopSim::run_mixed`, and the
+//! observed fraction to `estimator::depth::fine_tune_depths_mixed`.
+
+use super::diurnal::DiurnalCurve;
+use crate::util::rng::Pcg;
+
+/// Two time-sorted arrival streams drawn from one marked point process.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MixedArrivals {
+    /// Embedding-query arrival times (seconds, ascending).
+    pub embed: Vec<f64>,
+    /// Retrieval-scan arrival times (seconds, ascending).
+    pub retrieve: Vec<f64>,
+}
+
+impl MixedArrivals {
+    /// Homogeneous Poisson stream at `rate` q/s over `[0, horizon)`,
+    /// marked retrieval with probability `retrieve_fraction`.
+    pub fn poisson(
+        rate: f64,
+        retrieve_fraction: f64,
+        horizon: f64,
+        seed: u64,
+    ) -> MixedArrivals {
+        assert!(rate > 0.0, "rate must be positive");
+        Self::thinned(|_| rate, rate, retrieve_fraction, horizon, seed)
+    }
+
+    /// Non-homogeneous stream thinned from a diurnal curve starting at
+    /// `start_hour`, over `horizon` seconds — the peak-offload scenario
+    /// with retrieval contention (e.g. `start_hour = 20.5` replays the
+    /// evening peak).
+    pub fn from_curve(
+        curve: &DiurnalCurve,
+        retrieve_fraction: f64,
+        start_hour: f64,
+        horizon: f64,
+        seed: u64,
+    ) -> MixedArrivals {
+        let peak = curve.peak_rate();
+        if peak <= 0.0 {
+            return MixedArrivals::default();
+        }
+        Self::thinned(
+            |t| curve.rate(start_hour + t / 3600.0),
+            peak,
+            retrieve_fraction,
+            horizon,
+            seed,
+        )
+    }
+
+    /// Poisson thinning of `rate(t)` against `peak_rate`, marking each
+    /// surviving arrival. One rng drives inter-arrivals, thinning and
+    /// marking in a fixed draw order, so streams are seed-deterministic.
+    ///
+    /// This is THE thinning generator — `sim::OpenLoopSim::poisson_arrivals`
+    /// delegates here with fraction 0, which skips the marking draw, so
+    /// its seeded streams are draw-for-draw what they were before the
+    /// mixed variant existed.
+    pub(crate) fn thinned(
+        rate: impl Fn(f64) -> f64,
+        peak_rate: f64,
+        retrieve_fraction: f64,
+        horizon: f64,
+        seed: u64,
+    ) -> MixedArrivals {
+        assert!(
+            (0.0..=1.0).contains(&retrieve_fraction),
+            "retrieve_fraction must be in [0, 1], got {retrieve_fraction}"
+        );
+        let mut rng = Pcg::new(seed);
+        let mut t = 0.0;
+        let mut out = MixedArrivals::default();
+        while t < horizon {
+            t += rng.exp(peak_rate);
+            if t >= horizon {
+                break;
+            }
+            if rng.f64() < rate(t) / peak_rate {
+                if retrieve_fraction > 0.0 && rng.chance(retrieve_fraction) {
+                    out.retrieve.push(t);
+                } else {
+                    out.embed.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total arrivals across both classes.
+    pub fn len(&self) -> usize {
+        self.embed.len() + self.retrieve.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.embed.is_empty() && self.retrieve.is_empty()
+    }
+
+    /// The realized retrieval share (the fraction axis to calibrate
+    /// depths against).
+    pub fn observed_fraction(&self) -> f64 {
+        if self.is_empty() {
+            0.0
+        } else {
+            self.retrieve.len() as f64 / self.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_sorted_and_deterministic() {
+        let a = MixedArrivals::poisson(50.0, 0.25, 30.0, 9);
+        let b = MixedArrivals::poisson(50.0, 0.25, 30.0, 9);
+        assert_eq!(a, b);
+        assert!(a.embed.windows(2).all(|w| w[0] <= w[1]));
+        assert!(a.retrieve.windows(2).all(|w| w[0] <= w[1]));
+        let c = MixedArrivals::poisson(50.0, 0.25, 30.0, 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rate_and_fraction_roughly_match() {
+        let m = MixedArrivals::poisson(40.0, 0.3, 100.0, 3);
+        let rate = m.len() as f64 / 100.0;
+        assert!((rate - 40.0).abs() < 4.0, "rate {rate}");
+        assert!((m.observed_fraction() - 0.3).abs() < 0.05, "{}", m.observed_fraction());
+    }
+
+    #[test]
+    fn fraction_edges_produce_single_class_streams() {
+        let all_embed = MixedArrivals::poisson(20.0, 0.0, 20.0, 1);
+        assert!(all_embed.retrieve.is_empty());
+        assert!(!all_embed.embed.is_empty());
+        let all_retrieve = MixedArrivals::poisson(20.0, 1.0, 20.0, 1);
+        assert!(all_retrieve.embed.is_empty());
+        assert!(!all_retrieve.retrieve.is_empty());
+        assert_eq!(all_retrieve.observed_fraction(), 1.0);
+    }
+
+    #[test]
+    fn curve_thinning_peaks_where_the_curve_does() {
+        let curve = DiurnalCurve::typical(2.0, 10.0);
+        // One hour at the evening peak vs one hour overnight.
+        let peak = MixedArrivals::from_curve(&curve, 0.2, 20.5, 3600.0, 5);
+        let night = MixedArrivals::from_curve(&curve, 0.2, 3.0, 3600.0, 5);
+        assert!(
+            peak.len() > 2 * night.len(),
+            "peak {} vs night {}",
+            peak.len(),
+            night.len()
+        );
+    }
+
+    #[test]
+    fn empty_default_observed_fraction_is_zero() {
+        assert_eq!(MixedArrivals::default().observed_fraction(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "retrieve_fraction")]
+    fn out_of_range_fraction_panics() {
+        let _ = MixedArrivals::poisson(10.0, -0.1, 1.0, 1);
+    }
+}

@@ -1,9 +1,12 @@
-//! Workload generation: query text of controlled token length, and the
-//! diurnal arrival-rate curve of the paper's Figure 2.
+//! Workload generation: query text of controlled token length, the
+//! diurnal arrival-rate curve of the paper's Figure 2, and mixed
+//! embed+retrieve arrival processes for admission scenarios.
 
 pub mod diurnal;
+pub mod mixed;
 pub mod queries;
 pub mod trace;
 
 pub use diurnal::DiurnalCurve;
+pub use mixed::MixedArrivals;
 pub use queries::QueryGen;

@@ -78,6 +78,7 @@ fn service_with(factory: BackendFactory, depth: usize) -> WindVE {
             cpu_pin_cores: None,
             cache_entries: 0,
             cache_key_space: (8192, 128),
+            ..ServiceConfig::default()
         },
         vec![factory],
         vec![],

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 
 use windve::coordinator::batcher::{DeviceQueue, Pending};
-use windve::coordinator::queue_manager::{QueueManager, Route};
+use windve::coordinator::queue_manager::{QueueManager, Route, WorkClass};
 use windve::devices::profile::DeviceProfile;
 use windve::estimator::robust::theil_sen;
 use windve::estimator::LinearFit;
@@ -655,6 +655,136 @@ fn prop_quantized_topk_overlap_vs_f32() {
         let overlap = *hits as f64 / *total as f64;
         assert!(overlap >= 0.9, "{codec}: aggregate top-{k} overlap {overlap:.3} < 0.9");
     }
+}
+
+/// Weighted multi-class admission invariants (the tentpole's acceptance
+/// bar): under arbitrary interleavings of `dispatch_class` /
+/// `release_class`, occupancy never exceeds any depth (NPU, CPU pool, or
+/// the retrieval cap), the per-class CPU occupancies always sum to the
+/// pool occupancy, every admit has a matching release that drains the
+/// manager to zero, and `bad_releases` stays 0 for well-formed sequences.
+#[test]
+fn prop_class_admission_invariants() {
+    property("class admission invariants", 150, |g: &mut Gen| {
+        let npu_depth = g.usize(0, 24);
+        let cpu_pool = g.usize(0, 33);
+        let cap = g.usize(0, cpu_pool + 1);
+        let hetero = g.bool();
+        let qm = QueueManager::with_retrieval_cap(npu_depth, cpu_pool, hetero, cap);
+        let mut live: Vec<(WorkClass, Route, usize)> = Vec::new();
+        let mut admits = 0u64;
+        for _ in 0..g.usize(1, 250) {
+            if g.bool() || live.is_empty() {
+                let class = if g.bool() { WorkClass::Embed } else { WorkClass::Retrieve };
+                let cost = match class {
+                    WorkClass::Embed => g.usize(1, 4),
+                    WorkClass::Retrieve => g.usize(1, 8),
+                };
+                match qm.dispatch_class(class, cost) {
+                    Route::Busy => {}
+                    r => {
+                        admits += 1;
+                        live.push((class, r, cost));
+                    }
+                }
+            } else {
+                let i = g.usize(0, live.len());
+                let (c, r, cost) = live.swap_remove(i);
+                qm.release_class(c, r, cost);
+            }
+            if qm.npu_occupancy() > npu_depth {
+                return Err(format!("npu occupancy {} > depth {npu_depth}", qm.npu_occupancy()));
+            }
+            if qm.cpu_occupancy() > cpu_pool {
+                return Err(format!("cpu occupancy {} > pool {cpu_pool}", qm.cpu_occupancy()));
+            }
+            if qm.retrieve_cpu_occupancy() > cap {
+                return Err(format!(
+                    "retrieval occupancy {} > cap {cap}",
+                    qm.retrieve_cpu_occupancy()
+                ));
+            }
+            let class_sum = qm.embed_cpu_occupancy() + qm.retrieve_cpu_occupancy();
+            if class_sum != qm.cpu_occupancy() {
+                return Err(format!(
+                    "per-class sum {class_sum} != pool occupancy {}",
+                    qm.cpu_occupancy()
+                ));
+            }
+        }
+        for (c, r, cost) in live.drain(..) {
+            qm.release_class(c, r, cost);
+        }
+        if qm.npu_occupancy() != 0
+            || qm.cpu_occupancy() != 0
+            || qm.embed_cpu_occupancy() != 0
+            || qm.retrieve_cpu_occupancy() != 0
+        {
+            return Err("occupancy nonzero after releasing every admit".into());
+        }
+        let st = qm.stats();
+        if st.bad_releases != 0 {
+            return Err(format!("{} bad_releases on a well-formed sequence", st.bad_releases));
+        }
+        if st.routed_npu + st.routed_cpu + st.routed_retrieve != admits {
+            return Err("admit counters disagree with observed admissions".into());
+        }
+        Ok(())
+    });
+}
+
+/// Double-released retrieval slots are contained: counted, saturating,
+/// and incapable of freeing capacity the embed class legitimately holds.
+#[test]
+fn prop_retrieval_double_release_contained() {
+    property("retrieval double release containment", 100, |g: &mut Gen| {
+        let cpu_pool = g.usize(1, 17);
+        let cap = g.usize(1, cpu_pool + 1);
+        let npu_depth = g.usize(0, 8);
+        let qm = QueueManager::with_retrieval_cap(npu_depth, cpu_pool, true, cap);
+        // Embeds legitimately holding NPU slots and CPU pool units.
+        for _ in 0..g.usize(0, 24) {
+            let _ = qm.dispatch();
+        }
+        // One well-formed scan: admitted (maybe) and released exactly once.
+        let cost = g.usize(1, 5);
+        if qm.dispatch_class(WorkClass::Retrieve, cost) == Route::Cpu {
+            qm.release_class(WorkClass::Retrieve, Route::Cpu, cost);
+        }
+        if qm.retrieve_cpu_occupancy() != 0 {
+            return Err("matched release left retrieval occupancy".into());
+        }
+        let held_cpu = qm.cpu_occupancy();
+        let held_npu = qm.npu_occupancy();
+        // Rogue double releases: each is counted; none frees embed slots.
+        let extra = g.usize(1, 8);
+        for _ in 0..extra {
+            qm.release_class(WorkClass::Retrieve, Route::Cpu, cost);
+        }
+        if qm.cpu_occupancy() != held_cpu {
+            return Err("rogue retrieval release freed embed pool units".into());
+        }
+        if qm.npu_occupancy() != held_npu {
+            return Err("rogue retrieval release touched the NPU pool".into());
+        }
+        if qm.stats().bad_releases != extra as u64 {
+            return Err(format!("bad_releases {} != {extra}", qm.stats().bad_releases));
+        }
+        // Admission capacity intact: retrieval fills exactly the cap or
+        // the pool remainder, whichever binds.
+        let mut got = 0;
+        while qm.dispatch_class(WorkClass::Retrieve, 1) == Route::Cpu {
+            got += 1;
+            if got > cpu_pool {
+                return Err("retrieval admitted past the pool".into());
+            }
+        }
+        let want = cap.min(cpu_pool - qm.embed_cpu_occupancy());
+        if got != want {
+            return Err(format!("post-abuse capacity {got} != expected {want}"));
+        }
+        Ok(())
+    });
 }
 
 /// Mismatched queue releases saturate at zero occupancy, are counted,

@@ -34,6 +34,7 @@ fn start_server(npu_depth: usize, cpu_depth: usize) -> (Server, Arc<WindVE>) {
                 cpu_pin_cores: None,
                 cache_entries: 0,
                 cache_key_space: (8192, 128),
+                ..ServiceConfig::default()
             },
             vec![synth_factory(1)],
             if cpu_depth > 0 { vec![synth_factory(2)] } else { vec![] },

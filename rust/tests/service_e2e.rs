@@ -9,6 +9,7 @@ use windve::coordinator::service::ServeError;
 use windve::coordinator::{Route, ServiceConfig, WindVE};
 use windve::devices::executor::{Backend, SyntheticBackend};
 use windve::devices::profile::DeviceProfile;
+use windve::testing::pseudo_embedding;
 
 /// Synthetic factory at microsecond scale (ratios preserved).
 fn synth_factory(profile: DeviceProfile, seed: u64) -> BackendFactory {
@@ -31,6 +32,7 @@ fn windve_service(npu_depth: usize, cpu_depth: usize, hetero: bool) -> WindVE {
             cpu_pin_cores: None,
             cache_entries: 0,
             cache_key_space: (8192, 128),
+            ..ServiceConfig::default()
         },
         vec![synth_factory(DeviceProfile::v100_bge(), 1)],
         if hetero {
@@ -164,6 +166,206 @@ fn shutdown_drains_cleanly_under_load() {
     }
 }
 
+struct HashBackend {
+    dim: usize,
+}
+impl Backend for HashBackend {
+    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        // A hair of service time so queue slots are genuinely held.
+        std::thread::sleep(Duration::from_micros(200));
+        Ok(texts.iter().map(|t| pseudo_embedding(t, self.dim)).collect())
+    }
+    fn describe(&self) -> String {
+        "hash".into()
+    }
+    fn max_batch(&self) -> usize {
+        16
+    }
+}
+
+fn hash_factory(dim: usize) -> BackendFactory {
+    Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))
+}
+
+/// Satellite: drive the service with retrieval + embed work past the
+/// calibrated depth. Backpressure (`ServeError::Busy`) must come back
+/// instead of unbounded queueing, and the per-class `QueueStats`
+/// counters must reconcile with the completed work. The scan's slot
+/// cost depends on the active codec's bytes_per_row, so the CI quant
+/// matrix exercises admission at a different cost per cell.
+#[test]
+fn retrieval_saturation_returns_backpressure_and_reconciles() {
+    use windve::coordinator::WorkClass;
+    use windve::devices::executor::RetrievalExecutor;
+    use windve::vecstore::Quant;
+
+    let dim = 16;
+    let quant = Quant::from_env();
+    let unit = 1024; // 1 KiB cost unit so a 64-row corpus costs > 1 slot
+    let svc = Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 8,
+                hetero: true,
+                retrieval_depth: Some(4),
+                retrieval_cost_unit_bytes: unit,
+                ..ServiceConfig::default()
+            },
+            vec![hash_factory(dim)],
+            vec![hash_factory(dim)],
+        )
+        .unwrap(),
+    );
+    let exec = Arc::new(RetrievalExecutor::flat_quant(dim, quant));
+    let docs: Vec<String> = (0..64).map(|i| format!("corpus doc {i}")).collect();
+    for (i, d) in docs.iter().enumerate() {
+        exec.add(i as u64, &pseudo_embedding(d, dim));
+    }
+    svc.attach_retrieval(Arc::clone(&exec));
+
+    // Executor-reported cost follows the codec: ceil(64·bpr / 1KiB).
+    let cost = exec.scan_cost(unit);
+    assert_eq!(cost, (64 * quant.bytes_per_row(dim)).div_ceil(unit).max(1));
+    assert!(cost <= 4, "cost {cost} must fit the retrieval cap");
+
+    // Phase 1 (deterministic): hold the whole retrieval cap; a panel
+    // must bounce with Busy immediately — backpressure, not a queue.
+    let qm = svc.queue_manager();
+    assert_eq!(qm.retrieve_cap(), 4);
+    assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 4), windve::coordinator::Route::Cpu);
+    let queries: Vec<String> = vec![docs[3].clone(), docs[40].clone(), docs[63].clone()];
+    let t0 = std::time::Instant::now();
+    let declined = svc.retrieve_blocking(&queries, 4, Duration::from_secs(10));
+    assert!(t0.elapsed() < Duration::from_secs(5), "BUSY must not block");
+    for r in &declined {
+        assert_eq!(r.as_ref().unwrap_err(), &ServeError::Busy);
+    }
+    qm.release_class(WorkClass::Retrieve, windve::coordinator::Route::Cpu, 4);
+
+    // Capacity restored: the same panel serves, with exact top hits.
+    let served = svc.retrieve_blocking(&queries, 4, Duration::from_secs(10));
+    for (q, r) in queries.iter().zip(&served) {
+        let hits = r.as_ref().expect("retrieval failed after release");
+        assert_eq!(hits, &exec.search(&pseudo_embedding(q, dim), 4));
+    }
+
+    // Phase 2: concurrent retrieve_blocking + submit callers past depth.
+    let mut handles = Vec::new();
+    for t in 0..6usize {
+        let svc = Arc::clone(&svc);
+        let docs = docs.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0u64;
+            let mut busy = 0u64;
+            for i in 0..15usize {
+                let panel =
+                    vec![docs[(t * 7 + i) % 64].clone(), docs[(t + 11 * i) % 64].clone()];
+                for r in svc.retrieve_blocking(&panel, 3, Duration::from_secs(10)) {
+                    match r {
+                        Ok(hits) => {
+                            assert_eq!(hits.len(), 3);
+                            ok += 1;
+                        }
+                        Err(ServeError::Busy) => busy += 1,
+                        Err(e) => panic!("unexpected error {e}"),
+                    }
+                }
+            }
+            (ok, busy)
+        }));
+    }
+    for t in 0..3usize {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0u64;
+            let mut busy = 0u64;
+            for i in 0..30usize {
+                match svc.embed_blocking(format!("embed {t}-{i}"), Duration::from_secs(10)) {
+                    Ok(_) => ok += 1,
+                    Err(ServeError::Busy) => busy += 1,
+                    Err(e) => panic!("unexpected error {e}"),
+                }
+            }
+            (ok, busy)
+        }));
+    }
+    let mut ok_total = 0u64;
+    for h in handles {
+        ok_total += h.join().unwrap().0;
+    }
+    assert!(ok_total > 0);
+
+    // Reconciliation: every admitted scan completed and released its
+    // slots; per-class counters match the service-level metrics exactly.
+    std::thread::sleep(Duration::from_millis(100));
+    let st = qm.stats();
+    let admitted = svc.metrics.counter("service.retrieve_admitted").get();
+    // +1 for the manual cap hold in phase 1.
+    assert_eq!(st.routed_retrieve, admitted + 1);
+    assert_eq!(st.rejected_retrieve, svc.metrics.counter("service.retrieve_busy").get());
+    assert_eq!(
+        svc.metrics.counter("service.retrieve_cost_units").get(),
+        admitted * cost as u64
+    );
+    assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+    assert_eq!(qm.embed_cpu_occupancy(), 0);
+    assert_eq!(qm.cpu_occupancy(), 0);
+    assert_eq!(qm.npu_occupancy(), 0);
+    assert_eq!(st.bad_releases, 0);
+}
+
+/// Satellite: the seeded mixed embed+retrieve DES scenario reproduces
+/// bit-for-bit, and enabling retrieval admission keeps the combined CPU
+/// occupancy within the calibrated depth while the unaccounted baseline
+/// demonstrably exceeds it (the PR's acceptance criterion).
+#[test]
+fn mixed_des_scenario_reproducible_and_bounded() {
+    use windve::sim::{OpenLoopSim, RetrievalLoad};
+    use windve::workload::MixedArrivals;
+
+    fn quiet(mut p: DeviceProfile) -> DeviceProfile {
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        p
+    }
+    let sim = OpenLoopSim {
+        npu: quiet(DeviceProfile::v100_bge()),
+        cpu: Some(quiet(DeviceProfile::xeon_e5_2690_bge())),
+        npu_depth: 4,
+        cpu_depth: 8,
+        qlen: 75,
+        slo: 1.0,
+        seed: 11,
+    };
+    let arr = MixedArrivals::poisson(60.0, 0.25, 10.0, 42);
+    assert!(
+        arr.observed_fraction() > 0.15 && arr.observed_fraction() < 0.35,
+        "fraction {}",
+        arr.observed_fraction()
+    );
+    let on = RetrievalLoad { cost: 4, service_time: 0.4, cap: 8, admission: true };
+    let a = sim.run_mixed(&on, &arr.embed, &arr.retrieve);
+    let b = sim.run_mixed(&on, &arr.embed, &arr.retrieve);
+    // Bit-for-bit reproducibility of the seeded scenario.
+    assert_eq!(a.embed.reject_rate().to_bits(), b.embed.reject_rate().to_bits());
+    assert_eq!(a.embed.slo_attainment().to_bits(), b.embed.slo_attainment().to_bits());
+    assert_eq!(a.embed.arrived, b.embed.arrived);
+    assert_eq!(a.retrieve_served, b.retrieve_served);
+    assert_eq!(a.retrieve_rejected, b.retrieve_rejected);
+    assert_eq!(a.retrieve_reject_rate().to_bits(), b.retrieve_reject_rate().to_bits());
+    assert_eq!(a.peak_cpu_cost, b.peak_cpu_cost);
+    assert_eq!(a.oversub_events, b.oversub_events);
+    // Admission bounds the combined occupancy by the calibrated depth.
+    assert!(a.peak_cpu_cost <= a.cpu_depth, "admitted peak {}", a.peak_cpu_cost);
+    assert_eq!(a.oversub_events, 0);
+    // The unaccounted baseline exceeds it under the same arrivals.
+    let off = RetrievalLoad { admission: false, ..on.clone() };
+    let c = sim.run_mixed(&off, &arr.embed, &arr.retrieve);
+    assert!(c.peak_cpu_cost > c.cpu_depth, "baseline peak {}", c.peak_cpu_cost);
+    assert!(c.oversub_events > a.oversub_events);
+}
+
 #[test]
 fn cache_serves_repeats_without_queue_slots() {
     // Depth 1 + cache: the first query fills the cache; repeats must be
@@ -178,6 +380,7 @@ fn cache_serves_repeats_without_queue_slots() {
             cpu_pin_cores: None,
             cache_entries: 64,
             cache_key_space: (8192, 128),
+            ..ServiceConfig::default()
         },
         vec![synth_factory(DeviceProfile::v100_bge(), 3)],
         vec![],
