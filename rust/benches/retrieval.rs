@@ -111,6 +111,21 @@ fn main() {
         batched_par / per_query
     );
 
+    section("npu-offload scan (host fallback over the mirrored arena)");
+    {
+        let (ids, rows) = flat.export_f32_rows().expect("flat f32 exports a mirror");
+        let scanner = windve::runtime::NpuScanner::from_snapshot(DIM, ids, rows, 0)
+            .expect("mirror snapshot");
+        let offload = h.qps("npu-offload search_batch (host fallback)", Quant::F32, batch, || {
+            std::hint::black_box(scanner.search_batch(&qrefs, K));
+        });
+        println!(
+            "{:<52} {:.2}x vs per-query (single-threaded mirror scan)",
+            "offload fallback speedup",
+            offload / per_query
+        );
+    }
+
     section("flat quantized arenas (same scan, fewer bytes)");
     for &quant in modes.iter().filter(|q| **q != Quant::F32) {
         let qidx = flat.quantize(quant);

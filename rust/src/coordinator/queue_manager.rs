@@ -41,14 +41,27 @@
 //!   additionally be capped below the pool ([`QueueManager::with_retrieval_cap`])
 //!   using the per-class depths from
 //!   [`crate::estimator::depth::fine_tune_depths_mixed`].
-//! * Retrieval never routes to the NPU here — the "batched NPU retrieval
-//!   offload" ROADMAP item will add that leg on top of this accounting.
+//!
+//! # NPU retrieval offload (the inverse of the paper's CPU offload)
+//!
+//! The paper routes *embedding* overflow from the saturated NPU onto idle
+//! CPUs. The same performance gap runs the other way when embedding
+//! traffic is low: the NPU sits idle while scan bursts contend for the
+//! CPU budget. [`QueueManager::dispatch_retrieve_npu`] is the device leg
+//! for batched scans — the **shared NPU pool** (embed queries + offloaded
+//! scan cost ≤ `npu_depth`) with its own per-class cap
+//! (`npu_retrieve_cap`, calibrated by
+//! `crate::estimator::depth::fine_tune_npu_retrieval_cap`), acquired
+//! cap-then-pool with rollback exactly like the CPU leg. Routing *policy*
+//! (offload only while embed-side NPU occupancy is under a low-water
+//! mark) lives in `coordinator::service`; this type only meters capacity.
+//! A cap of 0 (every legacy constructor) disables the leg outright.
 //!
 //! Lock-free: occupancy is a set of atomics with CAS admission, making
 //! dispatch safe from any number of front-end threads (and cheap — see
-//! benches/micro.rs). Per-class CPU occupancy is acquired before the
-//! shared pool (with rollback on pool exhaustion), so the cap and the
-//! pool bound both hold at every instant.
+//! benches/micro.rs). Per-class occupancy is acquired before the shared
+//! pool (with rollback on pool exhaustion), so the cap and the pool bound
+//! both hold at every instant, on both device legs.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
@@ -108,6 +121,12 @@ pub struct QueueStats {
     pub routed_retrieve: u64,
     /// Retrieval scans rejected (cap or pool full): backpressure.
     pub rejected_retrieve: u64,
+    /// Retrieval scans admitted to the NPU leg (offload).
+    pub routed_retrieve_npu: u64,
+    /// NPU-leg admissions declined (cap or pool full). The service falls
+    /// back to the CPU leg on decline, so this counts fallbacks, not
+    /// necessarily lost scans.
+    pub rejected_retrieve_npu: u64,
     /// Releases without a matching dispatch (see
     /// [`QueueManager::release_class`]); 0 in a healthy service.
     pub bad_releases: u64,
@@ -122,18 +141,26 @@ pub struct QueueManager {
     hetero: bool,
     /// Per-class cap on retrieval's share of the CPU pool (≤ cpu_depth).
     retrieve_cap: usize,
+    /// Per-class cap on offloaded scans' share of the NPU pool
+    /// (≤ npu_depth); 0 disables the NPU retrieval leg.
+    npu_retrieve_cap: usize,
     /// Total in-flight cost units per pool (authoritative for admission).
     npu_len: AtomicUsize,
     cpu_len: AtomicUsize,
     /// Per-class CPU occupancy; embed_cpu + retr_cpu == cpu_len at rest.
     embed_cpu: AtomicUsize,
     retr_cpu: AtomicUsize,
+    /// Per-class NPU occupancy; embed_npu + retr_npu == npu_len at rest.
+    embed_npu: AtomicUsize,
+    retr_npu: AtomicUsize,
     // counters for /stats
     routed_npu: AtomicU64,
     routed_cpu: AtomicU64,
     rejected: AtomicU64,
     routed_retrieve: AtomicU64,
     rejected_retrieve: AtomicU64,
+    routed_retrieve_npu: AtomicU64,
+    rejected_retrieve_npu: AtomicU64,
     bad_releases: AtomicU64,
 }
 
@@ -151,27 +178,47 @@ impl QueueManager {
     /// Full multi-class wiring: `cpu_depth` is the shared CPU pool (NOT
     /// zeroed by `!hetero` — a non-hetero manager with `cpu_depth > 0`
     /// budgets the CPU purely for retrieval scans; embeds still never
-    /// route there), `retrieve_cap` bounds retrieval's share of it.
+    /// route there), `retrieve_cap` bounds retrieval's share of it. The
+    /// NPU retrieval leg stays disabled (cap 0) — use
+    /// [`QueueManager::with_class_caps`] to enable offload.
     pub fn with_retrieval_cap(
         npu_depth: usize,
         cpu_depth: usize,
         hetero: bool,
         retrieve_cap: usize,
     ) -> QueueManager {
+        QueueManager::with_class_caps(npu_depth, cpu_depth, hetero, retrieve_cap, 0)
+    }
+
+    /// [`QueueManager::with_retrieval_cap`] plus the NPU retrieval leg:
+    /// `npu_retrieve_cap` bounds offloaded scans' share of the shared NPU
+    /// pool (clamped to `npu_depth`; 0 keeps the leg disabled).
+    pub fn with_class_caps(
+        npu_depth: usize,
+        cpu_depth: usize,
+        hetero: bool,
+        retrieve_cap: usize,
+        npu_retrieve_cap: usize,
+    ) -> QueueManager {
         QueueManager {
             npu_depth,
             cpu_depth,
             hetero,
             retrieve_cap: retrieve_cap.min(cpu_depth),
+            npu_retrieve_cap: npu_retrieve_cap.min(npu_depth),
             npu_len: AtomicUsize::new(0),
             cpu_len: AtomicUsize::new(0),
             embed_cpu: AtomicUsize::new(0),
             retr_cpu: AtomicUsize::new(0),
+            embed_npu: AtomicUsize::new(0),
+            retr_npu: AtomicUsize::new(0),
             routed_npu: AtomicU64::new(0),
             routed_cpu: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             routed_retrieve: AtomicU64::new(0),
             rejected_retrieve: AtomicU64::new(0),
+            routed_retrieve_npu: AtomicU64::new(0),
+            rejected_retrieve_npu: AtomicU64::new(0),
             bad_releases: AtomicU64::new(0),
         }
     }
@@ -196,6 +243,7 @@ impl QueueManager {
         match class {
             WorkClass::Embed => {
                 if try_acquire(&self.npu_len, self.npu_depth, cost) {
+                    self.embed_npu.fetch_add(cost, Ordering::AcqRel);
                     self.routed_npu.fetch_add(1, Ordering::Relaxed);
                     return Route::Npu;
                 }
@@ -224,6 +272,29 @@ impl QueueManager {
         }
     }
 
+    /// Admit one batched scan to the **NPU retrieval leg**: acquire `cost`
+    /// slots of the shared NPU pool, bounded by both `npu_depth` and the
+    /// per-class `npu_retrieve_cap` (cap first, pool second, with rollback
+    /// so a declined scan leaves no residue — the mirror image of the CPU
+    /// leg in [`QueueManager::dispatch_class`]). Returns [`Route::Npu`] or
+    /// [`Route::Busy`]; the caller must
+    /// `release_class(WorkClass::Retrieve, Route::Npu, cost)` when the
+    /// scan completes. Whether a scan *should* offload (embed traffic
+    /// low-water, mirror freshness) is the service's routing policy, not
+    /// decided here.
+    pub fn dispatch_retrieve_npu(&self, cost: usize) -> Route {
+        let cost = cost.max(1);
+        if try_acquire(&self.retr_npu, self.npu_retrieve_cap, cost) {
+            if try_acquire(&self.npu_len, self.npu_depth, cost) {
+                self.routed_retrieve_npu.fetch_add(1, Ordering::Relaxed);
+                return Route::Npu;
+            }
+            saturating_release(&self.retr_npu, cost);
+        }
+        self.rejected_retrieve_npu.fetch_add(1, Ordering::Relaxed);
+        Route::Busy
+    }
+
     /// Return one embedding slot. Must match a prior successful dispatch.
     pub fn release(&self, route: Route) {
         self.release_class(WorkClass::Embed, route, 1);
@@ -246,9 +317,11 @@ impl QueueManager {
         match (class, route) {
             (_, Route::Busy) => {}
             (WorkClass::Embed, Route::Npu) => {
-                if saturating_release(&self.npu_len, cost) < cost {
+                let freed = saturating_release(&self.embed_npu, cost);
+                if freed < cost {
                     self.bad_releases.fetch_add(1, Ordering::Relaxed);
                 }
+                saturating_release(&self.npu_len, freed);
             }
             (WorkClass::Embed, Route::Cpu) => {
                 let freed = saturating_release(&self.embed_cpu, cost);
@@ -264,16 +337,30 @@ impl QueueManager {
                 }
                 saturating_release(&self.cpu_len, freed);
             }
-            // No admission path grants retrieval an NPU slot (yet); a
-            // release claiming one is a caller bug, not capacity.
             (WorkClass::Retrieve, Route::Npu) => {
-                self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                let freed = saturating_release(&self.retr_npu, cost);
+                if freed < cost {
+                    self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                }
+                saturating_release(&self.npu_len, freed);
             }
         }
     }
 
+    /// Total NPU-pool occupancy in cost units (embed + offloaded scans).
     pub fn npu_occupancy(&self) -> usize {
         self.npu_len.load(Ordering::Acquire)
+    }
+
+    /// Embedding queries' share of the NPU pool — the occupancy the
+    /// service's offload low-water policy consults.
+    pub fn embed_npu_occupancy(&self) -> usize {
+        self.embed_npu.load(Ordering::Acquire)
+    }
+
+    /// Offloaded scans' share of the NPU pool (cost units).
+    pub fn retrieve_npu_occupancy(&self) -> usize {
+        self.retr_npu.load(Ordering::Acquire)
     }
 
     /// Total CPU-pool occupancy in cost units (embed + retrieval).
@@ -304,6 +391,11 @@ impl QueueManager {
         self.retrieve_cap
     }
 
+    /// Offloaded scans' cap within the NPU pool (cost units; 0 = leg off).
+    pub fn npu_retrieve_cap(&self) -> usize {
+        self.npu_retrieve_cap
+    }
+
     pub fn hetero(&self) -> bool {
         self.hetero
     }
@@ -320,6 +412,8 @@ impl QueueManager {
             rejected: self.rejected.load(Ordering::Relaxed),
             routed_retrieve: self.routed_retrieve.load(Ordering::Relaxed),
             rejected_retrieve: self.rejected_retrieve.load(Ordering::Relaxed),
+            routed_retrieve_npu: self.routed_retrieve_npu.load(Ordering::Relaxed),
+            rejected_retrieve_npu: self.rejected_retrieve_npu.load(Ordering::Relaxed),
             bad_releases: self.bad_releases.load(Ordering::Relaxed),
         }
     }
@@ -602,8 +696,109 @@ mod tests {
     }
 
     #[test]
+    fn npu_leg_shares_pool_with_embeds_and_respects_cap() {
+        // NPU pool of 6 with a scan cap of 4: a cost-3 scan + 3 embeds
+        // fill the pool exactly; both classes then bounce.
+        let qm = QueueManager::with_class_caps(6, 0, false, 0, 4);
+        assert_eq!(qm.npu_retrieve_cap(), 4);
+        assert_eq!(qm.dispatch_retrieve_npu(3), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Busy);
+        assert_eq!(qm.dispatch_retrieve_npu(1), Route::Busy); // cap has 1 left, pool has 0
+        assert_eq!(qm.npu_occupancy(), 6);
+        assert_eq!(qm.embed_npu_occupancy(), 3);
+        assert_eq!(qm.retrieve_npu_occupancy(), 3);
+        // Releasing the scan frees exactly its cost for either class.
+        qm.release_class(WorkClass::Retrieve, Route::Npu, 3);
+        assert_eq!(qm.npu_occupancy(), 3);
+        assert_eq!(qm.retrieve_npu_occupancy(), 0);
+        assert_eq!(qm.dispatch_retrieve_npu(3), Route::Npu);
+        let st = qm.stats();
+        assert_eq!(st.routed_retrieve_npu, 2);
+        assert_eq!(st.rejected_retrieve_npu, 1);
+        assert_eq!(st.bad_releases, 0);
+    }
+
+    #[test]
+    fn npu_leg_cap_bounds_class_below_pool() {
+        let qm = QueueManager::with_class_caps(8, 0, false, 0, 3);
+        assert_eq!(qm.dispatch_retrieve_npu(3), Route::Npu);
+        // Cap exhausted even though the pool has 5 free units.
+        assert_eq!(qm.dispatch_retrieve_npu(1), Route::Busy);
+        // Embeds still fill the remaining pool.
+        for _ in 0..5 {
+            assert_eq!(qm.dispatch(), Route::Npu);
+        }
+        assert_eq!(qm.dispatch(), Route::Busy);
+        assert_eq!(qm.npu_occupancy(), 8);
+    }
+
+    #[test]
+    fn npu_leg_rejected_scan_rolls_back_cap_when_pool_is_full() {
+        // Cap 4 of pool 4; embeds hold 2 pool units, so a cost-3 scan
+        // passes the cap check but fails the pool check — the cap
+        // acquisition must be rolled back.
+        let qm = QueueManager::with_class_caps(4, 0, false, 0, 4);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch_retrieve_npu(3), Route::Busy);
+        assert_eq!(qm.retrieve_npu_occupancy(), 0);
+        // A scan that fits the pool remainder is admitted.
+        assert_eq!(qm.dispatch_retrieve_npu(2), Route::Npu);
+        assert_eq!(qm.npu_occupancy(), 4);
+    }
+
+    #[test]
+    fn npu_leg_disabled_by_legacy_constructors() {
+        let qm = QueueManager::with_retrieval_cap(8, 4, true, 4);
+        assert_eq!(qm.npu_retrieve_cap(), 0);
+        assert_eq!(qm.dispatch_retrieve_npu(1), Route::Busy);
+        assert_eq!(qm.npu_occupancy(), 0);
+        let qm = QueueManager::new(8, 4, true);
+        assert_eq!(qm.dispatch_retrieve_npu(1), Route::Busy);
+    }
+
+    #[test]
+    fn npu_leg_double_release_cannot_free_embed_slots() {
+        // Cross-class containment on the device leg, mirroring the CPU
+        // regression: a double-released NPU scan must not liberate
+        // capacity embed queries legitimately hold.
+        let qm = QueueManager::with_class_caps(4, 0, false, 0, 4);
+        assert_eq!(qm.dispatch(), Route::Npu); // embed holds 1 pool unit
+        assert_eq!(qm.dispatch_retrieve_npu(2), Route::Npu);
+        qm.release_class(WorkClass::Retrieve, Route::Npu, 2);
+        assert_eq!(qm.npu_occupancy(), 1);
+        assert_eq!(qm.stats().bad_releases, 0);
+        // The double release frees nothing and is counted.
+        qm.release_class(WorkClass::Retrieve, Route::Npu, 2);
+        assert_eq!(qm.stats().bad_releases, 1);
+        assert_eq!(qm.npu_occupancy(), 1);
+        assert_eq!(qm.embed_npu_occupancy(), 1);
+        assert_eq!(qm.retrieve_npu_occupancy(), 0);
+        // And the inverse: a rogue embed NPU release cannot free what the
+        // retrieval leg holds.
+        assert_eq!(qm.dispatch_retrieve_npu(3), Route::Npu);
+        qm.release(Route::Npu); // matched: embed held 1
+        qm.release(Route::Npu); // rogue: embed holds 0 now
+        assert_eq!(qm.stats().bad_releases, 2);
+        assert_eq!(qm.npu_occupancy(), 3);
+        assert_eq!(qm.retrieve_npu_occupancy(), 3);
+    }
+
+    #[test]
+    fn npu_leg_oversized_cost_never_admits_but_leaves_no_residue() {
+        let qm = QueueManager::with_class_caps(4, 0, false, 0, 4);
+        assert_eq!(qm.dispatch_retrieve_npu(5), Route::Busy);
+        assert_eq!(qm.retrieve_npu_occupancy(), 0);
+        assert_eq!(qm.npu_occupancy(), 0);
+        assert_eq!(qm.dispatch_retrieve_npu(4), Route::Npu);
+    }
+
+    #[test]
     fn concurrent_mixed_classes_never_exceed_pool() {
-        let qm = Arc::new(QueueManager::with_retrieval_cap(8, 16, true, 12));
+        let qm = Arc::new(QueueManager::with_class_caps(8, 16, true, 12, 5));
         let mut handles = Vec::new();
         for t in 0..8 {
             let qm = Arc::clone(&qm);
@@ -614,11 +809,16 @@ mod tests {
                     } else {
                         (WorkClass::Embed, 1)
                     };
-                    let route = qm.dispatch_class(class, cost);
-                    // pool + cap bounds hold at every instant
+                    let route = if class == WorkClass::Retrieve && (t + i) % 2 == 0 {
+                        qm.dispatch_retrieve_npu(cost) // the offload leg
+                    } else {
+                        qm.dispatch_class(class, cost)
+                    };
+                    // pool + cap bounds hold at every instant, both legs
                     assert!(qm.cpu_occupancy() <= 16);
                     assert!(qm.retrieve_cpu_occupancy() <= 12);
                     assert!(qm.npu_occupancy() <= 8);
+                    assert!(qm.retrieve_npu_occupancy() <= 5);
                     qm.release_class(class, route, cost);
                 }
             }));
@@ -630,6 +830,8 @@ mod tests {
         assert_eq!(qm.cpu_occupancy(), 0);
         assert_eq!(qm.embed_cpu_occupancy(), 0);
         assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_eq!(qm.embed_npu_occupancy(), 0);
+        assert_eq!(qm.retrieve_npu_occupancy(), 0);
         assert_eq!(qm.stats().bad_releases, 0);
     }
 }

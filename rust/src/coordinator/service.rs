@@ -25,6 +25,7 @@ use super::instance::{spawn_worker, BackendFactory, Reply};
 use super::queue_manager::{QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
 use crate::metrics::Registry;
+use crate::runtime::NpuScanner;
 use crate::vecstore::{Hit, Quant};
 
 /// Why a request did not produce an embedding.
@@ -89,6 +90,18 @@ pub struct ServiceConfig {
     /// Scanned-arena bytes equal to one embed-query cost unit — the
     /// normalizer in `queue_manager::retrieval_slot_cost`.
     pub retrieval_cost_unit_bytes: usize,
+    /// Cap (cost units) on the NPU depth offloaded retrieval scans may
+    /// hold concurrently — the batched NPU retrieval offload leg, the
+    /// inverse of the paper's CPU offload. 0 (the default) disables
+    /// offload; `retrieval_admission: false` also disables it (the leg
+    /// is admission-aware by construction — un-metered scans never touch
+    /// the NPU pool). Calibrate with
+    /// `estimator::depth::fine_tune_npu_retrieval_cap`.
+    pub npu_retrieval_depth: usize,
+    /// Offload low-water mark: a scan is only routed to the NPU leg
+    /// while embed-side NPU occupancy is at or below this fraction of
+    /// `npu_depth` — the "embedding traffic is low" policy gate.
+    pub npu_offload_low_water: f64,
 }
 
 /// Default embed-query cost unit: 32 MiB of scanned arena ≈ the memory
@@ -114,6 +127,8 @@ impl Default for ServiceConfig {
             retrieval_admission: true,
             retrieval_depth: None,
             retrieval_cost_unit_bytes: EMBED_COST_UNIT_BYTES,
+            npu_retrieval_depth: 0,
+            npu_offload_low_water: 0.5,
         }
     }
 }
@@ -132,6 +147,33 @@ impl Drop for ScanAdmission<'_> {
     fn drop(&mut self) {
         self.qm.release_class(WorkClass::Retrieve, self.route, self.cost);
     }
+}
+
+/// Split the embedded panel into (original indexes, query slices) for
+/// one batched scan, failing dimension mismatches per query — a
+/// backend/index dimension mismatch is a deployment bug; report it
+/// instead of letting the index assert and panic the calling thread.
+fn split_panel<'a>(
+    index_dim: usize,
+    embeddings: &'a [Option<Vec<f32>>],
+    failures: &mut [Option<ServeError>],
+) -> (Vec<usize>, Vec<&'a [f32]>) {
+    let mut panel_idx = Vec::new();
+    let mut panel: Vec<&[f32]> = Vec::new();
+    for (i, e) in embeddings.iter().enumerate() {
+        if let Some(v) = e {
+            if v.len() != index_dim {
+                failures[i] = Some(ServeError::Backend(format!(
+                    "embedding dim {} != index dim {index_dim}",
+                    v.len()
+                )));
+                continue;
+            }
+            panel_idx.push(i);
+            panel.push(v.as_slice());
+        }
+    }
+    (panel_idx, panel)
 }
 
 /// In-flight request handle.
@@ -174,8 +216,21 @@ pub struct WindVE {
     /// Attached post-start via [`WindVE::attach_retrieval`]; behind a
     /// mutex so a shared (`Arc<WindVE>`) service can still be wired.
     retrieval: std::sync::Mutex<Option<Arc<RetrievalExecutor>>>,
+    /// The NPU offload scanner (a mirror of the attached executor's
+    /// corpus); cleared whenever a new executor is attached.
+    npu_retrieval: std::sync::Mutex<Option<Arc<NpuScanner>>>,
     retrieval_admission: bool,
     retrieval_cost_unit_bytes: usize,
+    /// The operator's raw `retrieval_admission` intent. Gates the NPU
+    /// offload leg, which is admission-aware by construction — but must
+    /// not inherit the `cpu_depth == 0` auto-disable above (an NPU-only
+    /// deployment has no CPU budget to meter, yet its NPU leg budget is
+    /// exactly where offload pays off). Mirrors `RetrievalLoad::admission`
+    /// in the DES, so the sim predicts the service for every config.
+    npu_offload_admission: bool,
+    /// Embed NPU occupancy at or below which scans may offload
+    /// (precomputed from `npu_offload_low_water · npu_depth`).
+    npu_offload_low_water_slots: usize,
     pub metrics: Registry,
 }
 
@@ -207,11 +262,12 @@ impl WindVE {
         // on host cores either way); `hetero` only gates whether embeds
         // may overflow into it (Algorithm 1).
         let retrieve_cap = cfg.retrieval_depth.unwrap_or(cfg.cpu_depth).min(cfg.cpu_depth);
-        let qm = Arc::new(QueueManager::with_retrieval_cap(
+        let qm = Arc::new(QueueManager::with_class_caps(
             cfg.npu_depth,
             cfg.cpu_depth,
             hetero,
             retrieve_cap,
+            cfg.npu_retrieval_depth.min(cfg.npu_depth),
         ));
         let npu_queue = Arc::new(DeviceQueue::new());
         let cpu_queue = hetero.then(|| Arc::new(DeviceQueue::new()));
@@ -243,6 +299,8 @@ impl WindVE {
         }
         let cache = (cfg.cache_entries > 0)
             .then(|| Arc::new(EmbeddingCache::new(cfg.cache_entries)));
+        let low_water = cfg.npu_offload_low_water.clamp(0.0, 1.0);
+        let npu_offload_low_water_slots = (cfg.npu_depth as f64 * low_water).floor() as usize;
         Ok(WindVE {
             qm,
             npu_queue,
@@ -251,25 +309,60 @@ impl WindVE {
             cache,
             cache_key_space: cfg.cache_key_space,
             retrieval: std::sync::Mutex::new(None),
+            npu_retrieval: std::sync::Mutex::new(None),
             // A zero CPU pool means there is no calibrated budget to
             // meter scans against; enforcing it would turn every
             // retrieval into BUSY on an NPU-only deployment.
             retrieval_admission: cfg.retrieval_admission && cfg.cpu_depth > 0,
             retrieval_cost_unit_bytes: cfg.retrieval_cost_unit_bytes,
+            npu_offload_admission: cfg.retrieval_admission,
+            npu_offload_low_water_slots,
             metrics,
         })
     }
 
     /// Attach the CPU-side retrieval executor (the vector index the
     /// service answers retrieval queries against). Replaces any previous
-    /// attachment.
+    /// attachment — and drops any NPU mirror of the old corpus, so a
+    /// stale arena can never answer for a new index.
     pub fn attach_retrieval(&self, exec: Arc<RetrievalExecutor>) {
         *self.retrieval.lock().expect("retrieval lock poisoned") = Some(exec);
+        *self.npu_retrieval.lock().expect("npu retrieval lock poisoned") = None;
     }
 
     /// The attached retrieval executor, if any.
     pub fn retrieval(&self) -> Option<Arc<RetrievalExecutor>> {
         self.retrieval.lock().expect("retrieval lock poisoned").clone()
+    }
+
+    /// Attach the NPU offload scanner (a device-side mirror of the
+    /// attached executor's corpus). Offload additionally requires
+    /// `npu_retrieval_depth > 0` in the service config.
+    pub fn attach_npu_offload(&self, scanner: Arc<NpuScanner>) {
+        *self.npu_retrieval.lock().expect("npu retrieval lock poisoned") = Some(scanner);
+    }
+
+    /// The attached NPU offload scanner, if any.
+    pub fn npu_retrieval(&self) -> Option<Arc<NpuScanner>> {
+        self.npu_retrieval.lock().expect("npu retrieval lock poisoned").clone()
+    }
+
+    /// Mirror the attached executor's corpus into a host-fallback
+    /// [`NpuScanner`] and attach it — the one-call wiring for the NPU
+    /// retrieval offload leg (attach a device-backed scanner manually
+    /// via [`WindVE::attach_npu_offload`] for real PJRT execution).
+    /// Errors when no executor is attached or its index cannot export a
+    /// bit-identical f32 mirror (quantized arenas, IVF).
+    pub fn mirror_retrieval_to_npu(&self) -> Result<()> {
+        let exec = self
+            .retrieval()
+            .ok_or_else(|| anyhow::anyhow!("no retrieval index attached"))?;
+        let (ids, rows, version) = exec.export_corpus().ok_or_else(|| {
+            anyhow::anyhow!("attached index cannot export a bit-identical f32 mirror")
+        })?;
+        let scanner = NpuScanner::from_snapshot(exec.dim(), ids, rows, version)?;
+        self.attach_npu_offload(Arc::new(scanner));
+        Ok(())
     }
 
     /// Admit and enqueue one query (Algorithm 1). Non-blocking.
@@ -405,84 +498,130 @@ impl WindVE {
             }
         }
 
-        // Retrieval stage: one sharded scan for the whole surviving panel.
-        // A backend/index dimension mismatch is a deployment bug; report
-        // it per query instead of letting the index assert and panic the
-        // calling thread.
-        let index_dim = exec.dim();
-        let mut panel_idx = Vec::new();
-        let mut panel: Vec<&[f32]> = Vec::new();
-        for (i, e) in embeddings.iter().enumerate() {
-            if let Some(v) = e {
-                if v.len() != index_dim {
-                    failures[i] = Some(ServeError::Backend(format!(
-                        "embedding dim {} != index dim {index_dim}",
-                        v.len()
-                    )));
-                    continue;
-                }
-                panel_idx.push(i);
-                panel.push(v.as_slice());
-            }
-        }
-        // Admission (Eqs. 9-10 extended to scan work): the one batched
-        // scan holds CPU slots in proportion to the bytes it will stream
-        // (`RetrievalExecutor::scan_cost`), sharing the calibrated CPU
-        // depth with embed overflow queries. BUSY is backpressure on the
-        // whole surviving panel — the service declines instead of
-        // oversubscribing the host past its calibrated depth.
-        let mut admitted: Option<ScanAdmission<'_>> = None;
-        if !panel.is_empty() && self.retrieval_admission {
-            // Clamp to the retrieval cap: a scan whose byte-cost exceeds
-            // the whole budget degenerates to a full-budget hold (scans
-            // serialize) instead of a permanently unschedulable request
-            // that would BUSY every retrieval on a large corpus.
-            let cap = self.qm.retrieve_cap();
-            let cost = exec.scan_cost(self.retrieval_cost_unit_bytes).min(cap.max(1));
-            match self.qm.dispatch_class(WorkClass::Retrieve, cost) {
-                Route::Busy => {
-                    self.metrics.counter("service.retrieve_busy").inc();
-                    for &i in &panel_idx {
-                        failures[i] = Some(ServeError::Busy);
+        // Retrieval stage: one batched scan for the whole surviving
+        // panel, on one of two legs.
+        //
+        // **NPU offload leg** (the inverse of the paper's CPU offload):
+        // when the config enables it (`npu_retrieval_depth > 0`), a fresh
+        // mirror is attached, and embed-side NPU occupancy is at or below
+        // the low-water mark, the scan is admitted to the NPU leg (class
+        // cap + shared NPU pool) and runs over the mirrored arena — the
+        // index lock is never touched. A mirror behind the corpus
+        // version is skipped (counted), so an offloaded scan is always
+        // equivalent to a CPU scan that took the lock at mirror time.
+        //
+        // **CPU leg** (Eqs. 9-10 extended to scan work): the admission
+        // cost estimate and the scan run under ONE read guard
+        // (`RetrievalExecutor::begin_scan`) — estimating with one guard
+        // and scanning under another let concurrent corpus `add()`s
+        // undercharge the admitted slot cost (TOCTOU). BUSY is
+        // backpressure on the whole surviving panel.
+        //
+        // Nothing survived embedding (e.g. a full-BUSY burst): skip both
+        // legs so the latency histograms only record real scan work.
+        let unit = self.retrieval_cost_unit_bytes;
+        let any_embedded = embeddings.iter().any(Option::is_some);
+        let mut offload: Option<(Arc<NpuScanner>, ScanAdmission<'_>)> = None;
+        if any_embedded && self.npu_offload_admission && self.qm.npu_retrieve_cap() > 0 {
+            if let Some(scanner) = self.npu_retrieval() {
+                if scanner.corpus_version() != exec.version() {
+                    self.metrics.counter("service.retrieve_offload_stale").inc();
+                } else if self.qm.embed_npu_occupancy() <= self.npu_offload_low_water_slots {
+                    // Clamp to the NPU retrieval cap, like the CPU leg:
+                    // an over-budget arena serializes at the full budget
+                    // instead of becoming permanently unschedulable.
+                    let cost = scanner.scan_cost(unit).min(self.qm.npu_retrieve_cap().max(1));
+                    if self.qm.dispatch_retrieve_npu(cost) == Route::Npu {
+                        self.metrics.counter("service.retrieve_cost_units_npu").add(cost as u64);
+                        let admission =
+                            ScanAdmission { qm: self.qm.as_ref(), route: Route::Npu, cost };
+                        offload = Some((scanner, admission));
                     }
-                    panel_idx.clear();
-                    panel.clear();
-                }
-                route => {
-                    self.metrics.counter("service.retrieve_admitted").inc();
-                    self.metrics.counter("service.retrieve_cost_units").add(cost as u64);
-                    admitted = Some(ScanAdmission { qm: self.qm.as_ref(), route, cost });
+                    // NPU leg full: fall through to the CPU leg.
                 }
             }
         }
-        // Nothing survived embedding (e.g. a full-BUSY burst) or the
-        // scan was declined: skip the scan so the latency histogram only
-        // records real scan work.
-        let mut hit_lists = if panel.is_empty() {
-            Vec::new()
-        } else {
-            let t0 = Instant::now();
-            let lists = exec.search_batch(&panel, k);
-            self.metrics
-                .histogram("service.retrieve_scan_ns")
-                .record(t0.elapsed().as_nanos() as u64);
-            self.metrics
-                .counter("service.retrievals")
-                .add(panel_idx.len() as u64);
-            // Per-codec counter: which arena (f32/f16/int8) absorbed the
-            // scan — the capacity dial the quantized path exists for.
-            // Static names: no per-batch allocation on the serving path.
-            let codec_counter = match exec.quant() {
-                Quant::F32 => "service.retrievals_f32",
-                Quant::F16 => "service.retrievals_f16",
-                Quant::Int8 => "service.retrievals_int8",
+
+        let (panel_idx, mut hit_lists) = if let Some((scanner, admission)) = offload {
+            let (panel_idx, panel) = split_panel(scanner.dim(), &embeddings, &mut failures);
+            let lists = if panel.is_empty() {
+                Vec::new()
+            } else {
+                let t0 = Instant::now();
+                let lists = scanner.search_batch(&panel, k);
+                self.metrics
+                    .histogram("service.retrieve_scan_npu_ns")
+                    .record(t0.elapsed().as_nanos() as u64);
+                self.metrics.counter("service.retrieve_offloaded").inc();
+                self.metrics.counter("service.retrievals").add(panel_idx.len() as u64);
+                self.metrics.counter("service.retrievals_npu").add(panel_idx.len() as u64);
+                lists
             };
-            self.metrics.counter(codec_counter).add(panel_idx.len() as u64);
-            lists
+            // Scan complete: hand the NPU slots back (the guard also
+            // releases on unwind if the scan panics).
+            drop(admission);
+            (panel_idx, lists)
+        } else if any_embedded {
+            let session = exec.begin_scan();
+            let (mut panel_idx, mut panel) =
+                split_panel(session.dim(), &embeddings, &mut failures);
+            let mut admitted: Option<ScanAdmission<'_>> = None;
+            if !panel.is_empty() && self.retrieval_admission {
+                // Clamp to the retrieval cap: a scan whose byte-cost
+                // exceeds the whole budget degenerates to a full-budget
+                // hold (scans serialize) instead of a permanently
+                // unschedulable request that would BUSY every retrieval
+                // on a large corpus.
+                let cap = self.qm.retrieve_cap();
+                let cost = session.scan_cost(unit).min(cap.max(1));
+                match self.qm.dispatch_class(WorkClass::Retrieve, cost) {
+                    Route::Busy => {
+                        self.metrics.counter("service.retrieve_busy").inc();
+                        for &i in &panel_idx {
+                            failures[i] = Some(ServeError::Busy);
+                        }
+                        panel_idx.clear();
+                        panel.clear();
+                    }
+                    route => {
+                        self.metrics.counter("service.retrieve_admitted").inc();
+                        self.metrics.counter("service.retrieve_cost_units").add(cost as u64);
+                        admitted = Some(ScanAdmission { qm: self.qm.as_ref(), route, cost });
+                    }
+                }
+            }
+            let lists = if panel.is_empty() {
+                Vec::new()
+            } else {
+                let t0 = Instant::now();
+                let lists = session.search_batch(&panel, k);
+                self.metrics
+                    .histogram("service.retrieve_scan_ns")
+                    .record(t0.elapsed().as_nanos() as u64);
+                self.metrics
+                    .counter("service.retrievals")
+                    .add(panel_idx.len() as u64);
+                // Per-codec counter: which arena (f32/f16/int8) absorbed
+                // the scan — the capacity dial the quantized path exists
+                // for. Static names: no per-batch allocation on the
+                // serving path.
+                let codec_counter = match exec.quant() {
+                    Quant::F32 => "service.retrievals_f32",
+                    Quant::F16 => "service.retrievals_f16",
+                    Quant::Int8 => "service.retrievals_int8",
+                };
+                self.metrics.counter(codec_counter).add(panel_idx.len() as u64);
+                lists
+            };
+            // Scan complete (or skipped): release the read session, then
+            // hand the slots back. On a panic inside the scan, unwinding
+            // drops both guards too.
+            drop(session);
+            drop(admitted);
+            (panel_idx, lists)
+        } else {
+            (Vec::new(), Vec::new())
         };
-        // Scan complete (or skipped): hand the slots back. On a panic
-        // inside the scan, unwinding drops the guard and releases too.
-        drop(admitted);
 
         let mut out: Vec<Result<Vec<Hit>, ServeError>> = failures
             .into_iter()
@@ -525,7 +664,7 @@ impl Drop for WindVE {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::devices::executor::Backend;
+    use crate::devices::executor::{Backend, RetrievalExecutor};
 
     struct EchoBackend {
         tag: f32,
@@ -908,6 +1047,189 @@ mod tests {
         // No admission accounting was engaged.
         assert_eq!(svc.queue_manager().stats().routed_retrieve, 0);
         assert_eq!(svc.metrics.counter("service.retrieve_admitted").get(), 0);
+        svc.shutdown();
+    }
+
+    fn offload_service(npu_retrieval_depth: usize, low_water: f64) -> WindVE {
+        let dim = 16;
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                npu_retrieval_depth,
+                npu_offload_low_water: low_water,
+                ..ServiceConfig::default()
+            },
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+        )
+        .unwrap()
+    }
+
+    fn attach_corpus(svc: &WindVE, dim: usize, n: u64) -> Arc<RetrievalExecutor> {
+        let exec = Arc::new(RetrievalExecutor::flat(dim));
+        for i in 0..n {
+            exec.add(i, &pseudo_embedding(&format!("doc {i}"), dim));
+        }
+        svc.attach_retrieval(Arc::clone(&exec));
+        exec
+    }
+
+    /// Tentpole: a scan routed to the NPU leg answers from the mirrored
+    /// arena with results bit-identical to the CPU index scan, and the
+    /// admission accounting lands on the NPU leg, not the CPU pool.
+    #[test]
+    fn npu_offload_serves_bit_identical_results() {
+        let dim = 16;
+        let svc = offload_service(4, 0.5);
+        let exec = attach_corpus(&svc, dim, 24);
+        svc.mirror_retrieval_to_npu().unwrap();
+        assert!(svc.npu_retrieval().is_some());
+
+        let queries: Vec<String> = vec!["doc 3".into(), "doc 17".into(), "doc 8".into()];
+        let results = svc.retrieve_blocking(&queries, 4, Duration::from_secs(5));
+        for (q, r) in queries.iter().zip(&results) {
+            let hits = r.as_ref().expect("offloaded retrieval failed");
+            let want = exec.search(&pseudo_embedding(q, dim), 4);
+            assert_eq!(hits, &want);
+            for (a, b) in hits.iter().zip(&want) {
+                assert_eq!(a.score.to_bits(), b.score.to_bits());
+            }
+        }
+        let st = svc.queue_manager().stats();
+        assert_eq!(st.routed_retrieve_npu, 1);
+        assert_eq!(st.routed_retrieve, 0); // CPU leg untouched
+        assert_eq!(svc.metrics.counter("service.retrieve_offloaded").get(), 1);
+        assert_eq!(svc.metrics.counter("service.retrievals_npu").get(), 3);
+        assert_eq!(svc.queue_manager().retrieve_npu_occupancy(), 0); // drained
+        assert_eq!(st.bad_releases, 0);
+        svc.shutdown();
+    }
+
+    /// A mirror behind the corpus version must never answer: the scan
+    /// falls back to the CPU leg (which sees the fresh rows) and the
+    /// skip is counted for operators.
+    #[test]
+    fn npu_offload_stale_mirror_falls_back_to_cpu() {
+        let dim = 16;
+        let svc = offload_service(4, 0.5);
+        let exec = attach_corpus(&svc, dim, 16);
+        svc.mirror_retrieval_to_npu().unwrap();
+        // Corpus moves on after the mirror was taken.
+        exec.add(99, &pseudo_embedding("doc 99", dim));
+        let out = svc.retrieve_blocking(&["doc 99".into()], 3, Duration::from_secs(5));
+        let hits = out[0].as_ref().expect("stale-mirror fallback failed");
+        assert_eq!(hits[0].id, 99); // the CPU leg sees the fresh row
+        let st = svc.queue_manager().stats();
+        assert_eq!(st.routed_retrieve_npu, 0);
+        assert_eq!(st.routed_retrieve, 1);
+        assert_eq!(svc.metrics.counter("service.retrieve_offload_stale").get(), 1);
+        // Re-mirroring restores the offload leg.
+        svc.mirror_retrieval_to_npu().unwrap();
+        let out = svc.retrieve_blocking(&["doc 99".into()], 3, Duration::from_secs(5));
+        assert_eq!(out[0].as_ref().unwrap()[0].id, 99);
+        assert_eq!(svc.queue_manager().stats().routed_retrieve_npu, 1);
+        svc.shutdown();
+    }
+
+    /// The low-water policy gate: scans only offload while embed-side
+    /// NPU occupancy is at or below the mark; above it they stay on the
+    /// CPU leg so offload never competes with an embedding burst.
+    #[test]
+    fn npu_offload_respects_embed_low_water_mark() {
+        let dim = 16;
+        let svc = offload_service(4, 0.0); // offload only on an idle NPU
+        attach_corpus(&svc, dim, 16);
+        svc.mirror_retrieval_to_npu().unwrap();
+        let qm = svc.queue_manager();
+        // An embed query in flight on the NPU: policy must keep the scan
+        // on the CPU leg.
+        assert_eq!(qm.dispatch(), Route::Npu);
+        let out = svc.retrieve_blocking(&["doc 5".into()], 3, Duration::from_secs(5));
+        assert_eq!(out[0].as_ref().unwrap()[0].id, 5);
+        assert_eq!(qm.stats().routed_retrieve_npu, 0);
+        assert_eq!(qm.stats().routed_retrieve, 1);
+        // NPU idle again: the same scan offloads.
+        qm.release(Route::Npu);
+        let out = svc.retrieve_blocking(&["doc 5".into()], 3, Duration::from_secs(5));
+        assert_eq!(out[0].as_ref().unwrap()[0].id, 5);
+        assert_eq!(qm.stats().routed_retrieve_npu, 1);
+        svc.shutdown();
+    }
+
+    /// A full NPU leg is backpressure on the leg, not on the scan: it
+    /// falls back to the CPU leg and still serves.
+    #[test]
+    fn npu_offload_leg_full_falls_back_to_cpu() {
+        let dim = 16;
+        let svc = offload_service(2, 1.0);
+        attach_corpus(&svc, dim, 16);
+        svc.mirror_retrieval_to_npu().unwrap();
+        let qm = svc.queue_manager();
+        assert_eq!(qm.npu_retrieve_cap(), 2);
+        assert_eq!(qm.dispatch_retrieve_npu(2), Route::Npu); // hold the leg
+        let out = svc.retrieve_blocking(&["doc 7".into()], 3, Duration::from_secs(5));
+        assert_eq!(out[0].as_ref().unwrap()[0].id, 7);
+        let st = qm.stats();
+        assert_eq!(st.routed_retrieve_npu, 1); // only the manual hold
+        assert_eq!(st.routed_retrieve, 1); // the scan fell back
+        qm.release_class(WorkClass::Retrieve, Route::Npu, 2);
+        svc.shutdown();
+    }
+
+    /// Review regression: an operator who disabled retrieval admission
+    /// has un-metered scans by choice — the NPU leg (admission-aware by
+    /// construction) must stay off too, or scan traffic would consume
+    /// shared NPU capacity the DES (admission=false never offloads)
+    /// predicts is embed-only.
+    #[test]
+    fn npu_offload_disabled_when_retrieval_admission_is_off() {
+        let dim = 16;
+        let svc = WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                retrieval_admission: false,
+                npu_retrieval_depth: 4,
+                ..ServiceConfig::default()
+            },
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+        )
+        .unwrap();
+        attach_corpus(&svc, dim, 16);
+        svc.mirror_retrieval_to_npu().unwrap();
+        let out = svc.retrieve_blocking(&["doc 5".into()], 3, Duration::from_secs(5));
+        assert_eq!(out[0].as_ref().unwrap()[0].id, 5);
+        // Neither leg's accounting was engaged: the scan ran un-metered.
+        let st = svc.queue_manager().stats();
+        assert_eq!(st.routed_retrieve_npu, 0);
+        assert_eq!(st.routed_retrieve, 0);
+        assert_eq!(svc.metrics.counter("service.retrieve_offloaded").get(), 0);
+        svc.shutdown();
+    }
+
+    /// Quantized and IVF arenas cannot export a bit-identical mirror:
+    /// the one-call wiring must refuse rather than attach a lying arena.
+    #[test]
+    fn mirror_refuses_non_exportable_indexes() {
+        let dim = 16;
+        let svc = offload_service(4, 0.5);
+        assert!(svc.mirror_retrieval_to_npu().is_err()); // nothing attached
+        let exec = Arc::new(RetrievalExecutor::flat_quant(dim, Quant::Int8));
+        exec.add(0, &pseudo_embedding("doc 0", dim));
+        svc.attach_retrieval(exec);
+        let err = svc.mirror_retrieval_to_npu().unwrap_err();
+        assert!(err.to_string().contains("mirror"), "{err}");
+        // And attaching a new executor drops any previous mirror, so a
+        // stale arena can never answer for a new index.
+        attach_corpus(&svc, dim, 4);
+        svc.mirror_retrieval_to_npu().unwrap();
+        assert!(svc.npu_retrieval().is_some());
+        attach_corpus(&svc, dim, 6);
+        assert!(svc.npu_retrieval().is_none());
         svc.shutdown();
     }
 

@@ -13,6 +13,7 @@
 //!   DESIGN.md §2) and by tests that must not depend on built artifacts.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 use std::time::Duration;
 
@@ -61,6 +62,13 @@ impl Backend for RealBackend {
     }
 }
 
+/// Default synthetic bucket cap: the drain limit the batcher sees from a
+/// synthetic worker. Real engines cap batches at their largest exported
+/// bucket; `usize::MAX` here (the old behavior) made the batcher drain
+/// unboundedly, so batch-size-dependent admission tests never saw
+/// realistic batch shapes.
+pub const SYNTH_BUCKET_CAP: usize = 64;
+
 /// Profile-driven synthetic backend: calibrated latency + deterministic
 /// hash pseudo-embeddings (so routing/batching tests can assert payloads).
 pub struct SyntheticBackend {
@@ -69,12 +77,28 @@ pub struct SyntheticBackend {
     /// Wall-clock scale: 1.0 replays paper-scale seconds, small values
     /// (e.g. 1e-3) keep tests fast while preserving ratios.
     pub time_scale: f64,
+    /// Largest batch reported to the batcher ([`SYNTH_BUCKET_CAP`] by
+    /// default; [`SyntheticBackend::with_max_batch`] overrides).
+    bucket_cap: usize,
     rng: Pcg,
 }
 
 impl SyntheticBackend {
     pub fn new(profile: DeviceProfile, time_scale: f64, seed: u64) -> SyntheticBackend {
-        SyntheticBackend { profile, d_model: 64, time_scale, rng: Pcg::new(seed) }
+        SyntheticBackend {
+            profile,
+            d_model: 64,
+            time_scale,
+            bucket_cap: SYNTH_BUCKET_CAP,
+            rng: Pcg::new(seed),
+        }
+    }
+
+    /// Override the synthetic bucket cap (clamped to ≥ 1) so tests can
+    /// exercise a specific drain shape.
+    pub fn with_max_batch(mut self, cap: usize) -> SyntheticBackend {
+        self.bucket_cap = cap.max(1);
+        self
     }
 
     fn pseudo_embedding(&self, text: &str, d: usize) -> Vec<f32> {
@@ -117,7 +141,7 @@ impl Backend for SyntheticBackend {
     }
 
     fn max_batch(&self) -> usize {
-        usize::MAX
+        self.bucket_cap
     }
 }
 
@@ -135,11 +159,47 @@ pub struct RetrievalExecutor {
     /// never changes codec) so hot-path callers don't take the lock.
     quant: Quant,
     index: RwLock<Box<dyn Index + Send + Sync>>,
+    /// Bumped (inside the write guard) on every corpus mutation, so
+    /// device-side mirrors ([`RetrievalExecutor::export_corpus`]) can
+    /// check freshness without comparing arenas.
+    version: AtomicU64,
+    /// Times a read guard was recovered from a poisoned lock (surfaced
+    /// via `/stats` as `retrieval_poisoned_recoveries`).
+    poisoned_recoveries: AtomicU64,
 }
 
 impl RetrievalExecutor {
     pub fn new(index: Box<dyn Index + Send + Sync>) -> RetrievalExecutor {
-        RetrievalExecutor { quant: index.quant(), index: RwLock::new(index) }
+        RetrievalExecutor {
+            quant: index.quant(),
+            index: RwLock::new(index),
+            version: AtomicU64::new(0),
+            poisoned_recoveries: AtomicU64::new(0),
+        }
+    }
+
+    /// Read-side lock acquisition that survives poisoning. A writer that
+    /// panics while holding the lock (the canonical case: `add` asserting
+    /// on a dimension mismatch, which fires *before* any mutation)
+    /// poisons it; `expect`ing the guard would then permanently kill
+    /// every front-end retrieval thread for a corpus that is intact.
+    /// Scans are read-only, so recovering the guard is safe; each
+    /// recovery is counted for operators.
+    fn read_index(&self) -> std::sync::RwLockReadGuard<'_, Box<dyn Index + Send + Sync>> {
+        self.index.read().unwrap_or_else(|e| {
+            self.poisoned_recoveries.fetch_add(1, Ordering::Relaxed);
+            e.into_inner()
+        })
+    }
+
+    /// Read guards recovered from a poisoned index lock so far.
+    pub fn poisoned_recoveries(&self) -> u64 {
+        self.poisoned_recoveries.load(Ordering::Relaxed)
+    }
+
+    /// Monotone corpus version: bumps on every [`RetrievalExecutor::add`].
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
     }
 
     /// Convenience: an empty exact (flat) index of `dim`.
@@ -160,12 +220,16 @@ impl RetrievalExecutor {
     }
 
     /// Add one corpus vector (exclusive lock; cheap relative to scans).
+    /// The version bump happens inside the guard, so a reader holding the
+    /// lock always sees a version consistent with the rows it can scan.
     pub fn add(&self, id: u64, vector: &[f32]) {
-        self.index.write().expect("index lock poisoned").add(id, vector);
+        let mut g = self.index.write().expect("index lock poisoned");
+        g.add(id, vector);
+        self.version.fetch_add(1, Ordering::Release);
     }
 
     pub fn len(&self) -> usize {
-        self.index.read().expect("index lock poisoned").len()
+        self.read_index().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -173,7 +237,18 @@ impl RetrievalExecutor {
     }
 
     pub fn dim(&self) -> usize {
-        self.index.read().expect("index lock poisoned").dim()
+        self.read_index().dim()
+    }
+
+    /// Begin a scan session: ONE read guard under which the admission
+    /// cost estimate and the scan itself both run. Estimating cost with
+    /// one guard and scanning under another (the old shape) was a TOCTOU
+    /// — corpus `add`s between the two undercharged the admitted slot
+    /// cost relative to the bytes the scan then actually streamed.
+    /// Writers block for the session's lifetime, so the estimate is exact
+    /// for the rows scanned; keep the session short-lived.
+    pub fn begin_scan(&self) -> ScanSession<'_> {
+        ScanSession { quant: self.quant, guard: self.read_index() }
     }
 
     /// Bytes one batched scan streams from the attached arena: the
@@ -182,15 +257,67 @@ impl RetrievalExecutor {
     /// codec. This is the executor's per-scan cost report to admission —
     /// the scan is memory-bound, so bytes scanned is the honest proxy
     /// for how much of the calibrated CPU depth one scan consumes (see
-    /// `coordinator::queue_manager`).
+    /// `coordinator::queue_manager`). Admission-coupled scans should use
+    /// [`RetrievalExecutor::begin_scan`] so estimate and scan share one
+    /// guard.
     pub fn scan_bytes_estimate(&self) -> usize {
-        let g = self.index.read().expect("index lock poisoned");
-        g.scan_rows_estimate() * self.quant.bytes_per_row(g.dim())
+        self.begin_scan().scan_bytes_estimate()
     }
 
     /// Admission slot cost of one batched scan, normalized to embed-query
     /// cost units of `unit_bytes` (≥ 1: even a tiny scan holds a slot
     /// while it runs).
+    pub fn scan_cost(&self, unit_bytes: usize) -> usize {
+        self.begin_scan().scan_cost(unit_bytes)
+    }
+
+    /// Single-query top-k (shared lock).
+    pub fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
+        self.read_index().search(query, k)
+    }
+
+    /// Batched top-k over a query panel (shared lock, sharded scan).
+    pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        self.read_index().search_batch(queries, k)
+    }
+
+    /// Snapshot the corpus for a device-side mirror (the NPU retrieval
+    /// offload arena): `(ids, row-major f32 rows, version)` under one
+    /// read guard, so rows and version are mutually consistent. `None`
+    /// when the index cannot guarantee that scanning the exported rows
+    /// with the f32 kernels is bit-identical to its own scan (quantized
+    /// arenas, pruning indexes) — see [`Index::export_f32_rows`].
+    pub fn export_corpus(&self) -> Option<(Vec<u64>, Vec<f32>, u64)> {
+        let g = self.read_index();
+        let (ids, rows) = g.export_f32_rows()?;
+        Some((ids, rows, self.version.load(Ordering::Acquire)))
+    }
+}
+
+/// One scan's read session over the executor's index: cost estimation
+/// and the scan itself under a single guard (see
+/// [`RetrievalExecutor::begin_scan`]).
+pub struct ScanSession<'a> {
+    quant: Quant,
+    guard: std::sync::RwLockReadGuard<'a, Box<dyn Index + Send + Sync>>,
+}
+
+impl ScanSession<'_> {
+    pub fn dim(&self) -> usize {
+        self.guard.dim()
+    }
+
+    pub fn len(&self) -> usize {
+        self.guard.len()
+    }
+
+    /// Bytes the scan will stream — exact for the session's lifetime
+    /// (writers are blocked while the guard is held).
+    pub fn scan_bytes_estimate(&self) -> usize {
+        self.guard.scan_rows_estimate() * self.quant.bytes_per_row(self.guard.dim())
+    }
+
+    /// Admission slot cost (see [`RetrievalExecutor::scan_cost`]).
     pub fn scan_cost(&self, unit_bytes: usize) -> usize {
         crate::coordinator::queue_manager::retrieval_slot_cost(
             self.scan_bytes_estimate(),
@@ -198,17 +325,9 @@ impl RetrievalExecutor {
         )
     }
 
-    /// Single-query top-k (shared lock).
-    pub fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
-        self.index.read().expect("index lock poisoned").search(query, k)
-    }
-
-    /// Batched top-k over a query panel (shared lock, sharded scan).
+    /// The batched scan this session was opened for.
     pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
-        self.index
-            .read()
-            .expect("index lock poisoned")
-            .search_batch(queries, k)
+        self.guard.search_batch(queries, k)
     }
 }
 
@@ -324,6 +443,118 @@ mod tests {
         for (q, got) in qrefs.iter().zip(&batch) {
             assert_eq!(got, &ex.search(q, 3));
         }
+    }
+
+    #[test]
+    fn synthetic_max_batch_is_clamped_and_configurable() {
+        // Regression (satellite): usize::MAX let the batcher drain
+        // unboundedly; the synthetic bucket cap must be finite and
+        // overridable so admission tests see realistic batch shapes.
+        let b = fast_synth();
+        assert_eq!(b.max_batch(), SYNTH_BUCKET_CAP);
+        assert!(b.max_batch() < usize::MAX);
+        let b = fast_synth().with_max_batch(8);
+        assert_eq!(b.max_batch(), 8);
+        // The clamp floor: a zero cap would wedge the drain loop.
+        let b = fast_synth().with_max_batch(0);
+        assert_eq!(b.max_batch(), 1);
+    }
+
+    #[test]
+    fn corpus_version_bumps_on_every_add() {
+        let ex = RetrievalExecutor::flat(4);
+        assert_eq!(ex.version(), 0);
+        ex.add(1, &[1.0, 0.0, 0.0, 0.0]);
+        ex.add(2, &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(ex.version(), 2);
+    }
+
+    #[test]
+    fn export_corpus_snapshots_flat_f32_only() {
+        let ex = RetrievalExecutor::flat(4);
+        ex.add(7, &[1.0, 0.0, 0.0, 0.0]);
+        ex.add(9, &[0.0, 1.0, 0.0, 0.0]);
+        let (ids, rows, version) = ex.export_corpus().expect("flat f32 exports");
+        assert_eq!(ids, vec![7, 9]);
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0], 1.0);
+        assert_eq!(version, ex.version());
+        // Quantized arenas cannot guarantee a bit-identical f32 mirror.
+        let qx = RetrievalExecutor::flat_quant(4, Quant::Int8);
+        qx.add(1, &[0.5, 0.5, 0.0, 0.0]);
+        assert!(qx.export_corpus().is_none());
+    }
+
+    /// Satellite regression: one panicking writer must not permanently
+    /// kill front-end retrieval. The canonical poisoner is `add` with a
+    /// mis-sized vector — the dimension assert fires while the write
+    /// guard is held (and before any mutation, so the corpus is intact).
+    #[test]
+    fn poisoned_lock_recovers_reads_and_counts() {
+        let ex = std::sync::Arc::new(RetrievalExecutor::flat(4));
+        for i in 0..8u64 {
+            let a = (i as f32) * 0.4;
+            ex.add(i, &[a.cos(), a.sin(), 0.0, 0.0]);
+        }
+        // Poison: a writer thread panics while holding the write lock.
+        let poisoner = std::sync::Arc::clone(&ex);
+        let joined = std::thread::spawn(move || poisoner.add(99, &[1.0, 2.0])).join();
+        assert!(joined.is_err(), "mis-sized add must panic");
+        assert!(ex.index.is_poisoned(), "lock must actually be poisoned");
+        // Every read-side accessor recovers and serves intact data.
+        assert_eq!(ex.len(), 8);
+        assert_eq!(ex.dim(), 4);
+        let q = [0.8f32.cos(), 0.8f32.sin(), 0.0, 0.0];
+        let hits = ex.search(&q, 3);
+        assert_eq!(hits[0].id, 2); // 0.8 == 2 · 0.4
+        assert_eq!(ex.search_batch(&[&q[..]], 3)[0], hits);
+        let session = ex.begin_scan();
+        assert_eq!(session.len(), 8);
+        drop(session);
+        assert!(ex.poisoned_recoveries() >= 4);
+    }
+
+    /// Satellite regression (admission-cost TOCTOU): with estimate and
+    /// scan under one read guard, concurrent adds can never make the
+    /// admitted cost lag the bytes the scan actually streams — writers
+    /// block until the session drops, so the lag is exactly zero (well
+    /// under the one-batch tolerance the invariant allows).
+    #[test]
+    fn scan_session_pins_cost_to_scanned_bytes_under_concurrent_adds() {
+        let dim = 8;
+        let ex = std::sync::Arc::new(RetrievalExecutor::flat(dim));
+        for i in 0..32u64 {
+            let a = (i as f32) * 0.2;
+            let mut v = vec![0.0f32; dim];
+            v[0] = a.cos();
+            v[1] = a.sin();
+            ex.add(i, &v);
+        }
+        let session = ex.begin_scan();
+        let admitted_bytes = session.scan_bytes_estimate();
+        // A writer racing the admitted scan: must block on the session.
+        let writer = {
+            let ex = std::sync::Arc::clone(&ex);
+            std::thread::spawn(move || {
+                for i in 32..48u64 {
+                    let mut v = vec![0.0f32; dim];
+                    v[0] = 1.0;
+                    ex.add(i, &v);
+                }
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        // The corpus this session can scan is byte-for-byte what was
+        // costed — the racing adds have not landed.
+        assert_eq!(session.len(), 32);
+        assert_eq!(session.scan_bytes_estimate(), admitted_bytes);
+        let q = vec![1.0f32; dim];
+        let hits = session.search_batch(&[&q[..]], 5);
+        assert_eq!(session.len() * Quant::F32.bytes_per_row(dim), admitted_bytes);
+        assert_eq!(hits[0].len(), 5);
+        drop(session);
+        writer.join().unwrap();
+        assert_eq!(ex.len(), 48);
     }
 
     #[test]

@@ -163,6 +163,37 @@ pub fn fine_tune_depths_mixed(
     split_depth(best, retrieve_fraction)
 }
 
+/// The NPU-retrieval-depth axis: the largest offloaded-scan cost cap
+/// (cost units co-resident with embed traffic on the shared NPU pool)
+/// whose measured latency still meets the SLO.
+///
+/// This is the inverse companion of [`fine_tune_depths_mixed`]: instead
+/// of splitting the *CPU* budget between embed overflow and scans, it
+/// asks how much scan work the *NPU* can absorb in its load valleys
+/// before embedding latency at the expected operating point violates the
+/// SLO. `measure(cap)` observes the real embed+scan latency with `cap`
+/// scan cost units held on the device; the walk is monotone and bounded
+/// by `npu_depth` (a scan cap can never exceed the pool it draws from).
+/// Feed the result to `ServiceConfig::npu_retrieval_depth` /
+/// `QueueManager::with_class_caps`.
+pub fn fine_tune_npu_retrieval_cap(
+    slo: f64,
+    npu_depth: usize,
+    mut measure: impl FnMut(usize) -> f64,
+) -> usize {
+    let mut best = 0;
+    for cap in 1..=npu_depth {
+        if crate::devices::profile::slo_met(measure(cap), slo) {
+            best = cap;
+        } else {
+            // Latency is monotone in co-resident scan cost: stop at the
+            // first violation.
+            break;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,5 +348,30 @@ mod tests {
     #[should_panic(expected = "retrieve_fraction")]
     fn mixed_rejects_out_of_range_fraction() {
         let _ = fine_tune_depths_mixed(1.0, 4, 2, 1.5, |_e, _r| 0.1);
+    }
+
+    #[test]
+    fn npu_retrieval_cap_stops_at_slo_boundary() {
+        // Planted model: base embed latency 0.4 s plus 0.1 s per
+        // co-resident scan cost unit → SLO 1.0 admits exactly 6 units.
+        let cap = fine_tune_npu_retrieval_cap(1.0, 44, |c| 0.4 + 0.1 * c as f64);
+        assert_eq!(cap, 6);
+        // Bounded by the pool even when everything passes.
+        assert_eq!(fine_tune_npu_retrieval_cap(1.0, 4, |_| 0.2), 4);
+        // A device with no SLO headroom gets no offload budget.
+        assert_eq!(fine_tune_npu_retrieval_cap(1.0, 44, |_| 1.5), 0);
+        // A zero pool means no leg at all.
+        assert_eq!(fine_tune_npu_retrieval_cap(1.0, 0, |_| 0.1), 0);
+    }
+
+    #[test]
+    fn npu_retrieval_cap_probes_stop_after_first_violation() {
+        let mut probes = 0;
+        let cap = fine_tune_npu_retrieval_cap(1.0, 44, |c| {
+            probes += 1;
+            0.5 + 0.2 * c as f64
+        });
+        assert_eq!(cap, 2); // 0.9 passes, 1.1 fails
+        assert_eq!(probes, 3, "monotone walk must stop at the boundary");
     }
 }

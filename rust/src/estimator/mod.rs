@@ -9,7 +9,8 @@ pub mod robust;
 pub mod stress;
 
 pub use depth::{
-    estimate_depth, fine_tune_depths, fine_tune_depths_mixed, ClassDepths, DepthEstimate,
+    estimate_depth, fine_tune_depths, fine_tune_depths_mixed, fine_tune_npu_retrieval_cap,
+    ClassDepths, DepthEstimate,
 };
 pub use linreg::LinearFit;
 pub use stress::{stress_search, StressResult};

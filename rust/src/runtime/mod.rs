@@ -3,9 +3,11 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod npu_scan;
 pub mod pjrt;
 pub mod tokenizer;
 pub mod wtar;
 
 pub use engine::EmbeddingEngine;
 pub use manifest::{Bucket, Manifest, ModelEntry};
+pub use npu_scan::NpuScanner;

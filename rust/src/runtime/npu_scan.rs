@@ -1,0 +1,479 @@
+//! Device-side batched top-k scan — the NPU retrieval offload leg.
+//!
+//! Mirrors `vecstore::Index::search_batch` on the accelerator path: the
+//! corpus arena is uploaded once (resident across scans, like model
+//! weights in [`super::engine`]), and each offloaded panel ships only the
+//! `[nq, dim]` query tensor to the device, which answers with the
+//! `[nq, n]` score matrix of `Q · Rᵀ`; top-k selection runs host-side
+//! over the returned scores with the same deterministic tie-breaking as
+//! the CPU scan.
+//!
+//! Two execution paths behind one handle:
+//!
+//! * **Device** — a [`ScanBackend`] (e.g. [`PjrtScanBackend`]: PJRT
+//!   matmul over a [`Context::upload_f32`]-resident arena) owned by a
+//!   dedicated worker thread ([`spawn_scan_worker`]) because PJRT handles
+//!   are not `Send`. Device errors degrade to the host fallback and are
+//!   counted, never surfaced as scan failures.
+//! * **Host fallback** — the same role [`crate::devices::executor::SyntheticBackend`]
+//!   plays for embedding: a deterministic stand-in so tests and the DES
+//!   never need built artifacts. It scans the mirrored arena with the
+//!   dispatched f32 panel kernels and global-row-sequence top-k, so its
+//!   results are **bit-identical** to `FlatIndex::search` over the same
+//!   rows — the acceptance bar for routing a scan to either processor.
+//!
+//! Freshness: the mirror records the corpus version it was exported at
+//! ([`crate::devices::executor::RetrievalExecutor::export_corpus`]); the
+//! service only offloads while the versions still match, so an offloaded
+//! scan is always equivalent to a CPU scan that acquired the index lock
+//! at mirror time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::pjrt::{Context, DeviceBuffer, Executable};
+use crate::vecstore::{kernels, Hit, TopK};
+
+/// Row tile per host-fallback kernel call (matches `vecstore::flat`).
+const SCAN_BLOCK_ROWS: usize = 64;
+
+/// A device executor for one resident corpus: panel in, scores out.
+pub trait ScanBackend {
+    /// Score `nq` row-major `dim`-vectors against the resident corpus;
+    /// returns the row-major `[nq, n]` score matrix.
+    fn scores(&mut self, queries: &[f32], nq: usize) -> Result<Vec<f32>>;
+    /// Human-readable description (for logs).
+    fn describe(&self) -> String;
+}
+
+/// Factory building the scan backend *on the worker thread* (PJRT
+/// handles are not `Send`, same pattern as embedding workers).
+pub type ScanBackendFactory = Box<dyn FnOnce() -> Result<Box<dyn ScanBackend>> + Send>;
+
+/// PJRT-backed [`ScanBackend`]: compiles a `scores = Q · Rᵀ` HLO artifact
+/// and keeps the corpus arena device-resident via [`Context::upload_f32`].
+/// Construction fails cleanly when PJRT is unavailable (no `pjrt-xla`
+/// feature, missing artifact), leaving callers on the host fallback.
+pub struct PjrtScanBackend {
+    ctx: Context,
+    exe: Executable,
+    corpus: DeviceBuffer,
+    n: usize,
+    dim: usize,
+}
+
+impl PjrtScanBackend {
+    /// Compile `hlo_path` on a fresh CPU PJRT context and upload the
+    /// `[n, dim]` corpus once; per call only the query panel crosses the
+    /// host/device boundary.
+    pub fn load(hlo_path: &std::path::Path, rows: &[f32], n: usize, dim: usize) -> Result<Self> {
+        anyhow::ensure!(rows.len() == n * dim, "corpus shape: {} != {n}x{dim}", rows.len());
+        let ctx = Context::cpu()?;
+        let exe = ctx.load_hlo_text(hlo_path)?;
+        let corpus = ctx.upload_f32(rows, &[n, dim])?;
+        Ok(PjrtScanBackend { ctx, exe, corpus, n, dim })
+    }
+}
+
+impl ScanBackend for PjrtScanBackend {
+    fn scores(&mut self, queries: &[f32], nq: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(queries.len() == nq * self.dim, "query panel shape mismatch");
+        let q = self.ctx.upload_f32(queries, &[nq, self.dim])?;
+        let flat = self.exe.run(&[&self.corpus, &q])?;
+        anyhow::ensure!(
+            flat.len() == nq * self.n,
+            "scan output {} != {nq}x{}",
+            flat.len(),
+            self.n
+        );
+        Ok(flat)
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt-scan[{}x{}]", self.n, self.dim)
+    }
+}
+
+struct ScanJob {
+    queries: Vec<f32>,
+    nq: usize,
+    reply: mpsc::Sender<Result<Vec<f32>, String>>,
+}
+
+/// Handle to a scan worker thread owning a [`ScanBackend`]. Cloneless by
+/// design: one handle per mirrored arena, shared behind the scanner.
+pub struct DeviceScanHandle {
+    tx: Mutex<mpsc::Sender<ScanJob>>,
+}
+
+impl DeviceScanHandle {
+    fn scores(&self, queries: Vec<f32>, nq: usize) -> Result<Vec<f32>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .map_err(|_| "scan worker handle poisoned".to_string())?
+            .send(ScanJob { queries, nq, reply })
+            .map_err(|_| "scan worker exited".to_string())?;
+        rx.recv().map_err(|_| "scan worker dropped reply".to_string())?
+    }
+}
+
+/// Spawn the device scan worker; the backend is built on the new thread.
+/// A failed factory fails each job with its error (callers fall back to
+/// the host scan), mirroring embedding-worker init failure containment.
+pub fn spawn_scan_worker(factory: ScanBackendFactory) -> (DeviceScanHandle, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<ScanJob>();
+    let join = std::thread::Builder::new()
+        .name("npu-scan".into())
+        .spawn(move || {
+            let mut backend = match factory() {
+                Ok(b) => b,
+                Err(e) => {
+                    log::warn!("npu-scan: backend init failed: {e:#}");
+                    while let Ok(job) = rx.recv() {
+                        let _ = job.reply.send(Err(format!("scan backend init failed: {e:#}")));
+                    }
+                    return;
+                }
+            };
+            log::info!("npu-scan: serving with {}", backend.describe());
+            while let Ok(job) = rx.recv() {
+                let out = backend
+                    .scores(&job.queries, job.nq)
+                    .map_err(|e| format!("device scan failed: {e:#}"));
+                let _ = job.reply.send(out);
+            }
+        })
+        .expect("spawn npu-scan thread");
+    (DeviceScanHandle { tx: Mutex::new(tx) }, join)
+}
+
+/// The NPU retrieval scanner: a mirrored corpus arena plus the device
+/// and host execution paths (see module docs).
+pub struct NpuScanner {
+    dim: usize,
+    ids: Vec<u64>,
+    rows: Vec<f32>, // row-major [n, dim]; also the host-fallback arena
+    corpus_version: u64,
+    device: Option<DeviceScanHandle>,
+    device_failures: AtomicU64,
+}
+
+impl NpuScanner {
+    /// Build from a corpus snapshot (e.g.
+    /// `RetrievalExecutor::export_corpus`). Host-fallback only; attach a
+    /// device path with [`NpuScanner::with_device`].
+    pub fn from_snapshot(
+        dim: usize,
+        ids: Vec<u64>,
+        rows: Vec<f32>,
+        corpus_version: u64,
+    ) -> Result<NpuScanner> {
+        anyhow::ensure!(dim > 0, "dim must be positive");
+        anyhow::ensure!(
+            rows.len() == ids.len() * dim,
+            "arena shape: {} floats != {} ids x {dim}",
+            rows.len(),
+            ids.len()
+        );
+        Ok(NpuScanner {
+            dim,
+            ids,
+            rows,
+            corpus_version,
+            device: None,
+            device_failures: AtomicU64::new(0),
+        })
+    }
+
+    /// Attach a device scan worker (the arena it holds resident must be
+    /// the same snapshot this scanner mirrors).
+    pub fn with_device(mut self, handle: DeviceScanHandle) -> NpuScanner {
+        self.device = Some(handle);
+        self
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// The executor corpus version this arena was exported at.
+    pub fn corpus_version(&self) -> u64 {
+        self.corpus_version
+    }
+
+    /// Bytes one offloaded scan streams from the mirrored arena (always
+    /// f32 — the mirror is exact by construction).
+    pub fn scan_bytes(&self) -> usize {
+        self.rows.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Admission slot cost on the NPU leg, in the same embed-query cost
+    /// units as the CPU leg.
+    pub fn scan_cost(&self, unit_bytes: usize) -> usize {
+        crate::coordinator::queue_manager::retrieval_slot_cost(self.scan_bytes(), unit_bytes)
+    }
+
+    /// Device-path errors absorbed by the host fallback so far.
+    pub fn device_failures(&self) -> u64 {
+        self.device_failures.load(Ordering::Relaxed)
+    }
+
+    /// Batched top-k over the mirrored arena. Results are bit-identical
+    /// to `FlatIndex::search` over the same rows on the host path; the
+    /// device path agrees up to the device matmul's FP accumulation
+    /// order (scores are re-ranked host-side with the same tie-breaks).
+    pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "dimension mismatch");
+        }
+        let nq = queries.len();
+        let n = self.ids.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        if n == 0 {
+            return vec![Vec::new(); nq];
+        }
+        let mut qbuf = Vec::with_capacity(nq * self.dim);
+        for q in queries {
+            qbuf.extend_from_slice(q);
+        }
+        if let Some(dev) = &self.device {
+            match dev.scores(qbuf.clone(), nq) {
+                Ok(scores) if scores.len() == nq * n => {
+                    return self.topk_from_dense_scores(&scores, nq, k);
+                }
+                Ok(scores) => {
+                    self.device_failures.fetch_add(1, Ordering::Relaxed);
+                    log::warn!(
+                        "npu-scan: device returned {} scores, want {} — host fallback",
+                        scores.len(),
+                        nq * n
+                    );
+                }
+                Err(e) => {
+                    self.device_failures.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("npu-scan: {e} — host fallback");
+                }
+            }
+        }
+        self.host_search(&qbuf, nq, k)
+    }
+
+    /// Host fallback: the FlatIndex scan shape — blocked panel kernel,
+    /// global row index as the tie-break sequence — over the mirror.
+    fn host_search(&self, qbuf: &[f32], nq: usize, k: usize) -> Vec<Vec<Hit>> {
+        let n = self.ids.len();
+        let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+        let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + SCAN_BLOCK_ROWS).min(n);
+            let nr = r1 - r0;
+            let rows = &self.rows[r0 * self.dim..r1 * self.dim];
+            kernels::panel_scores_into(qbuf, nq, rows, nr, self.dim, &mut scores[..nq * nr]);
+            for (qi, tk) in tks.iter_mut().enumerate() {
+                for r in 0..nr {
+                    tk.push_with_seq(self.ids[r0 + r], scores[qi * nr + r], (r0 + r) as u64);
+                }
+            }
+            r0 = r1;
+        }
+        tks.into_iter().map(TopK::into_vec).collect()
+    }
+
+    /// Top-k from a device-returned `[nq, n]` score matrix, with the same
+    /// global-row-sequence tie-breaking as the host scan.
+    fn topk_from_dense_scores(&self, scores: &[f32], nq: usize, k: usize) -> Vec<Vec<Hit>> {
+        let n = self.ids.len();
+        (0..nq)
+            .map(|qi| {
+                let mut tk = TopK::new(k);
+                for r in 0..n {
+                    tk.push_with_seq(self.ids[r], scores[qi * n + r], r as u64);
+                }
+                tk.into_vec()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+    use crate::vecstore::{FlatIndex, Index};
+
+    fn unit(rng: &mut Pcg, d: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= norm);
+        v
+    }
+
+    fn corpus(dim: usize, n: usize, seed: u64) -> (FlatIndex, Vec<u64>, Vec<f32>) {
+        let mut rng = Pcg::new(seed);
+        let mut flat = FlatIndex::new(dim);
+        let mut ids = Vec::new();
+        let mut rows = Vec::new();
+        for i in 0..n {
+            let v = unit(&mut rng, dim);
+            flat.add(i as u64, &v);
+            ids.push(i as u64);
+            rows.extend_from_slice(&v);
+        }
+        (flat, ids, rows)
+    }
+
+    /// The acceptance bar: host-fallback offload results are bit-identical
+    /// to the CPU flat scan over the same rows — ids, order, and score
+    /// bits — including across the 64-row block boundary.
+    #[test]
+    fn host_fallback_is_bit_identical_to_flat_search() {
+        let dim = 48; // not a multiple of the SIMD lane width
+        let (flat, ids, rows) = corpus(dim, 200, 7);
+        let sc = NpuScanner::from_snapshot(dim, ids, rows, 0).unwrap();
+        let mut rng = Pcg::new(8);
+        let queries: Vec<Vec<f32>> = (0..5).map(|_| unit(&mut rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let got = sc.search_batch(&qrefs, 7);
+        for (q, hits) in qrefs.iter().zip(&got) {
+            let want = flat.search(q, 7);
+            assert_eq!(hits, &want);
+            for (a, b) in hits.iter().zip(&want) {
+                assert_eq!(a.score.to_bits(), b.score.to_bits());
+            }
+        }
+        assert_eq!(sc.device_failures(), 0);
+    }
+
+    #[test]
+    fn snapshot_shape_is_validated() {
+        assert!(NpuScanner::from_snapshot(4, vec![1, 2], vec![0.0; 7], 0).is_err());
+        assert!(NpuScanner::from_snapshot(0, vec![], vec![], 0).is_err());
+        let sc = NpuScanner::from_snapshot(4, vec![1, 2], vec![0.0; 8], 3).unwrap();
+        assert_eq!(sc.len(), 2);
+        assert_eq!(sc.corpus_version(), 3);
+        assert_eq!(sc.scan_bytes(), 8 * 4);
+        assert_eq!(sc.scan_cost(16), 2);
+        assert_eq!(sc.scan_cost(usize::MAX), 1);
+    }
+
+    #[test]
+    fn empty_inputs_are_handled() {
+        let sc = NpuScanner::from_snapshot(4, vec![], vec![], 0).unwrap();
+        let q = [0.0f32; 4];
+        assert_eq!(sc.search_batch(&[&q], 3), vec![Vec::new()]);
+        let (_, ids, rows) = corpus(4, 3, 1);
+        let sc = NpuScanner::from_snapshot(4, ids, rows, 0).unwrap();
+        assert!(sc.search_batch(&[], 3).is_empty());
+    }
+
+    /// A well-behaved device backend (host math shipped through the
+    /// worker-thread plumbing) must produce the same hits as the host
+    /// fallback.
+    struct DenseBackend {
+        rows: Vec<f32>,
+        n: usize,
+        dim: usize,
+    }
+    impl ScanBackend for DenseBackend {
+        fn scores(&mut self, queries: &[f32], nq: usize) -> Result<Vec<f32>> {
+            // [nq, n] dense scores via the same dispatched kernels.
+            let mut out = vec![0.0f32; nq * self.n];
+            kernels::panel_scores_into(queries, nq, &self.rows, self.n, self.dim, &mut out);
+            Ok(out)
+        }
+        fn describe(&self) -> String {
+            "dense-test".into()
+        }
+    }
+
+    #[test]
+    fn device_path_matches_host_fallback() {
+        let dim = 16;
+        let (flat, ids, rows) = corpus(dim, 120, 11);
+        let (handle, _join) = spawn_scan_worker({
+            let rows = rows.clone();
+            Box::new(move || {
+                Ok(Box::new(DenseBackend { n: rows.len() / dim, rows, dim })
+                    as Box<dyn ScanBackend>)
+            })
+        });
+        let sc = NpuScanner::from_snapshot(dim, ids, rows, 0)
+            .unwrap()
+            .with_device(handle);
+        let mut rng = Pcg::new(12);
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| unit(&mut rng, dim)).collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        let got = sc.search_batch(&qrefs, 6);
+        assert_eq!(sc.device_failures(), 0);
+        for (q, hits) in qrefs.iter().zip(&got) {
+            assert_eq!(hits, &flat.search(q, 6));
+        }
+    }
+
+    /// Device failures (init or per-scan) degrade to the host fallback —
+    /// counted, never a lost scan.
+    #[test]
+    fn device_failure_falls_back_to_host() {
+        struct FailingBackend;
+        impl ScanBackend for FailingBackend {
+            fn scores(&mut self, _q: &[f32], _nq: usize) -> Result<Vec<f32>> {
+                anyhow::bail!("injected device fault")
+            }
+            fn describe(&self) -> String {
+                "failing-test".into()
+            }
+        }
+        let dim = 8;
+        let (flat, ids, rows) = corpus(dim, 40, 21);
+        // Per-scan failure.
+        let (handle, _j1) =
+            spawn_scan_worker(Box::new(|| Ok(Box::new(FailingBackend) as Box<dyn ScanBackend>)));
+        let sc = NpuScanner::from_snapshot(dim, ids.clone(), rows.clone(), 0)
+            .unwrap()
+            .with_device(handle);
+        let mut rng = Pcg::new(22);
+        let q = unit(&mut rng, dim);
+        let hits = sc.search_batch(&[&q[..]], 5);
+        assert_eq!(hits[0], flat.search(&q, 5));
+        assert_eq!(sc.device_failures(), 1);
+        // Init failure (e.g. PJRT unavailable): same containment.
+        let (handle, _j2) = spawn_scan_worker(Box::new(|| anyhow::bail!("no artifacts")));
+        let sc = NpuScanner::from_snapshot(dim, ids, rows, 0).unwrap().with_device(handle);
+        let hits = sc.search_batch(&[&q[..]], 5);
+        assert_eq!(hits[0], flat.search(&q, 5));
+        assert_eq!(sc.device_failures(), 1);
+    }
+
+    /// Without the `pjrt-xla` feature the PJRT scan backend must fail
+    /// construction with a descriptive error, not panic — this is the
+    /// path that leaves default builds on the host fallback.
+    #[cfg(not(feature = "pjrt-xla"))]
+    #[test]
+    fn pjrt_scan_backend_unavailable_without_feature() {
+        let rows = vec![0.0f32; 8];
+        let err = PjrtScanBackend::load(std::path::Path::new("scan.hlo"), &rows, 2, 4)
+            .err()
+            .expect("stub build cannot compile HLO");
+        assert!(err.to_string().contains("pjrt-xla"), "{err}");
+        // Shape validation still fires first on malformed input.
+        let err = PjrtScanBackend::load(std::path::Path::new("scan.hlo"), &rows, 3, 4)
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("corpus shape"), "{err}");
+    }
+}

@@ -111,6 +111,10 @@ fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
         ("GET", "/stats") => {
             let qm = svc.queue_manager();
             let stats = qm.stats();
+            // Read-side lock recoveries on the attached retrieval index
+            // (0 when no index is attached) — the poisoning satellite's
+            // operator signal.
+            let poisoned = svc.retrieval().map_or(0, |e| e.poisoned_recoveries());
             Response::ok_json(Json::obj(vec![
                 ("npu_depth", Json::num(qm.npu_depth() as f64)),
                 ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
@@ -119,12 +123,18 @@ fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
                 ("embed_cpu_occupancy", Json::num(qm.embed_cpu_occupancy() as f64)),
                 ("retrieve_cpu_occupancy", Json::num(qm.retrieve_cpu_occupancy() as f64)),
                 ("retrieve_cap", Json::num(qm.retrieve_cap() as f64)),
+                ("embed_npu_occupancy", Json::num(qm.embed_npu_occupancy() as f64)),
+                ("retrieve_npu_occupancy", Json::num(qm.retrieve_npu_occupancy() as f64)),
+                ("npu_retrieve_cap", Json::num(qm.npu_retrieve_cap() as f64)),
                 ("hetero", Json::Bool(qm.hetero())),
                 ("routed_npu", Json::num(stats.routed_npu as f64)),
                 ("routed_cpu", Json::num(stats.routed_cpu as f64)),
                 ("rejected", Json::num(stats.rejected as f64)),
                 ("routed_retrieve", Json::num(stats.routed_retrieve as f64)),
                 ("rejected_retrieve", Json::num(stats.rejected_retrieve as f64)),
+                ("routed_retrieve_npu", Json::num(stats.routed_retrieve_npu as f64)),
+                ("rejected_retrieve_npu", Json::num(stats.rejected_retrieve_npu as f64)),
+                ("retrieval_poisoned_recoveries", Json::num(poisoned as f64)),
                 ("bad_releases", Json::num(stats.bad_releases as f64)),
             ]))
         }

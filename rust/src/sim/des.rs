@@ -75,6 +75,27 @@ pub struct RetrievalLoad {
     /// and the run records the oversubscription accounting would have
     /// prevented.
     pub admission: bool,
+    /// Offloaded scans' cap within the NPU pool (cost units, ≤
+    /// npu_depth; 0 disables the NPU retrieval leg). Only meaningful
+    /// under admission — the leg is admission-aware by construction.
+    pub npu_cap: usize,
+    /// Offload policy mirror of `ServiceConfig::npu_offload_low_water`:
+    /// a scan routes to the NPU leg only while embed-side NPU occupancy
+    /// is ≤ this fraction of `npu_depth`.
+    pub npu_low_water: f64,
+}
+
+impl Default for RetrievalLoad {
+    fn default() -> Self {
+        RetrievalLoad {
+            cost: 1,
+            service_time: 0.0,
+            cap: 0,
+            admission: true,
+            npu_cap: 0,
+            npu_low_water: 0.5,
+        }
+    }
 }
 
 /// Results of [`OpenLoopSim::run_mixed`].
@@ -83,15 +104,27 @@ pub struct MixedStats {
     pub embed: SimStats,
     pub retrieve_arrived: u64,
     pub retrieve_served: u64,
+    /// Scans absorbed by the NPU offload leg (⊆ `retrieve_served`).
+    pub retrieve_served_npu: u64,
     /// Scans declined by admission (always 0 in baseline mode).
     pub retrieve_rejected: u64,
     /// Peak of embed CPU slots + retrieval slot-cost over the run — the
     /// acceptance metric: ≤ `cpu_depth` under admission.
     pub peak_cpu_cost: usize,
-    /// Event instants at which that sum exceeded the calibrated depth.
+    /// Peak of embed NPU slots + offloaded scan cost — ≤ `npu_depth`
+    /// under admission (the leg only exists under admission).
+    pub peak_npu_cost: usize,
+    /// Peak *total* admitted concurrency (both pools, both classes) —
+    /// the concurrency-gain metric: NPU offload raises it at equal
+    /// oversubscription.
+    pub peak_admitted_cost: usize,
+    /// Event instants at which either pool's combined occupancy exceeded
+    /// its calibrated depth.
     pub oversub_events: u64,
     /// The calibrated CPU pool the run was bounded by (0 if no CPU).
     pub cpu_depth: usize,
+    /// The calibrated NPU pool the run was bounded by.
+    pub npu_depth: usize,
 }
 
 impl MixedStats {
@@ -122,7 +155,7 @@ impl OpenLoopSim {
     /// stream (one event engine, no drift between the pure and mixed
     /// sims); the load parameters are irrelevant without scan arrivals.
     pub fn run(&self, arrivals: &[f64]) -> SimStats {
-        let no_scans = RetrievalLoad { cost: 0, service_time: 0.0, cap: 0, admission: true };
+        let no_scans = RetrievalLoad { cost: 0, ..RetrievalLoad::default() };
         self.run_mixed(&no_scans, arrivals, &[]).embed
     }
 
@@ -150,13 +183,19 @@ impl OpenLoopSim {
     ) -> MixedStats {
         let hetero = self.cpu.is_some();
         let cpu_pool = if hetero { self.cpu_depth } else { 0 };
-        let qm =
-            QueueManager::with_retrieval_cap(self.npu_depth, cpu_pool, hetero, load.cap);
+        let qm = QueueManager::with_class_caps(
+            self.npu_depth,
+            cpu_pool,
+            hetero,
+            load.cap,
+            load.npu_cap.min(self.npu_depth),
+        );
         let mut rng = Pcg::new(self.seed);
 
         // Event heap keyed by (time, seq, tag) — seq breaks ties
         // deterministically. Tags: 0 embed arrival, 1 NPU done, 2 CPU
-        // done, 3 retrieve arrival, 4 retrieve (scan) done.
+        // done, 3 retrieve arrival, 4 CPU scan done, 5 NPU (offloaded)
+        // scan done.
         let mut heap: BinaryHeap<Reverse<(u64, u64, u8)>> = BinaryHeap::new();
         let to_key = |t: f64| (t * 1e9) as u64;
         let mut seq = 0u64;
@@ -184,6 +223,8 @@ impl OpenLoopSim {
         // occupancy under admission, and the shadow the accounting
         // *would* have tracked in baseline mode.
         let mut retr_inflight: usize = 0;
+        // Offloaded scan cost in flight on the NPU leg (admission only).
+        let mut retr_npu_inflight: usize = 0;
 
         // Mirror the service's admission clamp (coordinator/service.rs):
         // a scan whose cost exceeds the whole retrieval budget holds the
@@ -195,6 +236,8 @@ impl OpenLoopSim {
         } else {
             load.cost.max(1)
         };
+        // Same clamp on the NPU leg's budget.
+        let npu_scan_cost = load.cost.clamp(1, qm.npu_retrieve_cap().max(1));
 
         let mut stats = MixedStats {
             embed: SimStats {
@@ -208,10 +251,14 @@ impl OpenLoopSim {
             },
             retrieve_arrived: 0,
             retrieve_served: 0,
+            retrieve_served_npu: 0,
             retrieve_rejected: 0,
             peak_cpu_cost: 0,
+            peak_npu_cost: 0,
+            peak_admitted_cost: 0,
             oversub_events: 0,
             cpu_depth: cpu_pool,
+            npu_depth: self.npu_depth,
         };
 
         while let Some(Reverse((tkey, _, tag))) = heap.pop() {
@@ -279,16 +326,30 @@ impl OpenLoopSim {
                 }
                 3 => {
                     stats.retrieve_arrived += 1;
-                    let admitted = if load.admission {
-                        qm.dispatch_class(WorkClass::Retrieve, scan_cost) != Route::Busy
+                    // NPU offload policy (mirrors coordinator/service.rs):
+                    // under admission, with the leg enabled and embed-side
+                    // NPU occupancy at or below the low-water mark, the
+                    // scan is admitted to the device leg first; a full leg
+                    // falls back to the CPU leg.
+                    let low_water = load.npu_low_water * self.npu_depth as f64;
+                    let offload = load.admission
+                        && load.npu_cap > 0
+                        && qm.embed_npu_occupancy() as f64 <= low_water;
+                    if offload && qm.dispatch_retrieve_npu(npu_scan_cost) == Route::Npu {
+                        retr_npu_inflight += npu_scan_cost;
+                        push(&mut heap, now + load.service_time, 5, &mut seq);
                     } else {
-                        true // baseline: scans run unaccounted
-                    };
-                    if admitted {
-                        retr_inflight += scan_cost;
-                        push(&mut heap, now + load.service_time, 4, &mut seq);
-                    } else {
-                        stats.retrieve_rejected += 1;
+                        let admitted = if load.admission {
+                            qm.dispatch_class(WorkClass::Retrieve, scan_cost) != Route::Busy
+                        } else {
+                            true // baseline: scans run unaccounted
+                        };
+                        if admitted {
+                            retr_inflight += scan_cost;
+                            push(&mut heap, now + load.service_time, 4, &mut seq);
+                        } else {
+                            stats.retrieve_rejected += 1;
+                        }
                     }
                 }
                 4 => {
@@ -298,13 +359,23 @@ impl OpenLoopSim {
                         qm.release_class(WorkClass::Retrieve, Route::Cpu, scan_cost);
                     }
                 }
+                5 => {
+                    stats.retrieve_served += 1;
+                    stats.retrieve_served_npu += 1;
+                    retr_npu_inflight = retr_npu_inflight.saturating_sub(npu_scan_cost);
+                    qm.release_class(WorkClass::Retrieve, Route::Npu, npu_scan_cost);
+                }
                 _ => unreachable!(),
             }
-            // Oversubscription probe at every event instant: embed CPU
-            // slots + retrieval slot-cost against the calibrated depth.
-            let combined = qm.embed_cpu_occupancy() + retr_inflight;
-            stats.peak_cpu_cost = stats.peak_cpu_cost.max(combined);
-            if combined > cpu_pool {
+            // Oversubscription probe at every event instant: per pool,
+            // embed slots + scan slot-cost against the calibrated depth.
+            let combined_cpu = qm.embed_cpu_occupancy() + retr_inflight;
+            let combined_npu = qm.embed_npu_occupancy() + retr_npu_inflight;
+            stats.peak_cpu_cost = stats.peak_cpu_cost.max(combined_cpu);
+            stats.peak_npu_cost = stats.peak_npu_cost.max(combined_npu);
+            stats.peak_admitted_cost =
+                stats.peak_admitted_cost.max(combined_cpu + combined_npu);
+            if combined_cpu > cpu_pool || combined_npu > self.npu_depth {
                 stats.oversub_events += 1;
             }
         }
@@ -408,7 +479,13 @@ mod tests {
     }
 
     fn scan_load(admission: bool) -> RetrievalLoad {
-        RetrievalLoad { cost: 4, service_time: 0.5, cap: 8, admission }
+        RetrievalLoad {
+            cost: 4,
+            service_time: 0.5,
+            cap: 8,
+            admission,
+            ..RetrievalLoad::default()
+        }
     }
 
     #[test]
@@ -479,12 +556,129 @@ mod tests {
         // cost 20 against cap 8: the service clamps to the full budget
         // and serializes; the DES must predict the same, not 100% reject.
         let s = sim(true);
-        let load = RetrievalLoad { cost: 20, service_time: 0.1, cap: 8, admission: true };
+        let load = RetrievalLoad {
+            cost: 20,
+            service_time: 0.1,
+            cap: 8,
+            ..RetrievalLoad::default()
+        };
         let scans: Vec<f64> = (0..5).map(|i| i as f64).collect();
         let st = s.run_mixed(&load, &[], &scans);
         assert_eq!(st.retrieve_served, 5);
         assert_eq!(st.retrieve_rejected, 0);
         assert!(st.peak_cpu_cost <= 8, "peak {}", st.peak_cpu_cost);
+    }
+
+    fn offload_load(npu_cap: usize) -> RetrievalLoad {
+        RetrievalLoad {
+            cost: 4,
+            service_time: 0.5,
+            cap: 8,
+            admission: true,
+            npu_cap,
+            npu_low_water: 0.5,
+        }
+    }
+
+    /// The PR's acceptance criterion: with the NPU leg enabled, sustained
+    /// admitted concurrency strictly exceeds the CPU-only admission
+    /// baseline at equal oversubscription (0 oversub events either way).
+    #[test]
+    fn npu_offload_strictly_raises_admitted_concurrency_at_zero_oversub() {
+        let s = sim(true);
+        // Light embeds leave the NPU in a load valley; the sustained scan
+        // burst (≈40 cost units of steady-state demand) oversubscribes
+        // the CPU retrieval budget (cap 8) on its own.
+        let embeds: Vec<f64> = (0..20).map(|i| i as f64 * 0.5).collect();
+        let scans: Vec<f64> = (0..40).map(|i| i as f64 * 0.05).collect();
+        let cpu_only = s.run_mixed(&offload_load(0), &embeds, &scans);
+        let offload = s.run_mixed(&offload_load(16), &embeds, &scans);
+        // Equal oversubscription: none — admission bounds both pools.
+        assert_eq!(cpu_only.oversub_events, 0);
+        assert_eq!(offload.oversub_events, 0);
+        assert!(offload.peak_npu_cost <= offload.npu_depth);
+        assert!(offload.peak_cpu_cost <= offload.cpu_depth);
+        // The device leg strictly raises peak admitted concurrency and
+        // absorbs scans the CPU-only budget declined.
+        assert!(
+            offload.peak_admitted_cost > cpu_only.peak_admitted_cost,
+            "offload peak {} vs cpu-only {}",
+            offload.peak_admitted_cost,
+            cpu_only.peak_admitted_cost
+        );
+        assert!(
+            offload.retrieve_served > cpu_only.retrieve_served,
+            "offload served {} vs cpu-only {}",
+            offload.retrieve_served,
+            cpu_only.retrieve_served
+        );
+        assert!(offload.retrieve_served_npu > 0);
+        assert!(offload.retrieve_rejected < cpu_only.retrieve_rejected);
+        assert_eq!(cpu_only.retrieve_served_npu, 0);
+    }
+
+    /// The low-water policy in the sim mirrors the service: an NPU
+    /// saturated by embedding traffic gets no scans.
+    #[test]
+    fn npu_offload_defers_to_embedding_traffic() {
+        let mut s = sim(true);
+        s.npu_depth = 8;
+        let embeds = vec![0.0; 8]; // fills the NPU pool instantly
+        let load = RetrievalLoad {
+            cost: 2,
+            service_time: 0.2,
+            cap: 8,
+            npu_cap: 8,
+            npu_low_water: 0.0, // offload only on an idle NPU
+            ..RetrievalLoad::default()
+        };
+        let scans = vec![0.1, 0.15]; // while the embed burst is in flight
+        let st = s.run_mixed(&load, &embeds, &scans);
+        assert_eq!(st.retrieve_served_npu, 0);
+        assert_eq!(st.retrieve_served, 2); // the CPU leg absorbed them
+        assert_eq!(st.retrieve_rejected, 0);
+    }
+
+    /// NPU-leg cost clamps like the service's: an over-budget scan
+    /// serializes at the full leg budget instead of being permanently
+    /// unschedulable.
+    #[test]
+    fn npu_oversized_scan_cost_clamps_like_the_service() {
+        let s = sim(true);
+        let load = RetrievalLoad {
+            cost: 20,
+            service_time: 0.1,
+            cap: 0, // no CPU budget at all: the NPU leg is the only path
+            npu_cap: 8,
+            npu_low_water: 1.0,
+            ..RetrievalLoad::default()
+        };
+        let scans: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let st = s.run_mixed(&load, &[], &scans);
+        assert_eq!(st.retrieve_served, 5);
+        assert_eq!(st.retrieve_served_npu, 5);
+        assert_eq!(st.retrieve_rejected, 0);
+        assert!(st.peak_npu_cost <= 8, "peak {}", st.peak_npu_cost);
+        assert_eq!(st.oversub_events, 0);
+    }
+
+    /// Offloaded runs stay bit-for-bit reproducible per seed.
+    #[test]
+    fn npu_offload_determinism_bit_for_bit() {
+        let s = sim(true);
+        let embeds: Vec<f64> = (0..60).map(|i| i as f64 * 0.12).collect();
+        let scans: Vec<f64> = (0..25).map(|i| 0.03 + i as f64 * 0.09).collect();
+        let load = offload_load(12);
+        let a = s.run_mixed(&load, &embeds, &scans);
+        let b = s.run_mixed(&load, &embeds, &scans);
+        assert_eq!(a.retrieve_served, b.retrieve_served);
+        assert_eq!(a.retrieve_served_npu, b.retrieve_served_npu);
+        assert_eq!(a.retrieve_rejected, b.retrieve_rejected);
+        assert_eq!(a.peak_cpu_cost, b.peak_cpu_cost);
+        assert_eq!(a.peak_npu_cost, b.peak_npu_cost);
+        assert_eq!(a.peak_admitted_cost, b.peak_admitted_cost);
+        assert_eq!(a.oversub_events, b.oversub_events);
+        assert_eq!(a.embed.reject_rate().to_bits(), b.embed.reject_rate().to_bits());
     }
 
     #[test]
@@ -494,7 +688,12 @@ mod tests {
         // and rejects rise vs. the baseline where the scan is invisible.
         let mut s = sim(true);
         s.npu_depth = 2;
-        let load = RetrievalLoad { cost: 8, service_time: 10.0, cap: 8, admission: true };
+        let load = RetrievalLoad {
+            cost: 8,
+            service_time: 10.0,
+            cap: 8,
+            ..RetrievalLoad::default()
+        };
         let embeds = vec![0.5; 20]; // burst while the scan holds the pool
         let on = s.run_mixed(&load, &embeds, &[0.0]);
         let base = RetrievalLoad { admission: false, ..load.clone() };

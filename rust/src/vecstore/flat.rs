@@ -152,6 +152,13 @@ impl Index for FlatIndex {
     fn dim(&self) -> usize {
         self.dim
     }
+
+    fn export_f32_rows(&self) -> Option<(Vec<u64>, Vec<f32>)> {
+        // Exact f32 rows in insertion order: a device mirror scanning
+        // this snapshot with the same kernels reproduces `search` bit-
+        // for-bit (same per-pair scores, same tie-break sequence).
+        Some((self.ids.clone(), self.data.clone()))
+    }
 }
 
 #[cfg(test)]

@@ -70,6 +70,18 @@ pub trait Index {
     fn scan_rows_estimate(&self) -> usize {
         self.len()
     }
+    /// Dense `(ids, row-major f32 rows)` snapshot of the arena for a
+    /// device-side mirror (the NPU retrieval offload leg). `Some` only
+    /// when an exhaustive scan of the exported rows with the f32 panel
+    /// kernels is **bit-identical** to this index's own scan: exact f32
+    /// storage, insertion order preserved, no probe pruning. Quantized
+    /// arenas (int8 applies its row scale post-sum, so a dequantized
+    /// export would accumulate in a different FP order) and IVF (probes a
+    /// subset) return `None` — the service then keeps those scans on the
+    /// CPU leg.
+    fn export_f32_rows(&self) -> Option<(Vec<u64>, Vec<f32>)> {
+        None
+    }
 }
 
 /// Inner product on the dispatched kernel (see [`kernels`]).

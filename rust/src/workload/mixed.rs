@@ -97,6 +97,27 @@ impl MixedArrivals {
         out
     }
 
+    /// Overlay a Poisson scan burst on `[t0, t0 + width)` at `rate`
+    /// scans/s — the NPU-offload scenario generator: a retrieval burst
+    /// arriving in an embedding valley, exactly where the device leg
+    /// should absorb it (ROADMAP "batched NPU retrieval offload"). The
+    /// retrieve stream stays time-sorted; seed-deterministic like every
+    /// generator here.
+    pub fn with_scan_burst(mut self, t0: f64, width: f64, rate: f64, seed: u64) -> MixedArrivals {
+        assert!(rate > 0.0 && width > 0.0, "burst needs positive rate and width");
+        let mut rng = Pcg::new(seed);
+        let mut t = t0;
+        loop {
+            t += rng.exp(rate);
+            if t >= t0 + width {
+                break;
+            }
+            self.retrieve.push(t);
+        }
+        self.retrieve.sort_by(f64::total_cmp);
+        self
+    }
+
     /// Total arrivals across both classes.
     pub fn len(&self) -> usize {
         self.embed.len() + self.retrieve.len()
@@ -168,6 +189,27 @@ mod tests {
     #[test]
     fn empty_default_observed_fraction_is_zero() {
         assert_eq!(MixedArrivals::default().observed_fraction(), 0.0);
+    }
+
+    #[test]
+    fn scan_burst_overlays_the_retrieve_stream_deterministically() {
+        let base = MixedArrivals::poisson(30.0, 0.1, 20.0, 4);
+        let before = base.retrieve.len();
+        let m = base.with_scan_burst(5.0, 2.0, 25.0, 9);
+        assert!(m.retrieve.len() > before);
+        assert!(m.retrieve.windows(2).all(|w| w[0] <= w[1]));
+        // Burst density roughly matches inside the window (25/s × 2 s).
+        let in_window = m.retrieve.iter().filter(|t| (5.0..7.0).contains(*t)).count();
+        assert!((30..=80).contains(&in_window), "burst count {in_window}");
+        // No arrivals leak outside the window beyond the base stream's.
+        let m2 = MixedArrivals::poisson(30.0, 0.1, 20.0, 4).with_scan_burst(5.0, 2.0, 25.0, 9);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    #[should_panic(expected = "burst needs positive")]
+    fn scan_burst_rejects_degenerate_window() {
+        let _ = MixedArrivals::default().with_scan_burst(0.0, 0.0, 10.0, 1);
     }
 
     #[test]

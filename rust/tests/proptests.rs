@@ -657,20 +657,23 @@ fn prop_quantized_topk_overlap_vs_f32() {
     }
 }
 
-/// Weighted multi-class admission invariants (the tentpole's acceptance
-/// bar): under arbitrary interleavings of `dispatch_class` /
-/// `release_class`, occupancy never exceeds any depth (NPU, CPU pool, or
-/// the retrieval cap), the per-class CPU occupancies always sum to the
-/// pool occupancy, every admit has a matching release that drains the
-/// manager to zero, and `bad_releases` stays 0 for well-formed sequences.
+/// Weighted multi-class admission invariants (extended to the NPU
+/// retrieval leg): under arbitrary interleavings of `dispatch_class` /
+/// `dispatch_retrieve_npu` / `release_class`, occupancy never exceeds
+/// any depth (either pool, either per-class retrieval cap), the
+/// per-class occupancies always sum to their pool occupancy on BOTH
+/// device legs, every admit has a matching release that drains the
+/// manager to zero, and `bad_releases` stays 0 for well-formed
+/// sequences.
 #[test]
 fn prop_class_admission_invariants() {
     property("class admission invariants", 150, |g: &mut Gen| {
         let npu_depth = g.usize(0, 24);
         let cpu_pool = g.usize(0, 33);
         let cap = g.usize(0, cpu_pool + 1);
+        let npu_cap = g.usize(0, npu_depth + 1);
         let hetero = g.bool();
-        let qm = QueueManager::with_retrieval_cap(npu_depth, cpu_pool, hetero, cap);
+        let qm = QueueManager::with_class_caps(npu_depth, cpu_pool, hetero, cap, npu_cap);
         let mut live: Vec<(WorkClass, Route, usize)> = Vec::new();
         let mut admits = 0u64;
         for _ in 0..g.usize(1, 250) {
@@ -680,7 +683,14 @@ fn prop_class_admission_invariants() {
                     WorkClass::Embed => g.usize(1, 4),
                     WorkClass::Retrieve => g.usize(1, 8),
                 };
-                match qm.dispatch_class(class, cost) {
+                // Retrieval picks a device leg at random; embeds follow
+                // Algorithm 1 as always.
+                let route = if class == WorkClass::Retrieve && g.bool() {
+                    qm.dispatch_retrieve_npu(cost)
+                } else {
+                    qm.dispatch_class(class, cost)
+                };
+                match route {
                     Route::Busy => {}
                     r => {
                         admits += 1;
@@ -704,11 +714,24 @@ fn prop_class_admission_invariants() {
                     qm.retrieve_cpu_occupancy()
                 ));
             }
+            if qm.retrieve_npu_occupancy() > npu_cap {
+                return Err(format!(
+                    "npu retrieval occupancy {} > cap {npu_cap}",
+                    qm.retrieve_npu_occupancy()
+                ));
+            }
             let class_sum = qm.embed_cpu_occupancy() + qm.retrieve_cpu_occupancy();
             if class_sum != qm.cpu_occupancy() {
                 return Err(format!(
                     "per-class sum {class_sum} != pool occupancy {}",
                     qm.cpu_occupancy()
+                ));
+            }
+            let npu_sum = qm.embed_npu_occupancy() + qm.retrieve_npu_occupancy();
+            if npu_sum != qm.npu_occupancy() {
+                return Err(format!(
+                    "npu per-class sum {npu_sum} != pool occupancy {}",
+                    qm.npu_occupancy()
                 ));
             }
         }
@@ -719,6 +742,8 @@ fn prop_class_admission_invariants() {
             || qm.cpu_occupancy() != 0
             || qm.embed_cpu_occupancy() != 0
             || qm.retrieve_cpu_occupancy() != 0
+            || qm.embed_npu_occupancy() != 0
+            || qm.retrieve_npu_occupancy() != 0
         {
             return Err("occupancy nonzero after releasing every admit".into());
         }
@@ -726,7 +751,8 @@ fn prop_class_admission_invariants() {
         if st.bad_releases != 0 {
             return Err(format!("{} bad_releases on a well-formed sequence", st.bad_releases));
         }
-        if st.routed_npu + st.routed_cpu + st.routed_retrieve != admits {
+        if st.routed_npu + st.routed_cpu + st.routed_retrieve + st.routed_retrieve_npu != admits
+        {
             return Err("admit counters disagree with observed admissions".into());
         }
         Ok(())
@@ -780,6 +806,57 @@ fn prop_retrieval_double_release_contained() {
             }
         }
         let want = cap.min(cpu_pool - qm.embed_cpu_occupancy());
+        if got != want {
+            return Err(format!("post-abuse capacity {got} != expected {want}"));
+        }
+        Ok(())
+    });
+}
+
+/// Double-released NPU-leg scan slots are contained exactly like the
+/// CPU leg's: counted, saturating, and incapable of freeing capacity
+/// embed queries hold on the shared NPU pool — cross-class containment
+/// across device legs.
+#[test]
+fn prop_npu_leg_double_release_contained() {
+    property("npu leg double release containment", 100, |g: &mut Gen| {
+        let npu_depth = g.usize(1, 17);
+        let npu_cap = g.usize(1, npu_depth + 1);
+        let qm = QueueManager::with_class_caps(npu_depth, 0, false, 0, npu_cap);
+        // Embeds legitimately holding NPU pool slots.
+        for _ in 0..g.usize(0, 24) {
+            let _ = qm.dispatch();
+        }
+        // One well-formed offloaded scan: admitted (maybe), released once.
+        let cost = g.usize(1, 5);
+        if qm.dispatch_retrieve_npu(cost) == Route::Npu {
+            qm.release_class(WorkClass::Retrieve, Route::Npu, cost);
+        }
+        if qm.retrieve_npu_occupancy() != 0 {
+            return Err("matched release left npu retrieval occupancy".into());
+        }
+        let held = qm.npu_occupancy();
+        // Rogue double releases: counted; none frees embed-held slots.
+        let extra = g.usize(1, 8);
+        for _ in 0..extra {
+            qm.release_class(WorkClass::Retrieve, Route::Npu, cost);
+        }
+        if qm.npu_occupancy() != held {
+            return Err("rogue npu-leg release freed embed pool units".into());
+        }
+        if qm.stats().bad_releases != extra as u64 {
+            return Err(format!("bad_releases {} != {extra}", qm.stats().bad_releases));
+        }
+        // Admission capacity intact: the leg fills exactly its cap or
+        // the pool remainder, whichever binds.
+        let mut got = 0;
+        while qm.dispatch_retrieve_npu(1) == Route::Npu {
+            got += 1;
+            if got > npu_depth {
+                return Err("npu leg admitted past the pool".into());
+            }
+        }
+        let want = npu_cap.min(npu_depth - qm.embed_npu_occupancy());
         if got != want {
             return Err(format!("post-abuse capacity {got} != expected {want}"));
         }

@@ -146,8 +146,43 @@ fn stats_reflect_traffic() {
     assert_eq!(v.get("npu_depth").unwrap().as_u64(), Some(8));
     assert!(v.get("routed_npu").unwrap().as_u64().unwrap() >= 2);
     assert_eq!(v.get("hetero").unwrap().as_bool(), Some(true));
+    // NPU retrieval leg fields are surfaced (leg disabled by default).
+    assert_eq!(v.get("npu_retrieve_cap").unwrap().as_u64(), Some(0));
+    assert_eq!(v.get("retrieve_npu_occupancy").unwrap().as_u64(), Some(0));
+    assert_eq!(v.get("embed_npu_occupancy").unwrap().as_u64(), Some(0));
+    assert_eq!(v.get("routed_retrieve_npu").unwrap().as_u64(), Some(0));
+    // No retrieval index attached: poison recoveries report 0.
+    assert_eq!(v.get("retrieval_poisoned_recoveries").unwrap().as_u64(), Some(0));
     let (_, mbody) = request(server.addr(), "GET", "/metrics", "");
     assert!(json::parse(&mbody).unwrap().get("service.accepted").is_some());
+    server.stop();
+}
+
+/// The poisoning satellite end-to-end: a panicking writer on the
+/// attached index must leave `/stats` serving (recovered reads), with
+/// the recovery count surfaced for operators.
+#[test]
+fn stats_surface_poisoned_lock_recoveries() {
+    use windve::devices::executor::RetrievalExecutor;
+    use windve::testing::pseudo_embedding;
+
+    let (server, svc) = start_server(4, 2);
+    let exec = std::sync::Arc::new(RetrievalExecutor::flat(8));
+    for i in 0..4u64 {
+        exec.add(i, &pseudo_embedding(&format!("d{i}"), 8));
+    }
+    svc.attach_retrieval(std::sync::Arc::clone(&exec));
+    // Poison the index lock: a mis-sized add panics inside the guard.
+    let poisoner = std::sync::Arc::clone(&exec);
+    assert!(std::thread::spawn(move || poisoner.add(9, &[1.0])).join().is_err());
+    // Retrieval still answers (recovered read guard)…
+    let hits = exec.search(&pseudo_embedding("d2", 8), 2);
+    assert_eq!(hits[0].id, 2);
+    // …and /stats reports the recovery.
+    let (status, body) = request(server.addr(), "GET", "/stats", "");
+    assert_eq!(status, 200);
+    let v = json::parse(&body).unwrap();
+    assert!(v.get("retrieval_poisoned_recoveries").unwrap().as_u64().unwrap() >= 1);
     server.stop();
 }
 

@@ -344,7 +344,12 @@ fn mixed_des_scenario_reproducible_and_bounded() {
         "fraction {}",
         arr.observed_fraction()
     );
-    let on = RetrievalLoad { cost: 4, service_time: 0.4, cap: 8, admission: true };
+    let on = RetrievalLoad {
+        cost: 4,
+        service_time: 0.4,
+        cap: 8,
+        ..RetrievalLoad::default()
+    };
     let a = sim.run_mixed(&on, &arr.embed, &arr.retrieve);
     let b = sim.run_mixed(&on, &arr.embed, &arr.retrieve);
     // Bit-for-bit reproducibility of the seeded scenario.
@@ -364,6 +369,130 @@ fn mixed_des_scenario_reproducible_and_bounded() {
     let c = sim.run_mixed(&off, &arr.embed, &arr.retrieve);
     assert!(c.peak_cpu_cost > c.cpu_depth, "baseline peak {}", c.peak_cpu_cost);
     assert!(c.oversub_events > a.oversub_events);
+}
+
+/// Tentpole acceptance (service side): with offload enabled the service
+/// answers scans from the NPU leg with results bit-identical to the
+/// offload-off CPU path, under real threads, and all occupancy drains.
+#[test]
+fn npu_offload_e2e_results_bit_identical_to_cpu_path() {
+    use windve::devices::executor::RetrievalExecutor;
+
+    let dim = 16;
+    let mk = |npu_retrieval_depth: usize| {
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                npu_retrieval_depth,
+                ..ServiceConfig::default()
+            },
+            vec![hash_factory(dim)],
+            vec![hash_factory(dim)],
+        )
+        .unwrap()
+    };
+    let svc_off = mk(0); // CPU-only retrieval
+    let svc_on = mk(4); // NPU offload leg enabled
+    let docs: Vec<String> = (0..48).map(|i| format!("corpus doc {i}")).collect();
+    let mk_exec = || {
+        let exec = Arc::new(RetrievalExecutor::flat(dim));
+        for (i, d) in docs.iter().enumerate() {
+            exec.add(i as u64, &pseudo_embedding(d, dim));
+        }
+        exec
+    };
+    svc_off.attach_retrieval(mk_exec());
+    svc_on.attach_retrieval(mk_exec());
+    svc_on.mirror_retrieval_to_npu().unwrap();
+
+    let queries: Vec<String> = vec![docs[3].clone(), docs[40].clone(), docs[17].clone()];
+    let a = svc_on.retrieve_blocking(&queries, 5, Duration::from_secs(10));
+    let b = svc_off.retrieve_blocking(&queries, 5, Duration::from_secs(10));
+    for (x, y) in a.iter().zip(&b) {
+        let (xa, ya) = (x.as_ref().unwrap(), y.as_ref().unwrap());
+        // Bit-identical hit lists: same ids, same order, same score bits.
+        assert_eq!(xa, ya);
+        for (ha, hb) in xa.iter().zip(ya) {
+            assert_eq!(ha.score.to_bits(), hb.score.to_bits());
+        }
+    }
+    // The on-service really used the device leg; the off-service didn't.
+    assert_eq!(svc_on.queue_manager().stats().routed_retrieve_npu, 1);
+    assert_eq!(svc_on.queue_manager().stats().routed_retrieve, 0);
+    assert_eq!(svc_off.queue_manager().stats().routed_retrieve_npu, 0);
+    assert_eq!(svc_on.metrics.counter("service.retrievals_npu").get(), 3);
+    // Occupancy drains to zero on both legs.
+    assert_eq!(svc_on.queue_manager().retrieve_npu_occupancy(), 0);
+    assert_eq!(svc_on.queue_manager().npu_occupancy(), 0);
+    assert_eq!(svc_on.queue_manager().stats().bad_releases, 0);
+    svc_on.shutdown();
+    svc_off.shutdown();
+}
+
+/// Tentpole acceptance (DES side): the seeded valley-burst scenario —
+/// light embeds, a scan burst generated by `with_scan_burst` — shows the
+/// NPU leg strictly raising admitted concurrency over CPU-only admission
+/// at zero oversubscription, bit-for-bit reproducibly.
+#[test]
+fn npu_offload_des_scenario_strictly_beats_cpu_only_admission() {
+    use windve::sim::{OpenLoopSim, RetrievalLoad};
+    use windve::workload::MixedArrivals;
+
+    fn quiet(mut p: DeviceProfile) -> DeviceProfile {
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        p
+    }
+    let sim = OpenLoopSim {
+        npu: quiet(DeviceProfile::v100_bge()),
+        cpu: Some(quiet(DeviceProfile::xeon_e5_2690_bge())),
+        npu_depth: 44,
+        cpu_depth: 8,
+        qlen: 75,
+        slo: 1.0,
+        seed: 23,
+    };
+    // An embedding valley (2 q/s) with a dense 3-second scan burst.
+    let arr = MixedArrivals::poisson(2.0, 0.0, 10.0, 31).with_scan_burst(1.0, 3.0, 15.0, 32);
+    assert!(arr.retrieve.len() > 20, "burst too thin: {}", arr.retrieve.len());
+    let load = |npu_cap: usize| RetrievalLoad {
+        cost: 4,
+        service_time: 0.6,
+        cap: 8,
+        npu_cap,
+        ..RetrievalLoad::default()
+    };
+    let cpu_only = sim.run_mixed(&load(0), &arr.embed, &arr.retrieve);
+    let offload = sim.run_mixed(&load(16), &arr.embed, &arr.retrieve);
+    // Equal oversubscription: zero events either way.
+    assert_eq!(cpu_only.oversub_events, 0);
+    assert_eq!(offload.oversub_events, 0);
+    // Strictly more admitted concurrency and served scans with the leg.
+    assert!(
+        offload.peak_admitted_cost > cpu_only.peak_admitted_cost,
+        "peak {} vs {}",
+        offload.peak_admitted_cost,
+        cpu_only.peak_admitted_cost
+    );
+    assert!(
+        offload.retrieve_served > cpu_only.retrieve_served,
+        "served {} vs {}",
+        offload.retrieve_served,
+        cpu_only.retrieve_served
+    );
+    assert!(offload.retrieve_served_npu > 0);
+    assert!(offload.peak_npu_cost <= offload.npu_depth);
+    // Bit-for-bit reproducible.
+    let again = sim.run_mixed(&load(16), &arr.embed, &arr.retrieve);
+    assert_eq!(again.retrieve_served, offload.retrieve_served);
+    assert_eq!(again.retrieve_served_npu, offload.retrieve_served_npu);
+    assert_eq!(again.peak_admitted_cost, offload.peak_admitted_cost);
+    assert_eq!(
+        again.embed.slo_attainment().to_bits(),
+        offload.embed.slo_attainment().to_bits()
+    );
 }
 
 #[test]
