@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use windve::benchkit::{bench, section};
 use windve::coordinator::batcher::{DeviceQueue, Pending};
-use windve::coordinator::queue_manager::{QueueManager, Route};
+use windve::coordinator::queue_manager::{QueueManager, Route, WorkClass};
 use windve::devices::profile::DeviceProfile;
 use windve::estimator::LinearFit;
 use windve::metrics::Histogram;
@@ -172,7 +172,8 @@ fn main() {
         bench("push+drain_batch(16)", || {
             for i in 0..16 {
                 q.push(Pending {
-                    text: String::new(),
+                    text: Arc::from(""),
+                    class: WorkClass::Embed,
                     enqueued: Instant::now(),
                     reply: i,
                 });

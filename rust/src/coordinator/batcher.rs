@@ -10,12 +10,22 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use super::queue_manager::WorkClass;
+
 /// One admitted query travelling through a device queue.
+///
+/// The text is an `Arc<str>` so the HTTP front end, the cache key, the
+/// queue and the backend batch all share one allocation (no per-hop
+/// clone of the payload). `class` records which admission class holds
+/// the slot — workers release `(class, route)` pairs, so ingest embeds
+/// travelling through the same queue free ingest capacity, not embed
+/// capacity.
 pub struct Pending<T> {
-    pub text: String,
+    pub text: Arc<str>,
+    pub class: WorkClass,
     pub enqueued: Instant,
     /// Response slot (a per-request channel in the real service).
     pub reply: T,
@@ -99,7 +109,12 @@ mod tests {
     use std::time::Duration;
 
     fn pending(text: &str) -> Pending<u32> {
-        Pending { text: text.to_string(), enqueued: Instant::now(), reply: 0 }
+        Pending {
+            text: Arc::from(text),
+            class: WorkClass::Embed,
+            enqueued: Instant::now(),
+            reply: 0,
+        }
     }
 
     #[test]
@@ -109,7 +124,7 @@ mod tests {
             q.push(pending(&format!("q{i}")));
         }
         let batch = q.drain_batch(10).unwrap();
-        let texts: Vec<_> = batch.iter().map(|p| p.text.as_str()).collect();
+        let texts: Vec<&str> = batch.iter().map(|p| p.text.as_ref()).collect();
         assert_eq!(texts, vec!["q0", "q1", "q2", "q3", "q4"]);
     }
 
@@ -133,7 +148,7 @@ mod tests {
         q.push(pending("late"));
         let batch = h.join().unwrap().unwrap();
         assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].text, "late");
+        assert_eq!(batch[0].text.as_ref(), "late");
     }
 
     #[test]
@@ -171,7 +186,8 @@ mod tests {
             producers.push(std::thread::spawn(move || {
                 for i in 0..500 {
                     q.push(Pending {
-                        text: format!("{t}-{i}"),
+                        text: Arc::from(format!("{t}-{i}")),
+                        class: WorkClass::Embed,
                         enqueued: Instant::now(),
                         reply: 0,
                     });

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::coordinator::batcher::DeviceQueue;
-use crate::coordinator::queue_manager::{QueueManager, Route};
+use crate::coordinator::queue_manager::{QueueManager, Route, WorkClass};
 use crate::devices::executor::Backend;
 use crate::devices::affinity;
 use crate::metrics::Registry;
@@ -52,7 +52,7 @@ pub fn spawn_worker(
                     log::error!("{name}: backend init failed: {e:#}");
                     while let Some(batch) = queue.drain_batch(64) {
                         for p in batch {
-                            qm.release(route);
+                            qm.release_class(p.class, route, 1);
                             let _ = p.reply.send(Err(format!("backend init failed: {e:#}")));
                         }
                     }
@@ -66,11 +66,13 @@ pub fn spawn_worker(
             let failures = metrics.counter(&format!("worker.{name}.failures"));
 
             while let Some(batch) = queue.drain_batch(backend.max_batch()) {
-                // Take ownership of the texts (no per-query clone on the
-                // hot path — perf pass §Perf); keep replies alongside.
-                let (texts, batch): (Vec<String>, Vec<Reply>) = batch
+                // Take ownership of the texts (Arc-shared — no per-query
+                // payload clone on the hot path); keep each query's
+                // (class, reply) alongside so its slot is released under
+                // the admission class that acquired it (embed vs ingest).
+                let (texts, batch): (Vec<Arc<str>>, Vec<(WorkClass, Reply)>) = batch
                     .into_iter()
-                    .map(|p| (p.text, p.reply))
+                    .map(|p| (p.text, (p.class, p.reply)))
                     .unzip();
                 let t0 = std::time::Instant::now();
                 let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
@@ -81,8 +83,8 @@ pub fn spawn_worker(
                 queries.add(batch.len() as u64);
                 match result {
                     Ok(Ok(vectors)) if vectors.len() == batch.len() => {
-                        for (reply, v) in batch.into_iter().zip(vectors) {
-                            qm.release(route);
+                        for ((class, reply), v) in batch.into_iter().zip(vectors) {
+                            qm.release_class(class, route, 1);
                             let _ = reply.send(Ok(v));
                         }
                     }
@@ -93,15 +95,15 @@ pub fn spawn_worker(
                             vectors.len(),
                             batch.len()
                         );
-                        for reply in batch {
-                            qm.release(route);
+                        for (class, reply) in batch {
+                            qm.release_class(class, route, 1);
                             let _ = reply.send(Err(msg.clone()));
                         }
                     }
                     Ok(Err(e)) => {
                         failures.inc();
-                        for reply in batch {
-                            qm.release(route);
+                        for (class, reply) in batch {
+                            qm.release_class(class, route, 1);
                             let _ = reply.send(Err(format!("backend error: {e:#}")));
                         }
                     }
@@ -113,8 +115,8 @@ pub fn spawn_worker(
                             .or_else(|| panic.downcast_ref::<String>().cloned())
                             .unwrap_or_else(|| "worker panic".into());
                         log::error!("{name}: backend panicked: {msg}");
-                        for reply in batch {
-                            qm.release(route);
+                        for (class, reply) in batch {
+                            qm.release_class(class, route, 1);
                             let _ = reply.send(Err(format!("backend panic: {msg}")));
                         }
                     }
@@ -134,7 +136,7 @@ mod tests {
 
     struct OkBackend;
     impl Backend for OkBackend {
-        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
             Ok(texts.iter().map(|t| vec![t.len() as f32]).collect())
         }
         fn describe(&self) -> String {
@@ -149,7 +151,7 @@ mod tests {
         panicked: bool,
     }
     impl Backend for PanicOnceBackend {
-        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
             if !self.panicked {
                 self.panicked = true;
                 panic!("injected kernel fault");
@@ -167,7 +169,12 @@ mod tests {
     fn submit(queue: &DeviceQueue<Reply>, qm: &QueueManager, text: &str) -> mpsc::Receiver<Result<Vec<f32>, String>> {
         assert_eq!(qm.dispatch(), Route::Npu);
         let (tx, rx) = mpsc::channel();
-        queue.push(Pending { text: text.to_string(), enqueued: Instant::now(), reply: tx });
+        queue.push(Pending {
+            text: Arc::from(text),
+            class: WorkClass::Embed,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
         rx
     }
 
@@ -215,6 +222,49 @@ mod tests {
         let rx2 = submit(&queue, &qm, "survivor");
         assert!(rx2.recv_timeout(std::time::Duration::from_secs(5)).unwrap().is_ok());
         assert_eq!(qm.npu_occupancy(), 0);
+        queue.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn worker_releases_ingest_queries_under_their_class() {
+        use crate::coordinator::queue_manager::ClassCaps;
+        let queue = Arc::new(DeviceQueue::new());
+        let qm = Arc::new(QueueManager::with_caps(
+            8,
+            0,
+            false,
+            ClassCaps { npu_ingest: 2, ..ClassCaps::default() },
+        ));
+        let h = spawn_worker(
+            "npu0".into(),
+            Arc::clone(&queue),
+            Arc::clone(&qm),
+            Route::Npu,
+            Box::new(|| Ok(Box::new(OkBackend) as Box<dyn Backend>)),
+            Registry::new(),
+            None,
+        );
+        assert_eq!(qm.dispatch_ingest_npu(1), Route::Npu);
+        let (tx, rx) = mpsc::channel();
+        queue.push(Pending {
+            text: Arc::from("ingested doc"),
+            class: WorkClass::Ingest,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap();
+        // Wait for the worker's post-send release to land.
+        for _ in 0..100 {
+            if qm.ingest_npu_occupancy() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // The slot came back to the INGEST class (embed was never held).
+        assert_eq!(qm.ingest_npu_occupancy(), 0);
+        assert_eq!(qm.npu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 0);
         queue.close();
         h.join().unwrap();
     }

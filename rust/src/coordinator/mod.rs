@@ -17,5 +17,5 @@ pub mod queue_manager;
 pub mod service;
 
 pub use device_detector::{detect, Detection, Inventory};
-pub use queue_manager::{QueueManager, QueueStats, Route, WorkClass};
+pub use queue_manager::{ClassCaps, QueueManager, QueueStats, Route, WorkClass};
 pub use service::{ServiceConfig, WindVE};

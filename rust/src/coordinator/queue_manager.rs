@@ -57,6 +57,30 @@
 //! mark) lives in `coordinator::service`; this type only meters capacity.
 //! A cap of 0 (every legacy constructor) disables the leg outright.
 //!
+//! # Ingest admission (the online-indexing contract)
+//!
+//! [`WorkClass::Ingest`] is the third class: embedding work done on
+//! behalf of streaming corpus ingestion (`crate::ingest`). Its contract
+//! is strictly subordinate to serving traffic:
+//!
+//! * Ingest holds slots of the **same shared pools** as everything else —
+//!   every in-flight ingest embed is visible to the oversubscription
+//!   accounting, so bulk uploads can never push combined occupancy past
+//!   the calibrated depths (Eqs. 9-10).
+//! * Ingest has a **strict per-class cap on each pool** (`ingest_cap` on
+//!   the CPU pool, `npu_ingest_cap` on the NPU pool, both via
+//!   [`ClassCaps`]), normally a small fraction of the depth: latency-
+//!   sensitive Embed/Retrieve traffic keeps the rest of the budget and
+//!   ingest soaks only the valleys. A full pool or cap answers BUSY —
+//!   backpressure the streaming pipeline absorbs by waiting, not a drop.
+//! * Ingest **never reserves** capacity: a cap of 0 on both pools (every
+//!   legacy constructor) disables the class outright, and an idle ingest
+//!   class leaves both pools exactly as before this class existed.
+//!
+//! Whether an ingest embed *should* try the NPU pool (valley-soak
+//! low-water policy, mirroring the retrieval offload leg) is decided in
+//! `coordinator::service::WindVE::submit_ingest`; this type only meters.
+//!
 //! Lock-free: occupancy is a set of atomics with CAS admission, making
 //! dispatch safe from any number of front-end threads (and cheap — see
 //! benches/micro.rs). Per-class occupancy is acquired before the shared
@@ -91,6 +115,9 @@ pub enum WorkClass {
     Embed,
     /// One batched top-k scan — cost from [`retrieval_slot_cost`].
     Retrieve,
+    /// One ingestion embed (streaming corpus upload) — cost 1, strictly
+    /// capped per pool so bulk indexing can never starve serving traffic.
+    Ingest,
 }
 
 impl std::fmt::Display for WorkClass {
@@ -98,8 +125,23 @@ impl std::fmt::Display for WorkClass {
         match self {
             WorkClass::Embed => write!(f, "embed"),
             WorkClass::Retrieve => write!(f, "retrieve"),
+            WorkClass::Ingest => write!(f, "ingest"),
         }
     }
+}
+
+/// Per-class caps within the shared device pools (cost units; each is
+/// clamped to its pool's depth at construction, 0 disables the leg).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassCaps {
+    /// Retrieval scans' share of the CPU pool.
+    pub retrieve: usize,
+    /// Offloaded scans' share of the NPU pool.
+    pub npu_retrieve: usize,
+    /// Ingest embeds' share of the CPU pool.
+    pub ingest: usize,
+    /// Ingest embeds' share of the NPU pool (valley soak).
+    pub npu_ingest: usize,
 }
 
 /// Slot cost of one retrieval scan: `scan_bytes` (rows × bytes_per_row of
@@ -127,6 +169,16 @@ pub struct QueueStats {
     /// back to the CPU leg on decline, so this counts fallbacks, not
     /// necessarily lost scans.
     pub rejected_retrieve_npu: u64,
+    /// Ingest embeds admitted to the CPU pool.
+    pub routed_ingest: u64,
+    /// Ingest CPU-leg admissions declined (cap or pool full) — the
+    /// backpressure the streaming pipeline absorbs by waiting.
+    pub rejected_ingest: u64,
+    /// Ingest embeds admitted to the NPU pool (valley soak).
+    pub routed_ingest_npu: u64,
+    /// Ingest NPU-leg admissions declined; the service falls back to the
+    /// CPU leg, so this counts fallbacks, not necessarily stalled docs.
+    pub rejected_ingest_npu: u64,
     /// Releases without a matching dispatch (see
     /// [`QueueManager::release_class`]); 0 in a healthy service.
     pub bad_releases: u64,
@@ -144,15 +196,23 @@ pub struct QueueManager {
     /// Per-class cap on offloaded scans' share of the NPU pool
     /// (≤ npu_depth); 0 disables the NPU retrieval leg.
     npu_retrieve_cap: usize,
+    /// Per-class cap on ingest's share of the CPU pool (≤ cpu_depth).
+    ingest_cap: usize,
+    /// Per-class cap on ingest's share of the NPU pool (≤ npu_depth).
+    npu_ingest_cap: usize,
     /// Total in-flight cost units per pool (authoritative for admission).
     npu_len: AtomicUsize,
     cpu_len: AtomicUsize,
-    /// Per-class CPU occupancy; embed_cpu + retr_cpu == cpu_len at rest.
+    /// Per-class CPU occupancy;
+    /// embed_cpu + retr_cpu + ingest_cpu == cpu_len at rest.
     embed_cpu: AtomicUsize,
     retr_cpu: AtomicUsize,
-    /// Per-class NPU occupancy; embed_npu + retr_npu == npu_len at rest.
+    ingest_cpu: AtomicUsize,
+    /// Per-class NPU occupancy;
+    /// embed_npu + retr_npu + ingest_npu == npu_len at rest.
     embed_npu: AtomicUsize,
     retr_npu: AtomicUsize,
+    ingest_npu: AtomicUsize,
     // counters for /stats
     routed_npu: AtomicU64,
     routed_cpu: AtomicU64,
@@ -161,6 +221,10 @@ pub struct QueueManager {
     rejected_retrieve: AtomicU64,
     routed_retrieve_npu: AtomicU64,
     rejected_retrieve_npu: AtomicU64,
+    routed_ingest: AtomicU64,
+    rejected_ingest: AtomicU64,
+    routed_ingest_npu: AtomicU64,
+    rejected_ingest_npu: AtomicU64,
     bad_releases: AtomicU64,
 }
 
@@ -192,7 +256,8 @@ impl QueueManager {
 
     /// [`QueueManager::with_retrieval_cap`] plus the NPU retrieval leg:
     /// `npu_retrieve_cap` bounds offloaded scans' share of the shared NPU
-    /// pool (clamped to `npu_depth`; 0 keeps the leg disabled).
+    /// pool (clamped to `npu_depth`; 0 keeps the leg disabled). The
+    /// ingest class stays disabled — use [`QueueManager::with_caps`].
     pub fn with_class_caps(
         npu_depth: usize,
         cpu_depth: usize,
@@ -200,18 +265,42 @@ impl QueueManager {
         retrieve_cap: usize,
         npu_retrieve_cap: usize,
     ) -> QueueManager {
+        QueueManager::with_caps(
+            npu_depth,
+            cpu_depth,
+            hetero,
+            ClassCaps {
+                retrieve: retrieve_cap,
+                npu_retrieve: npu_retrieve_cap,
+                ..ClassCaps::default()
+            },
+        )
+    }
+
+    /// Full three-class wiring: every per-class cap in one [`ClassCaps`]
+    /// (each clamped to its pool's depth; 0 disables that leg).
+    pub fn with_caps(
+        npu_depth: usize,
+        cpu_depth: usize,
+        hetero: bool,
+        caps: ClassCaps,
+    ) -> QueueManager {
         QueueManager {
             npu_depth,
             cpu_depth,
             hetero,
-            retrieve_cap: retrieve_cap.min(cpu_depth),
-            npu_retrieve_cap: npu_retrieve_cap.min(npu_depth),
+            retrieve_cap: caps.retrieve.min(cpu_depth),
+            npu_retrieve_cap: caps.npu_retrieve.min(npu_depth),
+            ingest_cap: caps.ingest.min(cpu_depth),
+            npu_ingest_cap: caps.npu_ingest.min(npu_depth),
             npu_len: AtomicUsize::new(0),
             cpu_len: AtomicUsize::new(0),
             embed_cpu: AtomicUsize::new(0),
             retr_cpu: AtomicUsize::new(0),
+            ingest_cpu: AtomicUsize::new(0),
             embed_npu: AtomicUsize::new(0),
             retr_npu: AtomicUsize::new(0),
+            ingest_npu: AtomicUsize::new(0),
             routed_npu: AtomicU64::new(0),
             routed_cpu: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
@@ -219,6 +308,10 @@ impl QueueManager {
             rejected_retrieve: AtomicU64::new(0),
             routed_retrieve_npu: AtomicU64::new(0),
             rejected_retrieve_npu: AtomicU64::new(0),
+            routed_ingest: AtomicU64::new(0),
+            rejected_ingest: AtomicU64::new(0),
+            routed_ingest_npu: AtomicU64::new(0),
+            rejected_ingest_npu: AtomicU64::new(0),
             bad_releases: AtomicU64::new(0),
         }
     }
@@ -269,6 +362,21 @@ impl QueueManager {
                 self.rejected_retrieve.fetch_add(1, Ordering::Relaxed);
                 Route::Busy
             }
+            WorkClass::Ingest => {
+                // Same cap-then-pool shape as retrieval: ingest's strict
+                // cap bounds how much of the shared CPU budget bulk
+                // uploads can ever hold, and the pool check keeps the
+                // combined occupancy at or under the calibrated depth.
+                if try_acquire(&self.ingest_cpu, self.ingest_cap, cost) {
+                    if try_acquire(&self.cpu_len, self.cpu_depth, cost) {
+                        self.routed_ingest.fetch_add(1, Ordering::Relaxed);
+                        return Route::Cpu;
+                    }
+                    saturating_release(&self.ingest_cpu, cost);
+                }
+                self.rejected_ingest.fetch_add(1, Ordering::Relaxed);
+                Route::Busy
+            }
         }
     }
 
@@ -292,6 +400,27 @@ impl QueueManager {
             saturating_release(&self.retr_npu, cost);
         }
         self.rejected_retrieve_npu.fetch_add(1, Ordering::Relaxed);
+        Route::Busy
+    }
+
+    /// Admit one ingest embed to the **NPU pool** (valley soak): acquire
+    /// `cost` slots bounded by both `npu_depth` and the strict
+    /// `npu_ingest_cap` (cap first, pool second, with rollback — the same
+    /// shape as every other leg). Returns [`Route::Npu`] or
+    /// [`Route::Busy`]; the caller must
+    /// `release_class(WorkClass::Ingest, Route::Npu, cost)` on
+    /// completion. Whether ingest *should* touch the NPU at all (the
+    /// embed-traffic low-water policy) is decided in the service.
+    pub fn dispatch_ingest_npu(&self, cost: usize) -> Route {
+        let cost = cost.max(1);
+        if try_acquire(&self.ingest_npu, self.npu_ingest_cap, cost) {
+            if try_acquire(&self.npu_len, self.npu_depth, cost) {
+                self.routed_ingest_npu.fetch_add(1, Ordering::Relaxed);
+                return Route::Npu;
+            }
+            saturating_release(&self.ingest_npu, cost);
+        }
+        self.rejected_ingest_npu.fetch_add(1, Ordering::Relaxed);
         Route::Busy
     }
 
@@ -344,6 +473,20 @@ impl QueueManager {
                 }
                 saturating_release(&self.npu_len, freed);
             }
+            (WorkClass::Ingest, Route::Cpu) => {
+                let freed = saturating_release(&self.ingest_cpu, cost);
+                if freed < cost {
+                    self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                }
+                saturating_release(&self.cpu_len, freed);
+            }
+            (WorkClass::Ingest, Route::Npu) => {
+                let freed = saturating_release(&self.ingest_npu, cost);
+                if freed < cost {
+                    self.bad_releases.fetch_add(1, Ordering::Relaxed);
+                }
+                saturating_release(&self.npu_len, freed);
+            }
         }
     }
 
@@ -361,6 +504,16 @@ impl QueueManager {
     /// Offloaded scans' share of the NPU pool (cost units).
     pub fn retrieve_npu_occupancy(&self) -> usize {
         self.retr_npu.load(Ordering::Acquire)
+    }
+
+    /// Ingest embeds' share of the CPU pool (cost units).
+    pub fn ingest_cpu_occupancy(&self) -> usize {
+        self.ingest_cpu.load(Ordering::Acquire)
+    }
+
+    /// Ingest embeds' share of the NPU pool (cost units).
+    pub fn ingest_npu_occupancy(&self) -> usize {
+        self.ingest_npu.load(Ordering::Acquire)
     }
 
     /// Total CPU-pool occupancy in cost units (embed + retrieval).
@@ -396,6 +549,16 @@ impl QueueManager {
         self.npu_retrieve_cap
     }
 
+    /// Ingest's cap within the CPU pool (cost units; 0 = leg off).
+    pub fn ingest_cap(&self) -> usize {
+        self.ingest_cap
+    }
+
+    /// Ingest's cap within the NPU pool (cost units; 0 = leg off).
+    pub fn npu_ingest_cap(&self) -> usize {
+        self.npu_ingest_cap
+    }
+
     pub fn hetero(&self) -> bool {
         self.hetero
     }
@@ -414,6 +577,10 @@ impl QueueManager {
             rejected_retrieve: self.rejected_retrieve.load(Ordering::Relaxed),
             routed_retrieve_npu: self.routed_retrieve_npu.load(Ordering::Relaxed),
             rejected_retrieve_npu: self.rejected_retrieve_npu.load(Ordering::Relaxed),
+            routed_ingest: self.routed_ingest.load(Ordering::Relaxed),
+            rejected_ingest: self.rejected_ingest.load(Ordering::Relaxed),
+            routed_ingest_npu: self.routed_ingest_npu.load(Ordering::Relaxed),
+            rejected_ingest_npu: self.rejected_ingest_npu.load(Ordering::Relaxed),
             bad_releases: self.bad_releases.load(Ordering::Relaxed),
         }
     }
@@ -797,28 +964,130 @@ mod tests {
     }
 
     #[test]
+    fn ingest_cap_strictly_bounds_bulk_uploads() {
+        // Pool of 8 with an ingest cap of 2: ingest can hold at most 2
+        // units no matter how hard the upload storm pushes, and the rest
+        // of the pool stays available to serving traffic.
+        let qm = QueueManager::with_caps(
+            0,
+            8,
+            true,
+            ClassCaps { retrieve: 4, ingest: 2, ..ClassCaps::default() },
+        );
+        assert_eq!(qm.ingest_cap(), 2);
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 1), Route::Cpu);
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 1), Route::Cpu);
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 1), Route::Busy);
+        assert_eq!(qm.ingest_cpu_occupancy(), 2);
+        // Serving traffic still fills the remaining 6 units.
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 4), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Cpu);
+        assert_eq!(qm.dispatch(), Route::Busy);
+        assert_eq!(qm.cpu_occupancy(), 8);
+        // Releasing an ingest slot frees exactly its cost, and only for
+        // work that fits its own cap.
+        qm.release_class(WorkClass::Ingest, Route::Cpu, 1);
+        assert_eq!(qm.cpu_occupancy(), 7);
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 1), Route::Cpu);
+        let st = qm.stats();
+        assert_eq!(st.routed_ingest, 3);
+        assert_eq!(st.rejected_ingest, 1);
+        assert_eq!(st.bad_releases, 0);
+    }
+
+    #[test]
+    fn ingest_npu_leg_shares_pool_and_rolls_back() {
+        // NPU pool of 4, ingest NPU cap 2; embeds hold 3 pool units, so
+        // a cost-2 ingest passes the cap but fails the pool — rollback.
+        let qm = QueueManager::with_caps(
+            4,
+            0,
+            false,
+            ClassCaps { npu_ingest: 2, ..ClassCaps::default() },
+        );
+        assert_eq!(qm.npu_ingest_cap(), 2);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch(), Route::Npu);
+        assert_eq!(qm.dispatch_ingest_npu(2), Route::Busy);
+        assert_eq!(qm.ingest_npu_occupancy(), 0);
+        // A unit that fits the pool remainder is admitted.
+        assert_eq!(qm.dispatch_ingest_npu(1), Route::Npu);
+        assert_eq!(qm.npu_occupancy(), 4);
+        assert_eq!(qm.ingest_npu_occupancy(), 1);
+        // Double release is contained exactly like the other classes.
+        qm.release_class(WorkClass::Ingest, Route::Npu, 1);
+        qm.release_class(WorkClass::Ingest, Route::Npu, 1);
+        assert_eq!(qm.stats().bad_releases, 1);
+        assert_eq!(qm.npu_occupancy(), 3);
+        assert_eq!(qm.embed_npu_occupancy(), 3);
+    }
+
+    #[test]
+    fn ingest_disabled_by_legacy_constructors() {
+        let qm = QueueManager::with_class_caps(8, 4, true, 4, 2);
+        assert_eq!(qm.ingest_cap(), 0);
+        assert_eq!(qm.npu_ingest_cap(), 0);
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 1), Route::Busy);
+        assert_eq!(qm.dispatch_ingest_npu(1), Route::Busy);
+        assert_eq!(qm.cpu_occupancy(), 0);
+        assert_eq!(qm.npu_occupancy(), 0);
+    }
+
+    #[test]
+    fn ingest_release_cannot_free_other_classes() {
+        let qm = QueueManager::with_caps(
+            0,
+            6,
+            true,
+            ClassCaps { retrieve: 3, ingest: 3, ..ClassCaps::default() },
+        );
+        assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 3), Route::Cpu);
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 2), Route::Cpu);
+        // A rogue over-release from the ingest class frees only what
+        // ingest actually holds — never the retrieval slots.
+        qm.release_class(WorkClass::Ingest, Route::Cpu, 5);
+        assert_eq!(qm.stats().bad_releases, 1);
+        assert_eq!(qm.cpu_occupancy(), 3);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 3);
+        assert_eq!(qm.ingest_cpu_occupancy(), 0);
+    }
+
+    #[test]
     fn concurrent_mixed_classes_never_exceed_pool() {
-        let qm = Arc::new(QueueManager::with_class_caps(8, 16, true, 12, 5));
+        let qm = Arc::new(QueueManager::with_caps(
+            8,
+            16,
+            true,
+            ClassCaps { retrieve: 12, npu_retrieve: 5, ingest: 3, npu_ingest: 2 },
+        ));
         let mut handles = Vec::new();
         for t in 0..8 {
             let qm = Arc::clone(&qm);
             handles.push(std::thread::spawn(move || {
                 for i in 0..500 {
-                    let (class, cost) = if (t + i) % 3 == 0 {
-                        (WorkClass::Retrieve, 1 + (i % 4))
-                    } else {
-                        (WorkClass::Embed, 1)
+                    let (class, cost) = match (t + i) % 4 {
+                        0 => (WorkClass::Retrieve, 1 + (i % 4)),
+                        1 => (WorkClass::Ingest, 1),
+                        _ => (WorkClass::Embed, 1),
                     };
-                    let route = if class == WorkClass::Retrieve && (t + i) % 2 == 0 {
-                        qm.dispatch_retrieve_npu(cost) // the offload leg
-                    } else {
-                        qm.dispatch_class(class, cost)
+                    let route = match class {
+                        WorkClass::Retrieve if (t + i) % 2 == 0 => {
+                            qm.dispatch_retrieve_npu(cost) // the offload leg
+                        }
+                        WorkClass::Ingest if (t + i) % 2 == 0 => {
+                            qm.dispatch_ingest_npu(cost) // the valley-soak leg
+                        }
+                        _ => qm.dispatch_class(class, cost),
                     };
-                    // pool + cap bounds hold at every instant, both legs
+                    // pool + cap bounds hold at every instant, every leg
                     assert!(qm.cpu_occupancy() <= 16);
                     assert!(qm.retrieve_cpu_occupancy() <= 12);
+                    assert!(qm.ingest_cpu_occupancy() <= 3);
                     assert!(qm.npu_occupancy() <= 8);
                     assert!(qm.retrieve_npu_occupancy() <= 5);
+                    assert!(qm.ingest_npu_occupancy() <= 2);
                     qm.release_class(class, route, cost);
                 }
             }));
@@ -830,8 +1099,10 @@ mod tests {
         assert_eq!(qm.cpu_occupancy(), 0);
         assert_eq!(qm.embed_cpu_occupancy(), 0);
         assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_eq!(qm.ingest_cpu_occupancy(), 0);
         assert_eq!(qm.embed_npu_occupancy(), 0);
         assert_eq!(qm.retrieve_npu_occupancy(), 0);
+        assert_eq!(qm.ingest_npu_occupancy(), 0);
         assert_eq!(qm.stats().bad_releases, 0);
     }
 }

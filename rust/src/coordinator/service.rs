@@ -22,8 +22,9 @@ use anyhow::Result;
 use super::batcher::{DeviceQueue, Pending};
 use super::cache::EmbeddingCache;
 use super::instance::{spawn_worker, BackendFactory, Reply};
-use super::queue_manager::{QueueManager, Route, WorkClass};
+use super::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
+use crate::ingest::IngestStats;
 use crate::metrics::Registry;
 use crate::runtime::NpuScanner;
 use crate::vecstore::{Hit, Quant};
@@ -102,6 +103,23 @@ pub struct ServiceConfig {
     /// while embed-side NPU occupancy is at or below this fraction of
     /// `npu_depth` — the "embedding traffic is low" policy gate.
     pub npu_offload_low_water: f64,
+    /// Strict cap (cost units, clamped to `cpu_depth`) on the CPU depth
+    /// streaming-ingest embeds may hold concurrently
+    /// (`WorkClass::Ingest`). Ingest never reserves capacity — this only
+    /// bounds how much of the shared pool a bulk upload can soak, so
+    /// online indexing can never starve Embed/Retrieve. Ingest on the
+    /// CPU additionally requires a hetero CPU worker to run on.
+    pub ingest_depth: usize,
+    /// Strict cap (cost units, clamped to `npu_depth`) on the NPU depth
+    /// ingest embeds may hold — the valley-soak leg, tried before the
+    /// CPU leg while embedding traffic is under `ingest_low_water`.
+    /// 0 (the default) keeps ingest off the NPU.
+    pub npu_ingest_depth: usize,
+    /// Ingest's valley gate: the NPU leg is tried only while embed-side
+    /// NPU occupancy is at or below this fraction of `npu_depth`.
+    /// Stricter than the retrieval offload gate by default — ingest is
+    /// the lowest-priority class.
+    pub ingest_low_water: f64,
 }
 
 /// Default embed-query cost unit: 32 MiB of scanned arena ≈ the memory
@@ -129,6 +147,9 @@ impl Default for ServiceConfig {
             retrieval_cost_unit_bytes: EMBED_COST_UNIT_BYTES,
             npu_retrieval_depth: 0,
             npu_offload_low_water: 0.5,
+            ingest_depth: 1,
+            npu_ingest_depth: 0,
+            ingest_low_water: 0.25,
         }
     }
 }
@@ -231,6 +252,11 @@ pub struct WindVE {
     /// Embed NPU occupancy at or below which scans may offload
     /// (precomputed from `npu_offload_low_water · npu_depth`).
     npu_offload_low_water_slots: usize,
+    /// Embed NPU occupancy at or below which ingest may soak the NPU
+    /// (precomputed from `ingest_low_water · npu_depth`).
+    ingest_low_water_slots: usize,
+    /// Service-lifetime streaming-ingest counters (`/v1/ingest/status`).
+    ingest_stats: Arc<IngestStats>,
     pub metrics: Registry,
 }
 
@@ -262,12 +288,16 @@ impl WindVE {
         // on host cores either way); `hetero` only gates whether embeds
         // may overflow into it (Algorithm 1).
         let retrieve_cap = cfg.retrieval_depth.unwrap_or(cfg.cpu_depth).min(cfg.cpu_depth);
-        let qm = Arc::new(QueueManager::with_class_caps(
+        let qm = Arc::new(QueueManager::with_caps(
             cfg.npu_depth,
             cfg.cpu_depth,
             hetero,
-            retrieve_cap,
-            cfg.npu_retrieval_depth.min(cfg.npu_depth),
+            ClassCaps {
+                retrieve: retrieve_cap,
+                npu_retrieve: cfg.npu_retrieval_depth,
+                ingest: cfg.ingest_depth,
+                npu_ingest: cfg.npu_ingest_depth,
+            },
         ));
         let npu_queue = Arc::new(DeviceQueue::new());
         let cpu_queue = hetero.then(|| Arc::new(DeviceQueue::new()));
@@ -301,6 +331,8 @@ impl WindVE {
             .then(|| Arc::new(EmbeddingCache::new(cfg.cache_entries)));
         let low_water = cfg.npu_offload_low_water.clamp(0.0, 1.0);
         let npu_offload_low_water_slots = (cfg.npu_depth as f64 * low_water).floor() as usize;
+        let ingest_low_water = cfg.ingest_low_water.clamp(0.0, 1.0);
+        let ingest_low_water_slots = (cfg.npu_depth as f64 * ingest_low_water).floor() as usize;
         Ok(WindVE {
             qm,
             npu_queue,
@@ -317,6 +349,8 @@ impl WindVE {
             retrieval_cost_unit_bytes: cfg.retrieval_cost_unit_bytes,
             npu_offload_admission: cfg.retrieval_admission,
             npu_offload_low_water_slots,
+            ingest_low_water_slots,
+            ingest_stats: Arc::new(IngestStats::default()),
             metrics,
         })
     }
@@ -365,8 +399,10 @@ impl WindVE {
         Ok(())
     }
 
-    /// Admit and enqueue one query (Algorithm 1). Non-blocking.
-    pub fn submit(&self, text: impl Into<String>) -> Result<Ticket, ServeError> {
+    /// Admit and enqueue one query (Algorithm 1). Non-blocking. The text
+    /// is an `Arc<str>`: callers holding parsed request bodies submit a
+    /// refcount bump, not a copy (`String` and `&str` still convert).
+    pub fn submit(&self, text: impl Into<Arc<str>>) -> Result<Ticket, ServeError> {
         let route = self.qm.dispatch();
         let queue = match route {
             Route::Npu => &self.npu_queue,
@@ -377,9 +413,59 @@ impl WindVE {
             }
         };
         let (tx, rx) = std::sync::mpsc::channel();
-        queue.push(Pending { text: text.into(), enqueued: Instant::now(), reply: tx });
+        queue.push(Pending {
+            text: text.into(),
+            class: WorkClass::Embed,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
         self.metrics.counter("service.accepted").inc();
         Ok(Ticket { route, rx, submitted: Instant::now() })
+    }
+
+    /// Admit and enqueue one **ingest** embed (streaming corpus upload).
+    /// Non-blocking; BUSY means the strictly-capped ingest class is at
+    /// its cap (or the pools are full) — callers wait and retry, which
+    /// is exactly the backpressure contract
+    /// (`crate::ingest::pipeline` does this against the upload socket).
+    ///
+    /// Routing is the valley-soak policy: the NPU leg is tried first,
+    /// but only while embed-side NPU occupancy is at or below the ingest
+    /// low-water mark (ingest is the lowest-priority class and must
+    /// never contend with an embedding burst); otherwise the CPU leg,
+    /// which needs a hetero CPU worker to exist.
+    pub fn submit_ingest(&self, text: impl Into<Arc<str>>) -> Result<Ticket, ServeError> {
+        let mut route = Route::Busy;
+        if self.qm.npu_ingest_cap() > 0
+            && self.qm.embed_npu_occupancy() <= self.ingest_low_water_slots
+        {
+            route = self.qm.dispatch_ingest_npu(1);
+        }
+        if route == Route::Busy && self.cpu_queue.is_some() {
+            route = self.qm.dispatch_class(WorkClass::Ingest, 1);
+        }
+        let queue = match route {
+            Route::Npu => &self.npu_queue,
+            Route::Cpu => self.cpu_queue.as_ref().expect("cpu route implies cpu queue"),
+            Route::Busy => {
+                self.metrics.counter("service.ingest_busy").inc();
+                return Err(ServeError::Busy);
+            }
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        queue.push(Pending {
+            text: text.into(),
+            class: WorkClass::Ingest,
+            enqueued: Instant::now(),
+            reply: tx,
+        });
+        self.metrics.counter("service.ingest_accepted").inc();
+        Ok(Ticket { route, rx, submitted: Instant::now() })
+    }
+
+    /// Service-lifetime streaming-ingest counters.
+    pub fn ingest_stats(&self) -> &IngestStats {
+        &self.ingest_stats
     }
 
     /// Cache handle (cache + key) for `text`, if caching is enabled.
@@ -408,10 +494,10 @@ impl WindVE {
     /// (a hit never touches the queue manager) and fills it on success.
     pub fn embed_blocking(
         &self,
-        text: impl Into<String>,
+        text: impl Into<Arc<str>>,
         timeout: Duration,
     ) -> Result<Vec<f32>, ServeError> {
-        let text = text.into();
+        let text: Arc<str> = text.into();
         let cache_key = self.cache_entry(&text);
         if let Some(v) = self.cache_lookup(&cache_key) {
             return Ok(v);
@@ -479,7 +565,7 @@ impl WindVE {
                 embeddings[i] = Some(v);
                 continue;
             }
-            match self.submit(text.clone()) {
+            match self.submit(text.as_str()) {
                 Ok(t) => tickets.push((i, t, cache_key)),
                 Err(e) => failures[i] = Some(e),
             }
@@ -671,7 +757,7 @@ mod tests {
         delay: Duration,
     }
     impl Backend for EchoBackend {
-        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
             std::thread::sleep(self.delay);
             Ok(texts.iter().map(|_| vec![self.tag]).collect())
         }
@@ -806,7 +892,7 @@ mod tests {
         dim: usize,
     }
     impl Backend for HashBackend {
-        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
             Ok(texts.iter().map(|t| pseudo_embedding(t, self.dim)).collect())
         }
         fn describe(&self) -> String {
@@ -1230,6 +1316,163 @@ mod tests {
         assert!(svc.npu_retrieval().is_some());
         attach_corpus(&svc, dim, 6);
         assert!(svc.npu_retrieval().is_none());
+        svc.shutdown();
+    }
+
+    fn hash_service(cfg: ServiceConfig, dim: usize) -> WindVE {
+        let cpu = cfg.hetero && cfg.cpu_workers > 0;
+        WindVE::start(
+            cfg,
+            vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))],
+            if cpu {
+                vec![Box::new(move || Ok(Box::new(HashBackend { dim }) as Box<dyn Backend>))]
+            } else {
+                vec![]
+            },
+        )
+        .unwrap()
+    }
+
+    /// The ingest class routes by the valley-soak policy and releases
+    /// its slots under its own class.
+    #[test]
+    fn submit_ingest_routes_npu_valley_then_cpu() {
+        let dim = 16;
+        let svc = hash_service(
+            ServiceConfig {
+                npu_depth: 4,
+                cpu_depth: 4,
+                hetero: true,
+                ingest_depth: 2,
+                npu_ingest_depth: 2,
+                ingest_low_water: 0.0, // NPU only while embed-idle
+                ..ServiceConfig::default()
+            },
+            dim,
+        );
+        // Idle NPU: ingest soaks the valley.
+        let t = svc.submit_ingest("doc a").unwrap();
+        assert_eq!(t.route, Route::Npu);
+        t.wait(Duration::from_secs(5)).unwrap();
+        // An embed in flight on the NPU: policy pushes ingest to the CPU.
+        let qm = svc.queue_manager();
+        assert_eq!(qm.dispatch(), Route::Npu); // manual hold
+        let t = svc.submit_ingest("doc b").unwrap();
+        assert_eq!(t.route, Route::Cpu);
+        t.wait(Duration::from_secs(5)).unwrap();
+        qm.release(Route::Npu);
+        // Cap exhaustion is BUSY backpressure, not queueing.
+        assert_eq!(qm.dispatch_ingest_npu(2), Route::Npu); // hold the NPU leg
+        assert_eq!(qm.dispatch_class(WorkClass::Ingest, 2), Route::Cpu); // and the CPU leg
+        assert_eq!(svc.submit_ingest("doc c").unwrap_err(), ServeError::Busy);
+        qm.release_class(WorkClass::Ingest, Route::Npu, 2);
+        qm.release_class(WorkClass::Ingest, Route::Cpu, 2);
+        // Drained: nothing leaked, no bad releases.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(qm.ingest_cpu_occupancy(), 0);
+        assert_eq!(qm.ingest_npu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 0);
+        svc.shutdown();
+    }
+
+    /// The full pipeline: an NDJSON chunk stream lands in the live index
+    /// through ingest admission, and every document becomes retrievable
+    /// (version-checked).
+    #[test]
+    fn ingest_pipeline_indexes_streamed_docs() {
+        use crate::ingest::{ingest_ndjson_chunks, IngestOptions};
+        let dim = 16;
+        let svc = hash_service(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                ingest_depth: 2,
+                npu_ingest_depth: 4,
+                ingest_low_water: 1.0,
+                ..ServiceConfig::default()
+            },
+            dim,
+        );
+        let exec = Arc::new(RetrievalExecutor::flat(dim));
+        svc.attach_retrieval(Arc::clone(&exec));
+        let v0 = exec.version();
+
+        let n = 40u64;
+        let mut body = String::new();
+        for i in 0..n {
+            body.push_str(&format!("{{\"id\":{i},\"text\":\"ingest doc {i}\"}}\n"));
+        }
+        // Stream in small chunks to cross plenty of token seams.
+        let chunks: Vec<std::io::Result<Vec<u8>>> =
+            body.as_bytes().chunks(13).map(|c| Ok(c.to_vec())).collect();
+        let out = ingest_ndjson_chunks(
+            &svc,
+            chunks.into_iter(),
+            &IngestOptions { commit_batch: 8, ..IngestOptions::default() },
+        );
+        assert_eq!(out.error, None);
+        assert_eq!(out.received, n);
+        assert_eq!(out.indexed, n);
+        assert_eq!(out.failed, 0);
+        assert!(out.batches >= n / 8);
+        // Version-checked: the corpus advanced by exactly the committed
+        // rows, and the parser never held more than one 13-byte chunk.
+        assert_eq!(out.corpus_version, v0 + n);
+        assert_eq!(exec.version(), v0 + n);
+        assert!(out.peak_chunk_bytes <= 13);
+        assert_eq!(exec.len(), n as usize);
+        // Every doc is retrievable under the same embedding contract.
+        for i in (0..n).step_by(7) {
+            let q = pseudo_embedding(&format!("ingest doc {i}"), dim);
+            assert_eq!(exec.search(&q, 1)[0].id, i);
+        }
+        // ...including through the serving path.
+        let got = svc.retrieve_blocking(&["ingest doc 3".into()], 2, Duration::from_secs(5));
+        assert_eq!(got[0].as_ref().unwrap()[0].id, 3);
+        // Service-wide counters absorbed the stream.
+        assert_eq!(svc.ingest_stats().docs_indexed(), n);
+        assert_eq!(svc.queue_manager().stats().bad_releases, 0);
+        svc.shutdown();
+    }
+
+    /// Ingest without an attached index fails the stream, not the
+    /// process; a dead upload socket keeps everything already committed.
+    #[test]
+    fn ingest_pipeline_surfaces_stream_errors() {
+        use crate::ingest::{ingest_ndjson_chunks, IngestOptions};
+        let dim = 8;
+        let svc = hash_service(
+            ServiceConfig {
+                npu_depth: 4,
+                cpu_depth: 2,
+                hetero: true,
+                npu_ingest_depth: 2,
+                ingest_low_water: 1.0,
+                ..ServiceConfig::default()
+            },
+            dim,
+        );
+        // No index attached: stream-level error, nothing counted.
+        let chunks: Vec<std::io::Result<Vec<u8>>> =
+            vec![Ok(b"{\"id\":1,\"text\":\"a\"}\n".to_vec())];
+        let out = ingest_ndjson_chunks(&svc, chunks.into_iter(), &IngestOptions::default());
+        assert!(out.error.as_ref().unwrap().contains("no retrieval index"), "{out:?}");
+        assert_eq!(out.indexed, 0);
+
+        // Attached, but the socket dies mid-stream: the first doc
+        // commits, the error is surfaced.
+        let exec = Arc::new(RetrievalExecutor::flat(dim));
+        svc.attach_retrieval(Arc::clone(&exec));
+        let chunks: Vec<std::io::Result<Vec<u8>>> = vec![
+            Ok(b"{\"id\":1,\"text\":\"kept\"}\n{\"id\":2,\"te".to_vec()),
+            Err(std::io::Error::new(std::io::ErrorKind::ConnectionReset, "peer reset")),
+        ];
+        let out = ingest_ndjson_chunks(&svc, chunks.into_iter(), &IngestOptions::default());
+        assert_eq!(out.indexed, 1);
+        assert!(out.error.is_some(), "{out:?}");
+        assert_eq!(exec.len(), 1);
+        assert_eq!(exec.search(&pseudo_embedding("kept", dim), 1)[0].id, 1);
         svc.shutdown();
     }
 

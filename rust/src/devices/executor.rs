@@ -14,7 +14,7 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -26,8 +26,10 @@ use crate::vecstore::{FlatIndex, Hit, Index, Quant, QuantizedFlatIndex};
 
 /// A batch embedding executor owned by one worker instance.
 pub trait Backend {
-    /// Embed a batch; one vector per input text.
-    fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>>;
+    /// Embed a batch; one vector per input text. Texts arrive as
+    /// `Arc<str>` so the whole pipeline (HTTP parse → queue → batch)
+    /// shares one allocation per payload.
+    fn embed(&mut self, texts: &[Arc<str>]) -> Result<Vec<Vec<f32>>>;
     /// Human-readable backend description (for /stats and logs).
     fn describe(&self) -> String;
     /// Largest batch worth submitting at once (bucket cap for real
@@ -49,7 +51,7 @@ impl RealBackend {
 }
 
 impl Backend for RealBackend {
-    fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    fn embed(&mut self, texts: &[Arc<str>]) -> Result<Vec<Vec<f32>>> {
         self.engine.embed(texts)
     }
 
@@ -117,7 +119,7 @@ impl SyntheticBackend {
 }
 
 impl Backend for SyntheticBackend {
-    fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    fn embed(&mut self, texts: &[Arc<str>]) -> Result<Vec<Vec<f32>>> {
         let qlen = texts
             .iter()
             .map(|t| tokenizer::token_count(t))
@@ -226,6 +228,25 @@ impl RetrievalExecutor {
         let mut g = self.index.write().expect("index lock poisoned");
         g.add(id, vector);
         self.version.fetch_add(1, Ordering::Release);
+    }
+
+    /// Commit one ingest batch under a single exclusive lock: the write
+    /// amortization the streaming pipeline relies on (one lock + one
+    /// version window per batch instead of per document, so concurrent
+    /// scans see at most one barrier per commit). The version advances by
+    /// the row count, inside the guard, so device-side mirrors taken
+    /// before the commit always read as stale. Dimension mismatches are
+    /// the caller's job to filter — a mis-sized row would assert inside
+    /// the guard and poison the lock for writers.
+    pub fn add_batch(&self, rows: &[(u64, Vec<f32>)]) {
+        if rows.is_empty() {
+            return;
+        }
+        let mut g = self.index.write().expect("index lock poisoned");
+        let items: Vec<(u64, &[f32])> =
+            rows.iter().map(|(id, v)| (*id, v.as_slice())).collect();
+        g.add_batch(&items);
+        self.version.fetch_add(rows.len() as u64, Ordering::Release);
     }
 
     pub fn len(&self) -> usize {
@@ -470,6 +491,29 @@ mod tests {
     }
 
     #[test]
+    fn ingest_add_batch_commits_rows_and_versions_once() {
+        let ex = RetrievalExecutor::flat(4);
+        ex.add(0, &[1.0, 0.0, 0.0, 0.0]);
+        let rows: Vec<(u64, Vec<f32>)> = (1..9u64)
+            .map(|i| {
+                let a = (i as f32) * 0.3;
+                (i, vec![a.cos(), a.sin(), 0.0, 0.0])
+            })
+            .collect();
+        ex.add_batch(&rows);
+        assert_eq!(ex.len(), 9);
+        // Version advanced by exactly the committed row count.
+        assert_eq!(ex.version(), 9);
+        // Every committed row is immediately retrievable.
+        for (id, v) in &rows {
+            assert_eq!(ex.search(v, 1)[0].id, *id);
+        }
+        // Empty commits are free: no version churn for mirrors.
+        ex.add_batch(&[]);
+        assert_eq!(ex.version(), 9);
+    }
+
+    #[test]
     fn export_corpus_snapshots_flat_f32_only() {
         let ex = RetrievalExecutor::flat(4);
         ex.add(7, &[1.0, 0.0, 0.0, 0.0]);
@@ -564,7 +608,7 @@ mod tests {
         p.outlier_prob = 0.0;
         let mut b = SyntheticBackend::new(p.clone(), 1e-3, 1); // ms instead of s
         let t0 = std::time::Instant::now();
-        b.embed(&vec!["q".to_string(); 10]).unwrap();
+        b.embed(&vec![Arc::<str>::from("q"); 10]).unwrap();
         let el = t0.elapsed().as_secs_f64();
         let want = p.service_time(10, 2) * 1e-3;
         assert!(el >= want * 0.8, "slept {el}, want >= {want}");

@@ -1,0 +1,530 @@
+//! Zero-copy incremental JSON lexing (hifijson-style).
+//!
+//! One [`Lexer`] abstraction, two sources:
+//!
+//! * [`SliceLexer`] — lexes a complete byte slice. Strings that contain
+//!   no escapes are **borrowed** straight out of the input
+//!   (`Cow::Borrowed`), and number tokens are returned as sub-slices, so
+//!   lexing a document allocates only for values that genuinely need
+//!   unescaping.
+//! * [`ChunkLexer`] — lexes a *stream of byte chunks* (e.g. an HTTP
+//!   chunked request body) without ever concatenating them: only the
+//!   current chunk is resident, and a token that crosses a chunk seam —
+//!   a split escape sequence, a split UTF-8 character, a number cut in
+//!   half — is re-assembled byte-by-byte into the token's own buffer.
+//!   Peak residency is therefore one chunk plus one in-flight token,
+//!   never the whole body ([`ChunkLexer::peak_chunk_bytes`]).
+//!
+//! Number tokens preserve their source text (`"1e-7"` stays `"1e-7"`),
+//! so downstream consumers choose their own numeric interpretation
+//! (u64 ids parse exactly; scores go through `f64` like
+//! [`crate::util::json`] does).
+//!
+//! The token grammar and escape handling deliberately match
+//! [`crate::util::json::parse`] on every *valid* JSON document — the
+//! property tests in `rust/tests/proptests.rs` hold the two parsers
+//! equal over generated documents and adversarial chunk splits.
+
+use std::borrow::Cow;
+use std::fmt;
+
+/// Lex/parse failure with the absolute byte offset it was detected at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+/// A byte source the JSON parser can lex incrementally.
+///
+/// `Str`/`Num` are the payload types tokens carry: borrowed for
+/// [`SliceLexer`], owned for [`ChunkLexer`].
+pub trait Lexer {
+    /// String token payload (borrowed from the input when possible).
+    type Str: AsRef<str>;
+    /// Number token payload — the source text, preserved verbatim.
+    type Num: AsRef<str>;
+
+    /// Current byte without consuming it; `None` at end of input.
+    fn peek(&mut self) -> Option<u8>;
+    /// Consume the byte last returned by [`Lexer::peek`].
+    fn bump(&mut self);
+    /// Absolute offset of the next unread byte (for error reporting).
+    fn offset(&self) -> usize;
+
+    /// Lex one string token (the cursor is on the opening quote).
+    fn lex_string(&mut self) -> Result<Self::Str, LexError>;
+    /// Lex one number token (the cursor is on `-` or a digit).
+    fn lex_number(&mut self) -> Result<Self::Num, LexError>;
+
+    fn err(&self, msg: &str) -> LexError {
+        LexError { offset: self.offset(), msg: msg.to_string() }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.bump();
+        }
+    }
+
+    /// Consume the literal `lit` (`null` / `true` / `false`).
+    fn expect_lit(&mut self, lit: &'static str) -> Result<(), LexError> {
+        for &b in lit.as_bytes() {
+            if self.peek() != Some(b) {
+                return Err(self.err(&format!("expected '{lit}'")));
+            }
+            self.bump();
+        }
+        Ok(())
+    }
+}
+
+/// Width of a UTF-8 sequence from its lead byte; `None` for invalid
+/// lead bytes (continuation bytes, overlong markers).
+fn utf8_width(b: u8) -> Option<usize> {
+    match b {
+        0xC2..=0xDF => Some(2),
+        0xE0..=0xEF => Some(3),
+        0xF0..=0xF4 => Some(4),
+        _ => None,
+    }
+}
+
+/// Decode four hex digits (the payload of a `\u` escape).
+fn hex4<L: Lexer + ?Sized>(lx: &mut L) -> Result<u32, LexError> {
+    let mut v = 0u32;
+    for _ in 0..4 {
+        let c = lx.peek().ok_or_else(|| lx.err("truncated \\u escape"))?;
+        lx.bump();
+        let d = (c as char)
+            .to_digit(16)
+            .ok_or_else(|| lx.err("bad hex digit in \\u escape"))?;
+        v = v * 16 + d;
+    }
+    Ok(v)
+}
+
+/// Decode string content from the cursor through the closing quote into
+/// `out`, one byte at a time — escape sequences and multi-byte UTF-8
+/// characters may arrive split across chunk seams; byte-wise decoding
+/// through [`Lexer::peek`]/[`Lexer::bump`] re-assembles them without the
+/// caller ever buffering more than the token itself. The opening quote
+/// (and any escape-free prefix a fast path already copied) must have
+/// been consumed.
+fn decode_string_rest<L: Lexer + ?Sized>(lx: &mut L, out: &mut String) -> Result<(), LexError> {
+    loop {
+        let b = lx.peek().ok_or_else(|| lx.err("unterminated string"))?;
+        lx.bump();
+        match b {
+            b'"' => return Ok(()),
+            b'\\' => {
+                let e = lx.peek().ok_or_else(|| lx.err("truncated escape"))?;
+                lx.bump();
+                match e {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let hi = hex4(lx)?;
+                        let c = if (0xD800..0xDC00).contains(&hi) {
+                            // Surrogate pair: a low surrogate must follow.
+                            if lx.peek() != Some(b'\\') {
+                                return Err(lx.err("expected low surrogate"));
+                            }
+                            lx.bump();
+                            if lx.peek() != Some(b'u') {
+                                return Err(lx.err("expected low surrogate"));
+                            }
+                            lx.bump();
+                            let lo = hex4(lx)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(lx.err("invalid low surrogate"));
+                            }
+                            char::from_u32(0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00))
+                        } else {
+                            char::from_u32(hi)
+                        };
+                        out.push(c.ok_or_else(|| lx.err("invalid codepoint"))?);
+                    }
+                    _ => return Err(lx.err("bad escape")),
+                }
+            }
+            b if b < 0x20 => return Err(lx.err("control character in string")),
+            b if b < 0x80 => out.push(b as char),
+            b => {
+                let width = utf8_width(b).ok_or_else(|| lx.err("invalid utf-8"))?;
+                let mut bytes = [b, 0, 0, 0];
+                for slot in bytes.iter_mut().take(width).skip(1) {
+                    let c = lx.peek().ok_or_else(|| lx.err("truncated utf-8"))?;
+                    lx.bump();
+                    *slot = c;
+                }
+                let s = std::str::from_utf8(&bytes[..width])
+                    .map_err(|_| lx.err("invalid utf-8"))?;
+                out.push_str(s);
+            }
+        }
+    }
+}
+
+/// Shared number grammar: `-?int(.frac)?([eE][+-]?exp)?` with at least
+/// one digit in every digit run. `sink` receives each accepted byte.
+fn scan_number<L, F>(lx: &mut L, mut sink: F) -> Result<(), LexError>
+where
+    L: Lexer + ?Sized,
+    F: FnMut(u8),
+{
+    if lx.peek() == Some(b'-') {
+        sink(b'-');
+        lx.bump();
+    }
+    let mut int_digits = 0usize;
+    while let Some(c) = lx.peek() {
+        if !c.is_ascii_digit() {
+            break;
+        }
+        sink(c);
+        lx.bump();
+        int_digits += 1;
+    }
+    if int_digits == 0 {
+        return Err(lx.err("bad number"));
+    }
+    if lx.peek() == Some(b'.') {
+        sink(b'.');
+        lx.bump();
+        let mut frac = 0usize;
+        while let Some(c) = lx.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            sink(c);
+            lx.bump();
+            frac += 1;
+        }
+        if frac == 0 {
+            return Err(lx.err("bad number: missing fraction digits"));
+        }
+    }
+    if matches!(lx.peek(), Some(b'e' | b'E')) {
+        sink(lx.peek().unwrap());
+        lx.bump();
+        if matches!(lx.peek(), Some(b'+' | b'-')) {
+            sink(lx.peek().unwrap());
+            lx.bump();
+        }
+        let mut exp = 0usize;
+        while let Some(c) = lx.peek() {
+            if !c.is_ascii_digit() {
+                break;
+            }
+            sink(c);
+            lx.bump();
+            exp += 1;
+        }
+        if exp == 0 {
+            return Err(lx.err("bad number: missing exponent digits"));
+        }
+    }
+    Ok(())
+}
+
+/// Zero-copy lexer over a complete byte slice.
+pub struct SliceLexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SliceLexer<'a> {
+    pub fn new(bytes: &'a [u8]) -> SliceLexer<'a> {
+        SliceLexer { bytes, pos: 0 }
+    }
+}
+
+impl<'a> Lexer for SliceLexer<'a> {
+    type Str = Cow<'a, str>;
+    type Num = &'a str;
+
+    fn peek(&mut self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) {
+        self.pos += 1;
+    }
+
+    fn offset(&self) -> usize {
+        self.pos
+    }
+
+    fn lex_string(&mut self) -> Result<Cow<'a, str>, LexError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.pos += 1;
+        let start = self.pos;
+        // Fast path: no escapes ⇒ borrow the content verbatim.
+        loop {
+            match self.bytes.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    self.pos += 1;
+                    return Ok(Cow::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(&c) if c < 0x20 => {
+                    return Err(self.err("control character in string"))
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+        // Slow path: copy the escape-free prefix, then decode the rest.
+        let mut s = String::with_capacity(self.pos - start + 16);
+        s.push_str(
+            std::str::from_utf8(&self.bytes[start..self.pos])
+                .map_err(|_| self.err("invalid utf-8"))?,
+        );
+        decode_string_rest(self, &mut s)?;
+        Ok(Cow::Owned(s))
+    }
+
+    fn lex_number(&mut self) -> Result<&'a str, LexError> {
+        let start = self.pos;
+        scan_number(self, |_| {})?;
+        // The accepted grammar is pure ASCII.
+        Ok(std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number"))
+    }
+}
+
+/// Incremental lexer over a fallible chunk stream.
+///
+/// Holds exactly one chunk at a time; a token spanning a seam is
+/// re-assembled into its own (token-sized) buffer. An I/O error from the
+/// stream reads as end-of-input and is latched in
+/// [`ChunkLexer::io_error`] so callers can distinguish a truncated
+/// stream from a clean one.
+pub struct ChunkLexer<I> {
+    chunks: I,
+    cur: Vec<u8>,
+    pos: usize,
+    consumed: usize,
+    peak_chunk: usize,
+    io_error: Option<String>,
+}
+
+impl<I> ChunkLexer<I>
+where
+    I: Iterator<Item = std::io::Result<Vec<u8>>>,
+{
+    pub fn new(chunks: I) -> ChunkLexer<I> {
+        ChunkLexer {
+            chunks,
+            cur: Vec::new(),
+            pos: 0,
+            consumed: 0,
+            peak_chunk: 0,
+            io_error: None,
+        }
+    }
+
+    /// Largest single chunk the stream has delivered — together with the
+    /// in-flight token this bounds the lexer's peak residency (the
+    /// "never materialize the body" guarantee: previous chunks are
+    /// dropped as soon as the cursor leaves them).
+    pub fn peak_chunk_bytes(&self) -> usize {
+        self.peak_chunk
+    }
+
+    /// The stream error that ended the input, if any. While set, the
+    /// lexer reports end-of-input.
+    pub fn io_error(&self) -> Option<&str> {
+        self.io_error.as_deref()
+    }
+
+    fn refill(&mut self) -> bool {
+        if self.io_error.is_some() {
+            return false;
+        }
+        while self.pos >= self.cur.len() {
+            match self.chunks.next() {
+                None => return false,
+                Some(Err(e)) => {
+                    self.io_error = Some(e.to_string());
+                    return false;
+                }
+                Some(Ok(c)) => {
+                    self.consumed += self.cur.len();
+                    self.peak_chunk = self.peak_chunk.max(c.len());
+                    self.cur = c;
+                    self.pos = 0;
+                }
+            }
+        }
+        true
+    }
+}
+
+impl<I> Lexer for ChunkLexer<I>
+where
+    I: Iterator<Item = std::io::Result<Vec<u8>>>,
+{
+    type Str = String;
+    type Num = String;
+
+    fn peek(&mut self) -> Option<u8> {
+        if !self.refill() {
+            return None;
+        }
+        Some(self.cur[self.pos])
+    }
+
+    fn bump(&mut self) {
+        self.pos += 1;
+    }
+
+    fn offset(&self) -> usize {
+        self.consumed + self.pos
+    }
+
+    fn lex_string(&mut self) -> Result<String, LexError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.bump();
+        let mut s = String::new();
+        decode_string_rest(self, &mut s)?;
+        Ok(s)
+    }
+
+    fn lex_number(&mut self) -> Result<String, LexError> {
+        let mut text = String::new();
+        // scan_number only feeds ASCII bytes, so the char cast is exact.
+        scan_number(self, |b| text.push(b as char))?;
+        Ok(text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type VecChunks = ChunkLexer<std::vec::IntoIter<std::io::Result<Vec<u8>>>>;
+
+    fn chunked(bytes: &[u8], at: &[usize]) -> VecChunks {
+        let mut chunks: Vec<std::io::Result<Vec<u8>>> = Vec::new();
+        let mut prev = 0;
+        for &p in at {
+            chunks.push(Ok(bytes[prev..p].to_vec()));
+            prev = p;
+        }
+        chunks.push(Ok(bytes[prev..].to_vec()));
+        ChunkLexer::new(chunks.into_iter())
+    }
+
+    #[test]
+    fn slice_lexer_borrows_unescaped_strings() {
+        let mut lx = SliceLexer::new(br#""plain text""#);
+        match lx.lex_string().unwrap() {
+            Cow::Borrowed(s) => assert_eq!(s, "plain text"),
+            Cow::Owned(_) => panic!("escape-free string must borrow"),
+        }
+    }
+
+    #[test]
+    fn slice_lexer_unescapes_when_needed() {
+        let src = r#""a\nbAé😀""#;
+        let mut lx = SliceLexer::new(src.as_bytes());
+        match lx.lex_string().unwrap() {
+            Cow::Owned(s) => assert_eq!(s, "a\nbAé😀"),
+            Cow::Borrowed(_) => panic!("escaped string must own"),
+        }
+    }
+
+    #[test]
+    fn number_text_is_preserved() {
+        for t in ["0", "-0", "42", "-3.5e2", "1e-7", "123456789123456789", "5E+3"] {
+            let mut lx = SliceLexer::new(t.as_bytes());
+            assert_eq!(lx.lex_number().unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn bad_numbers_rejected() {
+        for t in ["-", ".5", "1.", "1e", "1e+", "--1"] {
+            let mut lx = SliceLexer::new(t.as_bytes());
+            assert!(lx.lex_number().is_err(), "{t:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn chunk_lexer_survives_every_seam_position() {
+        // The canonical seam hazards: escape split, \u split, UTF-8
+        // split, number split. Cut the input at EVERY position.
+        let src = r#""a\néé" -12.5e-3 "日本""#.as_bytes();
+        for cut in 1..src.len() {
+            let mut lx = chunked(src, &[cut]);
+            assert_eq!(lx.lex_string().unwrap(), "a\néé", "cut={cut}");
+            lx.skip_ws();
+            assert_eq!(lx.lex_number().unwrap(), "-12.5e-3", "cut={cut}");
+            lx.skip_ws();
+            assert_eq!(lx.lex_string().unwrap(), "日本", "cut={cut}");
+            assert_eq!(lx.peek(), None);
+            assert!(lx.io_error().is_none());
+        }
+    }
+
+    #[test]
+    fn chunk_lexer_latches_io_errors() {
+        let chunks: Vec<std::io::Result<Vec<u8>>> = vec![
+            Ok(b"\"ab".to_vec()),
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "reset")),
+        ];
+        let mut lx = ChunkLexer::new(chunks.into_iter());
+        let err = lx.lex_string().unwrap_err();
+        assert!(err.msg.contains("unterminated"), "{err}");
+        assert!(lx.io_error().unwrap().contains("reset"));
+    }
+
+    #[test]
+    fn chunk_lexer_peak_is_one_chunk() {
+        // 10 chunks of ≤8 bytes: residency never exceeds one chunk.
+        let src = br#""hello world, this is a long-ish string""#;
+        let cuts: Vec<usize> = (1..src.len()).step_by(8).collect();
+        let mut lx = chunked(src, &cuts);
+        lx.lex_string().unwrap();
+        assert!(lx.peak_chunk_bytes() <= 8, "{}", lx.peak_chunk_bytes());
+    }
+
+    #[test]
+    fn literals_and_ws() {
+        let mut lx = SliceLexer::new(b"  \t\r\n true");
+        lx.skip_ws();
+        lx.expect_lit("true").unwrap();
+        assert_eq!(lx.peek(), None);
+        let mut lx = SliceLexer::new(b"tru");
+        assert!(lx.expect_lit("true").is_err());
+    }
+
+    #[test]
+    fn lone_low_surrogate_rejected() {
+        let mut lx = SliceLexer::new(br#""\udc00""#);
+        assert!(lx.lex_string().is_err());
+        let mut lx = SliceLexer::new(br#""\ud800x""#);
+        assert!(lx.lex_string().is_err());
+    }
+}

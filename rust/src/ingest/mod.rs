@@ -1,0 +1,34 @@
+//! Streaming corpus ingestion — online indexing without stealing the
+//! calibrated serving depth.
+//!
+//! The paper's deployment-cost model (Eqs. 9-10) prices a node by the
+//! concurrency its calibrated queue depths can hold; before this
+//! subsystem the repo could only *serve* a pre-built corpus, so every
+//! corpus change meant an offline rebuild, and a naive bulk-upload
+//! endpoint would have competed with latency-sensitive embed/retrieve
+//! traffic for exactly that depth. `ingest` is the missing first-class
+//! path:
+//!
+//! * [`lexer`] — zero-copy incremental JSON lexing over byte slices
+//!   (borrowing) and chunked byte streams (one-chunk residency), escape
+//!   and UTF-8 sequences intact across chunk seams.
+//! * [`ndjson`] — a lexer-generic parser ([`ndjson::parse_value`],
+//!   agreement with `util::json::parse` is property-tested) and the
+//!   NDJSON [`ndjson::DocStream`] of `{"id", "text"}` documents.
+//! * [`pipeline`] — parse → embed under the strictly-capped
+//!   `WorkClass::Ingest` (NPU valley soak first, CPU overflow second,
+//!   BUSY = backpressure to the upload socket) → batched
+//!   `RetrievalExecutor::add_batch` commits that bump the corpus version
+//!   so NPU mirrors invalidate.
+//!
+//! HTTP surface (see `crate::server`): `POST /v1/corpus` streams an
+//! NDJSON body (chunked transfer-encoding supported) through the
+//! pipeline; `GET /v1/ingest/status` reports the counters.
+
+pub mod lexer;
+pub mod ndjson;
+pub mod pipeline;
+
+pub use lexer::{ChunkLexer, LexError, Lexer, SliceLexer};
+pub use ndjson::{docs_from_chunks, parse_slice, parse_value, Doc, DocStream, Value};
+pub use pipeline::{ingest_ndjson_chunks, IngestOptions, IngestOutcome, IngestStats};

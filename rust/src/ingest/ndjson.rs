@@ -1,0 +1,410 @@
+//! Streaming NDJSON parsing over the incremental lexers.
+//!
+//! [`parse_value`] is a recursive-descent JSON parser generic over any
+//! [`Lexer`], producing a [`Value`] whose string/number payloads are the
+//! lexer's own token types: borrowed (`Cow`/`&str`) for [`SliceLexer`],
+//! owned for [`ChunkLexer`]. On every valid document it agrees with
+//! [`crate::util::json::parse`] — the [`Value::to_json`] bridge plus the
+//! property tests in `rust/tests/proptests.rs` pin that equivalence.
+//!
+//! [`DocStream`] turns a lexer into an iterator of corpus documents
+//! (`{"id": ..., "text": "..."}` per NDJSON line). Combined with a
+//! [`ChunkLexer`] over an HTTP body, an upload of any size parses with
+//! peak residency of one chunk plus one document.
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use super::lexer::{ChunkLexer, LexError, Lexer, SliceLexer};
+use crate::util::json::Json;
+
+/// Nesting bound: a hostile document must not overflow the parse stack.
+const MAX_DEPTH: usize = 128;
+
+/// A parsed JSON value, generic over string (`S`) and number-text (`N`)
+/// payloads. Number text is preserved verbatim; convert at the edge.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value<S, N> {
+    Null,
+    Bool(bool),
+    Num(N),
+    Str(S),
+    Arr(Vec<Value<S, N>>),
+    Obj(Vec<(S, Value<S, N>)>),
+}
+
+/// The zero-copy flavor: unescaped strings borrow from the input slice.
+pub type SliceValue<'a> = Value<Cow<'a, str>, &'a str>;
+/// The chunked flavor: payloads own their bytes.
+pub type OwnedValue = Value<String, String>;
+
+impl<S: AsRef<str>, N: AsRef<str>> Value<S, N> {
+    pub fn get(&self, key: &str) -> Option<&Value<S, N>> {
+        match self {
+            Value::Obj(kvs) => kvs.iter().find(|(k, _)| k.as_ref() == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s.as_ref()),
+            _ => None,
+        }
+    }
+
+    /// Number as f64 (via the preserved text, exactly like
+    /// `util::json::parse` converts).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => n.as_ref().parse().ok(),
+            _ => None,
+        }
+    }
+
+    /// Number as u64 — **exact** for integer text (no f64 round-trip, so
+    /// ids above 2^53 survive). Scientific/decimal notation is accepted
+    /// only when it denotes an exact, in-range, non-negative integer
+    /// (`1e3` → 1000); anything else is `None` rather than a silently
+    /// saturated/truncated cast — a negative or fractional ingest id
+    /// must be rejected, not remapped onto someone else's document.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) => n.as_ref().parse::<u64>().ok().or_else(|| {
+                let f = n.as_ref().parse::<f64>().ok()?;
+                // Exclusive upper bound: u64::MAX rounds UP to 2^64 as
+                // f64, which would saturate-cast back to u64::MAX and
+                // alias unrelated huge inputs onto one id.
+                if f >= 0.0 && f < u64::MAX as f64 && f.fract() == 0.0 {
+                    Some(f as u64)
+                } else {
+                    None
+                }
+            }),
+            _ => None,
+        }
+    }
+
+    /// Bridge into the in-repo DOM ([`crate::util::json::Json`]): the
+    /// value `util::json::parse` would have produced for the same text.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Null => Json::Null,
+            Value::Bool(b) => Json::Bool(*b),
+            Value::Num(n) => Json::Num(n.as_ref().parse().unwrap_or(f64::NAN)),
+            Value::Str(s) => Json::Str(s.as_ref().to_string()),
+            Value::Arr(items) => Json::Arr(items.iter().map(Value::to_json).collect()),
+            Value::Obj(kvs) => Json::Obj(
+                kvs.iter()
+                    .map(|(k, v)| (k.as_ref().to_string(), v.to_json()))
+                    .collect(),
+            ),
+        }
+    }
+}
+
+/// Parse one JSON value starting at the lexer's cursor (leading
+/// whitespace allowed; trailing input is left unconsumed).
+pub fn parse_value<L: Lexer>(lx: &mut L) -> Result<Value<L::Str, L::Num>, LexError> {
+    value_at_depth(lx, 0)
+}
+
+fn value_at_depth<L: Lexer>(
+    lx: &mut L,
+    depth: usize,
+) -> Result<Value<L::Str, L::Num>, LexError> {
+    if depth > MAX_DEPTH {
+        return Err(lx.err("nesting too deep"));
+    }
+    lx.skip_ws();
+    match lx.peek() {
+        None => Err(lx.err("unexpected end of input")),
+        Some(b'n') => lx.expect_lit("null").map(|_| Value::Null),
+        Some(b't') => lx.expect_lit("true").map(|_| Value::Bool(true)),
+        Some(b'f') => lx.expect_lit("false").map(|_| Value::Bool(false)),
+        Some(b'"') => lx.lex_string().map(Value::Str),
+        Some(b'[') => {
+            lx.bump();
+            let mut items = Vec::new();
+            lx.skip_ws();
+            if lx.peek() == Some(b']') {
+                lx.bump();
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                items.push(value_at_depth(lx, depth + 1)?);
+                lx.skip_ws();
+                match lx.peek() {
+                    Some(b',') => {
+                        lx.bump();
+                    }
+                    Some(b']') => {
+                        lx.bump();
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(lx.err("expected ',' or ']'")),
+                }
+            }
+        }
+        Some(b'{') => {
+            lx.bump();
+            let mut kvs = Vec::new();
+            lx.skip_ws();
+            if lx.peek() == Some(b'}') {
+                lx.bump();
+                return Ok(Value::Obj(kvs));
+            }
+            loop {
+                lx.skip_ws();
+                let key = lx.lex_string()?;
+                lx.skip_ws();
+                if lx.peek() != Some(b':') {
+                    return Err(lx.err("expected ':'"));
+                }
+                lx.bump();
+                let val = value_at_depth(lx, depth + 1)?;
+                kvs.push((key, val));
+                lx.skip_ws();
+                match lx.peek() {
+                    Some(b',') => {
+                        lx.bump();
+                    }
+                    Some(b'}') => {
+                        lx.bump();
+                        return Ok(Value::Obj(kvs));
+                    }
+                    _ => return Err(lx.err("expected ',' or '}'")),
+                }
+            }
+        }
+        Some(c) if c == b'-' || c.is_ascii_digit() => lx.lex_number().map(Value::Num),
+        Some(_) => Err(lx.err("unexpected character")),
+    }
+}
+
+/// Parse a complete document from a byte slice, zero-copy (unescaped
+/// strings borrow from `bytes`). Trailing whitespace is allowed;
+/// trailing data is an error — the whole-document twin of
+/// [`crate::util::json::parse`].
+pub fn parse_slice(bytes: &[u8]) -> Result<SliceValue<'_>, LexError> {
+    let mut lx = SliceLexer::new(bytes);
+    let v = parse_value(&mut lx)?;
+    lx.skip_ws();
+    if lx.peek().is_some() {
+        return Err(lx.err("trailing data"));
+    }
+    Ok(v)
+}
+
+/// One corpus document from an NDJSON ingest stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Doc {
+    pub id: u64,
+    /// Shared text payload: travels HTTP → queue → backend batch without
+    /// another copy.
+    pub text: Arc<str>,
+}
+
+/// Why one NDJSON line did not become a [`Doc`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum DocError {
+    /// Malformed JSON; the byte offset is absolute within the stream.
+    /// The stream cannot reliably resync past unbalanced quotes, so
+    /// parsing stops here.
+    Parse(LexError),
+    /// Valid JSON but not a `{"id": u64ish, "text": str}` document; the
+    /// stream continues with the next line.
+    Shape(String),
+}
+
+impl std::fmt::Display for DocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DocError::Parse(e) => write!(f, "{e}"),
+            DocError::Shape(m) => write!(f, "bad document: {m}"),
+        }
+    }
+}
+
+/// Extract the ingest document shape from a parsed value.
+fn doc_from_value<S: AsRef<str>, N: AsRef<str>>(v: &Value<S, N>) -> Result<Doc, DocError> {
+    let id = match v.get("id") {
+        Some(n @ Value::Num(_)) => n
+            .as_u64()
+            .ok_or_else(|| DocError::Shape("id is not a u64".into()))?,
+        // Accept string ids of digits (a common NDJSON export shape).
+        Some(Value::Str(s)) => s
+            .as_ref()
+            .parse::<u64>()
+            .map_err(|_| DocError::Shape(format!("id {:?} is not a u64", s.as_ref())))?,
+        Some(_) => return Err(DocError::Shape("id is not a number".into())),
+        None => return Err(DocError::Shape("missing \"id\"".into())),
+    };
+    let text = match v.get("text") {
+        Some(Value::Str(s)) => Arc::<str>::from(s.as_ref()),
+        Some(_) => return Err(DocError::Shape("\"text\" is not a string".into())),
+        None => return Err(DocError::Shape("missing \"text\"".into())),
+    };
+    Ok(Doc { id, text })
+}
+
+/// Streaming document reader: one `{"id", "text"}` object per NDJSON
+/// line (blank lines and extra whitespace tolerated). Documents are
+/// parsed and surrendered one at a time — the stream never holds more
+/// than the document under the cursor.
+pub struct DocStream<L> {
+    lx: L,
+    stopped: bool,
+}
+
+impl<L: Lexer> DocStream<L> {
+    pub fn new(lx: L) -> DocStream<L> {
+        DocStream { lx, stopped: false }
+    }
+
+    /// The underlying lexer (e.g. to read [`ChunkLexer::peak_chunk_bytes`]
+    /// after the stream is drained).
+    pub fn lexer(&self) -> &L {
+        &self.lx
+    }
+}
+
+impl<L: Lexer> Iterator for DocStream<L> {
+    type Item = Result<Doc, DocError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.stopped {
+            return None;
+        }
+        self.lx.skip_ws();
+        self.lx.peek()?;
+        match parse_value(&mut self.lx) {
+            Err(e) => {
+                // A JSON-level error leaves the cursor mid-token; there
+                // is no safe resync point, so the stream ends here.
+                self.stopped = true;
+                Some(Err(DocError::Parse(e)))
+            }
+            Ok(v) => Some(doc_from_value(&v)),
+        }
+    }
+}
+
+/// Convenience: stream documents straight off a chunked byte source.
+pub fn docs_from_chunks<I>(chunks: I) -> DocStream<ChunkLexer<I>>
+where
+    I: Iterator<Item = std::io::Result<Vec<u8>>>,
+{
+    DocStream::new(ChunkLexer::new(chunks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parses_like_util_json_on_a_nested_doc() {
+        let src = r#"{"a":[1,2,{"b":null}],"c":"x","n":-3.5e2,"t":true}"#;
+        let ours = parse_slice(src.as_bytes()).unwrap().to_json();
+        let theirs = json::parse(src).unwrap();
+        assert_eq!(ours, theirs);
+    }
+
+    #[test]
+    fn zero_copy_borrows_plain_strings() {
+        let src = r#"{"id": 7, "text": "no escapes here"}"#;
+        let v = parse_slice(src.as_bytes()).unwrap();
+        match v.get("text").unwrap() {
+            Value::Str(Cow::Borrowed(s)) => assert_eq!(*s, "no escapes here"),
+            other => panic!("expected borrowed text, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn number_text_survives_parsing() {
+        let v = parse_slice(b"[1e-7, 18446744073709551615]").unwrap();
+        match &v {
+            Value::Arr(items) => {
+                assert_eq!(items[0], Value::Num("1e-7"));
+                // u64::MAX round-trips exactly — no f64 mangling.
+                assert_eq!(items[1].as_u64(), Some(u64::MAX));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_what_util_json_rejects() {
+        for src in ["{", "[1,]", "tru", "\"abc", "1 2", "{\"a\" 1}", ""] {
+            assert!(parse_slice(src.as_bytes()).is_err(), "{src:?}");
+            assert!(json::parse(src).is_err(), "{src:?}");
+        }
+    }
+
+    #[test]
+    fn depth_bound_rejects_hostile_nesting() {
+        let hostile = "[".repeat(4096);
+        assert!(parse_slice(hostile.as_bytes()).is_err());
+    }
+
+    /// Review regression: negative, fractional, or astronomically large
+    /// ids must be rejected as bad documents — a saturating cast would
+    /// silently commit them under someone else's id (e.g. -1 → 0).
+    #[test]
+    fn non_u64_ids_are_rejected_not_remapped() {
+        for bad in ["-1", "2.7", "1e300", "-0.5"] {
+            let line = format!("{{\"id\":{bad},\"text\":\"x\"}}");
+            let mut s = DocStream::new(SliceLexer::new(line.as_bytes()));
+            match s.next().unwrap() {
+                Err(DocError::Shape(m)) => assert!(m.contains("u64"), "{bad}: {m}"),
+                other => panic!("{bad}: expected shape error, got {other:?}"),
+            }
+        }
+        // Exact-integer scientific/decimal notation is a legitimate id.
+        for (text, want) in [("1e3", 1000u64), ("1.5e1", 15)] {
+            let line = format!("{{\"id\":{text},\"text\":\"x\"}}");
+            let mut s = DocStream::new(SliceLexer::new(line.as_bytes()));
+            assert_eq!(s.next().unwrap().unwrap().id, want, "{text}");
+        }
+    }
+
+    #[test]
+    fn doc_stream_reads_ndjson_lines() {
+        let src = "{\"id\":1,\"text\":\"alpha\"}\n{\"id\":\"2\",\"text\":\"beta\"}\n\n  {\"text\":\"no id\"}\n{\"id\":4,\"text\":\"delta\"}";
+        let mut s = DocStream::new(SliceLexer::new(src.as_bytes()));
+        assert_eq!(
+            s.next().unwrap().unwrap(),
+            Doc { id: 1, text: Arc::from("alpha") }
+        );
+        assert_eq!(s.next().unwrap().unwrap().id, 2);
+        assert!(matches!(s.next().unwrap(), Err(DocError::Shape(_))));
+        assert_eq!(s.next().unwrap().unwrap().id, 4);
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn doc_stream_stops_at_parse_errors() {
+        let src = "{\"id\":1,\"text\":\"ok\"}\n{\"id\":2,\"text\":\"unterminated";
+        let mut s = DocStream::new(SliceLexer::new(src.as_bytes()));
+        assert!(s.next().unwrap().is_ok());
+        assert!(matches!(s.next().unwrap(), Err(DocError::Parse(_))));
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn chunked_doc_stream_equals_slice_doc_stream() {
+        let src = "{\"id\":1,\"text\":\"héllo\\nworld\"}\n{\"id\":2,\"text\":\"日本語テキスト\"}\n";
+        let want: Vec<Doc> = DocStream::new(SliceLexer::new(src.as_bytes()))
+            .map(|d| d.unwrap())
+            .collect();
+        let bytes = src.as_bytes();
+        for step in 1..=7usize {
+            let chunks: Vec<std::io::Result<Vec<u8>>> =
+                bytes.chunks(step).map(|c| Ok(c.to_vec())).collect();
+            let got: Vec<Doc> =
+                docs_from_chunks(chunks.into_iter()).map(|d| d.unwrap()).collect();
+            assert_eq!(got, want, "chunk step {step}");
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! The streaming ingestion pipeline: NDJSON chunks → zero-copy parse →
+//! admission-controlled embedding (`WorkClass::Ingest`) → batched
+//! commits into the live retrieval index.
+//!
+//! Flow per document (bounded memory, bounded CPU):
+//!
+//! 1. [`super::ndjson::DocStream`] over a [`super::lexer::ChunkLexer`]
+//!    parses the upload chunk-by-chunk — peak parse residency is one
+//!    chunk plus the document under the cursor, never the body.
+//! 2. Each document's text is submitted through
+//!    `WindVE::submit_ingest`, which admits it under the strictly-capped
+//!    `WorkClass::Ingest` (NPU valley first, CPU overflow second). BUSY
+//!    is *backpressure*, not failure: the pipeline sleeps and retries,
+//!    which stalls the upload socket and slows the client — admission
+//!    control propagated all the way to the producer.
+//! 3. Embedded documents accumulate into a commit batch;
+//!    `RetrievalExecutor::add_batch` appends them under one write lock
+//!    and advances the corpus version once per batch, so NPU mirrors
+//!    invalidate and concurrent scans see at most one barrier per
+//!    commit.
+//!
+//! A stream-level failure (socket died, malformed JSON) ends the stream
+//! but keeps everything already committed — ingestion is at-least-once
+//! per document, idempotent per id for the caller to manage.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::service::{ServeError, WindVE};
+use crate::util::json::Json;
+
+use super::ndjson::{docs_from_chunks, Doc, DocError};
+
+/// Tuning for one ingest stream.
+#[derive(Debug, Clone)]
+pub struct IngestOptions {
+    /// Documents per index commit (one write lock + one version window
+    /// per batch).
+    pub commit_batch: usize,
+    /// Sleep between admission retries while the ingest class is at its
+    /// cap (the backpressure wait).
+    pub busy_backoff: Duration,
+    /// Per-document budget covering admission retries + embedding; a doc
+    /// that cannot make it through in time is counted failed and the
+    /// stream moves on.
+    pub doc_timeout: Duration,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            commit_batch: 32,
+            busy_backoff: Duration::from_millis(2),
+            doc_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Service-lifetime ingest counters (all streams), surfaced by
+/// `GET /v1/ingest/status`.
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    received: AtomicU64,
+    indexed: AtomicU64,
+    failed: AtomicU64,
+    busy_waits: AtomicU64,
+    batches: AtomicU64,
+    streams: AtomicU64,
+    active_streams: AtomicU64,
+    peak_chunk_bytes: AtomicUsize,
+}
+
+impl IngestStats {
+    /// Fold a finished stream's outcome into the service-wide counters.
+    fn absorb(&self, o: &IngestOutcome) {
+        self.received.fetch_add(o.received, Ordering::Relaxed);
+        self.indexed.fetch_add(o.indexed, Ordering::Relaxed);
+        self.failed.fetch_add(o.failed, Ordering::Relaxed);
+        self.busy_waits.fetch_add(o.busy_waits, Ordering::Relaxed);
+        self.batches.fetch_add(o.batches, Ordering::Relaxed);
+        self.streams.fetch_add(1, Ordering::Relaxed);
+        self.peak_chunk_bytes.fetch_max(o.peak_chunk_bytes, Ordering::Relaxed);
+    }
+
+    /// Point-in-time JSON snapshot (plus the caller-supplied live corpus
+    /// version so operators can reconcile indexed counts against it).
+    pub fn to_json(&self, corpus_version: Option<u64>) -> Json {
+        Json::obj(vec![
+            ("docs_received", Json::num(self.received.load(Ordering::Relaxed) as f64)),
+            ("docs_indexed", Json::num(self.indexed.load(Ordering::Relaxed) as f64)),
+            ("docs_failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("busy_waits", Json::num(self.busy_waits.load(Ordering::Relaxed) as f64)),
+            ("batches_committed", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("streams_completed", Json::num(self.streams.load(Ordering::Relaxed) as f64)),
+            (
+                "active_streams",
+                Json::num(self.active_streams.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "peak_chunk_bytes",
+                Json::num(self.peak_chunk_bytes.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "corpus_version",
+                match corpus_version {
+                    Some(v) => Json::num(v as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn docs_indexed(&self) -> u64 {
+        self.indexed.load(Ordering::Relaxed)
+    }
+
+    pub fn docs_received(&self) -> u64 {
+        self.received.load(Ordering::Relaxed)
+    }
+}
+
+/// What one ingest stream accomplished.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IngestOutcome {
+    /// Documents parsed off the stream (incl. ones that later failed).
+    pub received: u64,
+    /// Documents embedded and committed into the live index.
+    pub indexed: u64,
+    /// Documents dropped: bad shape, embed failure, or timeout.
+    pub failed: u64,
+    /// Admission BUSY retries absorbed (backpressure events).
+    pub busy_waits: u64,
+    /// Index commits performed.
+    pub batches: u64,
+    /// Corpus version after the final commit.
+    pub corpus_version: u64,
+    /// Largest chunk the parser ever held (one-chunk residency proof).
+    pub peak_chunk_bytes: usize,
+    /// Stream-level error that ended ingestion early (parse error, dead
+    /// socket, no index attached); per-doc failures are only counted.
+    pub error: Option<String>,
+}
+
+impl IngestOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("received", Json::num(self.received as f64)),
+            ("indexed", Json::num(self.indexed as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("busy_waits", Json::num(self.busy_waits as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("corpus_version", Json::num(self.corpus_version as f64)),
+            ("peak_chunk_bytes", Json::num(self.peak_chunk_bytes as f64)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::str(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Ingest an NDJSON chunk stream into `svc`'s attached retrieval index.
+///
+/// Blocking: runs on the caller's thread (for the HTTP front end that is
+/// the connection handler, so admission backpressure stalls the upload
+/// socket instead of buffering). Returns when the stream is drained or a
+/// stream-level error ends it.
+pub fn ingest_ndjson_chunks<I>(svc: &WindVE, chunks: I, opts: &IngestOptions) -> IngestOutcome
+where
+    I: Iterator<Item = std::io::Result<Vec<u8>>>,
+{
+    let stats = svc.ingest_stats();
+    stats.active_streams.fetch_add(1, Ordering::Relaxed);
+    let outcome = run_stream(svc, chunks, opts);
+    stats.absorb(&outcome);
+    stats.active_streams.fetch_sub(1, Ordering::Relaxed);
+    outcome
+}
+
+fn run_stream<I>(svc: &WindVE, chunks: I, opts: &IngestOptions) -> IngestOutcome
+where
+    I: Iterator<Item = std::io::Result<Vec<u8>>>,
+{
+    let mut out = IngestOutcome::default();
+    let exec = match svc.retrieval() {
+        Some(e) => e,
+        None => {
+            out.error = Some("no retrieval index attached to ingest into".into());
+            return out;
+        }
+    };
+    let commit_batch = opts.commit_batch.max(1);
+    let mut stream = docs_from_chunks(chunks);
+    let mut batch: Vec<Doc> = Vec::with_capacity(commit_batch);
+    loop {
+        let next = stream.next();
+        match next {
+            Some(Ok(doc)) => {
+                out.received += 1;
+                batch.push(doc);
+                if batch.len() >= commit_batch {
+                    commit(svc, &exec, &mut batch, opts, &mut out);
+                }
+            }
+            Some(Err(DocError::Shape(m))) => {
+                out.received += 1;
+                out.failed += 1;
+                log::debug!("ingest: dropping document: {m}");
+            }
+            Some(Err(DocError::Parse(e))) => {
+                out.error = Some(e.to_string());
+                break;
+            }
+            None => {
+                if let Some(io) = stream.lexer().io_error() {
+                    out.error = Some(format!("stream error: {io}"));
+                }
+                break;
+            }
+        }
+    }
+    commit(svc, &exec, &mut batch, opts, &mut out);
+    out.peak_chunk_bytes = stream.lexer().peak_chunk_bytes();
+    out.corpus_version = exec.version();
+    out
+}
+
+/// Embed one commit batch through ingest admission and append it to the
+/// live index under a single write lock.
+fn commit(
+    svc: &WindVE,
+    exec: &crate::devices::executor::RetrievalExecutor,
+    batch: &mut Vec<Doc>,
+    opts: &IngestOptions,
+    out: &mut IngestOutcome,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let dim = exec.dim();
+    // Submit the whole batch before waiting: admitted documents embed
+    // concurrently up to the ingest caps.
+    let mut tickets = Vec::with_capacity(batch.len());
+    for doc in batch.drain(..) {
+        let deadline = Instant::now() + opts.doc_timeout;
+        let ticket = loop {
+            match svc.submit_ingest(Arc::clone(&doc.text)) {
+                Ok(t) => break Some(t),
+                Err(ServeError::Busy) => {
+                    out.busy_waits += 1;
+                    if Instant::now() >= deadline {
+                        break None;
+                    }
+                    std::thread::sleep(opts.busy_backoff);
+                }
+                Err(_) => break None,
+            }
+        };
+        tickets.push((doc, ticket));
+    }
+    let mut rows: Vec<(u64, Vec<f32>)> = Vec::with_capacity(tickets.len());
+    for (doc, ticket) in tickets {
+        match ticket.map(|t| t.wait(opts.doc_timeout)) {
+            Some(Ok(v)) if v.len() == dim => rows.push((doc.id, v)),
+            Some(Ok(v)) => {
+                out.failed += 1;
+                log::warn!(
+                    "ingest: doc {} embedding dim {} != index dim {dim}; dropped",
+                    doc.id,
+                    v.len()
+                );
+            }
+            _ => out.failed += 1,
+        }
+    }
+    if !rows.is_empty() {
+        out.indexed += rows.len() as u64;
+        out.batches += 1;
+        exec.add_batch(&rows);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok_chunks(src: &str, step: usize) -> Vec<std::io::Result<Vec<u8>>> {
+        src.as_bytes().chunks(step).map(|c| Ok(c.to_vec())).collect()
+    }
+
+    #[test]
+    fn outcome_json_has_the_operator_fields() {
+        let o = IngestOutcome {
+            received: 3,
+            indexed: 2,
+            failed: 1,
+            corpus_version: 7,
+            ..IngestOutcome::default()
+        };
+        let j = o.to_json();
+        assert_eq!(j.get("received").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("indexed").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("corpus_version").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("error").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn stats_absorb_and_snapshot() {
+        let s = IngestStats::default();
+        s.absorb(&IngestOutcome {
+            received: 10,
+            indexed: 9,
+            failed: 1,
+            busy_waits: 4,
+            batches: 2,
+            peak_chunk_bytes: 512,
+            ..IngestOutcome::default()
+        });
+        s.absorb(&IngestOutcome { peak_chunk_bytes: 128, ..IngestOutcome::default() });
+        let j = s.to_json(Some(9));
+        assert_eq!(j.get("docs_received").unwrap().as_u64(), Some(10));
+        assert_eq!(j.get("docs_indexed").unwrap().as_u64(), Some(9));
+        assert_eq!(j.get("streams_completed").unwrap().as_u64(), Some(2));
+        // fetch_max: the larger stream's chunk bound wins.
+        assert_eq!(j.get("peak_chunk_bytes").unwrap().as_u64(), Some(512));
+        assert_eq!(j.get("corpus_version").unwrap().as_u64(), Some(9));
+    }
+
+    // End-to-end pipeline tests (live service + live index) run in
+    // coordinator::service tests and rust/tests/server_http.rs, where a
+    // service with workers exists; here we only cover the stream-error
+    // path that needs no service plumbing.
+    #[test]
+    fn chunk_helper_shapes_are_sane() {
+        let chunks = ok_chunks("{\"id\":1,\"text\":\"a\"}\n", 5);
+        assert!(chunks.len() > 1);
+    }
+}

@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod devices;
 pub mod estimator;
+pub mod ingest;
 pub mod metrics;
 pub mod repro;
 pub mod runtime;

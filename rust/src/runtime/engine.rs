@@ -110,8 +110,10 @@ impl EmbeddingEngine {
 
     /// Embed up to `max_batch()` texts; returns one unit-norm `d_model`
     /// vector per text. Chunks internally if the batch exceeds the largest
-    /// exported bucket.
-    pub fn embed(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    /// exported bucket. Generic over the text storage (`String`,
+    /// `Arc<str>`, `&str`) so the serving path's shared `Arc<str>`
+    /// payloads reach tokenization without a copy.
+    pub fn embed<S: AsRef<str>>(&mut self, texts: &[S]) -> Result<Vec<Vec<f32>>> {
         if texts.is_empty() {
             return Ok(Vec::new());
         }
@@ -123,11 +125,11 @@ impl EmbeddingEngine {
         Ok(out)
     }
 
-    fn embed_chunk(&mut self, texts: &[String]) -> Result<Vec<Vec<f32>>> {
+    fn embed_chunk<S: AsRef<str>>(&mut self, texts: &[S]) -> Result<Vec<Vec<f32>>> {
         let vocab = self.entry.config.vocab_size;
         let need_seq = texts
             .iter()
-            .map(|t| tokenizer::token_count(t))
+            .map(|t| tokenizer::token_count(t.as_ref()))
             .max()
             .unwrap_or(1)
             .min(self.entry.max_bucket_seq());
@@ -150,7 +152,7 @@ impl EmbeddingEngine {
         let mut ids = vec![tokenizer::PAD_ID; bb * ss];
         let mut mask = vec![0.0f32; bb * ss];
         for (i, text) in texts.iter().enumerate() {
-            let e = tokenizer::encode(text, vocab, ss);
+            let e = tokenizer::encode(text.as_ref(), vocab, ss);
             ids[i * ss..(i + 1) * ss].copy_from_slice(&e.ids);
             mask[i * ss..(i + 1) * ss].copy_from_slice(&e.mask);
         }

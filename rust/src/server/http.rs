@@ -1,11 +1,32 @@
-//! HTTP/1.1 request parsing and response serialisation (no framework).
+//! HTTP/1.1 connection handling: incremental head parsing, keep-alive,
+//! and streaming bodies (Content-Length and chunked Transfer-Encoding) —
+//! still no framework.
+//!
+//! [`Conn`] owns the per-connection read buffer. Three properties the
+//! serving path relies on:
+//!
+//! * **Linear head scan** — the `\r\n\r\n` search never rescans bytes it
+//!   has already rejected: only the last 3 bytes of previously scanned
+//!   data plus the new read are examined, so a slow-trickling client
+//!   costs O(head) total instead of O(head²).
+//! * **Keep-alive correctness** — bytes read past one message (the next
+//!   pipelined request) stay in the connection buffer instead of being
+//!   truncated, and responses advertise `keep-alive` when the client
+//!   asked for it (bounded by the server's per-connection request
+//!   limit).
+//! * **Streaming bodies** — [`Conn::body`] yields the body as a sequence
+//!   of byte chunks without materializing it; `POST /v1/corpus` feeds
+//!   them straight into the ingest parser. [`Conn::read_body_string`]
+//!   collects them for the small-bodied endpoints, bounded by
+//!   [`MAX_BODY`].
 
 use std::collections::HashMap;
 use std::io::Read;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-/// A parsed HTTP request.
+/// A parsed HTTP request with a materialized body (the small-endpoint
+/// shape; streaming endpoints work from [`Head`] + [`Conn::body`]).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
@@ -14,73 +35,341 @@ pub struct Request {
     pub body: String,
 }
 
-/// Maximum request size we accept (embedding batches are small).
-const MAX_BODY: usize = 4 * 1024 * 1024;
+/// Maximum materialized request size (embedding batches are small;
+/// corpus uploads stream and are not subject to this).
+pub const MAX_BODY: usize = 4 * 1024 * 1024;
 const MAX_HEAD: usize = 64 * 1024;
+/// Socket read granularity — also the unit the streaming body hands out,
+/// so one ingest "chunk" is at most this many bytes.
+const READ_CHUNK: usize = 16 * 1024;
 
-/// Read a full request from the stream (blocking, Content-Length framed).
-pub fn read_request(stream: &mut impl Read) -> Result<Request> {
-    let mut buf = Vec::with_capacity(1024);
-    let mut chunk = [0u8; 4096];
-    let head_end;
-    loop {
-        let n = stream.read(&mut chunk)?;
-        if n == 0 {
-            bail!("connection closed mid-request");
-        }
-        buf.extend_from_slice(&chunk[..n]);
-        if let Some(pos) = find_head_end(&buf) {
-            head_end = pos;
-            break;
-        }
-        if buf.len() > MAX_HEAD {
-            bail!("headers too large");
-        }
-    }
-
-    let head = std::str::from_utf8(&buf[..head_end])?;
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or_default();
-    let mut parts = request_line.split_whitespace();
-    let method = parts.next().unwrap_or_default().to_string();
-    let path = parts.next().unwrap_or_default().to_string();
-    if method.is_empty() || path.is_empty() {
-        bail!("malformed request line: {request_line:?}");
-    }
-
-    let mut headers = HashMap::new();
-    for line in lines {
-        if let Some((k, v)) = line.split_once(':') {
-            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
-        }
-    }
-
-    let content_len: usize = headers
-        .get("content-length")
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0);
-    if content_len > MAX_BODY {
-        bail!("body too large ({content_len} bytes)");
-    }
-    let mut body = buf[head_end + 4..].to_vec();
-    while body.len() < content_len {
-        let n = stream.read(&mut chunk)?;
-        if n == 0 {
-            bail!("connection closed mid-body");
-        }
-        body.extend_from_slice(&chunk[..n]);
-    }
-    body.truncate(content_len);
-    Ok(Request {
-        method,
-        path,
-        headers,
-        body: String::from_utf8(body)?,
-    })
+/// Request line + headers (no body yet).
+#[derive(Debug, Clone)]
+pub struct Head {
+    pub method: String,
+    pub path: String,
+    pub headers: HashMap<String, String>,
+    /// True for HTTP/1.1 (keep-alive by default) and anything newer.
+    pub http11: bool,
 }
 
-fn find_head_end(buf: &[u8]) -> Option<usize> {
-    buf.windows(4).position(|w| w == b"\r\n\r\n")
+impl Head {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    /// Parsed Content-Length. **Errors** (rather than defaulting to
+    /// "no body") when the header is present but unparsable — treating
+    /// `Content-Length: 99999999999999999999999` or `5, 5` as an empty
+    /// body would leave the real body bytes in the connection buffer to
+    /// be reparsed as the next keep-alive request (request smuggling);
+    /// RFC 9112 requires rejecting the message instead.
+    pub fn content_length(&self) -> Result<Option<usize>> {
+        match self.headers.get("content-length") {
+            None => Ok(None),
+            Some(v) => match v.trim().parse::<usize>() {
+                Ok(n) => Ok(Some(n)),
+                Err(_) => bail!("unparsable Content-Length {v:?}"),
+            },
+        }
+    }
+
+    /// `Transfer-Encoding: chunked` (takes precedence over
+    /// Content-Length per RFC 9112 §6.3).
+    pub fn chunked(&self) -> bool {
+        self.headers
+            .get("transfer-encoding")
+            .map(|v| v.to_ascii_lowercase().contains("chunked"))
+            .unwrap_or(false)
+    }
+
+    /// Whether the client wants the connection kept open after this
+    /// exchange: explicit `Connection` header first, else the HTTP
+    /// version default (1.1 keeps, 1.0 closes).
+    pub fn wants_keep_alive(&self) -> bool {
+        match self.headers.get("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// One connection's buffered reader: requests are parsed off the front,
+/// and anything read past the current message waits for the next one.
+pub struct Conn<S> {
+    stream: S,
+    buf: Vec<u8>,
+    /// Prefix of `buf` already known not to contain the head terminator
+    /// (minus a 3-byte overlap) — the incremental-scan cursor.
+    scanned: usize,
+}
+
+impl<S: Read> Conn<S> {
+    pub fn new(stream: S) -> Conn<S> {
+        Conn { stream, buf: Vec::with_capacity(1024), scanned: 0 }
+    }
+
+    /// The underlying stream (for writing responses).
+    pub fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Pull more bytes from the socket into the buffer. Ok(0) = EOF.
+    fn fill(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; READ_CHUNK];
+        let n = self.stream.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    /// Read the next request head. `Ok(None)` on a clean EOF before any
+    /// byte of a new request (the peer closed an idle keep-alive
+    /// connection).
+    pub fn read_head(&mut self) -> Result<Option<Head>> {
+        let head_end = loop {
+            // Scan only the unscanned tail (plus a 3-byte overlap for a
+            // terminator split across reads) — the O(n²) fix.
+            if let Some(pos) = find_head_end_from(&self.buf, self.scanned) {
+                break pos;
+            }
+            self.scanned = self.buf.len().saturating_sub(3);
+            if self.buf.len() > MAX_HEAD {
+                bail!("headers too large");
+            }
+            if self.fill()? == 0 {
+                if self.buf.is_empty() {
+                    return Ok(None);
+                }
+                bail!("connection closed mid-request");
+            }
+        };
+
+        let head_str = std::str::from_utf8(&self.buf[..head_end])?;
+        let mut lines = head_str.split("\r\n");
+        let request_line = lines.next().unwrap_or_default();
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or_default().to_string();
+        let path = parts.next().unwrap_or_default().to_string();
+        let version = parts.next().unwrap_or("HTTP/1.1");
+        if method.is_empty() || path.is_empty() {
+            bail!("malformed request line: {request_line:?}");
+        }
+        let http11 = version != "HTTP/1.0";
+        let mut headers = HashMap::new();
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+            }
+        }
+        // Consume the head; pipelined bytes stay buffered for the body
+        // reader (or the next request).
+        self.buf.drain(..head_end + 4);
+        self.scanned = 0;
+        Ok(Some(Head { method, path, headers, http11 }))
+    }
+
+    /// Streaming reader for `head`'s body. Must be driven to completion
+    /// (`next_chunk` until `Ok(None)`) before the connection can carry
+    /// another request. **Errors** on unframeable messages (unparsable
+    /// Content-Length, a Transfer-Encoding other than chunked): the
+    /// caller must respond 400 and close — guessing a framing would
+    /// desynchronize the keep-alive stream.
+    pub fn body<'c>(&'c mut self, head: &Head) -> Result<BodyReader<'c, S>> {
+        let framing = if let Some(te) = head.header("transfer-encoding") {
+            let last = te.to_ascii_lowercase();
+            let last = last.split(',').map(str::trim).next_back();
+            if last == Some("chunked") {
+                Framing::ChunkSize
+            } else {
+                bail!("unsupported Transfer-Encoding {te:?}");
+            }
+        } else {
+            match head.content_length()? {
+                Some(n) if n > 0 => Framing::Length { remaining: n },
+                _ => Framing::Done,
+            }
+        };
+        Ok(BodyReader { conn: self, framing })
+    }
+
+    /// Materialize `head`'s body as a UTF-8 string, bounded by
+    /// [`MAX_BODY`].
+    pub fn read_body_string(&mut self, head: &Head) -> Result<String> {
+        if let Some(n) = head.content_length()? {
+            if !head.chunked() && n > MAX_BODY {
+                bail!("body too large ({n} bytes)");
+            }
+        }
+        let mut out: Vec<u8> = Vec::new();
+        let mut body = self.body(head)?;
+        while let Some(chunk) = body.next_chunk()? {
+            out.extend_from_slice(&chunk);
+            if out.len() > MAX_BODY {
+                bail!("body too large");
+            }
+        }
+        Ok(String::from_utf8(out)?)
+    }
+
+    /// Take up to `n` buffered bytes off the front (filling once from
+    /// the socket if the buffer is empty). Ok(empty) = EOF.
+    fn take_upto(&mut self, n: usize) -> std::io::Result<Vec<u8>> {
+        if self.buf.is_empty() && self.fill()? == 0 {
+            return Ok(Vec::new());
+        }
+        let take = n.min(self.buf.len()).min(READ_CHUNK);
+        Ok(self.buf.drain(..take).collect())
+    }
+
+    /// Read one CRLF-terminated line (for chunk-size lines and
+    /// trailers), bounded to keep a hostile peer from ballooning the
+    /// buffer.
+    fn read_crlf_line(&mut self) -> Result<String> {
+        let mut from = 0usize;
+        loop {
+            if let Some(pos) = self
+                .buf
+                .windows(2)
+                .skip(from.saturating_sub(1))
+                .position(|w| w == b"\r\n")
+            {
+                let pos = pos + from.saturating_sub(1);
+                let line = String::from_utf8(self.buf[..pos].to_vec())?;
+                self.buf.drain(..pos + 2);
+                self.scanned = 0;
+                return Ok(line);
+            }
+            from = self.buf.len();
+            if self.buf.len() > MAX_HEAD {
+                bail!("chunk framing line too long");
+            }
+            if self.fill()? == 0 {
+                bail!("connection closed mid-chunk-framing");
+            }
+        }
+    }
+}
+
+/// Body framing state for [`BodyReader`].
+enum Framing {
+    /// Content-Length framed: this many bytes left.
+    Length { remaining: usize },
+    /// Chunked: expecting a chunk-size line next.
+    ChunkSize,
+    /// Chunked: inside a chunk's data.
+    ChunkData { remaining: usize },
+    /// Fully consumed.
+    Done,
+}
+
+/// Streaming body: yields the payload as byte chunks of at most
+/// `READ_CHUNK` bytes, decoding chunked transfer-encoding on the fly.
+/// Also an `Iterator<Item = io::Result<Vec<u8>>>`, the shape
+/// `crate::ingest::ChunkLexer` consumes.
+pub struct BodyReader<'c, S: Read> {
+    conn: &'c mut Conn<S>,
+    framing: Framing,
+}
+
+impl<S: Read> BodyReader<'_, S> {
+    /// Next piece of the decoded payload; `Ok(None)` when the body is
+    /// fully consumed (trailers included, for chunked bodies).
+    pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>> {
+        loop {
+            match self.framing {
+                Framing::Done => return Ok(None),
+                Framing::Length { remaining } => {
+                    let piece = self.conn.take_upto(remaining)?;
+                    if piece.is_empty() {
+                        bail!("connection closed mid-body");
+                    }
+                    let left = remaining - piece.len();
+                    self.framing = if left == 0 {
+                        Framing::Done
+                    } else {
+                        Framing::Length { remaining: left }
+                    };
+                    return Ok(Some(piece));
+                }
+                Framing::ChunkSize => {
+                    let line = self.conn.read_crlf_line()?;
+                    // Strip chunk extensions ("SIZE;ext=val").
+                    let size_str = line.split(';').next().unwrap_or("").trim();
+                    let size = usize::from_str_radix(size_str, 16)
+                        .map_err(|_| anyhow!("bad chunk size {size_str:?}"))?;
+                    if size == 0 {
+                        // Trailer section: lines until the empty one.
+                        loop {
+                            if self.conn.read_crlf_line()?.is_empty() {
+                                break;
+                            }
+                        }
+                        self.framing = Framing::Done;
+                        return Ok(None);
+                    }
+                    self.framing = Framing::ChunkData { remaining: size };
+                }
+                Framing::ChunkData { remaining } => {
+                    let piece = self.conn.take_upto(remaining)?;
+                    if piece.is_empty() {
+                        bail!("connection closed mid-chunk");
+                    }
+                    let left = remaining - piece.len();
+                    if left == 0 {
+                        // The CRLF that closes every chunk.
+                        let crlf = self.conn.read_crlf_line()?;
+                        if !crlf.is_empty() {
+                            bail!("chunk data overran its declared size");
+                        }
+                        self.framing = Framing::ChunkSize;
+                    } else {
+                        self.framing = Framing::ChunkData { remaining: left };
+                    }
+                    return Ok(Some(piece));
+                }
+            }
+        }
+    }
+}
+
+impl<S: Read> Iterator for BodyReader<'_, S> {
+    type Item = std::io::Result<Vec<u8>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.next_chunk() {
+            Ok(Some(c)) => Some(Ok(c)),
+            Ok(None) => None,
+            Err(e) => {
+                self.framing = Framing::Done;
+                Some(Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    e.to_string(),
+                )))
+            }
+        }
+    }
+}
+
+/// One-shot convenience (and the historic API): read a single request,
+/// materializing its body.
+pub fn read_request(stream: &mut impl Read) -> Result<Request> {
+    let mut conn = Conn::new(stream);
+    let head = conn
+        .read_head()?
+        .ok_or_else(|| anyhow!("connection closed mid-request"))?;
+    let body = conn.read_body_string(&head)?;
+    Ok(Request { method: head.method, path: head.path, headers: head.headers, body })
+}
+
+/// Find `\r\n\r\n` scanning only from `from` onwards (callers pass the
+/// high-water mark of previous scans minus the 3-byte overlap).
+fn find_head_end_from(buf: &[u8], from: usize) -> Option<usize> {
+    if buf.len() < 4 {
+        return None;
+    }
+    let from = from.min(buf.len() - 1);
+    buf[from..].windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + from)
 }
 
 /// An HTTP response.
@@ -125,12 +414,20 @@ impl Response {
         }
     }
 
+    /// Serialize closing the connection (the historic behavior).
     pub fn serialize(&self) -> String {
+        self.serialize_with(false)
+    }
+
+    /// Serialize with an explicit connection disposition: `keep-alive`
+    /// lets the client reuse the connection for its next request.
+    pub fn serialize_with(&self, keep_alive: bool) -> String {
         format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
             self.status,
             self.reason,
             self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
             self.body
         )
     }
@@ -179,13 +476,145 @@ mod tests {
         assert!(read_request(&mut Cursor::new(raw.as_bytes())).is_err());
     }
 
+    /// The keep-alive satellite: bytes past the first message are the
+    /// next request, not garbage to truncate.
+    #[test]
+    fn pipelined_requests_survive_in_the_conn_buffer() {
+        let raw = "POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nabcGET /b HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let h1 = conn.read_head().unwrap().unwrap();
+        assert_eq!(h1.path, "/a");
+        assert_eq!(conn.read_body_string(&h1).unwrap(), "abc");
+        let h2 = conn.read_head().unwrap().unwrap();
+        assert_eq!(h2.path, "/b");
+        assert_eq!(conn.read_body_string(&h2).unwrap(), "");
+        // Clean EOF between requests.
+        assert!(conn.read_head().unwrap().is_none());
+    }
+
+    #[test]
+    fn keep_alive_defaults_follow_http_version() {
+        let mk = |line: &str, conn_header: Option<&str>| {
+            let mut headers = HashMap::new();
+            if let Some(c) = conn_header {
+                headers.insert("connection".to_string(), c.to_string());
+            }
+            Head {
+                method: "GET".into(),
+                path: "/".into(),
+                headers,
+                http11: line != "HTTP/1.0",
+            }
+        };
+        assert!(mk("HTTP/1.1", None).wants_keep_alive());
+        assert!(!mk("HTTP/1.0", None).wants_keep_alive());
+        assert!(mk("HTTP/1.0", Some("keep-alive")).wants_keep_alive());
+        assert!(!mk("HTTP/1.1", Some("close")).wants_keep_alive());
+    }
+
+    #[test]
+    fn chunked_body_decodes_across_reads() {
+        let raw = "POST /v1/corpus HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                   4\r\nWiki\r\n7\r\npedia i\r\nB\r\nn chunks.\r\n\r\n0\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        assert!(head.chunked());
+        let body = conn.read_body_string(&head).unwrap();
+        assert_eq!(body, "Wikipedia in chunks.\r\n");
+    }
+
+    #[test]
+    fn chunked_body_streams_as_iterator() {
+        let raw = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                   3\r\nabc\r\n3\r\ndef\r\n0\r\n\r\nGET /next HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        let pieces: Vec<Vec<u8>> = conn.body(&head).unwrap().map(|c| c.unwrap()).collect();
+        let flat: Vec<u8> = pieces.into_iter().flatten().collect();
+        assert_eq!(flat, b"abcdef");
+        // The next pipelined request is intact after the chunked body.
+        let h2 = conn.read_head().unwrap().unwrap();
+        assert_eq!(h2.path, "/next");
+    }
+
+    /// The smuggling fix: an unparsable Content-Length (or a
+    /// Transfer-Encoding we cannot decode) is a framing error, never
+    /// "no body" — otherwise the body bytes would be reparsed as the
+    /// next keep-alive request.
+    #[test]
+    fn unframeable_messages_error_instead_of_desyncing() {
+        let raw = "POST /v1/embed HTTP/1.1\r\nContent-Length: 18446744073709551616\r\n\r\nGET /smuggled HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        assert!(head.content_length().is_err());
+        assert!(conn.read_body_string(&head).is_err());
+
+        let raw = "POST / HTTP/1.1\r\nContent-Length: 5, 5\r\n\r\nhello";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        assert!(conn.body(&head).is_err());
+
+        let raw = "POST / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\nxxxx";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        assert!(conn.body(&head).is_err());
+
+        // `Transfer-Encoding: gzip, chunked` is decodable framing-wise
+        // (chunked is the outermost/last coding).
+        let raw = "POST / HTTP/1.1\r\nTransfer-Encoding: gzip, chunked\r\n\r\n3\r\nabc\r\n0\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        assert_eq!(conn.read_body_string(&head).unwrap(), "abc");
+    }
+
+    #[test]
+    fn chunked_rejects_bad_size_lines() {
+        let raw = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\nabc\r\n0\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        assert!(conn.read_body_string(&head).is_err());
+    }
+
+    #[test]
+    fn head_scan_is_incremental_across_tiny_reads() {
+        // A reader that trickles one byte per read: correctness of the
+        // tail-window scan (the perf satellite's behavior contract).
+        struct OneByte<'a>(&'a [u8], usize);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let raw = b"GET /slow HTTP/1.1\r\nX-Long: aaaaaaaaaaaaaaaaaaaaaaaaaaaaaa\r\n\r\n";
+        let mut conn = Conn::new(OneByte(raw, 0));
+        let head = conn.read_head().unwrap().unwrap();
+        assert_eq!(head.path, "/slow");
+        assert_eq!(head.header("x-long").unwrap().len(), 30);
+    }
+
     #[test]
     fn response_serialises_with_content_length() {
         let r = Response::ok_json(crate::util::json::Json::Bool(true));
         let s = r.serialize();
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(s.contains("Content-Length: 4"));
+        assert!(s.contains("Connection: close"));
         assert!(s.ends_with("true"));
+        let k = r.serialize_with(true);
+        assert!(k.contains("Connection: keep-alive"));
     }
 
     #[test]

@@ -1,13 +1,43 @@
-//! Minimal HTTP/1.1 front end (std::net + in-repo thread pool).
+//! HTTP/1.1 front end (std::net + in-repo thread pool), keep-alive and
+//! streaming-ingest aware.
 //!
-//! Endpoints:
-//! * `POST /v1/embed` — body `{"texts": ["...", ...]}`; each text goes
-//!   through Algorithm 1 admission independently; response carries the
-//!   route per text. Full-queue rejection maps to **503** with
-//!   `{"error":"busy"}` — the paper's 'busy' status.
+//! # Endpoints
+//!
+//! * `POST /v1/embed` — body `{"texts": ["...", ...]}` (or
+//!   `{"text": "..."}`); each text goes through Algorithm 1 admission
+//!   independently; the response carries the route per text. Full-queue
+//!   rejection maps to **503** `{"error":"busy"}` — the paper's 'busy'
+//!   status. Texts are parsed zero-copy and submitted as shared
+//!   `Arc<str>` payloads (no per-hop clone).
+//! * `POST /v1/corpus` — **streaming NDJSON ingest**: one
+//!   `{"id": <u64>, "text": "..."}` document per line, with chunked
+//!   `Transfer-Encoding` supported (and encouraged — uploads of any
+//!   size parse at one-chunk residency; the body is never materialized).
+//!   Documents embed through the strictly-capped `WorkClass::Ingest`
+//!   (see `coordinator::queue_manager`: shared-pool accounting + a hard
+//!   per-pool cap means bulk uploads can never oversubscribe the
+//!   calibrated depth or starve Embed/Retrieve; admission BUSY becomes
+//!   socket backpressure) and commit in batches to the live index,
+//!   bumping the corpus version so NPU mirrors invalidate. Response:
+//!   `{"received", "indexed", "failed", "busy_waits", "batches",
+//!   "corpus_version", "peak_chunk_bytes", "error"}`. Requires an
+//!   attached retrieval index.
+//! * `GET /v1/ingest/status` — service-lifetime ingest counters
+//!   (`docs_received/indexed/failed`, `busy_waits`,
+//!   `batches_committed`, `streams_completed`, `active_streams`,
+//!   `peak_chunk_bytes`, `corpus_version`).
 //! * `GET /healthz` — liveness.
 //! * `GET /metrics` — metrics registry snapshot (JSON).
-//! * `GET /stats` — queue depths/occupancy + route counters.
+//! * `GET /stats` — queue depths/occupancy + route counters for all
+//!   three work classes (embed / retrieve / ingest, both device legs).
+//!
+//! # Connection handling
+//!
+//! Connections are **keep-alive** (HTTP/1.1 default, `Connection`
+//! header respected) up to [`MAX_REQUESTS_PER_CONN`] requests; bytes
+//! read past one message stay buffered for the next. A request whose
+//! body errors mid-stream closes the connection (the only safe framing
+//! recovery).
 
 pub mod http;
 
@@ -20,9 +50,14 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::service::{ServeError, WindVE};
-use crate::util::json::{self, Json};
+use crate::ingest::{self, IngestOptions};
+use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
-use http::{Request, Response};
+use http::{Conn, Head, Response};
+
+/// Bounded keep-alive: one connection serves at most this many requests
+/// before the server closes it (resource rotation under slow clients).
+pub const MAX_REQUESTS_PER_CONN: usize = 128;
 
 /// Running HTTP server handle.
 pub struct Server {
@@ -88,26 +123,74 @@ impl Drop for Server {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<()> {
+/// Serve one connection: keep-alive loop with the per-connection
+/// request bound. Returns when the peer closes, a framing error forces
+/// a close, or the bound is reached.
+fn handle_connection(stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;
     stream.set_nodelay(true)?;
-    let req = match http::read_request(&mut stream) {
-        Ok(r) => r,
-        Err(e) => {
-            let resp = Response::bad_request(&format!("{e:#}"));
-            let _ = stream.write_all(resp.serialize().as_bytes());
+    let mut conn = Conn::new(stream);
+    for served in 0..MAX_REQUESTS_PER_CONN {
+        let head = match conn.read_head() {
+            Ok(Some(h)) => h,
+            Ok(None) => return Ok(()), // clean keep-alive close
+            Err(e) => {
+                // An idle keep-alive peer that never sends another
+                // request times out here: close silently. Anything else
+                // is a malformed head worth a 400.
+                let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                    matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                });
+                if !timed_out {
+                    let resp = Response::bad_request(&format!("{e:#}"));
+                    let _ = conn.stream_mut().write_all(resp.serialize_with(false).as_bytes());
+                }
+                return Ok(());
+            }
+        };
+        let keep = head.wants_keep_alive() && served + 1 < MAX_REQUESTS_PER_CONN;
+
+        // The streaming endpoint drives the body itself — never
+        // materialized, so it bypasses the read_body_string path.
+        if head.method == "POST" && head.path == "/v1/corpus" {
+            let (resp, body_ok) = corpus_endpoint(&mut conn, &head, svc);
+            let keep = keep && body_ok;
+            conn.stream_mut().write_all(resp.serialize_with(keep).as_bytes())?;
+            if !keep {
+                return Ok(());
+            }
+            continue;
+        }
+
+        let body = match conn.read_body_string(&head) {
+            Ok(b) => b,
+            Err(e) => {
+                // Framing is unknown past an aborted body: must close.
+                let resp = Response::bad_request(&format!("{e:#}"));
+                let _ = conn.stream_mut().write_all(resp.serialize_with(false).as_bytes());
+                return Ok(());
+            }
+        };
+        let resp = route(&head, &body, svc, slo);
+        conn.stream_mut().write_all(resp.serialize_with(keep).as_bytes())?;
+        if !keep {
             return Ok(());
         }
-    };
-    let resp = route(&req, svc, slo);
-    stream.write_all(resp.serialize().as_bytes())?;
+    }
     Ok(())
 }
 
-fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
+fn route(head: &Head, body: &str, svc: &WindVE, slo: Duration) -> Response {
+    match (head.method.as_str(), head.path.as_str()) {
         ("GET", "/healthz") => Response::ok_json(Json::obj(vec![("ok", Json::Bool(true))])),
         ("GET", "/metrics") => Response::ok_json(svc.metrics.snapshot()),
+        ("GET", "/v1/ingest/status") => {
+            let version = svc.retrieval().map(|e| e.version());
+            Response::ok_json(svc.ingest_stats().to_json(version))
+        }
         ("GET", "/stats") => {
             let qm = svc.queue_manager();
             let stats = qm.stats();
@@ -122,10 +205,14 @@ fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
                 ("cpu_occupancy", Json::num(qm.cpu_occupancy() as f64)),
                 ("embed_cpu_occupancy", Json::num(qm.embed_cpu_occupancy() as f64)),
                 ("retrieve_cpu_occupancy", Json::num(qm.retrieve_cpu_occupancy() as f64)),
+                ("ingest_cpu_occupancy", Json::num(qm.ingest_cpu_occupancy() as f64)),
                 ("retrieve_cap", Json::num(qm.retrieve_cap() as f64)),
+                ("ingest_cap", Json::num(qm.ingest_cap() as f64)),
                 ("embed_npu_occupancy", Json::num(qm.embed_npu_occupancy() as f64)),
                 ("retrieve_npu_occupancy", Json::num(qm.retrieve_npu_occupancy() as f64)),
+                ("ingest_npu_occupancy", Json::num(qm.ingest_npu_occupancy() as f64)),
                 ("npu_retrieve_cap", Json::num(qm.npu_retrieve_cap() as f64)),
+                ("npu_ingest_cap", Json::num(qm.npu_ingest_cap() as f64)),
                 ("hetero", Json::Bool(qm.hetero())),
                 ("routed_npu", Json::num(stats.routed_npu as f64)),
                 ("routed_cpu", Json::num(stats.routed_cpu as f64)),
@@ -134,28 +221,65 @@ fn route(req: &Request, svc: &WindVE, slo: Duration) -> Response {
                 ("rejected_retrieve", Json::num(stats.rejected_retrieve as f64)),
                 ("routed_retrieve_npu", Json::num(stats.routed_retrieve_npu as f64)),
                 ("rejected_retrieve_npu", Json::num(stats.rejected_retrieve_npu as f64)),
+                ("routed_ingest", Json::num(stats.routed_ingest as f64)),
+                ("rejected_ingest", Json::num(stats.rejected_ingest as f64)),
+                ("routed_ingest_npu", Json::num(stats.routed_ingest_npu as f64)),
+                ("rejected_ingest_npu", Json::num(stats.rejected_ingest_npu as f64)),
                 ("retrieval_poisoned_recoveries", Json::num(poisoned as f64)),
                 ("bad_releases", Json::num(stats.bad_releases as f64)),
             ]))
         }
-        ("POST", "/v1/embed") => embed_endpoint(req, svc, slo),
+        ("POST", "/v1/embed") => embed_endpoint(body, svc, slo),
         _ => Response::not_found(),
     }
 }
 
-fn embed_endpoint(req: &Request, svc: &WindVE, slo: Duration) -> Response {
-    let body = match json::parse(&req.body) {
+/// Streaming corpus ingest. Returns the response plus whether the body
+/// was consumed to a clean framing boundary (a mid-body failure means
+/// the connection cannot be reused).
+fn corpus_endpoint(conn: &mut Conn<TcpStream>, head: &Head, svc: &WindVE) -> (Response, bool) {
+    let body = match conn.body(head) {
         Ok(b) => b,
+        // Unframeable message: nothing was consumed — 400 and close.
+        Err(e) => return (Response::bad_request(&format!("{e:#}")), false),
+    };
+    let outcome = ingest::ingest_ndjson_chunks(svc, body, &IngestOptions::default());
+    match &outcome.error {
+        // A stream-level error may have left the body half-read.
+        Some(e) => {
+            let msg = format!("ingest aborted: {e} ({})", summary(&outcome));
+            (Response::bad_request(&msg), false)
+        }
+        None => (Response::ok_json(outcome.to_json()), true),
+    }
+}
+
+fn summary(o: &ingest::IngestOutcome) -> String {
+    format!("{} received, {} indexed, {} failed", o.received, o.indexed, o.failed)
+}
+
+/// `POST /v1/embed`: parse with the zero-copy parser and submit each
+/// text by `Arc<str>` — the only copy is input bytes → shared payload
+/// (escape-free strings are borrowed straight from the body until that
+/// point; no intermediate `String` per text).
+fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration) -> Response {
+    use crate::ingest::ndjson::{parse_slice, Value};
+
+    let parsed = match parse_slice(body.as_bytes()) {
+        Ok(v) => v,
         Err(e) => return Response::bad_request(&format!("bad json: {e}")),
     };
-    let texts: Vec<String> = if let Some(arr) = body.get("texts").and_then(|t| t.as_arr()) {
-        arr.iter()
-            .filter_map(|t| t.as_str().map(|s| s.to_string()))
-            .collect()
-    } else if let Some(t) = body.get("text").and_then(Json::as_str) {
-        vec![t.to_string()]
-    } else {
-        return Response::bad_request("expected {\"texts\": [...]} or {\"text\": \"...\"}");
+    let texts: Vec<Arc<str>> = match (parsed.get("texts"), parsed.get("text")) {
+        (Some(Value::Arr(items)), _) => items
+            .iter()
+            .filter_map(|t| t.as_str().map(Arc::<str>::from))
+            .collect(),
+        (None, Some(Value::Str(s))) => vec![Arc::<str>::from(s.as_ref())],
+        _ => {
+            return Response::bad_request(
+                "expected {\"texts\": [...]} or {\"text\": \"...\"}",
+            )
+        }
     };
     if texts.is_empty() {
         return Response::bad_request("no texts");
@@ -164,7 +288,7 @@ fn embed_endpoint(req: &Request, svc: &WindVE, slo: Duration) -> Response {
     // Admit all texts first (each is one Algorithm-1 query), then wait.
     let mut tickets = Vec::with_capacity(texts.len());
     for t in &texts {
-        match svc.submit(t.clone()) {
+        match svc.submit(Arc::clone(t)) {
             Ok(ticket) => tickets.push(ticket),
             Err(ServeError::Busy) => {
                 // Busy any → reject the whole request with 'busy' status

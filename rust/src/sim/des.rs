@@ -16,11 +16,17 @@
 //! [`QueueManager::dispatch_class`] admission (or bypass it — the
 //! pre-admission baseline), and the sim records the peak combined CPU
 //! occupancy so oversubscription is measurable either way.
+//!
+//! The ingest-load axis ([`OpenLoopSim::run_mixed_ingest`]) adds the
+//! third class: a bulk-upload storm of `WorkClass::Ingest` embeds with
+//! strict per-pool caps and the NPU valley-soak policy, proving that
+//! simultaneous bulk indexing + query serving stays inside the
+//! calibrated depths (the streaming-ingest acceptance scenario).
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::coordinator::queue_manager::{QueueManager, Route, WorkClass};
+use crate::coordinator::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::profile::DeviceProfile;
 use crate::metrics::Histogram;
 use crate::util::rng::Pcg;
@@ -98,6 +104,33 @@ impl Default for RetrievalLoad {
     }
 }
 
+/// Ingest side of a mixed scenario — the bulk-upload storm axis.
+/// Ingest is always admission-metered (`WorkClass::Ingest` has no
+/// unaccounted baseline: the class exists *because* of accounting), so
+/// rejections here model the backpressure waits the real pipeline
+/// absorbs by retrying against the upload socket.
+#[derive(Debug, Clone)]
+pub struct IngestLoad {
+    /// CPU/NPU cost units one ingest embed holds while it runs.
+    pub cost: usize,
+    /// Virtual service time of one ingest embed, seconds.
+    pub service_time: f64,
+    /// Ingest's strict cap within the CPU pool (≤ cpu_depth; 0 = leg off).
+    pub cap: usize,
+    /// Ingest's strict cap within the NPU pool (≤ npu_depth; 0 = leg off).
+    pub npu_cap: usize,
+    /// Valley gate mirror of `ServiceConfig::ingest_low_water`: the NPU
+    /// leg is tried only while embed-side NPU occupancy is ≤ this
+    /// fraction of `npu_depth`.
+    pub low_water: f64,
+}
+
+impl Default for IngestLoad {
+    fn default() -> Self {
+        IngestLoad { cost: 1, service_time: 0.0, cap: 0, npu_cap: 0, low_water: 0.25 }
+    }
+}
+
 /// Results of [`OpenLoopSim::run_mixed`].
 pub struct MixedStats {
     /// The embedding side, same accounting as [`OpenLoopSim::run`].
@@ -108,6 +141,16 @@ pub struct MixedStats {
     pub retrieve_served_npu: u64,
     /// Scans declined by admission (always 0 in baseline mode).
     pub retrieve_rejected: u64,
+    pub ingest_arrived: u64,
+    pub ingest_served: u64,
+    /// Ingest embeds absorbed by the NPU valley leg (⊆ `ingest_served`).
+    pub ingest_served_npu: u64,
+    /// Ingest units declined at admission — the backpressure events the
+    /// real pipeline turns into socket stalls.
+    pub ingest_rejected: u64,
+    /// Peak combined ingest occupancy (both pools) — must never exceed
+    /// the configured ingest caps.
+    pub peak_ingest_cost: usize,
     /// Peak of embed CPU slots + retrieval slot-cost over the run — the
     /// acceptance metric: ≤ `cpu_depth` under admission.
     pub peak_cpu_cost: usize,
@@ -181,21 +224,44 @@ impl OpenLoopSim {
         embed_arrivals: &[f64],
         retrieve_arrivals: &[f64],
     ) -> MixedStats {
+        self.run_mixed_ingest(load, &IngestLoad::default(), embed_arrivals, retrieve_arrivals, &[])
+    }
+
+    /// [`OpenLoopSim::run_mixed`] plus the **ingest-load axis**: a third
+    /// arrival stream of bulk-upload embeds admitted under
+    /// `WorkClass::Ingest` (strict per-pool caps, NPU valley policy
+    /// mirroring `WindVE::submit_ingest`). The acceptance probe extends
+    /// to all three classes: peak combined Embed+Retrieve+Ingest cost
+    /// per pool must stay at or under the calibrated depth — queries
+    /// keep their depth under a bulk-upload storm.
+    pub fn run_mixed_ingest(
+        &self,
+        load: &RetrievalLoad,
+        ingest: &IngestLoad,
+        embed_arrivals: &[f64],
+        retrieve_arrivals: &[f64],
+        ingest_arrivals: &[f64],
+    ) -> MixedStats {
         let hetero = self.cpu.is_some();
         let cpu_pool = if hetero { self.cpu_depth } else { 0 };
-        let qm = QueueManager::with_class_caps(
+        let qm = QueueManager::with_caps(
             self.npu_depth,
             cpu_pool,
             hetero,
-            load.cap,
-            load.npu_cap.min(self.npu_depth),
+            ClassCaps {
+                retrieve: load.cap,
+                npu_retrieve: load.npu_cap,
+                ingest: ingest.cap,
+                npu_ingest: ingest.npu_cap,
+            },
         );
         let mut rng = Pcg::new(self.seed);
 
         // Event heap keyed by (time, seq, tag) — seq breaks ties
         // deterministically. Tags: 0 embed arrival, 1 NPU done, 2 CPU
         // done, 3 retrieve arrival, 4 CPU scan done, 5 NPU (offloaded)
-        // scan done.
+        // scan done, 6 ingest arrival, 7 CPU ingest done, 8 NPU ingest
+        // done.
         let mut heap: BinaryHeap<Reverse<(u64, u64, u8)>> = BinaryHeap::new();
         let to_key = |t: f64| (t * 1e9) as u64;
         let mut seq = 0u64;
@@ -212,6 +278,9 @@ impl OpenLoopSim {
         for &t in retrieve_arrivals {
             push(&mut heap, t, 3, &mut seq);
         }
+        for &t in ingest_arrivals {
+            push(&mut heap, t, 6, &mut seq);
+        }
 
         let mut npu_q: VecDeque<f64> = VecDeque::new(); // enqueue times
         let mut cpu_q: VecDeque<f64> = VecDeque::new();
@@ -225,6 +294,9 @@ impl OpenLoopSim {
         let mut retr_inflight: usize = 0;
         // Offloaded scan cost in flight on the NPU leg (admission only).
         let mut retr_npu_inflight: usize = 0;
+        // Ingest cost units in flight per pool.
+        let mut ingest_inflight: usize = 0;
+        let mut ingest_npu_inflight: usize = 0;
 
         // Mirror the service's admission clamp (coordinator/service.rs):
         // a scan whose cost exceeds the whole retrieval budget holds the
@@ -238,6 +310,9 @@ impl OpenLoopSim {
         };
         // Same clamp on the NPU leg's budget.
         let npu_scan_cost = load.cost.clamp(1, qm.npu_retrieve_cap().max(1));
+        // Ingest mirrors the same clamp against its own caps.
+        let ingest_cost = ingest.cost.clamp(1, qm.ingest_cap().max(1));
+        let npu_ingest_cost = ingest.cost.clamp(1, qm.npu_ingest_cap().max(1));
 
         let mut stats = MixedStats {
             embed: SimStats {
@@ -253,6 +328,11 @@ impl OpenLoopSim {
             retrieve_served: 0,
             retrieve_served_npu: 0,
             retrieve_rejected: 0,
+            ingest_arrived: 0,
+            ingest_served: 0,
+            ingest_served_npu: 0,
+            ingest_rejected: 0,
+            peak_ingest_cost: 0,
             peak_cpu_cost: 0,
             peak_npu_cost: 0,
             peak_admitted_cost: 0,
@@ -365,14 +445,51 @@ impl OpenLoopSim {
                     retr_npu_inflight = retr_npu_inflight.saturating_sub(npu_scan_cost);
                     qm.release_class(WorkClass::Retrieve, Route::Npu, npu_scan_cost);
                 }
+                6 => {
+                    stats.ingest_arrived += 1;
+                    // Valley policy (mirrors WindVE::submit_ingest): the
+                    // NPU leg only while embed-side NPU occupancy is at
+                    // or below the ingest low-water mark; CPU leg
+                    // otherwise. A declined unit is a backpressure event
+                    // (the real pipeline retries; the sim counts).
+                    let low = ingest.low_water * self.npu_depth as f64;
+                    let try_npu = ingest.npu_cap > 0
+                        && qm.embed_npu_occupancy() as f64 <= low;
+                    if try_npu && qm.dispatch_ingest_npu(npu_ingest_cost) == Route::Npu {
+                        ingest_npu_inflight += npu_ingest_cost;
+                        push(&mut heap, now + ingest.service_time, 8, &mut seq);
+                    } else if ingest.cap > 0
+                        && qm.dispatch_class(WorkClass::Ingest, ingest_cost) == Route::Cpu
+                    {
+                        ingest_inflight += ingest_cost;
+                        push(&mut heap, now + ingest.service_time, 7, &mut seq);
+                    } else {
+                        stats.ingest_rejected += 1;
+                    }
+                }
+                7 => {
+                    stats.ingest_served += 1;
+                    ingest_inflight = ingest_inflight.saturating_sub(ingest_cost);
+                    qm.release_class(WorkClass::Ingest, Route::Cpu, ingest_cost);
+                }
+                8 => {
+                    stats.ingest_served += 1;
+                    stats.ingest_served_npu += 1;
+                    ingest_npu_inflight = ingest_npu_inflight.saturating_sub(npu_ingest_cost);
+                    qm.release_class(WorkClass::Ingest, Route::Npu, npu_ingest_cost);
+                }
                 _ => unreachable!(),
             }
             // Oversubscription probe at every event instant: per pool,
-            // embed slots + scan slot-cost against the calibrated depth.
-            let combined_cpu = qm.embed_cpu_occupancy() + retr_inflight;
-            let combined_npu = qm.embed_npu_occupancy() + retr_npu_inflight;
+            // embed slots + scan slot-cost + ingest cost against the
+            // calibrated depth.
+            let combined_cpu = qm.embed_cpu_occupancy() + retr_inflight + ingest_inflight;
+            let combined_npu =
+                qm.embed_npu_occupancy() + retr_npu_inflight + ingest_npu_inflight;
             stats.peak_cpu_cost = stats.peak_cpu_cost.max(combined_cpu);
             stats.peak_npu_cost = stats.peak_npu_cost.max(combined_npu);
+            stats.peak_ingest_cost =
+                stats.peak_ingest_cost.max(ingest_inflight + ingest_npu_inflight);
             stats.peak_admitted_cost =
                 stats.peak_admitted_cost.max(combined_cpu + combined_npu);
             if combined_cpu > cpu_pool || combined_npu > self.npu_depth {
@@ -677,6 +794,116 @@ mod tests {
         assert_eq!(a.peak_cpu_cost, b.peak_cpu_cost);
         assert_eq!(a.peak_npu_cost, b.peak_npu_cost);
         assert_eq!(a.peak_admitted_cost, b.peak_admitted_cost);
+        assert_eq!(a.oversub_events, b.oversub_events);
+        assert_eq!(a.embed.reject_rate().to_bits(), b.embed.reject_rate().to_bits());
+    }
+
+    /// The ingest-load axis acceptance scenario: a bulk-upload storm
+    /// runs alongside embed+retrieve traffic and (1) never pushes either
+    /// pool past its calibrated depth, (2) never holds more than its
+    /// strict caps, and (3) leaves the serving classes' outcomes
+    /// untouched when its caps fit in the pool slack — queries keep
+    /// their depth under the storm.
+    #[test]
+    fn ingest_storm_keeps_query_depths() {
+        let s = sim(true); // npu 44 / cpu 8
+        // Serving traffic: light embeds (never overflow the NPU, so the
+        // CPU pool is scans+ingest only) and scans holding ≤ 4 CPU
+        // units. With retrieve cap 4 + ingest cap 2 ≤ pool 8, the
+        // serving classes never contend with the storm — which makes
+        // "queries keep their depth" checkable bit-for-bit.
+        let embeds: Vec<f64> = (0..50).map(|i| i as f64 * 0.5).collect();
+        let scans: Vec<f64> = (0..20).map(|i| 0.01 + i as f64 * 0.2).collect();
+        let retrieval = RetrievalLoad {
+            cost: 2,
+            service_time: 0.3,
+            cap: 4,
+            ..RetrievalLoad::default()
+        };
+        // The storm: ingest every 10 ms for 4 s, each unit holding 1 CPU
+        // cost unit for 100 ms — ~10 units of steady-state demand against
+        // a strict cap of 2.
+        let storm: Vec<f64> = (0..400).map(|i| i as f64 * 0.01).collect();
+        let ingest = IngestLoad {
+            cost: 1,
+            service_time: 0.1,
+            cap: 2,
+            ..IngestLoad::default()
+        };
+
+        let quiet = s.run_mixed(&retrieval, &embeds, &scans);
+        let stormy = s.run_mixed_ingest(&retrieval, &ingest, &embeds, &scans, &storm);
+
+        // (1) Depths hold; the probe never fires.
+        assert!(stormy.peak_cpu_cost <= stormy.cpu_depth, "{}", stormy.peak_cpu_cost);
+        assert!(stormy.peak_npu_cost <= stormy.npu_depth, "{}", stormy.peak_npu_cost);
+        assert_eq!(stormy.oversub_events, 0);
+        // (2) The strict cap binds: ingest soaks at most 2 units and the
+        // over-demand shows up as backpressure, not oversubscription.
+        assert!(stormy.peak_ingest_cost <= 2, "{}", stormy.peak_ingest_cost);
+        assert_eq!(stormy.ingest_arrived, 400);
+        assert!(stormy.ingest_served > 0);
+        assert!(stormy.ingest_rejected > 0, "a 10x-over-cap storm must backpressure");
+        assert_eq!(stormy.ingest_served + stormy.ingest_rejected, stormy.ingest_arrived);
+        // (3) Caps (retrieve 4 + ingest 2) fit inside the pool of 8, so
+        // serving traffic is bit-for-bit what it was without the storm.
+        assert_eq!(stormy.embed.served(), quiet.embed.served());
+        assert_eq!(stormy.embed.rejected, quiet.embed.rejected);
+        assert_eq!(stormy.retrieve_served, quiet.retrieve_served);
+        assert_eq!(stormy.retrieve_rejected, quiet.retrieve_rejected);
+    }
+
+    /// The valley-soak leg: an idle NPU absorbs ingest; an embed-busy
+    /// NPU pushes it to the CPU leg (or backpressure).
+    #[test]
+    fn ingest_valley_soak_defers_to_embedding_traffic() {
+        let mut s = sim(true);
+        s.npu_depth = 8;
+        let ingest = IngestLoad {
+            cost: 1,
+            service_time: 0.2,
+            cap: 0,        // no CPU leg: the NPU valley is the only path
+            npu_cap: 4,
+            low_water: 0.0, // only a fully embed-idle NPU
+        };
+        // Idle NPU: the storm soaks the valley.
+        let uploads: Vec<f64> = (0..4).map(|i| i as f64 * 0.01).collect();
+        let idle = s.run_mixed_ingest(&RetrievalLoad::default(), &ingest, &[], &[], &uploads);
+        assert_eq!(idle.ingest_served_npu, 4);
+        assert_eq!(idle.ingest_rejected, 0);
+        assert!(idle.peak_npu_cost <= 8);
+        // Embed burst in flight: the same uploads are pushed out.
+        let embeds = vec![0.0; 8];
+        let busy = s.run_mixed_ingest(
+            &RetrievalLoad::default(),
+            &ingest,
+            &embeds,
+            &[],
+            &[0.1, 0.15],
+        );
+        assert_eq!(busy.ingest_served_npu, 0);
+        assert_eq!(busy.ingest_rejected, 2);
+        assert_eq!(busy.oversub_events, 0);
+    }
+
+    /// Ingest runs stay bit-for-bit reproducible per seed.
+    #[test]
+    fn ingest_axis_determinism_bit_for_bit() {
+        let s = sim(true);
+        let embeds: Vec<f64> = (0..80).map(|i| i as f64 * 0.03).collect();
+        let scans: Vec<f64> = (0..15).map(|i| 0.02 + i as f64 * 0.15).collect();
+        let storm: Vec<f64> = (0..120).map(|i| i as f64 * 0.015).collect();
+        let retrieval =
+            RetrievalLoad { cost: 2, service_time: 0.2, cap: 4, ..RetrievalLoad::default() };
+        let ingest = IngestLoad { cost: 1, service_time: 0.1, cap: 2, npu_cap: 4, low_water: 0.5 };
+        let a = s.run_mixed_ingest(&retrieval, &ingest, &embeds, &scans, &storm);
+        let b = s.run_mixed_ingest(&retrieval, &ingest, &embeds, &scans, &storm);
+        assert_eq!(a.ingest_served, b.ingest_served);
+        assert_eq!(a.ingest_served_npu, b.ingest_served_npu);
+        assert_eq!(a.ingest_rejected, b.ingest_rejected);
+        assert_eq!(a.peak_ingest_cost, b.peak_ingest_cost);
+        assert_eq!(a.peak_cpu_cost, b.peak_cpu_cost);
+        assert_eq!(a.peak_npu_cost, b.peak_npu_cost);
         assert_eq!(a.oversub_events, b.oversub_events);
         assert_eq!(a.embed.reject_rate().to_bits(), b.embed.reject_rate().to_bits());
     }

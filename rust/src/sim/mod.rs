@@ -15,4 +15,4 @@ pub mod cluster;
 pub mod des;
 
 pub use cluster::{ClosedLoopSim, RoundResult};
-pub use des::{MixedStats, OpenLoopSim, RetrievalLoad, SimStats};
+pub use des::{IngestLoad, MixedStats, OpenLoopSim, RetrievalLoad, SimStats};

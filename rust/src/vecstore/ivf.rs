@@ -49,6 +49,23 @@ pub struct IvfIndex {
     lists: Vec<InvList>,
     built: bool,
     len: usize,
+    /// Online-rebalance trigger: when post-build adds push
+    /// `max list size / mean list size` past this ratio, the next
+    /// [`Index::add_batch`] re-trains and re-assigns in place
+    /// (0.0 disables — the default, matching historic behavior).
+    rebalance_threshold: f64,
+    /// Seed for online re-trains (fixed so streaming rebuilds are
+    /// deterministic for a given add sequence).
+    rebalance_seed: u64,
+    /// Completed online rebalances (observability).
+    rebalances: u64,
+    /// Hysteresis for the auto trigger: when a retrain cannot bring the
+    /// skew under the threshold (inherently clustered data), this holds
+    /// the achieved skew × margin, and the next retrain only fires once
+    /// skew exceeds it — without this, every subsequent `add_batch`
+    /// would re-run a full O(n·k) retrain under the executor's write
+    /// lock for nothing.
+    retrigger_skew: f64,
 }
 
 /// One unit of batched scan work: probe `cell` for query `qi`, with the
@@ -77,7 +94,62 @@ impl IvfIndex {
             lists: Vec::new(),
             built: false,
             len: 0,
+            rebalance_threshold: 0.0,
+            rebalance_seed: 0x1f5,
+            rebalances: 0,
+            retrigger_skew: 0.0,
         }
+    }
+
+    /// Enable online list rebalancing: when a post-build [`Index::add_batch`]
+    /// leaves `max/mean` list size above `ratio`, the index re-trains its
+    /// coarse quantizer and re-assigns every row in place (the ROADMAP's
+    /// streaming-IVF hook — skewed streams stop degrading probe recall
+    /// without a periodic offline rebuild). `ratio` ≤ 1 is clamped to
+    /// disabled; a practical setting is 2.0-4.0.
+    pub fn with_rebalance_threshold(mut self, ratio: f64) -> IvfIndex {
+        self.rebalance_threshold = if ratio > 1.0 { ratio } else { 0.0 };
+        self
+    }
+
+    /// `max list size / mean list size` over the built inverted lists —
+    /// the skew statistic the online-rebalance trigger watches. 1.0 is
+    /// perfectly balanced; unbuilt (or empty) indexes report 0.
+    pub fn skew(&self) -> f64 {
+        if !self.built || self.len == 0 || self.lists.is_empty() {
+            return 0.0;
+        }
+        let max = self.lists.iter().map(|l| l.ids.len()).max().unwrap_or(0);
+        let mean = self.len as f64 / self.lists.len() as f64;
+        max as f64 / mean.max(f64::MIN_POSITIVE)
+    }
+
+    /// Completed online rebalances since construction.
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances
+    }
+
+    /// Re-train the coarse quantizer over the *current* corpus and
+    /// re-assign every row — the online answer to post-build adds skewing
+    /// `list_sizes()`. Rows round-trip through their stored codec
+    /// (deterministic codecs re-encode to identical bytes, so search
+    /// results for unmoved rows are unchanged). No-op before `build`.
+    pub fn rebalance(&mut self, seed: u64) {
+        if !self.built {
+            return;
+        }
+        let mut rows: Vec<(u64, Vec<f32>)> = Vec::with_capacity(self.len);
+        for list in &self.lists {
+            for (i, &id) in list.ids.iter().enumerate() {
+                rows.push((id, list.arena.dequant_row(i, self.dim)));
+            }
+        }
+        self.pending = rows;
+        self.lists.clear();
+        self.centroids.clear();
+        self.built = false;
+        self.build(seed);
+        self.rebalances += 1;
     }
 
     /// Train the quantizer and assign all buffered vectors.
@@ -174,6 +246,34 @@ impl Index for IvfIndex {
             list.arena.push(vector);
         } else {
             self.pending.push((id, vector.to_vec()));
+        }
+    }
+
+    /// Batched append with the online-rebalance hook: rows are assigned
+    /// to their nearest cell as usual, then — once per batch, never per
+    /// row — the skew trigger may re-train and re-assign in place. The
+    /// trigger checks its own outcome: if the retrain could not bring
+    /// skew under the threshold (the data is inherently that clustered),
+    /// the bar rises to the achieved skew plus a margin, so steady
+    /// ingest onto irreducibly-skewed data costs one retrain, not one
+    /// per commit.
+    fn add_batch(&mut self, rows: &[(u64, &[f32])]) {
+        for (id, v) in rows {
+            self.add(*id, v);
+        }
+        if self.rebalance_threshold > 1.0
+            && self.built
+            && self.skew() > self.rebalance_threshold.max(self.retrigger_skew)
+        {
+            self.rebalance(self.rebalance_seed);
+            let achieved = self.skew();
+            self.retrigger_skew = if achieved > self.rebalance_threshold {
+                achieved * 1.25
+            } else {
+                // The retrain worked: future triggers use the plain
+                // threshold again.
+                0.0
+            };
         }
     }
 
@@ -472,6 +572,135 @@ mod tests {
                 assert_eq!(a, b, "{quant:?}");
             }
         }
+    }
+
+    /// The streaming-IVF hook: a skewed post-build stream trips the
+    /// rebalance, the retrained lists are no more skewed than the stale
+    /// ones, and every row (old and new) stays searchable.
+    #[test]
+    fn ingest_rebalance_evens_skewed_lists() {
+        let vs = corpus(128, 8, 41);
+        let mut rng = Pcg::new(99);
+        let mut mk = || {
+            let mut ivf = IvfIndex::new(8, 8, 2);
+            for (i, v) in vs.iter().enumerate() {
+                ivf.add(i as u64, v);
+            }
+            ivf.build(7);
+            ivf
+        };
+        // A hot-spot stream: distinct vectors in a tight cap around one
+        // direction, so the stale centroids funnel the whole burst into
+        // one or two lists.
+        let hot = vs[3].clone();
+        let burst: Vec<(u64, Vec<f32>)> = (0..256u64)
+            .map(|i| {
+                let mut v: Vec<f32> =
+                    hot.iter().map(|x| x + 0.05 * rng.normal() as f32).collect();
+                let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+                v.iter_mut().for_each(|x| *x /= n);
+                (1000 + i, v)
+            })
+            .collect();
+        let refs: Vec<(u64, &[f32])> = burst.iter().map(|(i, v)| (*i, v.as_slice())).collect();
+
+        // Reference run without the hook: measure the skew the burst
+        // leaves behind under stale centroids.
+        let mut stale = mk();
+        stale.add_batch(&refs);
+        let skew_before = stale.skew();
+        assert!(skew_before > 2.0, "burst must actually skew: {skew_before}");
+        assert_eq!(stale.rebalances(), 0);
+
+        // Hook enabled: the same batch trips an in-place retrain.
+        let mut ivf = mk().with_rebalance_threshold(2.0);
+        ivf.add_batch(&refs);
+        assert!(ivf.rebalances() >= 1, "skewed burst must trip the hook");
+        assert_eq!(ivf.len(), 128 + 256);
+        assert_eq!(ivf.list_sizes().iter().sum::<usize>(), 128 + 256);
+        // Retraining over the full corpus (burst included) can only even
+        // the lists out relative to the stale assignment.
+        assert!(
+            ivf.skew() <= skew_before + 1e-9,
+            "rebalance made skew worse: {} vs {}",
+            ivf.skew(),
+            skew_before
+        );
+        // Old and new rows both remain retrievable.
+        for (id, v) in burst.iter().step_by(64) {
+            assert_eq!(ivf.search(v, 1)[0].id, *id);
+        }
+        for (i, v) in vs.iter().enumerate().take(8) {
+            assert!(ivf.search(v, 1)[0].score > 0.99, "row {i} lost");
+        }
+    }
+
+    /// Review regression: when the data is so clustered that a retrain
+    /// cannot bring skew under the threshold, the hook must not re-run
+    /// a full retrain on every subsequent commit — the bar rises to the
+    /// achieved skew and further batches append without retraining.
+    #[test]
+    fn ingest_rebalance_backs_off_on_irreducible_skew() {
+        // 8 identical base rows + one distinct, nlist 4: duplicates all
+        // share one cell no matter how the quantizer is trained, so
+        // max/mean skew stays well above 1.2 forever.
+        let mut ivf = IvfIndex::new(4, 4, 4).with_rebalance_threshold(1.2);
+        let dup = [0.6f32, 0.8, 0.0, 0.0];
+        for i in 0..8u64 {
+            ivf.add(i, &dup);
+        }
+        ivf.add(8, &[0.0, 0.0, 1.0, 0.0]);
+        ivf.build(3);
+        assert!(ivf.skew() > 1.2);
+        let batch: Vec<(u64, Vec<f32>)> =
+            (100..108u64).map(|i| (i, dup.to_vec())).collect();
+        for round in 0..5 {
+            let refs: Vec<(u64, &[f32])> =
+                batch.iter().map(|(i, v)| (*i + round, v.as_slice())).collect();
+            ivf.add_batch(&refs);
+        }
+        // One retrain fired, discovered the skew is irreducible, and
+        // the remaining four commits appended without retraining.
+        assert_eq!(ivf.rebalances(), 1, "hysteresis must suppress repeat retrains");
+        assert_eq!(ivf.len(), 9 + 40);
+        assert_eq!(ivf.list_sizes().iter().sum::<usize>(), 49);
+    }
+
+    /// Rebalance is deterministic per seed and a no-op before build.
+    #[test]
+    fn ingest_rebalance_is_deterministic_and_prebuild_noop() {
+        let vs = corpus(96, 12, 43);
+        let mk = || {
+            let mut ivf = IvfIndex::new(12, 6, 6);
+            for (i, v) in vs.iter().enumerate() {
+                ivf.add(i as u64, v);
+            }
+            ivf
+        };
+        // Pre-build: nothing happens.
+        let mut unbuilt = mk();
+        unbuilt.rebalance(9);
+        assert!(!unbuilt.is_built());
+        assert_eq!(unbuilt.rebalances(), 0);
+        // Built twice with the same seed sequence: identical lists and
+        // identical full-probe results.
+        let mut a = mk();
+        let mut b = mk();
+        a.build(5);
+        b.build(5);
+        a.rebalance(9);
+        b.rebalance(9);
+        assert_eq!(a.list_sizes(), b.list_sizes());
+        let q = &vs[11];
+        assert_eq!(a.search(q, 5), b.search(q, 5));
+        // Full probe still equals the exact scan after a rebalance.
+        let mut flat = FlatIndex::new(12);
+        for (i, v) in vs.iter().enumerate() {
+            flat.add(i as u64, v);
+        }
+        let want: Vec<u64> = flat.search(q, 5).into_iter().map(|h| h.id).collect();
+        let got: Vec<u64> = a.search(q, 5).into_iter().map(|h| h.id).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

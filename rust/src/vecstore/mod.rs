@@ -43,6 +43,16 @@ pub trait Index {
     /// Add a vector under `id`. Vectors should be unit-norm (the engine's
     /// output already is); scores are inner products.
     fn add(&mut self, id: u64, vector: &[f32]);
+    /// Append a batch of rows in one call — the streaming-ingest commit
+    /// unit. The default is the per-row loop; implementations with
+    /// post-append maintenance (e.g. [`IvfIndex`]'s online list
+    /// rebalance) override to run it once per batch instead of once per
+    /// row.
+    fn add_batch(&mut self, rows: &[(u64, &[f32])]) {
+        for (id, v) in rows {
+            self.add(*id, v);
+        }
+    }
     /// Top-k most similar.
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit>;
     /// Batched top-k: one result list per query, each identical (ids,

@@ -17,7 +17,7 @@ struct FlakyBackend {
 }
 
 impl Backend for FlakyBackend {
-    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
         self.calls += 1;
         if self.calls % self.nth == 0 {
             panic!("injected fault on batch {}", self.calls);
@@ -38,7 +38,7 @@ struct ErroringBackend {
 }
 
 impl Backend for ErroringBackend {
-    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
         if self.calls.fetch_add(1, Ordering::Relaxed) % 2 == 0 {
             anyhow::bail!("transient device error");
         }
@@ -56,7 +56,7 @@ impl Backend for ErroringBackend {
 struct ShortBackend;
 
 impl Backend for ShortBackend {
-    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
         Ok(texts.iter().skip(1).map(|_| vec![3.0]).collect())
     }
     fn describe(&self) -> String {
@@ -155,7 +155,7 @@ fn busy_storm_recovers_after_drain() {
     // the service is fully usable afterwards.
     struct SlowBackend;
     impl Backend for SlowBackend {
-        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
             std::thread::sleep(Duration::from_millis(30));
             Ok(texts.iter().map(|_| vec![1.0]).collect())
         }

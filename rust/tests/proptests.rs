@@ -99,7 +99,8 @@ fn prop_device_queue_fifo_conservation() {
         let n = g.usize(1, 200);
         for i in 0..n {
             q.push(Pending {
-                text: format!("q{i}"),
+                text: format!("q{i}").into(),
+                class: WorkClass::Embed,
                 enqueued: std::time::Instant::now(),
                 reply: i,
             });
@@ -308,7 +309,7 @@ fn prop_service_reply_conservation() {
 
     struct CountBackend;
     impl windve::devices::executor::Backend for CountBackend {
-        fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+        fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
             Ok(texts.iter().map(|t| vec![t.len() as f32]).collect())
         }
         fn describe(&self) -> String {
@@ -337,7 +338,8 @@ fn prop_service_reply_conservation() {
             qm.dispatch();
             let (tx, rx) = std::sync::mpsc::channel();
             queue.push(Pending {
-                text: format!("{}", "x".repeat(i % 17 + 1)),
+                text: "x".repeat(i % 17 + 1).into(),
+                class: WorkClass::Embed,
                 enqueued: std::time::Instant::now(),
                 reply: tx,
             });
@@ -658,37 +660,55 @@ fn prop_quantized_topk_overlap_vs_f32() {
 }
 
 /// Weighted multi-class admission invariants (extended to the NPU
-/// retrieval leg): under arbitrary interleavings of `dispatch_class` /
-/// `dispatch_retrieve_npu` / `release_class`, occupancy never exceeds
-/// any depth (either pool, either per-class retrieval cap), the
-/// per-class occupancies always sum to their pool occupancy on BOTH
-/// device legs, every admit has a matching release that drains the
-/// manager to zero, and `bad_releases` stays 0 for well-formed
-/// sequences.
+/// retrieval leg and the ingest class): under arbitrary interleavings
+/// of `dispatch_class` / `dispatch_retrieve_npu` / `dispatch_ingest_npu`
+/// / `release_class`, occupancy never exceeds any depth (either pool,
+/// any per-class cap), the per-class occupancies always sum to their
+/// pool occupancy on BOTH device legs, every admit has a matching
+/// release that drains the manager to zero, and `bad_releases` stays 0
+/// for well-formed sequences.
 #[test]
 fn prop_class_admission_invariants() {
+    use windve::coordinator::queue_manager::ClassCaps;
     property("class admission invariants", 150, |g: &mut Gen| {
         let npu_depth = g.usize(0, 24);
         let cpu_pool = g.usize(0, 33);
         let cap = g.usize(0, cpu_pool + 1);
         let npu_cap = g.usize(0, npu_depth + 1);
+        let ingest_cap = g.usize(0, cpu_pool + 1);
+        let npu_ingest_cap = g.usize(0, npu_depth + 1);
         let hetero = g.bool();
-        let qm = QueueManager::with_class_caps(npu_depth, cpu_pool, hetero, cap, npu_cap);
+        let qm = QueueManager::with_caps(
+            npu_depth,
+            cpu_pool,
+            hetero,
+            ClassCaps {
+                retrieve: cap,
+                npu_retrieve: npu_cap,
+                ingest: ingest_cap,
+                npu_ingest: npu_ingest_cap,
+            },
+        );
         let mut live: Vec<(WorkClass, Route, usize)> = Vec::new();
         let mut admits = 0u64;
         for _ in 0..g.usize(1, 250) {
             if g.bool() || live.is_empty() {
-                let class = if g.bool() { WorkClass::Embed } else { WorkClass::Retrieve };
+                let class = match g.usize(0, 4) {
+                    0 => WorkClass::Retrieve,
+                    1 => WorkClass::Ingest,
+                    _ => WorkClass::Embed,
+                };
                 let cost = match class {
                     WorkClass::Embed => g.usize(1, 4),
                     WorkClass::Retrieve => g.usize(1, 8),
+                    WorkClass::Ingest => g.usize(1, 3),
                 };
-                // Retrieval picks a device leg at random; embeds follow
-                // Algorithm 1 as always.
-                let route = if class == WorkClass::Retrieve && g.bool() {
-                    qm.dispatch_retrieve_npu(cost)
-                } else {
-                    qm.dispatch_class(class, cost)
+                // Retrieval and ingest pick a device leg at random;
+                // embeds follow Algorithm 1 as always.
+                let route = match class {
+                    WorkClass::Retrieve if g.bool() => qm.dispatch_retrieve_npu(cost),
+                    WorkClass::Ingest if g.bool() => qm.dispatch_ingest_npu(cost),
+                    _ => qm.dispatch_class(class, cost),
                 };
                 match route {
                     Route::Busy => {}
@@ -720,14 +740,30 @@ fn prop_class_admission_invariants() {
                     qm.retrieve_npu_occupancy()
                 ));
             }
-            let class_sum = qm.embed_cpu_occupancy() + qm.retrieve_cpu_occupancy();
+            if qm.ingest_cpu_occupancy() > ingest_cap {
+                return Err(format!(
+                    "ingest occupancy {} > cap {ingest_cap}",
+                    qm.ingest_cpu_occupancy()
+                ));
+            }
+            if qm.ingest_npu_occupancy() > npu_ingest_cap {
+                return Err(format!(
+                    "npu ingest occupancy {} > cap {npu_ingest_cap}",
+                    qm.ingest_npu_occupancy()
+                ));
+            }
+            let class_sum = qm.embed_cpu_occupancy()
+                + qm.retrieve_cpu_occupancy()
+                + qm.ingest_cpu_occupancy();
             if class_sum != qm.cpu_occupancy() {
                 return Err(format!(
                     "per-class sum {class_sum} != pool occupancy {}",
                     qm.cpu_occupancy()
                 ));
             }
-            let npu_sum = qm.embed_npu_occupancy() + qm.retrieve_npu_occupancy();
+            let npu_sum = qm.embed_npu_occupancy()
+                + qm.retrieve_npu_occupancy()
+                + qm.ingest_npu_occupancy();
             if npu_sum != qm.npu_occupancy() {
                 return Err(format!(
                     "npu per-class sum {npu_sum} != pool occupancy {}",
@@ -742,8 +778,10 @@ fn prop_class_admission_invariants() {
             || qm.cpu_occupancy() != 0
             || qm.embed_cpu_occupancy() != 0
             || qm.retrieve_cpu_occupancy() != 0
+            || qm.ingest_cpu_occupancy() != 0
             || qm.embed_npu_occupancy() != 0
             || qm.retrieve_npu_occupancy() != 0
+            || qm.ingest_npu_occupancy() != 0
         {
             return Err("occupancy nonzero after releasing every admit".into());
         }
@@ -751,7 +789,13 @@ fn prop_class_admission_invariants() {
         if st.bad_releases != 0 {
             return Err(format!("{} bad_releases on a well-formed sequence", st.bad_releases));
         }
-        if st.routed_npu + st.routed_cpu + st.routed_retrieve + st.routed_retrieve_npu != admits
+        if st.routed_npu
+            + st.routed_cpu
+            + st.routed_retrieve
+            + st.routed_retrieve_npu
+            + st.routed_ingest
+            + st.routed_ingest_npu
+            != admits
         {
             return Err("admit counters disagree with observed admissions".into());
         }
@@ -895,6 +939,189 @@ fn prop_queue_release_underflow_is_contained() {
         }
         if npu != npu_depth {
             return Err(format!("admitted {npu} != depth {npu_depth}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Streaming-ingest parser: the zero-copy/incremental parser must agree
+// with util::json::parse on every valid document, under every chunking.
+// ---------------------------------------------------------------------------
+
+/// Random JSON document generator (bounded depth/size), biased toward
+/// the hazards the ingest lexer must survive: escapes, multi-byte UTF-8,
+/// exotic-but-valid numbers.
+fn gen_json(g: &mut Gen, depth: usize) -> Json {
+    let pick = if depth >= 3 { g.usize(0, 4) } else { g.usize(0, 6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => gen_number(g),
+        3 => Json::Str(gen_text(g)),
+        4 => Json::Arr((0..g.usize(0, 5)).map(|_| gen_json(g, depth + 1)).collect()),
+        _ => Json::Obj(
+            (0..g.usize(0, 5))
+                .map(|_| (gen_text(g), gen_json(g, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+fn gen_number(g: &mut Gen) -> Json {
+    match g.usize(0, 5) {
+        0 => Json::Num(g.u64(0, 1_000_000) as f64),
+        1 => Json::Num(-(g.u64(0, 1_000_000) as f64)),
+        2 => Json::Num(g.f64(-1e6, 1e6)),
+        // Exponent-edge magnitudes (serialize to long digit runs).
+        3 => Json::Num(g.f64(1.0, 9.0) * 10f64.powi(g.usize(0, 60) as i32)),
+        _ => Json::Num(g.f64(1.0, 9.0) * 10f64.powi(-(g.usize(0, 60) as i32))),
+    }
+}
+
+fn gen_text(g: &mut Gen) -> String {
+    const PALETTE: &[&str] = &[
+        "a", "Z", "0", " ", "\"", "\\", "\n", "\t", "\r", "\u{1}", "\u{1f}", "é", "ß",
+        "日", "本", "😀", "𝕊", "/", "{", "}", "[", ",",
+    ];
+    let n = g.usize(0, 12);
+    (0..n).map(|_| *g.pick(PALETTE)).collect()
+}
+
+/// The satellite's core equivalence: for arbitrary valid JSON (values,
+/// escapes, numbers incl. exponent edge cases), the ingest parser and
+/// util::json::parse produce the same document — zero-copy over slices
+/// AND incrementally over arbitrary chunkings of the same bytes.
+#[test]
+fn prop_ingest_parser_agrees_with_util_json() {
+    use windve::ingest::{parse_slice, parse_value, ChunkLexer};
+
+    property("ingest parser == util::json on valid docs", 300, |g: &mut Gen| {
+        let doc = gen_json(g, 0);
+        let text = doc.to_string();
+        let reference = json::parse(&text).map_err(|e| format!("util parse failed: {e}"))?;
+
+        // Zero-copy slice parse.
+        let sliced = parse_slice(text.as_bytes())
+            .map_err(|e| format!("slice parse failed on {text:?}: {e}"))?;
+        if sliced.to_json() != reference {
+            return Err(format!("slice parse diverged on {text:?}"));
+        }
+
+        // Incremental parse over a random chunking (1-byte chunks
+        // included — every escape/UTF-8 seam position gets hit across
+        // the run).
+        let bytes = text.as_bytes();
+        let step = g.usize(1, 9);
+        let chunks: Vec<std::io::Result<Vec<u8>>> =
+            bytes.chunks(step).map(|c| Ok(c.to_vec())).collect();
+        let mut lx = ChunkLexer::new(chunks.into_iter());
+        let chunked = parse_value(&mut lx)
+            .map_err(|e| format!("chunked parse failed on {text:?} (step {step}): {e}"))?;
+        if chunked.to_json() != reference {
+            return Err(format!("chunked parse diverged on {text:?} (step {step})"));
+        }
+        Ok(())
+    });
+}
+
+/// Number-literal edge cases straight from text (exponents, signs,
+/// leading zeros in exponents) — both parsers, same f64.
+#[test]
+fn prop_ingest_number_literals_match_util_json() {
+    use windve::ingest::parse_slice;
+
+    let literals = [
+        "0", "-0", "1e-7", "1E-7", "1e+7", "5E+3", "2.5e300", "-2.5e-300", "1e-308",
+        "9007199254740993", "0.1", "-0.25", "3e0", "7.0e01", "123456789.000001",
+    ];
+    for lit in literals {
+        let ours = parse_slice(lit.as_bytes()).unwrap().to_json();
+        let theirs = json::parse(lit).unwrap();
+        match (&ours, &theirs) {
+            (Json::Num(a), Json::Num(b)) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{lit}: {a} vs {b}")
+            }
+            other => panic!("{lit}: non-number parse {other:?}"),
+        }
+    }
+}
+
+/// Malformed-chunk fuzz: truncations and byte corruptions of valid
+/// documents, re-chunked at arbitrary seams (split escapes, split UTF-8
+/// sequences) must never panic, and the chunked parser must reach
+/// exactly the same verdict as the slice parser.
+#[test]
+fn prop_ingest_chunked_fuzz_matches_slice_on_malformed_input() {
+    use windve::ingest::{parse_value, ChunkLexer, SliceLexer};
+
+    property("chunked == slice on mangled docs", 300, |g: &mut Gen| {
+        let doc = gen_json(g, 0);
+        let mut bytes = doc.to_string().into_bytes();
+        // Mangle: truncate, corrupt a byte, or leave intact.
+        match g.usize(0, 3) {
+            0 if !bytes.is_empty() => {
+                bytes.truncate(g.usize(0, bytes.len()));
+            }
+            1 if !bytes.is_empty() => {
+                let i = g.usize(0, bytes.len());
+                bytes[i] = g.u32(0, 256) as u8;
+            }
+            _ => {}
+        }
+
+        let slice_result = {
+            let mut lx = SliceLexer::new(&bytes);
+            parse_value(&mut lx).map(|v| v.to_json())
+        };
+        let step = g.usize(1, 7);
+        let chunks: Vec<std::io::Result<Vec<u8>>> =
+            bytes.chunks(step).map(|c| Ok(c.to_vec())).collect();
+        let mut lx = ChunkLexer::new(chunks.into_iter());
+        let chunk_result = parse_value(&mut lx).map(|v| v.to_json());
+
+        match (slice_result, chunk_result) {
+            (Ok(a), Ok(b)) if a == b => Ok(()),
+            (Err(_), Err(_)) => Ok(()),
+            (a, b) => Err(format!(
+                "verdicts diverged on {:?} (step {step}): slice {a:?} vs chunked {b:?}",
+                String::from_utf8_lossy(&bytes)
+            )),
+        }
+    });
+}
+
+/// NDJSON document streams parse identically however the network
+/// fragments them, and malformed tails stop cleanly.
+#[test]
+fn prop_ingest_ndjson_stream_chunking_invariant() {
+    use windve::ingest::{docs_from_chunks, DocStream, SliceLexer};
+
+    property("ndjson stream chunking invariant", 100, |g: &mut Gen| {
+        let n = g.usize(1, 12);
+        let mut body = String::new();
+        for i in 0..n {
+            let doc = Json::obj(vec![
+                ("id", Json::Num(i as f64)),
+                ("text", Json::Str(gen_text(g))),
+            ]);
+            body.push_str(&doc.to_string());
+            body.push('\n');
+        }
+        let want: Vec<_> = DocStream::new(SliceLexer::new(body.as_bytes()))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("slice stream failed: {e}"))?;
+        if want.len() != n {
+            return Err(format!("expected {n} docs, got {}", want.len()));
+        }
+        let step = g.usize(1, 9);
+        let chunks: Vec<std::io::Result<Vec<u8>>> =
+            body.as_bytes().chunks(step).map(|c| Ok(c.to_vec())).collect();
+        let got: Vec<_> = docs_from_chunks(chunks.into_iter())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| format!("chunked stream failed: {e}"))?;
+        if got != want {
+            return Err(format!("doc streams diverged at step {step}"));
         }
         Ok(())
     });

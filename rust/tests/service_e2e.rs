@@ -170,7 +170,7 @@ struct HashBackend {
     dim: usize,
 }
 impl Backend for HashBackend {
-    fn embed(&mut self, texts: &[String]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn embed(&mut self, texts: &[Arc<str>]) -> anyhow::Result<Vec<Vec<f32>>> {
         // A hair of service time so queue slots are genuinely held.
         std::thread::sleep(Duration::from_micros(200));
         Ok(texts.iter().map(|t| pseudo_embedding(t, self.dim)).collect())
