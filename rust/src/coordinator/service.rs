@@ -24,6 +24,7 @@ use super::cache::EmbeddingCache;
 use super::instance::{spawn_worker, BackendFactory, Reply};
 use super::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
+use crate::durability::DurableStore;
 use crate::ingest::IngestStats;
 use crate::metrics::Registry;
 use crate::runtime::NpuScanner;
@@ -240,6 +241,10 @@ pub struct WindVE {
     /// The NPU offload scanner (a mirror of the attached executor's
     /// corpus); cleared whenever a new executor is attached.
     npu_retrieval: std::sync::Mutex<Option<Arc<NpuScanner>>>,
+    /// Durable corpus store ([`WindVE::attach_durability`]): when
+    /// attached, ingest commits and deletes are WAL-logged before they
+    /// are acked, and the delete/snapshot endpoints become durable.
+    durability: std::sync::Mutex<Option<Arc<DurableStore>>>,
     retrieval_admission: bool,
     retrieval_cost_unit_bytes: usize,
     /// The operator's raw `retrieval_admission` intent. Gates the NPU
@@ -342,6 +347,7 @@ impl WindVE {
             cache_key_space: cfg.cache_key_space,
             retrieval: std::sync::Mutex::new(None),
             npu_retrieval: std::sync::Mutex::new(None),
+            durability: std::sync::Mutex::new(None),
             // A zero CPU pool means there is no calibrated budget to
             // meter scans against; enforcing it would turn every
             // retrieval into BUSY on an NPU-only deployment.
@@ -397,6 +403,58 @@ impl WindVE {
         let scanner = NpuScanner::from_snapshot(exec.dim(), ids, rows, version)?;
         self.attach_npu_offload(Arc::new(scanner));
         Ok(())
+    }
+
+    /// Attach the durable corpus store. Pair with
+    /// [`WindVE::attach_retrieval`] of the executor recovered from the
+    /// same store (`DurableStore::recover`), so the WAL watermark and
+    /// the live index describe the same corpus.
+    pub fn attach_durability(&self, store: Arc<DurableStore>) {
+        *self.durability.lock().expect("durability lock poisoned") = Some(store);
+    }
+
+    /// The attached durable store, if any.
+    pub fn durability(&self) -> Option<Arc<DurableStore>> {
+        self.durability.lock().expect("durability lock poisoned").clone()
+    }
+
+    /// Delete a document: tombstone + version bump (NPU mirrors
+    /// invalidate exactly as for an add). With a durable store attached
+    /// the delete is WAL-logged and fsynced *before* the index mutation
+    /// — a WAL failure refuses the whole operation. Returns the number
+    /// of rows tombstoned (0 = unknown id, still a success).
+    pub fn delete_doc(&self, id: u64) -> Result<usize, ServeError> {
+        let exec = self
+            .retrieval()
+            .ok_or_else(|| ServeError::Backend("no retrieval index attached".into()))?;
+        let removed = match self.durability() {
+            Some(store) => {
+                let mut removed = 0;
+                store
+                    .log_delete(id, || removed = exec.remove(id))
+                    .map_err(|e| ServeError::Backend(format!("wal refused delete: {e}")))?;
+                removed
+            }
+            None => exec.remove(id),
+        };
+        self.metrics.counter("service.deletes").inc();
+        Ok(removed)
+    }
+
+    /// Checkpoint the corpus: serialize the attached index to a durable
+    /// snapshot and truncate the WAL behind it
+    /// (`DurableStore::snapshot`). Returns the WAL watermark the
+    /// snapshot covers. Requires both an index and a store.
+    pub fn snapshot_corpus(&self) -> Result<u64, ServeError> {
+        let exec = self
+            .retrieval()
+            .ok_or_else(|| ServeError::Backend("no retrieval index attached".into()))?;
+        let store = self
+            .durability()
+            .ok_or_else(|| ServeError::Backend("no durable store attached".into()))?;
+        store
+            .snapshot(&exec)
+            .map_err(|e| ServeError::Backend(format!("snapshot failed: {e}")))
     }
 
     /// Admit and enqueue one query (Algorithm 1). Non-blocking. The text
@@ -1496,5 +1554,100 @@ mod tests {
         let _ = svc.submit("reject").unwrap_err();
         assert_eq!(svc.metrics.counter("service.accepted").get(), 1);
         assert_eq!(svc.metrics.counter("service.busy").get(), 1);
+    }
+
+    /// Durable lifecycle through the facade: ingest WAL-logs before ack,
+    /// deletes tombstone durably, snapshot truncates the log, and a
+    /// crash + recover rebuilds exactly the acked corpus (bit-identical
+    /// scores, deleted id gone).
+    #[test]
+    fn durable_ingest_delete_snapshot_crash_recover() {
+        use crate::durability::{DurabilityOptions, DurableStore, FaultFs, FaultPlan, Fs};
+        use crate::ingest::{ingest_ndjson_chunks, IngestOptions};
+        use std::path::Path;
+
+        let dim = 16;
+        let svc = hash_service(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                ingest_depth: 2,
+                npu_ingest_depth: 4,
+                ingest_low_water: 1.0,
+                ..ServiceConfig::default()
+            },
+            dim,
+        );
+        let fs = Arc::new(FaultFs::new());
+        let dynfs: Arc<dyn Fs> = fs.clone();
+        let opts = DurabilityOptions::default();
+        let embed = |t: &str| Ok(pseudo_embedding(t, dim));
+        let (store, exec, report) = DurableStore::recover(
+            dynfs.clone(),
+            Path::new("/corpus"),
+            opts.clone(),
+            || Box::new(crate::vecstore::FlatIndex::new(dim)),
+            embed,
+        )
+        .unwrap();
+        assert_eq!(report.replayed, 0);
+        svc.attach_retrieval(Arc::clone(&exec));
+        svc.attach_durability(Arc::clone(&store));
+
+        let mut body = String::new();
+        for i in 0..10u64 {
+            body.push_str(&format!("{{\"id\":{i},\"text\":\"durable doc {i}\"}}\n"));
+        }
+        let chunks: Vec<std::io::Result<Vec<u8>>> = vec![Ok(body.into_bytes())];
+        let out = ingest_ndjson_chunks(
+            &svc,
+            chunks.into_iter(),
+            &IngestOptions { commit_batch: 4, ..IngestOptions::default() },
+        );
+        assert_eq!(out.indexed, 10);
+        assert_eq!(out.wal_refused, 0);
+        assert_eq!(store.stats().committed_seq, 10);
+
+        // Durable delete through the facade; the version seam moves so
+        // NPU mirrors invalidate. Unknown id: still logged, 0 rows.
+        let v = exec.version();
+        assert_eq!(svc.delete_doc(4).unwrap(), 1);
+        assert_eq!(svc.delete_doc(4).unwrap(), 0);
+        assert!(exec.version() > v);
+
+        // Checkpoint: the WAL behind the watermark is gone.
+        let w = svc.snapshot_corpus().unwrap();
+        assert_eq!(w, 12, "10 upserts + 2 delete records");
+        assert_eq!(store.stats().wal_segments, 0);
+
+        // One post-checkpoint commit, then crash.
+        let chunks: Vec<std::io::Result<Vec<u8>>> =
+            vec![Ok(b"{\"id\":99,\"text\":\"late doc\"}\n".to_vec())];
+        let late = ingest_ndjson_chunks(&svc, chunks.into_iter(), &IngestOptions::default());
+        assert_eq!(late.indexed, 1);
+        let q = pseudo_embedding("durable doc 7", dim);
+        let want: Vec<(u64, u32)> =
+            exec.search(&q, 3).iter().map(|h| (h.id, h.score.to_bits())).collect();
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (_store2, exec2, report) = DurableStore::recover(
+            dynfs,
+            Path::new("/corpus"),
+            opts,
+            || Box::new(crate::vecstore::FlatIndex::new(dim)),
+            embed,
+        )
+        .unwrap();
+        assert!(report.from_snapshot);
+        assert_eq!(report.replayed, 1, "only the post-checkpoint doc");
+        assert_eq!(exec2.len(), 10, "10 ingested - 1 deleted + 1 late");
+        let got: Vec<(u64, u32)> =
+            exec2.search(&q, 3).iter().map(|h| (h.id, h.score.to_bits())).collect();
+        assert_eq!(got, want, "recovered rows score bit-identically");
+        let gone = pseudo_embedding("durable doc 4", dim);
+        assert!(exec2.search(&gone, 10).iter().all(|h| h.id != 4), "deleted id resurrected");
+        svc.shutdown();
     }
 }

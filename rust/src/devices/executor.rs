@@ -249,6 +249,67 @@ impl RetrievalExecutor {
         self.version.fetch_add(rows.len() as u64, Ordering::Release);
     }
 
+    /// Commit one ingest batch with upsert semantics: per row, tombstone
+    /// any live rows under the id, then append (same guard, one version
+    /// window per batch — mirrors taken before the commit read as stale).
+    /// Rows apply in order, so a batch carrying the same id twice keeps
+    /// only the last — exactly what WAL replay re-applies after a crash.
+    /// Returns the rows tombstoned (0 ⇒ the batch was pure inserts).
+    pub fn upsert_batch(&self, rows: &[(u64, Vec<f32>)]) -> usize {
+        if rows.is_empty() {
+            return 0;
+        }
+        let mut g = self.index.write().expect("index lock poisoned");
+        let mut replaced = 0;
+        for (id, v) in rows {
+            replaced += g.upsert(*id, v);
+        }
+        self.version.fetch_add(rows.len() as u64, Ordering::Release);
+        replaced
+    }
+
+    /// Tombstone every live row stored under `id`. A successful delete
+    /// bumps the version inside the write guard, so device-side mirrors
+    /// invalidate exactly as adds do — an NPU arena can never resurrect
+    /// a deleted row. Returns rows killed (0 ⇒ id absent, no bump).
+    pub fn remove(&self, id: u64) -> usize {
+        let mut g = self.index.write().expect("index lock poisoned");
+        let killed = g.remove(id);
+        if killed > 0 {
+            self.version.fetch_add(1, Ordering::Release);
+        }
+        killed
+    }
+
+    /// Rows currently tombstoned in the attached index (the compaction
+    /// trigger statistic — see `durability`).
+    pub fn tombstones(&self) -> usize {
+        self.read_index().tombstones()
+    }
+
+    /// Rewrite the index arenas dropping tombstoned rows (exclusive
+    /// lock). Survivor bytes are copied verbatim and live-row order is
+    /// preserved, so post-compaction scans are bit-identical; the version
+    /// bump (only when rows were actually reclaimed) re-seeds mirrors
+    /// under the same seam as any other corpus mutation.
+    pub fn compact(&self) -> usize {
+        let mut g = self.index.write().expect("index lock poisoned");
+        let reclaimed = g.compact();
+        if reclaimed > 0 {
+            self.version.fetch_add(1, Ordering::Release);
+        }
+        reclaimed
+    }
+
+    /// Serialize the attached index (live rows only) with the version it
+    /// captures, under one read guard so bytes and version agree. `None`
+    /// when the index has no snapshot codec.
+    pub fn snapshot_bytes(&self) -> Option<(Vec<u8>, u64)> {
+        let g = self.read_index();
+        let bytes = g.snapshot_bytes()?;
+        Some((bytes, self.version.load(Ordering::Acquire)))
+    }
+
     pub fn len(&self) -> usize {
         self.read_index().len()
     }
@@ -511,6 +572,61 @@ mod tests {
         // Empty commits are free: no version churn for mirrors.
         ex.add_batch(&[]);
         assert_eq!(ex.version(), 9);
+    }
+
+    #[test]
+    fn remove_and_upsert_bump_versions_for_mirrors() {
+        let ex = RetrievalExecutor::flat(4);
+        ex.add(1, &[1.0, 0.0, 0.0, 0.0]);
+        ex.add(2, &[0.0, 1.0, 0.0, 0.0]);
+        let v0 = ex.version();
+        // Delete: version bumps (mirror invalidates), row disappears.
+        assert_eq!(ex.remove(1), 1);
+        assert!(ex.version() > v0);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex.tombstones(), 1);
+        // Deleting an absent id is version-free: no mirror churn.
+        let v1 = ex.version();
+        assert_eq!(ex.remove(42), 0);
+        assert_eq!(ex.version(), v1);
+        // The mirror export excludes the tombstone.
+        let (ids, _, _) = ex.export_corpus().unwrap();
+        assert_eq!(ids, vec![2]);
+        // Upsert replaces in place; duplicate ids in one batch keep the
+        // last row, matching replay order.
+        let replaced = ex.upsert_batch(&[
+            (2, vec![1.0, 0.0, 0.0, 0.0]),
+            (3, vec![0.0, 0.0, 1.0, 0.0]),
+            (3, vec![0.0, 0.0, 0.0, 1.0]),
+        ]);
+        assert_eq!(replaced, 2); // old row 2 + first row 3 of the batch
+        assert_eq!(ex.len(), 2);
+        assert_eq!(ex.search(&[0.0, 0.0, 0.0, 1.0], 1)[0].id, 3);
+        // Compaction reclaims, bumps once, and changes no results.
+        let hits_before = ex.search(&[1.0, 0.0, 0.0, 0.0], 2);
+        let v2 = ex.version();
+        assert!(ex.tombstones() > 0);
+        let reclaimed = ex.compact();
+        assert_eq!(reclaimed, 3);
+        assert_eq!(ex.version(), v2 + 1);
+        assert_eq!(ex.tombstones(), 0);
+        assert_eq!(ex.search(&[1.0, 0.0, 0.0, 0.0], 2), hits_before);
+        // Compacting a clean index is version-free.
+        assert_eq!(ex.compact(), 0);
+        assert_eq!(ex.version(), v2 + 1);
+    }
+
+    #[test]
+    fn snapshot_bytes_roundtrips_through_decode() {
+        let ex = RetrievalExecutor::flat(4);
+        ex.add(1, &[1.0, 0.0, 0.0, 0.0]);
+        ex.add(2, &[0.0, 1.0, 0.0, 0.0]);
+        ex.remove(1);
+        let (bytes, version) = ex.snapshot_bytes().expect("flat has a codec");
+        assert_eq!(version, ex.version());
+        let restored = crate::vecstore::persist::decode_index(&bytes).unwrap();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored.search(&[0.0, 1.0, 0.0, 0.0], 1)[0].id, 2);
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! Injectable I/O layer with deterministic kill-points.
+//!
+//! Everything the durability subsystem does to disk goes through the
+//! [`Fs`] trait: production uses [`RealFs`] (plain `std::fs`), tests use
+//! [`FaultFs`] — an in-memory filesystem that models exactly the failure
+//! surface a WAL cares about:
+//!
+//! * **durability boundary** — bytes appended but not yet `sync`ed are
+//!   *unsynced*; a crash discards them (except for an optional
+//!   `torn_keep` prefix, modeling a torn append where the kernel got
+//!   part of the write to the platter before power failed),
+//! * **kill-points** — every mutating operation increments an op
+//!   counter; a [`FaultPlan`] can crash *before* op N, fail a specific
+//!   `sync` with an I/O error, or short-write a specific append. Tests
+//!   first run a scenario fault-free to count ops, then re-run it once
+//!   per kill-point — a deterministic crash matrix with no timing
+//!   dependence,
+//! * **crash state** — after a crash every operation fails until
+//!   [`FaultFs::restart`], which applies the durability boundary and
+//!   brings the "machine" back up, exactly like a process restart over a
+//!   real disk.
+
+use std::collections::HashMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// The slice of filesystem behavior the durability layer depends on.
+/// Object-safe and `Send + Sync` so one instance can back a store shared
+/// across server threads.
+pub trait Fs: Send + Sync {
+    /// Append `data` to `path`, creating it if absent. Appended bytes
+    /// are NOT durable until [`Fs::sync`].
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    /// fsync `path`: everything appended so far survives a crash.
+    fn sync(&self, path: &Path) -> io::Result<()>;
+    /// Read the whole file.
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    /// Replace `path` with `data` atomically (tmp + rename + sync): after
+    /// this returns, a crash sees either the old content or the new,
+    /// never a mix.
+    fn write_atomic(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    /// Truncate `path` to `len` bytes and sync the new length.
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()>;
+    /// Delete a file (ok if it exists; error if it does not).
+    fn remove(&self, path: &Path) -> io::Result<()>;
+    /// File names (not full paths) directly inside `dir`, sorted.
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>>;
+    /// `mkdir -p`.
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()>;
+    /// Whether `path` exists as a file.
+    fn exists(&self, path: &Path) -> bool;
+}
+
+// ---------------------------------------------------------------------------
+// Real filesystem.
+
+/// `std::fs`-backed [`Fs`] for production use.
+pub struct RealFs;
+
+impl Fs for RealFs {
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(data)
+    }
+
+    fn sync(&self, path: &Path) -> io::Result<()> {
+        std::fs::File::open(path)?.sync_all()
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn write_atomic(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(data)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        // Best-effort directory sync so the rename itself is durable.
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()> {
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(len)?;
+        f.sync_all()
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                if let Some(name) = entry.file_name().to_str() {
+                    names.push(name.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        std::fs::create_dir_all(dir)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        path.is_file()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injecting in-memory filesystem.
+
+/// Where and how to fail. Op numbers are 0-based positions in the
+/// sequence of *mutating* operations (`append`/`sync`/`write_atomic`/
+/// `truncate`/`remove`); reads and lists don't count, so recovery-side
+/// reads never shift a plan's kill-points.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Crash *before* executing mutating op N: the op (and everything
+    /// after) fails until [`FaultFs::restart`].
+    pub crash_at_op: Option<u64>,
+    /// On crash, keep this many *unsynced* bytes per file (a torn
+    /// append: part of the in-flight write reached the platter). 0 = the
+    /// classic "everything unsynced is gone".
+    pub torn_keep: usize,
+    /// Mutating op N, if it is a `sync`, returns EIO instead (the write
+    /// cache could not be flushed). The op still counts.
+    pub fsync_fail_at: Option<u64>,
+    /// Mutating op N, if it is an `append`, writes only the first half
+    /// of its bytes and then returns EIO — a short write whose partial
+    /// bytes are sitting unsynced in the page cache.
+    pub short_write_at: Option<u64>,
+}
+
+struct FileState {
+    data: Vec<u8>,
+    /// Bytes guaranteed to survive a crash.
+    synced: usize,
+}
+
+struct State {
+    files: HashMap<PathBuf, FileState>,
+    dirs: Vec<PathBuf>,
+    plan: FaultPlan,
+    ops: u64,
+    crashed: bool,
+}
+
+/// Deterministic in-memory [`Fs`] with injected faults. See the module
+/// docs for the model.
+pub struct FaultFs {
+    state: Mutex<State>,
+}
+
+fn eio(msg: &str) -> io::Error {
+    io::Error::other(msg.to_string())
+}
+
+impl Default for FaultFs {
+    fn default() -> Self {
+        FaultFs::new()
+    }
+}
+
+impl FaultFs {
+    pub fn new() -> FaultFs {
+        FaultFs::with_plan(FaultPlan::default())
+    }
+
+    pub fn with_plan(plan: FaultPlan) -> FaultFs {
+        FaultFs {
+            state: Mutex::new(State {
+                files: HashMap::new(),
+                dirs: Vec::new(),
+                plan,
+                ops: 0,
+                crashed: false,
+            }),
+        }
+    }
+
+    /// Mutating operations executed (or crashed on) so far. Run a
+    /// scenario fault-free, read this, and you have the kill-point space
+    /// to sweep.
+    pub fn ops(&self) -> u64 {
+        self.state.lock().unwrap().ops
+    }
+
+    /// Whether an injected crash has fired.
+    pub fn crashed(&self) -> bool {
+        self.state.lock().unwrap().crashed
+    }
+
+    /// Crash now (as if the process lost power between two ops).
+    pub fn crash_now(&self) {
+        self.state.lock().unwrap().crashed = true;
+    }
+
+    /// Bring the machine back up: apply the durability boundary (drop
+    /// unsynced bytes, minus the plan's `torn_keep` survivors), clear the
+    /// crashed flag, and install `plan` for the next life.
+    pub fn restart(&self, plan: FaultPlan) {
+        let mut st = self.state.lock().unwrap();
+        let torn = st.plan.torn_keep;
+        for f in st.files.values_mut() {
+            let unsynced = f.data.len() - f.synced;
+            let keep = f.synced + unsynced.min(torn);
+            f.data.truncate(keep);
+            // Survivors are on the platter now.
+            f.synced = f.data.len();
+        }
+        st.plan = plan;
+        st.ops = 0;
+        st.crashed = false;
+    }
+
+    /// Gate every mutating op: count it, then fire any due fault.
+    /// Returns the op number just consumed.
+    fn gate(st: &mut State) -> io::Result<u64> {
+        if st.crashed {
+            return Err(eio("simulated crash: machine is down"));
+        }
+        let op = st.ops;
+        if st.plan.crash_at_op == Some(op) {
+            st.crashed = true;
+            return Err(eio("simulated crash (kill-point)"));
+        }
+        st.ops += 1;
+        Ok(op)
+    }
+
+    fn check_up(st: &State) -> io::Result<()> {
+        if st.crashed {
+            return Err(eio("simulated crash: machine is down"));
+        }
+        Ok(())
+    }
+}
+
+impl Fs for FaultFs {
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let op = Self::gate(&mut st)?;
+        let short = st.plan.short_write_at == Some(op);
+        let f = st
+            .files
+            .entry(path.to_path_buf())
+            .or_insert(FileState { data: Vec::new(), synced: 0 });
+        if short {
+            f.data.extend_from_slice(&data[..data.len() / 2]);
+            return Err(eio("simulated short write"));
+        }
+        f.data.extend_from_slice(data);
+        Ok(())
+    }
+
+    fn sync(&self, path: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let op = Self::gate(&mut st)?;
+        if st.plan.fsync_fail_at == Some(op) {
+            return Err(eio("simulated fsync failure"));
+        }
+        match st.files.get_mut(path) {
+            Some(f) => {
+                f.synced = f.data.len();
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "no such file")),
+        }
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let st = self.state.lock().unwrap();
+        Self::check_up(&st)?;
+        st.files
+            .get(path)
+            .map(|f| f.data.clone())
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "no such file"))
+    }
+
+    fn write_atomic(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        Self::gate(&mut st)?;
+        // Atomic by construction: old content until the op succeeds, new
+        // content (fully synced) after.
+        st.files
+            .insert(path.to_path_buf(), FileState { data: data.to_vec(), synced: data.len() });
+        Ok(())
+    }
+
+    fn truncate(&self, path: &Path, len: u64) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        Self::gate(&mut st)?;
+        match st.files.get_mut(path) {
+            Some(f) => {
+                f.data.truncate(len as usize);
+                f.synced = f.data.len();
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "no such file")),
+        }
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        Self::gate(&mut st)?;
+        match st.files.remove(path) {
+            Some(_) => Ok(()),
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "no such file")),
+        }
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>> {
+        let st = self.state.lock().unwrap();
+        Self::check_up(&st)?;
+        let mut names: Vec<String> = st
+            .files
+            .keys()
+            .filter(|p| p.parent() == Some(dir))
+            .filter_map(|p| p.file_name().and_then(|n| n.to_str()).map(String::from))
+            .collect();
+        names.sort();
+        Ok(names)
+    }
+
+    fn create_dir_all(&self, dir: &Path) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        Self::check_up(&st)?;
+        if !st.dirs.iter().any(|d| d == dir) {
+            st.dirs.push(dir.to_path_buf());
+        }
+        Ok(())
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        self.state.lock().unwrap().files.contains_key(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn p(s: &str) -> PathBuf {
+        PathBuf::from(s)
+    }
+
+    #[test]
+    fn unsynced_bytes_die_in_a_crash_synced_survive() {
+        let fs = FaultFs::new();
+        fs.append(&p("/d/wal"), b"abcd").unwrap();
+        fs.sync(&p("/d/wal")).unwrap();
+        fs.append(&p("/d/wal"), b"efgh").unwrap();
+        fs.crash_now();
+        assert!(fs.read(&p("/d/wal")).is_err(), "reads fail while down");
+        fs.restart(FaultPlan::default());
+        assert_eq!(fs.read(&p("/d/wal")).unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn torn_keep_leaves_a_partial_tail() {
+        let fs = FaultFs::with_plan(FaultPlan { torn_keep: 2, ..Default::default() });
+        fs.append(&p("/d/wal"), b"abcd").unwrap();
+        fs.sync(&p("/d/wal")).unwrap();
+        fs.append(&p("/d/wal"), b"efgh").unwrap();
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        assert_eq!(fs.read(&p("/d/wal")).unwrap(), b"abcdef");
+    }
+
+    #[test]
+    fn crash_at_op_fires_deterministically() {
+        // Fault-free run counts ops.
+        let fs = FaultFs::new();
+        fs.append(&p("/w"), b"x").unwrap();
+        fs.sync(&p("/w")).unwrap();
+        fs.append(&p("/w"), b"y").unwrap();
+        assert_eq!(fs.ops(), 3);
+        // Crash before op 2: the second append never lands.
+        let fs = FaultFs::with_plan(FaultPlan { crash_at_op: Some(2), ..Default::default() });
+        fs.append(&p("/w"), b"x").unwrap();
+        fs.sync(&p("/w")).unwrap();
+        assert!(fs.append(&p("/w"), b"y").is_err());
+        assert!(fs.crashed());
+        assert!(fs.append(&p("/w"), b"z").is_err(), "down until restart");
+        fs.restart(FaultPlan::default());
+        assert_eq!(fs.read(&p("/w")).unwrap(), b"x");
+    }
+
+    #[test]
+    fn fsync_failure_and_short_write_inject() {
+        let fs = FaultFs::with_plan(FaultPlan { fsync_fail_at: Some(1), ..Default::default() });
+        fs.append(&p("/w"), b"abcd").unwrap();
+        assert!(fs.sync(&p("/w")).is_err(), "injected EIO");
+        assert!(!fs.crashed(), "fsync failure is an error, not a crash");
+        // The bytes are still unsynced: a later crash eats them.
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        assert_eq!(fs.read(&p("/w")).unwrap(), b"");
+
+        let fs = FaultFs::with_plan(FaultPlan { short_write_at: Some(0), ..Default::default() });
+        assert!(fs.append(&p("/w"), b"abcdef").is_err());
+        assert_eq!(fs.read(&p("/w")).unwrap(), b"abc", "half landed in cache");
+    }
+
+    #[test]
+    fn write_atomic_is_all_or_nothing() {
+        let fs = FaultFs::new();
+        fs.write_atomic(&p("/snap"), b"v1").unwrap();
+        // Crash at the op: old content intact.
+        fs.restart(FaultPlan { crash_at_op: Some(0), ..Default::default() });
+        assert!(fs.write_atomic(&p("/snap"), b"v2").is_err());
+        fs.restart(FaultPlan::default());
+        assert_eq!(fs.read(&p("/snap")).unwrap(), b"v1");
+        // Success: new content, durable with no explicit sync.
+        fs.write_atomic(&p("/snap"), b"v2").unwrap();
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        assert_eq!(fs.read(&p("/snap")).unwrap(), b"v2");
+    }
+
+    #[test]
+    fn list_and_remove_scope_to_directory() {
+        let fs = FaultFs::new();
+        fs.create_dir_all(&p("/data/wal")).unwrap();
+        fs.append(&p("/data/wal/wal-0.log"), b"a").unwrap();
+        fs.append(&p("/data/wal/wal-1.log"), b"b").unwrap();
+        fs.append(&p("/data/other"), b"c").unwrap();
+        assert_eq!(fs.list(&p("/data/wal")).unwrap(), vec!["wal-0.log", "wal-1.log"]);
+        fs.remove(&p("/data/wal/wal-0.log")).unwrap();
+        assert_eq!(fs.list(&p("/data/wal")).unwrap(), vec!["wal-1.log"]);
+        assert!(fs.remove(&p("/data/wal/wal-0.log")).is_err());
+        assert!(fs.exists(&p("/data/wal/wal-1.log")));
+        assert!(!fs.exists(&p("/data/wal/wal-0.log")));
+    }
+}

@@ -1,0 +1,511 @@
+//! Durable corpus lifecycle: WAL, crash recovery, snapshot + compaction.
+//!
+//! Before this subsystem, every accepted document lived only in memory —
+//! a crash silently lost acknowledged uploads, and the index could never
+//! shrink or overwrite. [`DurableStore`] threads a write-ahead log and a
+//! snapshot checkpoint under the ingest pipeline and gives the service
+//! upsert/delete/compaction on top of the tombstone machinery in
+//! `vecstore` (see `vecstore::mask`).
+//!
+//! # The contract
+//!
+//! * **ack ⇒ WAL-durable.** The ingest pipeline calls
+//!   [`DurableStore::log_upserts`] (and the delete path
+//!   [`DurableStore::log_delete`]) *before* a document is acknowledged:
+//!   the record batch is appended and fsynced, and only then is the
+//!   index mutated and the client acked. A crash at any point therefore
+//!   loses no acknowledged write — replay re-embeds and re-commits
+//!   whatever the index hadn't absorbed. (The converse is deliberately
+//!   weak: a record that was logged but never acked — crash between
+//!   fsync and ack, or a torn tail that happened to survive — MAY
+//!   replay. Replay applies upserts/deletes in sequence order, so this
+//!   is always a prefix extension of the acked state, never a
+//!   reordering.)
+//! * **snapshot ⇒ WAL-truncatable.** [`DurableStore::snapshot`] takes
+//!   the commit lock, serializes the index (encoded arena bytes — see
+//!   `vecstore::persist` for why that is bit-exact), stamps it with the
+//!   committed sequence watermark, and only after the snapshot file is
+//!   atomically durable deletes the log segments behind the watermark.
+//!   Recovery = newest valid snapshot + replay of the WAL tail past its
+//!   watermark.
+//! * **deletes never resurrect.** Tombstones are committed under the
+//!   same version seam as adds (mirror invalidation included), snapshots
+//!   and corpus exports drop tombstoned rows at encode time, and replay
+//!   re-applies logged deletes in order.
+//!
+//! # Consistency cut
+//!
+//! One mutex ([`DurableStore`]'s commit lock) is held across
+//! [WAL append + fsync → index commit → watermark update] and across
+//! [serialize index → write snapshot → truncate WAL]. The watermark a
+//! snapshot records therefore exactly matches the index state it
+//! serializes — there is no window where a record is reflected in one
+//! but not the other. Lock order is always commit lock → index lock.
+//!
+//! All I/O goes through the injectable [`faultfs::Fs`] layer, so the
+//! whole lifecycle is testable under deterministic kill-points
+//! ([`faultfs::FaultFs`]) — torn appends, short writes, fsync errors,
+//! crashes between WAL append and index commit, crashes mid-compaction.
+
+pub mod faultfs;
+pub mod snapshot;
+pub mod wal;
+
+pub use faultfs::{FaultFs, FaultPlan, Fs, RealFs};
+pub use wal::WalRecord;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::devices::executor::RetrievalExecutor;
+use crate::vecstore::{persist, Index};
+
+/// Tuning for a [`DurableStore`].
+#[derive(Debug, Clone)]
+pub struct DurabilityOptions {
+    /// WAL segment roll size. Small segments truncate at finer grain;
+    /// large ones amortize file creation.
+    pub segment_bytes: usize,
+    /// When `tombstones / physical rows` crosses this after a commit,
+    /// [`DurableStore::maybe_compact`] rewrites the arenas and
+    /// checkpoints. ≤ 0 disables auto-compaction.
+    pub compact_tombstone_ratio: f64,
+}
+
+impl Default for DurabilityOptions {
+    fn default() -> DurabilityOptions {
+        DurabilityOptions { segment_bytes: 1 << 20, compact_tombstone_ratio: 0.25 }
+    }
+}
+
+/// Point-in-time durability counters for `/stats`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DurabilityStats {
+    /// Highest WAL sequence applied to the index.
+    pub committed_seq: u64,
+    pub wal_segments: usize,
+    pub wal_bytes: usize,
+    /// Records re-applied by the last recovery.
+    pub replayed_records: u64,
+    pub snapshots_written: u64,
+    pub compactions: u64,
+    /// Commits refused because the WAL append or fsync failed (the
+    /// documents were NOT acked).
+    pub wal_append_failures: u64,
+}
+
+/// What [`DurableStore::open`] found on disk.
+pub struct Recovery {
+    /// Newest valid snapshot payload (decode with
+    /// `vecstore::persist::decode_index`), if any.
+    pub snapshot: Option<Vec<u8>>,
+    /// Sequence the snapshot covers (0 = no snapshot).
+    pub watermark: u64,
+    /// WAL records past the watermark, in sequence order — the part of
+    /// the acked state the snapshot doesn't cover.
+    pub tail: Vec<WalRecord>,
+}
+
+/// Summary of a completed [`DurableStore::recover`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecoveryReport {
+    pub from_snapshot: bool,
+    pub watermark: u64,
+    pub replayed: u64,
+}
+
+struct Inner {
+    wal: wal::Wal,
+    /// Highest sequence whose record is applied to the index. Only moves
+    /// under the commit lock, after the index mutation it covers.
+    committed_seq: u64,
+}
+
+/// The durable corpus store: one per service, shared with the ingest
+/// pipeline and the server's delete/snapshot endpoints.
+pub struct DurableStore {
+    fs: Arc<dyn Fs>,
+    dir: PathBuf,
+    opts: DurabilityOptions,
+    inner: Mutex<Inner>,
+    replayed: AtomicU64,
+    snapshots: AtomicU64,
+    compactions: AtomicU64,
+    append_failures: AtomicU64,
+}
+
+impl DurableStore {
+    fn wal_dir(dir: &Path) -> PathBuf {
+        dir.join("wal")
+    }
+
+    fn snap_dir(dir: &Path) -> PathBuf {
+        dir.join("snapshots")
+    }
+
+    /// Open (or create) the store in `dir`: load the newest valid
+    /// snapshot, open the WAL (truncating any torn tail), and return the
+    /// store plus what a caller must replay. Most callers want
+    /// [`DurableStore::recover`], which also rebuilds the executor.
+    pub fn open(
+        fs: Arc<dyn Fs>,
+        dir: &Path,
+        opts: DurabilityOptions,
+    ) -> Result<(DurableStore, Recovery)> {
+        fs.create_dir_all(dir).context("durability: create store dir")?;
+        let snap = snapshot::load_newest(&fs, &Self::snap_dir(dir))
+            .context("durability: scan snapshots")?;
+        let (watermark, payload) = match snap {
+            Some((w, p)) => (w, Some(p)),
+            None => (0, None),
+        };
+        let (mut wal, records) = wal::Wal::open(fs.clone(), &Self::wal_dir(dir), opts.segment_bytes)
+            .context("durability: open WAL")?;
+        wal.ensure_next_seq(watermark + 1);
+        let tail: Vec<WalRecord> =
+            records.into_iter().filter(|r| r.seq() > watermark).collect();
+        // Until the caller replays the tail, the index only covers the
+        // watermark; `recover` advances this as it applies records.
+        let store = DurableStore {
+            fs,
+            dir: dir.to_path_buf(),
+            opts,
+            inner: Mutex::new(Inner { wal, committed_seq: watermark }),
+            replayed: AtomicU64::new(0),
+            snapshots: AtomicU64::new(0),
+            compactions: AtomicU64::new(0),
+            append_failures: AtomicU64::new(0),
+        };
+        Ok((store, Recovery { snapshot: payload, watermark, tail }))
+    }
+
+    /// Full recovery: open the store, rebuild the index (snapshot if one
+    /// verifies, else `make_index`), and replay the WAL tail by
+    /// re-embedding each upsert with `embed` (deterministic embeddings ⇒
+    /// bit-identical rows) and re-applying deletes, in sequence order.
+    pub fn recover<G, F>(
+        fs: Arc<dyn Fs>,
+        dir: &Path,
+        opts: DurabilityOptions,
+        make_index: G,
+        mut embed: F,
+    ) -> Result<(Arc<DurableStore>, Arc<RetrievalExecutor>, RecoveryReport)>
+    where
+        G: FnOnce() -> Box<dyn Index + Send + Sync>,
+        F: FnMut(&str) -> Result<Vec<f32>>,
+    {
+        let (store, recovery) = DurableStore::open(fs, dir, opts)?;
+        let index = match &recovery.snapshot {
+            Some(payload) => {
+                persist::decode_index(payload).context("durability: decode snapshot")?
+            }
+            None => make_index(),
+        };
+        let exec = Arc::new(RetrievalExecutor::new(index));
+        let mut last_seq = recovery.watermark;
+        for rec in &recovery.tail {
+            match rec {
+                WalRecord::Upsert { id, text, .. } => {
+                    let v = embed(text)
+                        .with_context(|| format!("durability: re-embed doc {id} on replay"))?;
+                    exec.upsert_batch(&[(*id, v)]);
+                }
+                WalRecord::Delete { id, .. } => {
+                    exec.remove(*id);
+                }
+            }
+            last_seq = rec.seq();
+        }
+        let replayed = recovery.tail.len() as u64;
+        store.inner.lock().unwrap().committed_seq = last_seq;
+        store.replayed.store(replayed, Ordering::Relaxed);
+        let report = RecoveryReport {
+            from_snapshot: recovery.snapshot.is_some(),
+            watermark: recovery.watermark,
+            replayed,
+        };
+        Ok((Arc::new(store), exec, report))
+    }
+
+    /// Log an upsert batch and, once it is durable, run `commit` (the
+    /// index mutation) — the ack ⇒ WAL-durable half of the contract. On
+    /// a WAL error `commit` never runs and the error propagates: the
+    /// pipeline must NOT ack those documents.
+    pub fn log_upserts<F: FnOnce()>(&self, docs: &[(u64, &str)], commit: F) -> Result<()> {
+        let recs: Vec<WalRecord> = docs
+            .iter()
+            .map(|(id, text)| WalRecord::Upsert { seq: 0, id: *id, text: (*text).to_string() })
+            .collect();
+        self.log_and_commit(recs, commit)
+    }
+
+    /// Log one delete and, once durable, run `commit` (the tombstone +
+    /// version bump).
+    pub fn log_delete<F: FnOnce()>(&self, id: u64, commit: F) -> Result<()> {
+        self.log_and_commit(vec![WalRecord::Delete { seq: 0, id }], commit)
+    }
+
+    fn log_and_commit<F: FnOnce()>(&self, mut recs: Vec<WalRecord>, commit: F) -> Result<()> {
+        if recs.is_empty() {
+            commit();
+            return Ok(());
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if let Err(e) = inner.wal.append_batch(&mut recs) {
+            self.append_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(e).context("durability: WAL append failed, refusing to ack");
+        }
+        // One fsync per commit batch — the batching the pipeline's
+        // per-batch commit already provides.
+        if let Err(e) = inner.wal.sync() {
+            self.append_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(e).context("durability: WAL fsync failed, refusing to ack");
+        }
+        commit();
+        inner.committed_seq = recs.last().expect("non-empty batch").seq();
+        Ok(())
+    }
+
+    /// Checkpoint: serialize the index under the commit lock (so the
+    /// watermark exactly matches the serialized state), write the
+    /// snapshot atomically, then truncate the WAL behind it. Returns the
+    /// watermark covered.
+    pub fn snapshot(&self, exec: &RetrievalExecutor) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let (payload, _version) = exec
+            .snapshot_bytes()
+            .context("durability: index has no snapshot codec")?;
+        let watermark = inner.committed_seq;
+        snapshot::write(&self.fs, &Self::snap_dir(&self.dir), watermark, &payload)
+            .context("durability: write snapshot")?;
+        inner
+            .wal
+            .truncate_through(watermark)
+            .context("durability: truncate WAL behind snapshot")?;
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+        Ok(watermark)
+    }
+
+    /// Compaction trigger, called after ingest commits: when tombstone
+    /// density crosses the configured ratio, rewrite the arenas (under
+    /// the index's version seam — mirrors re-seed as for any mutation)
+    /// and checkpoint so the WAL behind the rewrite truncates. Returns
+    /// rows reclaimed, `None` when below threshold or disabled.
+    pub fn maybe_compact(&self, exec: &RetrievalExecutor) -> Result<Option<usize>> {
+        let ratio = self.opts.compact_tombstone_ratio;
+        if ratio <= 0.0 {
+            return Ok(None);
+        }
+        let dead = exec.tombstones();
+        let physical = dead + exec.len();
+        if physical == 0 || (dead as f64) < ratio * physical as f64 {
+            return Ok(None);
+        }
+        let reclaimed = exec.compact();
+        self.snapshot(exec)?;
+        self.compactions.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(reclaimed))
+    }
+
+    /// Current counters for `/stats`.
+    pub fn stats(&self) -> DurabilityStats {
+        let inner = self.inner.lock().unwrap();
+        DurabilityStats {
+            committed_seq: inner.committed_seq,
+            wal_segments: inner.wal.segment_count(),
+            wal_bytes: inner.wal.bytes(),
+            replayed_records: self.replayed.load(Ordering::Relaxed),
+            snapshots_written: self.snapshots.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            wal_append_failures: self.append_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vecstore::FlatIndex;
+
+    const DIM: usize = 8;
+
+    /// Deterministic toy embedding: same text ⇒ same unit vector.
+    fn embed(text: &str) -> Result<Vec<f32>> {
+        let mut state = crate::runtime::tokenizer::fnv1a64(text.as_bytes());
+        let mut v: Vec<f32> = (0..DIM)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect();
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+        v.iter_mut().for_each(|x| *x /= n);
+        Ok(v)
+    }
+
+    fn recover_all(
+        fs: &Arc<FaultFs>,
+        opts: &DurabilityOptions,
+    ) -> (Arc<DurableStore>, Arc<RetrievalExecutor>, RecoveryReport) {
+        let dynfs: Arc<dyn Fs> = fs.clone();
+        DurableStore::recover(
+            dynfs,
+            Path::new("/store"),
+            opts.clone(),
+            || Box::new(FlatIndex::new(DIM)),
+            embed,
+        )
+        .unwrap()
+    }
+
+    fn commit_doc(store: &DurableStore, exec: &RetrievalExecutor, id: u64, text: &str) -> Result<()> {
+        let v = embed(text)?;
+        store.log_upserts(&[(id, text)], || {
+            exec.upsert_batch(&[(id, v)]);
+        })
+    }
+
+    #[test]
+    fn acked_docs_survive_a_crash_bit_identically() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions::default();
+        let (store, exec, _) = recover_all(&fs, &opts);
+        for (id, text) in [(1, "alpha"), (2, "beta"), (3, "gamma")] {
+            commit_doc(&store, &exec, id, text).unwrap();
+        }
+        store.log_delete(2, || {
+            exec.remove(2);
+        })
+        .unwrap();
+        let q = embed("alpha").unwrap();
+        let want: Vec<(u64, u32)> =
+            exec.search(&q, 3).iter().map(|h| (h.id, h.score.to_bits())).collect();
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (store2, exec2, report) = recover_all(&fs, &opts);
+        assert_eq!(report.replayed, 4, "3 upserts + 1 delete");
+        assert!(!report.from_snapshot);
+        assert_eq!(exec2.len(), 2);
+        let got: Vec<(u64, u32)> =
+            exec2.search(&q, 3).iter().map(|h| (h.id, h.score.to_bits())).collect();
+        assert_eq!(got, want, "replayed rows score bit-identically");
+        assert!(got.iter().all(|(id, _)| *id != 2), "deleted id stays deleted");
+        assert_eq!(store2.stats().committed_seq, 4);
+    }
+
+    #[test]
+    fn snapshot_truncates_wal_and_recovery_prefers_it() {
+        let fs = Arc::new(FaultFs::new());
+        // Tiny segments so every commit rolls one.
+        let opts = DurabilityOptions { segment_bytes: 16, ..Default::default() };
+        let (store, exec, _) = recover_all(&fs, &opts);
+        for i in 0..6u64 {
+            commit_doc(&store, &exec, i, &format!("doc number {i}")).unwrap();
+        }
+        assert!(store.stats().wal_segments >= 5);
+        let watermark = store.snapshot(&exec).unwrap();
+        assert_eq!(watermark, 6);
+        assert_eq!(store.stats().wal_segments, 0, "log fully behind the snapshot");
+        // Two more commits after the checkpoint.
+        commit_doc(&store, &exec, 10, "post snapshot a").unwrap();
+        store.log_delete(3, || {
+            exec.remove(3);
+        })
+        .unwrap();
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (store2, exec2, report) = recover_all(&fs, &opts);
+        assert!(report.from_snapshot);
+        assert_eq!(report.watermark, 6);
+        assert_eq!(report.replayed, 2, "only the tail past the watermark");
+        assert_eq!(exec2.len(), 6, "6 originals - 1 delete + 1 new");
+        assert_eq!(store2.stats().committed_seq, 8);
+        // Seqs continue past the recovered point: no reuse.
+        commit_doc(&store2, &exec2, 11, "after recovery").unwrap();
+        assert_eq!(store2.stats().committed_seq, 9);
+    }
+
+    #[test]
+    fn wal_failure_refuses_the_ack_and_index_stays_clean() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions::default();
+        let (store, exec, _) = recover_all(&fs, &opts);
+        commit_doc(&store, &exec, 1, "ok").unwrap();
+        // Restart with the NEXT fsync poisoned (recovery itself does no
+        // mutating ops, so the first commit's append is op 0, its fsync
+        // op 1): the commit must be refused and the index untouched.
+        fs.restart(FaultPlan { fsync_fail_at: Some(1), ..Default::default() });
+        // Re-recover on the restarted fs (the old store handle is dead).
+        let (store, exec, _) = recover_all(&fs, &opts);
+        let err = commit_doc(&store, &exec, 2, "will fail");
+        assert!(err.is_err(), "fsync EIO must refuse the ack");
+        assert_eq!(exec.len(), 1, "index not mutated on a refused commit");
+        assert_eq!(store.stats().wal_append_failures, 1);
+        // The store keeps working for later commits.
+        commit_doc(&store, &exec, 3, "recovers").unwrap();
+        assert_eq!(exec.len(), 2);
+    }
+
+    #[test]
+    fn maybe_compact_fires_on_density_and_checkpoints() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions { compact_tombstone_ratio: 0.4, ..Default::default() };
+        let (store, exec, _) = recover_all(&fs, &opts);
+        for i in 0..10u64 {
+            commit_doc(&store, &exec, i, &format!("doc {i}")).unwrap();
+        }
+        // 3 deletes of 10: 30% < 40% — below threshold.
+        for id in [0u64, 1, 2] {
+            store.log_delete(id, || {
+                exec.remove(id);
+            })
+            .unwrap();
+        }
+        assert_eq!(store.maybe_compact(&exec).unwrap(), None);
+        // Two more: 5/10 = 50% ≥ 40% — compact + checkpoint.
+        for id in [3u64, 4] {
+            store.log_delete(id, || {
+                exec.remove(id);
+            })
+            .unwrap();
+        }
+        let reclaimed = store.maybe_compact(&exec).unwrap();
+        assert_eq!(reclaimed, Some(5));
+        assert_eq!(exec.tombstones(), 0);
+        let stats = store.stats();
+        assert_eq!(stats.compactions, 1);
+        assert_eq!(stats.snapshots_written, 1);
+        assert_eq!(stats.wal_segments, 0, "churn behind the checkpoint is gone");
+        // Crash now: recovery must come entirely from the snapshot, with
+        // the deleted ids gone for good.
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (_, exec2, report) = recover_all(&fs, &opts);
+        assert!(report.from_snapshot);
+        assert_eq!(report.replayed, 0);
+        assert_eq!(exec2.len(), 5);
+        for id in 0..5u64 {
+            let q = embed(&format!("doc {id}")).unwrap();
+            assert!(exec2.search(&q, 5).iter().all(|h| h.id != id), "id {id} resurrected");
+        }
+    }
+
+    #[test]
+    fn disabled_ratio_never_compacts() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions { compact_tombstone_ratio: 0.0, ..Default::default() };
+        let (store, exec, _) = recover_all(&fs, &opts);
+        commit_doc(&store, &exec, 1, "a").unwrap();
+        store.log_delete(1, || {
+            exec.remove(1);
+        })
+        .unwrap();
+        assert_eq!(store.maybe_compact(&exec).unwrap(), None);
+        assert_eq!(exec.tombstones(), 1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Snapshot files: the checkpoint that lets the WAL truncate.
+//!
+//! A snapshot is the serialized index (see `vecstore::persist`) plus the
+//! WAL sequence number it covers (its *watermark*): every logged record
+//! with `seq <= watermark` is reflected in the payload, so after a
+//! snapshot lands the log behind the watermark is dead weight.
+//!
+//! Files are `snap-<watermark>.snap`, written atomically (tmp + rename
+//! via [`Fs::write_atomic`]) and CRC-protected:
+//!
+//! ```text
+//! [magic "WVSN"][version u8][watermark u64][crc32(payload) u32][payload]
+//! ```
+//!
+//! [`load_newest`] walks snapshots newest-first and returns the first
+//! one that verifies — a crash mid-snapshot leaves either no new file
+//! (rename never happened) or a complete one, and a corrupt file is
+//! skipped in favor of the previous checkpoint rather than trusted.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::faultfs::Fs;
+use super::wal::crc32;
+
+const MAGIC: &[u8; 4] = b"WVSN";
+const VERSION: u8 = 1;
+
+fn snapshot_name(watermark: u64) -> String {
+    format!("snap-{watermark:016x}.snap")
+}
+
+fn parse_snapshot_name(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("snap-")?.strip_suffix(".snap")?;
+    u64::from_str_radix(hex, 16).ok()
+}
+
+fn encode(watermark: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(17 + payload.len());
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&watermark.to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn decode(bytes: &[u8]) -> Option<(u64, Vec<u8>)> {
+    if bytes.len() < 17 || &bytes[0..4] != MAGIC || bytes[4] != VERSION {
+        return None;
+    }
+    let watermark = u64::from_le_bytes(bytes[5..13].try_into().unwrap());
+    let crc = u32::from_le_bytes(bytes[13..17].try_into().unwrap());
+    let payload = &bytes[17..];
+    if crc32(payload) != crc {
+        return None;
+    }
+    Some((watermark, payload.to_vec()))
+}
+
+/// Write a snapshot covering `watermark`, then delete every older
+/// snapshot file (the new one is already durable — `write_atomic`
+/// syncs). Returns the path written.
+pub fn write(fs: &Arc<dyn Fs>, dir: &Path, watermark: u64, payload: &[u8]) -> io::Result<PathBuf> {
+    fs.create_dir_all(dir)?;
+    let path = dir.join(snapshot_name(watermark));
+    fs.write_atomic(&path, &encode(watermark, payload))?;
+    for name in fs.list(dir)? {
+        if let Some(w) = parse_snapshot_name(&name) {
+            if w < watermark {
+                // Older checkpoints are strictly dominated; best-effort
+                // removal (a leftover is re-collected next time).
+                let _ = fs.remove(&dir.join(name));
+            }
+        }
+    }
+    Ok(path)
+}
+
+/// Load the newest snapshot that verifies: `(watermark, index payload)`,
+/// or `None` when no usable snapshot exists. Corrupt candidates are
+/// skipped (never deleted here — recovery stays read-only).
+pub fn load_newest(fs: &Arc<dyn Fs>, dir: &Path) -> io::Result<Option<(u64, Vec<u8>)>> {
+    let mut marks: Vec<u64> = match fs.list(dir) {
+        Ok(names) => names.iter().filter_map(|n| parse_snapshot_name(n)).collect(),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    marks.sort_unstable_by(|a, b| b.cmp(a));
+    for w in marks {
+        let bytes = fs.read(&dir.join(snapshot_name(w)))?;
+        if let Some(found) = decode(&bytes) {
+            return Ok(Some(found));
+        }
+        log::warn!("durability: snapshot {} failed verification, skipping", snapshot_name(w));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::faultfs::{FaultFs, FaultPlan};
+    use super::*;
+    use std::path::PathBuf;
+
+    fn dir() -> PathBuf {
+        PathBuf::from("/snaps")
+    }
+
+    fn fx() -> Arc<dyn Fs> {
+        Arc::new(FaultFs::new())
+    }
+
+    #[test]
+    fn write_then_load_roundtrips_and_prunes_older() {
+        let fs = fx();
+        write(&fs, &dir(), 5, b"five").unwrap();
+        write(&fs, &dir(), 9, b"nine").unwrap();
+        assert_eq!(load_newest(&fs, &dir()).unwrap(), Some((9, b"nine".to_vec())));
+        // The older file was pruned.
+        assert!(!fs.exists(&dir().join(snapshot_name(5))));
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous() {
+        let fs = fx();
+        write(&fs, &dir(), 5, b"five").unwrap();
+        // Hand-craft a newer snapshot with a bad CRC (bypassing prune).
+        let mut bad = encode(9, b"nine");
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        fs.write_atomic(&dir().join(snapshot_name(9)), &bad).unwrap();
+        assert_eq!(load_newest(&fs, &dir()).unwrap(), Some((5, b"five".to_vec())));
+    }
+
+    #[test]
+    fn crash_during_write_keeps_the_old_checkpoint() {
+        let fs: Arc<FaultFs> = Arc::new(FaultFs::new());
+        let dynfs: Arc<dyn Fs> = fs.clone();
+        write(&dynfs, &dir(), 3, b"three").unwrap();
+        // Crash exactly at the atomic write of the next snapshot
+        // (restart zeroes the op counter; the `write_atomic` is op 0).
+        fs.restart(FaultPlan { crash_at_op: Some(0), ..Default::default() });
+        assert!(write(&dynfs, &dir(), 7, b"seven").is_err());
+        fs.restart(FaultPlan::default());
+        assert_eq!(load_newest(&dynfs, &dir()).unwrap(), Some((3, b"three".to_vec())));
+    }
+
+    #[test]
+    fn empty_dir_loads_none() {
+        let fs = fx();
+        assert_eq!(load_newest(&fs, &dir()).unwrap(), None);
+    }
+}

@@ -1,0 +1,559 @@
+//! Segmented, checksummed write-ahead log for corpus mutations.
+//!
+//! Records are length-prefixed and CRC-protected:
+//!
+//! ```text
+//! [len: u32][crc32(payload): u32][payload: seq u64 · tag u8 · body]
+//! ```
+//!
+//! The log is a sequence of segment files `wal-<first-seq>.log`; a
+//! segment seals when it crosses `segment_bytes` and the next record
+//! starts a new file. Sealing is what makes truncation cheap: once a
+//! snapshot covers sequence `w`, every segment whose records are all
+//! ≤ `w` is deleted whole — no rewriting (see [`Wal::truncate_through`]).
+//!
+//! **Torn tails.** Appends go to the page cache and are fsynced once per
+//! ingest commit batch (the caller's one [`Wal::sync`] per
+//! [`Wal::append_batch`]). A crash can therefore leave a partial record
+//! at the end of the last segment. [`Wal::open`] scans every segment
+//! record-by-record, verifying length bounds and CRC; at the first bad
+//! record it truncates that file there and ignores any later segments
+//! (nothing after a torn record was acknowledged — the ack waits for the
+//! fsync). Everything that *was* acked re-reads intact, by CRC.
+//!
+//! **Short writes.** A *failed* append (EIO mid-write) can leave partial
+//! record bytes at the tail while the process keeps running — and a later
+//! successful append would then bury acked records behind a torn region
+//! that [`Wal::open`] cuts away. [`Wal::append_batch`] therefore repairs
+//! the tail on append failure (truncating the segment back to its last
+//! known-good length); if the repair itself fails, the log poisons
+//! itself and refuses every further append — read-only beats silently
+//! lossy.
+
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::faultfs::Fs;
+
+/// CRC-32 (IEEE 802.3, reflected). Bitwise — the WAL appends a few
+/// dozen records per commit, so table-free keeps the module dependency-
+/// and allocation-free at negligible cost.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+const TAG_UPSERT: u8 = 1;
+const TAG_DELETE: u8 = 2;
+
+/// One logged corpus mutation. `seq` is assigned by the log, dense and
+/// strictly increasing; replay applies records in `seq` order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WalRecord {
+    /// Insert-or-replace document `id` with `text` (re-embedded on
+    /// replay — embeddings are deterministic per text, so the replayed
+    /// row scores bit-identically).
+    Upsert { seq: u64, id: u64, text: String },
+    /// Tombstone document `id`.
+    Delete { seq: u64, id: u64 },
+}
+
+impl WalRecord {
+    pub fn seq(&self) -> u64 {
+        match self {
+            WalRecord::Upsert { seq, .. } | WalRecord::Delete { seq, .. } => *seq,
+        }
+    }
+
+    fn encode_payload(&self, out: &mut Vec<u8>) {
+        match self {
+            WalRecord::Upsert { seq, id, text } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.push(TAG_UPSERT);
+                out.extend_from_slice(&id.to_le_bytes());
+                out.extend_from_slice(text.as_bytes());
+            }
+            WalRecord::Delete { seq, id } => {
+                out.extend_from_slice(&seq.to_le_bytes());
+                out.push(TAG_DELETE);
+                out.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+    }
+
+    fn decode_payload(payload: &[u8]) -> Option<WalRecord> {
+        if payload.len() < 17 {
+            return None;
+        }
+        let seq = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+        let tag = payload[8];
+        let id = u64::from_le_bytes(payload[9..17].try_into().unwrap());
+        match tag {
+            TAG_UPSERT => {
+                let text = std::str::from_utf8(&payload[17..]).ok()?.to_string();
+                Some(WalRecord::Upsert { seq, id, text })
+            }
+            TAG_DELETE if payload.len() == 17 => Some(WalRecord::Delete { seq, id }),
+            _ => None,
+        }
+    }
+}
+
+/// Append `rec` (length prefix + CRC + payload) to `out`.
+fn encode_record(out: &mut Vec<u8>, rec: &WalRecord) {
+    let mut payload = Vec::new();
+    rec.encode_payload(&mut payload);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+/// Largest payload [`Wal::open`] will believe; anything bigger is a
+/// corrupt length prefix, treated like a torn tail.
+const MAX_PAYLOAD: usize = 16 << 20;
+
+/// Decode records from `buf` until the end or the first bad record.
+/// Returns the records and the byte offset of the valid prefix.
+fn decode_valid_prefix(buf: &[u8]) -> (Vec<WalRecord>, usize) {
+    let mut recs = Vec::new();
+    let mut pos = 0usize;
+    while buf.len() - pos >= 8 {
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if len > MAX_PAYLOAD || buf.len() - pos - 8 < len {
+            break; // torn or corrupt length
+        }
+        let payload = &buf[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            break; // torn or corrupt payload
+        }
+        match WalRecord::decode_payload(payload) {
+            Some(rec) => recs.push(rec),
+            None => break, // structurally invalid payload
+        }
+        pos += 8 + len;
+    }
+    (recs, pos)
+}
+
+/// One on-disk segment and the seq range it holds.
+struct Segment {
+    path: PathBuf,
+    first_seq: u64,
+    last_seq: u64,
+    bytes: usize,
+}
+
+fn segment_name(first_seq: u64) -> String {
+    format!("wal-{first_seq:016x}.log")
+}
+
+fn parse_segment_name(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("wal-")?.strip_suffix(".log")?;
+    u64::from_str_radix(hex, 16).ok()
+}
+
+/// The write-ahead log. Single-writer: callers serialize appends (the
+/// durable store holds its commit lock across append + sync + index
+/// commit).
+pub struct Wal {
+    fs: Arc<dyn Fs>,
+    dir: PathBuf,
+    segment_bytes: usize,
+    segments: Vec<Segment>,
+    next_seq: u64,
+    /// Set when a failed append could not be repaired: the tail may hold
+    /// partial bytes that a later append would entomb acked records
+    /// behind, so every further append is refused.
+    poisoned: bool,
+}
+
+impl Wal {
+    /// Open (or create) the log in `dir`. Scans all segments, truncates
+    /// the torn tail if any, and returns the surviving records in seq
+    /// order alongside the ready-to-append log.
+    pub fn open(fs: Arc<dyn Fs>, dir: &Path, segment_bytes: usize) -> io::Result<(Wal, Vec<WalRecord>)> {
+        fs.create_dir_all(dir)?;
+        let mut firsts: Vec<u64> =
+            fs.list(dir)?.iter().filter_map(|n| parse_segment_name(n)).collect();
+        firsts.sort_unstable();
+
+        let mut segments = Vec::new();
+        let mut records = Vec::new();
+        let mut next_seq = 1u64;
+        let mut torn = false;
+        for (i, first) in firsts.iter().enumerate() {
+            let path = dir.join(segment_name(*first));
+            if torn {
+                // Nothing after a torn record was acked; drop the file.
+                fs.remove(&path)?;
+                continue;
+            }
+            let buf = fs.read(&path)?;
+            let (recs, valid) = decode_valid_prefix(&buf);
+            if valid < buf.len() {
+                torn = true;
+                fs.truncate(&path, valid as u64)?;
+            }
+            if recs.is_empty() {
+                // Fully torn (or empty) segment: keep only if it is the
+                // last — it stays the active segment.
+                if torn || i + 1 < firsts.len() {
+                    fs.remove(&path)?;
+                    continue;
+                }
+                segments.push(Segment { path, first_seq: *first, last_seq: 0, bytes: 0 });
+                continue;
+            }
+            let seg = Segment {
+                path,
+                first_seq: recs[0].seq(),
+                last_seq: recs[recs.len() - 1].seq(),
+                bytes: valid,
+            };
+            next_seq = seg.last_seq + 1;
+            segments.push(seg);
+            records.extend(recs);
+        }
+        let wal =
+            Wal { fs, dir: dir.to_path_buf(), segment_bytes, segments, next_seq, poisoned: false };
+        Ok((wal, records))
+    }
+
+    /// Next sequence number [`Wal::append_batch`] will assign.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Raise the next sequence number to at least `floor`. Needed when a
+    /// snapshot watermark outlives every WAL segment (the log was fully
+    /// truncated behind it): without the floor a reopened empty log
+    /// would hand out seqs the watermark already covers, and replay
+    /// would silently skip them.
+    pub fn ensure_next_seq(&mut self, floor: u64) {
+        if floor > self.next_seq {
+            self.next_seq = floor;
+        }
+    }
+
+    /// Live segment files (observability).
+    pub fn segment_count(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Bytes across live segments (observability).
+    pub fn bytes(&self) -> usize {
+        self.segments.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Assign sequence numbers to `recs` (in order), encode them into
+    /// one buffer, and append it with a single write. NOT durable until
+    /// [`Wal::sync`] — the caller fsyncs once per commit batch. On error
+    /// the in-memory log state is unchanged (the next open re-scans the
+    /// tail and drops any partial bytes by CRC).
+    pub fn append_batch(&mut self, recs: &mut [WalRecord]) -> io::Result<()> {
+        if recs.is_empty() {
+            return Ok(());
+        }
+        if self.poisoned {
+            return Err(io::Error::other(
+                "wal: poisoned by an unrepaired append failure, refusing to append",
+            ));
+        }
+        let first_seq = self.next_seq;
+        for (i, rec) in recs.iter_mut().enumerate() {
+            let seq = first_seq + i as u64;
+            match rec {
+                WalRecord::Upsert { seq: s, .. } | WalRecord::Delete { seq: s, .. } => *s = seq,
+            }
+        }
+        let mut buf = Vec::new();
+        for rec in recs.iter() {
+            encode_record(&mut buf, rec);
+        }
+        // Roll to a new segment when the active one is full (never
+        // mid-batch: a commit's records stay contiguous in one file).
+        let need_new = match self.segments.last() {
+            Some(s) => s.bytes >= self.segment_bytes,
+            None => true,
+        };
+        if need_new {
+            self.segments.push(Segment {
+                path: self.dir.join(segment_name(first_seq)),
+                first_seq,
+                last_seq: 0,
+                bytes: 0,
+            });
+        }
+        let seg = self.segments.last_mut().unwrap();
+        if let Err(e) = self.fs.append(&seg.path, &buf) {
+            // A short write may have left partial bytes at the tail. Cut
+            // the file back to its last known-good length so a later
+            // successful append cannot bury acked records behind a torn
+            // region (open() stops at the first bad record). If even the
+            // repair fails, poison the log: no more appends.
+            if seg.bytes > 0 && self.fs.truncate(&seg.path, seg.bytes as u64).is_err() {
+                self.poisoned = true;
+            } else if seg.bytes == 0 && self.fs.exists(&seg.path) {
+                // Fresh segment whose very first append short-wrote: the
+                // partial bytes ARE the whole file.
+                if self.fs.truncate(&seg.path, 0).is_err() {
+                    self.poisoned = true;
+                }
+            }
+            return Err(e);
+        }
+        seg.bytes += buf.len();
+        if seg.last_seq == 0 && seg.first_seq > first_seq {
+            // Reopened empty active segment named ahead of these seqs —
+            // cannot happen with dense seq assignment, but keep the range
+            // honest if it ever did.
+            seg.first_seq = first_seq;
+        }
+        seg.last_seq = first_seq + recs.len() as u64 - 1;
+        self.next_seq = seg.last_seq + 1;
+        Ok(())
+    }
+
+    /// fsync the active segment: everything appended so far is durable.
+    pub fn sync(&self) -> io::Result<()> {
+        match self.segments.last() {
+            Some(s) if s.bytes > 0 => self.fs.sync(&s.path),
+            _ => Ok(()),
+        }
+    }
+
+    /// Drop every segment whose records are all covered by a snapshot at
+    /// sequence `through` (kept: any segment holding a record > `through`,
+    /// plus an empty active segment for future appends). Returns segments
+    /// deleted.
+    pub fn truncate_through(&mut self, through: u64) -> io::Result<usize> {
+        let mut deleted = 0;
+        let mut kept = Vec::new();
+        let n = self.segments.len();
+        for (i, seg) in self.segments.drain(..).enumerate() {
+            let covered = seg.bytes > 0 && seg.last_seq <= through;
+            let is_last = i + 1 == n;
+            if covered && !is_last {
+                self.fs.remove(&seg.path)?;
+                deleted += 1;
+            } else if covered && is_last {
+                // Fully-covered active segment: delete it and let the
+                // next append start a fresh file at the new seq.
+                self.fs.remove(&seg.path)?;
+                deleted += 1;
+            } else {
+                kept.push(seg);
+            }
+        }
+        self.segments = kept;
+        Ok(deleted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::faultfs::{FaultFs, FaultPlan};
+    use super::*;
+    use std::path::PathBuf;
+
+    fn dir() -> PathBuf {
+        PathBuf::from("/wal")
+    }
+
+    fn up(id: u64, text: &str) -> WalRecord {
+        WalRecord::Upsert { seq: 0, id, text: text.to_string() }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_sync_reopen_replays_in_order() {
+        let fs = Arc::new(FaultFs::new());
+        let (mut wal, recs) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        assert!(recs.is_empty());
+        let mut batch = vec![up(1, "one"), WalRecord::Delete { seq: 0, id: 9 }, up(2, "two")];
+        wal.append_batch(&mut batch).unwrap();
+        wal.sync().unwrap();
+        assert_eq!(batch[0].seq(), 1);
+        assert_eq!(batch[2].seq(), 3);
+        assert_eq!(wal.next_seq(), 4);
+        drop(wal);
+        let (wal, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+        assert_eq!(recs, batch);
+        assert_eq!(wal.next_seq(), 4);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_to_the_acked_prefix() {
+        let fs = Arc::new(FaultFs::new());
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        let mut a = vec![up(1, "acked")];
+        wal.append_batch(&mut a).unwrap();
+        wal.sync().unwrap();
+        // Second batch appended but NOT synced, then the machine dies
+        // keeping a 5-byte torn shred of it.
+        let mut b = vec![up(2, "lost")];
+        wal.append_batch(&mut b).unwrap();
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (wal2, recs) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        assert_eq!(recs, a, "exactly the synced prefix");
+        assert_eq!(wal2.next_seq(), 2);
+        drop(wal2);
+        // And the truncation is idempotent across another reopen.
+        let (_, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+        assert_eq!(recs, a);
+    }
+
+    #[test]
+    fn torn_tail_with_partial_bytes_survived() {
+        for torn_keep in [1usize, 3, 7, 12] {
+            let fs = Arc::new(FaultFs::with_plan(FaultPlan { torn_keep, ..Default::default() }));
+            let (mut wal, _) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+            let mut a = vec![up(1, "acked")];
+            wal.append_batch(&mut a).unwrap();
+            wal.sync().unwrap();
+            let mut b = vec![up(2, "torn away")];
+            wal.append_batch(&mut b).unwrap();
+            fs.crash_now();
+            fs.restart(FaultPlan::default());
+            let (_, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+            assert_eq!(recs, a, "torn_keep={torn_keep}");
+        }
+    }
+
+    #[test]
+    fn corrupt_middle_byte_truncates_from_there() {
+        let fs = Arc::new(FaultFs::new());
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        let mut batch = vec![up(1, "first"), up(2, "second"), up(3, "third")];
+        wal.append_batch(&mut batch).unwrap();
+        wal.sync().unwrap();
+        // Flip one byte in the middle record's payload.
+        let path = dir().join(segment_name(1));
+        let mut bytes = fs.read(&path).unwrap();
+        let rec1_len = 8 + 17 + 5; // header + fixed payload + "first"
+        bytes[rec1_len + 12] ^= 0xff;
+        fs.write_atomic(&path, &bytes).unwrap();
+        let (_, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+        assert_eq!(recs, batch[..1], "valid prefix only");
+    }
+
+    #[test]
+    fn segments_roll_and_truncate_behind_a_watermark() {
+        let fs = Arc::new(FaultFs::new());
+        // Tiny segments: every batch rolls a new file.
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 8).unwrap();
+        for i in 0..5u64 {
+            let mut b = vec![up(i, "xxxxxxxxxxxxxxxx")];
+            wal.append_batch(&mut b).unwrap();
+            wal.sync().unwrap();
+        }
+        assert_eq!(wal.segment_count(), 5);
+        assert!(wal.bytes() > 0);
+        // Snapshot covered seq ≤ 3: segments 1..=3 go, 4..=5 stay.
+        let deleted = wal.truncate_through(3).unwrap();
+        assert_eq!(deleted, 3);
+        assert_eq!(wal.segment_count(), 2);
+        let (_, recs) = Wal::open(fs.clone(), &dir(), 8).unwrap();
+        let seqs: Vec<u64> = recs.iter().map(|r| r.seq()).collect();
+        assert_eq!(seqs, vec![4, 5]);
+        // Covering everything empties the log; appends still work after.
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 8).unwrap();
+        wal.truncate_through(5).unwrap();
+        assert_eq!(wal.segment_count(), 0);
+        let mut b = vec![up(9, "after")];
+        wal.append_batch(&mut b).unwrap();
+        wal.sync().unwrap();
+        assert_eq!(b[0].seq(), 6, "seq continues after truncation");
+        let (_, recs) = Wal::open(fs, &dir(), 8).unwrap();
+        assert_eq!(recs, b);
+    }
+
+    #[test]
+    fn short_write_is_repaired_and_later_acks_survive() {
+        // Op 2 short-writes half a record; the repair (op 3) cuts it
+        // away, so the NEXT append lands on a clean tail and its record
+        // must survive replay — the failure mode this guards against is
+        // a torn region mid-log entombing everything after it.
+        let fs = Arc::new(FaultFs::with_plan(FaultPlan {
+            short_write_at: Some(2),
+            ..Default::default()
+        }));
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        let mut a = vec![up(1, "first acked")];
+        wal.append_batch(&mut a).unwrap(); // op 0
+        wal.sync().unwrap(); // op 1
+        let mut b = vec![up(2, "short-written, refused")];
+        assert!(wal.append_batch(&mut b).is_err()); // op 2 + repair op 3
+        let mut c = vec![up(3, "acked after the repair")];
+        wal.append_batch(&mut c).unwrap(); // op 4
+        wal.sync().unwrap(); // op 5
+        assert_eq!(c[0].seq(), 2, "the refused batch's seq is reassigned");
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (_, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+        assert_eq!(recs, vec![a[0].clone(), c[0].clone()]);
+    }
+
+    #[test]
+    fn unrepairable_append_failure_poisons_the_log() {
+        // Short write at op 2 AND a crash at the repair truncate (op 3):
+        // the wal cannot prove its tail is clean, so it must refuse
+        // every further append rather than risk burying acked records.
+        let fs = Arc::new(FaultFs::with_plan(FaultPlan {
+            short_write_at: Some(2),
+            crash_at_op: Some(3),
+            ..Default::default()
+        }));
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        let mut a = vec![up(1, "acked")];
+        wal.append_batch(&mut a).unwrap(); // op 0
+        wal.sync().unwrap(); // op 1
+        let mut b = vec![up(2, "short write, repair dies")];
+        assert!(wal.append_batch(&mut b).is_err());
+        // Even after the machine comes back, this wal handle stays
+        // read-only; recovery reopens a fresh one.
+        fs.restart(FaultPlan::default());
+        let mut c = vec![up(3, "refused")];
+        assert!(wal.append_batch(&mut c).is_err(), "poisoned wal refuses appends");
+        let (_, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+        assert_eq!(recs, a, "exactly the acked prefix survives");
+    }
+
+    #[test]
+    fn unsynced_append_error_leaves_reopenable_log() {
+        // An append that fails (machine down) must not wedge reopen.
+        let fs = Arc::new(FaultFs::with_plan(FaultPlan {
+            crash_at_op: Some(3),
+            ..Default::default()
+        }));
+        let (mut wal, _) = Wal::open(fs.clone(), &dir(), 1 << 20).unwrap();
+        let mut a = vec![up(1, "ok")];
+        wal.append_batch(&mut a).unwrap(); // op 0
+        wal.sync().unwrap(); // op 1
+        let mut b = vec![up(2, "ok2")];
+        wal.append_batch(&mut b).unwrap(); // op 2
+        let mut c = vec![up(3, "dies")];
+        assert!(wal.append_batch(&mut c).is_err()); // op 3 crashes
+        fs.restart(FaultPlan::default());
+        let (_, recs) = Wal::open(fs, &dir(), 1 << 20).unwrap();
+        // Only the synced record survives; the unsynced-but-successful
+        // append died with the page cache.
+        assert_eq!(recs, a);
+    }
+}

@@ -17,9 +17,10 @@
 //!   NDJSON [`ndjson::DocStream`] of `{"id", "text"}` documents.
 //! * [`pipeline`] — parse → embed under the strictly-capped
 //!   `WorkClass::Ingest` (NPU valley soak first, CPU overflow second,
-//!   BUSY = backpressure to the upload socket) → batched
-//!   `RetrievalExecutor::add_batch` commits that bump the corpus version
-//!   so NPU mirrors invalidate.
+//!   BUSY = exponential-backoff backpressure to the upload socket) →
+//!   batched `RetrievalExecutor::upsert_batch` commits, WAL-logged
+//!   before the ack when a `durability::DurableStore` is attached, that
+//!   bump the corpus version so NPU mirrors invalidate.
 //!
 //! HTTP surface (see `crate::server`): `POST /v1/corpus` streams an
 //! NDJSON body (chunked transfer-encoding supported) through the

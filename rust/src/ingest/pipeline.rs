@@ -13,15 +13,21 @@
 //!    is *backpressure*, not failure: the pipeline sleeps and retries,
 //!    which stalls the upload socket and slows the client — admission
 //!    control propagated all the way to the producer.
-//! 3. Embedded documents accumulate into a commit batch;
-//!    `RetrievalExecutor::add_batch` appends them under one write lock
-//!    and advances the corpus version once per batch, so NPU mirrors
+//! 3. Embedded documents accumulate into a commit batch. When the
+//!    service has a [`crate::durability::DurableStore`] attached, the
+//!    batch is WAL-logged and fsynced *before* the index commit — the
+//!    ack ⇒ WAL-durable half of the durability contract; a WAL failure
+//!    refuses the whole batch (counted failed, never acked). The commit
+//!    itself is `RetrievalExecutor::upsert_batch`: re-uploading an id
+//!    replaces its row (tombstone + append) under one write lock, and
+//!    the corpus version advances once per batch so NPU mirrors
 //!    invalidate and concurrent scans see at most one barrier per
-//!    commit.
+//!    commit. After each commit the store may trigger a tombstone
+//!    compaction (see `DurableStore::maybe_compact`).
 //!
 //! A stream-level failure (socket died, malformed JSON) ends the stream
 //! but keeps everything already committed — ingestion is at-least-once
-//! per document, idempotent per id for the caller to manage.
+//! per document, idempotent per id (re-upload = upsert).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -38,9 +44,13 @@ pub struct IngestOptions {
     /// Documents per index commit (one write lock + one version window
     /// per batch).
     pub commit_batch: usize,
-    /// Sleep between admission retries while the ingest class is at its
-    /// cap (the backpressure wait).
+    /// First sleep when admission answers BUSY; each consecutive BUSY
+    /// for the same document doubles the sleep (capped by
+    /// [`IngestOptions::busy_backoff_cap`]), so a saturated ingest class
+    /// costs O(log) wakeups instead of a 2ms polling spin.
     pub busy_backoff: Duration,
+    /// Ceiling for the exponential backoff sleep.
+    pub busy_backoff_cap: Duration,
     /// Per-document budget covering admission retries + embedding; a doc
     /// that cannot make it through in time is counted failed and the
     /// stream moves on.
@@ -52,8 +62,19 @@ impl Default for IngestOptions {
         IngestOptions {
             commit_batch: 32,
             busy_backoff: Duration::from_millis(2),
+            busy_backoff_cap: Duration::from_millis(256),
             doc_timeout: Duration::from_secs(30),
         }
+    }
+}
+
+impl IngestOptions {
+    /// Backoff sleep before retry number `attempt` (0-based) of one
+    /// document's admission: `busy_backoff · 2^attempt`, capped.
+    pub fn backoff_for(&self, attempt: u32) -> Duration {
+        let base = self.busy_backoff.max(Duration::from_micros(1));
+        let exp = base.saturating_mul(1u32 << attempt.min(16));
+        exp.min(self.busy_backoff_cap.max(base))
     }
 }
 
@@ -65,6 +86,8 @@ pub struct IngestStats {
     indexed: AtomicU64,
     failed: AtomicU64,
     busy_waits: AtomicU64,
+    peak_doc_retries: AtomicU64,
+    wal_refused: AtomicU64,
     batches: AtomicU64,
     streams: AtomicU64,
     active_streams: AtomicU64,
@@ -78,6 +101,8 @@ impl IngestStats {
         self.indexed.fetch_add(o.indexed, Ordering::Relaxed);
         self.failed.fetch_add(o.failed, Ordering::Relaxed);
         self.busy_waits.fetch_add(o.busy_waits, Ordering::Relaxed);
+        self.peak_doc_retries.fetch_max(o.peak_doc_retries, Ordering::Relaxed);
+        self.wal_refused.fetch_add(o.wal_refused, Ordering::Relaxed);
         self.batches.fetch_add(o.batches, Ordering::Relaxed);
         self.streams.fetch_add(1, Ordering::Relaxed);
         self.peak_chunk_bytes.fetch_max(o.peak_chunk_bytes, Ordering::Relaxed);
@@ -91,6 +116,11 @@ impl IngestStats {
             ("docs_indexed", Json::num(self.indexed.load(Ordering::Relaxed) as f64)),
             ("docs_failed", Json::num(self.failed.load(Ordering::Relaxed) as f64)),
             ("busy_waits", Json::num(self.busy_waits.load(Ordering::Relaxed) as f64)),
+            (
+                "peak_doc_retries",
+                Json::num(self.peak_doc_retries.load(Ordering::Relaxed) as f64),
+            ),
+            ("wal_refused", Json::num(self.wal_refused.load(Ordering::Relaxed) as f64)),
             ("batches_committed", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
             ("streams_completed", Json::num(self.streams.load(Ordering::Relaxed) as f64)),
             (
@@ -131,6 +161,12 @@ pub struct IngestOutcome {
     pub failed: u64,
     /// Admission BUSY retries absorbed (backpressure events).
     pub busy_waits: u64,
+    /// Worst single document's BUSY retry count (how deep the
+    /// exponential backoff had to go).
+    pub peak_doc_retries: u64,
+    /// Documents embedded but never acked because the write-ahead log
+    /// refused the batch (fsync/append failure): counted in `failed`.
+    pub wal_refused: u64,
     /// Index commits performed.
     pub batches: u64,
     /// Corpus version after the final commit.
@@ -149,6 +185,8 @@ impl IngestOutcome {
             ("indexed", Json::num(self.indexed as f64)),
             ("failed", Json::num(self.failed as f64)),
             ("busy_waits", Json::num(self.busy_waits as f64)),
+            ("peak_doc_retries", Json::num(self.peak_doc_retries as f64)),
+            ("wal_refused", Json::num(self.wal_refused as f64)),
             ("batches", Json::num(self.batches as f64)),
             ("corpus_version", Json::num(self.corpus_version as f64)),
             ("peak_chunk_bytes", Json::num(self.peak_chunk_bytes as f64)),
@@ -247,6 +285,7 @@ fn commit(
     let mut tickets = Vec::with_capacity(batch.len());
     for doc in batch.drain(..) {
         let deadline = Instant::now() + opts.doc_timeout;
+        let mut attempt: u32 = 0;
         let ticket = loop {
             match svc.submit_ingest(Arc::clone(&doc.text)) {
                 Ok(t) => break Some(t),
@@ -255,17 +294,23 @@ fn commit(
                     if Instant::now() >= deadline {
                         break None;
                     }
-                    std::thread::sleep(opts.busy_backoff);
+                    std::thread::sleep(opts.backoff_for(attempt));
+                    attempt += 1;
                 }
                 Err(_) => break None,
             }
         };
+        out.peak_doc_retries = out.peak_doc_retries.max(attempt as u64);
         tickets.push((doc, ticket));
     }
     let mut rows: Vec<(u64, Vec<f32>)> = Vec::with_capacity(tickets.len());
+    let mut texts: Vec<(u64, Arc<str>)> = Vec::with_capacity(tickets.len());
     for (doc, ticket) in tickets {
         match ticket.map(|t| t.wait(opts.doc_timeout)) {
-            Some(Ok(v)) if v.len() == dim => rows.push((doc.id, v)),
+            Some(Ok(v)) if v.len() == dim => {
+                texts.push((doc.id, Arc::clone(&doc.text)));
+                rows.push((doc.id, v));
+            }
             Some(Ok(v)) => {
                 out.failed += 1;
                 log::warn!(
@@ -277,10 +322,39 @@ fn commit(
             _ => out.failed += 1,
         }
     }
-    if !rows.is_empty() {
-        out.indexed += rows.len() as u64;
-        out.batches += 1;
-        exec.add_batch(&rows);
+    if rows.is_empty() {
+        return;
+    }
+    // Durability seam: the batch must be WAL-durable before the index
+    // commit that makes it visible (and thus before the stream can ack
+    // it). A refused append drops the whole batch unacked — the client
+    // sees it in `failed` and retries; nothing half-committed exists.
+    match svc.durability() {
+        Some(store) => {
+            let logged: Vec<(u64, &str)> = texts.iter().map(|(id, t)| (*id, &**t)).collect();
+            match store.log_upserts(&logged, || {
+                exec.upsert_batch(&rows);
+            }) {
+                Ok(()) => {
+                    out.indexed += rows.len() as u64;
+                    out.batches += 1;
+                }
+                Err(e) => {
+                    out.failed += rows.len() as u64;
+                    out.wal_refused += rows.len() as u64;
+                    log::warn!("ingest: WAL refused batch of {}: {e}", rows.len());
+                    return;
+                }
+            }
+            if let Err(e) = store.maybe_compact(exec) {
+                log::warn!("ingest: post-commit compaction failed: {e}");
+            }
+        }
+        None => {
+            out.indexed += rows.len() as u64;
+            out.batches += 1;
+            exec.upsert_batch(&rows);
+        }
     }
 }
 
@@ -338,5 +412,18 @@ mod tests {
     fn chunk_helper_shapes_are_sane() {
         let chunks = ok_chunks("{\"id\":1,\"text\":\"a\"}\n", 5);
         assert!(chunks.len() > 1);
+    }
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let opts = IngestOptions::default();
+        assert_eq!(opts.backoff_for(0), Duration::from_millis(2));
+        assert_eq!(opts.backoff_for(1), Duration::from_millis(4));
+        assert_eq!(opts.backoff_for(3), Duration::from_millis(16));
+        // Deep attempts saturate at the cap instead of overflowing.
+        assert_eq!(opts.backoff_for(20), Duration::from_millis(256));
+        // A zero base never sleeps forever-zero: it is floored at 1µs.
+        let z = IngestOptions { busy_backoff: Duration::ZERO, ..IngestOptions::default() };
+        assert!(z.backoff_for(0) >= Duration::from_micros(1));
     }
 }

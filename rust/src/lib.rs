@@ -21,6 +21,7 @@ pub mod config;
 pub mod coordinator;
 pub mod costmodel;
 pub mod devices;
+pub mod durability;
 pub mod estimator;
 pub mod ingest;
 pub mod metrics;

@@ -22,6 +22,7 @@
 
 use std::collections::HashMap;
 use std::io::Read;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -103,11 +104,28 @@ pub struct Conn<S> {
     /// Prefix of `buf` already known not to contain the head terminator
     /// (minus a 3-byte overlap) — the incremental-scan cursor.
     scanned: usize,
+    /// Per-request wall-clock budget (the slow-loris guard): a socket
+    /// read timeout bounds each *read*, so a client trickling one byte
+    /// per few seconds holds a connection — and its pool thread —
+    /// forever. The budget bounds the whole request instead.
+    budget: Option<Duration>,
+    /// Armed when the first byte of the current request arrives, cleared
+    /// by [`Conn::finish_request`]. Idle keep-alive waits (no bytes yet)
+    /// never count against the budget.
+    deadline: Option<Instant>,
 }
 
 impl<S: Read> Conn<S> {
     pub fn new(stream: S) -> Conn<S> {
-        Conn { stream, buf: Vec::with_capacity(1024), scanned: 0 }
+        Conn { stream, buf: Vec::with_capacity(1024), scanned: 0, budget: None, deadline: None }
+    }
+
+    /// A connection with a per-request wall-clock budget: once any byte
+    /// of a request has arrived, head + body must complete within
+    /// `budget` or reads fail with `TimedOut` (the caller answers 408
+    /// via [`Conn::deadline_exceeded`] and closes).
+    pub fn with_budget(stream: S, budget: Duration) -> Conn<S> {
+        Conn { budget: Some(budget), ..Conn::new(stream) }
     }
 
     /// The underlying stream (for writing responses).
@@ -115,18 +133,69 @@ impl<S: Read> Conn<S> {
         &mut self.stream
     }
 
+    /// The current request is over (response written): stop its clock.
+    /// The next request arms a fresh deadline when its first byte lands.
+    pub fn finish_request(&mut self) {
+        self.deadline = None;
+    }
+
+    /// Whether the armed per-request deadline has passed — the signal to
+    /// answer 408 instead of 400 on a read failure.
+    pub fn deadline_exceeded(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    fn check_deadline(&self) -> std::io::Result<()> {
+        if self.deadline_exceeded() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                "request wall-clock deadline exceeded",
+            ));
+        }
+        Ok(())
+    }
+
     /// Pull more bytes from the socket into the buffer. Ok(0) = EOF.
+    /// While a request is in flight (deadline armed), per-read timeouts
+    /// are retried until the wall-clock deadline trips — the guard
+    /// tolerates a slow peer but bounds the total.
     fn fill(&mut self) -> std::io::Result<usize> {
         let mut chunk = [0u8; READ_CHUNK];
-        let n = self.stream.read(&mut chunk)?;
-        self.buf.extend_from_slice(&chunk[..n]);
-        Ok(n)
+        loop {
+            self.check_deadline()?;
+            match self.stream.read(&mut chunk) {
+                Ok(n) => {
+                    if n > 0 && self.deadline.is_none() {
+                        self.deadline = self.budget.map(|b| Instant::now() + b);
+                    }
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(n);
+                }
+                Err(e)
+                    if self.deadline.is_some()
+                        && matches!(
+                            e.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) =>
+                {
+                    // Mid-request read timeout: loop back, which either
+                    // trips the deadline or waits for the next bytes.
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Read the next request head. `Ok(None)` on a clean EOF before any
     /// byte of a new request (the peer closed an idle keep-alive
     /// connection).
     pub fn read_head(&mut self) -> Result<Option<Head>> {
+        // A pipelined request already sitting in the buffer starts its
+        // clock now — its first byte "arrived" before we looked.
+        if !self.buf.is_empty() && self.deadline.is_none() {
+            self.deadline = self.budget.map(|b| Instant::now() + b);
+        }
         let head_end = loop {
             // Scan only the unscanned tail (plus a 3-byte overlap for a
             // terminator split across reads) — the O(n²) fix.
@@ -397,6 +466,16 @@ impl Response {
         Response { status: 404, reason: "Not Found", body: err_body("not found") }
     }
 
+    /// Per-request wall-clock deadline exceeded (slow-loris guard): the
+    /// connection is closed after this is written.
+    pub fn request_timeout() -> Response {
+        Response {
+            status: 408,
+            reason: "Request Timeout",
+            body: err_body("request deadline exceeded"),
+        }
+    }
+
     /// The paper's 'busy' status: both queues full.
     pub fn busy() -> Response {
         Response {
@@ -620,5 +699,80 @@ mod tests {
     #[test]
     fn busy_is_503() {
         assert_eq!(Response::busy().status, 503);
+    }
+
+    /// One byte per read: the trickling head that per-read timeouts
+    /// never catch. With a zero budget the wall-clock deadline arms on
+    /// the first byte and trips on the next fill.
+    #[test]
+    fn slow_loris_head_trips_the_request_deadline() {
+        struct OneByte<'a>(&'a [u8], usize);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let raw = b"GET /slow HTTP/1.1\r\n\r\n";
+        let mut conn = Conn::with_budget(OneByte(raw, 0), Duration::ZERO);
+        assert!(conn.read_head().is_err());
+        assert!(conn.deadline_exceeded(), "the 408 signal");
+        // Without a budget the same trickle parses fine.
+        let mut conn = Conn::new(OneByte(raw, 0));
+        assert_eq!(conn.read_head().unwrap().unwrap().path, "/slow");
+        assert!(!conn.deadline_exceeded());
+    }
+
+    /// A trickling *body* is caught too: the deadline spans head + body,
+    /// not just the head scan.
+    #[test]
+    fn slow_loris_body_trips_the_request_deadline() {
+        struct HeadThenTrickle(Vec<u8>, usize, usize);
+        impl Read for HeadThenTrickle {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                // First read hands over the whole head, then 1 byte/read.
+                let n = if self.1 == 0 { self.2 } else { 1 };
+                let n = n.min(buf.len()).min(self.0.len() - self.1);
+                buf[..n].copy_from_slice(&self.0[self.1..self.1 + n]);
+                self.1 += n;
+                Ok(n)
+            }
+        }
+        let head = b"POST /v1/corpus HTTP/1.1\r\nContent-Length: 5\r\n\r\n".to_vec();
+        let head_len = head.len();
+        let mut raw = head;
+        raw.extend_from_slice(b"hello");
+        let mut conn =
+            Conn::with_budget(HeadThenTrickle(raw, 0, head_len), Duration::ZERO);
+        let h = conn.read_head().unwrap().unwrap();
+        assert!(conn.read_body_string(&h).is_err());
+        assert!(conn.deadline_exceeded());
+    }
+
+    /// `finish_request` stops the clock: a served request's spent budget
+    /// never bleeds into the idle keep-alive wait or the next request.
+    #[test]
+    fn finish_request_disarms_the_deadline() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\n";
+        let mut conn = Conn::with_budget(Cursor::new(raw.as_slice()), Duration::ZERO);
+        let h = conn.read_head().unwrap().unwrap();
+        assert_eq!(h.path, "/a");
+        assert!(conn.deadline_exceeded(), "zero budget: armed and already past");
+        conn.finish_request();
+        assert!(!conn.deadline_exceeded());
+        // Idle close (EOF with an empty buffer) still reads cleanly.
+        assert!(conn.read_head().unwrap().is_none());
+    }
+
+    #[test]
+    fn request_timeout_is_408() {
+        assert_eq!(Response::request_timeout().status, 408);
     }
 }

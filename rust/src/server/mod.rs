@@ -26,10 +26,23 @@
 //!   (`docs_received/indexed/failed`, `busy_waits`,
 //!   `batches_committed`, `streams_completed`, `active_streams`,
 //!   `peak_chunk_bytes`, `corpus_version`).
+//! * `DELETE /v1/corpus/{id}` — tombstone one document (`{id}` is the
+//!   decimal u64 the document was ingested under). The row stops
+//!   matching immediately (same version seam as adds, so NPU mirrors
+//!   invalidate); with a durable store attached the delete is WAL-logged
+//!   before the index mutation. Response: `{"id", "removed",
+//!   "corpus_version"}` — `removed: 0` means the id was unknown (still
+//!   200; deletes are idempotent).
+//! * `POST /v1/corpus/snapshot` — checkpoint the corpus: serialize the
+//!   index to a durable snapshot and truncate the WAL behind it.
+//!   Response: `{"watermark"}`. Requires an attached durable store.
 //! * `GET /healthz` — liveness.
 //! * `GET /metrics` — metrics registry snapshot (JSON).
 //! * `GET /stats` — queue depths/occupancy + route counters for all
-//!   three work classes (embed / retrieve / ingest, both device legs).
+//!   three work classes (embed / retrieve / ingest, both device legs);
+//!   when a durable store is attached, a nested `"durability"` object
+//!   (`committed_seq`, `wal_segments`, `wal_bytes`, `replayed_records`,
+//!   `snapshots_written`, `compactions`, `wal_append_failures`).
 //!
 //! # Connection handling
 //!
@@ -38,6 +51,14 @@
 //! read past one message stay buffered for the next. A request whose
 //! body errors mid-stream closes the connection (the only safe framing
 //! recovery).
+//!
+//! **Slow-loris guard**: the per-read socket timeout only bounds each
+//! read — a client trickling one byte per few seconds would hold a pool
+//! thread forever. Every request therefore also gets a wall-clock
+//! budget ([`DEFAULT_REQUEST_DEADLINE`], tunable via
+//! [`Server::start_with_deadline`]), armed when its first byte arrives
+//! and spanning head + body; exceeding it answers **408** and closes
+//! the connection. Idle keep-alive waits don't count against it.
 
 pub mod http;
 
@@ -59,6 +80,11 @@ use http::{Conn, Head, Response};
 /// before the server closes it (resource rotation under slow clients).
 pub const MAX_REQUESTS_PER_CONN: usize = 128;
 
+/// Default per-request wall-clock budget (head + body) — the slow-loris
+/// guard. Generous: a legitimate chunked corpus upload streams fast;
+/// only a byte-trickling client spends half a minute on one request.
+pub const DEFAULT_REQUEST_DEADLINE: Duration = Duration::from_secs(30);
+
 /// Running HTTP server handle.
 pub struct Server {
     addr: std::net::SocketAddr,
@@ -67,8 +93,21 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `listen` and serve `svc` until [`Server::stop`] (or drop).
+    /// Bind `listen` and serve `svc` until [`Server::stop`] (or drop),
+    /// with the default per-request deadline.
     pub fn start(listen: &str, svc: Arc<WindVE>, slo: Duration) -> Result<Server> {
+        Server::start_with_deadline(listen, svc, slo, DEFAULT_REQUEST_DEADLINE)
+    }
+
+    /// [`Server::start`] with an explicit per-request wall-clock budget
+    /// (the slow-loris guard; see the module docs). Tests use a short
+    /// budget to exercise the 408 path without waiting 30s.
+    pub fn start_with_deadline(
+        listen: &str,
+        svc: Arc<WindVE>,
+        slo: Duration,
+        request_deadline: Duration,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -86,7 +125,7 @@ impl Server {
                         Ok((stream, _)) => {
                             let svc = Arc::clone(&svc);
                             pool.execute(move || {
-                                let _ = handle_connection(stream, &svc, slo);
+                                let _ = handle_connection(stream, &svc, slo, request_deadline);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -126,18 +165,31 @@ impl Drop for Server {
 /// Serve one connection: keep-alive loop with the per-connection
 /// request bound. Returns when the peer closes, a framing error forces
 /// a close, or the bound is reached.
-fn handle_connection(stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<()> {
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+fn handle_connection(
+    stream: TcpStream,
+    svc: &WindVE,
+    slo: Duration,
+    request_deadline: Duration,
+) -> Result<()> {
+    // Per-read timeout ≤ the request budget, so a stalled read wakes up
+    // in time for the wall-clock deadline check in `Conn::fill`.
+    stream.set_read_timeout(Some(Duration::from_secs(10).min(request_deadline)))?;
     stream.set_nodelay(true)?;
-    let mut conn = Conn::new(stream);
+    let mut conn = Conn::with_budget(stream, request_deadline);
     for served in 0..MAX_REQUESTS_PER_CONN {
         let head = match conn.read_head() {
             Ok(Some(h)) => h,
             Ok(None) => return Ok(()), // clean keep-alive close
             Err(e) => {
-                // An idle keep-alive peer that never sends another
-                // request times out here: close silently. Anything else
-                // is a malformed head worth a 400.
+                // A request that started but blew its wall-clock budget
+                // (slow-loris): 408 and close. An idle keep-alive peer
+                // that never sent a byte times out silently. Anything
+                // else is a malformed head worth a 400.
+                if conn.deadline_exceeded() {
+                    let resp = Response::request_timeout();
+                    let _ = conn.stream_mut().write_all(resp.serialize_with(false).as_bytes());
+                    return Ok(());
+                }
                 let timed_out = e.downcast_ref::<std::io::Error>().is_some_and(|io| {
                     matches!(
                         io.kind(),
@@ -157,11 +209,16 @@ fn handle_connection(stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<(
         // materialized, so it bypasses the read_body_string path.
         if head.method == "POST" && head.path == "/v1/corpus" {
             let (resp, body_ok) = corpus_endpoint(&mut conn, &head, svc);
-            let keep = keep && body_ok;
+            // A deadline trip mid-stream surfaced as an ingest error;
+            // report it as the timeout it is.
+            let resp =
+                if conn.deadline_exceeded() { Response::request_timeout() } else { resp };
+            let keep = keep && body_ok && !conn.deadline_exceeded();
             conn.stream_mut().write_all(resp.serialize_with(keep).as_bytes())?;
             if !keep {
                 return Ok(());
             }
+            conn.finish_request();
             continue;
         }
 
@@ -169,7 +226,11 @@ fn handle_connection(stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<(
             Ok(b) => b,
             Err(e) => {
                 // Framing is unknown past an aborted body: must close.
-                let resp = Response::bad_request(&format!("{e:#}"));
+                let resp = if conn.deadline_exceeded() {
+                    Response::request_timeout()
+                } else {
+                    Response::bad_request(&format!("{e:#}"))
+                };
                 let _ = conn.stream_mut().write_all(resp.serialize_with(false).as_bytes());
                 return Ok(());
             }
@@ -179,6 +240,7 @@ fn handle_connection(stream: TcpStream, svc: &WindVE, slo: Duration) -> Result<(
         if !keep {
             return Ok(());
         }
+        conn.finish_request();
     }
     Ok(())
 }
@@ -198,7 +260,7 @@ fn route(head: &Head, body: &str, svc: &WindVE, slo: Duration) -> Response {
             // (0 when no index is attached) — the poisoning satellite's
             // operator signal.
             let poisoned = svc.retrieval().map_or(0, |e| e.poisoned_recoveries());
-            Response::ok_json(Json::obj(vec![
+            let mut fields = vec![
                 ("npu_depth", Json::num(qm.npu_depth() as f64)),
                 ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
                 ("npu_occupancy", Json::num(qm.npu_occupancy() as f64)),
@@ -227,9 +289,48 @@ fn route(head: &Head, body: &str, svc: &WindVE, slo: Duration) -> Response {
                 ("rejected_ingest_npu", Json::num(stats.rejected_ingest_npu as f64)),
                 ("retrieval_poisoned_recoveries", Json::num(poisoned as f64)),
                 ("bad_releases", Json::num(stats.bad_releases as f64)),
-            ]))
+            ];
+            if let Some(store) = svc.durability() {
+                let d = store.stats();
+                fields.push((
+                    "durability",
+                    Json::obj(vec![
+                        ("committed_seq", Json::num(d.committed_seq as f64)),
+                        ("wal_segments", Json::num(d.wal_segments as f64)),
+                        ("wal_bytes", Json::num(d.wal_bytes as f64)),
+                        ("replayed_records", Json::num(d.replayed_records as f64)),
+                        ("snapshots_written", Json::num(d.snapshots_written as f64)),
+                        ("compactions", Json::num(d.compactions as f64)),
+                        ("wal_append_failures", Json::num(d.wal_append_failures as f64)),
+                    ]),
+                ));
+            }
+            Response::ok_json(Json::obj(fields))
         }
         ("POST", "/v1/embed") => embed_endpoint(body, svc, slo),
+        ("POST", "/v1/corpus/snapshot") => match svc.snapshot_corpus() {
+            Ok(watermark) => Response::ok_json(Json::obj(vec![(
+                "watermark",
+                Json::num(watermark as f64),
+            )])),
+            Err(e) => Response::server_error(&e.to_string()),
+        },
+        ("DELETE", p) if p.starts_with("/v1/corpus/") => {
+            match p["/v1/corpus/".len()..].parse::<u64>() {
+                Ok(id) => match svc.delete_doc(id) {
+                    Ok(removed) => Response::ok_json(Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("removed", Json::num(removed as f64)),
+                        (
+                            "corpus_version",
+                            svc.retrieval().map_or(Json::Null, |e| Json::num(e.version() as f64)),
+                        ),
+                    ])),
+                    Err(e) => Response::server_error(&e.to_string()),
+                },
+                Err(_) => Response::bad_request("document id must be a decimal u64"),
+            }
+        }
         _ => Response::not_found(),
     }
 }

@@ -1,0 +1,536 @@
+//! Durability churn scenario — the corpus-lifecycle acceptance harness.
+//!
+//! Where [`super::des`] simulates *devices* under arrival streams, this
+//! module drives the **real durable store** (`durability::DurableStore`
+//! over a [`FaultFs`](crate::durability::FaultFs)) through simulated
+//! days of mixed upsert/delete/query traffic in virtual time, with
+//! mid-storm crashes and full recovery, and checks the two lifecycle
+//! invariants end to end:
+//!
+//! * **zero acked-write loss** — after every crash+replay (and at the
+//!   end of the run) the recovered corpus is compared bit-for-bit
+//!   against a shadow executor that received exactly the acked
+//!   mutations: no live document missing, no deleted document
+//!   resurrected, no vector divergent.
+//! * **zero oversubscription** — upserts are admitted through the
+//!   production [`QueueManager`] under `WorkClass::Ingest` (BUSY =
+//!   backpressure retry, as the pipeline does against the upload
+//!   socket), queries under `WorkClass::Retrieve`; the combined CPU
+//!   occupancy is probed at every event instant and must never exceed
+//!   the calibrated depth.
+//!
+//! The run is fully deterministic per seed: arrival times, op kinds,
+//! document ids and revisions, crash instants and recovery outcomes all
+//! reproduce bit-for-bit, so the in-module tests can assert exact
+//! conservation without ever sleeping.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
+use crate::devices::executor::RetrievalExecutor;
+use crate::durability::{DurabilityOptions, DurableStore, FaultFs, FaultPlan, Fs};
+use crate::testing::pseudo_embedding;
+use crate::util::rng::Pcg;
+use crate::vecstore::FlatIndex;
+
+/// Aggregate results of a [`ChurnSim::run`].
+#[derive(Debug, Clone)]
+pub struct ChurnStats {
+    /// Ops generated, by kind (arrivals, before admission/retries).
+    pub upserts_arrived: u64,
+    pub deletes_arrived: u64,
+    pub queries_arrived: u64,
+    /// Mutations durably committed (WAL-logged + index-applied + acked).
+    pub upserts_acked: u64,
+    pub deletes_acked: u64,
+    pub queries_served: u64,
+    /// Queries declined by retrieval admission (never retried).
+    pub queries_rejected: u64,
+    /// BUSY responses the ingest class absorbed by retrying later — the
+    /// virtual-time mirror of the pipeline's exponential backoff.
+    pub backpressure_retries: u64,
+    /// Mid-storm crashes injected (each followed by a full recovery).
+    pub crashes: u64,
+    /// WAL records re-applied across all recoveries.
+    pub replayed: u64,
+    pub snapshots: u64,
+    pub compactions: u64,
+    /// Final WAL watermark (== acked mutations, seqs are never reused).
+    pub committed_seq: u64,
+    /// Live documents at the end of the run.
+    pub live_docs: u64,
+    /// Acked documents missing after a recovery. Must be 0.
+    pub lost_acked: u64,
+    /// Deleted documents that reappeared after a recovery. Must be 0.
+    pub resurrected: u64,
+    /// Recovered vectors that differ bitwise from the acked ones. Must
+    /// be 0.
+    pub divergent: u64,
+    /// Peak combined CPU-pool occupancy (ingest + retrieve cost units).
+    pub peak_cpu_occupancy: usize,
+    /// Event instants where occupancy exceeded the calibrated depth.
+    /// Must be 0: admission is the only gate.
+    pub oversub_events: u64,
+    /// Virtual time the run actually took (retries can push past the
+    /// nominal horizon), in days.
+    pub makespan_days: f64,
+}
+
+impl ChurnStats {
+    /// The lifecycle acceptance predicate: nothing acked was lost,
+    /// nothing deleted came back, nothing drifted, and admission never
+    /// let the pool oversubscribe.
+    pub fn clean(&self) -> bool {
+        self.lost_acked == 0
+            && self.resurrected == 0
+            && self.divergent == 0
+            && self.oversub_events == 0
+    }
+}
+
+/// Configuration for one churn run. All times are virtual seconds; one
+/// "day" is 86 400 of them.
+#[derive(Debug, Clone)]
+pub struct ChurnSim {
+    pub dim: usize,
+    /// Nominal horizon in days.
+    pub days: f64,
+    /// Ops drawn per day, uniformly over the day.
+    pub ops_per_day: u32,
+    /// Document ids are drawn from `0..id_space` — small spaces force
+    /// overwrites (upsert of a live id) and resurrection-by-upsert of
+    /// previously deleted ids, the interesting lifecycle transitions.
+    pub id_space: u64,
+    /// Fraction of ops that delete a (currently live) document.
+    pub delete_fraction: f64,
+    /// Fraction of the remainder that are top-k queries.
+    pub query_fraction: f64,
+    /// Virtual seconds one admitted upsert holds its ingest slot.
+    pub embed_service: f64,
+    /// Virtual seconds one admitted query holds its retrieval slot.
+    pub scan_service: f64,
+    pub cpu_depth: usize,
+    pub ingest_cap: usize,
+    pub retrieve_cap: usize,
+    /// Crash instants, in days from the start (e.g. `[0.7, 1.5]`).
+    /// Each is a power-cut between two ops followed by restart +
+    /// recovery + bit-exact verification against the shadow.
+    pub crash_days: Vec<f64>,
+    /// Periodic checkpoint interval in days (0 disables; compaction can
+    /// still checkpoint on its own).
+    pub snapshot_every_days: f64,
+    pub seed: u64,
+    pub opts: DurabilityOptions,
+}
+
+impl Default for ChurnSim {
+    fn default() -> ChurnSim {
+        ChurnSim {
+            dim: 16,
+            days: 2.0,
+            ops_per_day: 300,
+            id_space: 120,
+            delete_fraction: 0.2,
+            query_fraction: 0.3,
+            embed_service: 120.0,
+            scan_service: 60.0,
+            cpu_depth: 8,
+            ingest_cap: 4,
+            retrieve_cap: 4,
+            crash_days: vec![0.7, 1.5],
+            snapshot_every_days: 0.5,
+            seed: 1,
+            opts: DurabilityOptions::default(),
+        }
+    }
+}
+
+const DAY: f64 = 86_400.0;
+
+// Event kinds, in tie-break order at equal instants.
+const EV_UPSERT: u8 = 0;
+const EV_DELETE: u8 = 1;
+const EV_QUERY: u8 = 2;
+const EV_REL_INGEST: u8 = 3;
+const EV_REL_RETR: u8 = 4;
+const EV_CRASH: u8 = 5;
+const EV_SNAPSHOT: u8 = 6;
+
+/// Heap entry: ordered by (time, seq) so equal-instant events pop in
+/// schedule order. `a` carries the retry attempt (arrivals) or the
+/// admission epoch (releases — a release from before a crash must not
+/// free a slot in the post-crash manager).
+#[derive(PartialEq, Eq, PartialOrd, Ord)]
+struct Ev {
+    t_ns: u64,
+    seq: u64,
+    kind: u8,
+    a: u64,
+}
+
+fn ns(t: f64) -> u64 {
+    (t * 1e9) as u64
+}
+
+impl ChurnSim {
+    fn recover(
+        &self,
+        fs: &Arc<FaultFs>,
+    ) -> Result<(Arc<DurableStore>, Arc<RetrievalExecutor>, u64)> {
+        let dim = self.dim;
+        let dynfs: Arc<dyn Fs> = fs.clone();
+        let (store, exec, report) = DurableStore::recover(
+            dynfs,
+            Path::new("/churn"),
+            self.opts.clone(),
+            || Box::new(FlatIndex::new(dim)),
+            |text| Ok(pseudo_embedding(text, dim)),
+        )
+        .context("churn: recovery failed")?;
+        Ok((store, exec, report.replayed))
+    }
+
+    fn new_qm(&self) -> QueueManager {
+        QueueManager::with_caps(
+            1, // NPU pool unused: the churn exercises the CPU lifecycle
+            self.cpu_depth,
+            true,
+            ClassCaps {
+                retrieve: self.retrieve_cap,
+                npu_retrieve: 0,
+                ingest: self.ingest_cap,
+                npu_ingest: 0,
+            },
+        )
+    }
+
+    /// Compare the recovered corpus against the shadow of acked
+    /// mutations: `(lost, resurrected, divergent)`.
+    fn diff(exec: &RetrievalExecutor, shadow: &RetrievalExecutor, dim: usize) -> (u64, u64, u64) {
+        let (got_ids, got_rows, _) = exec.export_corpus().expect("flat index exports");
+        let (want_ids, want_rows, _) = shadow.export_corpus().expect("flat index exports");
+        let got: HashMap<u64, &[f32]> = got_ids
+            .iter()
+            .enumerate()
+            .map(|(i, id)| (*id, &got_rows[i * dim..(i + 1) * dim]))
+            .collect();
+        let want: HashMap<u64, &[f32]> = want_ids
+            .iter()
+            .enumerate()
+            .map(|(i, id)| (*id, &want_rows[i * dim..(i + 1) * dim]))
+            .collect();
+        let lost = want.keys().filter(|id| !got.contains_key(id)).count() as u64;
+        let resurrected = got.keys().filter(|id| !want.contains_key(id)).count() as u64;
+        let divergent = want
+            .iter()
+            .filter(|(id, w)| {
+                got.get(id).is_some_and(|g| {
+                    g.iter().map(|x| x.to_bits()).ne(w.iter().map(|x| x.to_bits()))
+                })
+            })
+            .count() as u64;
+        (lost, resurrected, divergent)
+    }
+
+    /// Run the scenario to completion (every generated mutation is
+    /// eventually acked — backpressured upserts retry until a slot
+    /// frees; queries are fire-and-forget and may be rejected).
+    pub fn run(&self) -> Result<ChurnStats> {
+        let fs = Arc::new(FaultFs::new());
+        let (mut store, mut exec, _) = self.recover(&fs)?;
+        // The shadow receives exactly the acked mutations, no
+        // durability: the ground truth every recovery must reproduce.
+        let shadow = RetrievalExecutor::flat(self.dim);
+        let mut qm = self.new_qm();
+        let mut epoch: u64 = 0;
+        let mut rng = Pcg::new(self.seed);
+
+        let mut heap: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        let push = |heap: &mut BinaryHeap<Reverse<Ev>>, t: f64, kind: u8, a: u64, seq: &mut u64| {
+            heap.push(Reverse(Ev { t_ns: ns(t), seq: *seq, kind, a }));
+            *seq += 1;
+        };
+
+        let mut st = ChurnStats {
+            upserts_arrived: 0,
+            deletes_arrived: 0,
+            queries_arrived: 0,
+            upserts_acked: 0,
+            deletes_acked: 0,
+            queries_served: 0,
+            queries_rejected: 0,
+            backpressure_retries: 0,
+            crashes: 0,
+            replayed: 0,
+            snapshots: 0,
+            compactions: 0,
+            committed_seq: 0,
+            live_docs: 0,
+            lost_acked: 0,
+            resurrected: 0,
+            divergent: 0,
+            peak_cpu_occupancy: 0,
+            oversub_events: 0,
+            makespan_days: 0.0,
+        };
+
+        // Generate the schedule up front, so pop-time RNG draws (doc
+        // ids, revisions) never perturb arrival instants.
+        let total_ops = (self.days * self.ops_per_day as f64).round() as u64;
+        for _ in 0..total_ops {
+            let t = rng.f64() * self.days * DAY;
+            let kind = if rng.chance(self.delete_fraction) {
+                st.deletes_arrived += 1;
+                EV_DELETE
+            } else if rng.chance(self.query_fraction) {
+                st.queries_arrived += 1;
+                EV_QUERY
+            } else {
+                st.upserts_arrived += 1;
+                EV_UPSERT
+            };
+            push(&mut heap, t, kind, 0, &mut seq);
+        }
+        for &d in &self.crash_days {
+            push(&mut heap, d * DAY, EV_CRASH, 0, &mut seq);
+        }
+        if self.snapshot_every_days > 0.0 {
+            let mut t = self.snapshot_every_days * DAY;
+            while t < self.days * DAY {
+                push(&mut heap, t, EV_SNAPSHOT, 0, &mut seq);
+                t += self.snapshot_every_days * DAY;
+            }
+        }
+
+        let mut rev: u64 = 0;
+        // Cost units in flight per class — the probe's view of what the
+        // manager has admitted.
+        let mut ingest_inflight: usize = 0;
+        let mut retr_inflight: usize = 0;
+
+        while let Some(Reverse(ev)) = heap.pop() {
+            let now = ev.t_ns as f64 / 1e9;
+            st.makespan_days = now / DAY;
+            match ev.kind {
+                EV_UPSERT => {
+                    if qm.dispatch_class(WorkClass::Ingest, 1) == Route::Cpu {
+                        ingest_inflight += 1;
+                        let id = rng.range(0, self.id_space);
+                        rev += 1;
+                        let text = format!("doc {id} rev {rev}");
+                        let v = pseudo_embedding(&text, self.dim);
+                        let vs = v.clone();
+                        store
+                            .log_upserts(&[(id, text.as_str())], || {
+                                exec.upsert_batch(&[(id, vs)]);
+                            })
+                            .context("churn: upsert refused")?;
+                        shadow.upsert_batch(&[(id, v)]);
+                        st.upserts_acked += 1;
+                        store.maybe_compact(&exec).context("churn: compaction")?;
+                        push(&mut heap, now + self.embed_service, EV_REL_INGEST, epoch, &mut seq);
+                    } else {
+                        // The pipeline's backoff, in virtual time:
+                        // re-offer the document later, never drop it.
+                        st.backpressure_retries += 1;
+                        let delay = self.embed_service * 0.25 * (ev.a + 1) as f64;
+                        push(&mut heap, now + delay, EV_UPSERT, ev.a + 1, &mut seq);
+                    }
+                }
+                EV_DELETE => {
+                    // Delete a currently-live document (deterministic
+                    // pick over the sorted live-id set); churn with an
+                    // empty corpus degrades to a no-op arrival.
+                    let (ids, _, _) = shadow.export_corpus().expect("flat index exports");
+                    if !ids.is_empty() {
+                        let mut sorted = ids;
+                        sorted.sort_unstable();
+                        let id = sorted[rng.usize(0, sorted.len())];
+                        store
+                            .log_delete(id, || {
+                                exec.remove(id);
+                            })
+                            .context("churn: delete refused")?;
+                        shadow.remove(id);
+                        st.deletes_acked += 1;
+                        store.maybe_compact(&exec).context("churn: compaction")?;
+                    }
+                }
+                EV_QUERY => {
+                    if qm.dispatch_class(WorkClass::Retrieve, 1) == Route::Cpu {
+                        retr_inflight += 1;
+                        let probe = format!("probe {}", rng.range(0, self.id_space));
+                        let _hits = exec.search(&pseudo_embedding(&probe, self.dim), 8);
+                        st.queries_served += 1;
+                        push(&mut heap, now + self.scan_service, EV_REL_RETR, epoch, &mut seq);
+                    } else {
+                        st.queries_rejected += 1;
+                    }
+                }
+                EV_REL_INGEST => {
+                    if ev.a == epoch {
+                        ingest_inflight -= 1;
+                        qm.release_class(WorkClass::Ingest, Route::Cpu, 1);
+                    }
+                }
+                EV_REL_RETR => {
+                    if ev.a == epoch {
+                        retr_inflight -= 1;
+                        qm.release_class(WorkClass::Retrieve, Route::Cpu, 1);
+                    }
+                }
+                EV_CRASH => {
+                    // Power cut between two ops: unsynced bytes die,
+                    // in-flight slot holds die with the process. Bank
+                    // the dying store's counters first — a fresh store
+                    // starts its own from zero.
+                    let ds = store.stats();
+                    st.snapshots += ds.snapshots_written;
+                    st.compactions += ds.compactions;
+                    fs.crash_now();
+                    fs.restart(FaultPlan::default());
+                    let (s2, e2, replayed) = self.recover(&fs)?;
+                    store = s2;
+                    exec = e2;
+                    st.crashes += 1;
+                    st.replayed += replayed;
+                    epoch += 1;
+                    qm = self.new_qm();
+                    ingest_inflight = 0;
+                    retr_inflight = 0;
+                    let (lost, res, div) = Self::diff(&exec, &shadow, self.dim);
+                    st.lost_acked += lost;
+                    st.resurrected += res;
+                    st.divergent += div;
+                }
+                EV_SNAPSHOT => {
+                    store.snapshot(&exec).context("churn: periodic checkpoint")?;
+                }
+                _ => unreachable!(),
+            }
+            let occ = ingest_inflight + retr_inflight;
+            st.peak_cpu_occupancy = st.peak_cpu_occupancy.max(occ);
+            if occ > self.cpu_depth {
+                st.oversub_events += 1;
+            }
+        }
+
+        // Final reconciliation: the surviving store must still match the
+        // acked shadow exactly.
+        let (lost, res, div) = Self::diff(&exec, &shadow, self.dim);
+        st.lost_acked += lost;
+        st.resurrected += res;
+        st.divergent += div;
+        let ds = store.stats();
+        st.snapshots += ds.snapshots_written;
+        st.compactions += ds.compactions;
+        st.committed_seq = ds.committed_seq;
+        st.live_docs = exec.len() as u64;
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn days_of_churn_with_midstorm_crashes_lose_nothing() {
+        let sim = ChurnSim::default();
+        let st = sim.run().unwrap();
+        // The storm actually exercised every lifecycle op.
+        assert!(st.upserts_acked > 50, "upserts {}", st.upserts_acked);
+        assert!(st.deletes_acked > 10, "deletes {}", st.deletes_acked);
+        assert!(st.queries_served > 10, "queries {}", st.queries_served);
+        assert_eq!(st.upserts_acked, st.upserts_arrived, "no upsert is ever dropped");
+        assert_eq!(st.crashes, 2);
+        assert!(st.replayed > 0, "crashes must land mid-WAL, not on a checkpoint");
+        assert!(st.snapshots > 0);
+        // The acceptance predicate: zero acked-write loss, zero
+        // resurrection, zero divergence, zero oversubscription.
+        assert!(
+            st.clean(),
+            "lost {} resurrected {} divergent {} oversub {}",
+            st.lost_acked,
+            st.resurrected,
+            st.divergent,
+            st.oversub_events
+        );
+        assert!(st.peak_cpu_occupancy <= sim.cpu_depth);
+        // Every acked mutation holds a unique WAL seq.
+        assert_eq!(st.committed_seq, st.upserts_acked + st.deletes_acked);
+        // Live docs can never exceed the id space (upserts replace).
+        assert!(st.live_docs <= sim.id_space);
+    }
+
+    #[test]
+    fn churn_is_deterministic_per_seed() {
+        let sim = ChurnSim { days: 1.0, crash_days: vec![0.5], ..ChurnSim::default() };
+        let a = sim.run().unwrap();
+        let b = sim.run().unwrap();
+        assert_eq!(a.upserts_acked, b.upserts_acked);
+        assert_eq!(a.deletes_acked, b.deletes_acked);
+        assert_eq!(a.queries_served, b.queries_served);
+        assert_eq!(a.queries_rejected, b.queries_rejected);
+        assert_eq!(a.backpressure_retries, b.backpressure_retries);
+        assert_eq!(a.replayed, b.replayed);
+        assert_eq!(a.committed_seq, b.committed_seq);
+        assert_eq!(a.live_docs, b.live_docs);
+        assert_eq!(a.peak_cpu_occupancy, b.peak_cpu_occupancy);
+        assert_eq!(a.makespan_days.to_bits(), b.makespan_days.to_bits());
+    }
+
+    #[test]
+    fn tight_ingest_cap_backpressures_instead_of_oversubscribing() {
+        // 200 upserts × 1000 s of slot time on a cap-1 class over a
+        // 86 400 s day: cumulative demand (200 000 s) exceeds the
+        // horizon, so collisions — and therefore retries — are
+        // guaranteed; admission must convert ALL of the over-demand
+        // into delayed completion, none into oversubscription or loss.
+        let sim = ChurnSim {
+            days: 1.0,
+            ops_per_day: 200,
+            delete_fraction: 0.0,
+            query_fraction: 0.0,
+            embed_service: 1000.0,
+            ingest_cap: 1,
+            crash_days: vec![],
+            snapshot_every_days: 0.0,
+            ..ChurnSim::default()
+        };
+        let st = sim.run().unwrap();
+        assert_eq!(st.upserts_arrived, 200);
+        assert_eq!(st.upserts_acked, 200, "every backpressured upsert eventually lands");
+        assert!(st.backpressure_retries > 0, "an over-capacity storm must backpressure");
+        assert_eq!(st.peak_cpu_occupancy, 1, "cap 1 admits exactly one at a time");
+        assert_eq!(st.oversub_events, 0);
+        assert!(st.makespan_days > 1.0, "retries push completion past the nominal horizon");
+        assert!(st.clean());
+    }
+
+    #[test]
+    fn delete_heavy_churn_compacts_and_survives_crashes() {
+        let sim = ChurnSim {
+            days: 1.0,
+            ops_per_day: 400,
+            id_space: 40,
+            delete_fraction: 0.45,
+            query_fraction: 0.1,
+            crash_days: vec![0.33, 0.66],
+            snapshot_every_days: 0.0, // compaction is the only checkpointer
+            ..ChurnSim::default()
+        };
+        let st = sim.run().unwrap();
+        assert!(st.deletes_acked > 50, "deletes {}", st.deletes_acked);
+        assert!(st.compactions > 0, "tombstone density must trip compaction");
+        assert!(st.snapshots >= st.compactions, "every compaction checkpoints");
+        assert_eq!(st.crashes, 2);
+        assert!(st.clean(), "lost {} res {} div {}", st.lost_acked, st.resurrected, st.divergent);
+    }
+}

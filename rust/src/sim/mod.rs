@@ -10,9 +10,15 @@
 //!   table and figure.
 //! * [`des`] — open-loop discrete-event simulation for arrival-driven
 //!   workloads (the Fig. 2 diurnal demo, admission-control studies).
+//! * [`churn`] — the corpus-lifecycle acceptance harness: days of
+//!   virtual-time upsert/delete/query churn against the real durable
+//!   store with mid-storm crashes, verifying zero acked-write loss and
+//!   zero oversubscription.
 
+pub mod churn;
 pub mod cluster;
 pub mod des;
 
+pub use churn::{ChurnSim, ChurnStats};
 pub use cluster::{ClosedLoopSim, RoundResult};
 pub use des::{IngestLoad, MixedStats, OpenLoopSim, RetrievalLoad, SimStats};

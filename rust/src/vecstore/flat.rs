@@ -5,6 +5,7 @@
 //! query panel per block, and shards disjoint row ranges across scoped
 //! threads with a deterministic per-query top-k merge.
 
+use super::mask::SkipMask;
 use super::{kernels, Hit, Index, TopK};
 
 /// Row tile per kernel call: 64 rows × 768 dims × 4 B ≈ 192 KiB stays
@@ -17,15 +18,18 @@ const MIN_ROWS_PER_SHARD: usize = 2048;
 
 /// Flat (exact) inner-product index.
 pub struct FlatIndex {
-    dim: usize,
-    ids: Vec<u64>,
-    data: Vec<f32>, // row-major [n, dim]
+    pub(crate) dim: usize,
+    pub(crate) ids: Vec<u64>,
+    pub(crate) data: Vec<f32>, // row-major [n, dim]
+    /// Tombstoned rows: scanned (the arena is contiguous) but never
+    /// pushed into a top-k. See `vecstore::mask`.
+    pub(crate) dead: SkipMask,
 }
 
 impl FlatIndex {
     pub fn new(dim: usize) -> FlatIndex {
         assert!(dim > 0);
-        FlatIndex { dim, ids: Vec::new(), data: Vec::new() }
+        FlatIndex { dim, ids: Vec::new(), data: Vec::new(), dead: SkipMask::new() }
     }
 
     pub fn vector(&self, row: usize) -> &[f32] {
@@ -39,7 +43,9 @@ impl FlatIndex {
     pub fn quantize(&self, quant: super::Quant) -> super::QuantizedFlatIndex {
         let mut q = super::QuantizedFlatIndex::new(self.dim, quant);
         for (row, &id) in self.ids.iter().enumerate() {
-            q.add(id, self.vector(row));
+            if !self.dead.is_dead(row) {
+                q.add(id, self.vector(row));
+            }
         }
         q
     }
@@ -117,6 +123,11 @@ impl FlatIndex {
             kernels::panel_scores_into(qbuf, nq, rows, nr, dim, &mut scores[..nq * nr]);
             for (qi, tk) in tks.iter_mut().enumerate() {
                 for r in 0..nr {
+                    // Tombstone skip: one bit test per row; the global
+                    // row index stays the tie-break sequence number.
+                    if self.dead.is_dead(r0 + r) {
+                        continue;
+                    }
                     tk.push_with_seq(self.ids[r0 + r], scores[qi * nr + r], (r0 + r) as u64);
                 }
             }
@@ -146,18 +157,77 @@ impl Index for FlatIndex {
     }
 
     fn len(&self) -> usize {
-        self.ids.len()
+        self.ids.len() - self.dead.dead()
     }
 
     fn dim(&self) -> usize {
         self.dim
     }
 
+    fn remove(&mut self, id: u64) -> usize {
+        let mut killed = 0;
+        for row in 0..self.ids.len() {
+            if self.ids[row] == id && self.dead.kill(row) {
+                killed += 1;
+            }
+        }
+        killed
+    }
+
+    fn tombstones(&self) -> usize {
+        self.dead.dead()
+    }
+
+    fn compact(&mut self) -> usize {
+        let reclaimed = self.dead.dead();
+        if reclaimed == 0 {
+            return 0;
+        }
+        let dim = self.dim;
+        let mut ids = Vec::with_capacity(self.ids.len() - reclaimed);
+        let mut data = Vec::with_capacity((self.ids.len() - reclaimed) * dim);
+        for row in 0..self.ids.len() {
+            if !self.dead.is_dead(row) {
+                ids.push(self.ids[row]);
+                data.extend_from_slice(&self.data[row * dim..(row + 1) * dim]);
+            }
+        }
+        self.ids = ids;
+        self.data = data;
+        self.dead.clear();
+        reclaimed
+    }
+
+    fn scan_rows_estimate(&self) -> usize {
+        // Tombstoned rows still cross the memory bus — the scan streams
+        // the whole arena — so admission charges physical rows.
+        self.ids.len()
+    }
+
     fn export_f32_rows(&self) -> Option<(Vec<u64>, Vec<f32>)> {
         // Exact f32 rows in insertion order: a device mirror scanning
         // this snapshot with the same kernels reproduces `search` bit-
-        // for-bit (same per-pair scores, same tie-break sequence).
-        Some((self.ids.clone(), self.data.clone()))
+        // for-bit (same per-pair scores; ties resolve identically
+        // because filtering tombstones preserves the relative order of
+        // live rows). Deleted rows are excluded so a mirror can never
+        // resurrect them.
+        if self.dead.is_clear() {
+            return Some((self.ids.clone(), self.data.clone()));
+        }
+        let live = self.len();
+        let mut ids = Vec::with_capacity(live);
+        let mut data = Vec::with_capacity(live * self.dim);
+        for row in 0..self.ids.len() {
+            if !self.dead.is_dead(row) {
+                ids.push(self.ids[row]);
+                data.extend_from_slice(self.vector(row));
+            }
+        }
+        Some((ids, data))
+    }
+
+    fn snapshot_bytes(&self) -> Option<Vec<u8>> {
+        Some(super::persist::encode_flat(self))
     }
 }
 
@@ -254,6 +324,64 @@ mod tests {
         assert_eq!(hits.iter().map(|h| h.id).collect::<Vec<_>>(), vec![100, 101, 102, 103, 104]);
         let batch = idx.search_batch_with_threads(&[&v], 5, 3);
         assert_eq!(batch[0], hits);
+    }
+
+    #[test]
+    fn remove_hides_rows_and_compact_is_bit_identical() {
+        let mut rng = Pcg::new(5);
+        let mut idx = FlatIndex::new(16);
+        let vs: Vec<Vec<f32>> = (0..60).map(|_| unit(&mut rng, 16)).collect();
+        for (i, v) in vs.iter().enumerate() {
+            idx.add(i as u64, v);
+        }
+        assert_eq!(idx.remove(13), 1);
+        assert_eq!(idx.remove(13), 0, "second remove is a no-op");
+        assert_eq!(idx.remove(777), 0, "absent id");
+        idx.remove(40);
+        assert_eq!(idx.len(), 58);
+        assert_eq!(idx.tombstones(), 2);
+        assert_eq!(idx.scan_rows_estimate(), 60, "dead rows still stream");
+        // Deleted ids never surface, on either scan path.
+        let hits = idx.search(&vs[13], 60);
+        assert!(hits.iter().all(|h| h.id != 13 && h.id != 40));
+        let batch = idx.search_batch_with_threads(&[vs[13].as_slice()], 60, 3);
+        assert_eq!(batch[0], hits);
+        // Compaction reclaims the bytes without changing any result bit.
+        let before: Vec<(u64, u32)> =
+            hits.iter().map(|h| (h.id, h.score.to_bits())).collect();
+        assert_eq!(idx.compact(), 2);
+        assert_eq!(idx.tombstones(), 0);
+        assert_eq!(idx.len(), 58);
+        assert_eq!(idx.scan_rows_estimate(), 58);
+        let after: Vec<(u64, u32)> = idx
+            .search(&vs[13], 60)
+            .iter()
+            .map(|h| (h.id, h.score.to_bits()))
+            .collect();
+        assert_eq!(after, before);
+    }
+
+    #[test]
+    fn upsert_replaces_in_place() {
+        let mut idx = FlatIndex::new(4);
+        idx.add(1, &[1.0, 0.0, 0.0, 0.0]);
+        idx.add(2, &[0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(idx.upsert(1, &[0.0, 0.0, 1.0, 0.0]), 1);
+        assert_eq!(idx.len(), 2);
+        let hits = idx.search(&[0.0, 0.0, 1.0, 0.0], 2);
+        assert_eq!(hits[0].id, 1);
+        assert!((hits[0].score - 1.0).abs() < 1e-6);
+        // The old row is gone: nothing matches the original direction.
+        let old = idx.search(&[1.0, 0.0, 0.0, 0.0], 2);
+        assert!(old.iter().all(|h| h.score < 0.5));
+        // Upsert of a new id is a plain insert.
+        assert_eq!(idx.upsert(9, &[0.0, 0.0, 0.0, 1.0]), 0);
+        assert_eq!(idx.len(), 3);
+        // Export excludes tombstones.
+        let (ids, rows) = idx.export_f32_rows().unwrap();
+        assert!(!ids.is_empty());
+        assert_eq!(rows.len(), ids.len() * 4);
+        assert_eq!(ids.iter().filter(|&&i| i == 1).count(), 1);
     }
 
     #[test]

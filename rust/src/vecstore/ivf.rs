@@ -19,6 +19,7 @@
 //! identical to per-query [`Index::search`].
 
 use super::kmeans;
+use super::mask::SkipMask;
 use super::quant::{Quant, RowArena};
 use super::{dot, kernels, Hit, Index, TopK};
 
@@ -29,43 +30,45 @@ const MIN_PROBED_ROWS_PARALLEL: usize = 4096;
 const LIST_SCAN_BLOCK: usize = 64;
 
 /// One inverted list: parallel id vector + contiguous (possibly
-/// quantized) row arena.
-struct InvList {
-    ids: Vec<u64>,
-    arena: RowArena,
+/// quantized) row arena + tombstone mask (see `vecstore::mask`).
+pub(crate) struct InvList {
+    pub(crate) ids: Vec<u64>,
+    pub(crate) arena: RowArena,
+    pub(crate) dead: SkipMask,
 }
 
 /// IVF-Flat index. Vectors are buffered (at full precision) until
 /// [`IvfIndex::build`]; before that, search falls back to exact scan over
 /// the buffer. Quantization applies to the built lists.
 pub struct IvfIndex {
-    dim: usize,
-    nlist: usize,
+    pub(crate) dim: usize,
+    pub(crate) nlist: usize,
     pub nprobe: usize,
-    quant: Quant,
+    pub(crate) quant: Quant,
     // Buffered (pre-build) rows.
-    pending: Vec<(u64, Vec<f32>)>,
-    centroids: Vec<f32>,
-    lists: Vec<InvList>,
-    built: bool,
-    len: usize,
+    pub(crate) pending: Vec<(u64, Vec<f32>)>,
+    pub(crate) centroids: Vec<f32>,
+    pub(crate) lists: Vec<InvList>,
+    pub(crate) built: bool,
+    /// Live (non-tombstoned) rows — see [`Index::len`].
+    pub(crate) len: usize,
     /// Online-rebalance trigger: when post-build adds push
     /// `max list size / mean list size` past this ratio, the next
     /// [`Index::add_batch`] re-trains and re-assigns in place
     /// (0.0 disables — the default, matching historic behavior).
-    rebalance_threshold: f64,
+    pub(crate) rebalance_threshold: f64,
     /// Seed for online re-trains (fixed so streaming rebuilds are
     /// deterministic for a given add sequence).
-    rebalance_seed: u64,
+    pub(crate) rebalance_seed: u64,
     /// Completed online rebalances (observability).
-    rebalances: u64,
+    pub(crate) rebalances: u64,
     /// Hysteresis for the auto trigger: when a retrain cannot bring the
     /// skew under the threshold (inherently clustered data), this holds
     /// the achieved skew × margin, and the next retrain only fires once
     /// skew exceeds it — without this, every subsequent `add_batch`
     /// would re-run a full O(n·k) retrain under the executor's write
     /// lock for nothing.
-    retrigger_skew: f64,
+    pub(crate) retrigger_skew: f64,
 }
 
 /// One unit of batched scan work: probe `cell` for query `qi`, with the
@@ -119,8 +122,11 @@ impl IvfIndex {
         if !self.built || self.len == 0 || self.lists.is_empty() {
             return 0.0;
         }
+        // Physical list sizes: tombstoned rows still stream through the
+        // probe kernels, so they count toward probe-cost skew.
         let max = self.lists.iter().map(|l| l.ids.len()).max().unwrap_or(0);
-        let mean = self.len as f64 / self.lists.len() as f64;
+        let total: usize = self.lists.iter().map(|l| l.ids.len()).sum();
+        let mean = total as f64 / self.lists.len() as f64;
         max as f64 / mean.max(f64::MIN_POSITIVE)
     }
 
@@ -141,6 +147,12 @@ impl IvfIndex {
         let mut rows: Vec<(u64, Vec<f32>)> = Vec::with_capacity(self.len);
         for list in &self.lists {
             for (i, &id) in list.ids.iter().enumerate() {
+                // Tombstoned rows are dropped here: a rebalance doubles
+                // as a compaction (relative live-row order is preserved,
+                // so deterministic tie-breaks are unaffected).
+                if list.dead.is_dead(i) {
+                    continue;
+                }
                 rows.push((id, list.arena.dequant_row(i, self.dim)));
             }
         }
@@ -175,7 +187,11 @@ impl IvfIndex {
         let mut assign = vec![0usize; n];
         kmeans::assign_arena(&corpus, self.dim, &self.centroids, &mut assign);
         self.lists = (0..k)
-            .map(|_| InvList { ids: Vec::new(), arena: RowArena::new(self.quant) })
+            .map(|_| InvList {
+                ids: Vec::new(),
+                arena: RowArena::new(self.quant),
+                dead: SkipMask::new(),
+            })
             .collect();
         // The corpus arena already holds every row's encoded bytes —
         // copy them into the per-list arenas instead of re-quantizing.
@@ -228,6 +244,12 @@ impl IvfIndex {
             let r1 = (r0 + LIST_SCAN_BLOCK).min(n);
             list.arena.panel_scores_into(query, 1, r0, r1, self.dim, &mut scores[..r1 - r0]);
             for r in r0..r1 {
+                // Tombstone skip (see `FlatIndex::scan_rows`): the row is
+                // scored but never pushed, so seq numbering — and with it
+                // batch/single determinism — is untouched.
+                if list.dead.is_dead(r) {
+                    continue;
+                }
                 tk.push_with_seq(list.ids[r], scores[r - r0], probe.seq_base + r as u64);
             }
             r0 = r1;
@@ -373,14 +395,68 @@ impl Index for IvfIndex {
         self.quant
     }
 
+    fn remove(&mut self, id: u64) -> usize {
+        let mut killed = 0;
+        // Pre-build rows are a plain buffer: drop them outright.
+        let before = self.pending.len();
+        self.pending.retain(|(pid, _)| *pid != id);
+        killed += before - self.pending.len();
+        // Built rows tombstone in place (see `vecstore::mask`).
+        for list in &mut self.lists {
+            for row in 0..list.ids.len() {
+                if list.ids[row] == id && list.dead.kill(row) {
+                    killed += 1;
+                }
+            }
+        }
+        self.len -= killed;
+        killed
+    }
+
+    fn tombstones(&self) -> usize {
+        self.lists.iter().map(|l| l.dead.dead()).sum()
+    }
+
+    fn compact(&mut self) -> usize {
+        let mut reclaimed = 0;
+        for list in &mut self.lists {
+            let dead = list.dead.dead();
+            if dead == 0 {
+                continue;
+            }
+            reclaimed += dead;
+            let mut ids = Vec::with_capacity(list.ids.len() - dead);
+            let mut arena = RowArena::new(list.arena.quant());
+            for row in 0..list.ids.len() {
+                if !list.dead.is_dead(row) {
+                    ids.push(list.ids[row]);
+                    // Byte-exact survivor copy (see `QuantizedFlatIndex::compact`).
+                    arena.push_row_from(&list.arena, row, self.dim);
+                }
+            }
+            list.ids = ids;
+            list.arena = arena;
+            list.dead.clear();
+        }
+        reclaimed
+    }
+
     fn scan_rows_estimate(&self) -> usize {
+        // Physical rows: tombstoned rows still stream through the probe
+        // kernels until a compaction reclaims them.
+        let physical: usize =
+            self.pending.len() + self.lists.iter().map(|l| l.ids.len()).sum::<usize>();
         if !self.is_built() {
             // Pre-build search scans everything.
-            return self.len();
+            return physical;
         }
         // A probe streams nprobe of nlist cells; assume balanced lists
         // (the kmeans build targets that) and round up.
-        (self.len() * self.nprobe).div_ceil(self.nlist)
+        (physical * self.nprobe).div_ceil(self.nlist)
+    }
+
+    fn snapshot_bytes(&self) -> Option<Vec<u8>> {
+        Some(super::persist::encode_ivf(self))
     }
 }
 

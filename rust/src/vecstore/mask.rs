@@ -1,0 +1,108 @@
+//! Scan-time skip mask: the tombstone representation shared by the
+//! `RowArena`-backed indexes.
+//!
+//! Deleting a row from a contiguous arena would either shift every later
+//! row (invalidating the global row indices the deterministic top-k
+//! merge keys on) or punch a hole the kernels would have to skip
+//! mid-panel. Instead a delete *tombstones* the row: the arena keeps the
+//! bytes, scans keep their block shape and global sequence numbers, and
+//! the only extra cost is one bit test per row when deciding whether to
+//! push a score into the top-k. Reclaiming the bytes is a separate,
+//! amortized `compact()` (see `crate::durability`).
+
+/// Bitset over physical row indices; set bit = tombstoned (dead) row.
+#[derive(Debug, Default, Clone)]
+pub struct SkipMask {
+    words: Vec<u64>,
+    dead: usize,
+}
+
+impl SkipMask {
+    pub fn new() -> SkipMask {
+        SkipMask::default()
+    }
+
+    /// Number of tombstoned rows.
+    pub fn dead(&self) -> usize {
+        self.dead
+    }
+
+    /// True when no row is tombstoned (scans can skip the bit tests).
+    pub fn is_clear(&self) -> bool {
+        self.dead == 0
+    }
+
+    /// Whether physical row `row` is tombstoned. Rows past the mask's
+    /// high-water mark (appended after the last kill) are live.
+    #[inline]
+    pub fn is_dead(&self, row: usize) -> bool {
+        match self.words.get(row >> 6) {
+            Some(w) => (w >> (row & 63)) & 1 == 1,
+            None => false,
+        }
+    }
+
+    /// Tombstone physical row `row`. Returns true if the row was live
+    /// (idempotent: a second kill of the same row is a no-op).
+    pub fn kill(&mut self, row: usize) -> bool {
+        let word = row >> 6;
+        if word >= self.words.len() {
+            self.words.resize(word + 1, 0);
+        }
+        let bit = 1u64 << (row & 63);
+        if self.words[word] & bit != 0 {
+            return false;
+        }
+        self.words[word] |= bit;
+        self.dead += 1;
+        true
+    }
+
+    /// Drop every tombstone (after a compaction rewrote the arena).
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.dead = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_is_idempotent_and_counted() {
+        let mut m = SkipMask::new();
+        assert!(m.is_clear());
+        assert!(!m.is_dead(5));
+        assert!(m.kill(5));
+        assert!(!m.kill(5));
+        assert!(m.is_dead(5));
+        assert!(!m.is_dead(4));
+        assert_eq!(m.dead(), 1);
+        assert!(m.kill(64)); // crosses a word boundary
+        assert!(m.is_dead(64));
+        assert_eq!(m.dead(), 2);
+    }
+
+    #[test]
+    fn rows_past_the_mask_are_live() {
+        let mut m = SkipMask::new();
+        m.kill(3);
+        // Appended rows way past the mask's words are live without any
+        // resize on the read path.
+        assert!(!m.is_dead(1_000_000));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut m = SkipMask::new();
+        for r in [1usize, 7, 130] {
+            m.kill(r);
+        }
+        assert_eq!(m.dead(), 3);
+        m.clear();
+        assert!(m.is_clear());
+        assert!(!m.is_dead(1));
+        assert!(!m.is_dead(130));
+    }
+}

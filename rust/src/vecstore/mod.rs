@@ -20,11 +20,14 @@ pub mod flat;
 pub mod ivf;
 pub mod kernels;
 pub mod kmeans;
+pub mod mask;
+pub mod persist;
 pub mod qflat;
 pub mod quant;
 
 pub use flat::FlatIndex;
 pub use ivf::IvfIndex;
+pub use mask::SkipMask;
 pub use qflat::QuantizedFlatIndex;
 pub use quant::Quant;
 
@@ -63,11 +66,49 @@ pub trait Index {
     fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
         queries.iter().map(|q| self.search(q, k)).collect()
     }
+    /// Live (non-tombstoned) rows. Physical arena rows are
+    /// `len() + tombstones()`.
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
     fn dim(&self) -> usize;
+    /// Tombstone every live row stored under `id` (see [`SkipMask`]):
+    /// the arena keeps the bytes, scans skip the rows at one bit test
+    /// each, and global row indices — the deterministic tie-break
+    /// sequence — are untouched. Returns the number of rows killed (0
+    /// when the id is absent, already dead, or the implementation does
+    /// not support deletes — the default).
+    fn remove(&mut self, id: u64) -> usize {
+        let _ = id;
+        0
+    }
+    /// Replace: tombstone any live rows under `id`, then append the new
+    /// vector. Returns the rows tombstoned (0 ⇒ plain insert).
+    fn upsert(&mut self, id: u64, vector: &[f32]) -> usize {
+        let dead = self.remove(id);
+        self.add(id, vector);
+        dead
+    }
+    /// Rows currently tombstoned (masked out of scans but still in the
+    /// arena). The compaction-trigger statistic.
+    fn tombstones(&self) -> usize {
+        0
+    }
+    /// Rewrite the arena(s) dropping tombstoned rows, preserving the
+    /// relative order of live rows (so tie-breaking among survivors is
+    /// unchanged — see `durability` module docs). Returns rows
+    /// reclaimed. Default: nothing to do.
+    fn compact(&mut self) -> usize {
+        0
+    }
+    /// Serialize the index (live rows only — tombstones are dropped, as
+    /// a compaction would) into a self-describing snapshot payload that
+    /// [`persist::decode_index`] restores bit-identically. `None` when
+    /// the implementation has no snapshot codec.
+    fn snapshot_bytes(&self) -> Option<Vec<u8>> {
+        None
+    }
     /// Storage codec of the index's row arena. [`Quant::F32`] unless the
     /// implementation scans a quantized arena.
     fn quant(&self) -> Quant {

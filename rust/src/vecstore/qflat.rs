@@ -9,6 +9,7 @@
 //! is what raises concurrent-scan capacity per instance once the kernels
 //! are memory-bound.
 
+use super::mask::SkipMask;
 use super::quant::{Quant, RowArena};
 use super::{Hit, Index, TopK};
 
@@ -23,15 +24,22 @@ const MIN_ROWS_PER_SHARD: usize = 2048;
 
 /// Flat (exact-scan) index over a quantized row arena.
 pub struct QuantizedFlatIndex {
-    dim: usize,
-    ids: Vec<u64>,
-    arena: RowArena,
+    pub(crate) dim: usize,
+    pub(crate) ids: Vec<u64>,
+    pub(crate) arena: RowArena,
+    /// Tombstoned rows (same skip-mask contract as `FlatIndex`).
+    pub(crate) dead: SkipMask,
 }
 
 impl QuantizedFlatIndex {
     pub fn new(dim: usize, quant: Quant) -> QuantizedFlatIndex {
         assert!(dim > 0);
-        QuantizedFlatIndex { dim, ids: Vec::new(), arena: RowArena::new(quant) }
+        QuantizedFlatIndex {
+            dim,
+            ids: Vec::new(),
+            arena: RowArena::new(quant),
+            dead: SkipMask::new(),
+        }
     }
 
     /// Storage codec of the row arena.
@@ -118,6 +126,10 @@ impl QuantizedFlatIndex {
             self.arena.panel_scores_into(qbuf, nq, r0, r1, self.dim, &mut scores[..nq * nr]);
             for (qi, tk) in tks.iter_mut().enumerate() {
                 for r in 0..nr {
+                    // Tombstone skip (see `FlatIndex::scan_rows`).
+                    if self.dead.is_dead(r0 + r) {
+                        continue;
+                    }
                     tk.push_with_seq(self.ids[r0 + r], scores[qi * nr + r], (r0 + r) as u64);
                 }
             }
@@ -148,7 +160,7 @@ impl Index for QuantizedFlatIndex {
     }
 
     fn len(&self) -> usize {
-        self.ids.len()
+        self.ids.len() - self.dead.dead()
     }
 
     fn dim(&self) -> usize {
@@ -157,6 +169,52 @@ impl Index for QuantizedFlatIndex {
 
     fn quant(&self) -> Quant {
         self.arena.quant()
+    }
+
+    fn remove(&mut self, id: u64) -> usize {
+        let mut killed = 0;
+        for row in 0..self.ids.len() {
+            if self.ids[row] == id && self.dead.kill(row) {
+                killed += 1;
+            }
+        }
+        killed
+    }
+
+    fn tombstones(&self) -> usize {
+        self.dead.dead()
+    }
+
+    fn compact(&mut self) -> usize {
+        let reclaimed = self.dead.dead();
+        if reclaimed == 0 {
+            return 0;
+        }
+        let mut ids = Vec::with_capacity(self.ids.len() - reclaimed);
+        let mut arena = RowArena::new(self.arena.quant());
+        for row in 0..self.ids.len() {
+            if !self.dead.is_dead(row) {
+                ids.push(self.ids[row]);
+                // Byte-exact copy of the already-encoded row: survivors
+                // re-encode identically, so post-compaction scans score
+                // bit-for-bit what they scored before.
+                arena.push_row_from(&self.arena, row, self.dim);
+            }
+        }
+        self.ids = ids;
+        self.arena = arena;
+        self.dead.clear();
+        reclaimed
+    }
+
+    fn scan_rows_estimate(&self) -> usize {
+        // Dead rows still stream through the kernels (see
+        // `FlatIndex::scan_rows_estimate`).
+        self.ids.len()
+    }
+
+    fn snapshot_bytes(&self) -> Option<Vec<u8>> {
+        Some(super::persist::encode_qflat(self))
     }
 }
 

@@ -1,5 +1,15 @@
 //! Failure-injection tests: worker faults, poisoned backends, BUSY
 //! storms, slot-leak detection — the service must degrade, not wedge.
+//!
+//! The second half is the durable-corpus kill-point matrix: every
+//! mutating fs op of a fixed lifecycle (ingest commits, deletes, a
+//! snapshot, a compaction) becomes a crash point, and after each crash
+//! recovery must land on a consistent prefix of the submitted history —
+//! no acked write lost, no delete resurrected, replayed rows
+//! bit-identical. Deterministic companions pin the non-crash faults
+//! (fsync EIO, short writes) whose semantics the crash matrix can't
+//! express; `prop_durability_replay_is_acked_prefix` in `proptests.rs`
+//! is the randomized version.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -201,4 +211,356 @@ fn failed_backend_init_degrades_to_errors_not_hangs() {
         }
     }
     assert_eq!(svc.queue_manager().npu_occupancy(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Durable corpus lifecycle: crash matrix and non-crash faults.
+
+mod durable {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use windve::devices::executor::RetrievalExecutor;
+    use windve::durability::{
+        DurabilityOptions, DurableStore, FaultFs, FaultPlan, Fs, RecoveryReport,
+    };
+    use windve::testing::pseudo_embedding;
+    use windve::vecstore::FlatIndex;
+
+    const DIM: usize = 8;
+
+    fn recover(
+        fs: &Arc<FaultFs>,
+        opts: &DurabilityOptions,
+    ) -> Result<(Arc<DurableStore>, Arc<RetrievalExecutor>, RecoveryReport), anyhow::Error> {
+        let dynfs: Arc<dyn Fs> = fs.clone();
+        DurableStore::recover(
+            dynfs,
+            Path::new("/store"),
+            opts.clone(),
+            || Box::new(FlatIndex::new(DIM)),
+            |text| Ok(pseudo_embedding(text, DIM)),
+        )
+    }
+
+    fn commit(store: &DurableStore, exec: &RetrievalExecutor, id: u64, text: &str) -> bool {
+        let v = pseudo_embedding(text, DIM);
+        store
+            .log_upserts(&[(id, text)], || {
+                exec.upsert_batch(&[(id, v)]);
+            })
+            .is_ok()
+    }
+
+    fn delete(store: &DurableStore, exec: &RetrievalExecutor, id: u64) -> bool {
+        store
+            .log_delete(id, || {
+                exec.remove(id);
+            })
+            .is_ok()
+    }
+
+    /// Live corpus as an id → embedding-bits map; fails on duplicate ids.
+    fn corpus_map(exec: &RetrievalExecutor) -> HashMap<u64, Vec<u32>> {
+        let (ids, rows, _version) =
+            exec.export_corpus().expect("flat index exports its corpus");
+        let mut map = HashMap::new();
+        for (row, id) in ids.iter().enumerate() {
+            let bits: Vec<u32> =
+                rows[row * DIM..(row + 1) * DIM].iter().map(|x| x.to_bits()).collect();
+            assert!(map.insert(*id, bits).is_none(), "duplicate id {id} in export");
+        }
+        map
+    }
+
+    fn expect_state(got: &HashMap<u64, Vec<u32>>, want: &HashMap<u64, String>, ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}: live doc count");
+        for (id, text) in want {
+            let bits: Vec<u32> =
+                pseudo_embedding(text, DIM).iter().map(|x| x.to_bits()).collect();
+            match got.get(id) {
+                None => panic!("{ctx}: acked doc {id} lost"),
+                Some(r) => assert_eq!(r, &bits, "{ctx}: doc {id} replayed with different bits"),
+            }
+        }
+    }
+
+    /// One scripted action. `Up`/`Del` consume one WAL sequence each;
+    /// `Snap`/`Compact` move checkpoints but no sequences — so the
+    /// committed sequence after recovery indexes directly into the
+    /// prefix-state table.
+    #[derive(Clone, Copy)]
+    enum Act {
+        Up(u64, &'static str),
+        Del(u64),
+        Snap,
+        Compact,
+    }
+
+    /// A fixed lifecycle covering every window the contract names:
+    /// commits before and after a snapshot, a delete whose tombstone the
+    /// snapshot captures, an overwrite of a deleted id, enough
+    /// tombstones to trip compaction, and a commit after the compaction.
+    const SCRIPT: &[Act] = &[
+        Act::Up(1, "alpha"),
+        Act::Up(2, "bravo"),
+        Act::Up(3, "charlie"),
+        Act::Del(2),
+        Act::Snap,
+        Act::Up(4, "delta"),
+        Act::Up(2, "bravo rewritten"),
+        Act::Del(1),
+        Act::Del(3),
+        Act::Compact,
+        Act::Up(5, "echo"),
+    ];
+
+    /// Corpus content after each WAL sequence (`states[j]` = after `j`
+    /// mutations); checkpoints don't change content so add no entries.
+    fn prefix_states() -> Vec<HashMap<u64, String>> {
+        let mut states: Vec<HashMap<u64, String>> = vec![HashMap::new()];
+        for act in SCRIPT {
+            let mut next = states.last().unwrap().clone();
+            match act {
+                Act::Up(id, text) => {
+                    next.insert(*id, text.to_string());
+                }
+                Act::Del(id) => {
+                    next.remove(id);
+                }
+                Act::Snap | Act::Compact => continue,
+            }
+            states.push(next);
+        }
+        states
+    }
+
+    /// Drive the script until the first refused action; returns
+    /// mutations acked. Snapshot/compaction failures also stop the run —
+    /// under a crash-only plan an error means the machine is down.
+    fn drive(store: &DurableStore, exec: &RetrievalExecutor) -> usize {
+        let mut acked = 0usize;
+        for act in SCRIPT {
+            let ok = match act {
+                Act::Up(id, text) => commit(store, exec, *id, text),
+                Act::Del(id) => delete(store, exec, *id),
+                Act::Snap => store.snapshot(exec).is_ok(),
+                Act::Compact => store.maybe_compact(exec).is_ok(),
+            };
+            if !ok {
+                return acked;
+            }
+            if matches!(act, Act::Up(..) | Act::Del(..)) {
+                acked += 1;
+            }
+        }
+        acked
+    }
+
+    /// Sweep a crash into every mutating fs op of the lifecycle — WAL
+    /// appends and fsyncs, the snapshot's atomic write, the WAL
+    /// truncation behind it, and the compaction checkpoint — and require
+    /// recovery to land on `states[j]` with `j` covering every acked
+    /// mutation (at most one past it when a torn tail keeps the
+    /// in-flight record whole).
+    #[test]
+    fn kill_point_matrix_recovers_a_consistent_prefix() {
+        // Small segments so the snapshot actually truncates multiple
+        // files and a crash can land between per-segment removals.
+        let opts = DurabilityOptions { segment_bytes: 48, compact_tombstone_ratio: 0.3 };
+        let states = prefix_states();
+
+        // Fault-free run sizes the kill-point space (recovery of an
+        // empty store performs no mutating fs ops).
+        let fs = Arc::new(FaultFs::new());
+        let (store, exec, _) = recover(&fs, &opts).unwrap();
+        assert_eq!(drive(&store, &exec), states.len() - 1, "fault-free run acks everything");
+        let total = fs.ops();
+        assert!(total > 20, "scenario too small to be interesting: {total} ops");
+
+        for kill in 0..total {
+            // torn_keep 64 keeps any single in-flight record intact,
+            // exercising the logged-but-unacked replay arm.
+            for torn in [0usize, 5, 64] {
+                let ctx = format!("kill at op {kill}/{total}, torn_keep {torn}");
+                let fs = Arc::new(FaultFs::with_plan(FaultPlan {
+                    crash_at_op: Some(kill),
+                    torn_keep: torn,
+                    ..Default::default()
+                }));
+                let (store, exec, _) = recover(&fs, &opts).unwrap();
+                let acked = drive(&store, &exec);
+                assert!(acked < states.len(), "{ctx}: crash never fired");
+                fs.restart(FaultPlan::default());
+                let (store2, exec2, report) = recover(&fs, &opts)
+                    .unwrap_or_else(|e| panic!("{ctx}: recovery failed: {e}"));
+                let j = store2.stats().committed_seq as usize;
+                assert!(
+                    j == acked || j == acked + 1,
+                    "{ctx}: recovered prefix {j} outside [{acked}, {}]",
+                    acked + 1
+                );
+                assert_eq!(
+                    report.watermark + report.replayed,
+                    j as u64,
+                    "{ctx}: snapshot + tail must cover the committed sequence"
+                );
+                expect_state(&corpus_map(&exec2), &states[j], &ctx);
+                // The store stays writable after recovery.
+                assert!(commit(&store2, &exec2, 99, "post recovery"), "{ctx}: store wedged");
+            }
+        }
+    }
+
+    /// An fsync EIO refuses the ack and leaves the index clean — but the
+    /// appended bytes sit in the page cache, and a LATER successful
+    /// fsync makes them durable. Replay may therefore include the
+    /// refused record: the contract's weak converse (logged-but-unacked
+    /// records replay in submitted order, never a reordering).
+    #[test]
+    fn fsync_error_refuses_ack_but_record_may_replay_after_later_sync() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions { compact_tombstone_ratio: 0.0, ..Default::default() };
+        // Ops: 0 = append "refused", 1 = its fsync (EIO).
+        fs.restart(FaultPlan { fsync_fail_at: Some(1), ..Default::default() });
+        let (store, exec, _) = recover(&fs, &opts).unwrap();
+        assert!(!commit(&store, &exec, 1, "refused"), "fsync EIO must refuse the ack");
+        assert_eq!(exec.len(), 0, "index untouched on a refused commit");
+        assert_eq!(store.stats().wal_append_failures, 1);
+        // The next commit's fsync flushes the whole file — including the
+        // refused record sitting ahead of it.
+        assert!(commit(&store, &exec, 2, "acked"));
+        assert_eq!(exec.len(), 1, "only the acked doc is live in-process");
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (store2, exec2, report) = recover(&fs, &opts).unwrap();
+        assert_eq!(report.replayed, 2, "refused record replays ahead of the acked one");
+        assert_eq!(store2.stats().committed_seq, 2);
+        let got = corpus_map(&exec2);
+        assert!(got.contains_key(&2), "acked doc must survive");
+        assert!(got.contains_key(&1), "logged-but-unacked doc replays (prefix extension)");
+    }
+
+    /// A short write mid-ingest refuses that ack, and the WAL's tail
+    /// repair keeps every LATER acked record replayable — the partial
+    /// bytes must not become a torn region entombing the rest of the log.
+    #[test]
+    fn short_write_mid_ingest_preserves_later_acked_records() {
+        let fs = Arc::new(FaultFs::with_plan(FaultPlan {
+            short_write_at: Some(2),
+            ..Default::default()
+        }));
+        let opts = DurabilityOptions { compact_tombstone_ratio: 0.0, ..Default::default() };
+        let (store, exec, _) = recover(&fs, &opts).unwrap();
+        assert!(commit(&store, &exec, 1, "before the fault")); // ops 0-1
+        assert!(!commit(&store, &exec, 2, "short-written"), "short write refuses the ack");
+        assert_eq!(store.stats().wal_append_failures, 1);
+        assert!(commit(&store, &exec, 3, "after the repair"), "store keeps working");
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (store2, exec2, report) = recover(&fs, &opts).unwrap();
+        assert_eq!(report.replayed, 2);
+        assert_eq!(store2.stats().committed_seq, 2, "refused record consumed no sequence");
+        let got = corpus_map(&exec2);
+        assert!(got.contains_key(&1) && got.contains_key(&3), "both acked docs survive");
+        assert!(!got.contains_key(&2), "refused doc stays refused");
+    }
+
+    /// Crash between the WAL fsync and the index commit: the record is
+    /// durable but the index never absorbed it. Replay must re-apply it.
+    #[test]
+    fn crash_between_wal_fsync_and_index_commit_replays_the_record() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions::default();
+        let (store, exec, _) = recover(&fs, &opts).unwrap();
+        assert!(commit(&store, &exec, 1, "fully committed"));
+        // The commit closure is where the index mutation runs; an empty
+        // one models the process dying right after the fsync returned.
+        store.log_upserts(&[(2, "logged, never indexed")], || {}).unwrap();
+        assert_eq!(exec.len(), 1, "index never saw doc 2");
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (store2, exec2, report) = recover(&fs, &opts).unwrap();
+        assert_eq!(report.replayed, 2);
+        assert_eq!(store2.stats().committed_seq, 2);
+        let got = corpus_map(&exec2);
+        assert_eq!(got.len(), 2);
+        assert!(got.contains_key(&2), "durable-but-unindexed record must replay");
+    }
+
+    /// Deleted ids stay deleted across snapshot, crash, and replay —
+    /// whether the tombstone is inside the snapshot or in the tail.
+    #[test]
+    fn deleted_ids_never_resurrect_across_crash_and_snapshot() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions { compact_tombstone_ratio: 0.0, ..Default::default() };
+        let (store, exec, _) = recover(&fs, &opts).unwrap();
+        for (id, text) in [(1, "one"), (2, "two"), (3, "three"), (4, "four")] {
+            assert!(commit(&store, &exec, id, text));
+        }
+        assert!(delete(&store, &exec, 2)); // tombstone captured by the snapshot
+        store.snapshot(&exec).unwrap();
+        assert!(delete(&store, &exec, 3)); // tombstone only in the WAL tail
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (_, exec2, report) = recover(&fs, &opts).unwrap();
+        assert!(report.from_snapshot);
+        assert_eq!(report.replayed, 1, "only the post-snapshot delete replays");
+        let got = corpus_map(&exec2);
+        assert_eq!(got.len(), 2);
+        assert!(!got.contains_key(&2) && !got.contains_key(&3), "deleted ids resurrected");
+        // Searches agree: the deleted ids never rank.
+        for id in [2u64, 3] {
+            let q = pseudo_embedding(if id == 2 { "two" } else { "three" }, DIM);
+            assert!(exec2.search(&q, 4).iter().all(|h| h.id != id), "id {id} still searchable");
+        }
+    }
+
+    /// Release-mode CI smoke: a moderately sized ingest → delete →
+    /// snapshot → ingest lifecycle, one hard crash, full recovery with
+    /// bit-identical scores.
+    /// (`cargo test --release --test failure_injection crash_replay`.)
+    #[test]
+    fn crash_replay_smoke() {
+        let fs = Arc::new(FaultFs::new());
+        let opts = DurabilityOptions { segment_bytes: 512, compact_tombstone_ratio: 0.0 };
+        let (store, exec, _) = recover(&fs, &opts).unwrap();
+        for i in 0..40u64 {
+            assert!(commit(&store, &exec, i, &format!("smoke doc number {i}")));
+        }
+        for i in (0..40u64).step_by(4) {
+            assert!(delete(&store, &exec, i)); // 10 deletes
+        }
+        store.snapshot(&exec).unwrap();
+        for i in 40..50u64 {
+            assert!(commit(&store, &exec, i, &format!("smoke doc number {i}")));
+        }
+        assert!(delete(&store, &exec, 41));
+        assert!(delete(&store, &exec, 43));
+        let probes: Vec<Vec<f32>> = (0..5)
+            .map(|i| pseudo_embedding(&format!("smoke doc number {}", i * 7 + 1), DIM))
+            .collect();
+        let want: Vec<Vec<(u64, u32)>> = probes
+            .iter()
+            .map(|q| exec.search(q, 8).iter().map(|h| (h.id, h.score.to_bits())).collect())
+            .collect();
+
+        fs.crash_now();
+        fs.restart(FaultPlan::default());
+        let (store2, exec2, report) = recover(&fs, &opts).unwrap();
+        assert!(report.from_snapshot);
+        assert_eq!(report.replayed, 12, "10 post-snapshot upserts + 2 deletes");
+        assert_eq!(store2.stats().committed_seq, 62);
+        assert_eq!(exec2.len(), 38, "40 - 10 deleted + 10 new - 2 deleted");
+        let got: Vec<Vec<(u64, u32)>> = probes
+            .iter()
+            .map(|q| exec2.search(q, 8).iter().map(|h| (h.id, h.score.to_bits())).collect())
+            .collect();
+        assert_eq!(got, want, "recovered index scores bit-identically");
+    }
 }

@@ -1126,3 +1126,175 @@ fn prop_ingest_ndjson_stream_chunking_invariant() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Durability: crash-replay prefix property.
+// ---------------------------------------------------------------------------
+
+/// Any mutation history × any injected crash point: recovery yields exactly
+/// a prefix of the submitted history that covers every acked operation —
+/// no loss, no duplicates, no reordering, and replayed rows are
+/// bit-identical to what the live index held. The recovered prefix may
+/// run one past the acked count (a record can be WAL-durable — or survive
+/// as a torn-tail record the crash kept whole — without its ack having
+/// been delivered); the contract allows that prefix *extension* and
+/// nothing else.
+#[test]
+fn prop_durability_replay_is_acked_prefix() {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use windve::devices::executor::RetrievalExecutor;
+    use windve::durability::{DurabilityOptions, DurableStore, FaultFs, FaultPlan, Fs};
+    use windve::testing::pseudo_embedding;
+    use windve::vecstore::FlatIndex;
+
+    const DIM: usize = 8;
+
+    enum Op {
+        Upsert(u64, String),
+        Delete(u64),
+    }
+
+    /// Log + commit one op; false means the store refused the ack.
+    fn apply(store: &DurableStore, exec: &RetrievalExecutor, op: &Op) -> bool {
+        match op {
+            Op::Upsert(id, text) => {
+                let v = pseudo_embedding(text, DIM);
+                store
+                    .log_upserts(&[(*id, text.as_str())], || {
+                        exec.upsert_batch(&[(*id, v)]);
+                    })
+                    .is_ok()
+            }
+            Op::Delete(id) => store
+                .log_delete(*id, || {
+                    exec.remove(*id);
+                })
+                .is_ok(),
+        }
+    }
+
+    property("durability crash-replay acked prefix", 20, |g: &mut Gen| {
+        // A short mutation history over a small id space (small so deletes
+        // hit live docs and upserts overwrite).
+        let n_ops = g.usize(1, 12);
+        let mut ops: Vec<Op> = Vec::new();
+        for i in 0..n_ops {
+            let id = g.u64(0, 6);
+            if g.chance(0.3) {
+                ops.push(Op::Delete(id));
+            } else {
+                ops.push(Op::Upsert(id, format!("doc {id} rev {i}")));
+            }
+        }
+        let opts = DurabilityOptions {
+            segment_bytes: *g.pick(&[64usize, 1 << 20]),
+            compact_tombstone_ratio: 0.0,
+        };
+        let recover = |fs: &Arc<FaultFs>| {
+            let dynfs: Arc<dyn Fs> = fs.clone();
+            DurableStore::recover(
+                dynfs,
+                Path::new("/prop"),
+                opts.clone(),
+                || Box::new(FlatIndex::new(DIM)),
+                |text| Ok(pseudo_embedding(text, DIM)),
+            )
+            .map_err(|e| e.to_string())
+        };
+
+        // states[j] = the corpus after the first j operations.
+        let mut states: Vec<HashMap<u64, String>> = vec![HashMap::new()];
+        for op in &ops {
+            let mut next = states.last().unwrap().clone();
+            match op {
+                Op::Upsert(id, text) => {
+                    next.insert(*id, text.clone());
+                }
+                Op::Delete(id) => {
+                    next.remove(id);
+                }
+            }
+            states.push(next);
+        }
+
+        // Fault-free run sizes the kill-point space (recovery of an empty
+        // store performs no mutating fs ops, so every op number below
+        // lands inside the mutation history).
+        let fs = Arc::new(FaultFs::new());
+        let (store, exec, _) = recover(&fs)?;
+        for op in &ops {
+            if !apply(&store, &exec, op) {
+                return Err("fault-free apply refused an ack".into());
+            }
+        }
+        let total = fs.ops();
+
+        for kill in 0..total {
+            // torn_keep 64 covers a whole record: the in-flight append can
+            // survive the crash intact, exercising the j == acked + 1 arm.
+            let torn = *g.pick(&[0usize, 1, 3, 7, 64]);
+            let fs = Arc::new(FaultFs::with_plan(FaultPlan {
+                crash_at_op: Some(kill),
+                torn_keep: torn,
+                ..Default::default()
+            }));
+            let (store, exec, _) = recover(&fs)?;
+            let mut acked = 0usize;
+            for op in &ops {
+                if !apply(&store, &exec, op) {
+                    break;
+                }
+                acked += 1;
+            }
+            if acked == ops.len() {
+                return Err(format!("kill at op {kill}/{total} never fired"));
+            }
+            fs.restart(FaultPlan::default());
+            let (store2, exec2, report) =
+                recover(&fs).map_err(|e| format!("recovery after kill {kill}: {e}"))?;
+
+            let j = store2.stats().committed_seq as usize;
+            if j < acked || j > acked + 1 {
+                return Err(format!(
+                    "kill {kill} torn {torn}: recovered prefix {j} outside [{acked}, {}]",
+                    acked + 1
+                ));
+            }
+            if report.replayed != j as u64 {
+                return Err(format!(
+                    "kill {kill}: replayed {} records but committed_seq is {j}",
+                    report.replayed
+                ));
+            }
+            let want = &states[j];
+            let (ids, rows, _version) = exec2
+                .export_corpus()
+                .ok_or_else(|| format!("kill {kill}: flat index must export its corpus"))?;
+            if ids.len() != want.len() {
+                return Err(format!(
+                    "kill {kill} torn {torn}: {} live docs, want {} (j={j}, acked={acked})",
+                    ids.len(),
+                    want.len()
+                ));
+            }
+            let mut got: HashMap<u64, &[f32]> = HashMap::new();
+            for (row, id) in ids.iter().enumerate() {
+                if got.insert(*id, &rows[row * DIM..(row + 1) * DIM]).is_some() {
+                    return Err(format!("kill {kill}: duplicate id {id} after replay"));
+                }
+            }
+            for (id, text) in want {
+                let w = pseudo_embedding(text, DIM);
+                let r = got
+                    .get(id)
+                    .ok_or_else(|| format!("kill {kill}: acked doc {id} lost (j={j})"))?;
+                if r.iter().zip(&w).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!("kill {kill}: doc {id} replayed with different bits"));
+                }
+            }
+        }
+        Ok(())
+    });
+}

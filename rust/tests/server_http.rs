@@ -507,3 +507,171 @@ fn ingest_chunked_upload_serves_queries_throughout() {
     assert_eq!(st.get("active_streams").unwrap().as_u64(), Some(0));
     server.stop();
 }
+
+// ---------------------------------------------------------------------------
+// Durable corpus lifecycle over the wire.
+
+fn start_durable_server() -> (
+    Server,
+    Arc<WindVE>,
+    Arc<windve::devices::executor::RetrievalExecutor>,
+    Arc<windve::durability::DurableStore>,
+    Arc<windve::durability::FaultFs>,
+) {
+    use windve::durability::{DurabilityOptions, DurableStore, FaultFs, Fs};
+    use windve::testing::pseudo_embedding;
+    use windve::vecstore::FlatIndex;
+
+    let (server, svc, _detached) = start_ingest_server(8, 4);
+    let fs = Arc::new(FaultFs::new());
+    let dynfs: Arc<dyn Fs> = fs.clone();
+    // SyntheticBackend emits 64-dim embeddings; the replay embedder is
+    // only exercised when a WAL tail exists.
+    let (store, exec, _report) = DurableStore::recover(
+        dynfs,
+        std::path::Path::new("/srv"),
+        DurabilityOptions::default(),
+        || Box::new(FlatIndex::new(64)),
+        |text| Ok(pseudo_embedding(text, 64)),
+    )
+    .unwrap();
+    svc.attach_retrieval(Arc::clone(&exec));
+    svc.attach_durability(Arc::clone(&store));
+    (server, svc, exec, store, fs)
+}
+
+/// `DELETE /v1/corpus/{id}` and `POST /v1/corpus/snapshot` end to end:
+/// uploads WAL-log before acking, deletes tombstone durably (unknown ids
+/// still log), the snapshot truncates the WAL, and `/stats` surfaces the
+/// durability block.
+#[test]
+fn corpus_delete_and_snapshot_endpoints_are_durable() {
+    let (server, _svc, exec, store, fs) = start_durable_server();
+    let mut ndjson = String::new();
+    for i in 0..6u64 {
+        ndjson.push_str(&format!("{{\"id\":{i},\"text\":\"durable doc {i}\"}}\n"));
+    }
+    let (status, body) = request_chunked(server.addr(), "/v1/corpus", &ndjson, 32);
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(json::parse(&body).unwrap().get("indexed").unwrap().as_u64(), Some(6));
+    assert_eq!(store.stats().committed_seq, 6, "uploads were WAL-logged before the ack");
+
+    // Durable delete: tombstone + version bump; repeat delete of the
+    // same id is a success that removes nothing (but still logs).
+    let (status, body) = request(server.addr(), "DELETE", "/v1/corpus/3", "");
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+    assert_eq!(v.get("removed").unwrap().as_u64(), Some(1));
+    assert!(v.get("corpus_version").unwrap().as_u64().unwrap() >= 7);
+    let (status, body) = request(server.addr(), "DELETE", "/v1/corpus/3", "");
+    assert_eq!(status, 200);
+    assert_eq!(json::parse(&body).unwrap().get("removed").unwrap().as_u64(), Some(0));
+    let (status, _) = request(server.addr(), "DELETE", "/v1/corpus/not-a-number", "");
+    assert_eq!(status, 400);
+    assert_eq!(exec.len(), 5);
+    assert_eq!(store.stats().committed_seq, 8, "6 upserts + 2 delete records");
+
+    // /stats carries the durability block while a store is attached.
+    let (_, stats) = request(server.addr(), "GET", "/stats", "");
+    let s = json::parse(&stats).unwrap();
+    let d = s.get("durability").expect("durability block in /stats");
+    assert_eq!(d.get("committed_seq").unwrap().as_u64(), Some(8));
+    assert!(d.get("wal_bytes").unwrap().as_u64().unwrap() > 0);
+
+    // Checkpoint over the wire: watermark covers everything, WAL gone.
+    let (status, body) = request(server.addr(), "POST", "/v1/corpus/snapshot", "");
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(json::parse(&body).unwrap().get("watermark").unwrap().as_u64(), Some(8));
+    let st = store.stats();
+    assert_eq!(st.wal_segments, 0, "WAL truncated behind the snapshot");
+    assert_eq!(st.snapshots_written, 1);
+    server.stop();
+
+    // Crash + offline recovery: the snapshot alone restores the corpus,
+    // with the deleted doc still gone.
+    use windve::durability::{DurabilityOptions, DurableStore, FaultPlan, Fs};
+    use windve::vecstore::FlatIndex;
+    fs.crash_now();
+    fs.restart(FaultPlan::default());
+    let dynfs: Arc<dyn Fs> = fs.clone();
+    let (_, exec2, report) = DurableStore::recover(
+        dynfs,
+        std::path::Path::new("/srv"),
+        DurabilityOptions::default(),
+        || Box::new(FlatIndex::new(64)),
+        |_| anyhow::bail!("no tail to replay"),
+    )
+    .unwrap();
+    assert!(report.from_snapshot);
+    assert_eq!(report.replayed, 0);
+    assert_eq!(exec2.len(), 5);
+    let (ids, _, _) = exec2.export_corpus().unwrap();
+    assert!(!ids.contains(&3), "deleted id resurrected by recovery");
+}
+
+/// Without a durable store attached, the snapshot endpoint reports a
+/// server error instead of pretending to checkpoint.
+#[test]
+fn snapshot_without_store_is_500() {
+    let (server, _svc) = start_server(4, 0);
+    let (status, body) = request(server.addr(), "POST", "/v1/corpus/snapshot", "");
+    assert_eq!(status, 500, "{body}");
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// Slow-loris guard over the wire.
+
+/// A client that sends half a request head and stalls gets a 408 and a
+/// closed connection once the per-request budget expires — while an
+/// idle keep-alive connection (no bytes sent) is left alone and can
+/// still issue a request afterwards.
+#[test]
+fn slow_loris_partial_head_gets_408_idle_connection_survives() {
+    let svc = Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 4,
+                cpu_depth: 0,
+                hetero: false,
+                npu_workers: 1,
+                cpu_workers: 0,
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+                ..ServiceConfig::default()
+            },
+            vec![synth_factory(1)],
+            vec![],
+        )
+        .unwrap(),
+    );
+    let server = Server::start_with_deadline(
+        "127.0.0.1:0",
+        Arc::clone(&svc),
+        Duration::from_secs(2),
+        Duration::from_millis(300),
+    )
+    .unwrap();
+
+    // The loris: half a head, then silence. The budget armed on the
+    // first byte; the server must answer 408 and close.
+    let mut loris = TcpStream::connect(server.addr()).unwrap();
+    loris.write_all(b"POST /v1/embed HTTP/1.1\r\nHost: t\r\n").unwrap();
+    let mut raw = String::new();
+    loris.read_to_string(&mut raw).unwrap(); // returns only on server close
+    let (status, _) = parse_response(&raw);
+    assert_eq!(status, 408, "{raw}");
+
+    // The idler: a connection that has sent nothing is not on the clock.
+    let mut idler = TcpStream::connect(server.addr()).unwrap();
+    std::thread::sleep(Duration::from_millis(500));
+    idler
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    idler.read_to_string(&mut raw).unwrap();
+    let (status, _) = parse_response(&raw);
+    assert_eq!(status, 200, "idle keep-alive killed: {raw}");
+    server.stop();
+}
