@@ -15,8 +15,14 @@
 //! `WINDVE_SIMD=scalar` for a forced-scalar baseline run, `WINDVE_QUANT`
 //! to pin one codec (default: all three), and `WINDVE_BENCH_JSON=<path>`
 //! to write the machine-readable record set CI uploads as an artifact.
+//! The server-concurrency rows honor `WINDVE_BENCH_CONNS` (default 64)
+//! and `WINDVE_BENCH_REQS` (keep-alive requests per conn, default 100).
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use windve::benchkit::{bench_with, section, JsonReport};
+use windve::server::Server;
 use windve::util::json::Json;
 use windve::util::rng::Pcg;
 use windve::vecstore::{kernels, FlatIndex, Index, IvfIndex, Quant};
@@ -182,8 +188,125 @@ fn main() {
         }
     }
 
+    section("http server concurrency: readiness loop vs thread-per-conn");
+    {
+        let conns = env_usize("WINDVE_BENCH_CONNS", 64);
+        // One keep-alive connection serves at most MAX_REQUESTS_PER_CONN
+        // requests before the server rotates it; stay under the cap.
+        let reqs = env_usize("WINDVE_BENCH_REQS", 100)
+            .clamp(1, windve::server::MAX_REQUESTS_PER_CONN - 1);
+        let _ = windve::util::sys::raise_nofile_limit((4 * conns + 256) as u64);
+        let svc = server_bench_service();
+        let reactor = Server::start("127.0.0.1:0", Arc::clone(&svc), Duration::from_secs(2))
+            .expect("reactor server");
+        let qps_reactor = keepalive_qps(reactor.addr(), conns, reqs);
+        reactor.stop();
+        let threaded = Server::start_threaded("127.0.0.1:0", svc, Duration::from_secs(2))
+            .expect("threaded server");
+        let qps_threaded = keepalive_qps(threaded.addr(), conns, reqs);
+        threaded.stop();
+        for (name, qps) in [
+            ("server keep-alive healthz, readiness loop", qps_reactor),
+            ("server keep-alive healthz, thread-per-conn", qps_threaded),
+        ] {
+            println!("{name:<52} {qps:>12.0} requests/s   ({conns} conns x {reqs})");
+            h.report.push(vec![
+                ("bench", Json::str(name)),
+                ("rows", Json::num(conns as f64)),
+                ("batch", Json::num(reqs as f64)),
+                ("quant", Json::str("f32")),
+                ("kernel", Json::str(kernels::name())),
+                ("queries_per_s", Json::num(qps)),
+            ]);
+        }
+        println!(
+            "{:<52} {:.2}x",
+            "readiness loop vs thread-per-conn",
+            qps_reactor / qps_threaded.max(1e-9)
+        );
+    }
+
     if let Ok(path) = std::env::var("WINDVE_BENCH_JSON") {
         h.report.write(&path).expect("write bench JSON");
         println!("\nwrote {} records to {path}", h.report.len());
     }
+}
+
+/// Minimal NPU-only synthetic service for the server-concurrency rows
+/// (healthz never touches the queues; the service just has to exist).
+fn server_bench_service() -> std::sync::Arc<windve::coordinator::WindVE> {
+    use windve::coordinator::{ServiceConfig, WindVE};
+    use windve::devices::executor::{Backend, SyntheticBackend};
+    use windve::devices::profile::DeviceProfile;
+    std::sync::Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 64,
+                cpu_depth: 0,
+                hetero: false,
+                npu_workers: 1,
+                cpu_workers: 0,
+                ..ServiceConfig::default()
+            },
+            vec![Box::new(|| {
+                let mut p = DeviceProfile::v100_bge();
+                p.noise_sigma = 0.0;
+                p.outlier_prob = 0.0;
+                Ok(Box::new(SyntheticBackend::new(p, 1e-6, 1)) as Box<dyn Backend>)
+            })],
+            vec![],
+        )
+        .expect("bench service"),
+    )
+}
+
+/// Drive `conns` concurrent keep-alive connections, each issuing `reqs`
+/// sequential `GET /v1/healthz` requests, and return aggregate
+/// requests/second.
+fn keepalive_qps(addr: std::net::SocketAddr, conns: usize, reqs: usize) -> f64 {
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    let start = std::time::Instant::now();
+    let clients: Vec<_> = (0..conns)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap_or_else(|e| panic!("conn {c}: {e}"));
+                let req = b"GET /v1/healthz HTTP/1.1\r\nHost: b\r\n\r\n";
+                let mut raw: Vec<u8> = Vec::with_capacity(512);
+                let mut chunk = [0u8; 1024];
+                for _ in 0..reqs {
+                    s.write_all(req).unwrap();
+                    // Read one response: head, then Content-Length bytes.
+                    raw.clear();
+                    let head_end = loop {
+                        if let Some(p) = raw.windows(4).position(|w| w == b"\r\n\r\n") {
+                            break p;
+                        }
+                        let n = s.read(&mut chunk).unwrap();
+                        assert!(n > 0, "closed mid-response");
+                        raw.extend_from_slice(&chunk[..n]);
+                    };
+                    let head = String::from_utf8_lossy(&raw[..head_end]);
+                    let clen: usize = head
+                        .lines()
+                        .find_map(|l| {
+                            l.to_ascii_lowercase()
+                                .strip_prefix("content-length:")
+                                .map(|v| v.trim().parse().unwrap())
+                        })
+                        .expect("Content-Length");
+                    let mut have = raw.len() - head_end - 4;
+                    while have < clen {
+                        let n = s.read(&mut chunk).unwrap();
+                        assert!(n > 0, "closed mid-body");
+                        have += n;
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in clients {
+        h.join().expect("bench client panicked");
+    }
+    (conns * reqs) as f64 / start.elapsed().as_secs_f64().max(1e-9)
 }

@@ -121,6 +121,14 @@ pub struct ServiceConfig {
     /// Stricter than the retrieval offload gate by default — ingest is
     /// the lowest-priority class.
     pub ingest_low_water: f64,
+    /// NUMA-aware retrieval scans (paper §4.4 extended to the scan
+    /// path): when true, [`WindVE::attach_retrieval`] detects the host
+    /// topology and — only on multi-node hosts — opts the executor's
+    /// index into node-banded, thread-pinned scan sharding
+    /// (`vecstore::numa`). Single-node hosts (and indexes without NUMA
+    /// support) silently keep the plain sharded scan. Results are
+    /// bit-identical either way.
+    pub numa_scan: bool,
 }
 
 /// Default embed-query cost unit: 32 MiB of scanned arena ≈ the memory
@@ -151,6 +159,7 @@ impl Default for ServiceConfig {
             ingest_depth: 1,
             npu_ingest_depth: 0,
             ingest_low_water: 0.25,
+            numa_scan: false,
         }
     }
 }
@@ -262,6 +271,9 @@ pub struct WindVE {
     ingest_low_water_slots: usize,
     /// Service-lifetime streaming-ingest counters (`/v1/ingest/status`).
     ingest_stats: Arc<IngestStats>,
+    /// Operator intent from [`ServiceConfig::numa_scan`]: applied to
+    /// executors as they are attached (multi-node hosts only).
+    numa_scan: bool,
     pub metrics: Registry,
 }
 
@@ -357,6 +369,7 @@ impl WindVE {
             npu_offload_low_water_slots,
             ingest_low_water_slots,
             ingest_stats: Arc::new(IngestStats::default()),
+            numa_scan: cfg.numa_scan,
             metrics,
         })
     }
@@ -366,6 +379,15 @@ impl WindVE {
     /// attachment — and drops any NPU mirror of the old corpus, so a
     /// stale arena can never answer for a new index.
     pub fn attach_retrieval(&self, exec: Arc<RetrievalExecutor>) {
+        // NUMA opt-in (`ServiceConfig::numa_scan`): only worth the arena
+        // rewrite on a genuinely multi-node host — a single-node
+        // topology keeps the plain sharded scan (safe fallback).
+        if self.numa_scan {
+            let topo = crate::devices::affinity::Topology::detect();
+            if topo.numa_nodes > 1 {
+                exec.set_numa(Some(topo));
+            }
+        }
         *self.retrieval.lock().expect("retrieval lock poisoned") = Some(exec);
         *self.npu_retrieval.lock().expect("npu retrieval lock poisoned") = None;
     }

@@ -4,7 +4,9 @@
 //! cores **in reversed index order** (the service framework and OS settle
 //! on low-index cores) and **never cross a NUMA node** within one worker.
 //! This module implements that plan: a topology model, the reversed
-//! non-crossing core picker, and the actual `sched_setaffinity` call.
+//! non-crossing core picker, and the actual `sched_setaffinity` call
+//! (via the in-repo FFI shim `util::sys` — the vendor set has no `libc`
+//! crate).
 
 use anyhow::{bail, Result};
 
@@ -53,6 +55,13 @@ impl Topology {
         (core / self.cores_per_node()).min(self.numa_nodes - 1)
     }
 
+    /// All core indices belonging to `node` (remainder cores fold into
+    /// the last node, mirroring [`Topology::node_of`]).
+    pub fn cores_of_node(&self, node: usize) -> Vec<usize> {
+        assert!(node < self.numa_nodes);
+        (0..self.cores).filter(|&c| self.node_of(c) == node).collect()
+    }
+
     /// Pick `n` cores for one worker per the paper's §4.4 heuristic:
     /// highest indices first, truncated so the set never crosses a NUMA
     /// boundary. Returns an error if `n` exceeds one node's cores (the
@@ -99,18 +108,8 @@ pub fn pin_current_thread(cores: &[usize]) -> Result<()> {
     if cores.is_empty() {
         bail!("empty core set");
     }
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        for &c in cores {
-            libc::CPU_SET(c, &mut set);
-        }
-        let rc = libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set);
-        if rc != 0 {
-            bail!("sched_setaffinity failed: {}", std::io::Error::last_os_error());
-        }
-    }
-    Ok(())
+    crate::util::sys::set_thread_affinity(cores)
+        .map_err(|e| anyhow::anyhow!("sched_setaffinity failed: {e}"))
 }
 
 #[cfg(not(target_os = "linux"))]
@@ -121,16 +120,8 @@ pub fn pin_current_thread(_cores: &[usize]) -> Result<()> {
 /// Current thread's allowed cores (for tests).
 #[cfg(target_os = "linux")]
 pub fn current_affinity() -> Result<Vec<usize>> {
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        let rc = libc::sched_getaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mut set);
-        if rc != 0 {
-            bail!("sched_getaffinity failed");
-        }
-        Ok((0..libc::CPU_SETSIZE as usize)
-            .filter(|&c| libc::CPU_ISSET(c, &set))
-            .collect())
-    }
+    crate::util::sys::get_thread_affinity()
+        .map_err(|e| anyhow::anyhow!("sched_getaffinity failed: {e}"))
 }
 
 #[cfg(test)]
@@ -145,6 +136,22 @@ mod tests {
         assert_eq!(t.node_of(0), 0);
         assert_eq!(t.node_of(127), 3);
         assert_eq!(t.node_of(95), 2);
+    }
+
+    #[test]
+    fn cores_of_node_partitions_all_cores() {
+        let t = Topology::new(10, 3); // uneven: remainder folds into node 2
+        let mut seen = Vec::new();
+        for node in 0..t.numa_nodes {
+            let cores = t.cores_of_node(node);
+            assert!(!cores.is_empty());
+            for &c in &cores {
+                assert_eq!(t.node_of(c), node);
+            }
+            seen.extend(cores);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
     }
 
     #[test]

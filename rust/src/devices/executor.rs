@@ -221,6 +221,17 @@ impl RetrievalExecutor {
         self.quant
     }
 
+    /// Opt the attached index into NUMA-aware scan sharding (exclusive
+    /// lock: the arena is rewritten through per-node pinned first-touch
+    /// copies — see `vecstore::numa`). `None` reverts to plain sharding.
+    /// Results are bit-identical either way; placement moves bytes,
+    /// never scores. Returns `false` when the index does not support it
+    /// (e.g. IVF). No version bump: contents are unchanged, so device
+    /// mirrors stay valid.
+    pub fn set_numa(&self, topo: Option<crate::devices::affinity::Topology>) -> bool {
+        self.index.write().expect("index lock poisoned").set_numa(topo)
+    }
+
     /// Add one corpus vector (exclusive lock; cheap relative to scans).
     /// The version bump happens inside the guard, so a reader holding the
     /// lock always sees a version consistent with the rows it can scan.

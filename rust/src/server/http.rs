@@ -196,21 +196,34 @@ impl<S: Read> Conn<S> {
         if !self.buf.is_empty() && self.deadline.is_none() {
             self.deadline = self.budget.map(|b| Instant::now() + b);
         }
-        let head_end = loop {
-            // Scan only the unscanned tail (plus a 3-byte overlap for a
-            // terminator split across reads) — the O(n²) fix.
-            if let Some(pos) = find_head_end_from(&self.buf, self.scanned) {
-                break pos;
-            }
-            self.scanned = self.buf.len().saturating_sub(3);
-            if self.buf.len() > MAX_HEAD {
-                bail!("headers too large");
+        loop {
+            if let Some(head) = self.try_parse_head()? {
+                return Ok(Some(head));
             }
             if self.fill()? == 0 {
                 if self.buf.is_empty() {
                     return Ok(None);
                 }
                 bail!("connection closed mid-request");
+            }
+        }
+    }
+
+    /// Pure-buffer head parse: consume and return a complete head if one
+    /// is buffered, `Ok(None)` if more bytes are needed. Never touches
+    /// the socket — the reactor drives this from readiness events; the
+    /// blocking [`Conn::read_head`] wraps it with `fill`.
+    pub(crate) fn try_parse_head(&mut self) -> Result<Option<Head>> {
+        // Scan only the unscanned tail (plus a 3-byte overlap for a
+        // terminator split across reads) — the O(n²) fix.
+        let head_end = match find_head_end_from(&self.buf, self.scanned) {
+            Some(pos) => pos,
+            None => {
+                self.scanned = self.buf.len().saturating_sub(3);
+                if self.buf.len() > MAX_HEAD {
+                    bail!("headers too large");
+                }
+                return Ok(None);
             }
         };
 
@@ -245,29 +258,18 @@ impl<S: Read> Conn<S> {
     /// caller must respond 400 and close — guessing a framing would
     /// desynchronize the keep-alive stream.
     pub fn body<'c>(&'c mut self, head: &Head) -> Result<BodyReader<'c, S>> {
-        let framing = if let Some(te) = head.header("transfer-encoding") {
-            let last = te.to_ascii_lowercase();
-            let last = last.split(',').map(str::trim).next_back();
-            if last == Some("chunked") {
-                Framing::ChunkSize
-            } else {
-                bail!("unsupported Transfer-Encoding {te:?}");
-            }
-        } else {
-            match head.content_length()? {
-                Some(n) if n > 0 => Framing::Length { remaining: n },
-                _ => Framing::Done,
-            }
-        };
+        let framing = Framing::for_head(head)?;
         Ok(BodyReader { conn: self, framing })
     }
 
     /// Materialize `head`'s body as a UTF-8 string, bounded by
-    /// [`MAX_BODY`].
+    /// [`MAX_BODY`] (overflow surfaces as a downcastable
+    /// [`BodyTooLarge`], so the front end can answer 413 instead of a
+    /// generic 400).
     pub fn read_body_string(&mut self, head: &Head) -> Result<String> {
         if let Some(n) = head.content_length()? {
             if !head.chunked() && n > MAX_BODY {
-                bail!("body too large ({n} bytes)");
+                return Err(anyhow::Error::new(BodyTooLarge(n)));
             }
         }
         let mut out: Vec<u8> = Vec::new();
@@ -275,62 +277,198 @@ impl<S: Read> Conn<S> {
         while let Some(chunk) = body.next_chunk()? {
             out.extend_from_slice(&chunk);
             if out.len() > MAX_BODY {
-                bail!("body too large");
+                return Err(anyhow::Error::new(BodyTooLarge(out.len())));
             }
         }
         Ok(String::from_utf8(out)?)
     }
 
-    /// Take up to `n` buffered bytes off the front (filling once from
-    /// the socket if the buffer is empty). Ok(empty) = EOF.
-    fn take_upto(&mut self, n: usize) -> std::io::Result<Vec<u8>> {
-        if self.buf.is_empty() && self.fill()? == 0 {
-            return Ok(Vec::new());
+    /// Advance a body framing one step using only buffered bytes. The
+    /// single state machine both server modes decode bodies with: the
+    /// blocking [`BodyReader`] fills between steps; the reactor steps on
+    /// readable events.
+    pub(crate) fn decode_step(&mut self, framing: &mut Framing) -> Result<BodyStep> {
+        loop {
+            match *framing {
+                Framing::Done => return Ok(BodyStep::Done),
+                Framing::Length { remaining } => {
+                    if self.buf.is_empty() {
+                        return Ok(BodyStep::NeedMore);
+                    }
+                    let piece = self.take_buffered(remaining);
+                    let left = remaining - piece.len();
+                    *framing = if left == 0 {
+                        Framing::Done
+                    } else {
+                        Framing::Length { remaining: left }
+                    };
+                    return Ok(BodyStep::Chunk(piece));
+                }
+                Framing::ChunkSize => match self.try_crlf_line()? {
+                    None => return Ok(BodyStep::NeedMore),
+                    Some(line) => {
+                        // Strip chunk extensions ("SIZE;ext=val").
+                        let size_str = line.split(';').next().unwrap_or("").trim();
+                        let size = usize::from_str_radix(size_str, 16)
+                            .map_err(|_| anyhow!("bad chunk size {size_str:?}"))?;
+                        *framing = if size == 0 {
+                            Framing::Trailer
+                        } else {
+                            Framing::ChunkData { remaining: size }
+                        };
+                    }
+                },
+                Framing::ChunkData { remaining } => {
+                    if self.buf.is_empty() {
+                        return Ok(BodyStep::NeedMore);
+                    }
+                    let piece = self.take_buffered(remaining);
+                    let left = remaining - piece.len();
+                    *framing = if left == 0 {
+                        Framing::ChunkCrlf
+                    } else {
+                        Framing::ChunkData { remaining: left }
+                    };
+                    return Ok(BodyStep::Chunk(piece));
+                }
+                Framing::ChunkCrlf => match self.try_crlf_line()? {
+                    None => return Ok(BodyStep::NeedMore),
+                    Some(l) if l.is_empty() => *framing = Framing::ChunkSize,
+                    Some(_) => bail!("chunk data overran its declared size"),
+                },
+                Framing::Trailer => match self.try_crlf_line()? {
+                    None => return Ok(BodyStep::NeedMore),
+                    Some(l) if l.is_empty() => {
+                        *framing = Framing::Done;
+                        return Ok(BodyStep::Done);
+                    }
+                    Some(_) => {} // discard trailer line, keep scanning
+                },
+            }
         }
-        let take = n.min(self.buf.len()).min(READ_CHUNK);
-        Ok(self.buf.drain(..take).collect())
     }
 
-    /// Read one CRLF-terminated line (for chunk-size lines and
-    /// trailers), bounded to keep a hostile peer from ballooning the
-    /// buffer.
-    fn read_crlf_line(&mut self) -> Result<String> {
-        let mut from = 0usize;
-        loop {
-            if let Some(pos) = self
-                .buf
-                .windows(2)
-                .skip(from.saturating_sub(1))
-                .position(|w| w == b"\r\n")
-            {
-                let pos = pos + from.saturating_sub(1);
-                let line = String::from_utf8(self.buf[..pos].to_vec())?;
-                self.buf.drain(..pos + 2);
-                self.scanned = 0;
-                return Ok(line);
-            }
-            from = self.buf.len();
-            if self.buf.len() > MAX_HEAD {
-                bail!("chunk framing line too long");
-            }
-            if self.fill()? == 0 {
-                bail!("connection closed mid-chunk-framing");
-            }
+    /// Take up to `n` buffered bytes off the front (never more than
+    /// `READ_CHUNK`, the streaming-chunk granularity contract).
+    fn take_buffered(&mut self, n: usize) -> Vec<u8> {
+        let take = n.min(self.buf.len()).min(READ_CHUNK);
+        self.buf.drain(..take).collect()
+    }
+
+    /// Consume one CRLF-terminated line from the buffer if complete
+    /// (`Ok(None)` = need more bytes), bounded to keep a hostile peer
+    /// from ballooning the buffer.
+    fn try_crlf_line(&mut self) -> Result<Option<String>> {
+        if let Some(pos) = self.buf.windows(2).position(|w| w == b"\r\n") {
+            let line = String::from_utf8(self.buf[..pos].to_vec())?;
+            self.buf.drain(..pos + 2);
+            self.scanned = 0;
+            return Ok(Some(line));
         }
+        if self.buf.len() > MAX_HEAD {
+            bail!("chunk framing line too long");
+        }
+        Ok(None)
+    }
+
+    /// One non-blocking-friendly socket read into the buffer: no retry,
+    /// no deadline logic (the reactor's timer wheel owns deadlines).
+    /// `Ok(0)` = EOF; `WouldBlock` surfaces as the error it is.
+    pub(crate) fn fill_once(&mut self) -> std::io::Result<usize> {
+        let mut chunk = [0u8; READ_CHUNK];
+        let n = self.stream.read(&mut chunk)?;
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(n)
+    }
+
+    /// Bytes currently buffered ahead of the parse cursor.
+    pub(crate) fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Arm the request deadline at an absolute instant (the reactor
+    /// hands a half-spent budget to the blocking ingest path this way).
+    pub(crate) fn arm_deadline_at(&mut self, at: Instant) {
+        self.deadline = Some(at);
+    }
+
+    /// Split into the raw stream + unconsumed buffered bytes (reactor ↔
+    /// blocking-worker handoff).
+    pub(crate) fn into_parts(self) -> (S, Vec<u8>) {
+        (self.stream, self.buf)
+    }
+
+    /// Rebuild from [`Conn::into_parts`] output. No budget: deadlines
+    /// are armed explicitly by the owner.
+    pub(crate) fn from_parts(stream: S, buf: Vec<u8>) -> Conn<S> {
+        Conn { stream, buf, scanned: 0, budget: None, deadline: None }
     }
 }
 
-/// Body framing state for [`BodyReader`].
-enum Framing {
+/// Body framing state — shared by the blocking [`BodyReader`] and the
+/// reactor's event-driven decode.
+pub(crate) enum Framing {
     /// Content-Length framed: this many bytes left.
     Length { remaining: usize },
     /// Chunked: expecting a chunk-size line next.
     ChunkSize,
     /// Chunked: inside a chunk's data.
     ChunkData { remaining: usize },
+    /// Chunked: expecting the CRLF that closes a chunk.
+    ChunkCrlf,
+    /// Chunked: in the trailer section after the 0-size chunk.
+    Trailer,
     /// Fully consumed.
     Done,
 }
+
+impl Framing {
+    /// Choose the framing for `head`. **Errors** on unframeable
+    /// messages (unparsable Content-Length, a Transfer-Encoding other
+    /// than chunked): the caller must respond 400 and close — guessing
+    /// a framing would desynchronize the keep-alive stream.
+    pub(crate) fn for_head(head: &Head) -> Result<Framing> {
+        if let Some(te) = head.header("transfer-encoding") {
+            let last = te.to_ascii_lowercase();
+            let last = last.split(',').map(str::trim).next_back();
+            if last == Some("chunked") {
+                return Ok(Framing::ChunkSize);
+            }
+            bail!("unsupported Transfer-Encoding {te:?}");
+        }
+        Ok(match head.content_length()? {
+            Some(n) if n > 0 => Framing::Length { remaining: n },
+            _ => Framing::Done,
+        })
+    }
+
+    pub(crate) fn is_done(&self) -> bool {
+        matches!(self, Framing::Done)
+    }
+}
+
+/// One step of event-driven body decoding (see [`Conn::decode_step`]).
+pub(crate) enum BodyStep {
+    /// A decoded payload piece (≤ `READ_CHUNK` bytes).
+    Chunk(Vec<u8>),
+    /// The buffer ran dry mid-body: wait for the next readable event.
+    NeedMore,
+    /// Body complete (trailers included, for chunked).
+    Done,
+}
+
+/// Marker error for a body over [`MAX_BODY`]: downcast from the
+/// `read_body_string` error to answer **413** rather than 400.
+#[derive(Debug)]
+pub struct BodyTooLarge(pub usize);
+
+impl std::fmt::Display for BodyTooLarge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "body too large ({} bytes)", self.0)
+    }
+}
+
+impl std::error::Error for BodyTooLarge {}
 
 /// Streaming body: yields the payload as byte chunks of at most
 /// `READ_CHUNK` bytes, decoding chunked transfer-encoding on the fly.
@@ -346,56 +484,13 @@ impl<S: Read> BodyReader<'_, S> {
     /// fully consumed (trailers included, for chunked bodies).
     pub fn next_chunk(&mut self) -> Result<Option<Vec<u8>>> {
         loop {
-            match self.framing {
-                Framing::Done => return Ok(None),
-                Framing::Length { remaining } => {
-                    let piece = self.conn.take_upto(remaining)?;
-                    if piece.is_empty() {
+            match self.conn.decode_step(&mut self.framing)? {
+                BodyStep::Chunk(piece) => return Ok(Some(piece)),
+                BodyStep::Done => return Ok(None),
+                BodyStep::NeedMore => {
+                    if self.conn.fill()? == 0 {
                         bail!("connection closed mid-body");
                     }
-                    let left = remaining - piece.len();
-                    self.framing = if left == 0 {
-                        Framing::Done
-                    } else {
-                        Framing::Length { remaining: left }
-                    };
-                    return Ok(Some(piece));
-                }
-                Framing::ChunkSize => {
-                    let line = self.conn.read_crlf_line()?;
-                    // Strip chunk extensions ("SIZE;ext=val").
-                    let size_str = line.split(';').next().unwrap_or("").trim();
-                    let size = usize::from_str_radix(size_str, 16)
-                        .map_err(|_| anyhow!("bad chunk size {size_str:?}"))?;
-                    if size == 0 {
-                        // Trailer section: lines until the empty one.
-                        loop {
-                            if self.conn.read_crlf_line()?.is_empty() {
-                                break;
-                            }
-                        }
-                        self.framing = Framing::Done;
-                        return Ok(None);
-                    }
-                    self.framing = Framing::ChunkData { remaining: size };
-                }
-                Framing::ChunkData { remaining } => {
-                    let piece = self.conn.take_upto(remaining)?;
-                    if piece.is_empty() {
-                        bail!("connection closed mid-chunk");
-                    }
-                    let left = remaining - piece.len();
-                    if left == 0 {
-                        // The CRLF that closes every chunk.
-                        let crlf = self.conn.read_crlf_line()?;
-                        if !crlf.is_empty() {
-                            bail!("chunk data overran its declared size");
-                        }
-                        self.framing = Framing::ChunkSize;
-                    } else {
-                        self.framing = Framing::ChunkData { remaining: left };
-                    }
-                    return Ok(Some(piece));
                 }
             }
         }
@@ -441,56 +536,85 @@ fn find_head_end_from(buf: &[u8], from: usize) -> Option<usize> {
     buf[from..].windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + from)
 }
 
-/// An HTTP response.
+/// An HTTP response. Error responses carry the **v1 error envelope**
+/// `{"error":{"code","message"}}` (see `docs/API.md`): `code` is a
+/// stable machine-readable discriminant, `message` a human diagnostic
+/// that may change between releases.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub status: u16,
     pub reason: &'static str,
     pub body: String,
+    /// Extra headers (`Retry-After`, `Allow`, `Deprecation`, ...)
+    /// appended verbatim by [`Response::serialize_with`].
+    pub headers: Vec<(&'static str, String)>,
 }
 
 impl Response {
     pub fn ok_json(body: crate::util::json::Json) -> Response {
-        Response { status: 200, reason: "OK", body: body.to_string() }
+        Response { status: 200, reason: "OK", body: body.to_string(), headers: Vec::new() }
+    }
+
+    /// An error response in the versioned envelope.
+    pub fn error(status: u16, reason: &'static str, code: &str, message: &str) -> Response {
+        use crate::util::json::Json;
+        let body = Json::obj(vec![(
+            "error",
+            Json::obj(vec![("code", Json::str(code)), ("message", Json::str(message))]),
+        )])
+        .to_string();
+        Response { status, reason, body, headers: Vec::new() }
+    }
+
+    /// Append a header (builder-style).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
     }
 
     pub fn bad_request(msg: &str) -> Response {
-        Response {
-            status: 400,
-            reason: "Bad Request",
-            body: err_body(msg),
-        }
+        Response::error(400, "Bad Request", "invalid_request", msg)
+    }
+
+    /// Malformed resource id in the path (e.g. a non-u64 `{id}`).
+    pub fn invalid_id(msg: &str) -> Response {
+        Response::error(400, "Bad Request", "invalid_id", msg)
     }
 
     pub fn not_found() -> Response {
-        Response { status: 404, reason: "Not Found", body: err_body("not found") }
+        Response::error(404, "Not Found", "not_found", "not found")
+    }
+
+    /// Known path, wrong method; `allow` lists the methods that work.
+    pub fn method_not_allowed(allow: &str) -> Response {
+        Response::error(
+            405,
+            "Method Not Allowed",
+            "method_not_allowed",
+            &format!("allowed: {allow}"),
+        )
+        .with_header("Allow", allow)
     }
 
     /// Per-request wall-clock deadline exceeded (slow-loris guard): the
     /// connection is closed after this is written.
     pub fn request_timeout() -> Response {
-        Response {
-            status: 408,
-            reason: "Request Timeout",
-            body: err_body("request deadline exceeded"),
-        }
+        Response::error(408, "Request Timeout", "request_timeout", "request deadline exceeded")
     }
 
-    /// The paper's 'busy' status: both queues full.
+    /// Materialized body over [`MAX_BODY`].
+    pub fn payload_too_large(msg: &str) -> Response {
+        Response::error(413, "Payload Too Large", "payload_too_large", msg)
+    }
+
+    /// The paper's 'busy' status: both queues full. Callers with queue
+    /// visibility add `Retry-After` via [`Response::with_header`].
     pub fn busy() -> Response {
-        Response {
-            status: 503,
-            reason: "Service Unavailable",
-            body: err_body("busy"),
-        }
+        Response::error(503, "Service Unavailable", "busy", "busy")
     }
 
     pub fn server_error(msg: &str) -> Response {
-        Response {
-            status: 500,
-            reason: "Internal Server Error",
-            body: err_body(msg),
-        }
+        Response::error(500, "Internal Server Error", "internal", msg)
     }
 
     /// Serialize closing the connection (the historic behavior).
@@ -501,23 +625,23 @@ impl Response {
     /// Serialize with an explicit connection disposition: `keep-alive`
     /// lets the client reuse the connection for its next request.
     pub fn serialize_with(&self, keep_alive: bool) -> String {
-        format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{}",
+        let mut out = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             self.reason,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
-            self.body
-        )
+        );
+        for (name, value) in &self.headers {
+            out.push_str(name);
+            out.push_str(": ");
+            out.push_str(value);
+            out.push_str("\r\n");
+        }
+        out.push_str("\r\n");
+        out.push_str(&self.body);
+        out
     }
-}
-
-fn err_body(msg: &str) -> String {
-    crate::util::json::Json::obj(vec![(
-        "error",
-        crate::util::json::Json::str(msg),
-    )])
-    .to_string()
 }
 
 #[cfg(test)]
@@ -774,5 +898,111 @@ mod tests {
     #[test]
     fn request_timeout_is_408() {
         assert_eq!(Response::request_timeout().status, 408);
+    }
+
+    /// Every error constructor emits the v1 envelope:
+    /// `{"error":{"code","message"}}` with the documented code.
+    #[test]
+    fn error_responses_carry_the_versioned_envelope() {
+        use crate::util::json;
+        let cases = [
+            (Response::bad_request("nope"), 400, "invalid_request"),
+            (Response::invalid_id("id must be a u64"), 400, "invalid_id"),
+            (Response::not_found(), 404, "not_found"),
+            (Response::method_not_allowed("GET"), 405, "method_not_allowed"),
+            (Response::request_timeout(), 408, "request_timeout"),
+            (Response::payload_too_large("too big"), 413, "payload_too_large"),
+            (Response::busy(), 503, "busy"),
+            (Response::server_error("boom"), 500, "internal"),
+        ];
+        for (resp, status, code) in cases {
+            assert_eq!(resp.status, status);
+            let v = json::parse(&resp.body).unwrap();
+            let err = v.get("error").expect("envelope object");
+            assert_eq!(err.get("code").and_then(|c| c.as_str()), Some(code));
+            assert!(err.get("message").and_then(|m| m.as_str()).is_some());
+        }
+    }
+
+    #[test]
+    fn extra_headers_serialize_before_the_body() {
+        let s = Response::busy().with_header("Retry-After", "2").serialize();
+        let head_end = s.find("\r\n\r\n").unwrap();
+        assert!(s[..head_end].contains("Retry-After: 2"));
+        assert!(s[..head_end].contains("Connection: close"));
+        let allow = Response::method_not_allowed("GET, POST").serialize();
+        assert!(allow[..allow.find("\r\n\r\n").unwrap()].contains("Allow: GET, POST"));
+    }
+
+    #[test]
+    fn oversize_bodies_downcast_to_body_too_large() {
+        let raw = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1);
+        let mut cur = Cursor::new(raw.into_bytes());
+        let mut conn = Conn::new(&mut cur);
+        let head = conn.read_head().unwrap().unwrap();
+        let err = conn.read_body_string(&head).unwrap_err();
+        assert!(err.downcast_ref::<BodyTooLarge>().is_some());
+    }
+
+    /// The event-driven decode: feeding bytes a few at a time through
+    /// `try_parse_head` + `decode_step` (no socket fills) produces the
+    /// same head and body the blocking path would.
+    #[test]
+    fn incremental_parse_matches_blocking_for_chunked_bodies() {
+        let raw: &[u8] = b"POST /v1/corpus HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+                           4\r\nWiki\r\n7\r\npedia i\r\nB\r\nn chunks.\r\n\r\n0\r\n\r\n";
+        // An empty cursor: the conn never gets bytes from its stream;
+        // we append to its buffer by hand to simulate readiness events.
+        let mut conn = Conn::new(Cursor::new(Vec::<u8>::new()));
+        let mut fed = 0usize;
+        let mut head = None;
+        while head.is_none() {
+            assert!(fed < raw.len(), "head never parsed");
+            let step = (raw.len() - fed).min(7);
+            conn.buf.extend_from_slice(&raw[fed..fed + step]);
+            fed += step;
+            head = conn.try_parse_head().unwrap();
+        }
+        let head = head.unwrap();
+        assert!(head.chunked());
+        let mut framing = Framing::for_head(&head).unwrap();
+        let mut body = Vec::new();
+        loop {
+            match conn.decode_step(&mut framing).unwrap() {
+                BodyStep::Chunk(c) => body.extend_from_slice(&c),
+                BodyStep::Done => break,
+                BodyStep::NeedMore => {
+                    assert!(fed < raw.len(), "body never completed");
+                    let step = (raw.len() - fed).min(7);
+                    conn.buf.extend_from_slice(&raw[fed..fed + step]);
+                    fed += step;
+                }
+            }
+        }
+        assert!(framing.is_done());
+        assert_eq!(body, b"Wikipedia in chunks.\r\n");
+    }
+
+    #[test]
+    fn incremental_parse_handles_content_length_and_pipelining() {
+        let raw: &[u8] = b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nabcGET /b HTTP/1.1\r\n\r\n";
+        let mut conn = Conn::new(Cursor::new(Vec::<u8>::new()));
+        conn.buf.extend_from_slice(raw);
+        let h1 = conn.try_parse_head().unwrap().unwrap();
+        assert_eq!(h1.path, "/a");
+        let mut framing = Framing::for_head(&h1).unwrap();
+        let mut body = Vec::new();
+        loop {
+            match conn.decode_step(&mut framing).unwrap() {
+                BodyStep::Chunk(c) => body.extend_from_slice(&c),
+                BodyStep::Done => break,
+                BodyStep::NeedMore => panic!("fully buffered body asked for more"),
+            }
+        }
+        assert_eq!(body, b"abc");
+        // The pipelined request is intact behind the body.
+        let h2 = conn.try_parse_head().unwrap().unwrap();
+        assert_eq!(h2.path, "/b");
+        assert_eq!(conn.buffered(), 0);
     }
 }

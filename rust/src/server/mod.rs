@@ -1,48 +1,57 @@
-//! HTTP/1.1 front end (std::net + in-repo thread pool), keep-alive and
-//! streaming-ingest aware.
+//! HTTP/1.1 front end for the **v1 API** (std::net only — no
+//! framework): an event-driven readiness-loop server on unix, a
+//! thread-per-connection fallback elsewhere.
 //!
-//! # Endpoints
+//! # Architecture
+//!
+//! On unix, [`Server::start`] runs the [`reactor`]: one thread owns
+//! every connection through an epoll (Linux) or poll(2) readiness
+//! loop — non-blocking sockets, the incremental [`http::Conn`] parser
+//! driven by readable events, write-side buffering for partially
+//! flushed responses, and per-connection deadlines in a hashed timer
+//! wheel ([`timer::TimerWheel`]). Handlers run on a small bounded
+//! worker pool ([`ServerOptions::handler_workers`]); 10k+ idle
+//! keep-alive connections cost file descriptors, not threads. The
+//! pre-existing thread-per-connection loop remains as
+//! [`Server::start_threaded`] (and the non-unix default): identical
+//! observable behavior, one pool thread pinned per live connection.
+//!
+//! Routing is shared by both modes: the typed [`router::Router`] maps
+//! method + path to an endpoint (with `{id}` params parsed exactly
+//! once) and [`dispatch_outcome`] turns the outcome into a response —
+//! including automatic **405** with an `Allow` header and **400**
+//! `invalid_id` for malformed typed params.
+//!
+//! # Endpoints (see `docs/API.md` for the full contract)
 //!
 //! * `POST /v1/embed` — body `{"texts": ["...", ...]}` (or
 //!   `{"text": "..."}`); each text goes through Algorithm 1 admission
-//!   independently; the response carries the route per text. Full-queue
-//!   rejection maps to **503** `{"error":"busy"}` — the paper's 'busy'
-//!   status. Texts are parsed zero-copy and submitted as shared
-//!   `Arc<str>` payloads (no per-hop clone).
+//!   independently; the response carries the route per text.
+//!   Full-queue rejection maps to **503** with error code `busy` and a
+//!   `Retry-After` header derived from queue occupancy.
 //! * `POST /v1/corpus` — **streaming NDJSON ingest**: one
-//!   `{"id": <u64>, "text": "..."}` document per line, with chunked
-//!   `Transfer-Encoding` supported (and encouraged — uploads of any
-//!   size parse at one-chunk residency; the body is never materialized).
-//!   Documents embed through the strictly-capped `WorkClass::Ingest`
-//!   (see `coordinator::queue_manager`: shared-pool accounting + a hard
-//!   per-pool cap means bulk uploads can never oversubscribe the
-//!   calibrated depth or starve Embed/Retrieve; admission BUSY becomes
-//!   socket backpressure) and commit in batches to the live index,
-//!   bumping the corpus version so NPU mirrors invalidate. Response:
-//!   `{"received", "indexed", "failed", "busy_waits", "batches",
-//!   "corpus_version", "peak_chunk_bytes", "error"}`. Requires an
-//!   attached retrieval index.
-//! * `GET /v1/ingest/status` — service-lifetime ingest counters
-//!   (`docs_received/indexed/failed`, `busy_waits`,
-//!   `batches_committed`, `streams_completed`, `active_streams`,
-//!   `peak_chunk_bytes`, `corpus_version`).
-//! * `DELETE /v1/corpus/{id}` — tombstone one document (`{id}` is the
-//!   decimal u64 the document was ingested under). The row stops
-//!   matching immediately (same version seam as adds, so NPU mirrors
-//!   invalidate); with a durable store attached the delete is WAL-logged
-//!   before the index mutation. Response: `{"id", "removed",
-//!   "corpus_version"}` — `removed: 0` means the id was unknown (still
-//!   200; deletes are idempotent).
-//! * `POST /v1/corpus/snapshot` — checkpoint the corpus: serialize the
-//!   index to a durable snapshot and truncate the WAL behind it.
-//!   Response: `{"watermark"}`. Requires an attached durable store.
-//! * `GET /healthz` — liveness.
-//! * `GET /metrics` — metrics registry snapshot (JSON).
-//! * `GET /stats` — queue depths/occupancy + route counters for all
-//!   three work classes (embed / retrieve / ingest, both device legs);
-//!   when a durable store is attached, a nested `"durability"` object
-//!   (`committed_seq`, `wal_segments`, `wal_bytes`, `replayed_records`,
-//!   `snapshots_written`, `compactions`, `wal_append_failures`).
+//!   `{"id": <u64>, "text": "..."}` document per line, chunked
+//!   `Transfer-Encoding` supported (and encouraged). The body is never
+//!   materialized; admission BUSY becomes socket backpressure. In the
+//!   readiness loop this endpoint *detaches*: after the head parses the
+//!   connection leaves the reactor, a pool worker drives the blocking
+//!   ingest pipeline, and the connection re-attaches for keep-alive
+//!   afterwards.
+//! * `GET /v1/ingest/status` — service-lifetime ingest counters.
+//! * `DELETE /v1/corpus/{id}` — tombstone one document; `{id}` is a
+//!   typed decimal-u64 route param (anything else is **400**
+//!   `invalid_id`). Deletes are idempotent.
+//! * `POST /v1/corpus/snapshot` — checkpoint the corpus (durable store
+//!   required).
+//! * `GET /v1/healthz` — liveness. `GET /v1/metrics` — metrics
+//!   registry snapshot. `GET /v1/stats` — queue depths/occupancy +
+//!   route counters (+ a `"durability"` object when a store is
+//!   attached).
+//! * `/healthz`, `/metrics`, `/stats` — **deprecated aliases** of the
+//!   `/v1/` paths: same bodies, plus a `Deprecation: true` header.
+//!
+//! Every error response carries the versioned envelope
+//! `{"error":{"code","message"}}` (see [`http::Response::error`]).
 //!
 //! # Connection handling
 //!
@@ -52,21 +61,28 @@
 //! body errors mid-stream closes the connection (the only safe framing
 //! recovery).
 //!
-//! **Slow-loris guard**: the per-read socket timeout only bounds each
-//! read — a client trickling one byte per few seconds would hold a pool
-//! thread forever. Every request therefore also gets a wall-clock
-//! budget ([`DEFAULT_REQUEST_DEADLINE`], tunable via
-//! [`Server::start_with_deadline`]), armed when its first byte arrives
-//! and spanning head + body; exceeding it answers **408** and closes
-//! the connection. Idle keep-alive waits don't count against it.
+//! Two independent clocks govern each connection:
+//!
+//! * **Request deadline** ([`DEFAULT_REQUEST_DEADLINE`]) — the
+//!   slow-loris guard: armed when a request's first byte arrives,
+//!   spanning head + body; exceeding it answers **408** and closes.
+//! * **Idle timeout** ([`DEFAULT_IDLE_TIMEOUT`]) — how long a
+//!   keep-alive connection may sit between requests before the server
+//!   silently closes it. Idle waits never count against a request
+//!   deadline.
 
 pub mod http;
+pub mod router;
+pub mod timer;
+
+#[cfg(unix)]
+mod reactor;
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -75,6 +91,7 @@ use crate::ingest::{self, IngestOptions};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use http::{Conn, Head, Response};
+use router::{Endpoint, RouteMatch, RouteOutcome, Router};
 
 /// Bounded keep-alive: one connection serves at most this many requests
 /// before the server closes it (resource rotation under slow clients).
@@ -85,18 +102,60 @@ pub const MAX_REQUESTS_PER_CONN: usize = 128;
 /// only a byte-trickling client spends half a minute on one request.
 pub const DEFAULT_REQUEST_DEADLINE: Duration = Duration::from_secs(30);
 
+/// Default idle keep-alive timeout: a connection with no request in
+/// flight is closed after this long without a byte.
+pub const DEFAULT_IDLE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default handler worker pool size for the readiness-loop server.
+/// Handlers are short (admission waits dominate); connection count is
+/// decoupled from this entirely.
+pub const DEFAULT_HANDLER_WORKERS: usize = 8;
+
+/// Server tuning knobs (see module docs for the two clocks).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Embed SLO handed to handlers (ticket waits are bounded by a
+    /// multiple of it).
+    pub slo: Duration,
+    /// Per-request wall-clock budget (slow-loris guard).
+    pub request_deadline: Duration,
+    /// Keep-alive idle timeout.
+    pub idle_timeout: Duration,
+    /// Readiness-loop handler pool size (ignored by the threaded mode,
+    /// which spends a pool thread per connection instead).
+    pub handler_workers: usize,
+    /// Force the thread-per-connection mode even where the readiness
+    /// loop is available (comparison benches, soak baselines).
+    pub force_threaded: bool,
+}
+
+impl ServerOptions {
+    pub fn new(slo: Duration) -> ServerOptions {
+        ServerOptions {
+            slo,
+            request_deadline: DEFAULT_REQUEST_DEADLINE,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            handler_workers: DEFAULT_HANDLER_WORKERS,
+            force_threaded: false,
+        }
+    }
+}
+
 /// Running HTTP server handle.
 pub struct Server {
     addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     join: Option<std::thread::JoinHandle<()>>,
+    /// Reactor wake channel: a byte here interrupts the poll wait so
+    /// the stop flag is seen immediately (None in threaded mode).
+    wake: Option<Arc<TcpStream>>,
 }
 
 impl Server {
     /// Bind `listen` and serve `svc` until [`Server::stop`] (or drop),
-    /// with the default per-request deadline.
+    /// with default options — the readiness loop on unix.
     pub fn start(listen: &str, svc: Arc<WindVE>, slo: Duration) -> Result<Server> {
-        Server::start_with_deadline(listen, svc, slo, DEFAULT_REQUEST_DEADLINE)
+        Server::start_with_options(listen, svc, ServerOptions::new(slo))
     }
 
     /// [`Server::start`] with an explicit per-request wall-clock budget
@@ -108,10 +167,39 @@ impl Server {
         slo: Duration,
         request_deadline: Duration,
     ) -> Result<Server> {
+        let opts = ServerOptions { request_deadline, ..ServerOptions::new(slo) };
+        Server::start_with_options(listen, svc, opts)
+    }
+
+    /// The thread-per-connection mode, explicitly (soak baselines and
+    /// concurrency benches compare against this).
+    pub fn start_threaded(listen: &str, svc: Arc<WindVE>, slo: Duration) -> Result<Server> {
+        let opts = ServerOptions { force_threaded: true, ..ServerOptions::new(slo) };
+        Server::start_with_options(listen, svc, opts)
+    }
+
+    /// Bind `listen` and serve with explicit [`ServerOptions`].
+    pub fn start_with_options(
+        listen: &str,
+        svc: Arc<WindVE>,
+        opts: ServerOptions,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
         let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+
+        #[cfg(unix)]
+        if !opts.force_threaded {
+            let handle = reactor::spawn(listener, svc, opts, Arc::clone(&stop))?;
+            return Ok(Server {
+                addr,
+                stop,
+                join: Some(handle.join),
+                wake: Some(handle.wake_tx),
+            });
+        }
+
+        listener.set_nonblocking(true)?;
         let stop2 = Arc::clone(&stop);
         let join = std::thread::Builder::new()
             .name("windve-http".into())
@@ -125,7 +213,7 @@ impl Server {
                         Ok((stream, _)) => {
                             let svc = Arc::clone(&svc);
                             pool.execute(move || {
-                                let _ = handle_connection(stream, &svc, slo, request_deadline);
+                                let _ = handle_connection(stream, &svc, &opts);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -138,7 +226,7 @@ impl Server {
                     }
                 }
             })?;
-        Ok(Server { addr, stop, join: Some(join) })
+        Ok(Server { addr, stop, join: Some(join), wake: None })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -146,7 +234,16 @@ impl Server {
     }
 
     pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Release);
+        if let Some(w) = &self.wake {
+            // One byte interrupts the reactor's poll wait.
+            let mut s: &TcpStream = w;
+            let _ = s.write(&[1u8]);
+        }
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -155,35 +252,32 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.shutdown();
     }
 }
 
-/// Serve one connection: keep-alive loop with the per-connection
-/// request bound. Returns when the peer closes, a framing error forces
-/// a close, or the bound is reached.
-fn handle_connection(
-    stream: TcpStream,
-    svc: &WindVE,
-    slo: Duration,
-    request_deadline: Duration,
-) -> Result<()> {
+/// Serve one connection (threaded mode): keep-alive loop with the
+/// per-connection request bound. Returns when the peer closes, a
+/// framing error forces a close, the idle timeout lapses, or the bound
+/// is reached.
+fn handle_connection(stream: TcpStream, svc: &WindVE, opts: &ServerOptions) -> Result<()> {
     // Per-read timeout ≤ the request budget, so a stalled read wakes up
-    // in time for the wall-clock deadline check in `Conn::fill`.
-    stream.set_read_timeout(Some(Duration::from_secs(10).min(request_deadline)))?;
+    // in time for the wall-clock deadline check in `Conn::fill` — and
+    // in time for the idle-timeout check below.
+    stream.set_read_timeout(Some(Duration::from_secs(10).min(opts.request_deadline)))?;
     stream.set_nodelay(true)?;
-    let mut conn = Conn::with_budget(stream, request_deadline);
-    for served in 0..MAX_REQUESTS_PER_CONN {
+    let mut conn = Conn::with_budget(stream, opts.request_deadline);
+    let mut served = 0;
+    let mut idle_since = Instant::now();
+    while served < MAX_REQUESTS_PER_CONN {
         let head = match conn.read_head() {
             Ok(Some(h)) => h,
             Ok(None) => return Ok(()), // clean keep-alive close
             Err(e) => {
                 // A request that started but blew its wall-clock budget
                 // (slow-loris): 408 and close. An idle keep-alive peer
-                // that never sent a byte times out silently. Anything
+                // whose read merely timed out gets retried until the
+                // idle timeout lapses, then a silent close. Anything
                 // else is a malformed head worth a 400.
                 if conn.deadline_exceeded() {
                     let resp = Response::request_timeout();
@@ -196,6 +290,9 @@ fn handle_connection(
                         std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                     )
                 });
+                if timed_out && idle_since.elapsed() < opts.idle_timeout {
+                    continue; // still within the idle window: keep waiting
+                }
                 if !timed_out {
                     let resp = Response::bad_request(&format!("{e:#}"));
                     let _ = conn.stream_mut().write_all(resp.serialize_with(false).as_bytes());
@@ -203,11 +300,13 @@ fn handle_connection(
                 return Ok(());
             }
         };
-        let keep = head.wants_keep_alive() && served + 1 < MAX_REQUESTS_PER_CONN;
+        served += 1;
+        let keep = head.wants_keep_alive() && served < MAX_REQUESTS_PER_CONN;
+        let outcome = Router::route(&head.method, &head.path);
 
         // The streaming endpoint drives the body itself — never
         // materialized, so it bypasses the read_body_string path.
-        if head.method == "POST" && head.path == "/v1/corpus" {
+        if matches!(&outcome, RouteOutcome::Match(m) if m.endpoint == Endpoint::CorpusIngest) {
             let (resp, body_ok) = corpus_endpoint(&mut conn, &head, svc);
             // A deadline trip mid-stream surfaced as an ingest error;
             // report it as the timeout it is.
@@ -219,6 +318,7 @@ fn handle_connection(
                 return Ok(());
             }
             conn.finish_request();
+            idle_since = Instant::now();
             continue;
         }
 
@@ -228,6 +328,8 @@ fn handle_connection(
                 // Framing is unknown past an aborted body: must close.
                 let resp = if conn.deadline_exceeded() {
                     Response::request_timeout()
+                } else if e.downcast_ref::<http::BodyTooLarge>().is_some() {
+                    Response::payload_too_large(&format!("{e:#}"))
                 } else {
                     Response::bad_request(&format!("{e:#}"))
                 };
@@ -235,110 +337,157 @@ fn handle_connection(
                 return Ok(());
             }
         };
-        let resp = route(&head, &body, svc, slo);
+        let resp = dispatch_outcome(&outcome, &body, svc, opts.slo);
         conn.stream_mut().write_all(resp.serialize_with(keep).as_bytes())?;
         if !keep {
             return Ok(());
         }
         conn.finish_request();
+        idle_since = Instant::now();
     }
     Ok(())
 }
 
-fn route(head: &Head, body: &str, svc: &WindVE, slo: Duration) -> Response {
-    match (head.method.as_str(), head.path.as_str()) {
-        ("GET", "/healthz") => Response::ok_json(Json::obj(vec![("ok", Json::Bool(true))])),
-        ("GET", "/metrics") => Response::ok_json(svc.metrics.snapshot()),
-        ("GET", "/v1/ingest/status") => {
+/// Turn a routing outcome + materialized body into a response. Shared
+/// by both server modes (the reactor calls this from pool workers).
+pub(crate) fn dispatch_outcome(
+    outcome: &RouteOutcome,
+    body: &str,
+    svc: &WindVE,
+    slo: Duration,
+) -> Response {
+    match outcome {
+        RouteOutcome::Match(m) => {
+            let resp = endpoint_response(m, body, svc, slo);
+            if m.deprecated {
+                resp.with_header("Deprecation", "true")
+            } else {
+                resp
+            }
+        }
+        RouteOutcome::BadParam { message } => Response::invalid_id(message),
+        RouteOutcome::MethodNotAllowed { allow } => Response::method_not_allowed(allow),
+        RouteOutcome::NotFound => Response::not_found(),
+    }
+}
+
+fn endpoint_response(m: &RouteMatch, body: &str, svc: &WindVE, slo: Duration) -> Response {
+    match m.endpoint {
+        Endpoint::Healthz => Response::ok_json(Json::obj(vec![("ok", Json::Bool(true))])),
+        Endpoint::Metrics => Response::ok_json(svc.metrics.snapshot()),
+        Endpoint::IngestStatus => {
             let version = svc.retrieval().map(|e| e.version());
             Response::ok_json(svc.ingest_stats().to_json(version))
         }
-        ("GET", "/stats") => {
-            let qm = svc.queue_manager();
-            let stats = qm.stats();
-            // Read-side lock recoveries on the attached retrieval index
-            // (0 when no index is attached) — the poisoning satellite's
-            // operator signal.
-            let poisoned = svc.retrieval().map_or(0, |e| e.poisoned_recoveries());
-            let mut fields = vec![
-                ("npu_depth", Json::num(qm.npu_depth() as f64)),
-                ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
-                ("npu_occupancy", Json::num(qm.npu_occupancy() as f64)),
-                ("cpu_occupancy", Json::num(qm.cpu_occupancy() as f64)),
-                ("embed_cpu_occupancy", Json::num(qm.embed_cpu_occupancy() as f64)),
-                ("retrieve_cpu_occupancy", Json::num(qm.retrieve_cpu_occupancy() as f64)),
-                ("ingest_cpu_occupancy", Json::num(qm.ingest_cpu_occupancy() as f64)),
-                ("retrieve_cap", Json::num(qm.retrieve_cap() as f64)),
-                ("ingest_cap", Json::num(qm.ingest_cap() as f64)),
-                ("embed_npu_occupancy", Json::num(qm.embed_npu_occupancy() as f64)),
-                ("retrieve_npu_occupancy", Json::num(qm.retrieve_npu_occupancy() as f64)),
-                ("ingest_npu_occupancy", Json::num(qm.ingest_npu_occupancy() as f64)),
-                ("npu_retrieve_cap", Json::num(qm.npu_retrieve_cap() as f64)),
-                ("npu_ingest_cap", Json::num(qm.npu_ingest_cap() as f64)),
-                ("hetero", Json::Bool(qm.hetero())),
-                ("routed_npu", Json::num(stats.routed_npu as f64)),
-                ("routed_cpu", Json::num(stats.routed_cpu as f64)),
-                ("rejected", Json::num(stats.rejected as f64)),
-                ("routed_retrieve", Json::num(stats.routed_retrieve as f64)),
-                ("rejected_retrieve", Json::num(stats.rejected_retrieve as f64)),
-                ("routed_retrieve_npu", Json::num(stats.routed_retrieve_npu as f64)),
-                ("rejected_retrieve_npu", Json::num(stats.rejected_retrieve_npu as f64)),
-                ("routed_ingest", Json::num(stats.routed_ingest as f64)),
-                ("rejected_ingest", Json::num(stats.rejected_ingest as f64)),
-                ("routed_ingest_npu", Json::num(stats.routed_ingest_npu as f64)),
-                ("rejected_ingest_npu", Json::num(stats.rejected_ingest_npu as f64)),
-                ("retrieval_poisoned_recoveries", Json::num(poisoned as f64)),
-                ("bad_releases", Json::num(stats.bad_releases as f64)),
-            ];
-            if let Some(store) = svc.durability() {
-                let d = store.stats();
-                fields.push((
-                    "durability",
-                    Json::obj(vec![
-                        ("committed_seq", Json::num(d.committed_seq as f64)),
-                        ("wal_segments", Json::num(d.wal_segments as f64)),
-                        ("wal_bytes", Json::num(d.wal_bytes as f64)),
-                        ("replayed_records", Json::num(d.replayed_records as f64)),
-                        ("snapshots_written", Json::num(d.snapshots_written as f64)),
-                        ("compactions", Json::num(d.compactions as f64)),
-                        ("wal_append_failures", Json::num(d.wal_append_failures as f64)),
-                    ]),
-                ));
-            }
-            Response::ok_json(Json::obj(fields))
-        }
-        ("POST", "/v1/embed") => embed_endpoint(body, svc, slo),
-        ("POST", "/v1/corpus/snapshot") => match svc.snapshot_corpus() {
+        Endpoint::Stats => stats_response(svc),
+        Endpoint::Embed => embed_endpoint(body, svc, slo),
+        Endpoint::CorpusSnapshot => match svc.snapshot_corpus() {
             Ok(watermark) => Response::ok_json(Json::obj(vec![(
                 "watermark",
                 Json::num(watermark as f64),
             )])),
             Err(e) => Response::server_error(&e.to_string()),
         },
-        ("DELETE", p) if p.starts_with("/v1/corpus/") => {
-            match p["/v1/corpus/".len()..].parse::<u64>() {
-                Ok(id) => match svc.delete_doc(id) {
-                    Ok(removed) => Response::ok_json(Json::obj(vec![
-                        ("id", Json::num(id as f64)),
-                        ("removed", Json::num(removed as f64)),
-                        (
-                            "corpus_version",
-                            svc.retrieval().map_or(Json::Null, |e| Json::num(e.version() as f64)),
-                        ),
-                    ])),
-                    Err(e) => Response::server_error(&e.to_string()),
-                },
-                Err(_) => Response::bad_request("document id must be a decimal u64"),
+        Endpoint::CorpusDelete => {
+            let Some(id) = m.id else {
+                return Response::server_error("route param missing");
+            };
+            match svc.delete_doc(id) {
+                Ok(removed) => Response::ok_json(Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("removed", Json::num(removed as f64)),
+                    (
+                        "corpus_version",
+                        svc.retrieval().map_or(Json::Null, |e| Json::num(e.version() as f64)),
+                    ),
+                ])),
+                Err(e) => Response::server_error(&e.to_string()),
             }
         }
-        _ => Response::not_found(),
+        // Streaming ingest never reaches the buffered dispatcher: both
+        // server modes special-case it off the route outcome.
+        Endpoint::CorpusIngest => {
+            Response::server_error("streaming endpoint dispatched as buffered")
+        }
     }
+}
+
+fn stats_response(svc: &WindVE) -> Response {
+    let qm = svc.queue_manager();
+    let stats = qm.stats();
+    // Read-side lock recoveries on the attached retrieval index
+    // (0 when no index is attached) — the poisoning satellite's
+    // operator signal.
+    let poisoned = svc.retrieval().map_or(0, |e| e.poisoned_recoveries());
+    let mut fields = vec![
+        ("npu_depth", Json::num(qm.npu_depth() as f64)),
+        ("cpu_depth", Json::num(qm.cpu_depth() as f64)),
+        ("npu_occupancy", Json::num(qm.npu_occupancy() as f64)),
+        ("cpu_occupancy", Json::num(qm.cpu_occupancy() as f64)),
+        ("embed_cpu_occupancy", Json::num(qm.embed_cpu_occupancy() as f64)),
+        ("retrieve_cpu_occupancy", Json::num(qm.retrieve_cpu_occupancy() as f64)),
+        ("ingest_cpu_occupancy", Json::num(qm.ingest_cpu_occupancy() as f64)),
+        ("retrieve_cap", Json::num(qm.retrieve_cap() as f64)),
+        ("ingest_cap", Json::num(qm.ingest_cap() as f64)),
+        ("embed_npu_occupancy", Json::num(qm.embed_npu_occupancy() as f64)),
+        ("retrieve_npu_occupancy", Json::num(qm.retrieve_npu_occupancy() as f64)),
+        ("ingest_npu_occupancy", Json::num(qm.ingest_npu_occupancy() as f64)),
+        ("npu_retrieve_cap", Json::num(qm.npu_retrieve_cap() as f64)),
+        ("npu_ingest_cap", Json::num(qm.npu_ingest_cap() as f64)),
+        ("hetero", Json::Bool(qm.hetero())),
+        ("routed_npu", Json::num(stats.routed_npu as f64)),
+        ("routed_cpu", Json::num(stats.routed_cpu as f64)),
+        ("rejected", Json::num(stats.rejected as f64)),
+        ("routed_retrieve", Json::num(stats.routed_retrieve as f64)),
+        ("rejected_retrieve", Json::num(stats.rejected_retrieve as f64)),
+        ("routed_retrieve_npu", Json::num(stats.routed_retrieve_npu as f64)),
+        ("rejected_retrieve_npu", Json::num(stats.rejected_retrieve_npu as f64)),
+        ("routed_ingest", Json::num(stats.routed_ingest as f64)),
+        ("rejected_ingest", Json::num(stats.rejected_ingest as f64)),
+        ("routed_ingest_npu", Json::num(stats.routed_ingest_npu as f64)),
+        ("rejected_ingest_npu", Json::num(stats.rejected_ingest_npu as f64)),
+        ("retrieval_poisoned_recoveries", Json::num(poisoned as f64)),
+        ("bad_releases", Json::num(stats.bad_releases as f64)),
+    ];
+    if let Some(store) = svc.durability() {
+        let d = store.stats();
+        fields.push((
+            "durability",
+            Json::obj(vec![
+                ("committed_seq", Json::num(d.committed_seq as f64)),
+                ("wal_segments", Json::num(d.wal_segments as f64)),
+                ("wal_bytes", Json::num(d.wal_bytes as f64)),
+                ("replayed_records", Json::num(d.replayed_records as f64)),
+                ("snapshots_written", Json::num(d.snapshots_written as f64)),
+                ("compactions", Json::num(d.compactions as f64)),
+                ("wal_append_failures", Json::num(d.wal_append_failures as f64)),
+            ]),
+        ));
+    }
+    Response::ok_json(Json::obj(fields))
+}
+
+/// `Retry-After` seconds for a 503: scale with combined queue occupancy
+/// — an almost-drained queue suggests retrying in ~1 s, a saturated one
+/// backs clients off harder.
+fn retry_after_secs(svc: &WindVE) -> u64 {
+    let qm = svc.queue_manager();
+    let depth = qm.npu_depth() + qm.cpu_depth();
+    if depth == 0 {
+        return 1;
+    }
+    let occ = qm.npu_occupancy() + qm.cpu_occupancy();
+    (1 + 4 * occ / depth).clamp(1, 8) as u64
 }
 
 /// Streaming corpus ingest. Returns the response plus whether the body
 /// was consumed to a clean framing boundary (a mid-body failure means
 /// the connection cannot be reused).
-fn corpus_endpoint(conn: &mut Conn<TcpStream>, head: &Head, svc: &WindVE) -> (Response, bool) {
+pub(crate) fn corpus_endpoint(
+    conn: &mut Conn<TcpStream>,
+    head: &Head,
+    svc: &WindVE,
+) -> (Response, bool) {
     let body = match conn.body(head) {
         Ok(b) => b,
         // Unframeable message: nothing was consumed — 400 and close.
@@ -398,7 +547,8 @@ fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration) -> Response {
                 for tk in tickets {
                     let _ = tk.wait(slo.mul_f64(4.0));
                 }
-                return Response::busy();
+                return Response::busy()
+                    .with_header("Retry-After", retry_after_secs(svc).to_string());
             }
             Err(e) => return Response::server_error(&e.to_string()),
         }

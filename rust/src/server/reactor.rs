@@ -1,0 +1,884 @@
+//! The event-driven readiness loop (unix only): one reactor thread owns
+//! every connection; a bounded worker pool runs handlers only.
+//!
+//! # Shape
+//!
+//! ```text
+//!            epoll / poll(2)                 ThreadPool (handlers)
+//!   ┌─────────────────────────────┐       ┌──────────────────────┐
+//!   │ listener ── accept          │  job  │ dispatch_outcome(..) │
+//!   │ conns ──── read → parse ────┼──────▶│ corpus_endpoint(..)  │
+//!   │ timers ─── 408 / idle close │◀──────┤ (blocking, detached) │
+//!   │ wake ───── worker messages  │  Msg  └──────────────────────┘
+//!   └─────────────────────────────┘
+//! ```
+//!
+//! Sockets are non-blocking; each connection's [`Conn`] incremental
+//! state machine (`try_parse_head` + `decode_step`) is advanced on
+//! readable events, so an open keep-alive connection costs one fd and
+//! ~one buffer — never a thread. When a request's body completes, the
+//! handler runs on the pool and posts its [`Response`] back over an
+//! mpsc channel (plus one byte down the wake socketpair to interrupt
+//! the poll); the reactor serializes and flushes it, buffering
+//! partially-written responses behind writable-interest.
+//!
+//! **Timers** live in the [`TimerWheel`]: an idle timeout for
+//! connections with no request in flight (silent close) and a
+//! per-request wall-clock deadline armed at a request's first byte and
+//! cleared when its body finishes decoding (408 + close — the
+//! slow-loris guard, same semantics as the threaded fallback).
+//! Cancellation is generation-based and lazy.
+//!
+//! **Streaming ingest detaches.** `POST /v1/corpus` must feed chunks
+//! into the admission-controlled ingest pipeline with backpressure,
+//! which is inherently blocking. After its head parses, the connection
+//! is deregistered and handed (stream + buffered bytes, via
+//! `Conn::into_parts`) to a pool worker that flips the socket back to
+//! blocking, drives the proven blocking `corpus_endpoint` path, writes
+//! the response itself, and re-attaches the connection for keep-alive
+//! via [`Msg::Reattach`]. Everything else stays on the reactor.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::service::WindVE;
+use crate::util::threadpool::ThreadPool;
+
+use super::http::{self, BodyStep, Conn, Framing, Head, Response};
+use super::router::{Endpoint, RouteOutcome, Router};
+use super::timer::{Fired, TimerWheel};
+use super::{ServerOptions, MAX_REQUESTS_PER_CONN};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Interest bits for the poller facade.
+const READ: u8 = 1;
+const WRITE: u8 = 2;
+
+/// Cap on one poll wait, so the stop flag is observed even without a
+/// wake byte and beyond-horizon timers keep cascading.
+const MAX_POLL_WAIT: Duration = Duration::from_millis(500);
+
+/// One readiness event, normalized across epoll and poll(2).
+#[derive(Clone, Copy)]
+struct PollEvent {
+    token: u64,
+    readable: bool,
+    writable: bool,
+    hangup: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Poller facade: epoll on Linux, poll(2) elsewhere.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod poller {
+    use super::PollEvent;
+    use crate::util::sys;
+    use std::io;
+
+    pub(super) struct Poller {
+        ep: sys::Epoll,
+        buf: Vec<sys::EpollEvent>,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            Ok(Poller {
+                ep: sys::Epoll::new()?,
+                buf: vec![sys::EpollEvent { events: 0, data: 0 }; 256],
+            })
+        }
+
+        fn mask(interest: u8) -> u32 {
+            let mut m = 0;
+            if interest & super::READ != 0 {
+                m |= sys::EPOLLIN;
+            }
+            if interest & super::WRITE != 0 {
+                m |= sys::EPOLLOUT;
+            }
+            m
+        }
+
+        pub(super) fn register(&mut self, fd: i32, token: u64, interest: u8) -> io::Result<()> {
+            self.ep.ctl(sys::EPOLL_CTL_ADD, fd, Self::mask(interest), token)
+        }
+
+        pub(super) fn reregister(&mut self, fd: i32, token: u64, interest: u8) -> io::Result<()> {
+            self.ep.ctl(sys::EPOLL_CTL_MOD, fd, Self::mask(interest), token)
+        }
+
+        pub(super) fn deregister(&mut self, fd: i32) {
+            let _ = self.ep.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0);
+        }
+
+        pub(super) fn wait(&mut self, timeout_ms: i32, out: &mut Vec<PollEvent>) -> io::Result<()> {
+            out.clear();
+            let n = self.ep.wait(&mut self.buf, timeout_ms)?;
+            for ev in &self.buf[..n] {
+                // Braced copies: EpollEvent is packed on x86.
+                let events = { ev.events };
+                out.push(PollEvent {
+                    token: { ev.data },
+                    readable: events & sys::EPOLLIN != 0,
+                    writable: events & sys::EPOLLOUT != 0,
+                    hangup: events & (sys::EPOLLHUP | sys::EPOLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod poller {
+    use super::PollEvent;
+    use crate::util::sys;
+    use std::collections::HashMap;
+    use std::io;
+
+    /// Portable fallback: the fd set is rebuilt for every `poll(2)`
+    /// call. O(conns) per wait, which is fine at fallback scale.
+    pub(super) struct Poller {
+        fds: HashMap<u64, (i32, u8)>,
+    }
+
+    impl Poller {
+        pub(super) fn new() -> io::Result<Poller> {
+            Ok(Poller { fds: HashMap::new() })
+        }
+
+        pub(super) fn register(&mut self, fd: i32, token: u64, interest: u8) -> io::Result<()> {
+            self.fds.insert(token, (fd, interest));
+            Ok(())
+        }
+
+        pub(super) fn reregister(&mut self, fd: i32, token: u64, interest: u8) -> io::Result<()> {
+            self.fds.insert(token, (fd, interest));
+            Ok(())
+        }
+
+        pub(super) fn deregister(&mut self, fd: i32) {
+            self.fds.retain(|_, (f, _)| *f != fd);
+        }
+
+        pub(super) fn wait(&mut self, timeout_ms: i32, out: &mut Vec<PollEvent>) -> io::Result<()> {
+            out.clear();
+            let mut tokens = Vec::with_capacity(self.fds.len());
+            let mut pfds = Vec::with_capacity(self.fds.len());
+            for (&token, &(fd, interest)) in &self.fds {
+                let mut events = 0i16;
+                if interest & super::READ != 0 {
+                    events |= sys::POLLIN;
+                }
+                if interest & super::WRITE != 0 {
+                    events |= sys::POLLOUT;
+                }
+                tokens.push(token);
+                pfds.push(sys::PollFd { fd, events, revents: 0 });
+            }
+            sys::poll_fds(&mut pfds, timeout_ms)?;
+            for (i, pfd) in pfds.iter().enumerate() {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                out.push(PollEvent {
+                    token: tokens[i],
+                    readable: pfd.revents & sys::POLLIN != 0,
+                    writable: pfd.revents & sys::POLLOUT != 0,
+                    hangup: pfd.revents & (sys::POLLHUP | sys::POLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection state.
+// ---------------------------------------------------------------------------
+
+/// Where a connection is in its request/response cycle.
+enum Phase {
+    /// Parsing (or waiting for) a request head.
+    Head,
+    /// Decoding the request body.
+    Body { head: Head, outcome: RouteOutcome, framing: Framing, collected: Vec<u8> },
+    /// Handler running on the pool; no socket interest.
+    Await,
+    /// Serialized response buffered in `out`, flushing.
+    Flush,
+}
+
+struct ConnState {
+    conn: Conn<TcpStream>,
+    fd: i32,
+    phase: Phase,
+    /// Requests already completed on this connection.
+    served: usize,
+    /// Pending response bytes (write-side buffering) and flush cursor.
+    out: Vec<u8>,
+    out_pos: usize,
+    close_after_flush: bool,
+    /// Timer generation: bumping it lazily cancels any armed timer.
+    gen: u64,
+    /// Current poller interest (dedupes reregister syscalls).
+    interest: u8,
+    /// Armed request deadline (None while idle). Doubles as the timer
+    /// kind discriminant when an entry fires: Some → 408, None → idle
+    /// close.
+    deadline_at: Option<Instant>,
+}
+
+/// Worker → reactor messages (paired with a wake byte).
+enum Msg {
+    /// A handler finished: serialize + flush on the owning connection.
+    Response { token: u64, resp: Response, keep: bool },
+    /// A detached streaming-ingest connection coming back for
+    /// keep-alive.
+    Reattach { token: u64, conn: Conn<TcpStream>, served: usize, gen: u64 },
+}
+
+/// Handle returned by [`spawn`]: join on stop, wake to interrupt the
+/// poll wait.
+pub(super) struct ReactorHandle {
+    pub(super) join: JoinHandle<()>,
+    pub(super) wake_tx: Arc<TcpStream>,
+}
+
+/// Write one byte down the wake channel (best-effort: a full buffer
+/// means wakes are already pending).
+pub(super) fn wake(tx: &TcpStream) {
+    let mut w = tx;
+    let _ = w.write(&[1u8]);
+}
+
+/// A non-blocking loopback socketpair standing in for a pipe (no
+/// `pipe2` FFI needed): `(rx, tx)`.
+fn wake_pair() -> Result<(TcpStream, TcpStream)> {
+    let l = TcpListener::bind("127.0.0.1:0").context("wake channel bind")?;
+    let tx = TcpStream::connect(l.local_addr()?).context("wake channel connect")?;
+    let (rx, _) = l.accept().context("wake channel accept")?;
+    rx.set_nonblocking(true)?;
+    tx.set_nonblocking(true)?;
+    let _ = tx.set_nodelay(true);
+    Ok((rx, tx))
+}
+
+fn drain_wake(rx: &TcpStream) {
+    let mut buf = [0u8; 256];
+    let mut r = rx;
+    loop {
+        match r.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => continue,
+            Err(_) => return, // WouldBlock: drained
+        }
+    }
+}
+
+/// Bind the reactor onto `listener` and run it on its own thread.
+pub(super) fn spawn(
+    listener: TcpListener,
+    svc: Arc<WindVE>,
+    opts: ServerOptions,
+    stop: Arc<AtomicBool>,
+) -> Result<ReactorHandle> {
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let (wake_rx, wake_tx) = wake_pair()?;
+    let wake_tx = Arc::new(wake_tx);
+    let mut poller = poller::Poller::new().context("create poller")?;
+    poller
+        .register(listener.as_raw_fd(), TOKEN_LISTENER, READ)
+        .context("register listener")?;
+    poller
+        .register(wake_rx.as_raw_fd(), TOKEN_WAKE, READ)
+        .context("register wake channel")?;
+    let (msg_tx, msg_rx) = mpsc::channel();
+    let wake_for_loop = Arc::clone(&wake_tx);
+    let join = std::thread::Builder::new()
+        .name("windve-reactor".into())
+        .spawn(move || {
+            let mut r = Reactor {
+                poller,
+                conns: HashMap::new(),
+                wheel: TimerWheel::new(Instant::now()),
+                svc,
+                slo: opts.slo,
+                request_deadline: opts.request_deadline,
+                idle_timeout: opts.idle_timeout,
+                pool: ThreadPool::new(opts.handler_workers.max(1)),
+                msg_tx,
+                msg_rx,
+                wake_tx: wake_for_loop,
+                next_token: FIRST_CONN_TOKEN,
+            };
+            r.run(&listener, &wake_rx, &stop);
+        })
+        .context("spawn reactor thread")?;
+    Ok(ReactorHandle { join, wake_tx })
+}
+
+struct Reactor {
+    poller: poller::Poller,
+    conns: HashMap<u64, ConnState>,
+    wheel: TimerWheel,
+    svc: Arc<WindVE>,
+    slo: Duration,
+    request_deadline: Duration,
+    idle_timeout: Duration,
+    pool: ThreadPool,
+    msg_tx: mpsc::Sender<Msg>,
+    msg_rx: mpsc::Receiver<Msg>,
+    wake_tx: Arc<TcpStream>,
+    next_token: u64,
+}
+
+impl Reactor {
+    fn run(&mut self, listener: &TcpListener, wake_rx: &TcpStream, stop: &AtomicBool) {
+        let mut events: Vec<PollEvent> = Vec::with_capacity(256);
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            for f in self.wheel.expire(Instant::now()) {
+                self.on_timer(f);
+            }
+            while let Ok(m) = self.msg_rx.try_recv() {
+                self.on_msg(m);
+            }
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            let timeout = self
+                .wheel
+                .next_deadline()
+                .map(|at| at.saturating_duration_since(Instant::now()))
+                .unwrap_or(MAX_POLL_WAIT)
+                .min(MAX_POLL_WAIT);
+            // +1ms rounds sub-millisecond remainders up instead of
+            // busy-spinning a 0ms poll until the deadline lands.
+            let ms = timeout.as_millis() as i32 + 1;
+            if self.poller.wait(ms, &mut events).is_err() {
+                continue;
+            }
+            while let Some(ev) = events.pop() {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(listener),
+                    TOKEN_WAKE => drain_wake(wake_rx),
+                    _ => self.conn_event(ev),
+                }
+            }
+            while let Ok(m) = self.msg_rx.try_recv() {
+                self.on_msg(m);
+            }
+        }
+    }
+
+    // -- accept ------------------------------------------------------------
+
+    fn accept_ready(&mut self, listener: &TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let fd = stream.as_raw_fd();
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(fd, token, READ).is_err() {
+                        continue; // dropping the stream closes it
+                    }
+                    self.conns.insert(
+                        token,
+                        ConnState {
+                            conn: Conn::new(stream),
+                            fd,
+                            phase: Phase::Head,
+                            served: 0,
+                            out: Vec::new(),
+                            out_pos: 0,
+                            close_after_flush: false,
+                            gen: 0,
+                            interest: READ,
+                            deadline_at: None,
+                        },
+                    );
+                    self.arm_idle(token);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    // -- timers ------------------------------------------------------------
+
+    fn arm_request(&mut self, token: u64) {
+        let at = Instant::now() + self.request_deadline;
+        if let Some(st) = self.conns.get_mut(&token) {
+            st.gen += 1;
+            st.deadline_at = Some(at);
+            let gen = st.gen;
+            self.wheel.insert(at, token, gen);
+        }
+    }
+
+    fn arm_idle(&mut self, token: u64) {
+        let at = Instant::now() + self.idle_timeout;
+        if let Some(st) = self.conns.get_mut(&token) {
+            st.gen += 1;
+            st.deadline_at = None;
+            let gen = st.gen;
+            self.wheel.insert(at, token, gen);
+        }
+    }
+
+    fn on_timer(&mut self, f: Fired) {
+        let is_request = match self.conns.get(&f.token) {
+            Some(st)
+                if st.gen == f.gen && matches!(st.phase, Phase::Head | Phase::Body { .. }) =>
+            {
+                st.deadline_at.is_some()
+            }
+            _ => return, // stale generation or phase: lazily cancelled
+        };
+        if is_request {
+            // Slow-loris trip: same 408-and-close as the threaded path.
+            self.respond_close(f.token, Response::request_timeout());
+        } else {
+            self.close(f.token); // idle keep-alive: silent close
+        }
+    }
+
+    // -- socket events -----------------------------------------------------
+
+    fn conn_event(&mut self, ev: PollEvent) {
+        if ev.hangup {
+            self.close(ev.token);
+            return;
+        }
+        if ev.writable {
+            self.flush(ev.token);
+        }
+        if ev.readable {
+            self.readable(ev.token);
+        }
+    }
+
+    fn readable(&mut self, token: u64) {
+        loop {
+            let st = match self.conns.get_mut(&token) {
+                Some(s) => s,
+                None => return,
+            };
+            if !matches!(st.phase, Phase::Head | Phase::Body { .. }) {
+                return; // Await/Flush: nothing to read into
+            }
+            match st.conn.fill_once() {
+                Ok(0) => {
+                    self.on_eof(token);
+                    return;
+                }
+                Ok(_) => {
+                    // First byte of a request moves idle → on-the-clock.
+                    let armed = self
+                        .conns
+                        .get(&token)
+                        .is_some_and(|s| s.deadline_at.is_some());
+                    if !armed {
+                        self.arm_request(token);
+                    }
+                    self.advance(token);
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    return
+                }
+                Err(_) => {
+                    self.close(token);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn on_eof(&mut self, token: u64) {
+        let clean = match self.conns.get(&token) {
+            Some(st) => matches!(st.phase, Phase::Head) && st.conn.buffered() == 0,
+            None => return,
+        };
+        if clean {
+            self.close(token); // peer closed an idle keep-alive conn
+        } else {
+            self.respond_close(token, Response::bad_request("connection closed mid-request"));
+        }
+    }
+
+    /// Drive the parse as far as buffered bytes allow, transitioning
+    /// Head → Body → dispatch.
+    fn advance(&mut self, token: u64) {
+        loop {
+            let st = match self.conns.get_mut(&token) {
+                Some(s) => s,
+                None => return,
+            };
+            if matches!(st.phase, Phase::Head) {
+                match st.conn.try_parse_head() {
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        self.respond_close(token, Response::bad_request(&msg));
+                        return;
+                    }
+                    Ok(None) => return,
+                    Ok(Some(head)) => {
+                        let outcome = Router::route(&head.method, &head.path);
+                        if matches!(&outcome, RouteOutcome::Match(m) if m.endpoint == Endpoint::CorpusIngest)
+                        {
+                            self.detach_for_ingest(token, head);
+                            return;
+                        }
+                        let framing = match Framing::for_head(&head) {
+                            Ok(f) => f,
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                self.respond_close(token, Response::bad_request(&msg));
+                                return;
+                            }
+                        };
+                        // Pre-announced oversize body: 413 without
+                        // reading it (mirrors read_body_string).
+                        if let Ok(Some(n)) = head.content_length() {
+                            if !head.chunked() && n > http::MAX_BODY {
+                                self.respond_close(
+                                    token,
+                                    Response::payload_too_large(&format!(
+                                        "body too large ({n} bytes)"
+                                    )),
+                                );
+                                return;
+                            }
+                        }
+                        let st = self.conns.get_mut(&token).unwrap();
+                        st.phase =
+                            Phase::Body { head, outcome, framing, collected: Vec::new() };
+                        continue;
+                    }
+                }
+            }
+
+            enum Step {
+                NeedMore,
+                Done,
+                Failed(String),
+                TooLarge(usize),
+            }
+            let step = {
+                let st = match self.conns.get_mut(&token) {
+                    Some(s) => s,
+                    None => return,
+                };
+                match &mut st.phase {
+                    Phase::Body { framing, collected, .. } => loop {
+                        match st.conn.decode_step(framing) {
+                            Err(e) => break Step::Failed(format!("{e:#}")),
+                            Ok(BodyStep::NeedMore) => break Step::NeedMore,
+                            Ok(BodyStep::Done) => break Step::Done,
+                            Ok(BodyStep::Chunk(c)) => {
+                                collected.extend_from_slice(&c);
+                                if collected.len() > http::MAX_BODY {
+                                    break Step::TooLarge(collected.len());
+                                }
+                            }
+                        }
+                    },
+                    _ => return,
+                }
+            };
+            match step {
+                Step::NeedMore => return,
+                Step::Failed(msg) => {
+                    self.respond_close(token, Response::bad_request(&msg));
+                    return;
+                }
+                Step::TooLarge(n) => {
+                    self.respond_close(
+                        token,
+                        Response::payload_too_large(&format!("body too large ({n} bytes)")),
+                    );
+                    return;
+                }
+                Step::Done => {
+                    self.dispatch(token);
+                    return;
+                }
+            }
+        }
+    }
+
+    // -- handler dispatch --------------------------------------------------
+
+    /// Body fully decoded: hand the request to the worker pool and park
+    /// the connection (no socket interest) until the response message.
+    fn dispatch(&mut self, token: u64) {
+        let st = match self.conns.get_mut(&token) {
+            Some(s) => s,
+            None => return,
+        };
+        let phase = std::mem::replace(&mut st.phase, Phase::Await);
+        let (head, outcome, body) = match phase {
+            Phase::Body { head, outcome, collected, .. } => (head, outcome, collected),
+            other => {
+                st.phase = other;
+                return;
+            }
+        };
+        // The request deadline covers head + body, not handler latency
+        // (handlers bound their own waits) — matches the threaded path.
+        st.gen += 1;
+        st.deadline_at = None;
+        let fd = st.fd;
+        let served = st.served;
+        st.interest = 0;
+        let _ = self.poller.reregister(fd, token, 0);
+        let keep = head.wants_keep_alive() && served + 1 < MAX_REQUESTS_PER_CONN;
+        let svc = Arc::clone(&self.svc);
+        let slo = self.slo;
+        let tx = self.msg_tx.clone();
+        let wk = Arc::clone(&self.wake_tx);
+        self.pool.execute(move || {
+            let resp = match String::from_utf8(body) {
+                Ok(s) => super::dispatch_outcome(&outcome, &s, &svc, slo),
+                Err(e) => Response::bad_request(&e.to_string()),
+            };
+            let _ = tx.send(Msg::Response { token, resp, keep });
+            wake(&wk);
+        });
+    }
+
+    /// `POST /v1/corpus`: deregister and hand the connection to a
+    /// blocking worker (see module docs).
+    fn detach_for_ingest(&mut self, token: u64, head: Head) {
+        let mut st = match self.conns.remove(&token) {
+            Some(s) => s,
+            None => return,
+        };
+        self.poller.deregister(st.fd);
+        st.gen += 1; // lazily cancel the armed request timer
+        let gen = st.gen;
+        let served = st.served;
+        let deadline_at =
+            st.deadline_at.unwrap_or_else(|| Instant::now() + self.request_deadline);
+        let (stream, buf) = st.conn.into_parts();
+        let svc = Arc::clone(&self.svc);
+        let tx = self.msg_tx.clone();
+        let wk = Arc::clone(&self.wake_tx);
+        let read_timeout = Duration::from_secs(10).min(self.request_deadline);
+        self.pool.execute(move || {
+            if stream.set_nonblocking(false).is_err() {
+                return; // conn drops → closed
+            }
+            let _ = stream.set_read_timeout(Some(read_timeout));
+            let mut conn = Conn::from_parts(stream, buf);
+            // Carry over whatever budget the request has already spent.
+            conn.arm_deadline_at(deadline_at);
+            let (resp, body_ok) = super::corpus_endpoint(&mut conn, &head, &svc);
+            let resp =
+                if conn.deadline_exceeded() { Response::request_timeout() } else { resp };
+            let keep = head.wants_keep_alive()
+                && served + 1 < MAX_REQUESTS_PER_CONN
+                && body_ok
+                && !conn.deadline_exceeded();
+            if conn.stream_mut().write_all(resp.serialize_with(keep).as_bytes()).is_err() {
+                return;
+            }
+            if !keep {
+                return;
+            }
+            conn.finish_request();
+            if conn.stream_mut().set_nonblocking(true).is_err() {
+                return;
+            }
+            let _ = tx.send(Msg::Reattach { token, conn, served: served + 1, gen });
+            wake(&wk);
+        });
+    }
+
+    // -- worker messages ---------------------------------------------------
+
+    fn on_msg(&mut self, msg: Msg) {
+        match msg {
+            Msg::Response { token, resp, keep } => {
+                let st = match self.conns.get_mut(&token) {
+                    Some(s) => s,
+                    None => return, // conn died while the handler ran
+                };
+                if !matches!(st.phase, Phase::Await) {
+                    return;
+                }
+                st.out = resp.serialize_with(keep).into_bytes();
+                st.out_pos = 0;
+                st.close_after_flush = !keep;
+                st.phase = Phase::Flush;
+                self.flush(token);
+            }
+            Msg::Reattach { token, conn, served, gen } => {
+                self.reattach(token, conn, served, gen)
+            }
+        }
+    }
+
+    fn reattach(&mut self, token: u64, mut conn: Conn<TcpStream>, served: usize, gen: u64) {
+        let fd = conn.stream_mut().as_raw_fd();
+        if self.poller.register(fd, token, READ).is_err() {
+            return; // dropping the conn closes it
+        }
+        let pipelined = conn.buffered() > 0;
+        self.conns.insert(
+            token,
+            ConnState {
+                conn,
+                fd,
+                phase: Phase::Head,
+                served,
+                out: Vec::new(),
+                out_pos: 0,
+                close_after_flush: false,
+                // Continue the pre-detach generation: stale wheel
+                // entries from before the detach must not match.
+                gen,
+                interest: READ,
+                deadline_at: None,
+            },
+        );
+        if pipelined {
+            self.arm_request(token);
+            self.advance(token);
+        } else {
+            self.arm_idle(token);
+        }
+    }
+
+    // -- responses ---------------------------------------------------------
+
+    /// Buffer an error response and close once it flushes.
+    fn respond_close(&mut self, token: u64, resp: Response) {
+        let st = match self.conns.get_mut(&token) {
+            Some(s) => s,
+            None => return,
+        };
+        st.gen += 1;
+        st.deadline_at = None;
+        st.out = resp.serialize_with(false).into_bytes();
+        st.out_pos = 0;
+        st.close_after_flush = true;
+        st.phase = Phase::Flush;
+        self.flush(token);
+    }
+
+    fn flush(&mut self, token: u64) {
+        enum FlushResult {
+            Done,
+            Blocked,
+            Gone,
+        }
+        let res = {
+            let st = match self.conns.get_mut(&token) {
+                Some(s) => s,
+                None => return,
+            };
+            if !matches!(st.phase, Phase::Flush) {
+                return;
+            }
+            loop {
+                if st.out_pos >= st.out.len() {
+                    break FlushResult::Done;
+                }
+                match st.conn.stream_mut().write(&st.out[st.out_pos..]) {
+                    Ok(0) => break FlushResult::Gone,
+                    Ok(n) => st.out_pos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        break FlushResult::Blocked
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break FlushResult::Gone,
+                }
+            }
+        };
+        match res {
+            FlushResult::Gone => self.close(token),
+            FlushResult::Blocked => {
+                if let Some(st) = self.conns.get_mut(&token) {
+                    if st.interest != WRITE {
+                        st.interest = WRITE;
+                        let fd = st.fd;
+                        let _ = self.poller.reregister(fd, token, WRITE);
+                    }
+                }
+            }
+            FlushResult::Done => self.finish_response(token),
+        }
+    }
+
+    /// A response fully flushed: close, or rotate back to Head and
+    /// immediately drive any pipelined request already buffered.
+    fn finish_response(&mut self, token: u64) {
+        let close = match self.conns.get_mut(&token) {
+            Some(st) => {
+                st.out = Vec::new();
+                st.out_pos = 0;
+                st.close_after_flush
+            }
+            None => return,
+        };
+        if close {
+            self.close(token);
+            return;
+        }
+        let st = self.conns.get_mut(&token).unwrap();
+        st.served += 1;
+        st.phase = Phase::Head;
+        st.conn.finish_request();
+        let fd = st.fd;
+        let pipelined = st.conn.buffered() > 0;
+        if st.interest != READ {
+            st.interest = READ;
+            let _ = self.poller.reregister(fd, token, READ);
+        }
+        if pipelined {
+            self.arm_request(token);
+            self.advance(token);
+        } else {
+            self.arm_idle(token);
+        }
+    }
+
+    fn close(&mut self, token: u64) {
+        if let Some(st) = self.conns.remove(&token) {
+            self.poller.deregister(st.fd);
+            // st.conn drops here → close(2)
+        }
+    }
+}

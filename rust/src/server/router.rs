@@ -1,0 +1,345 @@
+//! Typed request routing for the v1 API.
+//!
+//! The route table is declarative: method + path pattern → [`Endpoint`],
+//! with `{id}`-style params typed at the table (only `u64` today) and
+//! parsed exactly once. Matching yields one of four outcomes the front
+//! ends map straight to responses:
+//!
+//! * [`RouteOutcome::Match`] — handler + parsed params (+ whether the
+//!   path is a deprecated alias, so the response can carry a
+//!   `Deprecation` header).
+//! * [`RouteOutcome::BadParam`] — the shape and method matched but a
+//!   typed param didn't parse → **400** with code `invalid_id` (fixes
+//!   the old inconsistency where `DELETE /v1/corpus/3junk` sometimes
+//!   404'd and sometimes 400'd depending on the junk).
+//! * [`RouteOutcome::MethodNotAllowed`] — the path exists under another
+//!   method → automatic **405** with an `Allow` header listing every
+//!   method the path serves.
+//! * [`RouteOutcome::NotFound`] — **404**.
+//!
+//! `/healthz`, `/metrics` and `/stats` are deprecated aliases of their
+//! `/v1/` homes: they keep serving identical bodies but are flagged so
+//! responses emit `Deprecation: true` (see `docs/API.md`).
+
+/// What a matched route dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    /// `GET /v1/healthz` (alias `/healthz`) — liveness.
+    Healthz,
+    /// `GET /v1/metrics` (alias `/metrics`) — metrics snapshot.
+    Metrics,
+    /// `GET /v1/stats` (alias `/stats`) — queue/route/durability stats.
+    Stats,
+    /// `GET /v1/ingest/status` — ingest counters.
+    IngestStatus,
+    /// `POST /v1/embed` — embed a batch of texts.
+    Embed,
+    /// `POST /v1/corpus` — streaming NDJSON ingest (body never
+    /// materialized; both server modes special-case it).
+    CorpusIngest,
+    /// `POST /v1/corpus/snapshot` — durable checkpoint.
+    CorpusSnapshot,
+    /// `DELETE /v1/corpus/{id}` — tombstone one document.
+    CorpusDelete,
+}
+
+/// One path segment pattern.
+#[derive(Debug, Clone, Copy)]
+enum Seg {
+    Lit(&'static str),
+    /// A `{id}`-style typed parameter: matches any segment shape-wise;
+    /// must parse as decimal `u64` to produce a [`RouteOutcome::Match`].
+    U64,
+}
+
+struct Route {
+    method: &'static str,
+    segs: &'static [Seg],
+    endpoint: Endpoint,
+    deprecated: bool,
+}
+
+/// Declarative route table. Order matters only for tie-breaks between
+/// patterns that match the same concrete path (`/v1/corpus/snapshot`
+/// before `/v1/corpus/{id}`: the literal wins).
+static ROUTES: &[Route] = &[
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("v1"), Seg::Lit("healthz")],
+        endpoint: Endpoint::Healthz,
+        deprecated: false,
+    },
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("healthz")],
+        endpoint: Endpoint::Healthz,
+        deprecated: true,
+    },
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("v1"), Seg::Lit("metrics")],
+        endpoint: Endpoint::Metrics,
+        deprecated: false,
+    },
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("metrics")],
+        endpoint: Endpoint::Metrics,
+        deprecated: true,
+    },
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("v1"), Seg::Lit("stats")],
+        endpoint: Endpoint::Stats,
+        deprecated: false,
+    },
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("stats")],
+        endpoint: Endpoint::Stats,
+        deprecated: true,
+    },
+    Route {
+        method: "GET",
+        segs: &[Seg::Lit("v1"), Seg::Lit("ingest"), Seg::Lit("status")],
+        endpoint: Endpoint::IngestStatus,
+        deprecated: false,
+    },
+    Route {
+        method: "POST",
+        segs: &[Seg::Lit("v1"), Seg::Lit("embed")],
+        endpoint: Endpoint::Embed,
+        deprecated: false,
+    },
+    Route {
+        method: "POST",
+        segs: &[Seg::Lit("v1"), Seg::Lit("corpus")],
+        endpoint: Endpoint::CorpusIngest,
+        deprecated: false,
+    },
+    Route {
+        method: "POST",
+        segs: &[Seg::Lit("v1"), Seg::Lit("corpus"), Seg::Lit("snapshot")],
+        endpoint: Endpoint::CorpusSnapshot,
+        deprecated: false,
+    },
+    Route {
+        method: "DELETE",
+        segs: &[Seg::Lit("v1"), Seg::Lit("corpus"), Seg::U64],
+        endpoint: Endpoint::CorpusDelete,
+        deprecated: false,
+    },
+];
+
+/// A successful route: the endpoint plus params parsed once.
+#[derive(Debug, Clone)]
+pub struct RouteMatch {
+    pub endpoint: Endpoint,
+    /// The `{id}` param when the pattern has one.
+    pub id: Option<u64>,
+    /// True when matched via a deprecated alias path.
+    pub deprecated: bool,
+}
+
+/// Result of routing one request line.
+#[derive(Debug, Clone)]
+pub enum RouteOutcome {
+    Match(RouteMatch),
+    /// Method + shape matched, but a typed param didn't parse.
+    BadParam { message: String },
+    /// Path exists under other methods; `allow` is the `Allow` value.
+    MethodNotAllowed { allow: String },
+    NotFound,
+}
+
+/// The router — stateless over the static table.
+pub struct Router;
+
+impl Router {
+    pub fn route(method: &str, path: &str) -> RouteOutcome {
+        let segs = match segments(path) {
+            Some(s) => s,
+            None => return RouteOutcome::NotFound,
+        };
+        let mut allow: Vec<&'static str> = Vec::new();
+        let mut bad_param: Option<String> = None;
+        for r in ROUTES {
+            if r.segs.len() != segs.len() {
+                continue;
+            }
+            let shape_ok = r.segs.iter().zip(segs.iter()).all(|(pat, got)| match *pat {
+                Seg::Lit(l) => l == *got,
+                Seg::U64 => true,
+            });
+            if !shape_ok {
+                continue;
+            }
+            if r.method != method {
+                if !allow.contains(&r.method) {
+                    allow.push(r.method);
+                }
+                continue;
+            }
+            let mut id = None;
+            let mut param_err = None;
+            for (pat, got) in r.segs.iter().zip(segs.iter()) {
+                if matches!(pat, Seg::U64) {
+                    match got.parse::<u64>() {
+                        Ok(v) => id = Some(v),
+                        Err(_) => {
+                            param_err =
+                                Some(format!("document id must be a decimal u64, got {got:?}"))
+                        }
+                    }
+                }
+            }
+            if let Some(msg) = param_err {
+                bad_param = Some(msg);
+                continue;
+            }
+            return RouteOutcome::Match(RouteMatch {
+                endpoint: r.endpoint,
+                id,
+                deprecated: r.deprecated,
+            });
+        }
+        if let Some(message) = bad_param {
+            return RouteOutcome::BadParam { message };
+        }
+        if !allow.is_empty() {
+            return RouteOutcome::MethodNotAllowed { allow: allow.join(", ") };
+        }
+        RouteOutcome::NotFound
+    }
+}
+
+/// Split a path into segments. `None` rejects shapes routing never
+/// serves (no leading `/`, empty segments from `//` or a trailing `/`)
+/// — those stay 404, matching the pre-router behavior.
+fn segments(path: &str) -> Option<Vec<&str>> {
+    let p = path.strip_prefix('/')?;
+    if p.is_empty() {
+        return Some(Vec::new());
+    }
+    let segs: Vec<&str> = p.split('/').collect();
+    if segs.iter().any(|s| s.is_empty()) {
+        return None;
+    }
+    Some(segs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn must_match(method: &str, path: &str) -> RouteMatch {
+        match Router::route(method, path) {
+            RouteOutcome::Match(m) => m,
+            other => panic!("{method} {path} → {other:?}"),
+        }
+    }
+
+    #[test]
+    fn canonical_v1_paths_route() {
+        assert_eq!(must_match("GET", "/v1/healthz").endpoint, Endpoint::Healthz);
+        assert_eq!(must_match("GET", "/v1/metrics").endpoint, Endpoint::Metrics);
+        assert_eq!(must_match("GET", "/v1/stats").endpoint, Endpoint::Stats);
+        assert_eq!(must_match("GET", "/v1/ingest/status").endpoint, Endpoint::IngestStatus);
+        assert_eq!(must_match("POST", "/v1/embed").endpoint, Endpoint::Embed);
+        assert_eq!(must_match("POST", "/v1/corpus").endpoint, Endpoint::CorpusIngest);
+        assert_eq!(
+            must_match("POST", "/v1/corpus/snapshot").endpoint,
+            Endpoint::CorpusSnapshot
+        );
+        for path in ["/v1/healthz", "/v1/metrics", "/v1/stats"] {
+            assert!(!must_match("GET", path).deprecated, "{path}");
+        }
+    }
+
+    #[test]
+    fn deprecated_aliases_route_with_the_flag() {
+        for (path, ep) in [
+            ("/healthz", Endpoint::Healthz),
+            ("/metrics", Endpoint::Metrics),
+            ("/stats", Endpoint::Stats),
+        ] {
+            let m = must_match("GET", path);
+            assert_eq!(m.endpoint, ep, "{path}");
+            assert!(m.deprecated, "{path} must be flagged deprecated");
+        }
+    }
+
+    #[test]
+    fn typed_param_parses_once() {
+        let m = must_match("DELETE", "/v1/corpus/42");
+        assert_eq!(m.endpoint, Endpoint::CorpusDelete);
+        assert_eq!(m.id, Some(42));
+        assert_eq!(must_match("DELETE", "/v1/corpus/0").id, Some(0));
+        assert_eq!(
+            must_match("DELETE", &format!("/v1/corpus/{}", u64::MAX)).id,
+            Some(u64::MAX)
+        );
+    }
+
+    /// The bugfix satellite: trailing junk on the id is a typed-param
+    /// failure (400 `invalid_id`), consistently — never a 404.
+    #[test]
+    fn bad_ids_are_bad_param_not_not_found() {
+        for path in ["/v1/corpus/3junk", "/v1/corpus/not-a-number", "/v1/corpus/-1"] {
+            match Router::route("DELETE", path) {
+                RouteOutcome::BadParam { message } => {
+                    assert!(message.contains("u64"), "{message}")
+                }
+                other => panic!("DELETE {path} → {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_method_is_405_with_allow_union() {
+        match Router::route("POST", "/v1/healthz") {
+            RouteOutcome::MethodNotAllowed { allow } => assert_eq!(allow, "GET"),
+            other => panic!("{other:?}"),
+        }
+        match Router::route("GET", "/v1/corpus/7") {
+            RouteOutcome::MethodNotAllowed { allow } => assert_eq!(allow, "DELETE"),
+            other => panic!("{other:?}"),
+        }
+        // /v1/corpus/snapshot shape-matches both the literal POST route
+        // and DELETE /v1/corpus/{id}: Allow lists both methods.
+        match Router::route("PUT", "/v1/corpus/snapshot") {
+            RouteOutcome::MethodNotAllowed { allow } => {
+                assert!(allow.contains("POST") && allow.contains("DELETE"), "{allow}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn literal_beats_param_on_ties() {
+        // POST /v1/corpus/snapshot must hit the snapshot endpoint, not
+        // be a bad {id}.
+        assert_eq!(
+            must_match("POST", "/v1/corpus/snapshot").endpoint,
+            Endpoint::CorpusSnapshot
+        );
+    }
+
+    #[test]
+    fn unroutable_shapes_are_not_found() {
+        for (method, path) in [
+            ("GET", "/nope"),
+            ("GET", "/"),
+            ("GET", ""),
+            ("GET", "/v1/healthz/"),
+            ("GET", "//v1/healthz"),
+            ("DELETE", "/v1/corpus/3/junk"),
+            ("GET", "/v1"),
+        ] {
+            assert!(
+                matches!(Router::route(method, path), RouteOutcome::NotFound),
+                "{method} {path}"
+            );
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Hashed timer wheel for the reactor's per-connection deadlines.
+//!
+//! 256 slots × 25 ms tick ≈ a 6.4 s horizon; deadlines beyond it are
+//! clamped to the farthest slot and re-hashed when that slot drains
+//! (lazy cascade), so arbitrarily long idle timeouts cost nothing extra.
+//!
+//! **Cancellation is lazy and generation-based**: entries are never
+//! removed. The owner bumps its connection's generation counter to
+//! cancel; a drained entry whose `(token, gen)` no longer matches the
+//! live connection state is simply ignored. A connection serving many
+//! requests leaves a trail of stale entries that expire within one
+//! deadline period — bounded, and far cheaper than tombstone removal
+//! from the middle of a slot.
+
+use std::time::{Duration, Instant};
+
+/// Default tick width — deadline resolution.
+pub const TICK: Duration = Duration::from_millis(25);
+const SLOTS: usize = 256;
+
+/// A fired deadline: the reactor checks `(token, gen)` against the live
+/// connection before acting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fired {
+    pub token: u64,
+    pub gen: u64,
+}
+
+struct Entry {
+    at: Instant,
+    token: u64,
+    gen: u64,
+}
+
+pub struct TimerWheel {
+    slots: Vec<Vec<Entry>>,
+    tick: Duration,
+    /// The instant the cursor slot's window starts at.
+    cursor_time: Instant,
+    cursor: usize,
+    len: usize,
+}
+
+impl TimerWheel {
+    pub fn new(now: Instant) -> TimerWheel {
+        TimerWheel::with_tick(now, TICK)
+    }
+
+    pub fn with_tick(now: Instant, tick: Duration) -> TimerWheel {
+        assert!(tick > Duration::ZERO);
+        TimerWheel {
+            slots: (0..SLOTS).map(|_| Vec::new()).collect(),
+            tick,
+            cursor_time: now,
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// Schedule `(token, gen)` to fire at `at` (clamped into the wheel's
+    /// horizon; beyond-horizon entries re-hash as the wheel turns).
+    pub fn insert(&mut self, at: Instant, token: u64, gen: u64) {
+        let ticks = if at > self.cursor_time {
+            let dt = at.duration_since(self.cursor_time);
+            ((dt.as_nanos() / self.tick.as_nanos()) as usize).min(SLOTS - 1)
+        } else {
+            0
+        };
+        let slot = (self.cursor + ticks) % SLOTS;
+        self.slots[slot].push(Entry { at, token, gen });
+        self.len += 1;
+    }
+
+    /// Advance the wheel to `now` and return every entry whose deadline
+    /// has passed. Entries in drained slots that aren't due yet (they
+    /// were clamped from beyond the horizon) are re-hashed.
+    pub fn expire(&mut self, now: Instant) -> Vec<Fired> {
+        let mut fired = Vec::new();
+        while self.cursor_time + self.tick <= now {
+            let entries = std::mem::take(&mut self.slots[self.cursor]);
+            self.cursor = (self.cursor + 1) % SLOTS;
+            self.cursor_time += self.tick;
+            for e in entries {
+                self.len -= 1;
+                if e.at <= now {
+                    fired.push(Fired { token: e.token, gen: e.gen });
+                } else {
+                    self.insert(e.at, e.token, e.gen);
+                }
+            }
+        }
+        // Entries in the un-advanced cursor slot can also be due (the
+        // slot's window is one tick wide).
+        let slot = &mut self.slots[self.cursor];
+        let mut i = 0;
+        while i < slot.len() {
+            if slot[i].at <= now {
+                let e = slot.swap_remove(i);
+                self.len -= 1;
+                fired.push(Fired { token: e.token, gen: e.gen });
+            } else {
+                i += 1;
+            }
+        }
+        fired
+    }
+
+    /// Earliest scheduled deadline — the poll timeout bound. Slots are
+    /// ordered by time from the cursor (insert is monotone in `at`), so
+    /// the first non-empty slot holds the soonest entry.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        if self.len == 0 {
+            return None;
+        }
+        for off in 0..SLOTS {
+            let s = &self.slots[(self.cursor + off) % SLOTS];
+            if let Some(min) = s.iter().map(|e| e.at).min() {
+                return Some(min);
+            }
+        }
+        None
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_at_or_after_the_deadline_never_before() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0);
+        w.insert(t0 + Duration::from_millis(40), 7, 1);
+        assert!(w.expire(t0).is_empty());
+        assert!(w.expire(t0 + Duration::from_millis(39)).is_empty());
+        let fired = w.expire(t0 + Duration::from_millis(41));
+        assert_eq!(fired, vec![Fired { token: 7, gen: 1 }]);
+        assert!(w.is_empty());
+        assert!(w.expire(t0 + Duration::from_secs(1)).is_empty(), "fires once");
+    }
+
+    #[test]
+    fn sub_tick_deadlines_fire_from_the_cursor_slot() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0);
+        w.insert(t0 + Duration::from_millis(1), 1, 1);
+        // The wheel hasn't turned a full tick, yet the entry is due.
+        let fired = w.expire(t0 + Duration::from_millis(2));
+        assert_eq!(fired.len(), 1);
+    }
+
+    #[test]
+    fn beyond_horizon_deadlines_cascade() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0);
+        // 30 s is far past the 256×25 ms horizon.
+        let at = t0 + Duration::from_secs(30);
+        w.insert(at, 9, 2);
+        // Sweeping up to 29 s re-hashes but never fires.
+        for s in [7u64, 14, 21, 29] {
+            assert!(w.expire(t0 + Duration::from_secs(s)).is_empty(), "{s}s");
+            assert_eq!(w.len(), 1);
+        }
+        let fired = w.expire(t0 + Duration::from_secs(31));
+        assert_eq!(fired, vec![Fired { token: 9, gen: 2 }]);
+    }
+
+    #[test]
+    fn next_deadline_tracks_the_soonest_entry() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0);
+        assert!(w.next_deadline().is_none());
+        let late = t0 + Duration::from_millis(900);
+        let soon = t0 + Duration::from_millis(60);
+        w.insert(late, 1, 1);
+        w.insert(soon, 2, 1);
+        assert_eq!(w.next_deadline(), Some(soon));
+        let fired = w.expire(t0 + Duration::from_millis(61));
+        assert_eq!(fired, vec![Fired { token: 2, gen: 1 }]);
+        assert_eq!(w.next_deadline(), Some(late));
+    }
+
+    #[test]
+    fn stale_generations_are_the_cancellation_mechanism() {
+        let t0 = Instant::now();
+        let mut w = TimerWheel::new(t0);
+        w.insert(t0 + Duration::from_millis(30), 5, 1); // armed…
+        w.insert(t0 + Duration::from_millis(80), 5, 2); // …then re-armed
+        let fired = w.expire(t0 + Duration::from_millis(100));
+        // Both entries drain; the owner ignores gen 1 (stale) and acts
+        // on gen 2. The wheel itself just reports both.
+        assert_eq!(fired.len(), 2);
+        assert!(fired.contains(&Fired { token: 5, gen: 2 }));
+    }
+}

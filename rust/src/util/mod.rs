@@ -5,4 +5,5 @@ pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod sys;
 pub mod threadpool;

@@ -6,7 +6,8 @@
 //! threads with a deterministic per-query top-k merge.
 
 use super::mask::SkipMask;
-use super::{kernels, Hit, Index, TopK};
+use super::{kernels, numa, Hit, Index, TopK};
+use crate::devices::affinity::{pin_current_thread, Topology};
 
 /// Row tile per kernel call: 64 rows × 768 dims × 4 B ≈ 192 KiB stays
 /// L2-resident while the query panel sweeps it.
@@ -24,12 +25,15 @@ pub struct FlatIndex {
     /// Tombstoned rows: scanned (the arena is contiguous) but never
     /// pushed into a top-k. See `vecstore::mask`.
     pub(crate) dead: SkipMask,
+    /// NUMA plan ([`Index::set_numa`]): when set (and multi-node),
+    /// batched scans shard along node bands with pinned threads.
+    numa: Option<Topology>,
 }
 
 impl FlatIndex {
     pub fn new(dim: usize) -> FlatIndex {
         assert!(dim > 0);
-        FlatIndex { dim, ids: Vec::new(), data: Vec::new(), dead: SkipMask::new() }
+        FlatIndex { dim, ids: Vec::new(), data: Vec::new(), dead: SkipMask::new(), numa: None }
     }
 
     pub fn vector(&self, row: usize) -> &[f32] {
@@ -86,6 +90,19 @@ impl FlatIndex {
             let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
             self.scan_rows(&qbuf, nq, 0, n, &mut tks, &mut scores);
             return tks.into_iter().map(TopK::into_vec).collect();
+        }
+        // NUMA plan: shard along node bands, pin each shard's thread to
+        // the node owning its rows. Shards still push global row seqs,
+        // so the merge is bit-identical to the unpinned path below.
+        if let Some(topo) = self.numa.as_ref().filter(|t| t.numa_nodes > 1) {
+            let shards = numa::band_shards(n, threads, topo);
+            let finals = super::parallel_topk_scan(shards.len(), nq, k, |t, tks| {
+                let (lo, hi, node) = shards[t];
+                let _ = pin_current_thread(&topo.cores_of_node(node));
+                let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
+                self.scan_rows(&qbuf, nq, lo, hi, tks, &mut scores);
+            });
+            return finals.into_iter().map(TopK::into_vec).collect();
         }
         let rows_per = n / threads + usize::from(n % threads != 0);
         let finals = super::parallel_topk_scan(threads, nq, k, |t, tks| {
@@ -195,7 +212,20 @@ impl Index for FlatIndex {
         self.ids = ids;
         self.data = data;
         self.dead.clear();
+        // Compaction rebuilt the arena on this thread; restore node-local
+        // placement when a NUMA plan is active.
+        if let Some(t) = self.numa.as_ref().filter(|t| t.numa_nodes > 1) {
+            self.data = numa::first_touch_realign(&self.data, dim, t);
+        }
         reclaimed
+    }
+
+    fn set_numa(&mut self, topo: Option<Topology>) -> bool {
+        if let Some(t) = topo.as_ref().filter(|t| t.numa_nodes > 1) {
+            self.data = numa::first_touch_realign(&self.data, self.dim, t);
+        }
+        self.numa = topo;
+        true
     }
 
     fn scan_rows_estimate(&self) -> usize {

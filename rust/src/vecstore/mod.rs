@@ -21,6 +21,7 @@ pub mod ivf;
 pub mod kernels;
 pub mod kmeans;
 pub mod mask;
+pub mod numa;
 pub mod persist;
 pub mod qflat;
 pub mod quant;
@@ -132,6 +133,17 @@ pub trait Index {
     /// CPU leg.
     fn export_f32_rows(&self) -> Option<(Vec<u64>, Vec<f32>)> {
         None
+    }
+    /// Opt the index into NUMA-aware scan sharding under `topo`: the
+    /// arena is rewritten through per-node pinned first-touch copies
+    /// (see [`numa`]) and batched scans shard along node bands with
+    /// each shard's thread pinned to its owning node. `None` reverts to
+    /// plain sharding. Results are **bit-identical** either way —
+    /// placement moves bytes, never scores. Returns `false` (the
+    /// default) when the implementation does not support it.
+    fn set_numa(&mut self, topo: Option<crate::devices::affinity::Topology>) -> bool {
+        let _ = topo;
+        false
     }
 }
 

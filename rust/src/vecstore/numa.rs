@@ -1,0 +1,180 @@
+//! NUMA-aware scan sharding (paper §4.4, extended to retrieval).
+//!
+//! A flat scan is memory-bound: on a multi-socket host, a shard whose
+//! rows live on a remote node's DRAM pays the interconnect on every
+//! cache line. This module keeps shards node-local in two steps:
+//!
+//! 1. **Placement** — [`first_touch_realign`] rewrites an arena through
+//!    per-node *pinned* copy threads. Linux backs fresh (calloc'd) pages
+//!    physically on first write, on the writing core's node — so copying
+//!    band `b` from a thread pinned to node `b`'s cores lands band `b`'s
+//!    pages in node `b`'s DRAM. Contents are bit-identical to the input.
+//! 2. **Sharding** — [`band_shards`] partitions the row range into
+//!    per-node bands (the same bands placement used) and subdivides each
+//!    band into shards, so **no shard ever crosses a node boundary**.
+//!    The scan pins each shard's thread to its owning node.
+//!
+//! Determinism: bands tile `[0, n)` in order and shards push hits with
+//! the *global* row index as the tie-break sequence number (see
+//! `TopK::push_with_seq`), so the merged result is bit-identical to a
+//! sequential or unpinned sharded scan — placement moves bytes, never
+//! scores. On single-node hosts both functions degrade to plain
+//! chunking / a plain copy, and callers skip the machinery entirely.
+
+use crate::devices::affinity::{pin_current_thread, Topology};
+
+/// Row range `[lo, hi)` of the node band `b` out of `nodes` equal bands
+/// (remainder rows fold into the later bands; bands tile `[0, rows)`).
+pub fn band_rows(rows: usize, nodes: usize, b: usize) -> (usize, usize) {
+    debug_assert!(nodes > 0 && b < nodes);
+    (b * rows / nodes, (b + 1) * rows / nodes)
+}
+
+/// Partition `rows` into scan shards that never cross a NUMA band:
+/// each band gets a share of `want_threads` proportional to its row
+/// count (at least one shard per non-empty band), then splits evenly.
+/// Returns `(lo, hi, node)` triples tiling `[0, rows)` in row order;
+/// the total shard count is within `numa_nodes` of `want_threads`.
+pub fn band_shards(
+    rows: usize,
+    want_threads: usize,
+    topo: &Topology,
+) -> Vec<(usize, usize, usize)> {
+    let nodes = topo.numa_nodes.max(1);
+    let want = want_threads.max(1);
+    let mut shards = Vec::with_capacity(want + nodes);
+    if rows == 0 {
+        return shards;
+    }
+    for node in 0..nodes {
+        let (lo, hi) = band_rows(rows, nodes, node);
+        if lo >= hi {
+            continue;
+        }
+        let band = hi - lo;
+        // Ceil of the proportional thread share, clamped to the band.
+        let share = (band * want).div_ceil(rows).clamp(1, band);
+        let per = band / share + usize::from(band % share != 0);
+        let mut s_lo = lo;
+        while s_lo < hi {
+            let s_hi = (s_lo + per).min(hi);
+            shards.push((s_lo, s_hi, node));
+            s_lo = s_hi;
+        }
+    }
+    shards
+}
+
+/// Copy `data` (rows of `stride` elements) into a fresh allocation whose
+/// per-node bands are first-touched by threads pinned to the owning
+/// node, placing each band's pages in that node's DRAM. The zeroed
+/// allocation itself is copy-on-write zero pages (calloc/mmap), so the
+/// pinned writes are the first physical touch. Returns a bit-identical
+/// copy; on single-node topologies this is just a plain copy.
+pub fn first_touch_realign<T>(data: &[T], stride: usize, topo: &Topology) -> Vec<T>
+where
+    T: Copy + Default + Send + Sync,
+{
+    assert!(stride > 0, "zero row stride");
+    let rows = data.len() / stride;
+    let mut out = vec![T::default(); data.len()];
+    if rows == 0 || topo.numa_nodes <= 1 {
+        out.copy_from_slice(data);
+        return out;
+    }
+    std::thread::scope(|s| {
+        let mut rest: &mut [T] = &mut out;
+        for node in 0..topo.numa_nodes {
+            let (lo, hi) = band_rows(rows, topo.numa_nodes, node);
+            let band_elems = (hi - lo) * stride;
+            let taken = std::mem::take(&mut rest);
+            let (band, tail) = taken.split_at_mut(band_elems);
+            rest = tail;
+            if band_elems == 0 {
+                continue;
+            }
+            let src = &data[lo * stride..hi * stride];
+            let cores = topo.cores_of_node(node);
+            s.spawn(move || {
+                // Pinning is best-effort: an unpinned copy still
+                // produces correct bytes, just without the placement win.
+                let _ = pin_current_thread(&cores);
+                band.copy_from_slice(src);
+            });
+        }
+        // Row-incomplete trailing elements (never scanned) still copy.
+        let data_tail = &data[rows * stride..];
+        rest.copy_from_slice(data_tail);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_tile_the_row_range() {
+        for (rows, nodes) in [(10, 3), (7, 4), (1, 2), (100, 1), (4, 4)] {
+            let mut next = 0;
+            for b in 0..nodes {
+                let (lo, hi) = band_rows(rows, nodes, b);
+                assert_eq!(lo, next, "rows={rows} nodes={nodes} b={b}");
+                assert!(hi >= lo);
+                next = hi;
+            }
+            assert_eq!(next, rows);
+        }
+    }
+
+    #[test]
+    fn shards_tile_and_never_cross_bands() {
+        for (rows, want, nodes) in
+            [(10_000, 8, 4), (10_000, 3, 4), (5, 8, 4), (8192, 16, 2), (1000, 1, 4)]
+        {
+            let topo = Topology::new(nodes * 2, nodes);
+            let shards = band_shards(rows, want, &topo);
+            let mut next = 0;
+            for &(lo, hi, node) in &shards {
+                assert_eq!(lo, next, "rows={rows} want={want} nodes={nodes}");
+                assert!(hi > lo, "empty shard");
+                let (blo, bhi) = band_rows(rows, nodes, node);
+                assert!(lo >= blo && hi <= bhi, "shard [{lo},{hi}) crosses band {node}");
+                next = hi;
+            }
+            assert_eq!(next, rows);
+            assert!(shards.len() <= want.max(1) + nodes, "{} shards", shards.len());
+        }
+    }
+
+    #[test]
+    fn zero_rows_yield_no_shards() {
+        let topo = Topology::new(8, 4);
+        assert!(band_shards(0, 8, &topo).is_empty());
+    }
+
+    #[test]
+    fn single_node_shards_match_plain_chunking() {
+        let topo = Topology::new(8, 1);
+        let shards = band_shards(100, 4, &topo);
+        assert_eq!(shards, vec![(0, 25, 0), (25, 50, 0), (50, 75, 0), (75, 100, 0)]);
+    }
+
+    #[test]
+    fn realign_is_bit_identical() {
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        for nodes in [1, 2, 4] {
+            let topo = Topology::new(nodes.max(1), nodes);
+            let out = first_touch_realign(&data, 8, &topo);
+            assert_eq!(out, data, "nodes={nodes}");
+        }
+        // Odd shapes: stride that doesn't divide the length (trailing
+        // partial row), scalar stride, empty input.
+        let topo = Topology::new(4, 2);
+        let odd: Vec<i8> = (0..101).map(|i| (i % 117) as i8).collect();
+        assert_eq!(first_touch_realign(&odd, 10, &topo), odd);
+        let scales: Vec<f32> = (0..33).map(|i| i as f32).collect();
+        assert_eq!(first_touch_realign(&scales, 1, &topo), scales);
+        assert!(first_touch_realign::<f32>(&[], 4, &topo).is_empty());
+    }
+}

@@ -11,7 +11,8 @@
 
 use super::mask::SkipMask;
 use super::quant::{Quant, RowArena};
-use super::{Hit, Index, TopK};
+use super::{numa, Hit, Index, TopK};
+use crate::devices::affinity::{pin_current_thread, Topology};
 
 /// Row tile per kernel call — matches `flat.rs` so a tile stays
 /// cache-resident while the query panel sweeps it (quantized tiles are
@@ -29,6 +30,9 @@ pub struct QuantizedFlatIndex {
     pub(crate) arena: RowArena,
     /// Tombstoned rows (same skip-mask contract as `FlatIndex`).
     pub(crate) dead: SkipMask,
+    /// NUMA plan ([`Index::set_numa`]): when set (and multi-node),
+    /// batched scans shard along node bands with pinned threads.
+    numa: Option<Topology>,
 }
 
 impl QuantizedFlatIndex {
@@ -39,6 +43,7 @@ impl QuantizedFlatIndex {
             ids: Vec::new(),
             arena: RowArena::new(quant),
             dead: SkipMask::new(),
+            numa: None,
         }
     }
 
@@ -92,6 +97,18 @@ impl QuantizedFlatIndex {
             let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
             self.scan_rows(&qbuf, nq, 0, n, &mut tks, &mut scores);
             return tks.into_iter().map(TopK::into_vec).collect();
+        }
+        // NUMA plan: band shards + pinned threads; bit-identical to the
+        // unpinned path (global row seqs — see `vecstore::numa`).
+        if let Some(topo) = self.numa.as_ref().filter(|t| t.numa_nodes > 1) {
+            let shards = numa::band_shards(n, threads, topo);
+            let finals = super::parallel_topk_scan(shards.len(), nq, k, |t, tks| {
+                let (lo, hi, node) = shards[t];
+                let _ = pin_current_thread(&topo.cores_of_node(node));
+                let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
+                self.scan_rows(&qbuf, nq, lo, hi, tks, &mut scores);
+            });
+            return finals.into_iter().map(TopK::into_vec).collect();
         }
         let rows_per = n / threads + usize::from(n % threads != 0);
         let finals = super::parallel_topk_scan(threads, nq, k, |t, tks| {
@@ -204,7 +221,19 @@ impl Index for QuantizedFlatIndex {
         self.ids = ids;
         self.arena = arena;
         self.dead.clear();
+        // Restore node-local placement after the on-thread rebuild.
+        if let Some(t) = self.numa.as_ref().filter(|t| t.numa_nodes > 1) {
+            self.arena.numa_realign(self.dim, t);
+        }
         reclaimed
+    }
+
+    fn set_numa(&mut self, topo: Option<Topology>) -> bool {
+        if let Some(t) = topo.as_ref().filter(|t| t.numa_nodes > 1) {
+            self.arena.numa_realign(self.dim, t);
+        }
+        self.numa = topo;
+        true
     }
 
     fn scan_rows_estimate(&self) -> usize {

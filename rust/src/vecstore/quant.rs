@@ -229,6 +229,22 @@ impl RowArena {
         }
     }
 
+    /// Rewrite the arena through per-node pinned copy threads so each
+    /// NUMA band's pages are first-touched on the node that will scan
+    /// them (see [`super::numa`]). Contents are bit-identical; int8
+    /// realigns codes (stride `dim`) and per-row scales (stride 1) with
+    /// the same row bands, so a band shard reads both node-locally.
+    pub fn numa_realign(&mut self, dim: usize, topo: &crate::devices::affinity::Topology) {
+        match self {
+            RowArena::F32(d) => *d = super::numa::first_touch_realign(d, dim, topo),
+            RowArena::F16(d) => *d = super::numa::first_touch_realign(d, dim, topo),
+            RowArena::I8 { codes, scales } => {
+                *codes = super::numa::first_touch_realign(codes, dim, topo);
+                *scales = super::numa::first_touch_realign(scales, 1, topo);
+            }
+        }
+    }
+
     /// Arena footprint in bytes (codes plus per-row scales).
     pub fn bytes(&self) -> usize {
         match self {

@@ -1298,3 +1298,109 @@ fn prop_durability_replay_is_acked_prefix() {
         Ok(())
     });
 }
+
+/// NUMA-banded pinned scans are bit-identical to the plain sharded scan
+/// — the tentpole acceptance bar: across `FlatIndex` and
+/// `QuantizedFlatIndex` × {f32, f16, int8}, with tombstones and under
+/// compaction, a synthetic multi-node plan (band shards + pinned
+/// threads + first-touch realigned arenas) must change placement only,
+/// never a single id or score bit.
+#[test]
+fn prop_numa_banded_scan_is_bit_identical() {
+    use windve::devices::affinity::Topology;
+    use windve::vecstore::{FlatIndex, Hit, Index, IvfIndex, Quant, QuantizedFlatIndex};
+
+    fn bit_eq(name: &str, a: &[Vec<Hit>], b: &[Vec<Hit>]) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("{name}: {} vs {} result lists", a.len(), b.len()));
+        }
+        for (qi, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.len() != y.len() {
+                return Err(format!("{name} q{qi}: {} vs {} hits", x.len(), y.len()));
+            }
+            for (h1, h2) in x.iter().zip(y) {
+                if h1.id != h2.id || h1.score.to_bits() != h2.score.to_bits() {
+                    return Err(format!("{name} q{qi}: {h1:?} != {h2:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    property("numa banded scan == unpinned scan", 25, |g: &mut Gen| {
+        let dim = *g.pick(&[8usize, 24, 48]);
+        let n = g.usize(1, 300);
+        let nq = g.usize(1, 6);
+        let k = g.usize(1, 12);
+        let threads = g.usize(1, 6);
+        // Synthetic multi-node topology: the plan realigns arenas and
+        // band-shards the scan; the pinning syscall itself is
+        // best-effort (CI hosts are usually single-node), so the
+        // determinism must come from the band partition + global seqs.
+        let nodes = *g.pick(&[2usize, 3, 4]);
+        let topo = Topology::new(nodes * 2, nodes);
+        // Coarse grid rows force plenty of exact score ties.
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| (g.u32(0, 5) as f32 - 2.0) * 0.5).collect())
+            .collect();
+        let kill: Vec<u64> = (0..g.usize(0, 3)).map(|_| g.u64(0, n as u64 - 1)).collect();
+        let queries: Vec<Vec<f32>> = (0..nq)
+            .map(|_| (0..dim).map(|_| g.f64(-1.0, 1.0) as f32).collect())
+            .collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+
+        {
+            let mut plain = FlatIndex::new(dim);
+            let mut banded = FlatIndex::new(dim);
+            for (i, v) in rows.iter().enumerate() {
+                plain.add(i as u64, v);
+                banded.add(i as u64, v);
+            }
+            for id in &kill {
+                plain.remove(*id);
+                banded.remove(*id);
+            }
+            if !banded.set_numa(Some(topo.clone())) {
+                return Err("FlatIndex must support set_numa".into());
+            }
+            let want = plain.search_batch_with_threads(&qrefs, k, threads);
+            bit_eq("flat", &want, &banded.search_batch_with_threads(&qrefs, k, threads))?;
+            // Compaction under an active plan re-places the arena and
+            // must stay bit-identical too.
+            banded.compact();
+            bit_eq("flat/compacted", &want, &banded.search_batch_with_threads(&qrefs, k, threads))?;
+            // Reverting the plan restores the plain path, same bits.
+            banded.set_numa(None);
+            bit_eq("flat/reverted", &want, &banded.search_batch_with_threads(&qrefs, k, threads))?;
+        }
+
+        for quant in Quant::modes_under_test() {
+            let mut plain = QuantizedFlatIndex::new(dim, quant);
+            let mut banded = QuantizedFlatIndex::new(dim, quant);
+            for (i, v) in rows.iter().enumerate() {
+                plain.add(i as u64, v);
+                banded.add(i as u64, v);
+            }
+            for id in &kill {
+                plain.remove(*id);
+                banded.remove(*id);
+            }
+            if !banded.set_numa(Some(topo.clone())) {
+                return Err(format!("QuantizedFlatIndex({quant:?}) must support set_numa"));
+            }
+            let want = plain.search_batch_with_threads(&qrefs, k, threads);
+            let name = format!("qflat/{quant:?}");
+            bit_eq(&name, &want, &banded.search_batch_with_threads(&qrefs, k, threads))?;
+            banded.compact();
+            bit_eq(&name, &want, &banded.search_batch_with_threads(&qrefs, k, threads))?;
+        }
+
+        // Indexes without NUMA support refuse the plan (the service
+        // falls back to plain sharding instead of mis-sharding probes).
+        let mut ivf = IvfIndex::new(dim, 4, 2);
+        if ivf.set_numa(Some(topo)) {
+            return Err("IvfIndex must report no NUMA support".into());
+        }
+        Ok(())
+    });
+}

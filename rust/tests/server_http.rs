@@ -63,6 +63,39 @@ fn request(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> 
     parse_response(&buf)
 }
 
+/// One-shot request that also returns the response head, for header
+/// assertions (`Retry-After`, `Allow`, `Deprecation`).
+fn request_with_head(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            format!(
+                "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let head = raw.split("\r\n\r\n").next().unwrap_or("").to_string();
+    let (status, rbody) = parse_response(&raw);
+    (status, head, rbody)
+}
+
+/// Case-insensitive header lookup in a raw response head.
+fn header(head: &str, name: &str) -> Option<String> {
+    head.lines().find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        k.eq_ignore_ascii_case(name).then(|| v.trim().to_string())
+    })
+}
+
 fn parse_response(raw: &str) -> (u16, String) {
     let status: u16 = raw
         .split_whitespace()
@@ -145,15 +178,22 @@ fn single_text_form_accepted() {
 }
 
 #[test]
-fn overload_returns_503_busy() {
+fn overload_returns_503_busy_with_retry_after() {
     // Depth 0: every submission is an Algorithm-1 BUSY.
     let (server, _svc) = start_server(0, 0);
-    let (status, body) = request(server.addr(), "POST", "/v1/embed", r#"{"texts":["x"]}"#);
+    let (status, head, body) =
+        request_with_head(server.addr(), "POST", "/v1/embed", r#"{"texts":["x"]}"#);
     assert_eq!(status, 503, "{body}");
-    assert_eq!(
-        json::parse(&body).unwrap().get("error").unwrap().as_str(),
-        Some("busy")
-    );
+    let v = json::parse(&body).unwrap();
+    let err = v.get("error").unwrap();
+    assert_eq!(err.get("code").unwrap().as_str(), Some("busy"));
+    assert!(err.get("message").is_some(), "{body}");
+    // Queue-occupancy-derived back-off hint, clamped to [1, 8] seconds.
+    let retry: u64 = header(&head, "Retry-After")
+        .expect("503 must carry Retry-After")
+        .parse()
+        .unwrap();
+    assert!((1..=8).contains(&retry), "{retry}");
     server.stop();
 }
 
@@ -673,5 +713,151 @@ fn slow_loris_partial_head_gets_408_idle_connection_survives() {
     idler.read_to_string(&mut raw).unwrap();
     let (status, _) = parse_response(&raw);
     assert_eq!(status, 200, "idle keep-alive killed: {raw}");
+    server.stop();
+}
+
+// ---------------------------------------------------------------------------
+// v1 API contract: error envelope, 405 + Allow, deprecation aliases.
+
+fn envelope_code(body: &str) -> String {
+    json::parse(body)
+        .unwrap_or_else(|e| panic!("error body must be JSON ({e}): {body:?}"))
+        .get("error")
+        .unwrap_or_else(|| panic!("missing error object: {body}"))
+        .get("code")
+        .and_then(|c| c.as_str().map(str::to_string))
+        .unwrap_or_else(|| panic!("missing error.code: {body}"))
+}
+
+/// Every documented error path answers with the versioned envelope
+/// `{"error":{"code","message"}}` and the documented code (docs/API.md).
+#[test]
+fn error_responses_use_the_v1_envelope() {
+    let (server, _svc) = start_server(4, 0);
+    let addr = server.addr();
+
+    // 404 — no such route.
+    let (status, body) = request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+    assert_eq!(envelope_code(&body), "not_found");
+
+    // 405 — known path, wrong method, with the Allow union.
+    let (status, head, body) = request_with_head(addr, "PUT", "/v1/embed", "");
+    assert_eq!(status, 405, "{body}");
+    assert_eq!(envelope_code(&body), "method_not_allowed");
+    assert_eq!(header(&head, "Allow").as_deref(), Some("POST"));
+    let (status, head, _) = request_with_head(addr, "PUT", "/v1/corpus/snapshot", "");
+    assert_eq!(status, 405);
+    let allow = header(&head, "Allow").unwrap();
+    assert!(allow.contains("POST") && allow.contains("DELETE"), "{allow}");
+
+    // 400 invalid_request — malformed body.
+    let (status, body) = request(addr, "POST", "/v1/embed", "{not json");
+    assert_eq!(status, 400);
+    assert_eq!(envelope_code(&body), "invalid_request");
+
+    // 400 invalid_id — the typed-param bugfix: trailing junk on the id
+    // is consistently a 400, never a 404.
+    for junk in ["3junk", "not-a-number", "-1"] {
+        let (status, body) = request(addr, "DELETE", &format!("/v1/corpus/{junk}"), "");
+        assert_eq!(status, 400, "{junk}: {body}");
+        assert_eq!(envelope_code(&body), "invalid_id", "{junk}");
+    }
+
+    // 500 internal — snapshot without a durable store.
+    let (status, body) = request(addr, "POST", "/v1/corpus/snapshot", "");
+    assert_eq!(status, 500);
+    assert_eq!(envelope_code(&body), "internal");
+    server.stop();
+}
+
+/// 413 — a declared body over the limit is refused from the headers
+/// alone (the body is never read), with the envelope and a close.
+#[test]
+fn oversized_declared_body_is_413() {
+    let (server, _svc) = start_server(4, 0);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    // Declare 8 MiB but send nothing: the server must answer from the
+    // preflight, not wait for the body.
+    stream
+        .write_all(b"POST /v1/embed HTTP/1.1\r\nHost: t\r\nContent-Length: 8388608\r\n\r\n")
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let (status, body) = parse_response(&raw);
+    assert_eq!(status, 413, "{raw}");
+    assert_eq!(envelope_code(&body), "payload_too_large");
+    server.stop();
+}
+
+/// 408 carries the envelope too (the slow-loris path).
+#[test]
+fn request_timeout_envelope() {
+    let svc = Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 4,
+                cpu_depth: 0,
+                hetero: false,
+                npu_workers: 1,
+                cpu_workers: 0,
+                ..ServiceConfig::default()
+            },
+            vec![synth_factory(1)],
+            vec![],
+        )
+        .unwrap(),
+    );
+    let server = Server::start_with_deadline(
+        "127.0.0.1:0",
+        Arc::clone(&svc),
+        Duration::from_secs(2),
+        Duration::from_millis(200),
+    )
+    .unwrap();
+    let mut loris = TcpStream::connect(server.addr()).unwrap();
+    loris.write_all(b"GET /v1/healthz HTTP/1.1\r\n").unwrap();
+    let mut raw = String::new();
+    loris.read_to_string(&mut raw).unwrap();
+    let (status, body) = parse_response(&raw);
+    assert_eq!(status, 408, "{raw}");
+    assert_eq!(envelope_code(&body), "request_timeout");
+    server.stop();
+}
+
+/// `/healthz`, `/metrics`, `/stats` keep serving as deprecated aliases
+/// of their `/v1/` homes — same bodies, plus a `Deprecation` header.
+/// The canonical paths carry no such header.
+#[test]
+fn deprecated_aliases_serve_with_deprecation_header() {
+    let (server, _svc) = start_server(4, 0);
+    let addr = server.addr();
+    for (alias, canonical) in
+        [("/healthz", "/v1/healthz"), ("/metrics", "/v1/metrics"), ("/stats", "/v1/stats")]
+    {
+        let (status, head, body) = request_with_head(addr, "GET", alias, "");
+        assert_eq!(status, 200, "{alias}: {body}");
+        assert_eq!(header(&head, "Deprecation").as_deref(), Some("true"), "{alias}");
+        let (status, vhead, vbody) = request_with_head(addr, "GET", canonical, "");
+        assert_eq!(status, 200, "{canonical}: {vbody}");
+        assert!(header(&vhead, "Deprecation").is_none(), "{canonical} must not be deprecated");
+        // Alias and canonical serve the same document shape.
+        let a = json::parse(&body).unwrap();
+        let c = json::parse(&vbody).unwrap();
+        match alias {
+            "/healthz" => {
+                assert_eq!(a.get("ok").unwrap().as_bool(), c.get("ok").unwrap().as_bool())
+            }
+            "/stats" => {
+                assert_eq!(
+                    a.get("npu_depth").unwrap().as_u64(),
+                    c.get("npu_depth").unwrap().as_u64()
+                )
+            }
+            _ => {
+                assert_eq!(a.get("service.accepted").is_some(), c.get("service.accepted").is_some())
+            }
+        }
+    }
     server.stop();
 }

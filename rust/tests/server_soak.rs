@@ -1,0 +1,198 @@
+//! Connection-soak e2e for the readiness-loop server: hundreds of
+//! concurrent keep-alive connections served by a handler pool at least
+//! 16× smaller — connections cost file descriptors, not threads — with
+//! every response byte-identical to the thread-per-connection server's
+//! answer for the same request, and zero dropped or corrupted responses.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use windve::coordinator::instance::BackendFactory;
+use windve::coordinator::{ServiceConfig, WindVE};
+use windve::devices::executor::{Backend, SyntheticBackend};
+use windve::devices::profile::DeviceProfile;
+use windve::server::{Server, ServerOptions};
+use windve::util::sys::raise_nofile_limit;
+
+fn synth_factory(seed: u64) -> BackendFactory {
+    Box::new(move || {
+        let mut p = DeviceProfile::v100_bge();
+        p.noise_sigma = 0.0;
+        p.outlier_prob = 0.0;
+        Ok(Box::new(SyntheticBackend::new(p, 1e-6, seed)) as Box<dyn Backend>)
+    })
+}
+
+/// NPU-only service with queue depth far above the connection count, so
+/// admission never answers BUSY and every response is deterministic for
+/// its text (synthetic embeddings are text-hash-derived; the only route
+/// is "NPU").
+fn start_service(depth: usize) -> Arc<WindVE> {
+    Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: depth,
+                cpu_depth: 0,
+                hetero: false,
+                npu_workers: 1,
+                cpu_workers: 0,
+                ..ServiceConfig::default()
+            },
+            vec![synth_factory(1)],
+            vec![],
+        )
+        .unwrap(),
+    )
+}
+
+fn soak_text(conn: usize, round: usize) -> String {
+    // Many connections share texts (mod 97) so the sequential reference
+    // pass stays short while every response is still byte-checked.
+    format!("soak corpus query {} round {round}", conn % 97)
+}
+
+fn embed_request_bytes(text: &str, close: bool) -> Vec<u8> {
+    let body = format!("{{\"texts\":[\"{text}\"]}}");
+    let conn = if close { "Connection: close\r\n" } else { "" };
+    format!(
+        "POST /v1/embed HTTP/1.1\r\nHost: t\r\n{conn}Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Read exactly one HTTP response (head + Content-Length body) off a
+/// keep-alive stream. Panics (→ test failure) on a closed or stalled
+/// connection: a dropped response is exactly what the soak must catch.
+fn read_one_response(stream: &mut TcpStream, who: &str) -> (u16, String, Vec<u8>) {
+    let mut raw: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = raw.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let n = stream.read(&mut chunk).unwrap_or_else(|e| panic!("{who}: read error {e}"));
+        assert!(n > 0, "{who}: connection closed mid-response ({} bytes in)", raw.len());
+        raw.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(raw[..head_end].to_vec()).unwrap();
+    let clen: usize = head
+        .lines()
+        .find_map(|l| {
+            l.to_ascii_lowercase()
+                .strip_prefix("content-length:")
+                .map(|v| v.trim().parse().unwrap())
+        })
+        .unwrap_or_else(|| panic!("{who}: no Content-Length in {head:?}"));
+    let mut body = raw[head_end + 4..].to_vec();
+    while body.len() < clen {
+        let n = stream.read(&mut chunk).unwrap_or_else(|e| panic!("{who}: read error {e}"));
+        assert!(n > 0, "{who}: connection closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(clen);
+    let status: u16 = head.split_whitespace().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+    (status, head, body)
+}
+
+#[test]
+fn soak_many_keepalive_connections_few_workers_bit_identical_to_threaded() {
+    // FD budget: every connection costs two descriptors in this process
+    // (client + server side). Scale to the headroom the host grants.
+    let limit = raise_nofile_limit(4096);
+    let conns = (512usize).min(((limit.saturating_sub(256)) / 2) as usize);
+    assert!(conns >= 64, "fd limit {limit} leaves too little headroom to soak");
+    let rounds = 3usize;
+    // The decoupling under test: a handler pool ≥16× smaller than the
+    // connection count (8 workers at the full 512 conns = 64×).
+    let workers = (conns / 16).clamp(1, 8);
+
+    // Reference pass: the thread-per-connection server answers each
+    // distinct text sequentially; its bodies are the expected bytes.
+    let reference: HashMap<String, Vec<u8>> = {
+        let svc = start_service(4 * conns);
+        let server = Server::start_threaded("127.0.0.1:0", svc, Duration::from_secs(2)).unwrap();
+        let mut map = HashMap::new();
+        for c in 0..conns {
+            for r in 0..rounds {
+                let text = soak_text(c, r);
+                if map.contains_key(&text) {
+                    continue;
+                }
+                let mut s = TcpStream::connect(server.addr()).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+                s.write_all(&embed_request_bytes(&text, true)).unwrap();
+                let (status, _, body) = read_one_response(&mut s, "reference");
+                assert_eq!(status, 200, "reference {text:?}");
+                map.insert(text, body);
+            }
+        }
+        server.stop();
+        map
+    };
+
+    // The soak: every connection holds keep-alive for all its rounds.
+    let svc = start_service(4 * conns);
+    let opts = ServerOptions {
+        handler_workers: workers,
+        ..ServerOptions::new(Duration::from_secs(2))
+    };
+    let server = Server::start_with_options("127.0.0.1:0", svc, opts).unwrap();
+    let addr = server.addr();
+
+    let clients: Vec<_> = (0..conns)
+        .map(|c| {
+            std::thread::Builder::new()
+                .stack_size(128 * 1024)
+                .spawn(move || {
+                    // Stagger connects so the accept backlog never drops
+                    // a SYN burst of hundreds at once.
+                    std::thread::sleep(Duration::from_millis((c as u64 / 64) * 20));
+                    let mut s = TcpStream::connect(addr)
+                        .unwrap_or_else(|e| panic!("conn {c}: connect {e}"));
+                    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                    let mut out: Vec<(String, Vec<u8>)> = Vec::with_capacity(rounds);
+                    for r in 0..rounds {
+                        let text = soak_text(c, r);
+                        s.write_all(&embed_request_bytes(&text, false))
+                            .unwrap_or_else(|e| panic!("conn {c} round {r}: write {e}"));
+                        let (status, head, body) =
+                            read_one_response(&mut s, &format!("conn {c} round {r}"));
+                        assert_eq!(
+                            status, 200,
+                            "conn {c} round {r}: {}",
+                            String::from_utf8_lossy(&body)
+                        );
+                        assert!(
+                            head.to_ascii_lowercase().contains("connection: keep-alive"),
+                            "conn {c} round {r}: {head}"
+                        );
+                        out.push((text, body));
+                    }
+                    out
+                })
+                .unwrap()
+        })
+        .collect();
+
+    let mut served = 0usize;
+    for (c, h) in clients.into_iter().enumerate() {
+        for (text, body) in h.join().unwrap_or_else(|_| panic!("client {c} panicked")) {
+            let want = reference.get(&text).unwrap_or_else(|| panic!("no reference for {text:?}"));
+            assert_eq!(
+                &body, want,
+                "conn {c}: response for {text:?} differs from the threaded server"
+            );
+            served += 1;
+        }
+    }
+    assert_eq!(served, conns * rounds, "every request must be answered");
+    assert!(
+        conns >= 16 * workers,
+        "soak must hold ≥16× more connections ({conns}) than workers ({workers})"
+    );
+    server.stop();
+}
