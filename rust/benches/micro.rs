@@ -80,6 +80,43 @@ fn main() {
             std::hint::black_box(&out8);
         })
         .report();
+
+        // Product quantization: the scan reads 96 B (pq8) / 48 B (pq4)
+        // per row instead of 3072, scored by m table lookups against the
+        // per-panel ADC LUT (built once per panel — benched separately).
+        for bits in [4u8, 8] {
+            let Quant::Pq { m, .. } = Quant::pq(bits).resolved(DIM) else { unreachable!() };
+            let book = Arc::new(windve::vecstore::pq::Codebook::train(
+                &rows[..256 * DIM],
+                DIM,
+                m,
+                bits,
+                1,
+            ));
+            let mut codes = Vec::new();
+            for r in 0..ROWS {
+                book.encode_append(&rows[r * DIM..(r + 1) * DIM], &mut codes);
+            }
+            let lut = book.build_lut(&queries, NQ);
+            bench(&format!("SIMD panel 8q x 1024 rows [pq{bits}]"), || {
+                kernels::panel_scores_pq_into(
+                    lut.table(),
+                    NQ,
+                    &codes,
+                    ROWS,
+                    m,
+                    book.k(),
+                    bits,
+                    &mut out8,
+                );
+                std::hint::black_box(&out8);
+            })
+            .report();
+            bench(&format!("adc lut build 8q [pq{bits}]"), || {
+                std::hint::black_box(book.build_lut(&queries, NQ));
+            })
+            .report();
+        }
         let per_pair_scalar = scalar_scan.mean_ns / ROWS as f64;
         let per_pair_simd = simd_scan.mean_ns / ROWS as f64;
         let per_pair_panel = panel_scan.mean_ns / (NQ * ROWS) as f64;
@@ -125,6 +162,42 @@ fn main() {
             std::hint::black_box(qidx.search_batch_with_threads(&qrefs, 10, 1));
         })
         .report();
+    }
+
+    section("embedding cache (capacity 10k, steady-state evictions)");
+    {
+        use windve::coordinator::cache::EmbeddingCache;
+        const CAP: usize = 10_000;
+        let cache = EmbeddingCache::new(CAP);
+        let vec64 = vec![0.5f32; 64];
+        for k in 0..CAP as u64 {
+            cache.put(k, vec64.clone());
+        }
+        // Every put below evicts: this is the O(n)-scan hot spot the
+        // linked-list LRU replaced (the old eviction walked all 10k
+        // entries under the mutex per insert).
+        let mut next = CAP as u64;
+        bench("cache put (full @10k, evicting)", || {
+            cache.put(next, vec64.clone());
+            next += 1;
+        })
+        .report();
+        bench("cache get hit (@10k)", || {
+            std::hint::black_box(cache.get(next - 1));
+        })
+        .report();
+        bench("cache get miss (@10k)", || {
+            std::hint::black_box(cache.get(u64::MAX));
+        })
+        .report();
+        let s = cache.snapshot();
+        println!(
+            "{:<44} {} evictions, {} entries (cap {})",
+            "cache state after bench",
+            s.evictions,
+            s.entries,
+            s.capacity
+        );
     }
 
     section("queue manager (Algorithm 1)");

@@ -7,13 +7,15 @@
 //! * per-query `search` (the seed serving pattern),
 //! * `search_batch` sequential (panel kernel, one thread),
 //! * `search_batch` sharded (panel kernel + scoped-thread scan),
-//! for FlatIndex, then the same batched scan over f16/int8 arenas
-//! ([`QuantizedFlatIndex`]), plus the IvfIndex probe path per codec.
+//! for FlatIndex, then the same batched scan over f16/int8/pq8/pq4
+//! arenas ([`QuantizedFlatIndex`]), plus the IvfIndex probe path per
+//! codec and the per-panel ADC lookup-table build cost the PQ scans
+//! amortize.
 //!
 //! Env knobs: `WINDVE_BENCH_ROWS` (default 16384), `WINDVE_BENCH_BATCH`
 //! (default 32), `WINDVE_BENCH_MS` (per-case target, default 2000),
 //! `WINDVE_SIMD=scalar` for a forced-scalar baseline run, `WINDVE_QUANT`
-//! to pin one codec (default: all three), and `WINDVE_BENCH_JSON=<path>`
+//! to pin one codec (default: every codec), and `WINDVE_BENCH_JSON=<path>`
 //! to write the machine-readable record set CI uploads as an artifact.
 //! The server-concurrency rows honor `WINDVE_BENCH_CONNS` (default 64)
 //! and `WINDVE_BENCH_REQS` (keep-alive requests per conn, default 100).
@@ -155,6 +157,27 @@ fn main() {
             q_seq / batched_seq,
             q_par / batched_par
         );
+    }
+
+    section("pq adc lookup-table build (amortized once per query panel)");
+    for &quant in &modes {
+        let Quant::Pq { m, bits } = quant.resolved(DIM) else { continue };
+        // Train on the staging prefix, exactly as the arena would.
+        let train_rows = rows.min(256);
+        let mut corpus = Vec::with_capacity(train_rows * DIM);
+        for i in 0..train_rows {
+            corpus.extend_from_slice(flat.vector(i));
+        }
+        let book = Arc::new(windve::vecstore::pq::Codebook::train(&corpus, DIM, m, bits, 1));
+        let mut qbuf = Vec::with_capacity(batch * DIM);
+        for q in &queries {
+            qbuf.extend_from_slice(q);
+        }
+        // Reported per query: the k×m table of sub-space dots each query
+        // pays once per panel, regardless of corpus size.
+        h.qps(&format!("adc lut build [{}]", quant.name()), quant, batch, || {
+            std::hint::black_box(book.build_lut(&qbuf, batch));
+        });
     }
 
     section("ivf (nlist 64, nprobe 8) retrieval throughput");

@@ -10,29 +10,99 @@
 //! Keyed by the FNV-1a hash of the *token stream* (not raw text), so
 //! "Hello, World" and "hello world" share an entry exactly when they
 //! embed identically.
+//!
+//! Recency is an intrusive doubly-linked list threaded through a slab of
+//! nodes (`prev`/`next` are slab indices, not pointers), so `get`, `put`,
+//! and eviction are all O(1) under the mutex. The previous implementation
+//! scanned every entry for the minimum access tick on each eviction —
+//! O(n) work holding the hot-path lock, which at production capacities
+//! turned the cache from a latency shield into a latency source once it
+//! filled. Misses leave recency untouched: only hits and inserts reorder
+//! the list, so a flood of unique (uncacheable) queries cannot reshuffle
+//! which resident entry is considered least recent.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::runtime::tokenizer;
 
+/// Slab index sentinel for "no node".
+const NIL: usize = usize::MAX;
+
 /// Thread-safe LRU embedding cache.
 pub struct EmbeddingCache {
     inner: Mutex<Lru>,
 }
 
+/// Point-in-time counter snapshot (see [`EmbeddingCache::snapshot`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub hit_rate: f64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
 struct Lru {
     capacity: usize,
-    map: HashMap<u64, Node>,
-    /// Monotone access clock (usize ticks; eviction = smallest tick).
-    clock: u64,
+    /// key → slab slot.
+    map: HashMap<u64, usize>,
+    slots: Vec<Node>,
+    /// Recycled slab slots (evicted entries).
+    free: Vec<usize>,
+    /// Most recently used slot (NIL when empty).
+    head: usize,
+    /// Least recently used slot (NIL when empty) — the eviction victim.
+    tail: usize,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 struct Node {
+    key: u64,
     vector: Vec<f32>,
-    last_used: u64,
+    prev: usize,
+    next: usize,
+}
+
+impl Lru {
+    /// Detach slot `i` from the recency list (it stays in the slab).
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+    }
+
+    /// Attach slot `i` at the most-recently-used end.
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn touch(&mut self, i: usize) {
+        if self.head != i {
+            self.unlink(i);
+            self.push_front(i);
+        }
+    }
 }
 
 impl EmbeddingCache {
@@ -41,9 +111,13 @@ impl EmbeddingCache {
             inner: Mutex::new(Lru {
                 capacity,
                 map: HashMap::new(),
-                clock: 0,
+                slots: Vec::new(),
+                free: Vec::new(),
+                head: NIL,
+                tail: NIL,
                 hits: 0,
                 misses: 0,
+                evictions: 0,
             }),
         }
     }
@@ -60,14 +134,11 @@ impl EmbeddingCache {
 
     pub fn get(&self, key: u64) -> Option<Vec<f32>> {
         let mut lru = self.inner.lock().unwrap();
-        lru.clock += 1;
-        let clock = lru.clock;
-        match lru.map.get_mut(&key) {
-            Some(node) => {
-                node.last_used = clock;
-                let v = node.vector.clone();
+        match lru.map.get(&key).copied() {
+            Some(i) => {
+                lru.touch(i);
                 lru.hits += 1;
-                Some(v)
+                Some(lru.slots[i].vector.clone())
             }
             None => {
                 lru.misses += 1;
@@ -81,15 +152,36 @@ impl EmbeddingCache {
         if lru.capacity == 0 {
             return;
         }
-        lru.clock += 1;
-        let clock = lru.clock;
-        if lru.map.len() >= lru.capacity && !lru.map.contains_key(&key) {
-            // Evict the least recently used entry.
-            if let Some((&victim, _)) = lru.map.iter().min_by_key(|(_, n)| n.last_used) {
-                lru.map.remove(&victim);
-            }
+        if let Some(i) = lru.map.get(&key).copied() {
+            // Refresh in place: a re-put is a use.
+            lru.slots[i].vector = vector;
+            lru.touch(i);
+            return;
         }
-        lru.map.insert(key, Node { vector, last_used: clock });
+        if lru.map.len() >= lru.capacity {
+            // Evict the least recently used entry; its slot is recycled
+            // for the insert below, so the slab never outgrows capacity.
+            let victim = lru.tail;
+            debug_assert_ne!(victim, NIL, "full cache has a tail");
+            lru.unlink(victim);
+            let vkey = lru.slots[victim].key;
+            lru.map.remove(&vkey);
+            lru.slots[victim].vector = Vec::new();
+            lru.free.push(victim);
+            lru.evictions += 1;
+        }
+        let i = match lru.free.pop() {
+            Some(i) => {
+                lru.slots[i] = Node { key, vector, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                lru.slots.push(Node { key, vector, prev: NIL, next: NIL });
+                lru.slots.len() - 1
+            }
+        };
+        lru.map.insert(key, i);
+        lru.push_front(i);
     }
 
     pub fn len(&self) -> usize {
@@ -102,10 +194,35 @@ impl EmbeddingCache {
 
     /// (hits, misses, hit-rate).
     pub fn stats(&self) -> (u64, u64, f64) {
+        let s = self.snapshot();
+        (s.hits, s.misses, s.hit_rate)
+    }
+
+    /// Consistent point-in-time snapshot of every counter: taken under
+    /// the one mutex, so `hits + misses` always equals the number of
+    /// completed `get` calls, however many threads are hammering the
+    /// cache.
+    pub fn snapshot(&self) -> CacheStats {
         let lru = self.inner.lock().unwrap();
         let total = lru.hits + lru.misses;
-        let rate = if total == 0 { 0.0 } else { lru.hits as f64 / total as f64 };
-        (lru.hits, lru.misses, rate)
+        CacheStats {
+            hits: lru.hits,
+            misses: lru.misses,
+            hit_rate: if total == 0 { 0.0 } else { lru.hits as f64 / total as f64 },
+            evictions: lru.evictions,
+            entries: lru.map.len(),
+            capacity: lru.capacity,
+        }
+    }
+
+    /// Zero the hit/miss/eviction counters, leaving the cached entries
+    /// (and their recency order) untouched — windowed hit-rate probes
+    /// must not have to dump the cache to reset their denominator.
+    pub fn reset_stats(&self) {
+        let mut lru = self.inner.lock().unwrap();
+        lru.hits = 0;
+        lru.misses = 0;
+        lru.evictions = 0;
     }
 }
 
@@ -145,6 +262,40 @@ mod tests {
         assert!(c.get(1).is_some());
         assert!(c.get(3).is_some());
         assert_eq!(c.len(), 2);
+        assert_eq!(c.snapshot().evictions, 1);
+    }
+
+    /// Regression for the old clock-based eviction: a miss must not count
+    /// as "recency activity". Here key 1 is the most recently *hit* entry
+    /// even though thousands of misses happen after key 2's insert — the
+    /// eviction victim must still be 2.
+    #[test]
+    fn misses_do_not_perturb_recency() {
+        let c = EmbeddingCache::new(2);
+        c.put(1, vec![1.0]);
+        c.put(2, vec![2.0]);
+        assert!(c.get(1).is_some());
+        for probe in 100..1100u64 {
+            assert!(c.get(probe).is_none());
+        }
+        c.put(3, vec![3.0]);
+        assert!(c.get(2).is_none(), "2 was least recently used");
+        assert!(c.get(1).is_some(), "1 was touched after 2");
+    }
+
+    /// Re-putting an existing key refreshes both value and recency
+    /// without consuming a slot or inflating the eviction count.
+    #[test]
+    fn reput_refreshes_in_place() {
+        let c = EmbeddingCache::new(2);
+        c.put(1, vec![1.0]);
+        c.put(2, vec![2.0]);
+        c.put(1, vec![1.5]); // 2 is now LRU
+        c.put(3, vec![3.0]);
+        assert_eq!(c.get(1), Some(vec![1.5]));
+        assert!(c.get(2).is_none());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.snapshot().evictions, 1);
     }
 
     #[test]
@@ -155,15 +306,35 @@ mod tests {
     }
 
     #[test]
+    fn reset_stats_keeps_entries() {
+        let c = EmbeddingCache::new(4);
+        c.put(1, vec![1.0]);
+        assert!(c.get(1).is_some());
+        assert!(c.get(9).is_none());
+        c.reset_stats();
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses, s.evictions), (0, 0, 0));
+        assert_eq!(s.entries, 1, "reset must not drop entries");
+        assert_eq!(c.get(1), Some(vec![1.0]));
+    }
+
+    /// Under concurrent load every `get` settles as exactly one hit or
+    /// one miss, and the eviction count matches inserts minus residents —
+    /// the counters are taken under the same lock as the mutation, so a
+    /// snapshot can never observe a torn intermediate state.
+    #[test]
     fn concurrent_access_consistent() {
         use std::sync::Arc;
         let c = Arc::new(EmbeddingCache::new(64));
+        let gets = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let handles: Vec<_> = (0..4)
             .map(|t| {
                 let c = Arc::clone(&c);
+                let gets = Arc::clone(&gets);
                 std::thread::spawn(move || {
                     for i in 0..200u64 {
                         let k = i % 32;
+                        gets.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         if let Some(v) = c.get(k) {
                             assert_eq!(v[0] as u64, k, "thread {t} read torn value");
                         } else {
@@ -177,5 +348,14 @@ mod tests {
             h.join().unwrap();
         }
         assert!(c.len() <= 64);
+        let s = c.snapshot();
+        assert_eq!(
+            s.hits + s.misses,
+            gets.load(std::sync::atomic::Ordering::Relaxed),
+            "every get is exactly one hit or one miss"
+        );
+        // 32 distinct keys under capacity 64: nothing ever evicts.
+        assert_eq!(s.evictions, 0);
+        assert_eq!(s.capacity, 64);
     }
 }

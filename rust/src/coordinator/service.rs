@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{DeviceQueue, Pending};
-use super::cache::EmbeddingCache;
+use super::cache::{CacheStats, EmbeddingCache};
 use super::instance::{spawn_worker, BackendFactory, Reply};
 use super::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
@@ -548,6 +548,13 @@ impl WindVE {
         &self.ingest_stats
     }
 
+    /// Embedding-cache counters for observability endpoints (`None` when
+    /// caching is disabled). One consistent snapshot per call — see
+    /// [`EmbeddingCache::snapshot`].
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.snapshot())
+    }
+
     /// Cache handle (cache + key) for `text`, if caching is enabled.
     fn cache_entry(&self, text: &str) -> Option<(Arc<EmbeddingCache>, u64)> {
         self.cache.as_ref().map(|c| {
@@ -767,7 +774,7 @@ impl WindVE {
                 self.metrics
                     .counter("service.retrievals")
                     .add(panel_idx.len() as u64);
-                // Per-codec counter: which arena (f32/f16/int8) absorbed
+                // Per-codec counter: which arena (f32/f16/int8/pq) absorbed
                 // the scan — the capacity dial the quantized path exists
                 // for. Static names: no per-batch allocation on the
                 // serving path.
@@ -775,6 +782,8 @@ impl WindVE {
                     Quant::F32 => "service.retrievals_f32",
                     Quant::F16 => "service.retrievals_f16",
                     Quant::Int8 => "service.retrievals_int8",
+                    Quant::Pq { bits: 4, .. } => "service.retrievals_pq4",
+                    Quant::Pq { .. } => "service.retrievals_pq8",
                 };
                 self.metrics.counter(codec_counter).add(panel_idx.len() as u64);
                 lists

@@ -458,9 +458,10 @@ mod tests {
 
     #[test]
     fn retrieval_executor_quantized_flat() {
-        for quant in [Quant::F16, Quant::Int8] {
+        for quant in [Quant::F16, Quant::Int8, Quant::pq(4), Quant::pq(8)] {
             let ex = RetrievalExecutor::flat_quant(4, quant);
-            assert_eq!(ex.quant(), quant);
+            // PQ placeholders (m = 0) resolve at construction.
+            assert_eq!(ex.quant(), quant.resolved(4));
             for i in 0..16u64 {
                 let a = (i as f32) * 0.3;
                 ex.add(i, &[a.cos(), a.sin(), 0.0, 0.0]);
@@ -477,7 +478,15 @@ mod tests {
     #[test]
     fn scan_cost_tracks_codec_bytes_per_row() {
         let dim = 16;
-        for (quant, bpr) in [(Quant::F32, 64), (Quant::F16, 32), (Quant::Int8, 20)] {
+        // PQ at dim 16 packs m = 2 sub-spaces: 1 byte/row at 4 bits,
+        // 2 at 8 — the admission model's reward for the codec ladder.
+        for (quant, bpr) in [
+            (Quant::F32, 64),
+            (Quant::F16, 32),
+            (Quant::Int8, 20),
+            (Quant::pq(4), 1),
+            (Quant::pq(8), 2),
+        ] {
             let ex = RetrievalExecutor::flat_quant(dim, quant);
             assert_eq!(ex.scan_bytes_estimate(), 0);
             // An empty index still costs one slot per scan.
@@ -625,6 +634,52 @@ mod tests {
         // Compacting a clean index is version-free.
         assert_eq!(ex.compact(), 0);
         assert_eq!(ex.version(), v2 + 1);
+    }
+
+    /// Satellite regression (incremental encode): a corpus version bump
+    /// must never re-encode rows it did not touch. Upserts tombstone +
+    /// append and batch adds encode only the new rows, so every
+    /// pre-existing row's stored bytes stay bit-identical — under int8
+    /// (per-row scales) and under trained PQ (packed codes against the
+    /// frozen codebook). A whole-arena re-encode would be O(n) work per
+    /// ingest commit *and*, for PQ, a chance to retrain the codebook and
+    /// silently shift every stored code.
+    #[test]
+    fn ingest_bump_keeps_untouched_row_bytes_bit_identical() {
+        use crate::util::rng::Pcg;
+        let dim = 16;
+        for quant in [Quant::Int8, Quant::pq(4), Quant::pq(8)] {
+            let mut rng = Pcg::new(57);
+            let mut idx = QuantizedFlatIndex::new(dim, quant);
+            // 300 rows: past the PQ staging threshold, so the arena is
+            // trained and storing packed codes.
+            let vs: Vec<Vec<f32>> = (0..300)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+            for (i, v) in vs.iter().enumerate() {
+                idx.add(i as u64, v);
+            }
+            let before: Vec<Vec<u8>> =
+                (0..300).map(|r| idx.arena.row_bytes(r, dim)).collect();
+            // An upsert (the executor's `upsert_batch` per-row call):
+            // tombstone + append, touching exactly one logical row.
+            let fresh: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            idx.upsert(7, &fresh);
+            // A batch append (the executor's `add_batch` under one guard).
+            let late: Vec<(u64, Vec<f32>)> = (300..308u64)
+                .map(|i| (i, (0..dim).map(|_| rng.normal() as f32).collect()))
+                .collect();
+            let refs: Vec<(u64, &[f32])> =
+                late.iter().map(|(i, v)| (*i, v.as_slice())).collect();
+            idx.add_batch(&refs);
+            for (r, want) in before.iter().enumerate() {
+                assert_eq!(
+                    &idx.arena.row_bytes(r, dim),
+                    want,
+                    "{quant:?}: row {r} re-encoded by an ingest that never touched it"
+                );
+            }
+        }
     }
 
     #[test]

@@ -449,6 +449,19 @@ fn stats_response(svc: &WindVE) -> Response {
         ("retrieval_poisoned_recoveries", Json::num(poisoned as f64)),
         ("bad_releases", Json::num(stats.bad_releases as f64)),
     ];
+    if let Some(c) = svc.cache_stats() {
+        fields.push((
+            "cache",
+            Json::obj(vec![
+                ("cache_hits", Json::num(c.hits as f64)),
+                ("cache_misses", Json::num(c.misses as f64)),
+                ("cache_hit_rate", Json::num(c.hit_rate)),
+                ("cache_evictions", Json::num(c.evictions as f64)),
+                ("cache_entries", Json::num(c.entries as f64)),
+                ("cache_capacity", Json::num(c.capacity as f64)),
+            ]),
+        ));
+    }
     if let Some(store) = svc.durability() {
         let d = store.stats();
         fields.push((

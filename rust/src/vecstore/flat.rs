@@ -27,7 +27,7 @@ pub struct FlatIndex {
     pub(crate) dead: SkipMask,
     /// NUMA plan ([`Index::set_numa`]): when set (and multi-node),
     /// batched scans shard along node bands with pinned threads.
-    numa: Option<Topology>,
+    pub(crate) numa: Option<Topology>,
 }
 
 impl FlatIndex {

@@ -6,7 +6,9 @@
 //! Inverted lists are contiguous row-major [`RowArena`]s (one per cell),
 //! so probed lists are scanned block-by-block through the same panel
 //! kernels as the flat index — and, via [`IvfIndex::with_quant`], can be
-//! stored f16 or int8 for 2-4× less probe bandwidth. Build-time
+//! stored f16, int8, or product-quantized (pq8/pq4, scanned via an ADC
+//! lookup table built once per query) for 2× to 64× less probe
+//! bandwidth. Build-time
 //! assignment is quantization-aware: rows are bucketed by scoring their
 //! *stored* representation against the centroids (see
 //! [`super::kmeans::assign_arena`]), so the cell geometry matches what
@@ -20,7 +22,7 @@
 
 use super::kmeans;
 use super::mask::SkipMask;
-use super::quant::{Quant, RowArena};
+use super::quant::{PanelCtx, Quant, RowArena};
 use super::{dot, kernels, Hit, Index, TopK};
 
 /// Don't spin up probe threads for less scan work than this many rows.
@@ -91,7 +93,9 @@ impl IvfIndex {
             dim,
             nlist,
             nprobe: nprobe.min(nlist),
-            quant,
+            // Resolve `m = 0` PQ placeholders now so `quant()` and the
+            // snapshot header always carry the concrete layout.
+            quant: quant.resolved(dim),
             pending: Vec::new(),
             centroids: Vec::new(),
             lists: Vec::new(),
@@ -184,12 +188,21 @@ impl IvfIndex {
         for (_, v) in &self.pending {
             corpus.push(v);
         }
+        // PQ lists must be trained before bucketing so assignment scores
+        // the codes search will actually scan. Below the staging
+        // threshold this trains on the full corpus under the build seed;
+        // above it the arena already auto-trained (fixed seed) and this
+        // is a no-op — either way the outcome is deterministic per
+        // (corpus, seed). Non-PQ codecs ignore the call.
+        corpus.pq_train(self.dim, seed);
         let mut assign = vec![0usize; n];
         kmeans::assign_arena(&corpus, self.dim, &self.centroids, &mut assign);
         self.lists = (0..k)
             .map(|_| InvList {
                 ids: Vec::new(),
-                arena: RowArena::new(self.quant),
+                // `new_like` shares the corpus arena's trained PQ
+                // codebook, so the per-row copies below stay byte moves.
+                arena: RowArena::new_like(&corpus),
                 dead: SkipMask::new(),
             })
             .collect();
@@ -233,16 +246,28 @@ impl IvfIndex {
         cell_scores
     }
 
+    /// One panel context per probed query: under PQ this builds the ADC
+    /// lookup table once, amortized over every list the query probes
+    /// (all list arenas share the corpus codebook, so a context built
+    /// from any one of them is valid for all). Other codecs get a no-op
+    /// context.
+    fn query_ctx(&self, query: &[f32]) -> PanelCtx {
+        match self.lists.first() {
+            Some(l) => l.arena.begin_panel(query, 1, self.dim),
+            None => PanelCtx::none(),
+        }
+    }
+
     /// Scan one inverted list for one query, block by block through the
     /// arena's (possibly quantized) panel kernel.
-    fn scan_list(&self, query: &[f32], probe: &Probe, tk: &mut TopK) {
+    fn scan_list(&self, ctx: &PanelCtx, query: &[f32], probe: &Probe, tk: &mut TopK) {
         let list = &self.lists[probe.cell];
         let n = list.ids.len();
         let mut scores = [0.0f32; LIST_SCAN_BLOCK];
         let mut r0 = 0;
         while r0 < n {
             let r1 = (r0 + LIST_SCAN_BLOCK).min(n);
-            list.arena.panel_scores_into(query, 1, r0, r1, self.dim, &mut scores[..r1 - r0]);
+            list.arena.panel_scores_ctx_into(ctx, query, 1, r0, r1, self.dim, &mut scores[..r1 - r0]);
             for r in r0..r1 {
                 // Tombstone skip (see `FlatIndex::scan_rows`): the row is
                 // scored but never pushed, so seq numbering — and with it
@@ -310,10 +335,11 @@ impl Index for IvfIndex {
         }
         // Rank cells by centroid similarity, probe the top nprobe. The
         // cumulative seq numbering matches the batched path exactly.
+        let ctx = self.query_ctx(query);
         let mut seq_base = 0u64;
         for &(c, _) in self.ranked_cells(query).iter().take(self.nprobe) {
             let probe = Probe { qi: 0, cell: c, seq_base };
-            self.scan_list(query, &probe, &mut tk);
+            self.scan_list(&ctx, query, &probe, &mut tk);
             seq_base += self.lists[c].ids.len() as u64;
         }
         tk.into_vec()
@@ -362,10 +388,14 @@ impl Index for IvfIndex {
             avail.min(probes.len()).max(1)
         };
 
+        // One ADC table per query, shared across all its probed lists
+        // (and across threads — contexts are read-only during the scan).
+        let ctxs: Vec<PanelCtx> = queries.iter().map(|q| self.query_ctx(q)).collect();
+
         if threads == 1 {
             let mut finals: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
             for p in &probes {
-                self.scan_list(queries[p.qi], p, &mut finals[p.qi]);
+                self.scan_list(&ctxs[p.qi], queries[p.qi], p, &mut finals[p.qi]);
             }
             return finals.into_iter().map(TopK::into_vec).collect();
         }
@@ -376,7 +406,7 @@ impl Index for IvfIndex {
             let mut i = t;
             while i < probes.len() {
                 let p = &probes[i];
-                self.scan_list(queries[p.qi], p, &mut tks[p.qi]);
+                self.scan_list(&ctxs[p.qi], queries[p.qi], p, &mut tks[p.qi]);
                 i += threads;
             }
         });
@@ -426,7 +456,9 @@ impl Index for IvfIndex {
             }
             reclaimed += dead;
             let mut ids = Vec::with_capacity(list.ids.len() - dead);
-            let mut arena = RowArena::new(list.arena.quant());
+            // `new_like` keeps any trained PQ codebook so survivor rows
+            // copy byte-for-byte instead of round-tripping through f32.
+            let mut arena = RowArena::new_like(&list.arena);
             for row in 0..list.ids.len() {
                 if !list.dead.is_dead(row) {
                     ids.push(list.ids[row]);
@@ -777,6 +809,41 @@ mod tests {
         let want: Vec<u64> = flat.search(q, 5).into_iter().map(|h| h.id).collect();
         let got: Vec<u64> = a.search(q, 5).into_iter().map(|h| h.id).collect();
         assert_eq!(got, want);
+    }
+
+    /// PQ lists: build trains the codebook on the full corpus (below the
+    /// staging threshold, under the build seed), batch search is
+    /// bit-identical to per-query search, and post-build adds encode
+    /// against the frozen codebook and stay searchable.
+    #[test]
+    fn pq_lists_batch_matches_single_and_accept_adds() {
+        let vs = corpus(300, 24, 61);
+        for quant in [Quant::pq(4), Quant::pq(8)] {
+            let mut ivf = IvfIndex::with_quant(24, 8, 3, quant);
+            for (i, v) in vs.iter().enumerate() {
+                ivf.add(i as u64, v);
+            }
+            ivf.build(17);
+            assert_eq!(ivf.quant(), quant.resolved(24));
+            assert_eq!(ivf.list_sizes().iter().sum::<usize>(), 300);
+            let mut rng = Pcg::new(63);
+            let queries: Vec<Vec<f32>> = (0..6).map(|_| unit(&mut rng, 24)).collect();
+            let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+            let batch = ivf.search_batch(&qrefs, 5);
+            for (q, got) in queries.iter().zip(&batch) {
+                assert_eq!(got, &ivf.search(q, 5), "{quant:?}");
+            }
+            // Post-build add encodes against the frozen book.
+            let late = vs[0].clone();
+            ivf.add(999, &late);
+            let hits = ivf.search(&late, 2);
+            assert!(hits.iter().any(|h| h.id == 999), "{quant:?}");
+            // Tombstone + compact keeps survivors byte-identical.
+            ivf.remove(7);
+            let before = ivf.search(&queries[0], 5);
+            ivf.compact();
+            assert_eq!(ivf.search(&queries[0], 5), before, "{quant:?}");
+        }
     }
 
     #[test]

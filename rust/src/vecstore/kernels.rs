@@ -276,6 +276,96 @@ pub fn panel_scores_i8_into(
     }
 }
 
+/// Product-quantized (ADC) twin of [`panel_scores_into`]: rows are
+/// packed code indices (`bits` ∈ {4, 8}, see `pq`), scored by `m` table
+/// lookups per (query, row) into the per-panel LUT built by
+/// `pq::Codebook::build_lut` — row-major `[nq][m][kc]` with
+/// `lut[q][s][c] = query_q_sub_s · center_c`. No multiplies touch the
+/// arena at all: the scan streams `(m·bits)/8` bytes per row and adds
+/// `m` table entries. Per (query, row) pair every variant sums
+/// sub-spaces in the same fixed order, so batching queries stays
+/// bit-identical to single-query scans under one dispatched variant.
+pub fn panel_scores_pq_into(
+    lut: &[f32],
+    nq: usize,
+    codes: &[u8],
+    nrows: usize,
+    m: usize,
+    kc: usize,
+    bits: u8,
+    out: &mut [f32],
+) {
+    assert!(matches!(bits, 4 | 8), "pq bits must be 4 or 8");
+    assert_eq!(kc, 1usize << bits, "pq table width mismatch");
+    let packed = (m * bits as usize).div_ceil(8);
+    assert_eq!(lut.len(), nq * m * kc, "pq lut shape mismatch");
+    assert_eq!(codes.len(), nrows * packed, "pq code tile shape mismatch");
+    assert_eq!(out.len(), nq * nrows, "score buffer shape mismatch");
+    if nq == 0 || nrows == 0 {
+        return;
+    }
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2Fma => unsafe { avx2::panel_pq(lut, nq, codes, nrows, m, kc, bits, out) },
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon => unsafe { neon::panel_pq(lut, nq, codes, nrows, m, kc, bits, out) },
+        _ => panel_pq_scalar(lut, nq, codes, nrows, m, kc, bits, out),
+    }
+}
+
+/// Code index of sub-space `s` in a packed row (low nibble = even
+/// sub-space for 4-bit codes).
+#[inline(always)]
+fn pq_code(row: &[u8], s: usize, bits: u8) -> usize {
+    if bits == 8 {
+        row[s] as usize
+    } else {
+        ((row[s >> 1] >> ((s & 1) * 4)) & 0xF) as usize
+    }
+}
+
+/// Scalar ADC row sum: [`dot_scalar`]'s 4-accumulator shape over table
+/// lookups instead of multiplies.
+#[inline]
+fn dot_pq_scalar(lq: &[f32], row: &[u8], m: usize, kc: usize, bits: u8) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = m / 4;
+    for i in 0..chunks {
+        let s = i * 4;
+        acc[0] += lq[s * kc + pq_code(row, s, bits)];
+        acc[1] += lq[(s + 1) * kc + pq_code(row, s + 1, bits)];
+        acc[2] += lq[(s + 2) * kc + pq_code(row, s + 2, bits)];
+        acc[3] += lq[(s + 3) * kc + pq_code(row, s + 3, bits)];
+    }
+    let mut sum = acc[0] + acc[1] + acc[2] + acc[3];
+    for s in chunks * 4..m {
+        sum += lq[s * kc + pq_code(row, s, bits)];
+    }
+    sum
+}
+
+/// Scalar PQ panel: same per-pair math as [`dot_pq_scalar`].
+#[allow(clippy::too_many_arguments)]
+pub fn panel_pq_scalar(
+    lut: &[f32],
+    nq: usize,
+    codes: &[u8],
+    nrows: usize,
+    m: usize,
+    kc: usize,
+    bits: u8,
+    out: &mut [f32],
+) {
+    let packed = (m * bits as usize).div_ceil(8);
+    for q in 0..nq {
+        let lq = &lut[q * m * kc..(q + 1) * m * kc];
+        for r in 0..nrows {
+            out[q * nrows + r] =
+                dot_pq_scalar(lq, &codes[r * packed..(r + 1) * packed], m, kc, bits);
+        }
+    }
+}
+
 /// F16C (`vcvtph2ps`) is a separate CPUID bit from AVX2 — probe it before
 /// taking the in-register f16 decode path. `is_x86_feature_detected!`
 /// caches the CPUID result process-wide, so this is one relaxed load.
@@ -559,6 +649,55 @@ mod avx2 {
             q0 += pw;
         }
     }
+
+    /// PQ/ADC panel: decode 8 packed codes, turn them into absolute LUT
+    /// offsets (`s · kc + code`) and fetch all 8 table entries with one
+    /// `vgatherdps`, accumulating 8 sub-spaces per add. Ascending
+    /// sub-space order + horizontal sum + scalar tail per (query, row),
+    /// independent of the panel shape — the batch==single guarantee.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support; slice shapes are checked
+    /// by the dispatching wrapper.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn panel_pq(
+        lut: &[f32],
+        nq: usize,
+        codes: &[u8],
+        nrows: usize,
+        m: usize,
+        kc: usize,
+        bits: u8,
+        out: &mut [f32],
+    ) {
+        let packed = (m * bits as usize).div_ceil(8);
+        let chunks = m / 8;
+        for q in 0..nq {
+            let lq = &lut[q * m * kc..(q + 1) * m * kc];
+            let plq = lq.as_ptr();
+            for r in 0..nrows {
+                let row = &codes[r * packed..(r + 1) * packed];
+                let mut acc = _mm256_setzero_ps();
+                let mut idx = [0i32; 8];
+                for c in 0..chunks {
+                    let s0 = c * 8;
+                    for l in 0..8 {
+                        let s = s0 + l;
+                        idx[l] = (s * kc + super::pq_code(row, s, bits)) as i32;
+                    }
+                    let vindex = _mm256_loadu_si256(idx.as_ptr() as *const __m256i);
+                    acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(plq, vindex));
+                }
+                let mut sum = hsum(acc);
+                for s in chunks * 8..m {
+                    sum += lq[s * kc + super::pq_code(row, s, bits)];
+                }
+                out[q * nrows + r] = sum;
+            }
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -726,6 +865,52 @@ mod neon {
                 }
             }
             q0 += pw;
+        }
+    }
+
+    /// PQ/ADC panel: aarch64 has no gather, so 4 looked-up table entries
+    /// are staged through a stack buffer per chunk and added with one
+    /// `vaddq_f32`. Ascending sub-space order + horizontal sum + scalar
+    /// tail per (query, row), independent of the panel shape.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support; slice shapes are checked
+    /// by the dispatching wrapper.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn panel_pq(
+        lut: &[f32],
+        nq: usize,
+        codes: &[u8],
+        nrows: usize,
+        m: usize,
+        kc: usize,
+        bits: u8,
+        out: &mut [f32],
+    ) {
+        let packed = (m * bits as usize).div_ceil(8);
+        let chunks = m / 4;
+        for q in 0..nq {
+            let lq = &lut[q * m * kc..(q + 1) * m * kc];
+            for r in 0..nrows {
+                let row = &codes[r * packed..(r + 1) * packed];
+                let mut acc = vdupq_n_f32(0.0);
+                for c in 0..chunks {
+                    let s = c * 4;
+                    let buf = [
+                        lq[s * kc + super::pq_code(row, s, bits)],
+                        lq[(s + 1) * kc + super::pq_code(row, s + 1, bits)],
+                        lq[(s + 2) * kc + super::pq_code(row, s + 2, bits)],
+                        lq[(s + 3) * kc + super::pq_code(row, s + 3, bits)],
+                    ];
+                    acc = vaddq_f32(acc, vld1q_f32(buf.as_ptr()));
+                }
+                let mut sum = vaddvq_f32(acc);
+                for s in chunks * 4..m {
+                    sum += lq[s * kc + super::pq_code(row, s, bits)];
+                }
+                out[q * nrows + r] = sum;
+            }
         }
     }
 }
@@ -897,6 +1082,75 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pq_panel_matches_scalar_twin_and_is_batch_invariant() {
+        let mut rng = Pcg::new(8);
+        // (nq, nrows, m): odd m exercises the trailing nibble + tail.
+        for (nq, nrows, m) in [(1, 1, 4), (3, 5, 7), (5, 9, 96), (9, 2, 1), (4, 7, 12)] {
+            for bits in [4u8, 8] {
+                let kc = 1usize << bits;
+                let packed = (m * bits as usize).div_ceil(8);
+                let lut = randvec(&mut rng, nq * m * kc);
+                let codes: Vec<u8> = (0..nrows * packed).map(|_| rng.usize(0, 256) as u8).collect();
+                let mut fast = vec![0.0f32; nq * nrows];
+                let mut slow = vec![0.0f32; nq * nrows];
+                panel_scores_pq_into(&lut, nq, &codes, nrows, m, kc, bits, &mut fast);
+                panel_pq_scalar(&lut, nq, &codes, nrows, m, kc, bits, &mut slow);
+                for (q, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                    assert!(
+                        (f - s).abs() <= 1e-4 * (1.0 + s.abs()),
+                        "m={m} bits={bits} pair {q}: {f} vs {s}"
+                    );
+                }
+                for q in 0..nq {
+                    let mut one = vec![0.0f32; nrows];
+                    panel_scores_pq_into(
+                        &lut[q * m * kc..(q + 1) * m * kc],
+                        1,
+                        &codes,
+                        nrows,
+                        m,
+                        kc,
+                        bits,
+                        &mut one,
+                    );
+                    for r in 0..nrows {
+                        assert_eq!(
+                            one[r].to_bits(),
+                            fast[q * nrows + r].to_bits(),
+                            "m={m} bits={bits} pair ({q},{r})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pq_scalar_sums_the_looked_up_entries() {
+        // m=3, bits=4, kc=16: hand-checkable — row codes [1, 2, 3].
+        let m = 3;
+        let kc = 16;
+        let mut lut = vec![0.0f32; m * kc];
+        lut[1] = 0.5; // s=0, code 1
+        lut[kc + 2] = 1.25; // s=1, code 2
+        lut[2 * kc + 3] = -2.0; // s=2, code 3
+        let codes = [0x21u8, 0x03]; // low nibble first: 1, 2, then 3
+        let mut out = [0.0f32; 1];
+        panel_pq_scalar(&lut, 1, &codes, 1, m, kc, 4, &mut out);
+        assert_eq!(out[0], 0.5 + 1.25 - 2.0);
+        let mut out2 = [0.0f32; 1];
+        panel_scores_pq_into(&lut, 1, &codes, 1, m, kc, 4, &mut out2);
+        assert!((out2[0] - out[0]).abs() <= 1e-6);
+    }
+
+    #[test]
+    fn empty_pq_panel_is_noop() {
+        let mut out: Vec<f32> = Vec::new();
+        panel_scores_pq_into(&[], 0, &[], 0, 8, 16, 4, &mut out);
+        panel_scores_pq_into(&[0.0; 8 * 16], 1, &[], 0, 8, 16, 4, &mut out);
     }
 
     #[test]

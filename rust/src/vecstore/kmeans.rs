@@ -109,6 +109,111 @@ pub fn train(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Vec
     centroids
 }
 
+/// Train `k` centroids minimizing **L2** distortion (classic Lloyd) —
+/// the objective PQ sub-quantizers need, where sub-vectors are not unit
+/// vectors and max-inner-product assignment would collapse onto the
+/// longest centroid. Same k-means++ seeding and seed discipline as
+/// [`train`]; assignment still runs through the SIMD panel kernel,
+/// corrected per centroid by its half squared norm
+/// (`argmin ‖x − c‖² == argmax x·c − ½‖c‖²`).
+pub fn train_l2(data: &[f32], dim: usize, k: usize, iters: usize, seed: u64) -> Vec<f32> {
+    let n = data.len() / dim;
+    assert!(n >= k && k >= 1, "need at least k={k} points, have {n}");
+    let mut rng = Pcg::new(seed);
+
+    // k-means++ seeding (already L2-weighted), as in `train`.
+    let mut centroids = Vec::with_capacity(k * dim);
+    let first = rng.usize(0, n);
+    centroids.extend_from_slice(&data[first * dim..(first + 1) * dim]);
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| sq_dist(&data[i * dim..(i + 1) * dim], &centroids[0..dim]))
+        .collect();
+    for _ in 1..k {
+        let total: f64 = d2.iter().sum();
+        let mut target = rng.f64() * total.max(1e-12);
+        let mut pick = n - 1;
+        for (i, &w) in d2.iter().enumerate() {
+            if target <= w {
+                pick = i;
+                break;
+            }
+            target -= w;
+        }
+        let start = centroids.len();
+        centroids.extend_from_slice(&data[pick * dim..(pick + 1) * dim]);
+        let c = centroids[start..start + dim].to_vec();
+        for i in 0..n {
+            let d = sq_dist(&data[i * dim..(i + 1) * dim], &c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    let mut assign = vec![0usize; n];
+    let mut scores = vec![0.0f32; ASSIGN_BLOCK * k];
+    let mut half_norm = vec![0.0f32; k];
+    for _ in 0..iters {
+        for c in 0..k {
+            let row = &centroids[c * dim..(c + 1) * dim];
+            half_norm[c] = 0.5 * row.iter().map(|x| x * x).sum::<f32>();
+        }
+        let mut moved = false;
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + ASSIGN_BLOCK).min(n);
+            let np = i1 - i0;
+            kernels::panel_scores_into(
+                &data[i0 * dim..i1 * dim],
+                np,
+                &centroids,
+                k,
+                dim,
+                &mut scores[..np * k],
+            );
+            for p in 0..np {
+                let row = &scores[p * k..(p + 1) * k];
+                let mut best = (0usize, f32::MIN);
+                for (c, &s) in row.iter().enumerate() {
+                    let adj = s - half_norm[c];
+                    if adj > best.1 {
+                        best = (c, adj);
+                    }
+                }
+                if assign[i0 + p] != best.0 {
+                    assign[i0 + p] = best.0;
+                    moved = true;
+                }
+            }
+            i0 = i1;
+        }
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assign[i];
+            counts[c] += 1;
+            for j in 0..dim {
+                sums[c * dim + j] += data[i * dim + j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                let p = rng.usize(0, n);
+                centroids[c * dim..(c + 1) * dim]
+                    .copy_from_slice(&data[p * dim..(p + 1) * dim]);
+                continue;
+            }
+            for j in 0..dim {
+                centroids[c * dim + j] = (sums[c * dim + j] / counts[c] as f64) as f32;
+            }
+        }
+        if !moved {
+            break;
+        }
+    }
+    centroids
+}
+
 /// Assign every arena row to its highest-scoring centroid (first wins on
 /// ties, matching [`nearest`]). Blocks of rows are scored against the
 /// whole centroid matrix through the arena's quant-aware panel kernel, so
@@ -121,12 +226,15 @@ pub fn assign_arena(arena: &RowArena, dim: usize, centroids: &[f32], assign: &mu
     assert_eq!(assign.len(), n, "assignment buffer size mismatch");
     assert!(k >= 1, "need at least one centroid");
     let mut scores = vec![0.0f32; k * ASSIGN_BLOCK];
+    // One ADC table for the whole pass when the arena is PQ-trained
+    // (no-op context otherwise) — never rebuilt per block.
+    let ctx = arena.begin_panel(centroids, k, dim);
     let mut r0 = 0;
     while r0 < n {
         let r1 = (r0 + ASSIGN_BLOCK).min(n);
         let nr = r1 - r0;
         // Centroids are the query panel here: out[c * nr + r].
-        arena.panel_scores_into(centroids, k, r0, r1, dim, &mut scores[..k * nr]);
+        arena.panel_scores_ctx_into(&ctx, centroids, k, r0, r1, dim, &mut scores[..k * nr]);
         for r in 0..nr {
             let mut best = (0usize, f32::MIN);
             for c in 0..k {
@@ -240,6 +348,39 @@ mod tests {
             assign_arena(&arena, dim, &cents, &mut assign);
             assert!(assign.iter().all(|&c| c < 3), "{quant:?}: {assign:?}");
         }
+    }
+
+    /// Max-dot assignment collapses non-unit blobs onto the longest
+    /// centroid; the L2 variant must keep them apart.
+    #[test]
+    fn train_l2_separates_blobs_by_distance_not_norm() {
+        let mut rng = Pcg::new(8);
+        let dim = 4;
+        let mut data = Vec::new();
+        // Two blobs on the same ray: max-dot cannot tell them apart,
+        // L2 must. Blob A near 1.0, blob B near 6.0 (same direction).
+        for &a in &[1.0f32, 6.0] {
+            for _ in 0..25 {
+                for _ in 0..dim {
+                    data.push(a + 0.05 * rng.normal() as f32);
+                }
+            }
+        }
+        let cents = train_l2(&data, dim, 2, 20, 1);
+        let mut means: Vec<f32> =
+            cents.chunks(dim).map(|c| c.iter().sum::<f32>() / dim as f32).collect();
+        means.sort_by(f32::total_cmp);
+        assert!((means[0] - 1.0).abs() < 0.3, "low blob centroid at {}", means[0]);
+        assert!((means[1] - 6.0).abs() < 0.3, "high blob centroid at {}", means[1]);
+    }
+
+    #[test]
+    fn train_l2_deterministic_per_seed() {
+        let mut rng = Pcg::new(10);
+        let data: Vec<f32> = (0..60 * 4).map(|_| rng.normal() as f32).collect();
+        let a = train_l2(&data, 4, 5, 10, 9);
+        let b = train_l2(&data, 4, 5, 10, 9);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //!   probing `nprobe` nearest cells. The standard recall/latency trade.
 //!
 //! Both can store rows quantized ([`quant`]): [`QuantizedFlatIndex`]
-//! (and `IvfIndex::with_quant`) keep f16 or per-row-scaled int8 arenas
-//! that the kernels decode in registers, cutting scan bandwidth 2-4× at
-//! a bounded score error.
+//! (and `IvfIndex::with_quant`) keep f16, per-row-scaled int8, or
+//! product-quantized ([`pq`]) arenas that the kernels decode in
+//! registers (PQ scans via a per-panel ADC lookup table), cutting scan
+//! bandwidth 2× / 4× / up to 64× at a bounded score error (PQ trades a
+//! property-tested recall floor instead).
 //!
 //! Scoring runs on the runtime-dispatched SIMD kernels in [`kernels`];
 //! both indexes expose a batched [`Index::search_batch`] that shards the
@@ -23,6 +25,7 @@ pub mod kmeans;
 pub mod mask;
 pub mod numa;
 pub mod persist;
+pub mod pq;
 pub mod qflat;
 pub mod quant;
 

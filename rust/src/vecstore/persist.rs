@@ -12,15 +12,20 @@
 //! its skip masks engaged — and deleted ids can never reappear from a
 //! snapshot.
 //!
-//! The format is self-describing (magic + version + kind + quant + dim)
-//! so [`decode_index`] can rebuild the right index type without any
+//! The format is self-describing (magic + version + kind + quant + dim;
+//! the PQ quant tag additionally carries `m` + `bits`, and PQ indexes
+//! serialize their shared codebook once, ahead of the arenas) so
+//! [`decode_index`] can rebuild the right index type without any
 //! out-of-band configuration. All integers are little-endian.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use super::flat::FlatIndex;
 use super::ivf::{InvList, IvfIndex};
 use super::mask::SkipMask;
+use super::pq;
 use super::qflat::QuantizedFlatIndex;
 use super::quant::{Quant, RowArena};
 use super::Index;
@@ -32,11 +37,17 @@ const KIND_FLAT: u8 = 1;
 const KIND_QFLAT: u8 = 2;
 const KIND_IVF: u8 = 3;
 
+/// Product quantization. Only this tag widens the header: `m` (u32) and
+/// `bits` (u8) follow `dim`, so pre-PQ snapshots decode byte-for-byte as
+/// before.
+const TAG_PQ: u8 = 3;
+
 fn quant_tag(q: Quant) -> u8 {
     match q {
         Quant::F32 => 0,
         Quant::F16 => 1,
         Quant::Int8 => 2,
+        Quant::Pq { .. } => TAG_PQ,
     }
 }
 
@@ -132,12 +143,14 @@ fn check_count(r: &Reader<'_>, n: u64, elem_bytes: usize) -> Result<usize> {
 // Arena codec: live rows only, encoded bytes copied verbatim.
 
 /// Append the live rows of `(arena, dead)` to `out`: row count, then the
-/// raw encoded payload (f32/f16 words, or int8 codes then scales).
+/// raw encoded payload (f32/f16 words, int8 codes then scales, or a PQ
+/// state flag followed by staged f32 rows / packed codes).
 fn put_arena(out: &mut Vec<u8>, arena: &RowArena, dead: &SkipMask, rows: usize, dim: usize) {
     // Compact the live rows into a scratch arena first — `push_row_from`
-    // copies encoded bytes, so this is exact. When nothing is dead the
-    // scratch is byte-identical to the source.
-    let mut live = RowArena::new(arena.quant());
+    // copies encoded bytes (sharing any trained PQ codebook via
+    // `new_like`), so this is exact. When nothing is dead the scratch is
+    // byte-identical to the source.
+    let mut live = RowArena::new_like(arena);
     let mut ids_kept = 0u64;
     for r in 0..rows {
         if !dead.is_dead(r) {
@@ -163,16 +176,36 @@ fn put_arena(out: &mut Vec<u8>, arena: &RowArena, dead: &SkipMask, rows: usize, 
                 put_f32(out, s);
             }
         }
+        RowArena::Pq(a) => {
+            // State flag: 0 = staged (raw f32 rows, pre-training),
+            // 1 = trained (packed codes; the codebook itself is written
+            // once per index — see `put_pq_book` — not per arena).
+            if let Some(codes) = a.codes() {
+                out.push(1);
+                out.extend_from_slice(codes);
+            } else {
+                out.push(0);
+                for &x in a.staged().expect("untrained pq arena has staged rows") {
+                    put_f32(out, x);
+                }
+            }
+        }
     }
 }
 
 /// Read one arena section written by [`put_arena`]; returns the arena
-/// and its row count.
-fn get_arena(r: &mut Reader<'_>, quant: Quant, dim: usize) -> Result<(RowArena, usize)> {
-    let rows = r.u64()?;
-    let rows = check_count(r, rows, quant.bytes_per_row(dim))?;
+/// and its row count. `book` is the index-level PQ codebook (required
+/// when a PQ arena's state flag says "trained"; ignored otherwise).
+fn get_arena(
+    r: &mut Reader<'_>,
+    quant: Quant,
+    dim: usize,
+    book: Option<&Arc<pq::Codebook>>,
+) -> Result<(RowArena, usize)> {
+    let nrows = r.u64()?;
     let arena = match quant {
         Quant::F32 => {
+            let rows = check_count(r, nrows, dim * 4)?;
             let raw = r.take(rows * dim * 4)?;
             let mut d = Vec::with_capacity(rows * dim);
             for c in raw.chunks_exact(4) {
@@ -181,6 +214,7 @@ fn get_arena(r: &mut Reader<'_>, quant: Quant, dim: usize) -> Result<(RowArena, 
             RowArena::F32(d)
         }
         Quant::F16 => {
+            let rows = check_count(r, nrows, dim * 2)?;
             let raw = r.take(rows * dim * 2)?;
             let mut d = Vec::with_capacity(rows * dim);
             for c in raw.chunks_exact(2) {
@@ -189,6 +223,7 @@ fn get_arena(r: &mut Reader<'_>, quant: Quant, dim: usize) -> Result<(RowArena, 
             RowArena::F16(d)
         }
         Quant::Int8 => {
+            let rows = check_count(r, nrows, dim + 4)?;
             let codes: Vec<i8> = r.take(rows * dim)?.iter().map(|&b| b as i8).collect();
             let mut scales = Vec::with_capacity(rows);
             for _ in 0..rows {
@@ -196,8 +231,72 @@ fn get_arena(r: &mut Reader<'_>, quant: Quant, dim: usize) -> Result<(RowArena, 
             }
             RowArena::I8 { codes, scales }
         }
+        Quant::Pq { m, bits } => {
+            let mut a = pq::PqArena::new(m, bits);
+            match r.u8()? {
+                0 => {
+                    // Staged: raw f32 rows, sized by the *unpacked* width.
+                    let rows = check_count(r, nrows, dim * 4)?;
+                    let raw = r.take(rows * dim * 4)?;
+                    let mut d = Vec::with_capacity(rows * dim);
+                    for c in raw.chunks_exact(4) {
+                        d.push(f32::from_le_bytes(c.try_into().unwrap()));
+                    }
+                    a.restore_staged(d);
+                }
+                1 => {
+                    let Some(book) = book else {
+                        bail!("snapshot: trained pq arena but no codebook section");
+                    };
+                    let pb = pq::packed_row_bytes(m, bits);
+                    let rows = check_count(r, nrows, pb)?;
+                    a.restore_trained(Arc::clone(book), r.take(rows * pb)?.to_vec());
+                }
+                other => bail!("snapshot: unknown pq arena state {other}"),
+            }
+            RowArena::Pq(a)
+        }
     };
+    let rows = arena.rows(dim);
     Ok((arena, rows))
+}
+
+/// Index-level PQ codebook section: presence flag, then the center count
+/// and raw f32 centers. Written (and read) only when the header quant is
+/// PQ; all arenas of the index share the one book.
+fn put_pq_book(out: &mut Vec<u8>, book: Option<&Arc<pq::Codebook>>) {
+    match book {
+        Some(b) => {
+            out.push(1);
+            put_u64(out, b.centers.len() as u64);
+            for &c in &b.centers {
+                put_f32(out, c);
+            }
+        }
+        None => out.push(0),
+    }
+}
+
+fn get_pq_book(
+    r: &mut Reader<'_>,
+    quant: Quant,
+    dim: usize,
+) -> Result<Option<Arc<pq::Codebook>>> {
+    let Quant::Pq { m, bits } = quant else {
+        return Ok(None);
+    };
+    if r.u8()? == 0 {
+        return Ok(None);
+    }
+    let nc = r.u64()?;
+    let nc = check_count(r, nc, 4)?;
+    let mut centers = Vec::with_capacity(nc);
+    for _ in 0..nc {
+        centers.push(r.f32()?);
+    }
+    let book = pq::Codebook::from_parts(dim, m, bits, centers)
+        .map_err(|e| anyhow::anyhow!("snapshot: {e}"))?;
+    Ok(Some(Arc::new(book)))
 }
 
 fn put_ids(out: &mut Vec<u8>, ids: &[u64], dead: &SkipMask) {
@@ -226,6 +325,12 @@ fn header(out: &mut Vec<u8>, kind: u8, quant: Quant, dim: usize) {
     out.push(kind);
     out.push(quant_tag(quant));
     put_u32(out, dim as u32);
+    // Only the PQ tag carries codec parameters; every other header keeps
+    // the original fixed 11-byte layout.
+    if let Quant::Pq { m, bits } = quant {
+        put_u32(out, m as u32);
+        out.push(bits);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -250,8 +355,12 @@ pub(crate) fn encode_flat(idx: &FlatIndex) -> Vec<u8> {
 
 pub(crate) fn encode_qflat(idx: &QuantizedFlatIndex) -> Vec<u8> {
     let mut out = Vec::new();
-    header(&mut out, KIND_QFLAT, idx.arena.quant(), idx.dim);
+    let quant = idx.arena.quant();
+    header(&mut out, KIND_QFLAT, quant, idx.dim);
     put_ids(&mut out, &idx.ids, &idx.dead);
+    if matches!(quant, Quant::Pq { .. }) {
+        put_pq_book(&mut out, idx.arena.as_pq().and_then(|a| a.book()));
+    }
     put_arena(&mut out, &idx.arena, &idx.dead, idx.ids.len(), idx.dim);
     out
 }
@@ -267,6 +376,14 @@ pub(crate) fn encode_ivf(idx: &IvfIndex) -> Vec<u8> {
     put_u64(&mut out, idx.centroids.len() as u64);
     for &c in &idx.centroids {
         put_f32(&mut out, c);
+    }
+    if matches!(idx.quant, Quant::Pq { .. }) {
+        // All lists share the corpus codebook (see `IvfIndex::build`),
+        // so one section covers every arena below.
+        put_pq_book(
+            &mut out,
+            idx.lists.first().and_then(|l| l.arena.as_pq()).and_then(|a| a.book()),
+        );
     }
     put_u32(&mut out, idx.lists.len() as u32);
     for list in &idx.lists {
@@ -301,16 +418,29 @@ pub fn decode_index(bytes: &[u8]) -> Result<Box<dyn Index + Send + Sync>> {
         bail!("snapshot: unsupported version {version}");
     }
     let kind = r.u8()?;
-    let quant = quant_from_tag(r.u8()?)?;
+    let qtag = r.u8()?;
     let dim = r.u32()? as usize;
     if dim == 0 {
         bail!("snapshot: zero dimension");
     }
+    let quant = if qtag == TAG_PQ {
+        let m = r.u32()? as usize;
+        let bits = r.u8()?;
+        if !matches!(bits, 4 | 8) {
+            bail!("snapshot: pq bits {bits} not in {{4, 8}}");
+        }
+        if m == 0 || dim % m != 0 {
+            bail!("snapshot: pq m {m} does not divide dim {dim}");
+        }
+        Quant::Pq { m, bits }
+    } else {
+        quant_from_tag(qtag)?
+    };
 
     let idx: Box<dyn Index + Send + Sync> = match kind {
         KIND_FLAT => {
             let ids = get_ids(&mut r)?;
-            let (arena, rows) = get_arena(&mut r, Quant::F32, dim)?;
+            let (arena, rows) = get_arena(&mut r, Quant::F32, dim, None)?;
             if rows != ids.len() {
                 bail!("snapshot: flat ids/rows mismatch ({} vs {rows})", ids.len());
             }
@@ -318,15 +448,16 @@ pub fn decode_index(bytes: &[u8]) -> Result<Box<dyn Index + Send + Sync>> {
                 RowArena::F32(d) => d,
                 _ => unreachable!("flat arena decoded as f32"),
             };
-            Box::new(FlatIndex { dim, ids, data, dead: SkipMask::new() })
+            Box::new(FlatIndex { dim, ids, data, dead: SkipMask::new(), numa: None })
         }
         KIND_QFLAT => {
             let ids = get_ids(&mut r)?;
-            let (arena, rows) = get_arena(&mut r, quant, dim)?;
+            let book = get_pq_book(&mut r, quant, dim)?;
+            let (arena, rows) = get_arena(&mut r, quant, dim, book.as_ref())?;
             if rows != ids.len() {
                 bail!("snapshot: qflat ids/rows mismatch ({} vs {rows})", ids.len());
             }
-            Box::new(QuantizedFlatIndex { dim, ids, arena, dead: SkipMask::new() })
+            Box::new(QuantizedFlatIndex { dim, ids, arena, dead: SkipMask::new(), numa: None })
         }
         KIND_IVF => {
             let nlist = r.u32()? as usize;
@@ -340,12 +471,13 @@ pub fn decode_index(bytes: &[u8]) -> Result<Box<dyn Index + Send + Sync>> {
             for _ in 0..nc {
                 centroids.push(r.f32()?);
             }
+            let book = get_pq_book(&mut r, quant, dim)?;
             let nlists = r.u32()? as usize;
             let mut lists = Vec::with_capacity(nlists);
             let mut len = 0usize;
             for _ in 0..nlists {
                 let ids = get_ids(&mut r)?;
-                let (arena, rows) = get_arena(&mut r, quant, dim)?;
+                let (arena, rows) = get_arena(&mut r, quant, dim, book.as_ref())?;
                 if rows != ids.len() {
                     bail!("snapshot: ivf ids/rows mismatch ({} vs {rows})", ids.len());
                 }
@@ -492,6 +624,66 @@ mod tests {
         assert_eq!(restored.len(), 19);
         let q = unit(&mut rng, 8);
         assert_eq!(bit_hits(&restored.search(&q, 4)), bit_hits(&idx.search(&q, 4)));
+    }
+
+    /// PQ snapshots round-trip both arena states: a staged (pre-training)
+    /// arena restores its raw rows, and a trained arena restores the
+    /// codebook + packed codes byte-for-byte — searches on the restored
+    /// index are bit-identical either way.
+    #[test]
+    fn pq_roundtrip_staged_and_trained() {
+        for (n, quant) in
+            [(50, Quant::pq(4)), (50, Quant::pq(8)), (300, Quant::pq(4)), (300, Quant::pq(8))]
+        {
+            let mut rng = Pcg::new(91);
+            let mut idx = QuantizedFlatIndex::new(16, quant);
+            let vs: Vec<Vec<f32>> = (0..n).map(|_| unit(&mut rng, 16)).collect();
+            for (i, v) in vs.iter().enumerate() {
+                idx.add(i as u64, v);
+            }
+            idx.remove(3);
+            idx.remove(n as u64 - 1);
+            let restored = decode_index(&idx.snapshot_bytes().unwrap()).unwrap();
+            assert_eq!(restored.len(), idx.len(), "{quant:?} n={n}");
+            assert_eq!(restored.quant(), quant.resolved(16));
+            for _ in 0..6 {
+                let q = unit(&mut rng, 16);
+                assert_eq!(
+                    bit_hits(&restored.search(&q, 7)),
+                    bit_hits(&idx.search(&q, 7)),
+                    "{quant:?} n={n}"
+                );
+            }
+        }
+    }
+
+    /// PQ IVF: build trains one codebook shared by all lists; the
+    /// snapshot stores it once and the restored index scores
+    /// bit-identically (tombstones dropped at encode time, as ever).
+    #[test]
+    fn pq_ivf_roundtrip_shares_one_codebook() {
+        for quant in [Quant::pq(4), Quant::pq(8)] {
+            let mut rng = Pcg::new(97);
+            let mut idx = IvfIndex::with_quant(16, 6, 3, quant);
+            let vs: Vec<Vec<f32>> = (0..120).map(|_| unit(&mut rng, 16)).collect();
+            for (i, v) in vs.iter().enumerate() {
+                idx.add(i as u64, v);
+            }
+            idx.build(17);
+            idx.remove(11);
+            idx.remove(90);
+            let restored = decode_index(&idx.snapshot_bytes().unwrap()).unwrap();
+            assert_eq!(restored.len(), idx.len(), "{quant:?}");
+            assert_eq!(restored.quant(), quant.resolved(16));
+            for _ in 0..6 {
+                let q = unit(&mut rng, 16);
+                assert_eq!(
+                    bit_hits(&restored.search(&q, 5)),
+                    bit_hits(&idx.search(&q, 5)),
+                    "{quant:?}"
+                );
+            }
+        }
     }
 
     #[test]

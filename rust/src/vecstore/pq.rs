@@ -1,0 +1,595 @@
+//! Product quantization (PQ) — the rung below int8 on the
+//! bytes-per-row ladder (EdgeRAG-style, see PAPERS.md).
+//!
+//! A row of `dim` f32 elements is split into `m` contiguous sub-vectors
+//! of `dim / m` elements. Each sub-space gets its own codebook of
+//! `k = 2^bits` centroids (trained with the deterministic k-means in
+//! [`super::kmeans`], L2 objective), and the row is stored as `m` packed
+//! code indices — 4 or 8 bits each, so dim-768 / m-96 rows shrink to
+//! 48 B (`pq4`) or 96 B (`pq8`) against int8's 772 B.
+//!
+//! Scoring is **asymmetric distance computation** (ADC): per query,
+//! build an `m × k` lookup table `lut[s][c] = query_sub_s · center_c`
+//! once, then score every row with `m` table lookups instead of `dim`
+//! multiplies: `score(row) = Σ_s lut[s][code(row, s)]` — exactly the
+//! inner product of the query with the row's reconstruction, so recall
+//! tracks codebook quality, not scan arithmetic. The LUT-gather kernels
+//! live in [`super::kernels`] alongside the f16/int8 dispatch.
+//!
+//! # Training and determinism
+//!
+//! Codebooks freeze once trained: a flat [`PqArena`] stages raw f32
+//! rows until [`PQ_TRAIN_ROWS`] arrive (scoring the staged rows at full
+//! precision — exact, not approximate), trains on that prefix with a
+//! fixed seed, then encodes incrementally forever after. IVF arenas
+//! train at `build(seed)` instead and share one `Arc<Codebook>` across
+//! all inverted lists. Both paths reuse the seeded k-means, encoding is
+//! a deterministic argmin, and the LUT is built in a fixed scalar
+//! order — so re-encoding a row always yields the same bytes and
+//! batch/shard determinism invariants carry over unchanged.
+
+use std::sync::Arc;
+
+use super::{kmeans, numa};
+use crate::devices::affinity::Topology;
+
+/// Rows a flat PQ arena stages (and scores at full precision) before it
+/// trains codebooks on them and switches to packed codes.
+pub const PQ_TRAIN_ROWS: usize = 256;
+
+/// Lloyd rounds per sub-space codebook.
+const TRAIN_ITERS: usize = 12;
+
+/// Seed for the flat arena's threshold-triggered training (IVF passes
+/// its build seed instead). Sub-space `s` derives `seed ^ mix(s)`.
+pub const PQ_TRAIN_SEED: u64 = 0x00C0_DEB0_0C51;
+
+fn subspace_seed(seed: u64, s: usize) -> u64 {
+    seed ^ (s as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Default sub-vector count for a row width: the largest sub-dim in
+/// {8, 4, 2, 1} dividing `dim` (dim 768 → m = 96, the paper-dim
+/// layout; awkward dims degrade gracefully toward scalar quantization).
+pub fn default_m(dim: usize) -> usize {
+    for sub in [8usize, 4, 2] {
+        if dim % sub == 0 {
+            return dim / sub;
+        }
+    }
+    dim
+}
+
+/// Packed bytes per row for `m` codes of `bits` bits (two pq4 codes per
+/// byte; an odd trailing code keeps the low nibble).
+pub fn packed_row_bytes(m: usize, bits: u8) -> usize {
+    (m * bits as usize).div_ceil(8)
+}
+
+/// Trained sub-space codebooks: `m` tables of `k = 2^bits` centroids of
+/// `sub = dim / m` elements, row-major `[m][k][sub]`. When training had
+/// fewer than `k` rows, the tail entries duplicate the last trained
+/// centroid (the deterministic argmin encoder never picks a duplicate —
+/// first occurrence wins — so the code space stays well-defined).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    pub(crate) dim: usize,
+    pub(crate) m: usize,
+    pub(crate) sub: usize,
+    pub(crate) bits: u8,
+    pub(crate) centers: Vec<f32>,
+}
+
+impl Codebook {
+    /// Train on row-major `rows [n, dim]` (n ≥ 1). `k` clamps to `n`
+    /// per sub-space; sub-space `s` trains with `subspace_seed(seed, s)`
+    /// so the whole book is a pure function of `(rows, m, bits, seed)`.
+    pub fn train(rows: &[f32], dim: usize, m: usize, bits: u8, seed: u64) -> Codebook {
+        assert!(matches!(bits, 4 | 8), "pq bits must be 4 or 8");
+        assert!(m >= 1 && dim % m == 0, "m={m} must divide dim={dim}");
+        let n = rows.len() / dim;
+        assert!(n >= 1, "cannot train a codebook on zero rows");
+        let sub = dim / m;
+        let k = 1usize << bits;
+        let kt = k.min(n);
+        let mut centers = vec![0.0f32; m * k * sub];
+        let mut scratch = vec![0.0f32; n * sub];
+        for s in 0..m {
+            for i in 0..n {
+                let row = &rows[i * dim + s * sub..i * dim + (s + 1) * sub];
+                scratch[i * sub..(i + 1) * sub].copy_from_slice(row);
+            }
+            let trained =
+                kmeans::train_l2(&scratch, sub, kt, TRAIN_ITERS, subspace_seed(seed, s));
+            let base = s * k * sub;
+            centers[base..base + kt * sub].copy_from_slice(&trained);
+            for pad in kt..k {
+                centers.copy_within(base + (kt - 1) * sub..base + kt * sub, base + pad * sub);
+            }
+        }
+        Codebook { dim, m, sub, bits, centers }
+    }
+
+    /// Rebuild from persisted parts (validating the geometry).
+    pub fn from_parts(
+        dim: usize,
+        m: usize,
+        bits: u8,
+        centers: Vec<f32>,
+    ) -> Result<Codebook, String> {
+        if !matches!(bits, 4 | 8) {
+            return Err(format!("pq bits {bits} not in {{4, 8}}"));
+        }
+        if m == 0 || dim % m != 0 {
+            return Err(format!("pq m {m} does not divide dim {dim}"));
+        }
+        let sub = dim / m;
+        let want = m * (1usize << bits) * sub;
+        if centers.len() != want {
+            return Err(format!("pq codebook has {} centers, want {want}", centers.len()));
+        }
+        Ok(Codebook { dim, m, sub, bits, centers })
+    }
+
+    pub fn k(&self) -> usize {
+        1usize << self.bits
+    }
+
+    pub fn packed_row_bytes(&self) -> usize {
+        packed_row_bytes(self.m, self.bits)
+    }
+
+    /// Codebook footprint in bytes (amortized across the whole arena).
+    pub fn bytes(&self) -> usize {
+        self.centers.len() * 4
+    }
+
+    /// Nearest centroid of sub-space `s` to `x` by L2 (first wins on
+    /// ties — deterministic, and padded duplicates are never chosen).
+    fn nearest_code(&self, s: usize, x: &[f32]) -> usize {
+        let k = self.k();
+        let base = s * k * self.sub;
+        let mut best = (0usize, f64::MAX);
+        for c in 0..k {
+            let cent = &self.centers[base + c * self.sub..base + (c + 1) * self.sub];
+            let d: f64 = x.iter().zip(cent).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            if d < best.1 {
+                best = (c, d);
+            }
+        }
+        best.0
+    }
+
+    /// Encode one row, appending its packed codes to `out`.
+    pub fn encode_append(&self, v: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(v.len(), self.dim, "row width mismatch");
+        match self.bits {
+            8 => {
+                for s in 0..self.m {
+                    out.push(self.nearest_code(s, &v[s * self.sub..(s + 1) * self.sub]) as u8);
+                }
+            }
+            _ => {
+                let mut s = 0;
+                while s + 1 < self.m {
+                    let lo = self.nearest_code(s, &v[s * self.sub..(s + 1) * self.sub]) as u8;
+                    let hi = self
+                        .nearest_code(s + 1, &v[(s + 1) * self.sub..(s + 2) * self.sub])
+                        as u8;
+                    out.push(lo | (hi << 4));
+                    s += 2;
+                }
+                if s < self.m {
+                    out.push(self.nearest_code(s, &v[s * self.sub..(s + 1) * self.sub]) as u8);
+                }
+            }
+        }
+    }
+
+    /// Reconstruct one packed row (concatenated chosen centroids).
+    pub fn decode_row(&self, packed: &[u8]) -> Vec<f32> {
+        assert_eq!(packed.len(), self.packed_row_bytes());
+        let mut out = Vec::with_capacity(self.dim);
+        for s in 0..self.m {
+            let c = code_at(packed, s, self.bits);
+            let base = s * self.k() * self.sub + c * self.sub;
+            out.extend_from_slice(&self.centers[base..base + self.sub]);
+        }
+        out
+    }
+
+    /// Build the ADC lookup table for a query panel: row-major
+    /// `[nq][m][k]` with `lut[q][s][c] = queries[q]_sub_s · center_c`.
+    /// Fixed scalar evaluation order per (q, s, c), independent of the
+    /// panel size — the batch==single bit-identity hinges on it.
+    pub fn build_lut(self: &Arc<Codebook>, queries: &[f32], nq: usize) -> PanelLut {
+        assert_eq!(queries.len(), nq * self.dim, "query panel shape mismatch");
+        let k = self.k();
+        let mut lut = vec![0.0f32; nq * self.m * k];
+        for q in 0..nq {
+            let qrow = &queries[q * self.dim..(q + 1) * self.dim];
+            for s in 0..self.m {
+                let qs = &qrow[s * self.sub..(s + 1) * self.sub];
+                let base = s * k * self.sub;
+                let lbase = (q * self.m + s) * k;
+                for c in 0..k {
+                    let cent = &self.centers[base + c * self.sub..base + (c + 1) * self.sub];
+                    let mut acc = 0.0f32;
+                    for (a, b) in qs.iter().zip(cent) {
+                        acc += a * b;
+                    }
+                    lut[lbase + c] = acc;
+                }
+            }
+        }
+        PanelLut { book: Arc::clone(self), nq, lut }
+    }
+}
+
+/// Decode code index `s` from a packed row.
+#[inline]
+pub fn code_at(packed: &[u8], s: usize, bits: u8) -> usize {
+    if bits == 8 {
+        packed[s] as usize
+    } else {
+        ((packed[s >> 1] >> ((s & 1) * 4)) & 0xF) as usize
+    }
+}
+
+/// One query panel's ADC table, built once per scan and shared across
+/// row blocks (and across IVF lists — every list shares the arena's
+/// `Arc<Codebook>`).
+pub struct PanelLut {
+    pub(crate) book: Arc<Codebook>,
+    pub(crate) nq: usize,
+    pub(crate) lut: Vec<f32>,
+}
+
+impl PanelLut {
+    /// The raw `[nq][m][k]` table (benchmarks drive the scan kernel with
+    /// a prebuilt table; scans inside the crate go through `PanelCtx`).
+    pub fn table(&self) -> &[f32] {
+        &self.lut
+    }
+}
+
+/// PQ row storage behind [`super::quant::RowArena::Pq`]: raw staged f32
+/// rows before training, packed codes + a shared codebook after.
+pub struct PqArena {
+    m: usize,
+    bits: u8,
+    state: PqState,
+}
+
+enum PqState {
+    /// Raw f32 rows, scored at full precision until training triggers.
+    Staged(Vec<f32>),
+    Trained { book: Arc<Codebook>, codes: Vec<u8> },
+}
+
+impl PqArena {
+    /// `m == 0` derives the sub-vector count from the row width on
+    /// first use ([`default_m`]); callers that know `dim` should pass a
+    /// resolved `m` (see `Quant::resolved`).
+    pub fn new(m: usize, bits: u8) -> PqArena {
+        assert!(matches!(bits, 4 | 8), "pq bits must be 4 or 8");
+        PqArena { m, bits, state: PqState::Staged(Vec::new()) }
+    }
+
+    /// Empty arena sharing this one's codebook (and training state) —
+    /// what compaction and IVF list construction clone so
+    /// [`PqArena::push_row_from`] can copy packed bytes verbatim.
+    pub fn new_like(&self) -> PqArena {
+        let state = match &self.state {
+            PqState::Staged(_) => PqState::Staged(Vec::new()),
+            PqState::Trained { book, .. } => {
+                PqState::Trained { book: Arc::clone(book), codes: Vec::new() }
+            }
+        };
+        PqArena { m: self.m, bits: self.bits, state }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn trained(&self) -> bool {
+        matches!(self.state, PqState::Trained { .. })
+    }
+
+    pub fn book(&self) -> Option<&Arc<Codebook>> {
+        match &self.state {
+            PqState::Trained { book, .. } => Some(book),
+            PqState::Staged(_) => None,
+        }
+    }
+
+    /// Packed code bytes (trained arenas; staged return `None`).
+    pub fn codes(&self) -> Option<&[u8]> {
+        match &self.state {
+            PqState::Trained { codes, .. } => Some(codes),
+            PqState::Staged(_) => None,
+        }
+    }
+
+    /// Staged f32 rows (untrained arenas; trained return `None`).
+    pub fn staged(&self) -> Option<&[f32]> {
+        match &self.state {
+            PqState::Staged(d) => Some(d),
+            PqState::Trained { .. } => None,
+        }
+    }
+
+    /// Adopt a restored trained state (persist decode path).
+    pub fn restore_trained(&mut self, book: Arc<Codebook>, codes: Vec<u8>) {
+        self.m = book.m;
+        self.bits = book.bits;
+        self.state = PqState::Trained { book, codes };
+    }
+
+    /// Adopt restored staged rows (persist decode path).
+    pub fn restore_staged(&mut self, rows: Vec<f32>) {
+        self.state = PqState::Staged(rows);
+    }
+
+    pub fn rows(&self, dim: usize) -> usize {
+        match &self.state {
+            PqState::Staged(d) => d.len() / dim,
+            PqState::Trained { book, codes } => codes.len() / book.packed_row_bytes(),
+        }
+    }
+
+    /// Append one row: staged arenas buffer the raw f32s (training when
+    /// the buffer hits [`PQ_TRAIN_ROWS`]); trained arenas encode with
+    /// the frozen codebook — the ingest-time incremental path, so an
+    /// upsert re-encodes exactly one row and every untouched row's
+    /// bytes stay bit-identical.
+    pub fn push(&mut self, v: &[f32]) {
+        match &mut self.state {
+            PqState::Staged(d) => {
+                d.extend_from_slice(v);
+                if d.len() / v.len() >= PQ_TRAIN_ROWS {
+                    self.train_now(v.len(), PQ_TRAIN_SEED);
+                }
+            }
+            PqState::Trained { book, codes } => book.encode_append(v, codes),
+        }
+    }
+
+    /// Train codebooks on the staged rows and encode them. No-op when
+    /// already trained or nothing is staged. IVF `build(seed)` calls
+    /// this so list arenas inherit one deterministic shared book.
+    pub fn train_now(&mut self, dim: usize, seed: u64) {
+        let PqState::Staged(staged) = &self.state else { return };
+        if staged.is_empty() {
+            return;
+        }
+        let m = if self.m == 0 { default_m(dim) } else { self.m };
+        assert!(dim % m == 0, "pq m={m} must divide dim={dim}");
+        self.m = m;
+        let book = Arc::new(Codebook::train(staged, dim, m, self.bits, seed));
+        let rows = staged.len() / dim;
+        let mut codes = Vec::with_capacity(rows * book.packed_row_bytes());
+        for r in 0..rows {
+            book.encode_append(&staged[r * dim..(r + 1) * dim], &mut codes);
+        }
+        self.state = PqState::Trained { book, codes };
+    }
+
+    /// Append row `r` of `src` by copying already-encoded bytes. Both
+    /// arenas must share one codebook (see [`PqArena::new_like`]).
+    pub fn push_row_from(&mut self, src: &PqArena, r: usize, dim: usize) {
+        match (&mut self.state, &src.state) {
+            (PqState::Staged(d), PqState::Staged(s)) => {
+                d.extend_from_slice(&s[r * dim..(r + 1) * dim]);
+            }
+            (
+                PqState::Trained { book, codes },
+                PqState::Trained { book: sbook, codes: scodes },
+            ) => {
+                assert!(Arc::ptr_eq(book, sbook), "pq arenas must share a codebook");
+                let pb = book.packed_row_bytes();
+                codes.extend_from_slice(&scodes[r * pb..(r + 1) * pb]);
+            }
+            _ => panic!("pq arena training-state mismatch"),
+        }
+    }
+
+    pub fn numa_realign(&mut self, dim: usize, topo: &Topology) {
+        match &mut self.state {
+            PqState::Staged(d) => *d = numa::first_touch_realign(d, dim, topo),
+            PqState::Trained { book, codes } => {
+                *codes = numa::first_touch_realign(codes, book.packed_row_bytes(), topo);
+            }
+        }
+    }
+
+    /// Arena footprint: packed codes plus the (amortized) codebook.
+    pub fn bytes(&self) -> usize {
+        match &self.state {
+            PqState::Staged(d) => d.len() * 4,
+            PqState::Trained { book, codes } => codes.len() + book.bytes(),
+        }
+    }
+
+    pub fn dequant_row(&self, r: usize, dim: usize) -> Vec<f32> {
+        match &self.state {
+            PqState::Staged(d) => d[r * dim..(r + 1) * dim].to_vec(),
+            PqState::Trained { book, codes } => {
+                let pb = book.packed_row_bytes();
+                book.decode_row(&codes[r * pb..(r + 1) * pb])
+            }
+        }
+    }
+
+    /// Encoded bytes of row `r` as stored (regression hook: unchanged
+    /// rows must stay bit-identical across incremental ingest).
+    pub fn row_bytes(&self, r: usize, dim: usize) -> Vec<u8> {
+        match &self.state {
+            PqState::Staged(d) => {
+                d[r * dim..(r + 1) * dim].iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            PqState::Trained { book, codes } => {
+                let pb = book.packed_row_bytes();
+                codes[r * pb..(r + 1) * pb].to_vec()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn clustered_rows(rng: &mut Pcg, n: usize, dim: usize, ncenters: usize) -> Vec<f32> {
+        let centers: Vec<f32> = (0..ncenters * dim).map(|_| rng.normal() as f32).collect();
+        let mut rows = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            let c = i % ncenters;
+            for j in 0..dim {
+                rows.push(centers[c * dim + j] + 0.05 * rng.normal() as f32);
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn default_m_prefers_sub8_and_degrades() {
+        assert_eq!(default_m(768), 96);
+        assert_eq!(default_m(64), 8);
+        assert_eq!(default_m(24), 3);
+        assert_eq!(default_m(20), 5); // 20 % 8 != 0 → sub 4
+        assert_eq!(default_m(37), 37); // prime → scalar sub-spaces
+    }
+
+    #[test]
+    fn packed_bytes_and_nibble_codec() {
+        assert_eq!(packed_row_bytes(96, 4), 48);
+        assert_eq!(packed_row_bytes(96, 8), 96);
+        assert_eq!(packed_row_bytes(3, 4), 2); // odd m: trailing nibble
+        let packed = vec![0x21u8, 0x03];
+        assert_eq!(code_at(&packed, 0, 4), 1);
+        assert_eq!(code_at(&packed, 1, 4), 2);
+        assert_eq!(code_at(&packed, 2, 4), 3);
+        let bytes = vec![7u8, 255, 0];
+        assert_eq!(code_at(&bytes, 1, 8), 255);
+    }
+
+    #[test]
+    fn train_encode_decode_reconstructs_clustered_rows() {
+        let mut rng = Pcg::new(11);
+        let dim = 16;
+        let rows = clustered_rows(&mut rng, 300, dim, 8);
+        for bits in [4u8, 8] {
+            let book = Arc::new(Codebook::train(&rows, dim, default_m(dim), bits, 1));
+            let mut codes = Vec::new();
+            book.encode_append(&rows[..dim], &mut codes);
+            assert_eq!(codes.len(), book.packed_row_bytes());
+            let recon = book.decode_row(&codes);
+            let err: f32 = rows[..dim]
+                .iter()
+                .zip(&recon)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+            let norm: f32 = rows[..dim].iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(err < 0.5 * norm, "bits={bits}: recon err {err} vs norm {norm}");
+        }
+    }
+
+    #[test]
+    fn lut_score_equals_dot_with_reconstruction() {
+        let mut rng = Pcg::new(12);
+        let dim = 24;
+        let rows = clustered_rows(&mut rng, 64, dim, 4);
+        let book = Arc::new(Codebook::train(&rows, dim, default_m(dim), 4, 3));
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let lut = book.build_lut(&q, 1);
+        let mut codes = Vec::new();
+        book.encode_append(&rows[..dim], &mut codes);
+        let k = book.k();
+        let mut via_lut = 0.0f32;
+        for s in 0..book.m {
+            via_lut += lut.lut[s * k + code_at(&codes, s, 4)];
+        }
+        let recon = book.decode_row(&codes);
+        let direct: f32 = q.iter().zip(&recon).map(|(a, b)| a * b).sum();
+        assert!(
+            (via_lut - direct).abs() <= 1e-4 * (1.0 + direct.abs()),
+            "{via_lut} vs {direct}"
+        );
+    }
+
+    #[test]
+    fn training_is_deterministic_per_seed() {
+        let mut rng = Pcg::new(13);
+        let dim = 16;
+        let rows = clustered_rows(&mut rng, 128, dim, 4);
+        let a = Codebook::train(&rows, dim, 2, 4, 7);
+        let b = Codebook::train(&rows, dim, 2, 4, 7);
+        assert_eq!(a, b);
+        let c = Codebook::train(&rows, dim, 2, 4, 8);
+        assert_ne!(a, c, "different seeds should move centroids");
+    }
+
+    #[test]
+    fn codebook_pads_when_rows_below_k() {
+        let rows = vec![1.0f32, 0.0, 0.0, 1.0, -1.0, 0.0]; // 3 rows, dim 2
+        let book = Codebook::train(&rows, 2, 1, 8, 5);
+        assert_eq!(book.centers.len(), 256 * 2);
+        let mut codes = Vec::new();
+        book.encode_append(&rows[..2], &mut codes);
+        // Only trained (non-pad) entries are ever selected.
+        assert!(code_at(&codes, 0, 8) < 3);
+    }
+
+    #[test]
+    fn arena_stages_then_trains_and_encodes_incrementally() {
+        let mut rng = Pcg::new(14);
+        let dim = 8;
+        let rows = clustered_rows(&mut rng, PQ_TRAIN_ROWS + 10, dim, 4);
+        let mut arena = PqArena::new(0, 4);
+        for r in 0..PQ_TRAIN_ROWS - 1 {
+            arena.push(&rows[r * dim..(r + 1) * dim]);
+        }
+        assert!(!arena.trained(), "must stage below the threshold");
+        assert_eq!(arena.rows(dim), PQ_TRAIN_ROWS - 1);
+        arena.push(&rows[(PQ_TRAIN_ROWS - 1) * dim..PQ_TRAIN_ROWS * dim]);
+        assert!(arena.trained(), "threshold row must trigger training");
+        assert_eq!(arena.rows(dim), PQ_TRAIN_ROWS);
+        // Incremental: later pushes encode without touching earlier rows.
+        let before: Vec<Vec<u8>> =
+            (0..PQ_TRAIN_ROWS).map(|r| arena.row_bytes(r, dim)).collect();
+        for r in PQ_TRAIN_ROWS..PQ_TRAIN_ROWS + 10 {
+            arena.push(&rows[r * dim..(r + 1) * dim]);
+        }
+        for (r, want) in before.iter().enumerate() {
+            assert_eq!(&arena.row_bytes(r, dim), want, "row {r} bytes drifted");
+        }
+    }
+
+    #[test]
+    fn new_like_shares_the_book_and_copies_bytes() {
+        let mut rng = Pcg::new(15);
+        let dim = 8;
+        let rows = clustered_rows(&mut rng, 32, dim, 4);
+        let mut src = PqArena::new(0, 8);
+        for r in 0..32 {
+            src.push(&rows[r * dim..(r + 1) * dim]);
+        }
+        src.train_now(dim, 9);
+        let mut dst = src.new_like();
+        assert!(dst.trained());
+        for r in [3usize, 0, 31] {
+            dst.push_row_from(&src, r, dim);
+        }
+        assert_eq!(dst.row_bytes(0, dim), src.row_bytes(3, dim));
+        assert_eq!(dst.row_bytes(1, dim), src.row_bytes(0, dim));
+        assert_eq!(dst.row_bytes(2, dim), src.row_bytes(31, dim));
+    }
+}

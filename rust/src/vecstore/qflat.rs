@@ -10,7 +10,7 @@
 //! are memory-bound.
 
 use super::mask::SkipMask;
-use super::quant::{Quant, RowArena};
+use super::quant::{PanelCtx, Quant, RowArena};
 use super::{numa, Hit, Index, TopK};
 use crate::devices::affinity::{pin_current_thread, Topology};
 
@@ -32,7 +32,7 @@ pub struct QuantizedFlatIndex {
     pub(crate) dead: SkipMask,
     /// NUMA plan ([`Index::set_numa`]): when set (and multi-node),
     /// batched scans shard along node bands with pinned threads.
-    numa: Option<Topology>,
+    pub(crate) numa: Option<Topology>,
 }
 
 impl QuantizedFlatIndex {
@@ -41,7 +41,9 @@ impl QuantizedFlatIndex {
         QuantizedFlatIndex {
             dim,
             ids: Vec::new(),
-            arena: RowArena::new(quant),
+            // PQ's "derive m from dim" sentinel resolves here, so the
+            // arena (and `quant()`) always carry concrete geometry.
+            arena: RowArena::new(quant.resolved(dim)),
             dead: SkipMask::new(),
             numa: None,
         }
@@ -60,6 +62,13 @@ impl QuantizedFlatIndex {
     /// Row `row` decoded back to f32 (diagnostics; scans never do this).
     pub fn dequant_vector(&self, row: usize) -> Vec<f32> {
         self.arena.dequant_row(row, self.dim)
+    }
+
+    /// Whether a PQ arena has trained its codebook (i.e. left the exact
+    /// staging regime — see `vecstore::pq`). Always `false` for other
+    /// codecs; tests use this to assert which regime they exercise.
+    pub fn pq_trained(&self) -> bool {
+        self.arena.as_pq().map(|a| a.trained()).unwrap_or(false)
     }
 
     /// Shard count for a parallel scan over `rows` rows.
@@ -92,10 +101,13 @@ impl QuantizedFlatIndex {
             qbuf.extend_from_slice(q);
         }
         let threads = threads.max(1).min(n);
+        // One panel context (the PQ ADC table, a no-op for other codecs)
+        // for the whole batch, shared read-only across every shard.
+        let ctx = self.arena.begin_panel(&qbuf, nq, self.dim);
         if threads == 1 {
             let mut tks: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
             let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
-            self.scan_rows(&qbuf, nq, 0, n, &mut tks, &mut scores);
+            self.scan_rows(&ctx, &qbuf, nq, 0, n, &mut tks, &mut scores);
             return tks.into_iter().map(TopK::into_vec).collect();
         }
         // NUMA plan: band shards + pinned threads; bit-identical to the
@@ -106,7 +118,7 @@ impl QuantizedFlatIndex {
                 let (lo, hi, node) = shards[t];
                 let _ = pin_current_thread(&topo.cores_of_node(node));
                 let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
-                self.scan_rows(&qbuf, nq, lo, hi, tks, &mut scores);
+                self.scan_rows(&ctx, &qbuf, nq, lo, hi, tks, &mut scores);
             });
             return finals.into_iter().map(TopK::into_vec).collect();
         }
@@ -116,7 +128,7 @@ impl QuantizedFlatIndex {
             let hi = ((t + 1) * rows_per).min(n);
             if lo < hi {
                 let mut scores = vec![0.0f32; nq * SCAN_BLOCK_ROWS];
-                self.scan_rows(&qbuf, nq, lo, hi, tks, &mut scores);
+                self.scan_rows(&ctx, &qbuf, nq, lo, hi, tks, &mut scores);
             }
         });
         finals.into_iter().map(TopK::into_vec).collect()
@@ -125,9 +137,12 @@ impl QuantizedFlatIndex {
     /// Score rows `[lo, hi)` against the query panel block by block
     /// through the arena's quantized kernel, pushing with the global row
     /// index as the tie-break sequence number (same contract as
-    /// `FlatIndex::scan_rows`).
+    /// `FlatIndex::scan_rows`). `ctx` must come from `begin_panel` on
+    /// this arena for the same panel — built once per batch, never per
+    /// block.
     fn scan_rows(
         &self,
+        ctx: &PanelCtx,
         qbuf: &[f32],
         nq: usize,
         lo: usize,
@@ -140,7 +155,8 @@ impl QuantizedFlatIndex {
         while r0 < hi {
             let r1 = (r0 + SCAN_BLOCK_ROWS).min(hi);
             let nr = r1 - r0;
-            self.arena.panel_scores_into(qbuf, nq, r0, r1, self.dim, &mut scores[..nq * nr]);
+            self.arena
+                .panel_scores_ctx_into(ctx, qbuf, nq, r0, r1, self.dim, &mut scores[..nq * nr]);
             for (qi, tk) in tks.iter_mut().enumerate() {
                 for r in 0..nr {
                     // Tombstone skip (see `FlatIndex::scan_rows`).
@@ -166,9 +182,19 @@ impl Index for QuantizedFlatIndex {
     fn search(&self, query: &[f32], k: usize) -> Vec<Hit> {
         assert_eq!(query.len(), self.dim, "dimension mismatch");
         let mut tk = TopK::new(k);
-        // Stack scratch: the single-query request path allocates nothing.
+        // Stack scratch: the single-query request path allocates nothing
+        // (the panel context is free for all codecs but trained PQ).
+        let ctx = self.arena.begin_panel(query, 1, self.dim);
         let mut scores = [0.0f32; SCAN_BLOCK_ROWS];
-        self.scan_rows(query, 1, 0, self.ids.len(), std::slice::from_mut(&mut tk), &mut scores);
+        self.scan_rows(
+            &ctx,
+            query,
+            1,
+            0,
+            self.ids.len(),
+            std::slice::from_mut(&mut tk),
+            &mut scores,
+        );
         tk.into_vec()
     }
 
@@ -208,7 +234,9 @@ impl Index for QuantizedFlatIndex {
             return 0;
         }
         let mut ids = Vec::with_capacity(self.ids.len() - reclaimed);
-        let mut arena = RowArena::new(self.arena.quant());
+        // `new_like`, not `new`: a trained PQ scratch arena must share
+        // the codebook so the byte-copy below stays valid.
+        let mut arena = RowArena::new_like(&self.arena);
         for row in 0..self.ids.len() {
             if !self.dead.is_dead(row) {
                 ids.push(self.ids[row]);
@@ -325,7 +353,9 @@ mod tests {
     fn batch_matches_single_across_shards() {
         let mut rng = Pcg::new(4);
         let dim = 48;
-        for quant in [Quant::F16, Quant::Int8] {
+        // 500 rows crosses the PQ staging threshold, so pq4/pq8 exercise
+        // the trained ADC scan here, not the staged-exact path.
+        for quant in [Quant::F16, Quant::Int8, Quant::pq(4), Quant::pq(8)] {
             let mut idx = QuantizedFlatIndex::new(dim, quant);
             for i in 0..500 {
                 idx.add(i, &unit(&mut rng, dim));
@@ -349,7 +379,7 @@ mod tests {
         // Quantization maps equal rows to equal codes, so ties must keep
         // first-inserted (lowest row) order exactly like FlatIndex.
         let v = [0.6f32, 0.8, 0.0, 0.0];
-        for quant in [Quant::F16, Quant::Int8] {
+        for quant in [Quant::F16, Quant::Int8, Quant::pq(4)] {
             let mut idx = QuantizedFlatIndex::new(4, quant);
             for i in 0..20 {
                 idx.add(100 + i, &v);

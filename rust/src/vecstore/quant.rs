@@ -15,12 +15,32 @@
 //! * [`Quant::Int8`] — symmetric per-row scaling: `scale = max|x| / 127`,
 //!   `code = round(x / scale)`. Per-element absolute error ≤ `scale / 2`,
 //!   so a score errs by at most `‖query‖₁ · scale / 2`.
+//! * [`Quant::Pq`] — product-quantized codes (see [`super::pq`]): `m`
+//!   sub-vector codebooks of `2^bits` centroids, 4 or 8 bits per code,
+//!   scanned via a per-query-panel ADC lookup table. At dim 768 / m 96
+//!   that is 48 B/row (`pq4`) or 96 B/row (`pq8`) against int8's 772 —
+//!   recall is data-dependent (≥ 0.9 top-10 on clustered corpora,
+//!   property-tested) rather than ε-bounded.
 //!
-//! Both codecs are deterministic, so re-encoding a row always yields the
+//! # Codec tier table (dim 768, the paper's embedding width)
+//!
+//! | codec | bytes/row | vs f32 | score error            |
+//! |-------|-----------|--------|------------------------|
+//! | f32   | 3072      | 1×     | exact                  |
+//! | f16   | 1536      | 2×     | ≲ 1e-3 relative        |
+//! | int8  | 772       | 3.98×  | ≤ ‖q‖₁·scale/2         |
+//! | pq8   | 96        | 32×    | recall ≥ 0.9 (top-10)  |
+//! | pq4   | 48        | 64×    | recall ≥ 0.9 (top-10)  |
+//!
+//! The admission cost model charges scans by `bytes_per_row`, so every
+//! tier down this ladder buys proportionally more concurrent scan slots.
+//!
+//! All codecs are deterministic, so re-encoding a row always yields the
 //! same bytes and quantized scan results are reproducible bit-for-bit
-//! under a fixed kernel variant.
+//! under a fixed kernel variant (PQ codebooks freeze after seeded
+//! training, keeping encode deterministic too).
 
-use super::kernels;
+use super::{kernels, pq};
 
 /// Storage codec for an index's row arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,24 +51,48 @@ pub enum Quant {
     F16,
     /// Symmetric per-row-scaled int8: 1 byte/element + 4 bytes/row scale.
     Int8,
+    /// Product-quantized codes: `m` sub-vector codebooks, `bits` ∈ {4, 8}
+    /// per code. `m == 0` is the "derive from dim" sentinel (see
+    /// [`Quant::resolved`]); index constructors resolve it before any
+    /// arena is built.
+    Pq { m: usize, bits: u8 },
 }
 
 impl Quant {
+    /// The `pq4`/`pq8` codec with dim-derived sub-vector count.
+    pub fn pq(bits: u8) -> Quant {
+        Quant::Pq { m: 0, bits }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Quant::F32 => "f32",
             Quant::F16 => "f16",
             Quant::Int8 => "int8",
+            Quant::Pq { bits: 4, .. } => "pq4",
+            Quant::Pq { .. } => "pq8",
         }
     }
 
-    /// Parse `"f32" | "f16" | "int8" | "i8"` (case-insensitive).
+    /// Parse `"f32" | "f16" | "int8" | "i8" | "pq4" | "pq8"`
+    /// (case-insensitive).
     pub fn parse(s: &str) -> Option<Quant> {
         match s.to_ascii_lowercase().as_str() {
             "f32" | "fp32" => Some(Quant::F32),
             "f16" | "fp16" | "half" => Some(Quant::F16),
             "int8" | "i8" => Some(Quant::Int8),
+            "pq4" | "int4" => Some(Quant::pq(4)),
+            "pq8" => Some(Quant::pq(8)),
             _ => None,
+        }
+    }
+
+    /// Resolve the PQ `m == 0` sentinel against a concrete row width;
+    /// other codecs (and already-resolved PQ) pass through unchanged.
+    pub fn resolved(self, dim: usize) -> Quant {
+        match self {
+            Quant::Pq { m: 0, bits } => Quant::Pq { m: pq::default_m(dim), bits },
+            q => q,
         }
     }
 
@@ -63,21 +107,30 @@ impl Quant {
     }
 
     /// Codecs a test run should cover: the `WINDVE_QUANT` cell when the CI
-    /// matrix pins one, otherwise all three.
+    /// matrix pins one, otherwise the whole ladder.
     pub fn modes_under_test() -> Vec<Quant> {
         match Quant::env_override() {
             Some(q) => vec![q],
-            None => vec![Quant::F32, Quant::F16, Quant::Int8],
+            None => {
+                vec![Quant::F32, Quant::F16, Quant::Int8, Quant::pq(4), Quant::pq(8)]
+            }
         }
     }
 
     /// Arena bytes one row of `dim` elements occupies (including the
-    /// per-row scale for int8).
+    /// per-row scale for int8; packed code bytes for PQ, excluding the
+    /// arena-amortized codebook). Pure in `dim` — the admission cost
+    /// model calls this on unresolved modes, so the PQ sentinel resolves
+    /// here too.
     pub fn bytes_per_row(self, dim: usize) -> usize {
         match self {
             Quant::F32 => dim * 4,
             Quant::F16 => dim * 2,
             Quant::Int8 => dim + 4,
+            Quant::Pq { m, bits } => {
+                let m = if m == 0 { pq::default_m(dim) } else { m };
+                pq::packed_row_bytes(m, bits)
+            }
         }
     }
 }
@@ -169,6 +222,21 @@ pub enum RowArena {
     F32(Vec<f32>),
     F16(Vec<u16>),
     I8 { codes: Vec<i8>, scales: Vec<f32> },
+    Pq(pq::PqArena),
+}
+
+/// Per-query-panel scan context from [`RowArena::begin_panel`]: the ADC
+/// lookup table for PQ-trained arenas, a free no-op for every other
+/// codec. Build it **once per scan** (per shard / per query), not per
+/// row block — for pq8 the table is `nq · m · 256` dots and rebuilding
+/// it per 64-row block would cost more than the scan it accelerates.
+pub struct PanelCtx(Option<pq::PanelLut>);
+
+impl PanelCtx {
+    /// The no-op context (valid for any non-PQ scan).
+    pub fn none() -> PanelCtx {
+        PanelCtx(None)
+    }
 }
 
 impl RowArena {
@@ -177,6 +245,19 @@ impl RowArena {
             Quant::F32 => RowArena::F32(Vec::new()),
             Quant::F16 => RowArena::F16(Vec::new()),
             Quant::Int8 => RowArena::I8 { codes: Vec::new(), scales: Vec::new() },
+            Quant::Pq { m, bits } => RowArena::Pq(pq::PqArena::new(m, bits)),
+        }
+    }
+
+    /// Empty arena with `src`'s codec **and trained state**: a PQ clone
+    /// shares `src`'s codebook (`Arc`), so [`RowArena::push_row_from`]
+    /// between the two copies packed bytes verbatim. Compaction and IVF
+    /// list construction must use this instead of [`RowArena::new`] —
+    /// a fresh PQ arena would restart staging and lose the codebook.
+    pub fn new_like(src: &RowArena) -> RowArena {
+        match src {
+            RowArena::Pq(a) => RowArena::Pq(a.new_like()),
+            other => RowArena::new(other.quant()),
         }
     }
 
@@ -185,6 +266,7 @@ impl RowArena {
             RowArena::F32(_) => Quant::F32,
             RowArena::F16(_) => Quant::F16,
             RowArena::I8 { .. } => Quant::Int8,
+            RowArena::Pq(a) => Quant::Pq { m: a.m(), bits: a.bits() },
         }
     }
 
@@ -194,10 +276,14 @@ impl RowArena {
             RowArena::F32(d) => d.len() / dim,
             RowArena::F16(d) => d.len() / dim,
             RowArena::I8 { codes, .. } => codes.len() / dim,
+            RowArena::Pq(a) => a.rows(dim),
         }
     }
 
-    /// Encode and append one row.
+    /// Encode and append one row. A PQ arena stages raw rows until
+    /// [`pq::PQ_TRAIN_ROWS`] arrive (scored exactly until then), then
+    /// trains once and encodes this and every later row incrementally
+    /// with the frozen codebook.
     pub fn push(&mut self, v: &[f32]) {
         match self {
             RowArena::F32(d) => d.extend_from_slice(v),
@@ -207,12 +293,61 @@ impl RowArena {
                 codes.resize(start + v.len(), 0);
                 scales.push(quantize_i8_row(v, &mut codes[start..]));
             }
+            RowArena::Pq(a) => a.push(v),
+        }
+    }
+
+    /// Force PQ codebook training on whatever is staged (IVF `build`
+    /// uses its build seed here so books are deterministic per seed even
+    /// below the staging threshold). No-op for other codecs or an
+    /// already-trained arena.
+    pub fn pq_train(&mut self, dim: usize, seed: u64) {
+        if let RowArena::Pq(a) = self {
+            a.train_now(dim, seed);
+        }
+    }
+
+    /// Direct access to the PQ state (persist round-trips codebooks and
+    /// packed codes; `None` for other codecs).
+    pub fn as_pq(&self) -> Option<&pq::PqArena> {
+        match self {
+            RowArena::Pq(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_pq_mut(&mut self) -> Option<&mut pq::PqArena> {
+        match self {
+            RowArena::Pq(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Encoded bytes of row `r` exactly as stored (regression hook for
+    /// the incremental-encode guarantee: ingest must never silently
+    /// re-encode untouched rows).
+    pub fn row_bytes(&self, r: usize, dim: usize) -> Vec<u8> {
+        match self {
+            RowArena::F32(d) => {
+                d[r * dim..(r + 1) * dim].iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            RowArena::F16(d) => {
+                d[r * dim..(r + 1) * dim].iter().flat_map(|x| x.to_le_bytes()).collect()
+            }
+            RowArena::I8 { codes, scales } => {
+                let mut out: Vec<u8> =
+                    codes[r * dim..(r + 1) * dim].iter().map(|&c| c as u8).collect();
+                out.extend_from_slice(&scales[r].to_le_bytes());
+                out
+            }
+            RowArena::Pq(a) => a.row_bytes(r, dim),
         }
     }
 
     /// Append row `r` of `src` (same codec, same row width) by copying
-    /// the already-encoded bytes — both codecs are deterministic, so this
+    /// the already-encoded bytes — every codec is deterministic, so this
     /// equals re-encoding the original f32 row without paying for it.
+    /// PQ requires the arenas to share one codebook ([`RowArena::new_like`]).
     pub fn push_row_from(&mut self, src: &RowArena, r: usize, dim: usize) {
         match (self, src) {
             (RowArena::F32(d), RowArena::F32(s)) => {
@@ -225,6 +360,7 @@ impl RowArena {
                 codes.extend_from_slice(&sc[r * dim..(r + 1) * dim]);
                 scales.push(ss[r]);
             }
+            (RowArena::Pq(d), RowArena::Pq(s)) => d.push_row_from(s, r, dim),
             _ => panic!("arena codec mismatch"),
         }
     }
@@ -242,20 +378,24 @@ impl RowArena {
                 *codes = super::numa::first_touch_realign(codes, dim, topo);
                 *scales = super::numa::first_touch_realign(scales, 1, topo);
             }
+            RowArena::Pq(a) => a.numa_realign(dim, topo),
         }
     }
 
-    /// Arena footprint in bytes (codes plus per-row scales).
+    /// Arena footprint in bytes (codes plus per-row scales; packed codes
+    /// plus the amortized codebook for trained PQ).
     pub fn bytes(&self) -> usize {
         match self {
             RowArena::F32(d) => d.len() * 4,
             RowArena::F16(d) => d.len() * 2,
             RowArena::I8 { codes, scales } => codes.len() + scales.len() * 4,
+            RowArena::Pq(a) => a.bytes(),
         }
     }
 
     /// Decode row `r` back to f32 (tests and diagnostics; the scan path
-    /// never does this — it decodes in registers).
+    /// never does this — it decodes in registers). PQ reconstructs from
+    /// the chosen centroids.
     pub fn dequant_row(&self, r: usize, dim: usize) -> Vec<f32> {
         match self {
             RowArena::F32(d) => d[r * dim..(r + 1) * dim].to_vec(),
@@ -264,13 +404,47 @@ impl RowArena {
                 .iter()
                 .map(|&c| c as f32 * scales[r])
                 .collect(),
+            RowArena::Pq(a) => a.dequant_row(r, dim),
+        }
+    }
+
+    /// Build the scan context for a query panel: the ADC lookup table
+    /// when this arena is PQ-trained, a free no-op otherwise. Hoist this
+    /// out of block loops — one call per (panel, scan), reused across
+    /// every `[lo, hi)` block and across arenas **sharing the same
+    /// codebook** (IVF lists).
+    pub fn begin_panel(&self, queries: &[f32], nq: usize, dim: usize) -> PanelCtx {
+        debug_assert_eq!(queries.len(), nq * dim, "query panel shape mismatch");
+        match self {
+            RowArena::Pq(a) => PanelCtx(a.book().map(|book| book.build_lut(queries, nq))),
+            _ => PanelCtx(None),
         }
     }
 
     /// Score the query panel against rows `[lo, hi)` through the codec's
     /// panel kernel: `out[q * (hi - lo) + r] = queries[q] · row[lo + r]`.
+    /// Convenience form that builds the panel context itself — scans that
+    /// loop over blocks must use [`RowArena::begin_panel`] +
+    /// [`RowArena::panel_scores_ctx_into`] instead.
     pub fn panel_scores_into(
         &self,
+        queries: &[f32],
+        nq: usize,
+        lo: usize,
+        hi: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let ctx = self.begin_panel(queries, nq, dim);
+        self.panel_scores_ctx_into(&ctx, queries, nq, lo, hi, dim, out);
+    }
+
+    /// [`RowArena::panel_scores_into`] with a caller-held context. The
+    /// context must come from [`RowArena::begin_panel`] on this arena
+    /// (or one sharing its codebook) for the same query panel.
+    pub fn panel_scores_ctx_into(
+        &self,
+        ctx: &PanelCtx,
         queries: &[f32],
         nq: usize,
         lo: usize,
@@ -295,6 +469,36 @@ impl RowArena {
                 dim,
                 out,
             ),
+            RowArena::Pq(a) => match (a.book(), a.codes()) {
+                (Some(book), Some(codes)) => {
+                    let lut = ctx.0.as_ref().expect("PQ scan without a panel context");
+                    debug_assert!(
+                        std::sync::Arc::ptr_eq(&lut.book, book),
+                        "panel context built for a different codebook"
+                    );
+                    assert_eq!(lut.nq, nq, "panel context query count mismatch");
+                    let pb = book.packed_row_bytes();
+                    kernels::panel_scores_pq_into(
+                        &lut.lut,
+                        nq,
+                        &codes[lo * pb..hi * pb],
+                        nr,
+                        book.m,
+                        book.k(),
+                        book.bits,
+                        out,
+                    );
+                }
+                // Staged rows are raw f32 — scored exactly.
+                _ => kernels::panel_scores_into(
+                    queries,
+                    nq,
+                    &a.staged().expect("staged PQ arena")[lo * dim..hi * dim],
+                    nr,
+                    dim,
+                    out,
+                ),
+            },
         }
     }
 }
@@ -395,11 +599,22 @@ mod tests {
         assert_eq!(Quant::parse("F16"), Some(Quant::F16));
         assert_eq!(Quant::parse("i8"), Some(Quant::Int8));
         assert_eq!(Quant::parse("fp32"), Some(Quant::F32));
-        assert_eq!(Quant::parse("pq4"), None);
+        assert_eq!(Quant::parse("pq4"), Some(Quant::pq(4)));
+        assert_eq!(Quant::parse("PQ8"), Some(Quant::pq(8)));
+        assert_eq!(Quant::parse("pq2"), None);
         assert_eq!(Quant::F32.bytes_per_row(768), 3072);
         assert_eq!(Quant::F16.bytes_per_row(768), 1536);
         assert_eq!(Quant::Int8.bytes_per_row(768), 772);
         assert_eq!(Quant::Int8.name(), "int8");
+        // PQ: dim 768 resolves to m = 96 (sub-dim 8); pq4 packs two
+        // codes per byte — the ≤ 0.15× of int8 the admission model sees.
+        assert_eq!(Quant::pq(4).resolved(768), Quant::Pq { m: 96, bits: 4 });
+        assert_eq!(Quant::pq(4).bytes_per_row(768), 48);
+        assert_eq!(Quant::pq(8).bytes_per_row(768), 96);
+        assert_eq!(Quant::Pq { m: 64, bits: 4 }.bytes_per_row(768), 32);
+        assert_eq!(Quant::pq(4).name(), "pq4");
+        assert_eq!(Quant::pq(8).name(), "pq8");
+        assert!(Quant::pq(4).bytes_per_row(768) * 100 <= Quant::Int8.bytes_per_row(768) * 15);
     }
 
     #[test]
@@ -427,6 +642,77 @@ mod tests {
                     "{quant:?} row {r}: {got} vs {want}"
                 );
             }
+        }
+    }
+
+    /// Below the staging threshold a PQ arena scores raw f32 rows —
+    /// bit-identical to an f32 arena; once trained, the ADC kernel must
+    /// match the dot with the row's reconstruction (the definition of
+    /// asymmetric distance), and the footprint must collapse to packed
+    /// codes + codebook.
+    #[test]
+    fn pq_arena_staged_exact_then_adc_matches_reconstruction() {
+        let mut rng = Pcg::new(21);
+        let dim = 16;
+        let n = super::pq::PQ_TRAIN_ROWS + 20;
+        let rows: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..dim).map(|_| rng.normal() as f32).collect()).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        for quant in [Quant::pq(4), Quant::pq(8)] {
+            let quant = quant.resolved(dim);
+            let mut arena = RowArena::new(quant);
+            let mut exact = RowArena::new(Quant::F32);
+            for r in rows.iter().take(100) {
+                arena.push(r);
+                exact.push(r);
+            }
+            let (mut got, mut want) = (vec![0.0f32; 100], vec![0.0f32; 100]);
+            arena.panel_scores_into(&q, 1, 0, 100, dim, &mut got);
+            exact.panel_scores_into(&q, 1, 0, 100, dim, &mut want);
+            assert_eq!(got, want, "{quant:?}: staged PQ scan must be exact");
+            assert_eq!(arena.bytes(), 100 * dim * 4, "staged rows are raw f32");
+
+            for r in rows.iter().skip(100) {
+                arena.push(r);
+            }
+            assert!(arena.as_pq().unwrap().trained());
+            assert_eq!(arena.rows(dim), n);
+            let book_bytes = arena.as_pq().unwrap().book().unwrap().bytes();
+            assert_eq!(arena.bytes(), n * quant.bytes_per_row(dim) + book_bytes);
+            let mut got = vec![0.0f32; n];
+            arena.panel_scores_into(&q, 1, 0, n, dim, &mut got);
+            for r in 0..n {
+                let recon = arena.dequant_row(r, dim);
+                let adc: f32 = q.iter().zip(&recon).map(|(a, b)| a * b).sum();
+                assert!(
+                    (got[r] - adc).abs() <= 1e-3 * (1.0 + adc.abs()),
+                    "{quant:?} row {r}: {} vs {adc}",
+                    got[r]
+                );
+            }
+        }
+    }
+
+    /// `new_like` + `push_row_from` (the compaction path) must copy
+    /// packed PQ bytes verbatim and keep scoring identical.
+    #[test]
+    fn pq_compaction_copies_bytes_bit_identically() {
+        let mut rng = Pcg::new(22);
+        let dim = 8;
+        let n = super::pq::PQ_TRAIN_ROWS + 5;
+        let mut arena = RowArena::new(Quant::pq(4).resolved(dim));
+        for _ in 0..n {
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            arena.push(&v);
+        }
+        let mut scratch = RowArena::new_like(&arena);
+        let keep: Vec<usize> = (0..n).filter(|r| r % 3 != 0).collect();
+        for &r in &keep {
+            scratch.push_row_from(&arena, r, dim);
+        }
+        assert_eq!(scratch.rows(dim), keep.len());
+        for (i, &r) in keep.iter().enumerate() {
+            assert_eq!(scratch.row_bytes(i, dim), arena.row_bytes(r, dim), "row {r}");
         }
     }
 }

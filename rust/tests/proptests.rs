@@ -539,6 +539,11 @@ fn prop_quantized_scores_within_codec_epsilon() {
                         let scale = quantize_i8_row(row, &mut codes);
                         q_l1 * scale * 0.51 + 1e-4 * (1.0 + exact.abs())
                     }
+                    // n ≤ 150 is below the PQ staging threshold (256), so
+                    // the arena still holds raw f32 rows and scores
+                    // exactly — lossy ADC only starts once training
+                    // triggers (covered by `prop_pq_scan_recall`).
+                    Quant::Pq { .. } => 1e-4 * (1.0 + exact.abs()),
                 };
                 if (hit.score - exact).abs() > eps {
                     return Err(format!(
@@ -656,6 +661,146 @@ fn prop_quantized_topk_overlap_vs_f32() {
     for (codec, (hits, total)) in tally.borrow().iter() {
         let overlap = *hits as f64 / *total as f64;
         assert!(overlap >= 0.9, "{codec}: aggregate top-{k} overlap {overlap:.3} < 0.9");
+    }
+}
+
+/// Trained PQ (the lossy regime, past the staging threshold) on clustered
+/// corpora: top-10 recall vs the f32 exact scan stays ≥ 0.9 in aggregate
+/// for {flat, IVF full-probe} × {pq4, pq8}; `search_batch` is
+/// bit-identical to per-query `search`; and PQ snapshots round-trip
+/// bit-identically through tombstone + decode, with compaction changing
+/// no results. Rows interleave across clusters so the training prefix
+/// sees every mode of the distribution.
+#[test]
+fn prop_pq_scan_recall() {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use windve::vecstore::persist::decode_index;
+    use windve::vecstore::{FlatIndex, Index, IvfIndex, Quant, QuantizedFlatIndex};
+    let tally: RefCell<HashMap<String, (u64, u64)>> = RefCell::new(HashMap::new());
+    let k = 10usize;
+    property("pq trained-scan recall >= 0.9", 12, |g: &mut Gen| {
+        let dim = *g.pick(&[16usize, 32]);
+        let ncl = g.usize(4, 8);
+        let n = g.usize(280, 380);
+        // Unit cluster centers, then rows = center + small noise,
+        // assigned round-robin so the first 256 rows (the PQ training
+        // prefix for the flat arena) cover every cluster.
+        let centers: Vec<Vec<f32>> = (0..ncl)
+            .map(|_| {
+                let mut v: Vec<f32> = (0..dim).map(|_| g.rng().normal() as f32).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+                v.iter_mut().for_each(|x| *x /= norm);
+                v
+            })
+            .collect();
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let c = &centers[i % ncl];
+                let mut v: Vec<f32> =
+                    c.iter().map(|x| x + 0.1 * g.rng().normal() as f32).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+                v.iter_mut().for_each(|x| *x /= norm);
+                v
+            })
+            .collect();
+        let mut flat = FlatIndex::new(dim);
+        for (i, v) in rows.iter().enumerate() {
+            flat.add(i as u64, v);
+        }
+        // Queries: perturbed cluster centers (what RAG traffic looks
+        // like when the corpus is clustered).
+        let queries: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let c = g.pick(&centers).clone();
+                let mut v: Vec<f32> =
+                    c.iter().map(|x| x + 0.1 * g.rng().normal() as f32).collect();
+                let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-9);
+                v.iter_mut().for_each(|x| *x /= norm);
+                v
+            })
+            .collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.as_slice()).collect();
+        for quant in [Quant::pq(4), Quant::pq(8)] {
+            let mut qflat = QuantizedFlatIndex::new(dim, quant);
+            // Full probe: IVF recall differences come from the codec
+            // alone, not from probing.
+            let mut ivf = IvfIndex::with_quant(dim, 6, 6, quant);
+            for (i, v) in rows.iter().enumerate() {
+                qflat.add(i as u64, v);
+                ivf.add(i as u64, v);
+            }
+            ivf.build(g.u64(0, 1000));
+            if !qflat.pq_trained() {
+                return Err(format!("{quant:?}: {n} rows must train the flat arena"));
+            }
+            for (name, idx) in
+                [("flat", &qflat as &dyn Index), ("ivf", &ivf as &dyn Index)]
+            {
+                // Recall vs the f32 exact scan.
+                let mut case_hits = 0u64;
+                for q in &queries {
+                    let truth: Vec<u64> =
+                        flat.search(q, k).into_iter().map(|h| h.id).collect();
+                    let approx = idx.search(q, k);
+                    case_hits +=
+                        approx.iter().filter(|h| truth.contains(&h.id)).count() as u64;
+                }
+                let denom = (queries.len() * k) as u64;
+                let case_recall = case_hits as f64 / denom as f64;
+                if case_recall < 0.5 {
+                    return Err(format!(
+                        "{name}/{}: case recall {case_recall:.2} < 0.5",
+                        quant.name()
+                    ));
+                }
+                let mut t = tally.borrow_mut();
+                let e = t.entry(format!("{name}/{}", quant.name())).or_insert((0, 0));
+                e.0 += case_hits;
+                e.1 += denom;
+                // Batch must be bit-identical to per-query search.
+                let batch = idx.search_batch(&qrefs, k);
+                for (qi, q) in queries.iter().enumerate() {
+                    if batch[qi] != idx.search(q, k) {
+                        return Err(format!(
+                            "{name}/{}: batch != single for q{qi}",
+                            quant.name()
+                        ));
+                    }
+                }
+            }
+            // Tombstone + persist round-trip: the restored index scores
+            // bit-identically to the source with its skip mask engaged.
+            qflat.remove(3);
+            qflat.remove((n / 2) as u64);
+            let restored = decode_index(&qflat.snapshot_bytes().unwrap())
+                .map_err(|e| format!("{quant:?}: decode failed: {e}"))?;
+            for q in &queries {
+                let a: Vec<(u64, u32)> =
+                    restored.search(q, k).iter().map(|h| (h.id, h.score.to_bits())).collect();
+                let b: Vec<(u64, u32)> =
+                    qflat.search(q, k).iter().map(|h| (h.id, h.score.to_bits())).collect();
+                if a != b {
+                    return Err(format!("{quant:?}: persisted scan diverged"));
+                }
+            }
+            // Compaction drops the tombstones without changing results.
+            let before: Vec<_> = queries.iter().map(|q| qflat.search(q, k)).collect();
+            qflat.compact();
+            if qflat.tombstones() != 0 {
+                return Err("compact left tombstones".into());
+            }
+            for (q, want) in queries.iter().zip(&before) {
+                if &qflat.search(q, k) != want {
+                    return Err(format!("{quant:?}: compaction changed results"));
+                }
+            }
+        }
+        Ok(())
+    });
+    for (combo, (hits, total)) in tally.borrow().iter() {
+        let recall = *hits as f64 / *total as f64;
+        assert!(recall >= 0.9, "{combo}: aggregate top-{k} recall {recall:.3} < 0.9");
     }
 }
 
