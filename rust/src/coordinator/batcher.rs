@@ -53,10 +53,22 @@ impl<T> DeviceQueue<T> {
         }
     }
 
+    /// Take the queue lock, recovering from poisoning. Every panic point
+    /// in the critical sections below leaves the deque structurally
+    /// intact (allocation failures in `push_back`/`collect` surface
+    /// before or between whole-item moves), so recovery can at worst
+    /// lose in-flight items — while honoring the poison would instead
+    /// panic every worker blocked on this device, wedging the service.
+    fn lock(&self) -> std::sync::MutexGuard<'_, VecDeque<Pending<T>>> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Push one admitted query (admission control already happened in the
     /// queue manager; this queue never refuses).
     pub fn push(&self, p: Pending<T>) {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.lock();
         q.push_back(p);
         drop(q);
         self.cv.notify_one();
@@ -65,7 +77,7 @@ impl<T> DeviceQueue<T> {
     /// Block until at least one query is available (or shutdown), then
     /// drain up to `max` in arrival order. `None` = shut down and empty.
     pub fn drain_batch(&self, max: usize) -> Option<Vec<Pending<T>>> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.lock();
         loop {
             if !q.is_empty() {
                 let n = q.len().min(max.max(1));
@@ -74,12 +86,16 @@ impl<T> DeviceQueue<T> {
             if self.closed.load(Ordering::Acquire) {
                 return None;
             }
-            q = self.cv.wait(q).unwrap();
+            // Same poison-recovery rationale as `lock`.
+            q = self
+                .cv
+                .wait(q)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -22,9 +22,11 @@
 //! which resident entry is considered least recent.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
 
 use crate::runtime::tokenizer;
+// Loom-switchable mutex: the stats-snapshot consistency argument below is
+// model-checked by tests/loom_admission.rs (cache scenarios).
+use crate::util::sync::{Mutex, MutexGuard};
 
 /// Slab index sentinel for "no node".
 const NIL: usize = usize::MAX;
@@ -132,8 +134,22 @@ impl EmbeddingCache {
         tokenizer::fnv1a64(&bytes)
     }
 
+    /// Take the cache lock, recovering from poisoning. Every panic point
+    /// under this lock leaves the structure consistent: the intrusive
+    /// list/slab updates are infallible index writes, and the only
+    /// fallible operations (map/slab allocation in `put`) sit at seams
+    /// where bailing out mid-`put` at worst leaks one slab slot — it
+    /// loses a cache entry, never corrupts lookup. A poisoned *cache*
+    /// must therefore not take down request threads: it is a shield in
+    /// front of admission, not a source of truth.
+    fn lock(&self) -> MutexGuard<'_, Lru> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub fn get(&self, key: u64) -> Option<Vec<f32>> {
-        let mut lru = self.inner.lock().unwrap();
+        let mut lru = self.lock();
         match lru.map.get(&key).copied() {
             Some(i) => {
                 lru.touch(i);
@@ -148,7 +164,7 @@ impl EmbeddingCache {
     }
 
     pub fn put(&self, key: u64, vector: Vec<f32>) {
-        let mut lru = self.inner.lock().unwrap();
+        let mut lru = self.lock();
         if lru.capacity == 0 {
             return;
         }
@@ -185,7 +201,7 @@ impl EmbeddingCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.lock().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -203,7 +219,7 @@ impl EmbeddingCache {
     /// completed `get` calls, however many threads are hammering the
     /// cache.
     pub fn snapshot(&self) -> CacheStats {
-        let lru = self.inner.lock().unwrap();
+        let lru = self.lock();
         let total = lru.hits + lru.misses;
         CacheStats {
             hits: lru.hits,
@@ -219,7 +235,7 @@ impl EmbeddingCache {
     /// (and their recency order) untouched — windowed hit-rate probes
     /// must not have to dump the cache to reset their denominator.
     pub fn reset_stats(&self) {
-        let mut lru = self.inner.lock().unwrap();
+        let mut lru = self.lock();
         lru.hits = 0;
         lru.misses = 0;
         lru.evictions = 0;

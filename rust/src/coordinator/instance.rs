@@ -124,6 +124,9 @@ pub fn spawn_worker(
             }
             log::info!("{name}: queue closed, exiting");
         })
+        // lint:allow(unwrap-expect): startup-time only — a host that
+        // cannot spawn worker threads cannot run the service at all, and
+        // there is no caller to report a half-started instance to.
         .expect("spawn worker thread")
 }
 

@@ -86,8 +86,36 @@
 //! benches/micro.rs). Per-class occupancy is acquired before the shared
 //! pool (with rollback on pool exhaustion), so the cap and the pool bound
 //! both hold at every instant, on both device legs.
+//!
+//! # Ordering discipline
+//!
+//! Every atomic here is one of exactly three things, and each has one
+//! ordering rule (each use site carries an `// ordering:` note; the
+//! `xtask lint` pass rejects un-justified `Relaxed`/`SeqCst`):
+//!
+//! * **Admission counters** (`npu_len`, `cpu_len`, per-class occupancy):
+//!   the *value* is the invariant — a successful CAS proves the bound
+//!   held at that instant on the single modification order of that cell.
+//!   CAS success uses `AcqRel` so a slot release *happens-before* the
+//!   acquisition that reuses the freed capacity (the release edge
+//!   publishes the completed work's effects; the acquire edge lets the
+//!   next holder read them). Initial/failed loads may be `Relaxed`: they
+//!   only seed a CAS that re-validates, and a stale read costs one retry,
+//!   never a bound violation.
+//! * **Occupancy getters**: `Acquire`, pairing with the `AcqRel` CAS
+//!   writes, so a policy read (e.g. the offload low-water check) observes
+//!   everything published before the occupancy it sees.
+//! * **Stats counters** (`routed_*`, `rejected_*`, `bad_releases`):
+//!   monotonic telemetry, read only by `stats()` for `/v1/stats`.
+//!   `Relaxed` — no other memory depends on their values; fetch_add's
+//!   read-modify-write atomicity alone guarantees no lost increments.
+//!
+//! `SeqCst` appears nowhere: no protocol here needs a single total order
+//! across *different* atomics, only per-cell bounds and release/acquire
+//! publication — which is exactly what the loom suite
+//! (`tests/loom_admission.rs`) proves on every interleaving.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Dispatch decision for one query (Algorithm 1's return value).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -335,16 +363,24 @@ impl QueueManager {
         let cost = cost.max(1);
         match class {
             WorkClass::Embed => {
+                // Embed is pool-first (it has no cap below the pool): the
+                // per-class counter is bookkeeping *under* the pool
+                // reservation, so its fetch_add can never exceed a bound.
+                // AcqRel keeps the class counter ordered with the pool
+                // slot it annotates (release pairs via saturating_release).
                 if try_acquire(&self.npu_len, self.npu_depth, cost) {
                     self.embed_npu.fetch_add(cost, Ordering::AcqRel);
+                    // ordering: Relaxed — monotonic stats counter, see module docs.
                     self.routed_npu.fetch_add(1, Ordering::Relaxed);
                     return Route::Npu;
                 }
                 if self.hetero && try_acquire(&self.cpu_len, self.cpu_depth, cost) {
                     self.embed_cpu.fetch_add(cost, Ordering::AcqRel);
+                    // ordering: Relaxed — monotonic stats counter, see module docs.
                     self.routed_cpu.fetch_add(1, Ordering::Relaxed);
                     return Route::Cpu;
                 }
+                // ordering: Relaxed — monotonic stats counter, see module docs.
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 Route::Busy
             }
@@ -354,11 +390,13 @@ impl QueueManager {
                 // scan leaves no residue.
                 if try_acquire(&self.retr_cpu, self.retrieve_cap, cost) {
                     if try_acquire(&self.cpu_len, self.cpu_depth, cost) {
+                        // ordering: Relaxed — monotonic stats counter.
                         self.routed_retrieve.fetch_add(1, Ordering::Relaxed);
                         return Route::Cpu;
                     }
                     saturating_release(&self.retr_cpu, cost);
                 }
+                // ordering: Relaxed — monotonic stats counter.
                 self.rejected_retrieve.fetch_add(1, Ordering::Relaxed);
                 Route::Busy
             }
@@ -369,11 +407,13 @@ impl QueueManager {
                 // combined occupancy at or under the calibrated depth.
                 if try_acquire(&self.ingest_cpu, self.ingest_cap, cost) {
                     if try_acquire(&self.cpu_len, self.cpu_depth, cost) {
+                        // ordering: Relaxed — monotonic stats counter.
                         self.routed_ingest.fetch_add(1, Ordering::Relaxed);
                         return Route::Cpu;
                     }
                     saturating_release(&self.ingest_cpu, cost);
                 }
+                // ordering: Relaxed — monotonic stats counter.
                 self.rejected_ingest.fetch_add(1, Ordering::Relaxed);
                 Route::Busy
             }
@@ -394,11 +434,13 @@ impl QueueManager {
         let cost = cost.max(1);
         if try_acquire(&self.retr_npu, self.npu_retrieve_cap, cost) {
             if try_acquire(&self.npu_len, self.npu_depth, cost) {
+                // ordering: Relaxed — monotonic stats counter.
                 self.routed_retrieve_npu.fetch_add(1, Ordering::Relaxed);
                 return Route::Npu;
             }
             saturating_release(&self.retr_npu, cost);
         }
+        // ordering: Relaxed — monotonic stats counter.
         self.rejected_retrieve_npu.fetch_add(1, Ordering::Relaxed);
         Route::Busy
     }
@@ -415,11 +457,13 @@ impl QueueManager {
         let cost = cost.max(1);
         if try_acquire(&self.ingest_npu, self.npu_ingest_cap, cost) {
             if try_acquire(&self.npu_len, self.npu_depth, cost) {
+                // ordering: Relaxed — monotonic stats counter.
                 self.routed_ingest_npu.fetch_add(1, Ordering::Relaxed);
                 return Route::Npu;
             }
             saturating_release(&self.ingest_npu, cost);
         }
+        // ordering: Relaxed — monotonic stats counter.
         self.rejected_ingest_npu.fetch_add(1, Ordering::Relaxed);
         Route::Busy
     }
@@ -443,6 +487,13 @@ impl QueueManager {
     /// instead of absorbing it.
     pub fn release_class(&self, class: WorkClass, route: Route, cost: usize) {
         let cost = cost.max(1);
+        // Each arm frees the per-class counter FIRST, then credits the
+        // shared pool with only what was actually freed: the pool can
+        // never be over-credited past what this class provably held, so
+        // a double release cannot liberate another class's capacity.
+        // ordering: Relaxed on bad_releases — monotonic stats counter,
+        // see module docs; the freed-amount feedback, not the counter,
+        // carries the containment invariant.
         match (class, route) {
             (_, Route::Busy) => {}
             (WorkClass::Embed, Route::Npu) => {
@@ -489,6 +540,21 @@ impl QueueManager {
             }
         }
     }
+
+    /// Wrap an already-admitted `(class, route, cost)` in an RAII guard
+    /// that releases it exactly once on drop. The service's scan legs use
+    /// this so every early-return and panic path after admission still
+    /// returns the slots (the guard moved out of PR 4's private
+    /// `ScanAdmission` into the queue manager so the loom suite can
+    /// model-check the guard's drop path itself).
+    pub fn guard(&self, class: WorkClass, route: Route, cost: usize) -> AdmissionGuard<'_> {
+        AdmissionGuard { qm: self, class, route, cost }
+    }
+
+    // Occupancy getters load with Acquire, pairing with the AcqRel CAS
+    // writes in try_acquire/saturating_release (see "Ordering discipline"
+    // in the module docs): a policy decision made on an observed
+    // occupancy also observes everything published before it.
 
     /// Total NPU-pool occupancy in cost units (embed + offloaded scans).
     pub fn npu_occupancy(&self) -> usize {
@@ -568,6 +634,9 @@ impl QueueManager {
         self.npu_depth + self.cpu_depth
     }
 
+    // ordering: Relaxed throughout — pure monotonic stats counters (see
+    // module docs); a snapshot is advisory telemetry, not a cut of a
+    // consistent state, so no counter's value orders any other memory.
     pub fn stats(&self) -> QueueStats {
         QueueStats {
             routed_npu: self.routed_npu.load(Ordering::Relaxed),
@@ -586,7 +655,46 @@ impl QueueManager {
     }
 }
 
+/// RAII wrapper over an admitted `(class, route, cost)` — releases it on
+/// drop via [`QueueManager::release_class`]. Built by
+/// [`QueueManager::guard`] *after* a successful dispatch; dropping a
+/// guard for work that was never admitted is the double-release case the
+/// queue manager already contains (counted in `bad_releases`).
+#[derive(Debug)]
+pub struct AdmissionGuard<'a> {
+    qm: &'a QueueManager,
+    class: WorkClass,
+    route: Route,
+    cost: usize,
+}
+
+impl AdmissionGuard<'_> {
+    /// The admitted route (handy when the guard travels with the work).
+    pub fn route(&self) -> Route {
+        self.route
+    }
+
+    /// The admitted slot cost.
+    pub fn cost(&self) -> usize {
+        self.cost
+    }
+}
+
+impl Drop for AdmissionGuard<'_> {
+    fn drop(&mut self) {
+        self.qm.release_class(self.class, self.route, self.cost);
+    }
+}
+
 /// CAS-increment `len` by `cost` if the result stays ≤ `cap`.
+///
+/// ordering: the initial load is Relaxed — it only seeds the CAS, whose
+/// success re-validates the bound against the cell's single modification
+/// order (a stale seed costs one retry, never an over-admission). CAS
+/// success is AcqRel: Acquire pairs with a releaser's AcqRel so the new
+/// holder sees the freed work's writes; Release publishes this
+/// acquisition to the eventual releaser. CAS failure reloads Relaxed for
+/// the same seed-only reason.
 fn try_acquire(len: &AtomicUsize, cap: usize, cost: usize) -> bool {
     let mut cur = len.load(Ordering::Relaxed);
     loop {
@@ -603,6 +711,12 @@ fn try_acquire(len: &AtomicUsize, cap: usize, cost: usize) -> bool {
 
 /// CAS-decrement `len` by up to `cost`, saturating at zero; returns how
 /// much was actually freed.
+///
+/// ordering: loads are Acquire (initial and on CAS failure) because the
+/// *observed value* feeds the freed-amount containment logic in
+/// `release_class`, not just a retry seed; success is AcqRel so the
+/// release edge publishes the completed work to whichever `try_acquire`
+/// next claims the freed capacity.
 fn saturating_release(len: &AtomicUsize, cost: usize) -> usize {
     let mut cur = len.load(Ordering::Acquire);
     loop {

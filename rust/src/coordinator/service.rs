@@ -22,7 +22,7 @@ use anyhow::Result;
 use super::batcher::{DeviceQueue, Pending};
 use super::cache::{CacheStats, EmbeddingCache};
 use super::instance::{spawn_worker, BackendFactory, Reply};
-use super::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
+use super::queue_manager::{AdmissionGuard, ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
 use crate::durability::DurableStore;
 use crate::ingest::IngestStats;
@@ -164,20 +164,21 @@ impl Default for ServiceConfig {
     }
 }
 
-/// RAII hold on an admitted retrieval scan's slots: releases on drop so
-/// the slots come back even if the scan panics (poisoned index lock,
-/// kernel assert) — a leaked scan admission would wedge retrieval into
-/// BUSY permanently.
-struct ScanAdmission<'a> {
-    qm: &'a QueueManager,
-    route: Route,
-    cost: usize,
-}
+// The scan legs hold admitted slots in a `queue_manager::AdmissionGuard`
+// (formerly a private `ScanAdmission` here): releases on drop so the
+// slots come back even if the scan panics (poisoned index lock, kernel
+// assert) — a leaked scan admission would wedge retrieval into BUSY
+// permanently. It lives with the queue manager so the loom suite
+// model-checks the guard's drop path alongside dispatch/release.
 
-impl Drop for ScanAdmission<'_> {
-    fn drop(&mut self) {
-        self.qm.release_class(WorkClass::Retrieve, self.route, self.cost);
-    }
+/// Lock one of the service's attachment slots (`retrieval`,
+/// `npu_retrieval`, `durability`), recovering from poisoning: the
+/// critical sections only swap or clone an `Option<Arc<_>>`, which can
+/// never leave the slot torn, so honoring a poison (from a panic on an
+/// unrelated code path that happened to hold the lock) would only turn
+/// one thread's panic into a service-wide retrieval outage.
+fn attach_lock<T>(slot: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Split the embedded panel into (original indexes, query slices) for
@@ -388,25 +389,25 @@ impl WindVE {
                 exec.set_numa(Some(topo));
             }
         }
-        *self.retrieval.lock().expect("retrieval lock poisoned") = Some(exec);
-        *self.npu_retrieval.lock().expect("npu retrieval lock poisoned") = None;
+        *attach_lock(&self.retrieval) = Some(exec);
+        *attach_lock(&self.npu_retrieval) = None;
     }
 
     /// The attached retrieval executor, if any.
     pub fn retrieval(&self) -> Option<Arc<RetrievalExecutor>> {
-        self.retrieval.lock().expect("retrieval lock poisoned").clone()
+        attach_lock(&self.retrieval).clone()
     }
 
     /// Attach the NPU offload scanner (a device-side mirror of the
     /// attached executor's corpus). Offload additionally requires
     /// `npu_retrieval_depth > 0` in the service config.
     pub fn attach_npu_offload(&self, scanner: Arc<NpuScanner>) {
-        *self.npu_retrieval.lock().expect("npu retrieval lock poisoned") = Some(scanner);
+        *attach_lock(&self.npu_retrieval) = Some(scanner);
     }
 
     /// The attached NPU offload scanner, if any.
     pub fn npu_retrieval(&self) -> Option<Arc<NpuScanner>> {
-        self.npu_retrieval.lock().expect("npu retrieval lock poisoned").clone()
+        attach_lock(&self.npu_retrieval).clone()
     }
 
     /// Mirror the attached executor's corpus into a host-fallback
@@ -432,12 +433,12 @@ impl WindVE {
     /// same store (`DurableStore::recover`), so the WAL watermark and
     /// the live index describe the same corpus.
     pub fn attach_durability(&self, store: Arc<DurableStore>) {
-        *self.durability.lock().expect("durability lock poisoned") = Some(store);
+        *attach_lock(&self.durability) = Some(store);
     }
 
     /// The attached durable store, if any.
     pub fn durability(&self) -> Option<Arc<DurableStore>> {
-        self.durability.lock().expect("durability lock poisoned").clone()
+        attach_lock(&self.durability).clone()
     }
 
     /// Delete a document: tombstone + version bump (NPU mirrors
@@ -486,7 +487,18 @@ impl WindVE {
         let route = self.qm.dispatch();
         let queue = match route {
             Route::Npu => &self.npu_queue,
-            Route::Cpu => self.cpu_queue.as_ref().expect("cpu route implies cpu queue"),
+            // Unreachable by construction (dispatch routes Cpu only when
+            // hetero, and hetero wiring always builds the CPU queue), but
+            // the front-end thread must not be panickable on a wiring
+            // bug: roll the admitted slot back and answer BUSY.
+            Route::Cpu => match self.cpu_queue.as_ref() {
+                Some(q) => q,
+                None => {
+                    self.qm.release_class(WorkClass::Embed, route, 1);
+                    self.metrics.counter("service.busy").inc();
+                    return Err(ServeError::Busy);
+                }
+            },
             Route::Busy => {
                 self.metrics.counter("service.busy").inc();
                 return Err(ServeError::Busy);
@@ -526,7 +538,17 @@ impl WindVE {
         }
         let queue = match route {
             Route::Npu => &self.npu_queue,
-            Route::Cpu => self.cpu_queue.as_ref().expect("cpu route implies cpu queue"),
+            // Locally provable (the Cpu leg is only tried when
+            // `cpu_queue.is_some()` above), but kept panic-free the same
+            // way as `submit`: release and refuse rather than unwind.
+            Route::Cpu => match self.cpu_queue.as_ref() {
+                Some(q) => q,
+                None => {
+                    self.qm.release_class(WorkClass::Ingest, route, 1);
+                    self.metrics.counter("service.ingest_busy").inc();
+                    return Err(ServeError::Busy);
+                }
+            },
             Route::Busy => {
                 self.metrics.counter("service.ingest_busy").inc();
                 return Err(ServeError::Busy);
@@ -694,7 +716,7 @@ impl WindVE {
         // legs so the latency histograms only record real scan work.
         let unit = self.retrieval_cost_unit_bytes;
         let any_embedded = embeddings.iter().any(Option::is_some);
-        let mut offload: Option<(Arc<NpuScanner>, ScanAdmission<'_>)> = None;
+        let mut offload: Option<(Arc<NpuScanner>, AdmissionGuard<'_>)> = None;
         if any_embedded && self.npu_offload_admission && self.qm.npu_retrieve_cap() > 0 {
             if let Some(scanner) = self.npu_retrieval() {
                 if scanner.corpus_version() != exec.version() {
@@ -707,7 +729,7 @@ impl WindVE {
                     if self.qm.dispatch_retrieve_npu(cost) == Route::Npu {
                         self.metrics.counter("service.retrieve_cost_units_npu").add(cost as u64);
                         let admission =
-                            ScanAdmission { qm: self.qm.as_ref(), route: Route::Npu, cost };
+                            self.qm.guard(WorkClass::Retrieve, Route::Npu, cost);
                         offload = Some((scanner, admission));
                     }
                     // NPU leg full: fall through to the CPU leg.
@@ -738,7 +760,7 @@ impl WindVE {
             let session = exec.begin_scan();
             let (mut panel_idx, mut panel) =
                 split_panel(session.dim(), &embeddings, &mut failures);
-            let mut admitted: Option<ScanAdmission<'_>> = None;
+            let mut admitted: Option<AdmissionGuard<'_>> = None;
             if !panel.is_empty() && self.retrieval_admission {
                 // Clamp to the retrieval cap: a scan whose byte-cost
                 // exceeds the whole budget degenerates to a full-budget
@@ -759,7 +781,7 @@ impl WindVE {
                     route => {
                         self.metrics.counter("service.retrieve_admitted").inc();
                         self.metrics.counter("service.retrieve_cost_units").add(cost as u64);
-                        admitted = Some(ScanAdmission { qm: self.qm.as_ref(), route, cost });
+                        admitted = Some(self.qm.guard(WorkClass::Retrieve, route, cost));
                     }
                 }
             }

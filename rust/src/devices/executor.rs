@@ -13,9 +13,15 @@
 //!   DESIGN.md §2) and by tests that must not depend on built artifacts.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+// Arc here is pure data sharing (`Arc<str>` text payloads), not part of a
+// model-checked protocol, so it stays on std; the executor's RwLock +
+// atomics come from the loom-switchable shim because the version/mirror
+// handshake below is model-checked by tests/loom_admission.rs.
+use std::sync::Arc;
 use std::time::Duration;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{RwLock, RwLockReadGuard};
 
 use anyhow::Result;
 
@@ -187,19 +193,52 @@ impl RetrievalExecutor {
     /// every front-end retrieval thread for a corpus that is intact.
     /// Scans are read-only, so recovering the guard is safe; each
     /// recovery is counted for operators.
-    fn read_index(&self) -> std::sync::RwLockReadGuard<'_, Box<dyn Index + Send + Sync>> {
-        self.index.read().unwrap_or_else(|e| {
+    fn read_index(&self) -> RwLockReadGuard<'_, Box<dyn Index + Send + Sync>> {
+        self.recover_read(self.index.read())
+    }
+
+    /// The poisoned-recovery path itself, split out so the loom suite can
+    /// drive it with a manufactured [`std::sync::PoisonError`] (a panic
+    /// inside a loom model aborts the whole model, so poisoning cannot be
+    /// induced naturally there).
+    fn recover_read<'a>(
+        &'a self,
+        res: std::sync::LockResult<RwLockReadGuard<'a, Box<dyn Index + Send + Sync>>>,
+    ) -> RwLockReadGuard<'a, Box<dyn Index + Send + Sync>> {
+        res.unwrap_or_else(|e| {
+            // ordering: Relaxed — monotonic stats counter; nothing orders
+            // against its value (the guard itself carries the data).
             self.poisoned_recoveries.fetch_add(1, Ordering::Relaxed);
             e.into_inner()
         })
     }
 
+    /// Test/loom-only probe: feed an already-poisoned `LockResult`
+    /// through the recovery path and return the recovered corpus length.
+    /// See [`RetrievalExecutor::recover_read`] for why loom needs this.
+    #[cfg(any(test, loom))]
+    #[doc(hidden)]
+    pub fn poisoned_recovery_probe(&self) -> usize {
+        let g = self
+            .index
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        self.recover_read(Err(std::sync::PoisonError::new(g))).len()
+    }
+
     /// Read guards recovered from a poisoned index lock so far.
     pub fn poisoned_recoveries(&self) -> u64 {
+        // ordering: Relaxed — monotonic stats counter (see above).
         self.poisoned_recoveries.load(Ordering::Relaxed)
     }
 
     /// Monotone corpus version: bumps on every [`RetrievalExecutor::add`].
+    ///
+    /// ordering: Acquire, pairing with the Release bumps that happen
+    /// inside the write guard — a caller that observes version v also
+    /// observes every row mutation published before the bump to v. The
+    /// loom suite proves the handshake: a mirror that saw version v and
+    /// re-checks it can never scan rows from a later, unseen commit.
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
     }
@@ -238,6 +277,9 @@ impl RetrievalExecutor {
     pub fn add(&self, id: u64, vector: &[f32]) {
         let mut g = self.index.write().expect("index lock poisoned");
         g.add(id, vector);
+        // ordering: Release — the bump publishes the row mutation above
+        // it; version() loads Acquire to pair. Still inside the guard so
+        // rows/version stay mutually consistent for guard holders.
         self.version.fetch_add(1, Ordering::Release);
     }
 
@@ -257,6 +299,7 @@ impl RetrievalExecutor {
         let items: Vec<(u64, &[f32])> =
             rows.iter().map(|(id, v)| (*id, v.as_slice())).collect();
         g.add_batch(&items);
+        // ordering: Release — publishes the batch commit (see `add`).
         self.version.fetch_add(rows.len() as u64, Ordering::Release);
     }
 
@@ -275,6 +318,7 @@ impl RetrievalExecutor {
         for (id, v) in rows {
             replaced += g.upsert(*id, v);
         }
+        // ordering: Release — publishes the upsert commit (see `add`).
         self.version.fetch_add(rows.len() as u64, Ordering::Release);
         replaced
     }
@@ -287,6 +331,7 @@ impl RetrievalExecutor {
         let mut g = self.index.write().expect("index lock poisoned");
         let killed = g.remove(id);
         if killed > 0 {
+            // ordering: Release — publishes the tombstones (see `add`).
             self.version.fetch_add(1, Ordering::Release);
         }
         killed
@@ -307,6 +352,7 @@ impl RetrievalExecutor {
         let mut g = self.index.write().expect("index lock poisoned");
         let reclaimed = g.compact();
         if reclaimed > 0 {
+            // ordering: Release — publishes the rewrite (see `add`).
             self.version.fetch_add(1, Ordering::Release);
         }
         reclaimed
@@ -318,6 +364,9 @@ impl RetrievalExecutor {
     pub fn snapshot_bytes(&self) -> Option<(Vec<u8>, u64)> {
         let g = self.read_index();
         let bytes = g.snapshot_bytes()?;
+        // ordering: Acquire — pairs with the in-guard Release bumps;
+        // writers are blocked while `g` is held, so this is exactly the
+        // version the serialized bytes were committed under.
         Some((bytes, self.version.load(Ordering::Acquire)))
     }
 
@@ -383,6 +432,10 @@ impl RetrievalExecutor {
     pub fn export_corpus(&self) -> Option<(Vec<u64>, Vec<f32>, u64)> {
         let g = self.read_index();
         let (ids, rows) = g.export_f32_rows()?;
+        // ordering: Acquire — pairs with the in-guard Release bumps, and
+        // the read guard blocks writers, so the exported rows and the
+        // version are one consistent cut (the mirror-freshness handshake
+        // the loom suite checks).
         Some((ids, rows, self.version.load(Ordering::Acquire)))
     }
 }
@@ -392,7 +445,7 @@ impl RetrievalExecutor {
 /// [`RetrievalExecutor::begin_scan`]).
 pub struct ScanSession<'a> {
     quant: Quant,
-    guard: std::sync::RwLockReadGuard<'a, Box<dyn Index + Send + Sync>>,
+    guard: RwLockReadGuard<'a, Box<dyn Index + Send + Sync>>,
 }
 
 impl ScanSession<'_> {

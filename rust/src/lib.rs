@@ -16,6 +16,18 @@
 //!   artifacts via PJRT and executes them on the request path with **no
 //!   Python anywhere at runtime**.
 
+// Unsafe hygiene: an `unsafe fn` body gets no implicit unsafe scope —
+// every unsafe *operation* must sit in its own `unsafe {}` block, each
+// carrying the `// SAFETY:` note that `cargo xtask lint` enforces.
+#![deny(unsafe_op_in_unsafe_fn)]
+// `Result`s on the admission/durability/IO paths are never
+// fire-and-forget; discarding one is a bug, not a style choice.
+#![deny(unused_must_use)]
+// `pub` that is not reachable from the crate root is a stale API
+// surface. Warn (CI promotes warnings to errors); private modules that
+// export to their parent use `pub(super)`/`pub(crate)` instead.
+#![warn(unreachable_pub)]
+
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;

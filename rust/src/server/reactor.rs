@@ -581,7 +581,13 @@ impl Reactor {
                                 return;
                             }
                         }
-                        let st = self.conns.get_mut(&token).unwrap();
+                        // Re-borrow after the framing checks; the entry
+                        // can only have vanished if an error path above
+                        // already closed the connection, in which case
+                        // there is nothing left to advance.
+                        let Some(st) = self.conns.get_mut(&token) else {
+                            return;
+                        };
                         st.phase =
                             Phase::Body { head, outcome, framing, collected: Vec::new() };
                         continue;
@@ -857,7 +863,11 @@ impl Reactor {
             self.close(token);
             return;
         }
-        let st = self.conns.get_mut(&token).unwrap();
+        // Re-borrow after the flush bookkeeping above; a vanished entry
+        // means the connection was closed concurrently — nothing to arm.
+        let Some(st) = self.conns.get_mut(&token) else {
+            return;
+        };
         st.served += 1;
         st.phase = Phase::Head;
         st.conn.finish_request();

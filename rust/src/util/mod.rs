@@ -5,5 +5,6 @@ pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod sync;
 pub mod sys;
 pub mod threadpool;

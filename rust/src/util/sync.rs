@@ -1,0 +1,48 @@
+//! Loom-switchable synchronization primitives.
+//!
+//! Modules whose concurrency protocols are model-checked (the admission
+//! queue manager, the executor's version/mirror handshake, the embedding
+//! cache) import their sync types from here instead of `std::sync`. A
+//! normal build re-exports `std::sync` verbatim — zero cost, identical
+//! types. Under `RUSTFLAGS="--cfg loom"` the same paths resolve to
+//! [`loom`](https://docs.rs/loom)'s permutation-exploring mocks, so the
+//! loom suites in `tests/loom/` can exhaustively run every interleaving
+//! of those protocols (see `docs/VERIFICATION.md`).
+//!
+//! What belongs here: types participating in a protocol a loom test
+//! drives. What does not: one-shot detection caches (e.g. the SIMD
+//! `ACTIVE` cell in `vecstore::kernels`, which must live in a `static` —
+//! loom atomics have no `const fn new`), plain `Arc<str>` data sharing,
+//! and `mpsc` channels loom does not model.
+//!
+//! The `xtask lint` pass (`std-sync-import` rule) enforces that migrated
+//! modules never quietly regress to direct `std::sync` primitives.
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+#[cfg(loom)]
+pub use loom::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// `std::sync::atomic` (or `loom::sync::atomic` under `cfg(loom)`).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Thread spawn/yield for tests that drive the shimmed types; loom's
+/// versions participate in the model's schedule exploration.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+}

@@ -48,6 +48,9 @@ pub fn set_thread_affinity(cores: &[usize]) -> io::Result<()> {
             set[c / 64] |= 1u64 << (c % 64);
         }
     }
+    // SAFETY: `set` is a live, initialized `[u64; 16]` and the size
+    // argument is exactly its byte length, so the kernel reads only
+    // memory we own; pid 0 means "calling thread" (no aliasing hazard).
     let rc = unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), set.as_ptr()) };
     if rc != 0 {
         return Err(io::Error::last_os_error());
@@ -59,6 +62,9 @@ pub fn set_thread_affinity(cores: &[usize]) -> io::Result<()> {
 #[cfg(target_os = "linux")]
 pub fn get_thread_affinity() -> io::Result<Vec<usize>> {
     let mut set: CpuSet = [0; 16];
+    // SAFETY: `set` is a live `[u64; 16]` we exclusively own and the size
+    // argument is exactly its byte length, so the kernel writes only
+    // inside it (and `u64` has no invalid bit patterns).
     let rc = unsafe { sched_getaffinity(0, std::mem::size_of::<CpuSet>(), set.as_mut_ptr()) };
     if rc != 0 {
         return Err(io::Error::last_os_error());
@@ -120,6 +126,8 @@ pub struct Epoll {
 #[cfg(target_os = "linux")]
 impl Epoll {
     pub fn new() -> io::Result<Epoll> {
+        // SAFETY: `epoll_create1` takes no pointers; it returns a fresh
+        // fd (owned by the `Epoll` below) or -1.
         let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
         if fd < 0 {
             return Err(io::Error::last_os_error());
@@ -129,6 +137,9 @@ impl Epoll {
 
     pub fn ctl(&self, op: i32, fd: i32, events: u32, data: u64) -> io::Result<()> {
         let mut ev = EpollEvent { events, data };
+        // SAFETY: `ev` is a live, initialized `repr(C)` value matching the
+        // kernel's `struct epoll_event` layout; the kernel only reads it
+        // during the call and keeps no reference afterwards.
         let rc = unsafe { epoll_ctl(self.fd, op, fd, &mut ev) };
         if rc != 0 {
             return Err(io::Error::last_os_error());
@@ -140,7 +151,16 @@ impl Epoll {
     /// `out` (caller-sized) and returns the event count. `EINTR`
     /// surfaces as `Ok(0)` — the reactor loop just re-polls.
     pub fn wait(&self, out: &mut [EpollEvent], timeout_ms: i32) -> io::Result<usize> {
-        let n = unsafe { epoll_wait(self.fd, out.as_mut_ptr(), out.len() as i32, timeout_ms) };
+        // Clamp rather than cast: a buffer above i32::MAX entries would
+        // otherwise wrap `maxevents` negative (EINVAL at best, and the
+        // `n as usize` bound below would no longer cover the slice).
+        let cap = out.len().min(i32::MAX as usize) as i32;
+        // SAFETY: `out` is exclusively borrowed and `maxevents == cap` is
+        // clamped to its length, so the kernel writes at most `cap`
+        // events inside the slice; `EpollEvent` is plain-old-data, so any
+        // bytes the kernel writes are valid values. On success
+        // `0 <= n <= cap`, keeping `out[..n]` in bounds for callers.
+        let n = unsafe { epoll_wait(self.fd, out.as_mut_ptr(), cap, timeout_ms) };
         if n < 0 {
             let e = io::Error::last_os_error();
             if e.kind() == io::ErrorKind::Interrupted {
@@ -155,6 +175,9 @@ impl Epoll {
 #[cfg(target_os = "linux")]
 impl Drop for Epoll {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` was returned by `epoll_create1`, is owned
+        // exclusively by this struct, and is closed exactly once (drop
+        // runs once); no pointers are involved.
         unsafe {
             close(self.fd);
         }
@@ -191,7 +214,14 @@ extern "C" {
 /// `poll(2)`; `timeout_ms < 0` blocks. `EINTR` → `Ok(0)`.
 #[cfg(all(unix, not(target_os = "linux")))]
 pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
-    let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
+    // Clamp rather than cast so an oversized slice cannot silently
+    // truncate `nfds` (u32 on every supported libc).
+    let nfds = fds.len().min(u32::MAX as usize) as u32;
+    // SAFETY: `fds` is exclusively borrowed and `nfds` is clamped to its
+    // length, so the kernel reads/writes only the `revents` fields of
+    // entries inside the slice; `PollFd` is plain-old-data matching the
+    // libc `struct pollfd` layout.
+    let n = unsafe { poll(fds.as_mut_ptr(), nfds, timeout_ms) };
     if n < 0 {
         let e = io::Error::last_os_error();
         if e.kind() == io::ErrorKind::Interrupted {
@@ -230,6 +260,10 @@ extern "C" {
 /// failure the current soft limit is returned unchanged.
 #[cfg(unix)]
 pub fn raise_nofile_limit(want: u64) -> u64 {
+    // SAFETY: both calls pass a pointer to a live, initialized `Rlimit`
+    // on this stack frame, matching the libc `struct rlimit` layout
+    // (two u64s on the supported 64-bit unixes); `getrlimit` writes only
+    // inside it and `setrlimit` only reads it.
     unsafe {
         let mut lim = Rlimit { rlim_cur: 0, rlim_max: 0 };
         if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {

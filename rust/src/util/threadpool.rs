@@ -72,11 +72,14 @@ mod tests {
         for _ in 0..100 {
             let c = Arc::clone(&counter);
             pool.execute(move || {
-                c.fetch_add(1, Ordering::SeqCst);
+                // ordering: Relaxed — fetch_add is atomic on its own, and
+                // the pool join below synchronizes-with every worker
+                // before the final load (SeqCst bought nothing here).
+                c.fetch_add(1, Ordering::Relaxed);
             });
         }
         drop(pool); // join
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
     }
 
     #[test]

@@ -156,8 +156,13 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "dot length mismatch");
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` returns `Avx2Fma` only after runtime CPUID
+        // detection of AVX2+FMA, and the assert above established
+        // `a.len() == b.len()` — both of `avx2::dot`'s preconditions.
         Simd::Avx2Fma => unsafe { avx2::dot(a, b) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: `active()` returns `Neon` only after runtime detection
+        // of NEON, and the assert above established `a.len() == b.len()`.
         Simd::Neon => unsafe { neon::dot(a, b) },
         _ => dot_scalar(a, b),
     }
@@ -209,8 +214,13 @@ pub fn panel_scores_into(
     }
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2+FMA were detected at runtime by `active()`, and the
+        // asserts above pinned `queries`/`rows`/`out` to the exact
+        // `nq`/`nrows`/`dim` shapes the kernel's pointer arithmetic assumes.
         Simd::Avx2Fma => unsafe { avx2::panel(queries, nq, rows, nrows, dim, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was detected at runtime by `active()`; shapes were
+        // assert-checked above.
         Simd::Neon => unsafe { neon::panel(queries, nq, rows, nrows, dim, out) },
         _ => panel_scalar(queries, nq, rows, nrows, dim, out),
     }
@@ -238,10 +248,16 @@ pub fn panel_scores_f16_into(
     }
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2+FMA were detected by `active()` and F16C by the
+        // explicit `f16c_available()` guard (a separate CPUID bit — the
+        // kernel's `vcvtph2ps` would be UB without it); shapes were
+        // assert-checked above.
         Simd::Avx2Fma if f16c_available() => unsafe {
             avx2::panel_f16(queries, nq, rows, nrows, dim, out)
         },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was detected at runtime by `active()`; shapes were
+        // assert-checked above.
         Simd::Neon => unsafe { neon::panel_f16(queries, nq, rows, nrows, dim, out) },
         _ => panel_f16_scalar(queries, nq, rows, nrows, dim, out),
     }
@@ -269,8 +285,12 @@ pub fn panel_scores_i8_into(
     }
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2+FMA were detected at runtime by `active()`; shapes
+        // (including `scales.len() == nrows`) were assert-checked above.
         Simd::Avx2Fma => unsafe { avx2::panel_i8(queries, nq, rows, scales, nrows, dim, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was detected at runtime by `active()`; shapes were
+        // assert-checked above.
         Simd::Neon => unsafe { neon::panel_i8(queries, nq, rows, scales, nrows, dim, out) },
         _ => panel_i8_scalar(queries, nq, rows, scales, nrows, dim, out),
     }
@@ -306,8 +326,15 @@ pub fn panel_scores_pq_into(
     }
     match active() {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2+FMA were detected at runtime by `active()`; the
+        // asserts above pinned `lut`/`codes`/`out` to the `nq·m·kc` /
+        // `nrows·packed` / `nq·nrows` shapes, `kc == 1 << bits` bounds
+        // every decoded code strictly inside its LUT sub-table, and
+        // `bits ∈ {4, 8}` was checked — the gather indices cannot escape.
         Simd::Avx2Fma => unsafe { avx2::panel_pq(lut, nq, codes, nrows, m, kc, bits, out) },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON was detected at runtime by `active()`; shapes and
+        // `kc == 1 << bits` were assert-checked above.
         Simd::Neon => unsafe { neon::panel_pq(lut, nq, codes, nrows, m, kc, bits, out) },
         _ => panel_pq_scalar(lut, nq, codes, nrows, m, kc, bits, out),
     }
@@ -471,10 +498,12 @@ pub fn panel_scalar(
 mod avx2 {
     use std::arch::x86_64::*;
 
-    /// Horizontal sum of the 8 lanes.
+    /// Horizontal sum of the 8 lanes. Register-only shuffles and adds —
+    /// every intrinsic here is safe inside a matching `#[target_feature]`
+    /// context, so this needs no `unsafe` at all.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
-    unsafe fn hsum(v: __m256) -> f32 {
+    fn hsum(v: __m256) -> f32 {
         let lo = _mm256_castps256_ps128(v);
         let hi = _mm256_extractf128_ps::<1>(v);
         let s = _mm_add_ps(lo, hi);
@@ -489,10 +518,14 @@ mod avx2 {
     /// order per query so batched and single-query scores are identical.
     ///
     /// # Safety
-    /// Caller must have verified AVX2 and FMA support.
+    ///
+    /// * The running CPU must support AVX2 and FMA (runtime-detected —
+    ///   `#[target_feature]` makes merely *calling* this UB otherwise).
+    /// * `a.len() == b.len()`: `b` is read through raw pointers at
+    ///   `a`-derived offsets, so a shorter `b` is an out-of-bounds read.
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
-    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
         let chunks = n / 8;
         let pa = a.as_ptr();
@@ -500,7 +533,11 @@ mod avx2 {
         let mut acc = _mm256_setzero_ps();
         for c in 0..chunks {
             let j = c * 8;
-            acc = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j)), acc);
+            // SAFETY: `j + 8 <= chunks * 8 <= n`, and the caller promised
+            // `b.len() == a.len() == n`, so both 8-lane unaligned loads
+            // stay inside their slices.
+            let (va, vb) = unsafe { (_mm256_loadu_ps(pa.add(j)), _mm256_loadu_ps(pb.add(j))) };
+            acc = _mm256_fmadd_ps(va, vb, acc);
         }
         let mut s = hsum(acc);
         for j in chunks * 8..n {
@@ -513,11 +550,14 @@ mod avx2 {
     /// loaded once per panel. Bit-identical per pair to [`dot`].
     ///
     /// # Safety
-    /// Caller must have verified AVX2 and FMA support; slice shapes are
-    /// checked by the dispatching wrapper.
+    ///
+    /// * The running CPU must support AVX2 and FMA.
+    /// * `queries.len() == nq * dim`, `rows.len() == nrows * dim` and
+    ///   `out.len() == nq * nrows` — the raw-pointer offsets below assume
+    ///   exactly these shapes (checked by the dispatching wrapper).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
-    pub unsafe fn panel(
+    pub(super) unsafe fn panel(
         queries: &[f32],
         nq: usize,
         rows: &[f32],
@@ -532,13 +572,19 @@ mod avx2 {
         while q0 < nq {
             let pw = (nq - q0).min(super::PANEL_QUERIES);
             for r in 0..nrows {
-                let row = pr.add(r * dim);
+                // SAFETY: `r < nrows` and `rows.len() == nrows * dim`, so
+                // row `r` spans `[r * dim, (r + 1) * dim)` of `rows`.
+                let row = unsafe { pr.add(r * dim) };
                 let mut acc = [_mm256_setzero_ps(); super::PANEL_QUERIES];
                 for c in 0..chunks {
                     let j = c * 8;
-                    let rv = _mm256_loadu_ps(row.add(j));
+                    // SAFETY: `j + 8 <= chunks * 8 <= dim` keeps the load
+                    // inside row `r`.
+                    let rv = unsafe { _mm256_loadu_ps(row.add(j)) };
                     for p in 0..pw {
-                        let qv = _mm256_loadu_ps(pq.add((q0 + p) * dim + j));
+                        // SAFETY: `q0 + p < nq` and `j + 8 <= dim`, so the
+                        // load stays inside the `nq * dim` query panel.
+                        let qv = unsafe { _mm256_loadu_ps(pq.add((q0 + p) * dim + j)) };
                         acc[p] = _mm256_fmadd_ps(qv, rv, acc[p]);
                     }
                 }
@@ -558,12 +604,15 @@ mod avx2 {
     /// with `vcvtph2ps`; accumulation order per pair matches [`panel`].
     ///
     /// # Safety
-    /// Caller must have verified AVX2, FMA and F16C support; slice shapes
-    /// are checked by the dispatching wrapper.
+    ///
+    /// * The running CPU must support AVX2, FMA **and F16C** (a separate
+    ///   CPUID bit — the dispatcher guards it with `f16c_available()`).
+    /// * `queries.len() == nq * dim`, `rows.len() == nrows * dim` and
+    ///   `out.len() == nq * nrows` (checked by the dispatching wrapper).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
     #[target_feature(enable = "f16c")]
-    pub unsafe fn panel_f16(
+    pub(super) unsafe fn panel_f16(
         queries: &[f32],
         nq: usize,
         rows: &[u16],
@@ -579,13 +628,21 @@ mod avx2 {
         while q0 < nq {
             let pw = (nq - q0).min(super::PANEL_QUERIES);
             for r in 0..nrows {
-                let row = pr.add(r * dim);
+                // SAFETY: `r < nrows` and `rows.len() == nrows * dim`.
+                let row = unsafe { pr.add(r * dim) };
                 let mut acc = [_mm256_setzero_ps(); super::PANEL_QUERIES];
                 for c in 0..chunks {
                     let j = c * 8;
-                    let rv = _mm256_cvtph_ps(_mm_loadu_si128(row.add(j) as *const __m128i));
+                    // SAFETY: `j + 8 <= dim`, so the 16-byte load covers
+                    // exactly 8 in-bounds u16 codes of row `r`; no
+                    // alignment requirement (`loadu`).
+                    let rv = unsafe {
+                        _mm256_cvtph_ps(_mm_loadu_si128(row.add(j) as *const __m128i))
+                    };
                     for p in 0..pw {
-                        let qv = _mm256_loadu_ps(pq.add((q0 + p) * dim + j));
+                        // SAFETY: `q0 + p < nq` and `j + 8 <= dim` stay
+                        // inside the `nq * dim` query panel.
+                        let qv = unsafe { _mm256_loadu_ps(pq.add((q0 + p) * dim + j)) };
                         acc[p] = _mm256_fmadd_ps(qv, rv, acc[p]);
                     }
                 }
@@ -606,11 +663,14 @@ mod avx2 {
     /// multiplies the finished per-pair sum once.
     ///
     /// # Safety
-    /// Caller must have verified AVX2 and FMA support; slice shapes are
-    /// checked by the dispatching wrapper.
+    ///
+    /// * The running CPU must support AVX2 and FMA.
+    /// * `queries.len() == nq * dim`, `rows.len() == nrows * dim`,
+    ///   `scales.len() == nrows` and `out.len() == nq * nrows` (checked
+    ///   by the dispatching wrapper).
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
-    pub unsafe fn panel_i8(
+    pub(super) unsafe fn panel_i8(
         queries: &[f32],
         nq: usize,
         rows: &[i8],
@@ -626,14 +686,20 @@ mod avx2 {
         while q0 < nq {
             let pw = (nq - q0).min(super::PANEL_QUERIES);
             for r in 0..nrows {
-                let row = pr.add(r * dim);
+                // SAFETY: `r < nrows` and `rows.len() == nrows * dim`.
+                let row = unsafe { pr.add(r * dim) };
                 let mut acc = [_mm256_setzero_ps(); super::PANEL_QUERIES];
                 for c in 0..chunks {
                     let j = c * 8;
-                    let codes = _mm_loadl_epi64(row.add(j) as *const __m128i);
+                    // SAFETY: `_mm_loadl_epi64` reads exactly 8 bytes and
+                    // `j + 8 <= dim`, so the read covers 8 in-bounds codes
+                    // of row `r`; no alignment requirement.
+                    let codes = unsafe { _mm_loadl_epi64(row.add(j) as *const __m128i) };
                     let rv = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(codes));
                     for p in 0..pw {
-                        let qv = _mm256_loadu_ps(pq.add((q0 + p) * dim + j));
+                        // SAFETY: `q0 + p < nq` and `j + 8 <= dim` stay
+                        // inside the `nq * dim` query panel.
+                        let qv = unsafe { _mm256_loadu_ps(pq.add((q0 + p) * dim + j)) };
                         acc[p] = _mm256_fmadd_ps(qv, rv, acc[p]);
                     }
                 }
@@ -657,12 +723,17 @@ mod avx2 {
     /// independent of the panel shape — the batch==single guarantee.
     ///
     /// # Safety
-    /// Caller must have verified AVX2 support; slice shapes are checked
-    /// by the dispatching wrapper.
+    ///
+    /// * The running CPU must support AVX2 and FMA.
+    /// * `lut.len() == nq * m * kc`, `codes.len() == nrows * packed`,
+    ///   `out.len() == nq * nrows`, and `kc == 1 << bits` with
+    ///   `bits ∈ {4, 8}` — the last pair is what bounds every decoded
+    ///   code below `kc`, keeping each gathered LUT index in range
+    ///   (checked by the dispatching wrapper).
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx2")]
     #[target_feature(enable = "fma")]
-    pub unsafe fn panel_pq(
+    pub(super) unsafe fn panel_pq(
         lut: &[f32],
         nq: usize,
         codes: &[u8],
@@ -687,8 +758,16 @@ mod avx2 {
                         let s = s0 + l;
                         idx[l] = (s * kc + super::pq_code(row, s, bits)) as i32;
                     }
-                    let vindex = _mm256_loadu_si256(idx.as_ptr() as *const __m256i);
-                    acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(plq, vindex));
+                    // SAFETY: the index load reads the 8-entry stack array
+                    // just written. Each gather lane reads `plq[idx[l]]`
+                    // where `idx[l] = s * kc + code` with `s < m` and
+                    // `code < kc` (`pq_code` masks to `bits` bits and the
+                    // caller promised `kc == 1 << bits`), so every lane
+                    // lands strictly inside `lq` (`m * kc` entries).
+                    acc = unsafe {
+                        let vindex = _mm256_loadu_si256(idx.as_ptr() as *const __m256i);
+                        _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(plq, vindex))
+                    };
                 }
                 let mut sum = hsum(acc);
                 for s in chunks * 8..m {
@@ -708,9 +787,13 @@ mod neon {
     /// ascending 4-lane chunks, horizontal sum, scalar tail.
     ///
     /// # Safety
-    /// Caller must have verified NEON support.
+    ///
+    /// * The running CPU must support NEON (runtime-detected —
+    ///   `#[target_feature]` makes merely *calling* this UB otherwise).
+    /// * `a.len() == b.len()`: `b` is read through raw pointers at
+    ///   `a`-derived offsets, so a shorter `b` is an out-of-bounds read.
     #[target_feature(enable = "neon")]
-    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len();
         let chunks = n / 4;
         let pa = a.as_ptr();
@@ -718,7 +801,11 @@ mod neon {
         let mut acc = vdupq_n_f32(0.0);
         for c in 0..chunks {
             let j = c * 4;
-            acc = vfmaq_f32(acc, vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j)));
+            // SAFETY: `j + 4 <= chunks * 4 <= n`, and the caller promised
+            // `b.len() == a.len() == n`, so both 4-lane loads stay inside
+            // their slices.
+            let (va, vb) = unsafe { (vld1q_f32(pa.add(j)), vld1q_f32(pb.add(j))) };
+            acc = vfmaq_f32(acc, va, vb);
         }
         let mut s = vaddvq_f32(acc);
         for j in chunks * 4..n {
@@ -731,10 +818,13 @@ mod neon {
     /// per pair to [`dot`].
     ///
     /// # Safety
-    /// Caller must have verified NEON support; slice shapes are checked
-    /// by the dispatching wrapper.
+    ///
+    /// * The running CPU must support NEON.
+    /// * `queries.len() == nq * dim`, `rows.len() == nrows * dim` and
+    ///   `out.len() == nq * nrows` — the raw-pointer offsets below assume
+    ///   exactly these shapes (checked by the dispatching wrapper).
     #[target_feature(enable = "neon")]
-    pub unsafe fn panel(
+    pub(super) unsafe fn panel(
         queries: &[f32],
         nq: usize,
         rows: &[f32],
@@ -749,13 +839,19 @@ mod neon {
         while q0 < nq {
             let pw = (nq - q0).min(super::PANEL_QUERIES);
             for r in 0..nrows {
-                let row = pr.add(r * dim);
+                // SAFETY: `r < nrows` and `rows.len() == nrows * dim`, so
+                // row `r` spans `[r * dim, (r + 1) * dim)` of `rows`.
+                let row = unsafe { pr.add(r * dim) };
                 let mut acc = [vdupq_n_f32(0.0); super::PANEL_QUERIES];
                 for c in 0..chunks {
                     let j = c * 4;
-                    let rv = vld1q_f32(row.add(j));
+                    // SAFETY: `j + 4 <= chunks * 4 <= dim` keeps the load
+                    // inside row `r`.
+                    let rv = unsafe { vld1q_f32(row.add(j)) };
                     for p in 0..pw {
-                        let qv = vld1q_f32(pq.add((q0 + p) * dim + j));
+                        // SAFETY: `q0 + p < nq` and `j + 4 <= dim`, so the
+                        // load stays inside the `nq * dim` query panel.
+                        let qv = unsafe { vld1q_f32(pq.add((q0 + p) * dim + j)) };
                         acc[p] = vfmaq_f32(acc[p], qv, rv);
                     }
                 }
@@ -777,10 +873,12 @@ mod neon {
     /// bus at 2 B/element) and fed to the f32 FMA lanes.
     ///
     /// # Safety
-    /// Caller must have verified NEON support; slice shapes are checked
-    /// by the dispatching wrapper.
+    ///
+    /// * The running CPU must support NEON.
+    /// * `queries.len() == nq * dim`, `rows.len() == nrows * dim` and
+    ///   `out.len() == nq * nrows` (checked by the dispatching wrapper).
     #[target_feature(enable = "neon")]
-    pub unsafe fn panel_f16(
+    pub(super) unsafe fn panel_f16(
         queries: &[f32],
         nq: usize,
         rows: &[u16],
@@ -800,9 +898,13 @@ mod neon {
                 for c in 0..chunks {
                     let j = c * 4;
                     let buf = [f16(row[j]), f16(row[j + 1]), f16(row[j + 2]), f16(row[j + 3])];
-                    let rv = vld1q_f32(buf.as_ptr());
+                    // SAFETY: `buf` is a live 4-element stack array, so
+                    // the 4-lane load reads exactly its extent.
+                    let rv = unsafe { vld1q_f32(buf.as_ptr()) };
                     for p in 0..pw {
-                        let qv = vld1q_f32(pq.add((q0 + p) * dim + j));
+                        // SAFETY: `q0 + p < nq` and `j + 4 <= dim` stay
+                        // inside the `nq * dim` query panel.
+                        let qv = unsafe { vld1q_f32(pq.add((q0 + p) * dim + j)) };
                         acc[p] = vfmaq_f32(acc[p], qv, rv);
                     }
                 }
@@ -823,10 +925,13 @@ mod neon {
     /// query; the row scale multiplies the finished sum once.
     ///
     /// # Safety
-    /// Caller must have verified NEON support; slice shapes are checked
-    /// by the dispatching wrapper.
+    ///
+    /// * The running CPU must support NEON.
+    /// * `queries.len() == nq * dim`, `rows.len() == nrows * dim`,
+    ///   `scales.len() == nrows` and `out.len() == nq * nrows` (checked
+    ///   by the dispatching wrapper).
     #[target_feature(enable = "neon")]
-    pub unsafe fn panel_i8(
+    pub(super) unsafe fn panel_i8(
         queries: &[f32],
         nq: usize,
         rows: &[i8],
@@ -842,17 +947,25 @@ mod neon {
         while q0 < nq {
             let pw = (nq - q0).min(super::PANEL_QUERIES);
             for r in 0..nrows {
-                let row = pr.add(r * dim);
+                // SAFETY: `r < nrows` and `rows.len() == nrows * dim`.
+                let row = unsafe { pr.add(r * dim) };
                 let mut acc = [vdupq_n_f32(0.0); super::PANEL_QUERIES];
                 for c in 0..chunks {
                     let j = c * 8;
-                    let wide = vmovl_s8(vld1_s8(row.add(j)));
+                    // SAFETY: `vld1_s8` reads 8 bytes and `j + 8 <= dim`,
+                    // so the read covers 8 in-bounds codes of row `r`.
+                    let wide = vmovl_s8(unsafe { vld1_s8(row.add(j)) });
                     let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(wide)));
                     let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(wide)));
                     for p in 0..pw {
                         let qoff = (q0 + p) * dim + j;
-                        acc[p] = vfmaq_f32(acc[p], vld1q_f32(pq.add(qoff)), lo);
-                        acc[p] = vfmaq_f32(acc[p], vld1q_f32(pq.add(qoff + 4)), hi);
+                        // SAFETY: `q0 + p < nq` and `j + 8 <= dim`, so both
+                        // 4-lane loads (`qoff`, `qoff + 4`) stay inside the
+                        // `nq * dim` query panel.
+                        let (qlo, qhi) =
+                            unsafe { (vld1q_f32(pq.add(qoff)), vld1q_f32(pq.add(qoff + 4))) };
+                        acc[p] = vfmaq_f32(acc[p], qlo, lo);
+                        acc[p] = vfmaq_f32(acc[p], qhi, hi);
                     }
                 }
                 let scale = scales[r];
@@ -874,11 +987,14 @@ mod neon {
     /// tail per (query, row), independent of the panel shape.
     ///
     /// # Safety
-    /// Caller must have verified NEON support; slice shapes are checked
-    /// by the dispatching wrapper.
+    ///
+    /// * The running CPU must support NEON.
+    /// * `lut.len() == nq * m * kc`, `codes.len() == nrows * packed` and
+    ///   `out.len() == nq * nrows` (checked by the dispatching wrapper;
+    ///    the table lookups themselves are bounds-checked slice indexing).
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "neon")]
-    pub unsafe fn panel_pq(
+    pub(super) unsafe fn panel_pq(
         lut: &[f32],
         nq: usize,
         codes: &[u8],
@@ -903,7 +1019,9 @@ mod neon {
                         lq[(s + 2) * kc + super::pq_code(row, s + 2, bits)],
                         lq[(s + 3) * kc + super::pq_code(row, s + 3, bits)],
                     ];
-                    acc = vaddq_f32(acc, vld1q_f32(buf.as_ptr()));
+                    // SAFETY: `buf` is a live 4-element stack array, so
+                    // the 4-lane load reads exactly its extent.
+                    acc = vaddq_f32(acc, unsafe { vld1q_f32(buf.as_ptr()) });
                 }
                 let mut sum = vaddvq_f32(acc);
                 for s in chunks * 4..m {

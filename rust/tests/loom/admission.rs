@@ -1,0 +1,363 @@
+//! Loom models for `QueueManager::dispatch_class` / `release_class`
+//! across every `(WorkClass, leg)` pair.
+//!
+//! Invariants proved over all interleavings (up to the preemption
+//! bound):
+//!
+//! 1. pool occupancy never exceeds the configured depth, and per-class
+//!    occupancy never exceeds its cap;
+//! 2. at rest (all threads joined, nothing mid-admission) the per-class
+//!    occupancies sum to the pool occupancy — transiently the class
+//!    counter may lead the pool (cap-then-pool order), which is why the
+//!    sum is only asserted at join points;
+//! 3. a cap winner that loses the pool race rolls its cap back with no
+//!    residue;
+//! 4. double release is contained: it cannot free another class's held
+//!    slot and it increments `bad_releases`;
+//! 5. every schedule drains to zero occupancy.
+
+use crate::harness::model;
+use loom::sync::Arc;
+use loom::thread;
+use windve::coordinator::{ClassCaps, QueueManager, Route, WorkClass};
+
+/// Per-class sums == pool occupancy, both legs. Valid only at rest.
+fn assert_sums(qm: &QueueManager) {
+    assert_eq!(
+        qm.embed_cpu_occupancy() + qm.retrieve_cpu_occupancy() + qm.ingest_cpu_occupancy(),
+        qm.cpu_occupancy(),
+        "CPU per-class occupancies must sum to the pool at rest"
+    );
+    assert_eq!(
+        qm.embed_npu_occupancy() + qm.retrieve_npu_occupancy() + qm.ingest_npu_occupancy(),
+        qm.npu_occupancy(),
+        "NPU per-class occupancies must sum to the pool at rest"
+    );
+}
+
+/// Two embeds race a depth-1 NPU pool: the cap holds mid-flight, at
+/// least one admission succeeds, accounting balances, and releasing
+/// drains to zero.
+#[test]
+fn embed_npu_pool_cap_never_exceeded() {
+    model(|| {
+        let qm = Arc::new(QueueManager::new(1, 0, false));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let qm = Arc::clone(&qm);
+                thread::spawn(move || {
+                    let route = qm.dispatch();
+                    // Observed from inside the race: the pool bound is
+                    // a hard invariant, not just a steady-state one.
+                    assert!(qm.npu_occupancy() <= 1, "NPU pool cap breached");
+                    if route == Route::Npu {
+                        qm.release(Route::Npu);
+                    }
+                    route
+                })
+            })
+            .collect();
+        let routes: Vec<Route> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // A depth-1 pool admits at least one of two contenders in every
+        // schedule — `try_acquire` only fails when genuinely full.
+        assert!(routes.iter().any(|r| *r == Route::Npu));
+        assert_eq!(qm.npu_occupancy(), 0, "drain to zero");
+        assert_sums(&qm);
+        let stats = qm.stats();
+        assert_eq!(stats.routed_npu + stats.rejected, 2);
+        assert_eq!(stats.bad_releases, 0);
+    });
+}
+
+/// Hetero deployment, one slot per device: two embeds racing can never
+/// both be rejected (Algorithm 1's CPU overflow), and the slots they
+/// hold are accounted exactly.
+#[test]
+fn embed_overflows_to_cpu_when_npu_full() {
+    model(|| {
+        let qm = Arc::new(QueueManager::new(1, 1, true));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let qm = Arc::clone(&qm);
+                thread::spawn(move || qm.dispatch())
+            })
+            .collect();
+        let routes: Vec<Route> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Capacity 2 across both devices, two contenders, no releases
+        // mid-race: rejecting either would need both pools full, which
+        // the other thread alone cannot achieve.
+        assert!(routes.iter().all(|r| *r != Route::Busy));
+        assert_eq!(qm.npu_occupancy() + qm.cpu_occupancy(), 2);
+        assert_sums(&qm);
+        for route in routes {
+            qm.release(route);
+        }
+        assert_eq!(qm.npu_occupancy() + qm.cpu_occupancy(), 0);
+        let stats = qm.stats();
+        assert_eq!(stats.routed_npu + stats.routed_cpu, 2);
+        assert_eq!(stats.rejected, 0);
+    });
+}
+
+/// Retrieve and Ingest with disjoint caps share the CPU pool without
+/// interfering: both admit, per-class sums match the pool, and releases
+/// drain to zero.
+#[test]
+fn retrieve_and_ingest_share_cpu_pool() {
+    model(|| {
+        let qm = Arc::new(QueueManager::with_caps(
+            0,
+            2,
+            false,
+            ClassCaps {
+                retrieve: 1,
+                ingest: 1,
+                ..ClassCaps::default()
+            },
+        ));
+        let retr = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch_class(WorkClass::Retrieve, 1))
+        };
+        let ingest = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch_class(WorkClass::Ingest, 1))
+        };
+        // Caps 1+1 fit the depth-2 pool exactly: neither admission can
+        // fail in any schedule.
+        assert_eq!(retr.join().unwrap(), Route::Cpu);
+        assert_eq!(ingest.join().unwrap(), Route::Cpu);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 1);
+        assert_eq!(qm.ingest_cpu_occupancy(), 1);
+        assert_eq!(qm.cpu_occupancy(), 2);
+        assert_sums(&qm);
+        qm.release_class(WorkClass::Retrieve, Route::Cpu, 1);
+        qm.release_class(WorkClass::Ingest, Route::Cpu, 1);
+        assert_eq!(qm.cpu_occupancy(), 0);
+        assert_sums(&qm);
+        assert_eq!(qm.stats().bad_releases, 0);
+    });
+}
+
+/// Cap-then-pool rollback: a retrieval that wins its cap but loses the
+/// depth-1 pool to an embed must roll the cap acquisition back — a
+/// stale `retr_cpu` credit here would silently shrink the scan budget
+/// forever.
+#[test]
+fn retrieve_rollback_leaves_no_residue() {
+    model(|| {
+        let qm = Arc::new(QueueManager::with_caps(
+            0,
+            1,
+            true,
+            ClassCaps {
+                retrieve: 1,
+                ..ClassCaps::default()
+            },
+        ));
+        let embed = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch())
+        };
+        let retr = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch_class(WorkClass::Retrieve, 1))
+        };
+        let embed_route = embed.join().unwrap();
+        let retr_route = retr.join().unwrap();
+        // Exactly one of the two holds the single CPU slot.
+        assert_eq!(qm.cpu_occupancy(), 1);
+        assert!((embed_route == Route::Cpu) ^ (retr_route == Route::Cpu));
+        if retr_route == Route::Busy {
+            assert_eq!(
+                qm.retrieve_cpu_occupancy(),
+                0,
+                "pool-loss rollback left cap residue"
+            );
+        }
+        if embed_route == Route::Busy {
+            assert_eq!(qm.embed_cpu_occupancy(), 0);
+        }
+        assert_sums(&qm);
+        if embed_route == Route::Cpu {
+            qm.release(Route::Cpu);
+        } else {
+            qm.release_class(WorkClass::Retrieve, Route::Cpu, 1);
+        }
+        assert_eq!(qm.cpu_occupancy(), 0);
+        assert_eq!(qm.stats().bad_releases, 0);
+    });
+}
+
+/// All three classes contending for a depth-2 NPU pool under unit caps:
+/// exactly two admit in every schedule, class caps and the pool bound
+/// hold, and mixed-class releases drain cleanly.
+#[test]
+fn three_classes_contend_for_npu_pool() {
+    model(|| {
+        let qm = Arc::new(QueueManager::with_caps(
+            2,
+            0,
+            false,
+            ClassCaps {
+                npu_retrieve: 1,
+                npu_ingest: 1,
+                ..ClassCaps::default()
+            },
+        ));
+        let embed = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch())
+        };
+        let retr = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch_retrieve_npu(1))
+        };
+        let ingest = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || qm.dispatch_ingest_npu(1))
+        };
+        let routes = [
+            (WorkClass::Embed, embed.join().unwrap()),
+            (WorkClass::Retrieve, retr.join().unwrap()),
+            (WorkClass::Ingest, ingest.join().unwrap()),
+        ];
+        let admitted = routes.iter().filter(|(_, r)| *r == Route::Npu).count();
+        // Three unit-cost contenders over a depth-2 pool: admissions
+        // only fail when full, so exactly two must win.
+        assert_eq!(admitted, 2);
+        assert_eq!(qm.npu_occupancy(), 2);
+        assert!(qm.retrieve_npu_occupancy() <= 1, "npu_retrieve cap breached");
+        assert!(qm.ingest_npu_occupancy() <= 1, "npu_ingest cap breached");
+        assert_sums(&qm);
+        for (class, route) in routes {
+            if route == Route::Npu {
+                qm.release_class(class, Route::Npu, 1);
+            }
+        }
+        assert_eq!(qm.npu_occupancy(), 0);
+        assert_sums(&qm);
+        assert_eq!(qm.stats().bad_releases, 0);
+    });
+}
+
+/// Double release is contained: releasing a retrieval twice must not
+/// liberate the ingest slot still held, must leave the pool consistent,
+/// and must be observable via `bad_releases`.
+#[test]
+fn double_release_cannot_free_other_class() {
+    model(|| {
+        let qm = Arc::new(QueueManager::with_caps(
+            0,
+            2,
+            false,
+            ClassCaps {
+                retrieve: 1,
+                ingest: 1,
+                ..ClassCaps::default()
+            },
+        ));
+        let retr = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || {
+                assert_eq!(qm.dispatch_class(WorkClass::Retrieve, 1), Route::Cpu);
+                qm.release_class(WorkClass::Retrieve, Route::Cpu, 1);
+                // Buggy caller: second release of the same admission.
+                qm.release_class(WorkClass::Retrieve, Route::Cpu, 1);
+            })
+        };
+        let ingest = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || {
+                assert_eq!(qm.dispatch_class(WorkClass::Ingest, 1), Route::Cpu);
+            })
+        };
+        retr.join().unwrap();
+        ingest.join().unwrap();
+        // The ingest admission survives the retrieval double-free: only
+        // the amount actually freed from `retr_cpu` (zero, the second
+        // time) is credited back to the pool.
+        assert_eq!(qm.ingest_cpu_occupancy(), 1);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_eq!(qm.cpu_occupancy(), 1);
+        assert_sums(&qm);
+        assert!(qm.stats().bad_releases >= 1, "double release must be counted");
+        qm.release_class(WorkClass::Ingest, Route::Cpu, 1);
+        assert_eq!(qm.cpu_occupancy(), 0);
+    });
+}
+
+/// Weighted costs (Eq. 9's cost-proportional admission): two cost-2
+/// scans against a cap of 3 — the cap bound holds mid-flight and every
+/// schedule drains exactly, with admissions + rejections accounting for
+/// both attempts.
+#[test]
+fn weighted_cost_admissions_drain_exactly() {
+    model(|| {
+        let qm = Arc::new(QueueManager::with_class_caps(0, 4, false, 3, 0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let qm = Arc::clone(&qm);
+                thread::spawn(move || {
+                    let route = qm.dispatch_class(WorkClass::Retrieve, 2);
+                    assert!(qm.retrieve_cpu_occupancy() <= 3, "retrieve cap breached");
+                    if route == Route::Cpu {
+                        qm.release_class(WorkClass::Retrieve, Route::Cpu, 2);
+                    }
+                    route
+                })
+            })
+            .collect();
+        let routes: Vec<Route> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Cost 2 against a cap of 3: at least one admission fits.
+        assert!(routes.iter().any(|r| *r == Route::Cpu));
+        assert_eq!(qm.cpu_occupancy(), 0, "weighted drain must be exact");
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_sums(&qm);
+        let stats = qm.stats();
+        assert_eq!(stats.routed_retrieve + stats.rejected_retrieve, 2);
+        assert_eq!(stats.bad_releases, 0);
+    });
+}
+
+/// Releasing into an empty manager never underflows the saturating
+/// counters, even racing a live admission on the other class.
+#[test]
+fn release_on_empty_never_underflows() {
+    model(|| {
+        let qm = Arc::new(QueueManager::with_caps(
+            1,
+            1,
+            true,
+            ClassCaps {
+                retrieve: 1,
+                ..ClassCaps::default()
+            },
+        ));
+        let stray = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || {
+                // Nothing was ever admitted for Retrieve.
+                qm.release_class(WorkClass::Retrieve, Route::Cpu, 1);
+            })
+        };
+        let embed = {
+            let qm = Arc::clone(&qm);
+            thread::spawn(move || {
+                let route = qm.dispatch();
+                assert_ne!(route, Route::Busy);
+                route
+            })
+        };
+        stray.join().unwrap();
+        let route = embed.join().unwrap();
+        // The stray release must not have freed (or corrupted) the
+        // embed's slot, nor wrapped any counter.
+        assert_eq!(qm.npu_occupancy() + qm.cpu_occupancy(), 1);
+        assert_eq!(qm.retrieve_cpu_occupancy(), 0);
+        assert_sums(&qm);
+        assert!(qm.stats().bad_releases >= 1);
+        qm.release(route);
+        assert_eq!(qm.npu_occupancy() + qm.cpu_occupancy(), 0);
+    });
+}

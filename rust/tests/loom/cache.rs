@@ -1,0 +1,92 @@
+//! Loom models for the query-embedding LRU cache (PR 8): the stats
+//! snapshot stays internally consistent under concurrent get/put, and
+//! capacity is a hard bound in every schedule.
+
+use crate::harness::model;
+use loom::sync::Arc;
+use loom::thread;
+use windve::coordinator::cache::EmbeddingCache;
+
+/// Two get-miss-then-fill threads on disjoint keys: every `get` is
+/// counted as exactly one hit or one miss (never both, never dropped),
+/// and the snapshot is a coherent cut of (hits, misses, len).
+#[test]
+fn snapshot_counts_every_get_once() {
+    model(|| {
+        let cache = Arc::new(EmbeddingCache::new(2));
+        let handles: Vec<_> = (1..=2u64)
+            .map(|key| {
+                let cache = Arc::clone(&cache);
+                thread::spawn(move || {
+                    if cache.get(key).is_none() {
+                        cache.put(key, vec![key as f32]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = cache.snapshot();
+        // Disjoint keys nobody pre-filled: both gets are misses, both
+        // fills land, nothing evicts.
+        assert_eq!(stats.hits + stats.misses, 2, "a get was double- or un-counted");
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.capacity, 2);
+        assert_eq!(cache.len(), 2);
+    });
+}
+
+/// Two fills racing a capacity-1 cache: `len` never exceeds capacity,
+/// and the entries not resident are accounted as evictions — inserts ==
+/// residents + evictions in every interleaving.
+#[test]
+fn eviction_keeps_len_bounded() {
+    model(|| {
+        let cache = Arc::new(EmbeddingCache::new(1));
+        let handles: Vec<_> = (1..=2u64)
+            .map(|key| {
+                let cache = Arc::clone(&cache);
+                thread::spawn(move || {
+                    cache.put(key, vec![key as f32]);
+                    assert!(cache.len() <= 1, "capacity breached mid-race");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = cache.snapshot();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(stats.evictions, 1, "2 inserts into capacity 1 evict exactly once");
+    });
+}
+
+/// A hit racing a `reset_stats`: the final snapshot is one of the two
+/// coherent outcomes (counted then cleared, or cleared then counted) —
+/// never a torn mix, and never more events than gets issued.
+#[test]
+fn reset_stats_races_cleanly_with_hits() {
+    model(|| {
+        let cache = Arc::new(EmbeddingCache::new(2));
+        cache.put(1, vec![1.0]);
+        let getter = {
+            let cache = Arc::clone(&cache);
+            thread::spawn(move || {
+                assert!(cache.get(1).is_some(), "resident key must hit");
+            })
+        };
+        let resetter = {
+            let cache = Arc::clone(&cache);
+            thread::spawn(move || cache.reset_stats())
+        };
+        getter.join().unwrap();
+        resetter.join().unwrap();
+        let stats = cache.snapshot();
+        // The single get either survived the reset or was wiped by it.
+        assert!(stats.hits <= 1, "torn stats after reset: {} hits", stats.hits);
+        assert_eq!(stats.misses, 0);
+        assert_eq!(cache.len(), 1);
+    });
+}

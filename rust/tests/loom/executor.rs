@@ -1,0 +1,127 @@
+//! Loom models for the `RetrievalExecutor` corpus version/mirror
+//! handshake and its poisoned-lock recovery path.
+//!
+//! The handshake contract under test: `add()` bumps the version with
+//! Release *inside* the write guard, and `version()` loads Acquire — so
+//! any thread that observes version `v` also observes every row
+//! mutation committed before the bump to `v`. The NPU mirror sync and
+//! snapshot export both lean on exactly this edge.
+
+use crate::harness::model;
+use loom::sync::Arc;
+use loom::thread;
+use windve::devices::executor::RetrievalExecutor;
+
+/// Writer commits one row; a racing reader that observes the version
+/// bump must also observe the row. This is the publication edge the
+/// mirror-staleness check depends on — with a Relaxed bump loom finds
+/// the schedule where the reader sees version 1 but zero rows.
+#[test]
+fn version_bump_publishes_rows() {
+    model(|| {
+        let ex = Arc::new(RetrievalExecutor::flat(2));
+        let writer = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || ex.add(7, &[1.0, 0.0]))
+        };
+        let reader = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || {
+                if ex.version() >= 1 {
+                    // Acquire saw the Release bump, so the row mutation
+                    // (sequenced before the bump, inside the same write
+                    // guard) must be visible too.
+                    assert_eq!(ex.len(), 1, "version visible before its rows");
+                }
+            })
+        };
+        writer.join().unwrap();
+        reader.join().unwrap();
+        assert_eq!(ex.version(), 1);
+        assert_eq!(ex.len(), 1);
+    });
+}
+
+/// `export_corpus` takes the version under the read guard: the exported
+/// (rows, version) pair is a consistent cut in every schedule — never
+/// version 1 with zero rows or version 0 with one row.
+#[test]
+fn export_is_a_consistent_cut() {
+    model(|| {
+        let ex = Arc::new(RetrievalExecutor::flat(2));
+        let writer = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || ex.add(1, &[0.5, 0.5]))
+        };
+        let exporter = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || {
+                if let Some((ids, rows, version)) = ex.export_corpus() {
+                    assert_eq!(ids.len() as u64, version, "torn export cut");
+                    assert_eq!(rows.len(), ids.len() * 2);
+                }
+            })
+        };
+        writer.join().unwrap();
+        exporter.join().unwrap();
+        let (ids, _, version) = ex.export_corpus().expect("flat index exports");
+        assert_eq!(version, 1);
+        assert_eq!(ids.len(), 1);
+    });
+}
+
+/// A scan session opened mid-ingest pins a coherent corpus size: its
+/// length is one of the two commit points, never a torn intermediate,
+/// and the session does not block the writer from completing.
+#[test]
+fn scan_session_sees_committed_sizes_only() {
+    model(|| {
+        let ex = Arc::new(RetrievalExecutor::flat(2));
+        ex.add(1, &[1.0, 0.0]);
+        let writer = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || ex.add(2, &[0.0, 1.0]))
+        };
+        let scanner = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || {
+                let session = ex.begin_scan();
+                let len = session.len();
+                assert!(len == 1 || len == 2, "torn corpus length: {len}");
+            })
+        };
+        writer.join().unwrap();
+        scanner.join().unwrap();
+        assert_eq!(ex.len(), 2);
+        assert_eq!(ex.version(), 2);
+    });
+}
+
+/// The poisoned-lock recovery path: a manufactured `PoisonError` racing
+/// a normal reader still yields the live corpus and bumps the
+/// `poisoned_recoveries` counter exactly once.
+#[test]
+fn poisoned_recovery_counts_and_recovers() {
+    model(|| {
+        let ex = Arc::new(RetrievalExecutor::flat(2));
+        ex.add(3, &[0.5, 0.5]);
+        let probe = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || {
+                // Recovery hands back the poisoned guard's data intact.
+                assert_eq!(ex.poisoned_recovery_probe(), 1);
+            })
+        };
+        let reader = {
+            let ex = Arc::clone(&ex);
+            thread::spawn(move || {
+                // A concurrent plain reader is never disturbed by the
+                // recovery happening next to it.
+                assert_eq!(ex.len(), 1);
+            })
+        };
+        probe.join().unwrap();
+        reader.join().unwrap();
+        assert_eq!(ex.poisoned_recoveries(), 1);
+    });
+}

@@ -1,0 +1,60 @@
+//! Concurrency model checking for the admission, executor-handshake and
+//! cache hot paths, under [loom](https://docs.rs/loom).
+//!
+//! This target is empty in normal test runs. Loom swaps every sync
+//! primitive the shim (`windve::util::sync`) wraps for instrumented
+//! twins and exhaustively explores thread interleavings, so each
+//! `#[test]` here is a *proof over all schedules* (up to the preemption
+//! bound), not a probabilistic stress run. Build and run with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --test loom_admission --release
+//! ```
+//!
+//! `LOOM_MAX_PREEMPTIONS` (default 2) bounds how many times the model
+//! checker forcibly preempts a thread at an atomic access; 2-3 catches
+//! practically all ordering bugs (loom's own guidance) while keeping
+//! the state space tractable for CI.
+//!
+//! What is covered, mirroring the paper's admission design:
+//!
+//! * `admission` — every `(WorkClass, leg)` pair of the weighted
+//!   multi-class queue manager (paper Eq. 9-10): pool caps never
+//!   exceeded, per-class sums equal pool occupancy at rest, cap
+//!   rollback leaves no residue, double release is contained, every
+//!   schedule drains to zero.
+//! * `guard` — the RAII [`AdmissionGuard`] releases exactly once under
+//!   every interleaving of its drop with concurrent admissions.
+//! * `executor` — the corpus version/mirror handshake: a reader that
+//!   observes version `v` also observes every row committed before the
+//!   bump to `v`; exports are consistent cuts; the poisoned-lock
+//!   recovery path counts and recovers.
+//! * `cache` — the LRU stats snapshot: `hits + misses == gets`, `len`
+//!   never exceeds capacity, evictions account for the overflow.
+#![cfg(loom)]
+
+mod harness {
+    /// Run `f` under loom's exhaustive model checker with a bounded
+    /// number of forced preemptions (see module docs).
+    pub fn model<F>(f: F)
+    where
+        F: Fn() + Sync + Send + 'static,
+    {
+        let mut builder = loom::model::Builder::new();
+        let bound = std::env::var("LOOM_MAX_PREEMPTIONS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2);
+        builder.preemption_bound = Some(bound);
+        builder.check(f);
+    }
+}
+
+#[path = "loom/admission.rs"]
+mod admission;
+#[path = "loom/guard.rs"]
+mod guard;
+#[path = "loom/executor.rs"]
+mod executor;
+#[path = "loom/cache.rs"]
+mod cache;

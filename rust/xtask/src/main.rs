@@ -1,0 +1,461 @@
+//! Repo-local static analysis: `cargo xtask lint`.
+//!
+//! Four rules over `rust/src/**/*.rs` (test modules excluded), all
+//! enforced to **zero findings** in CI (the `analysis` job):
+//!
+//! 1. **safety-comment** — every `unsafe { .. }` block (and `unsafe
+//!    impl`) carries a `// SAFETY:` comment on the same line or in the
+//!    comment run directly above it, stating why the operation is sound.
+//! 2. **atomic-ordering** — `Ordering::SeqCst` is banned (it papers over
+//!    not knowing the protocol; every handshake here is expressible with
+//!    acquire/release) and `Ordering::Relaxed` is confined to an
+//!    allowlist of files whose relaxed uses are monotonic stats counters
+//!    (justified in [`RELAXED_ALLOWLIST`]). One-off exceptions carry an
+//!    `// ordering:` comment at the site explaining the choice.
+//! 3. **hot-path-unwrap** — no `.unwrap()` / `.expect()` in
+//!    `src/server/` or `src/coordinator/` outside `#[cfg(test)]`: a
+//!    panic there poisons locks under live traffic. Deliberate uses
+//!    carry `// lint:allow(unwrap-expect): <why>` at the site.
+//! 4. **std-sync-import** — modules migrated onto the `cfg(loom)` shim
+//!    (`crate::util::sync`) must not re-import `std::sync` primitives
+//!    the shim wraps, or the loom models silently stop covering them.
+//!    `Arc`/`mpsc`/`PoisonError`/`LockResult` stay allowed: loom drives
+//!    schedules through locks and atomics, not through those.
+//!
+//! The checker parses with `syn` (comments are invisible to the AST, so
+//! marker comments are matched textually against the span's source
+//! lines). It is deliberately file-local and fast — no type resolution,
+//! no macro expansion — which keeps it honest: anything subtler than
+//! these rules belongs in loom/Miri, not here.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use syn::visit::{self, Visit};
+
+/// Files whose `Ordering::Relaxed` uses are allowed wholesale, with the
+/// written justification the lint demands. Keep this list *short* and
+/// the justifications true — a new entry needs both.
+const RELAXED_ALLOWLIST: &[(&str, &str)] = &[
+    (
+        "src/coordinator/queue_manager.rs",
+        "admission stats are monotonic counters and CAS seed loads; the \
+         authoritative edges are the AcqRel compare-exchanges, documented \
+         in the module header and exhaustively checked by the loom suite",
+    ),
+    (
+        "src/coordinator/balancer.rs",
+        "round-robin tick and load gauges: approximate by design, no \
+         other memory is published through them",
+    ),
+    (
+        "src/devices/executor.rs",
+        "poisoned_recoveries is a monotonic diagnostic counter; the \
+         index version/mirror handshake itself uses Release bumps and \
+         Acquire reads",
+    ),
+    (
+        "src/runtime/npu_scan.rs",
+        "device_failures is a monotonic diagnostic counter feeding the \
+         fallback decision; exactness is not required",
+    ),
+    (
+        "src/metrics/histogram.rs",
+        "lock-free histogram cells: per-cell counts are independent \
+         monotonic counters, snapshots tolerate torn totals by design",
+    ),
+    (
+        "src/metrics/registry.rs",
+        "metric counters are monotonic and publish no other memory",
+    ),
+    (
+        "src/vecstore/kernels.rs",
+        "SIMD dispatch cache: idempotent detection result, any thread \
+         recomputing it stores the same value",
+    ),
+    (
+        "src/durability/mod.rs",
+        "WAL stats are monotonic counters; durability ordering comes \
+         from fsync, not from these",
+    ),
+    (
+        "src/ingest/pipeline.rs",
+        "ingest stats merge monotonic counters and maxes; readers \
+         tolerate torn snapshots by design",
+    ),
+];
+
+/// Shim-migrated modules (rule 4). Everything the loom models exercise
+/// must route its sync primitives through `crate::util::sync`.
+const MIGRATED_MODULES: &[&str] = &[
+    "src/coordinator/queue_manager.rs",
+    "src/coordinator/cache.rs",
+    "src/devices/executor.rs",
+];
+
+/// `std::sync` leaves that remain fine in migrated modules: loom swaps
+/// scheduling primitives, not ownership or error types.
+const ALLOWED_STD_SYNC: &[&str] = &["Arc", "Weak", "mpsc", "PoisonError", "LockResult", "TryLockError"];
+
+/// Directories where a panic unwinds under live traffic (rule 3).
+const HOT_PATH_DIRS: &[&str] = &["src/server/", "src/coordinator/"];
+
+/// How far above a span the marker comment may sit: the contiguous run
+/// of comment/attribute/blank lines directly above it, capped here so a
+/// marker can't act at a distance.
+const MARKER_LOOKBACK: usize = 12;
+
+#[derive(Debug)]
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() {
+    let mode = std::env::args().nth(1);
+    let code = match mode.as_deref() {
+        Some("lint") => match lint_tree() {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("{e:#}");
+                1
+            }
+        },
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn lint_tree() -> Result<()> {
+    // xtask lives at rust/xtask; the lint target is rust/src.
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .context("xtask has no parent dir")?
+        .to_path_buf();
+    let mut files = Vec::new();
+    collect_rs(&crate_root.join("src"), &mut files)?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    for path in &files {
+        let source = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let rel = path
+            .strip_prefix(&crate_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        findings.extend(lint_source(&rel, &source)?);
+    }
+
+    if findings.is_empty() {
+        println!("xtask lint: clean ({} files)", files.len());
+        return Ok(());
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    for f in &findings {
+        eprintln!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    bail!("xtask lint: {} finding(s)", findings.len());
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source. `rel` is the crate-relative path
+/// (`src/...`), which the allowlists match on. Public for the tests.
+fn lint_source(rel: &str, source: &str) -> Result<Vec<Finding>> {
+    let ast = syn::parse_file(source).with_context(|| format!("parse {rel}"))?;
+    let mut linter = Linter {
+        rel,
+        lines: source.lines().collect(),
+        relaxed_file_ok: RELAXED_ALLOWLIST.iter().any(|(f, _)| rel.ends_with(f)),
+        hot_path: HOT_PATH_DIRS.iter().any(|d| rel.contains(d)),
+        migrated: MIGRATED_MODULES.iter().any(|m| rel.ends_with(m)),
+        findings: Vec::new(),
+    };
+    linter.visit_file(&ast);
+    Ok(linter.findings)
+}
+
+struct Linter<'a> {
+    rel: &'a str,
+    lines: Vec<&'a str>,
+    relaxed_file_ok: bool,
+    hot_path: bool,
+    migrated: bool,
+    findings: Vec<Finding>,
+}
+
+impl Linter<'_> {
+    fn push(&mut self, line: usize, rule: &'static str, msg: String) {
+        self.findings.push(Finding { file: self.rel.to_string(), line, rule, msg });
+    }
+
+    /// Is `marker` on the span's own line, or in the contiguous run of
+    /// comment / attribute / blank lines directly above it?
+    fn has_marker(&self, line: usize, marker: &str) -> bool {
+        if line == 0 || line > self.lines.len() {
+            return false;
+        }
+        if self.lines[line - 1].contains(marker) {
+            return true;
+        }
+        let mut idx = line - 1; // 1-based line above the span
+        let mut walked = 0;
+        while idx >= 1 && walked < MARKER_LOOKBACK {
+            let text = self.lines[idx - 1].trim_start();
+            if text.starts_with("//") {
+                if text.contains(marker) {
+                    return true;
+                }
+            } else if !(text.is_empty() || text.starts_with("#[") || text.starts_with("#!")) {
+                break; // hit real code: the comment run ended
+            }
+            idx -= 1;
+            walked += 1;
+        }
+        false
+    }
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| {
+        a.path().is_ident("cfg")
+            && a.meta
+                .require_list()
+                .map(|l| l.tokens.to_string() == "test")
+                .unwrap_or(false)
+    })
+}
+
+/// Flatten a use tree into full segment paths (groups fan out).
+fn flatten_use(tree: &syn::UseTree, prefix: &mut Vec<String>, out: &mut Vec<Vec<String>>) {
+    match tree {
+        syn::UseTree::Path(p) => {
+            prefix.push(p.ident.to_string());
+            flatten_use(&p.tree, prefix, out);
+            prefix.pop();
+        }
+        syn::UseTree::Name(n) => {
+            let mut path = prefix.clone();
+            path.push(n.ident.to_string());
+            out.push(path);
+        }
+        syn::UseTree::Rename(r) => {
+            let mut path = prefix.clone();
+            path.push(r.ident.to_string());
+            out.push(path);
+        }
+        syn::UseTree::Glob(_) => {
+            let mut path = prefix.clone();
+            path.push("*".to_string());
+            out.push(path);
+        }
+        syn::UseTree::Group(g) => {
+            for t in &g.items {
+                flatten_use(t, prefix, out);
+            }
+        }
+    }
+}
+
+impl<'ast> Visit<'ast> for Linter<'_> {
+    fn visit_item_mod(&mut self, m: &'ast syn::ItemMod) {
+        if is_cfg_test(&m.attrs) {
+            return; // test code: panics and SeqCst experiments are fine
+        }
+        visit::visit_item_mod(self, m);
+    }
+
+    fn visit_expr_unsafe(&mut self, e: &'ast syn::ExprUnsafe) {
+        let line = e.unsafe_token.span.start().line;
+        if !self.has_marker(line, "SAFETY:") {
+            self.push(
+                line,
+                "safety-comment",
+                "unsafe block without a `// SAFETY:` comment stating why it is sound".into(),
+            );
+        }
+        visit::visit_expr_unsafe(self, e);
+    }
+
+    fn visit_item_impl(&mut self, i: &'ast syn::ItemImpl) {
+        if let Some(tok) = &i.unsafety {
+            let line = tok.span.start().line;
+            if !self.has_marker(line, "SAFETY:") {
+                self.push(
+                    line,
+                    "safety-comment",
+                    "unsafe impl without a `// SAFETY:` comment".into(),
+                );
+            }
+        }
+        visit::visit_item_impl(self, i);
+    }
+
+    fn visit_expr_path(&mut self, p: &'ast syn::ExprPath) {
+        let segs: Vec<String> = p.path.segments.iter().map(|s| s.ident.to_string()).collect();
+        if segs.len() >= 2 && segs[segs.len() - 2] == "Ordering" {
+            let variant = segs[segs.len() - 1].as_str();
+            let line = p.path.segments.last().unwrap().ident.span().start().line;
+            match variant {
+                "SeqCst" => {
+                    if !self.has_marker(line, "ordering:") {
+                        self.push(
+                            line,
+                            "atomic-ordering",
+                            "Ordering::SeqCst is banned: name the acquire/release edge \
+                             instead, or justify with an `// ordering:` comment"
+                                .into(),
+                        );
+                    }
+                }
+                "Relaxed" => {
+                    if !self.relaxed_file_ok && !self.has_marker(line, "ordering:") {
+                        self.push(
+                            line,
+                            "atomic-ordering",
+                            "Ordering::Relaxed outside the allowlist: add the file with a \
+                             justification in xtask, or an `// ordering:` comment at the site"
+                                .into(),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        visit::visit_expr_path(self, p);
+    }
+
+    fn visit_expr_method_call(&mut self, c: &'ast syn::ExprMethodCall) {
+        if self.hot_path {
+            let name = c.method.to_string();
+            if name == "unwrap" || name == "expect" {
+                let line = c.method.span().start().line;
+                if !self.has_marker(line, "lint:allow(unwrap-expect)") {
+                    self.push(
+                        line,
+                        "hot-path-unwrap",
+                        format!(
+                            ".{name}() on a serving path: recover or propagate instead, or \
+                             waive with `// lint:allow(unwrap-expect): <why>`"
+                        ),
+                    );
+                }
+            }
+        }
+        visit::visit_expr_method_call(self, c);
+    }
+
+    fn visit_item_use(&mut self, u: &'ast syn::ItemUse) {
+        if self.migrated {
+            let mut paths = Vec::new();
+            flatten_use(&u.tree, &mut Vec::new(), &mut paths);
+            for path in paths {
+                if path.len() >= 3
+                    && path[0] == "std"
+                    && path[1] == "sync"
+                    && !ALLOWED_STD_SYNC.contains(&path[2].as_str())
+                {
+                    let line = u.use_token.span.start().line;
+                    self.push(
+                        line,
+                        "std-sync-import",
+                        format!(
+                            "`use {}` in a loom-shim-migrated module: import it from \
+                             `crate::util::sync` so the models keep covering it",
+                            path.join("::")
+                        ),
+                    );
+                }
+            }
+        }
+        visit::visit_item_use(self, u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lint_source;
+
+    fn rules(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_source(rel, src).unwrap().iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_block_requires_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules("src/x.rs", bad), vec!["safety-comment"]);
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller promised p is valid.\n    unsafe { *p }\n}";
+        assert!(rules("src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn marker_sees_through_attributes_and_comment_runs() {
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller promised p is\n    // valid for reads.\n    #[allow(clippy::let_and_return)]\n    let v = unsafe { *p };\n    v\n}";
+        assert!(rules("src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn seqcst_is_banned_and_relaxed_needs_allowlist_or_comment() {
+        let seqcst = "fn f(a: &std::sync::atomic::AtomicUsize) { a.store(0, std::sync::atomic::Ordering::SeqCst); }";
+        assert_eq!(rules("src/x.rs", seqcst), vec!["atomic-ordering"]);
+        let relaxed = "fn f(a: &std::sync::atomic::AtomicUsize) { a.store(0, std::sync::atomic::Ordering::Relaxed); }";
+        assert_eq!(rules("src/x.rs", relaxed), vec!["atomic-ordering"]);
+        // Allowlisted file: relaxed is fine.
+        assert!(rules("src/metrics/registry.rs", relaxed).is_empty());
+        // Site comment: also fine.
+        let commented = "fn f(a: &std::sync::atomic::AtomicUsize) {\n    // ordering: Relaxed — monotonic counter.\n    a.store(0, std::sync::atomic::Ordering::Relaxed);\n}";
+        assert!(rules("src/x.rs", commented).is_empty());
+        // `cmp::Ordering` variants never trip the rule.
+        let cmp = "fn f() -> std::cmp::Ordering { std::cmp::Ordering::Less }";
+        assert!(rules("src/x.rs", cmp).is_empty());
+    }
+
+    #[test]
+    fn hot_path_unwrap_flagged_only_in_hot_dirs_and_waivable() {
+        let bad = "fn f(x: Option<u8>) -> u8 { x.unwrap() }";
+        assert_eq!(rules("src/server/h.rs", bad), vec!["hot-path-unwrap"]);
+        assert_eq!(rules("src/coordinator/h.rs", bad), vec!["hot-path-unwrap"]);
+        assert!(rules("src/util/h.rs", bad).is_empty());
+        let waived = "fn f(x: Option<u8>) -> u8 {\n    // lint:allow(unwrap-expect): startup only.\n    x.unwrap()\n}";
+        assert!(rules("src/server/h.rs", waived).is_empty());
+        // unwrap_or_else is not unwrap.
+        let recover = "fn f(x: Option<u8>) -> u8 { x.unwrap_or_else(|| 0) }";
+        assert!(rules("src/server/h.rs", recover).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Option::<u8>::None.unwrap(); }\n}";
+        assert!(rules("src/server/h.rs", src).is_empty());
+    }
+
+    #[test]
+    fn migrated_modules_reject_wrapped_std_sync_imports() {
+        let banned = "use std::sync::Mutex;";
+        assert_eq!(rules("src/coordinator/cache.rs", banned), vec!["std-sync-import"]);
+        let grouped = "use std::sync::{Arc, atomic::AtomicU64};";
+        assert_eq!(rules("src/devices/executor.rs", grouped), vec!["std-sync-import"]);
+        let fine = "use std::sync::{Arc, mpsc, PoisonError};";
+        assert!(rules("src/coordinator/queue_manager.rs", fine).is_empty());
+        // Non-migrated files may import std::sync directly.
+        assert!(rules("src/coordinator/batcher.rs", banned).is_empty());
+    }
+}
