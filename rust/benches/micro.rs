@@ -248,6 +248,7 @@ fn main() {
                     text: Arc::from(""),
                     class: WorkClass::Embed,
                     enqueued: Instant::now(),
+                    trace: 0,
                     reply: i,
                 });
             }
@@ -280,6 +281,40 @@ fn main() {
         }
         bench("histogram p99", || {
             std::hint::black_box(h.quantile(0.99));
+        })
+        .report();
+
+        // The hot-path lock fix: incrementing a counter by name takes
+        // the registry mutex and walks the BTreeMap on every event;
+        // the pre-resolved Arc handle (what the service caches in
+        // HotMetrics at construction) is a single relaxed fetch_add.
+        use windve::metrics::{ClassLabel, CodecLabel, Registry, RouteLabel, Stage, Tracer};
+        let reg = Registry::new();
+        for i in 0..64 {
+            reg.counter(&format!("bench.filler.{i}"));
+        }
+        bench("counter inc (by-name lookup)", || {
+            reg.counter("service.accepted").inc();
+        })
+        .report();
+        let hot = reg.counter("service.accepted");
+        bench("counter inc (pre-resolved Arc)", || hot.inc()).report();
+
+        // One span record: label pack + seqlock ring publish + stage
+        // histogram record, no heap allocation.
+        let tracer = Tracer::new(&reg, 1024, std::time::Duration::from_millis(100));
+        let id = tracer.mint();
+        let t0 = Instant::now();
+        bench("tracer span record", || {
+            tracer.span(
+                id,
+                Stage::Embed,
+                ClassLabel::Embed,
+                RouteLabel::Npu,
+                CodecLabel::All,
+                t0,
+                std::time::Duration::from_micros(5),
+            );
         })
         .report();
     }

@@ -249,10 +249,102 @@ fn main() {
         );
     }
 
+    section("tracing overhead (embed path, traced vs untraced)");
+    {
+        let reqs = env_usize("WINDVE_BENCH_TRACE_REQS", 2000);
+        let mut rates = Vec::new();
+        for (name, capacity) in
+            [("embed e2e, traced", 1024usize), ("embed e2e, untraced", 0)]
+        {
+            let svc = embed_bench_service(capacity);
+            // Same driver both runs: mint_trace() is 0 when tracing is
+            // off, so the only delta is the span pipeline itself.
+            let start = std::time::Instant::now();
+            for n in 0..reqs {
+                let ticket = svc
+                    .submit_traced(format!("trace bench query {n}"), svc.mint_trace())
+                    .expect("depth 64, sequential: never busy");
+                ticket.wait(Duration::from_secs(5)).expect("embed");
+            }
+            let qps = reqs as f64 / start.elapsed().as_secs_f64().max(1e-9);
+            println!("{name:<52} {qps:>12.0} queries/s   ({reqs} sequential)");
+            rates.push(qps);
+            h.report.push(vec![
+                ("bench", Json::str(name)),
+                ("rows", Json::num(reqs as f64)),
+                ("batch", Json::num(1.0)),
+                ("quant", Json::str("f32")),
+                ("kernel", Json::str(kernels::name())),
+                ("queries_per_s", Json::num(qps)),
+            ]);
+            // Per-stage latency quantiles under the live schema, from
+            // the traced run only (the untraced run records nothing).
+            for (name, hist) in svc.metrics.histograms() {
+                if !name.starts_with("trace.") || hist.count() == 0 {
+                    continue;
+                }
+                println!(
+                    "{:<52} p50 {:>8} ns  p95 {:>8} ns  p99 {:>8} ns  (n={})",
+                    format!("stage {name}"),
+                    hist.p50(),
+                    hist.p95(),
+                    hist.p99(),
+                    hist.count()
+                );
+                h.report.push(vec![
+                    ("bench", Json::str(format!("stage quantiles [{name}]"))),
+                    ("rows", Json::num(reqs as f64)),
+                    ("batch", Json::num(1.0)),
+                    ("quant", Json::str("f32")),
+                    ("kernel", Json::str(kernels::name())),
+                    ("count", Json::num(hist.count() as f64)),
+                    ("p50_ns", Json::num(hist.p50() as f64)),
+                    ("p95_ns", Json::num(hist.p95() as f64)),
+                    ("p99_ns", Json::num(hist.p99() as f64)),
+                ]);
+            }
+        }
+        println!(
+            "{:<52} {:.2}% qps cost",
+            "tracing overhead",
+            (1.0 - rates[0] / rates[1].max(1e-9)) * 100.0
+        );
+    }
+
     if let Ok(path) = std::env::var("WINDVE_BENCH_JSON") {
         h.report.write(&path).expect("write bench JSON");
         println!("\nwrote {} records to {path}", h.report.len());
     }
+}
+
+/// NPU-only synthetic service for the tracing-overhead rows; the span
+/// ring is the only knob that differs between the two runs.
+fn embed_bench_service(trace_capacity: usize) -> std::sync::Arc<windve::coordinator::WindVE> {
+    use windve::coordinator::{ServiceConfig, WindVE};
+    use windve::devices::executor::{Backend, SyntheticBackend};
+    use windve::devices::profile::DeviceProfile;
+    std::sync::Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 64,
+                cpu_depth: 0,
+                hetero: false,
+                npu_workers: 1,
+                cpu_workers: 0,
+                cache_entries: 0,
+                trace_capacity,
+                ..ServiceConfig::default()
+            },
+            vec![Box::new(|| {
+                let mut p = DeviceProfile::v100_bge();
+                p.noise_sigma = 0.0;
+                p.outlier_prob = 0.0;
+                Ok(Box::new(SyntheticBackend::new(p, 1e-6, 1)) as Box<dyn Backend>)
+            })],
+            vec![],
+        )
+        .expect("bench service"),
+    )
 }
 
 /// Minimal NPU-only synthetic service for the server-concurrency rows

@@ -27,6 +27,9 @@ pub struct Pending<T> {
     pub text: Arc<str>,
     pub class: WorkClass,
     pub enqueued: Instant,
+    /// Request trace ID (0 = untraced); workers attribute their
+    /// queue_wait / batch_form / embed spans to it.
+    pub trace: u64,
     /// Response slot (a per-request channel in the real service).
     pub reply: T,
 }
@@ -129,6 +132,7 @@ mod tests {
             text: Arc::from(text),
             class: WorkClass::Embed,
             enqueued: Instant::now(),
+            trace: 0,
             reply: 0,
         }
     }
@@ -205,6 +209,7 @@ mod tests {
                         text: Arc::from(format!("{t}-{i}")),
                         class: WorkClass::Embed,
                         enqueued: Instant::now(),
+                        trace: 0,
                         reply: 0,
                     });
                 }

@@ -16,7 +16,26 @@ use crate::coordinator::batcher::DeviceQueue;
 use crate::coordinator::queue_manager::{QueueManager, Route, WorkClass};
 use crate::devices::executor::Backend;
 use crate::devices::affinity;
+use crate::metrics::trace::{ClassLabel, CodecLabel, RouteLabel, Stage, Tracer};
 use crate::metrics::Registry;
+
+/// Trace label for an admission work class.
+pub fn class_label(class: WorkClass) -> ClassLabel {
+    match class {
+        WorkClass::Embed => ClassLabel::Embed,
+        WorkClass::Retrieve => ClassLabel::Retrieve,
+        WorkClass::Ingest => ClassLabel::Ingest,
+    }
+}
+
+/// Trace label for a dispatch route (`Busy` never reaches a worker).
+pub fn route_label(route: Route) -> RouteLabel {
+    match route {
+        Route::Npu => RouteLabel::Npu,
+        Route::Cpu => RouteLabel::Cpu,
+        Route::Busy => RouteLabel::All,
+    }
+}
 
 /// What a query's submitter receives.
 pub type Reply = Sender<Result<Vec<f32>, String>>;
@@ -35,6 +54,7 @@ pub fn spawn_worker(
     route: Route,
     factory: BackendFactory,
     metrics: Registry,
+    tracer: Option<Arc<Tracer>>,
     pin_cores: Option<Vec<usize>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
@@ -66,24 +86,70 @@ pub fn spawn_worker(
             let failures = metrics.counter(&format!("worker.{name}.failures"));
 
             while let Some(batch) = queue.drain_batch(backend.max_batch()) {
+                let drained = std::time::Instant::now();
                 // Take ownership of the texts (Arc-shared — no per-query
                 // payload clone on the hot path); keep each query's
-                // (class, reply) alongside so its slot is released under
-                // the admission class that acquired it (embed vs ingest).
-                let (texts, batch): (Vec<Arc<str>>, Vec<(WorkClass, Reply)>) = batch
+                // (class, trace, enqueued, reply) alongside so its slot
+                // is released under the admission class that acquired it
+                // (embed vs ingest) and its spans attribute correctly.
+                #[allow(clippy::type_complexity)]
+                let (texts, batch): (
+                    Vec<Arc<str>>,
+                    Vec<(WorkClass, u64, std::time::Instant, Reply)>,
+                ) = batch
                     .into_iter()
-                    .map(|p| (p.text, (p.class, p.reply)))
+                    .map(|p| (p.text, (p.class, p.trace, p.enqueued, p.reply)))
                     .unzip();
+                if let Some(tr) = &tracer {
+                    for (class, trace, enqueued, _) in &batch {
+                        if *trace != 0 {
+                            tr.span(
+                                *trace,
+                                Stage::QueueWait,
+                                class_label(*class),
+                                route_label(route),
+                                CodecLabel::All,
+                                *enqueued,
+                                drained.saturating_duration_since(*enqueued),
+                            );
+                        }
+                    }
+                }
                 let t0 = std::time::Instant::now();
                 let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
                     backend.embed(&texts)
                 }));
-                lat.record(t0.elapsed().as_nanos() as u64);
+                let embed_dur = t0.elapsed();
+                lat.record(embed_dur.as_nanos() as u64);
                 batches.inc();
                 queries.add(batch.len() as u64);
+                if let Some(tr) = &tracer {
+                    for (class, trace, _, _) in &batch {
+                        if *trace != 0 {
+                            tr.span(
+                                *trace,
+                                Stage::BatchForm,
+                                class_label(*class),
+                                route_label(route),
+                                CodecLabel::All,
+                                drained,
+                                t0.saturating_duration_since(drained),
+                            );
+                            tr.span(
+                                *trace,
+                                Stage::Embed,
+                                class_label(*class),
+                                route_label(route),
+                                CodecLabel::All,
+                                t0,
+                                embed_dur,
+                            );
+                        }
+                    }
+                }
                 match result {
                     Ok(Ok(vectors)) if vectors.len() == batch.len() => {
-                        for ((class, reply), v) in batch.into_iter().zip(vectors) {
+                        for ((class, _, _, reply), v) in batch.into_iter().zip(vectors) {
                             qm.release_class(class, route, 1);
                             let _ = reply.send(Ok(v));
                         }
@@ -95,14 +161,14 @@ pub fn spawn_worker(
                             vectors.len(),
                             batch.len()
                         );
-                        for (class, reply) in batch {
+                        for (class, _, _, reply) in batch {
                             qm.release_class(class, route, 1);
                             let _ = reply.send(Err(msg.clone()));
                         }
                     }
                     Ok(Err(e)) => {
                         failures.inc();
-                        for (class, reply) in batch {
+                        for (class, _, _, reply) in batch {
                             qm.release_class(class, route, 1);
                             let _ = reply.send(Err(format!("backend error: {e:#}")));
                         }
@@ -115,7 +181,7 @@ pub fn spawn_worker(
                             .or_else(|| panic.downcast_ref::<String>().cloned())
                             .unwrap_or_else(|| "worker panic".into());
                         log::error!("{name}: backend panicked: {msg}");
-                        for (class, reply) in batch {
+                        for (class, _, _, reply) in batch {
                             qm.release_class(class, route, 1);
                             let _ = reply.send(Err(format!("backend panic: {msg}")));
                         }
@@ -176,6 +242,7 @@ mod tests {
             text: Arc::from(text),
             class: WorkClass::Embed,
             enqueued: Instant::now(),
+            trace: 0,
             reply: tx,
         });
         rx
@@ -192,6 +259,7 @@ mod tests {
             Route::Npu,
             Box::new(|| Ok(Box::new(OkBackend) as Box<dyn Backend>)),
             Registry::new(),
+            None,
             None,
         );
         let rxs: Vec<_> = (0..6).map(|i| submit(&queue, &qm, &format!("query {i}"))).collect();
@@ -216,6 +284,7 @@ mod tests {
             Route::Npu,
             Box::new(|| Ok(Box::new(PanicOnceBackend { panicked: false }) as Box<dyn Backend>)),
             Registry::new(),
+            None,
             None,
         );
         let rx1 = submit(&queue, &qm, "doomed");
@@ -247,6 +316,7 @@ mod tests {
             Box::new(|| Ok(Box::new(OkBackend) as Box<dyn Backend>)),
             Registry::new(),
             None,
+            None,
         );
         assert_eq!(qm.dispatch_ingest_npu(1), Route::Npu);
         let (tx, rx) = mpsc::channel();
@@ -254,6 +324,7 @@ mod tests {
             text: Arc::from("ingested doc"),
             class: WorkClass::Ingest,
             enqueued: Instant::now(),
+            trace: 0,
             reply: tx,
         });
         rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap();
@@ -273,6 +344,54 @@ mod tests {
     }
 
     #[test]
+    fn traced_worker_records_queue_wait_batch_form_embed_spans() {
+        let queue = Arc::new(DeviceQueue::new());
+        let qm = Arc::new(QueueManager::new(16, 0, false));
+        let metrics = Registry::new();
+        let tracer = Arc::new(Tracer::new(
+            &metrics,
+            64,
+            std::time::Duration::from_secs(10),
+        ));
+        let h = spawn_worker(
+            "npu0".into(),
+            Arc::clone(&queue),
+            Arc::clone(&qm),
+            Route::Npu,
+            Box::new(|| Ok(Box::new(OkBackend) as Box<dyn Backend>)),
+            metrics.clone(),
+            Some(Arc::clone(&tracer)),
+            None,
+        );
+        let id = tracer.mint();
+        assert_eq!(qm.dispatch(), Route::Npu);
+        let (tx, rx) = mpsc::channel();
+        queue.push(Pending {
+            text: Arc::from("traced query"),
+            class: WorkClass::Embed,
+            enqueued: Instant::now(),
+            trace: id,
+            reply: tx,
+        });
+        rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap().unwrap();
+        queue.close();
+        h.join().unwrap();
+        let spans = tracer.snapshot();
+        let stages: Vec<Stage> = spans
+            .iter()
+            .filter(|s| s.trace_id == id)
+            .map(|s| s.stage)
+            .collect();
+        assert_eq!(stages, vec![Stage::QueueWait, Stage::BatchForm, Stage::Embed]);
+        for s in &spans {
+            assert_eq!(s.class, ClassLabel::Embed);
+            assert_eq!(s.route, RouteLabel::Npu);
+        }
+        assert_eq!(metrics.histogram("trace.embed.embed.npu.all").count(), 1);
+        assert_eq!(metrics.histogram("trace.queue_wait.embed.npu.all").count(), 1);
+    }
+
+    #[test]
     fn failed_factory_fails_queries_cleanly() {
         let queue = Arc::new(DeviceQueue::new());
         let qm = Arc::new(QueueManager::new(16, 0, false));
@@ -283,6 +402,7 @@ mod tests {
             Route::Npu,
             Box::new(|| anyhow::bail!("no artifacts")),
             Registry::new(),
+            None,
             None,
         );
         let rx = submit(&queue, &qm, "orphan");

@@ -25,8 +25,10 @@ use super::instance::{spawn_worker, BackendFactory, Reply};
 use super::queue_manager::{AdmissionGuard, ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::executor::RetrievalExecutor;
 use crate::durability::DurableStore;
+use crate::estimator::SloGovernor;
 use crate::ingest::IngestStats;
-use crate::metrics::Registry;
+use crate::metrics::trace::{ClassLabel, CodecLabel, RouteLabel, Stage, Tracer};
+use crate::metrics::{Counter, Histogram, Registry};
 use crate::runtime::NpuScanner;
 use crate::vecstore::{Hit, Quant};
 
@@ -129,6 +131,22 @@ pub struct ServiceConfig {
     /// support) silently keep the plain sharded scan. Results are
     /// bit-identical either way.
     pub numa_scan: bool,
+    /// Request-trace span ring capacity; 0 disables tracing entirely
+    /// (no trace IDs, no stage spans, no stage histograms — the
+    /// untraced baseline the overhead bench row compares against).
+    pub trace_capacity: usize,
+    /// Spans at or over this duration additionally land in the
+    /// slow-query ring served by `GET /v1/trace`.
+    pub trace_slow_threshold: Duration,
+    /// End-to-end latency SLO. `Some` arms the live [`SloGovernor`]:
+    /// windowed attainment over served embeds, with breach-gated NPU
+    /// depth retuning recommendations surfaced in `/v1/stats`
+    /// (paper Eqs. 9-10 run online instead of offline).
+    pub slo: Option<Duration>,
+    /// Required SLO attainment fraction (e.g. 0.99).
+    pub slo_target: f64,
+    /// SLO attainment window in requests (clamped to ≥ 8).
+    pub slo_window: usize,
 }
 
 /// Default embed-query cost unit: 32 MiB of scanned arena ≈ the memory
@@ -160,6 +178,82 @@ impl Default for ServiceConfig {
             npu_ingest_depth: 0,
             ingest_low_water: 0.25,
             numa_scan: false,
+            trace_capacity: 1024,
+            trace_slow_threshold: Duration::from_millis(100),
+            slo: None,
+            slo_target: 0.99,
+            slo_window: 256,
+        }
+    }
+}
+
+/// Pre-resolved metric handles for the serving hot paths: one atomic op
+/// per event instead of a `Mutex<BTreeMap>` lock + string lookup per
+/// increment. Resolved once at [`WindVE::start`] from the same
+/// [`Registry`], so name-based reads (tests, `/v1/metrics`) observe the
+/// identical counters. The `metrics` section of `benches/micro.rs`
+/// quantifies the lookup-vs-handle delta.
+struct HotMetrics {
+    busy: Arc<Counter>,
+    accepted: Arc<Counter>,
+    ingest_busy: Arc<Counter>,
+    ingest_accepted: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    e2e_npu_ns: Arc<Histogram>,
+    e2e_cpu_ns: Arc<Histogram>,
+    retrieve_offload_stale: Arc<Counter>,
+    retrieve_cost_units_npu: Arc<Counter>,
+    retrieve_scan_npu_ns: Arc<Histogram>,
+    retrieve_offloaded: Arc<Counter>,
+    retrievals: Arc<Counter>,
+    retrievals_npu: Arc<Counter>,
+    retrieve_busy: Arc<Counter>,
+    retrieve_admitted: Arc<Counter>,
+    retrieve_cost_units: Arc<Counter>,
+    retrieve_scan_ns: Arc<Histogram>,
+    retrievals_f32: Arc<Counter>,
+    retrievals_f16: Arc<Counter>,
+    retrievals_int8: Arc<Counter>,
+    retrievals_pq4: Arc<Counter>,
+    retrievals_pq8: Arc<Counter>,
+}
+
+impl HotMetrics {
+    fn resolve(m: &Registry) -> HotMetrics {
+        HotMetrics {
+            busy: m.counter("service.busy"),
+            accepted: m.counter("service.accepted"),
+            ingest_busy: m.counter("service.ingest_busy"),
+            ingest_accepted: m.counter("service.ingest_accepted"),
+            cache_hits: m.counter("service.cache_hits"),
+            e2e_npu_ns: m.histogram("service.e2e_npu_ns"),
+            e2e_cpu_ns: m.histogram("service.e2e_cpu_ns"),
+            retrieve_offload_stale: m.counter("service.retrieve_offload_stale"),
+            retrieve_cost_units_npu: m.counter("service.retrieve_cost_units_npu"),
+            retrieve_scan_npu_ns: m.histogram("service.retrieve_scan_npu_ns"),
+            retrieve_offloaded: m.counter("service.retrieve_offloaded"),
+            retrievals: m.counter("service.retrievals"),
+            retrievals_npu: m.counter("service.retrievals_npu"),
+            retrieve_busy: m.counter("service.retrieve_busy"),
+            retrieve_admitted: m.counter("service.retrieve_admitted"),
+            retrieve_cost_units: m.counter("service.retrieve_cost_units"),
+            retrieve_scan_ns: m.histogram("service.retrieve_scan_ns"),
+            retrievals_f32: m.counter("service.retrievals_f32"),
+            retrievals_f16: m.counter("service.retrievals_f16"),
+            retrievals_int8: m.counter("service.retrievals_int8"),
+            retrievals_pq4: m.counter("service.retrievals_pq4"),
+            retrievals_pq8: m.counter("service.retrievals_pq8"),
+        }
+    }
+
+    /// Which per-codec retrieval counter absorbed a scan.
+    fn retrievals_by_codec(&self, q: Quant) -> &Counter {
+        match q {
+            Quant::F32 => &self.retrievals_f32,
+            Quant::F16 => &self.retrievals_f16,
+            Quant::Int8 => &self.retrievals_int8,
+            Quant::Pq { bits: 4, .. } => &self.retrievals_pq4,
+            Quant::Pq { .. } => &self.retrievals_pq8,
         }
     }
 }
@@ -275,6 +369,12 @@ pub struct WindVE {
     /// Operator intent from [`ServiceConfig::numa_scan`]: applied to
     /// executors as they are attached (multi-node hosts only).
     numa_scan: bool,
+    /// Pre-resolved hot-path metric handles (same Arcs as in `metrics`).
+    hot: HotMetrics,
+    /// Request tracer; `None` when `trace_capacity == 0`.
+    tracer: Option<Arc<Tracer>>,
+    /// Live SLO governor; `None` when no SLO is configured.
+    slo_gov: Option<SloGovernor>,
     pub metrics: Registry,
 }
 
@@ -319,6 +419,13 @@ impl WindVE {
         ));
         let npu_queue = Arc::new(DeviceQueue::new());
         let cpu_queue = hetero.then(|| Arc::new(DeviceQueue::new()));
+        let tracer = (cfg.trace_capacity > 0).then(|| {
+            Arc::new(Tracer::new(
+                &metrics,
+                cfg.trace_capacity,
+                cfg.trace_slow_threshold,
+            ))
+        });
 
         let mut workers = Vec::new();
         for (i, f) in npu_factories.into_iter().enumerate() {
@@ -329,6 +436,7 @@ impl WindVE {
                 Route::Npu,
                 f,
                 metrics.clone(),
+                tracer.clone(),
                 None,
             ));
         }
@@ -341,6 +449,7 @@ impl WindVE {
                     Route::Cpu,
                     f,
                     metrics.clone(),
+                    tracer.clone(),
                     cfg.cpu_pin_cores.clone(),
                 ));
             }
@@ -371,8 +480,43 @@ impl WindVE {
             ingest_low_water_slots,
             ingest_stats: Arc::new(IngestStats::default()),
             numa_scan: cfg.numa_scan,
+            hot: HotMetrics::resolve(&metrics),
+            tracer,
+            slo_gov: cfg
+                .slo
+                .map(|slo| SloGovernor::new(slo, cfg.slo_target, cfg.slo_window, cfg.npu_depth.max(1))),
             metrics,
         })
+    }
+
+    /// The request tracer (`None` when tracing is disabled).
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Mint a trace ID for a new request; 0 ("untraced") when tracing is
+    /// disabled.
+    pub fn mint_trace(&self) -> u64 {
+        self.tracer.as_ref().map(|t| t.mint()).unwrap_or(0)
+    }
+
+    /// The live SLO governor (`None` when no SLO is configured).
+    pub fn slo_governor(&self) -> Option<&SloGovernor> {
+        self.slo_gov.as_ref()
+    }
+
+    /// Feed the SLO governor one served embed: route-side concurrency is
+    /// sampled now as the paper's concurrency proxy. Only NPU-routed
+    /// samples feed the depth fit (the governor retunes `C^max_NPU`);
+    /// every sample counts toward attainment. No-op without an SLO.
+    pub fn observe_slo(&self, route: Route, latency: Duration) {
+        if let Some(g) = &self.slo_gov {
+            let concurrency = match route {
+                Route::Npu => self.qm.npu_occupancy(),
+                _ => 0, // attainment only; the calibrator ignores 0
+            };
+            g.observe(concurrency, latency);
+        }
     }
 
     /// Attach the CPU-side retrieval executor (the vector index the
@@ -484,6 +628,17 @@ impl WindVE {
     /// is an `Arc<str>`: callers holding parsed request bodies submit a
     /// refcount bump, not a copy (`String` and `&str` still convert).
     pub fn submit(&self, text: impl Into<Arc<str>>) -> Result<Ticket, ServeError> {
+        self.submit_traced(text, 0)
+    }
+
+    /// [`WindVE::submit`] carrying a request trace ID (0 = untraced):
+    /// the device worker attributes this query's queue_wait /
+    /// batch_form / embed spans to it.
+    pub fn submit_traced(
+        &self,
+        text: impl Into<Arc<str>>,
+        trace: u64,
+    ) -> Result<Ticket, ServeError> {
         let route = self.qm.dispatch();
         let queue = match route {
             Route::Npu => &self.npu_queue,
@@ -495,12 +650,12 @@ impl WindVE {
                 Some(q) => q,
                 None => {
                     self.qm.release_class(WorkClass::Embed, route, 1);
-                    self.metrics.counter("service.busy").inc();
+                    self.hot.busy.inc();
                     return Err(ServeError::Busy);
                 }
             },
             Route::Busy => {
-                self.metrics.counter("service.busy").inc();
+                self.hot.busy.inc();
                 return Err(ServeError::Busy);
             }
         };
@@ -509,9 +664,10 @@ impl WindVE {
             text: text.into(),
             class: WorkClass::Embed,
             enqueued: Instant::now(),
+            trace,
             reply: tx,
         });
-        self.metrics.counter("service.accepted").inc();
+        self.hot.accepted.inc();
         Ok(Ticket { route, rx, submitted: Instant::now() })
     }
 
@@ -527,6 +683,16 @@ impl WindVE {
     /// never contend with an embedding burst); otherwise the CPU leg,
     /// which needs a hetero CPU worker to exist.
     pub fn submit_ingest(&self, text: impl Into<Arc<str>>) -> Result<Ticket, ServeError> {
+        self.submit_ingest_traced(text, 0)
+    }
+
+    /// [`WindVE::submit_ingest`] carrying a request trace ID (0 =
+    /// untraced); spans record under the `ingest` class label.
+    pub fn submit_ingest_traced(
+        &self,
+        text: impl Into<Arc<str>>,
+        trace: u64,
+    ) -> Result<Ticket, ServeError> {
         let mut route = Route::Busy;
         if self.qm.npu_ingest_cap() > 0
             && self.qm.embed_npu_occupancy() <= self.ingest_low_water_slots
@@ -545,12 +711,12 @@ impl WindVE {
                 Some(q) => q,
                 None => {
                     self.qm.release_class(WorkClass::Ingest, route, 1);
-                    self.metrics.counter("service.ingest_busy").inc();
+                    self.hot.ingest_busy.inc();
                     return Err(ServeError::Busy);
                 }
             },
             Route::Busy => {
-                self.metrics.counter("service.ingest_busy").inc();
+                self.hot.ingest_busy.inc();
                 return Err(ServeError::Busy);
             }
         };
@@ -559,9 +725,10 @@ impl WindVE {
             text: text.into(),
             class: WorkClass::Ingest,
             enqueued: Instant::now(),
+            trace,
             reply: tx,
         });
-        self.metrics.counter("service.ingest_accepted").inc();
+        self.hot.ingest_accepted.inc();
         Ok(Ticket { route, rx, submitted: Instant::now() })
     }
 
@@ -589,7 +756,7 @@ impl WindVE {
     fn cache_lookup(&self, entry: &Option<(Arc<EmbeddingCache>, u64)>) -> Option<Vec<f32>> {
         let (cache, key) = entry.as_ref()?;
         let v = cache.get(*key)?;
-        self.metrics.counter("service.cache_hits").inc();
+        self.hot.cache_hits.inc();
         Some(v)
     }
 
@@ -618,12 +785,14 @@ impl WindVE {
         if let Ok(v) = &out {
             Self::cache_fill(&cache_key, v);
         }
+        let e2e = t0.elapsed();
         let h = match route {
-            Route::Npu => self.metrics.histogram("service.e2e_npu_ns"),
-            Route::Cpu => self.metrics.histogram("service.e2e_cpu_ns"),
+            Route::Npu => &self.hot.e2e_npu_ns,
+            Route::Cpu => &self.hot.e2e_cpu_ns,
             Route::Busy => unreachable!(),
         };
-        h.record(t0.elapsed().as_nanos() as u64);
+        h.record(e2e.as_nanos() as u64);
+        self.observe_slo(route, e2e);
         out
     }
 
@@ -650,6 +819,20 @@ impl WindVE {
         k: usize,
         timeout: Duration,
     ) -> Vec<Result<Vec<Hit>, ServeError>> {
+        self.retrieve_blocking_traced(queries, k, timeout, 0)
+    }
+
+    /// [`WindVE::retrieve_blocking`] carrying a request trace ID (0 =
+    /// untraced): embed-stage spans ride the submitted tickets, and the
+    /// scan + merge stages record here labeled by the leg that ran
+    /// (route × codec).
+    pub fn retrieve_blocking_traced(
+        &self,
+        queries: &[String],
+        k: usize,
+        timeout: Duration,
+        trace: u64,
+    ) -> Vec<Result<Vec<Hit>, ServeError>> {
         let exec = match self.retrieval() {
             Some(e) => e,
             None => {
@@ -674,7 +857,7 @@ impl WindVE {
                 embeddings[i] = Some(v);
                 continue;
             }
-            match self.submit(text.as_str()) {
+            match self.submit_traced(text.as_str(), trace) {
                 Ok(t) => tickets.push((i, t, cache_key)),
                 Err(e) => failures[i] = Some(e),
             }
@@ -720,14 +903,14 @@ impl WindVE {
         if any_embedded && self.npu_offload_admission && self.qm.npu_retrieve_cap() > 0 {
             if let Some(scanner) = self.npu_retrieval() {
                 if scanner.corpus_version() != exec.version() {
-                    self.metrics.counter("service.retrieve_offload_stale").inc();
+                    self.hot.retrieve_offload_stale.inc();
                 } else if self.qm.embed_npu_occupancy() <= self.npu_offload_low_water_slots {
                     // Clamp to the NPU retrieval cap, like the CPU leg:
                     // an over-budget arena serializes at the full budget
                     // instead of becoming permanently unschedulable.
                     let cost = scanner.scan_cost(unit).min(self.qm.npu_retrieve_cap().max(1));
                     if self.qm.dispatch_retrieve_npu(cost) == Route::Npu {
-                        self.metrics.counter("service.retrieve_cost_units_npu").add(cost as u64);
+                        self.hot.retrieve_cost_units_npu.add(cost as u64);
                         let admission =
                             self.qm.guard(WorkClass::Retrieve, Route::Npu, cost);
                         offload = Some((scanner, admission));
@@ -737,6 +920,9 @@ impl WindVE {
             }
         }
 
+        // Which leg actually scanned (route × codec) — the scan span's
+        // labels, and the merge span's route.
+        let mut scanned: Option<(RouteLabel, CodecLabel)> = None;
         let (panel_idx, mut hit_lists) = if let Some((scanner, admission)) = offload {
             let (panel_idx, panel) = split_panel(scanner.dim(), &embeddings, &mut failures);
             let lists = if panel.is_empty() {
@@ -744,12 +930,27 @@ impl WindVE {
             } else {
                 let t0 = Instant::now();
                 let lists = scanner.search_batch(&panel, k);
-                self.metrics
-                    .histogram("service.retrieve_scan_npu_ns")
-                    .record(t0.elapsed().as_nanos() as u64);
-                self.metrics.counter("service.retrieve_offloaded").inc();
-                self.metrics.counter("service.retrievals").add(panel_idx.len() as u64);
-                self.metrics.counter("service.retrievals_npu").add(panel_idx.len() as u64);
+                let dur = t0.elapsed();
+                self.hot.retrieve_scan_npu_ns.record(dur.as_nanos() as u64);
+                // The NPU mirror is a bit-identical f32 arena by
+                // construction, hence the fixed codec label.
+                scanned = Some((RouteLabel::Npu, CodecLabel::F32));
+                if trace != 0 {
+                    if let Some(tr) = &self.tracer {
+                        tr.span(
+                            trace,
+                            Stage::Scan,
+                            ClassLabel::Retrieve,
+                            RouteLabel::Npu,
+                            CodecLabel::F32,
+                            t0,
+                            dur,
+                        );
+                    }
+                }
+                self.hot.retrieve_offloaded.inc();
+                self.hot.retrievals.add(panel_idx.len() as u64);
+                self.hot.retrievals_npu.add(panel_idx.len() as u64);
                 lists
             };
             // Scan complete: hand the NPU slots back (the guard also
@@ -771,7 +972,7 @@ impl WindVE {
                 let cost = session.scan_cost(unit).min(cap.max(1));
                 match self.qm.dispatch_class(WorkClass::Retrieve, cost) {
                     Route::Busy => {
-                        self.metrics.counter("service.retrieve_busy").inc();
+                        self.hot.retrieve_busy.inc();
                         for &i in &panel_idx {
                             failures[i] = Some(ServeError::Busy);
                         }
@@ -779,8 +980,8 @@ impl WindVE {
                         panel.clear();
                     }
                     route => {
-                        self.metrics.counter("service.retrieve_admitted").inc();
-                        self.metrics.counter("service.retrieve_cost_units").add(cost as u64);
+                        self.hot.retrieve_admitted.inc();
+                        self.hot.retrieve_cost_units.add(cost as u64);
                         admitted = Some(self.qm.guard(WorkClass::Retrieve, route, cost));
                     }
                 }
@@ -790,24 +991,29 @@ impl WindVE {
             } else {
                 let t0 = Instant::now();
                 let lists = session.search_batch(&panel, k);
-                self.metrics
-                    .histogram("service.retrieve_scan_ns")
-                    .record(t0.elapsed().as_nanos() as u64);
-                self.metrics
-                    .counter("service.retrievals")
-                    .add(panel_idx.len() as u64);
-                // Per-codec counter: which arena (f32/f16/int8/pq) absorbed
-                // the scan — the capacity dial the quantized path exists
-                // for. Static names: no per-batch allocation on the
-                // serving path.
-                let codec_counter = match exec.quant() {
-                    Quant::F32 => "service.retrievals_f32",
-                    Quant::F16 => "service.retrievals_f16",
-                    Quant::Int8 => "service.retrievals_int8",
-                    Quant::Pq { bits: 4, .. } => "service.retrievals_pq4",
-                    Quant::Pq { .. } => "service.retrievals_pq8",
-                };
-                self.metrics.counter(codec_counter).add(panel_idx.len() as u64);
+                let dur = t0.elapsed();
+                self.hot.retrieve_scan_ns.record(dur.as_nanos() as u64);
+                self.hot.retrievals.add(panel_idx.len() as u64);
+                // Per-codec counter: which arena (f32/f16/int8/pq)
+                // absorbed the scan — the capacity dial the quantized
+                // path exists for. Pre-resolved handles: no lock or
+                // per-batch allocation on the serving path.
+                let codec = session.codec_label();
+                self.hot.retrievals_by_codec(exec.quant()).add(panel_idx.len() as u64);
+                scanned = Some((RouteLabel::Cpu, codec));
+                if trace != 0 {
+                    if let Some(tr) = &self.tracer {
+                        tr.span(
+                            trace,
+                            Stage::Scan,
+                            ClassLabel::Retrieve,
+                            RouteLabel::Cpu,
+                            codec,
+                            t0,
+                            dur,
+                        );
+                    }
+                }
                 lists
             };
             // Scan complete (or skipped): release the read session, then
@@ -820,12 +1026,26 @@ impl WindVE {
             (Vec::new(), Vec::new())
         };
 
+        let merge_t0 = Instant::now();
         let mut out: Vec<Result<Vec<Hit>, ServeError>> = failures
             .into_iter()
             .map(|f| Err(f.unwrap_or(ServeError::Shutdown)))
             .collect();
         for (i, hits) in panel_idx.into_iter().zip(hit_lists.drain(..)) {
             out[i] = Ok(hits);
+        }
+        if trace != 0 {
+            if let (Some(tr), Some((route, _))) = (&self.tracer, scanned) {
+                tr.span(
+                    trace,
+                    Stage::Merge,
+                    ClassLabel::Retrieve,
+                    route,
+                    CodecLabel::All,
+                    merge_t0,
+                    merge_t0.elapsed(),
+                );
+            }
         }
         out
     }

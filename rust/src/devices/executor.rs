@@ -260,6 +260,12 @@ impl RetrievalExecutor {
         self.quant
     }
 
+    /// The arena codec as a span/metric label (lock-free) — what the
+    /// tracing layer stamps on scan spans served by this executor.
+    pub fn codec_label(&self) -> crate::metrics::trace::CodecLabel {
+        quant_codec_label(self.quant)
+    }
+
     /// Opt the attached index into NUMA-aware scan sharding (exclusive
     /// lock: the arena is rewritten through per-node pinned first-touch
     /// copies — see `vecstore::numa`). `None` reverts to plain sharding.
@@ -474,6 +480,24 @@ impl ScanSession<'_> {
     /// The batched scan this session was opened for.
     pub fn search_batch(&self, queries: &[&[f32]], k: usize) -> Vec<Vec<Hit>> {
         self.guard.search_batch(queries, k)
+    }
+
+    /// The codec label scan spans served under this session carry.
+    pub fn codec_label(&self) -> crate::metrics::trace::CodecLabel {
+        quant_codec_label(self.quant)
+    }
+}
+
+/// Map an arena codec to its span/metric label (the `codec` axis of the
+/// `trace.*` name schema).
+pub fn quant_codec_label(quant: Quant) -> crate::metrics::trace::CodecLabel {
+    use crate::metrics::trace::CodecLabel;
+    match quant {
+        Quant::F32 => CodecLabel::F32,
+        Quant::F16 => CodecLabel::F16,
+        Quant::Int8 => CodecLabel::Int8,
+        Quant::Pq { bits: 4, .. } => CodecLabel::Pq4,
+        Quant::Pq { .. } => CodecLabel::Pq8,
     }
 }
 
@@ -834,6 +858,22 @@ mod tests {
         drop(session);
         writer.join().unwrap();
         assert_eq!(ex.len(), 48);
+    }
+
+    #[test]
+    fn codec_labels_track_arena_quant() {
+        use crate::metrics::trace::CodecLabel;
+        for (quant, label) in [
+            (Quant::F32, CodecLabel::F32),
+            (Quant::F16, CodecLabel::F16),
+            (Quant::Int8, CodecLabel::Int8),
+            (Quant::pq(4), CodecLabel::Pq4),
+            (Quant::pq(8), CodecLabel::Pq8),
+        ] {
+            let ex = RetrievalExecutor::flat_quant(8, quant);
+            assert_eq!(ex.codec_label(), label, "{quant:?}");
+            assert_eq!(ex.begin_scan().codec_label(), label, "{quant:?}");
+        }
     }
 
     #[test]

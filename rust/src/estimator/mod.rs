@@ -13,4 +13,5 @@ pub use depth::{
     ClassDepths, DepthEstimate,
 };
 pub use linreg::LinearFit;
+pub use online::{OnlineCalibrator, SloGovernor};
 pub use stress::{stress_search, StressResult};

@@ -8,9 +8,13 @@
 //! breach signal.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
 
 use super::linreg::LinearFit;
 use super::robust::theil_sen;
+use crate::metrics::SloMonitor;
 
 /// Streaming recalibrator.
 pub struct OnlineCalibrator {
@@ -89,6 +93,93 @@ impl OnlineCalibrator {
     }
 }
 
+/// Live SLO governor: couples the windowed [`SloMonitor`] breach signal
+/// to [`OnlineCalibrator`] depth retuning, exactly the loop the paper's
+/// Eq. 9–10 calibrate offline. The service feeds it every served
+/// request's (device concurrency, e2e latency); a depth recommendation
+/// is only emitted while the attainment window shows a breach, so a
+/// healthy system never thrashes its configured depth.
+pub struct SloGovernor {
+    monitor: SloMonitor,
+    cal: Mutex<OnlineCalibrator>,
+    /// Latest recommended depth (0 = none yet). Advisory: surfaced in
+    /// `/v1/stats` for the operator / an external controller.
+    recommended: AtomicU64,
+    retunes: AtomicU64,
+    slo_nanos: u64,
+}
+
+impl SloGovernor {
+    /// `target` is required attainment (e.g. 0.99); `window` is the
+    /// attainment window in requests (clamped to the calibrator's
+    /// minimum of 8); `initial_depth` anchors the hysteresis band.
+    pub fn new(slo: Duration, target: f64, window: usize, initial_depth: usize) -> SloGovernor {
+        let window = window.max(8);
+        SloGovernor {
+            monitor: SloMonitor::new(slo, target, window),
+            cal: Mutex::new(OnlineCalibrator::new(
+                slo.as_secs_f64(),
+                window,
+                0.1,
+                initial_depth.max(1),
+            )),
+            recommended: AtomicU64::new(0),
+            retunes: AtomicU64::new(0),
+            slo_nanos: slo.as_nanos() as u64,
+        }
+    }
+
+    /// Feed one served request: the device-side concurrency it observed
+    /// and its end-to-end latency.
+    pub fn observe(&self, concurrency: usize, latency: Duration) {
+        self.monitor.record(latency.as_nanos() as u64);
+        let mut cal = match self.cal.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        cal.observe(concurrency, latency.as_secs_f64());
+        if self.monitor.breached() {
+            if let Some(depth) = cal.recommend() {
+                // ordering: advisory gauges read by /v1/stats; nothing is
+                // published through them.
+                self.recommended.store(depth as u64, Ordering::Relaxed);
+                self.retunes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn attainment(&self) -> f64 {
+        self.monitor.attainment()
+    }
+
+    pub fn breached(&self) -> bool {
+        self.monitor.breached()
+    }
+
+    pub fn samples(&self) -> usize {
+        self.monitor.samples()
+    }
+
+    pub fn slo_nanos(&self) -> u64 {
+        self.slo_nanos
+    }
+
+    /// Latest breach-triggered depth recommendation, if any.
+    pub fn recommended_depth(&self) -> Option<usize> {
+        // ordering: advisory gauge; see `observe`.
+        match self.recommended.load(Ordering::Relaxed) {
+            0 => None,
+            d => Some(d as usize),
+        }
+    }
+
+    /// How many times the breach signal has moved the recommendation.
+    pub fn retunes(&self) -> u64 {
+        // ordering: advisory gauge; see `observe`.
+        self.retunes.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +254,42 @@ mod tests {
             cal.observe(5, 0.5);
         }
         assert_eq!(cal.recommend(), None);
+    }
+
+    #[test]
+    fn governor_retunes_only_on_breach() {
+        // Healthy system: every request meets a generous SLO. Even
+        // though the calibrator's fit would recommend a much larger
+        // depth, the breach gate must keep the recommendation quiet.
+        let g = SloGovernor::new(Duration::from_secs(10), 0.9, 16, 44);
+        let mut rng = Pcg::new(7);
+        for _ in 0..64 {
+            let c = rng.usize(1, 48);
+            let t = 0.0166 * c as f64 + 0.27 + 0.002 * rng.normal();
+            g.observe(c, Duration::from_secs_f64(t));
+        }
+        assert!(!g.breached());
+        assert!((g.attainment() - 1.0).abs() < 1e-9);
+        assert_eq!(g.recommended_depth(), None);
+        assert_eq!(g.retunes(), 0);
+    }
+
+    #[test]
+    fn governor_recommends_smaller_depth_under_breach() {
+        // Device degraded 2x (α doubled): at depth 44 roughly half the
+        // requests blow a 1s SLO, the window breaches, and the governor
+        // must recommend the true sustainable depth ≈ 21.
+        let g = SloGovernor::new(Duration::from_secs(1), 0.9, 16, 44);
+        let mut rng = Pcg::new(8);
+        for _ in 0..128 {
+            let c = rng.usize(1, 48);
+            let t = 0.0332 * c as f64 + 0.27 + 0.002 * rng.normal();
+            g.observe(c, Duration::from_secs_f64(t));
+        }
+        assert!(g.breached(), "attainment {}", g.attainment());
+        let rec = g.recommended_depth().expect("breach must drive a retune");
+        assert!((15..=28).contains(&rec), "rec {rec}");
+        assert!(g.retunes() >= 1);
+        assert_eq!(g.samples(), 16);
     }
 }

@@ -4,7 +4,7 @@
 //! width: 64 base-2 magnitudes x 32 linear sub-buckets. Quantile error is
 //! bounded by bucket width, plenty for SLO accounting.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 const SUB_BITS: u32 = 5; // 32 sub-buckets per magnitude
 const SUB: usize = 1 << SUB_BITS;
@@ -61,7 +61,18 @@ impl Histogram {
         self.counts[Self::index(value)].fetch_add(1, Ordering::Relaxed);
         self.total.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(value, Ordering::Relaxed);
-        self.max.fetch_max(value, Ordering::Relaxed);
+        // CAS loop instead of fetch_max so the shimmed type stays
+        // loom-compatible (loom's AtomicU64 lacks fetch_max).
+        let mut cur = self.max.load(Ordering::Relaxed);
+        while value > cur {
+            match self
+                .max
+                .compare_exchange_weak(cur, value, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     pub fn count(&self) -> u64 {
@@ -78,6 +89,11 @@ impl Histogram {
 
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values (Prometheus `_sum`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
     }
 
     /// Quantile in `[0, 1]`; returns 0 when empty. Within-bucket error only.
@@ -99,6 +115,10 @@ impl Histogram {
 
     pub fn p50(&self) -> u64 {
         self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
     }
 
     pub fn p99(&self) -> u64 {

@@ -1,9 +1,12 @@
-//! Serving metrics: counters, latency histograms, percentile reports.
+//! Serving metrics: counters, latency histograms, percentile reports,
+//! request-scoped stage tracing.
 
 pub mod histogram;
 pub mod registry;
 pub mod slo;
+pub mod trace;
 
 pub use histogram::Histogram;
 pub use registry::{Counter, Registry};
 pub use slo::SloMonitor;
+pub use trace::{ClassLabel, CodecLabel, RouteLabel, SpanRecord, SpanRing, Stage, Tracer};

@@ -1,8 +1,10 @@
 //! Named counters + histograms with a JSON snapshot (served at /metrics).
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 use super::histogram::Histogram;
 use crate::util::json::Json;
@@ -70,6 +72,7 @@ impl Registry {
                     ("count", Json::num(h.count() as f64)),
                     ("mean_ns", Json::num(h.mean())),
                     ("p50_ns", Json::num(h.p50() as f64)),
+                    ("p95_ns", Json::num(h.p95() as f64)),
                     ("p99_ns", Json::num(h.p99() as f64)),
                     ("max_ns", Json::num(h.max() as f64)),
                 ]),
@@ -77,6 +80,89 @@ impl Registry {
         }
         Json::Obj(out)
     }
+
+    /// All registered histograms by name (read-only view for callers that
+    /// want to shape their own summaries, e.g. the `/v1/stats` stage block).
+    pub fn histograms(&self) -> Vec<(String, Arc<Histogram>)> {
+        let map = self.inner.histograms.lock().unwrap();
+        map.iter().map(|(n, h)| (n.clone(), Arc::clone(h))).collect()
+    }
+
+    /// Render everything as Prometheus text exposition (format 0.0.4).
+    ///
+    /// Names gain a `windve_` prefix with non-alphanumerics folded to `_`.
+    /// Plain histograms render as summaries (`quantile` 0.5/0.95/0.99 +
+    /// `_sum`/`_count`). The `trace.<stage>.<class>.<route>.<codec>` stage
+    /// histograms fold into a single labeled family,
+    /// `windve_stage_duration_ns{stage=,class=,route=,codec=}`; empty
+    /// stage series are omitted to keep scrapes small.
+    pub fn prometheus(&self) -> String {
+        let counters = self.inner.counters.lock().unwrap();
+        let histograms = self.inner.histograms.lock().unwrap();
+        let mut out = String::new();
+        for (name, c) in counters.iter() {
+            let pname = prom_name(name);
+            out.push_str(&format!("# TYPE {pname} counter\n{pname} {}\n", c.get()));
+        }
+        for (name, h) in histograms.iter() {
+            if stage_labels(name).is_some() {
+                continue; // folded into the labeled family below
+            }
+            let pname = prom_name(name);
+            out.push_str(&format!("# TYPE {pname} summary\n"));
+            for (q, v) in [("0.5", h.p50()), ("0.95", h.p95()), ("0.99", h.p99())] {
+                out.push_str(&format!("{pname}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            out.push_str(&format!("{pname}_sum {}\n", h.sum()));
+            out.push_str(&format!("{pname}_count {}\n", h.count()));
+        }
+        let mut wrote_type = false;
+        for (name, h) in histograms.iter() {
+            let labels = match stage_labels(name) {
+                Some(l) if h.count() > 0 => l,
+                _ => continue,
+            };
+            if !wrote_type {
+                out.push_str("# TYPE windve_stage_duration_ns summary\n");
+                wrote_type = true;
+            }
+            for (q, v) in [("0.5", h.p50()), ("0.95", h.p95()), ("0.99", h.p99())] {
+                out.push_str(&format!(
+                    "windve_stage_duration_ns{{{labels},quantile=\"{q}\"}} {v}\n"
+                ));
+            }
+            out.push_str(&format!("windve_stage_duration_ns_sum{{{labels}}} {}\n", h.sum()));
+            out.push_str(&format!(
+                "windve_stage_duration_ns_count{{{labels}}} {}\n",
+                h.count()
+            ));
+        }
+        out
+    }
+}
+
+/// `service.e2e_npu_ns` → `windve_service_e2e_npu_ns`.
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 7);
+    s.push_str("windve_");
+    for ch in name.chars() {
+        s.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+    }
+    s
+}
+
+/// Label set for a `trace.<stage>.<class>.<route>.<codec>` metric name.
+fn stage_labels(name: &str) -> Option<String> {
+    let rest = name.strip_prefix("trace.")?;
+    let mut parts = rest.split('.');
+    let (stage, class, route, codec) =
+        (parts.next()?, parts.next()?, parts.next()?, parts.next()?);
+    if parts.next().is_some() {
+        return None;
+    }
+    Some(format!(
+        "stage=\"{stage}\",class=\"{class}\",route=\"{route}\",codec=\"{codec}\""
+    ))
 }
 
 #[cfg(test)]
@@ -115,5 +201,47 @@ mod tests {
         let r2 = r.clone();
         r.counter("x").inc();
         assert_eq!(r2.counter("x").get(), 1);
+    }
+
+    #[test]
+    fn snapshot_histogram_has_p95() {
+        let r = Registry::new();
+        r.histogram("lat").record(500);
+        assert!(r.snapshot().path("lat.p95_ns").is_some());
+    }
+
+    #[test]
+    fn prometheus_renders_counters_and_summaries() {
+        let r = Registry::new();
+        r.counter("service.accepted").add(7);
+        r.histogram("service.e2e_npu_ns").record(1000);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE windve_service_accepted counter\n"));
+        assert!(text.contains("windve_service_accepted 7\n"));
+        assert!(text.contains("# TYPE windve_service_e2e_npu_ns summary\n"));
+        assert!(text.contains("windve_service_e2e_npu_ns{quantile=\"0.95\"}"));
+        assert!(text.contains("windve_service_e2e_npu_ns_count 1\n"));
+        assert!(text.contains("windve_service_e2e_npu_ns_sum 1000\n"));
+    }
+
+    #[test]
+    fn prometheus_folds_stage_histograms_into_labeled_family() {
+        let r = Registry::new();
+        r.histogram("trace.scan.retrieve.cpu.pq8").record(2000);
+        r.histogram("trace.embed.embed.npu.all"); // empty → omitted
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE windve_stage_duration_ns summary\n"));
+        assert!(text.contains(
+            "windve_stage_duration_ns{stage=\"scan\",class=\"retrieve\",route=\"cpu\",codec=\"pq8\",quantile=\"0.5\"}"
+        ));
+        assert!(text.contains(
+            "windve_stage_duration_ns_count{stage=\"scan\",class=\"retrieve\",route=\"cpu\",codec=\"pq8\"} 1\n"
+        ));
+        assert!(
+            !text.contains("stage=\"embed\""),
+            "empty stage series must be omitted"
+        );
+        // No raw trace.* summary leaks outside the family.
+        assert!(!text.contains("windve_trace_"));
     }
 }

@@ -5,7 +5,8 @@
 //! operator (or the online re-calibrator) acts on.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+
+use crate::util::sync::Mutex;
 
 /// Windowed SLO attainment tracker.
 pub struct SloMonitor {

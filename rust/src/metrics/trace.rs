@@ -1,0 +1,732 @@
+//! Request-scoped tracing: per-stage spans in a lock-free ring buffer.
+//!
+//! Every request gets a trace ID minted when the server accepts it for
+//! dispatch. As the request moves through the pipeline, each stage records
+//! one [`SpanRecord`] — `queue_wait`, `batch_form`, `embed`, `scan`,
+//! `merge`, `respond` — labeled by work class × route × codec. Spans land
+//! in two places:
+//!
+//! 1. a fixed-capacity overwrite-oldest [`SpanRing`] (plus a smaller ring
+//!    for spans over the slow threshold), served raw by `GET /v1/trace`;
+//! 2. a pre-resolved per-(stage, class, route, codec) [`Histogram`] in the
+//!    service [`Registry`], surfaced as p50/p95/p99 in `/v1/stats` and as
+//!    Prometheus text on `/v1/metrics`.
+//!
+//! The recording path is allocation-free: a span is seven atomic stores
+//! into a pre-allocated slot plus one histogram bucket increment. Ring
+//! slots use a per-slot sequence (seqlock-style) so `snapshot()` never
+//! blocks recorders and never returns a torn record — a record raced by
+//! an overwriting writer fails revalidation and is skipped instead.
+//!
+//! The metric name schema (`trace.<stage>.<class>.<route>.<codec>`, with
+//! `all` for dimensions a stage does not distinguish) is shared verbatim
+//! by the DES (`sim/des.rs`), so simulated scenarios and live traces are
+//! directly comparable. See `docs/OBSERVABILITY.md`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+use super::histogram::Histogram;
+use super::registry::Registry;
+
+/// Capacity of the slow-span ring (spans whose duration met the slow
+/// threshold); small because slow spans should be rare.
+pub const SLOW_RING_CAPACITY: usize = 256;
+
+/// Pipeline stage a span measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Enqueue at `submit` until a device worker drains the batch.
+    QueueWait,
+    /// Drain until the backend call begins (batch assembly overhead).
+    BatchForm,
+    /// The backend embed call, attributed to each query in the batch.
+    Embed,
+    /// One scan leg over a panel of query vectors (per route).
+    Scan,
+    /// Assembling per-query hit lists into the response ordering.
+    Merge,
+    /// Serializing + writing the HTTP response.
+    Respond,
+}
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Embed => "embed",
+            Stage::Scan => "scan",
+            Stage::Merge => "merge",
+            Stage::Respond => "respond",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            0 => Stage::QueueWait,
+            1 => Stage::BatchForm,
+            2 => Stage::Embed,
+            3 => Stage::Scan,
+            4 => Stage::Merge,
+            5 => Stage::Respond,
+            _ => return None,
+        })
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::BatchForm => 1,
+            Stage::Embed => 2,
+            Stage::Scan => 3,
+            Stage::Merge => 4,
+            Stage::Respond => 5,
+        }
+    }
+}
+
+/// Work-class label dimension (`all` where a stage spans classes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClassLabel {
+    Embed,
+    Retrieve,
+    Ingest,
+    All,
+}
+
+impl ClassLabel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ClassLabel::Embed => "embed",
+            ClassLabel::Retrieve => "retrieve",
+            ClassLabel::Ingest => "ingest",
+            ClassLabel::All => "all",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ClassLabel> {
+        Some(match v {
+            0 => ClassLabel::Embed,
+            1 => ClassLabel::Retrieve,
+            2 => ClassLabel::Ingest,
+            3 => ClassLabel::All,
+            _ => return None,
+        })
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            ClassLabel::Embed => 0,
+            ClassLabel::Retrieve => 1,
+            ClassLabel::Ingest => 2,
+            ClassLabel::All => 3,
+        }
+    }
+}
+
+/// Route label dimension (`all` for stages with no device affinity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteLabel {
+    Npu,
+    Cpu,
+    All,
+}
+
+impl RouteLabel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RouteLabel::Npu => "npu",
+            RouteLabel::Cpu => "cpu",
+            RouteLabel::All => "all",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<RouteLabel> {
+        Some(match v {
+            0 => RouteLabel::Npu,
+            1 => RouteLabel::Cpu,
+            2 => RouteLabel::All,
+            _ => return None,
+        })
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            RouteLabel::Npu => 0,
+            RouteLabel::Cpu => 1,
+            RouteLabel::All => 2,
+        }
+    }
+}
+
+/// Codec label dimension (only the scan stage distinguishes codecs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecLabel {
+    F32,
+    F16,
+    Int8,
+    Pq4,
+    Pq8,
+    All,
+}
+
+impl CodecLabel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CodecLabel::F32 => "f32",
+            CodecLabel::F16 => "f16",
+            CodecLabel::Int8 => "int8",
+            CodecLabel::Pq4 => "pq4",
+            CodecLabel::Pq8 => "pq8",
+            CodecLabel::All => "all",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<CodecLabel> {
+        Some(match v {
+            0 => CodecLabel::F32,
+            1 => CodecLabel::F16,
+            2 => CodecLabel::Int8,
+            3 => CodecLabel::Pq4,
+            4 => CodecLabel::Pq8,
+            5 => CodecLabel::All,
+            _ => return None,
+        })
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            CodecLabel::F32 => 0,
+            CodecLabel::F16 => 1,
+            CodecLabel::Int8 => 2,
+            CodecLabel::Pq4 => 3,
+            CodecLabel::Pq8 => 4,
+            CodecLabel::All => 5,
+        }
+    }
+}
+
+/// One recorded stage span. `start_ns` is relative to the tracer's epoch
+/// (process-local monotonic time, not wall clock).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub stage: Stage,
+    pub class: ClassLabel,
+    pub route: RouteLabel,
+    pub codec: CodecLabel,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+impl SpanRecord {
+    fn meta(&self) -> u64 {
+        self.stage.to_u8() as u64
+            | (self.class.to_u8() as u64) << 8
+            | (self.route.to_u8() as u64) << 16
+            | (self.codec.to_u8() as u64) << 24
+    }
+
+    fn unpack(trace_id: u64, meta: u64, start_ns: u64, dur_ns: u64) -> Option<SpanRecord> {
+        Some(SpanRecord {
+            trace_id,
+            stage: Stage::from_u8(meta as u8)?,
+            class: ClassLabel::from_u8((meta >> 8) as u8)?,
+            route: RouteLabel::from_u8((meta >> 16) as u8)?,
+            codec: CodecLabel::from_u8((meta >> 24) as u8)?,
+            start_ns,
+            dur_ns,
+        })
+    }
+}
+
+/// One ring slot. Every field is an atomic so a snapshot racing the
+/// writer reads defined values; the `seq` word both serializes writers
+/// (CAS claim in [`SpanRing::push`]) and lets readers detect and
+/// discard records overwritten mid-read — never UB, never a tear.
+struct Slot {
+    /// Seqlock word: `2*pos + 1` while slot `pos`'s record is being
+    /// written ("dirty"), `2*pos + 2` once published. Strictly increases
+    /// per slot across wraps (pos, pos+cap, ...), so stale positions are
+    /// unambiguous.
+    seq: AtomicU64,
+    trace_id: AtomicU64,
+    meta: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace_id: AtomicU64::new(0),
+            meta: AtomicU64::new(0),
+            start_ns: AtomicU64::new(0),
+            dur_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Fixed-capacity lock-free span ring: `push` is wait-free (one
+/// fetch_add + a CAS claim + five stores, no allocation), oldest
+/// records are overwritten once the ring is full, and `snapshot`
+/// returns only records it can prove untorn. When the ring wraps fast
+/// enough that two in-flight writers collide on one slot, the claim
+/// race loser's record is dropped rather than torn.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+}
+
+impl SpanRing {
+    /// Heap-constructed (no statics) so the same type works under loom,
+    /// whose atomics have no `const fn new`.
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(1);
+        SpanRing {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever pushed (monotone; exceeds `capacity` once the
+    /// ring has wrapped).
+    pub fn recorded(&self) -> u64 {
+        // ordering: monotone statistic; no payload is published through it.
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Records lost to overwrite so far.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    pub fn push(&self, rec: SpanRecord) {
+        let cap = self.slots.len() as u64;
+        // ordering: allocates a unique position; slot contents are
+        // published by the seqlock stores below, not by this counter.
+        let pos = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(pos % cap) as usize];
+        // Claim the slot via its seq word. A slot is writable only while
+        // quiescent (even seq) and only by a strictly newer position —
+        // two writers can reach the same slot when the ring wraps within
+        // their concurrency window, and concurrent field stores from
+        // both could tear in a way the reader's revalidation cannot
+        // detect (each field has its own modification order). Losing the
+        // claim drops *this* record — bounded loss under a load where
+        // the ring is wrapping anyway — and never blocks.
+        // ordering: Acquire on success pairs with the previous writer's
+        // publishing Release so this writer's field stores cannot be
+        // reordered into the prior record's critical section.
+        let cur = slot.seq.load(Ordering::Relaxed);
+        if cur >= 2 * pos + 1 // a newer writer claimed or published
+            || cur % 2 == 1 // an older writer is mid-write
+            || slot
+                .seq
+                .compare_exchange(cur, 2 * pos + 1, Ordering::Acquire, Ordering::Relaxed)
+                .is_err()
+        {
+            return;
+        }
+        slot.trace_id.store(rec.trace_id, Ordering::Release);
+        slot.meta.store(rec.meta(), Ordering::Release);
+        slot.start_ns.store(rec.start_ns, Ordering::Release);
+        slot.dur_ns.store(rec.dur_ns, Ordering::Release);
+        slot.seq.store(2 * pos + 2, Ordering::Release);
+    }
+
+    /// Copy out the currently-live window, oldest first. Concurrent
+    /// pushes may cause individual records to be skipped (dirty or
+    /// overwritten mid-read); what is returned is never torn.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        // ordering: head only chooses the scan window; staleness is
+        // tolerated because each slot is validated by its own seq.
+        let head = self.head.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let mut out = Vec::with_capacity(head.min(cap) as usize);
+        for pos in head.saturating_sub(cap)..head {
+            let slot = &self.slots[(pos % cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != 2 * pos + 2 {
+                continue; // never written, dirty, or already overwritten
+            }
+            let trace_id = slot.trace_id.load(Ordering::Acquire);
+            let meta = slot.meta.load(Ordering::Acquire);
+            let start_ns = slot.start_ns.load(Ordering::Acquire);
+            let dur_ns = slot.dur_ns.load(Ordering::Acquire);
+            // ordering: revalidation. The Acquire field loads above pin
+            // this load after them; if any field value came from a newer
+            // writer, that writer's Release store carries its own dirty
+            // seq (sequenced before the field store), so this reload
+            // observes a seq != s1 and the record is discarded.
+            let s2 = slot.seq.load(Ordering::Relaxed);
+            if s2 != s1 {
+                continue;
+            }
+            if let Some(rec) = SpanRecord::unpack(trace_id, meta, start_ns, dur_ns) {
+                out.push(rec);
+            }
+        }
+        out
+    }
+}
+
+/// The `(name, stage, class, route, codec)` table of every per-stage
+/// latency histogram the tracer aggregates into. Names follow
+/// `trace.<stage>.<class>.<route>.<codec>` with `all` for dimensions the
+/// stage does not distinguish; `sim/des.rs` emits the same names so DES
+/// scenarios and live traces are schema-compatible.
+pub const STAGE_METRICS: &[(&str, Stage, ClassLabel, RouteLabel, CodecLabel)] = &[
+    ("trace.queue_wait.embed.npu.all", Stage::QueueWait, ClassLabel::Embed, RouteLabel::Npu, CodecLabel::All),
+    ("trace.queue_wait.embed.cpu.all", Stage::QueueWait, ClassLabel::Embed, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.queue_wait.ingest.npu.all", Stage::QueueWait, ClassLabel::Ingest, RouteLabel::Npu, CodecLabel::All),
+    ("trace.queue_wait.ingest.cpu.all", Stage::QueueWait, ClassLabel::Ingest, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.batch_form.embed.npu.all", Stage::BatchForm, ClassLabel::Embed, RouteLabel::Npu, CodecLabel::All),
+    ("trace.batch_form.embed.cpu.all", Stage::BatchForm, ClassLabel::Embed, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.batch_form.ingest.npu.all", Stage::BatchForm, ClassLabel::Ingest, RouteLabel::Npu, CodecLabel::All),
+    ("trace.batch_form.ingest.cpu.all", Stage::BatchForm, ClassLabel::Ingest, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.embed.embed.npu.all", Stage::Embed, ClassLabel::Embed, RouteLabel::Npu, CodecLabel::All),
+    ("trace.embed.embed.cpu.all", Stage::Embed, ClassLabel::Embed, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.embed.ingest.npu.all", Stage::Embed, ClassLabel::Ingest, RouteLabel::Npu, CodecLabel::All),
+    ("trace.embed.ingest.cpu.all", Stage::Embed, ClassLabel::Ingest, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.scan.retrieve.npu.f32", Stage::Scan, ClassLabel::Retrieve, RouteLabel::Npu, CodecLabel::F32),
+    ("trace.scan.retrieve.cpu.f32", Stage::Scan, ClassLabel::Retrieve, RouteLabel::Cpu, CodecLabel::F32),
+    ("trace.scan.retrieve.cpu.f16", Stage::Scan, ClassLabel::Retrieve, RouteLabel::Cpu, CodecLabel::F16),
+    ("trace.scan.retrieve.cpu.int8", Stage::Scan, ClassLabel::Retrieve, RouteLabel::Cpu, CodecLabel::Int8),
+    ("trace.scan.retrieve.cpu.pq4", Stage::Scan, ClassLabel::Retrieve, RouteLabel::Cpu, CodecLabel::Pq4),
+    ("trace.scan.retrieve.cpu.pq8", Stage::Scan, ClassLabel::Retrieve, RouteLabel::Cpu, CodecLabel::Pq8),
+    ("trace.merge.retrieve.npu.all", Stage::Merge, ClassLabel::Retrieve, RouteLabel::Npu, CodecLabel::All),
+    ("trace.merge.retrieve.cpu.all", Stage::Merge, ClassLabel::Retrieve, RouteLabel::Cpu, CodecLabel::All),
+    ("trace.respond.all.all.all", Stage::Respond, ClassLabel::All, RouteLabel::All, CodecLabel::All),
+];
+
+/// Project a span's labels onto the dimensions its stage aggregates
+/// under (`all` for the rest) — the canonical form used in metric names.
+pub fn canonical_labels(
+    stage: Stage,
+    class: ClassLabel,
+    route: RouteLabel,
+    codec: CodecLabel,
+) -> (ClassLabel, RouteLabel, CodecLabel) {
+    match stage {
+        Stage::QueueWait | Stage::BatchForm | Stage::Embed => (class, route, CodecLabel::All),
+        Stage::Scan => (ClassLabel::Retrieve, route, codec),
+        Stage::Merge => (ClassLabel::Retrieve, route, CodecLabel::All),
+        Stage::Respond => (ClassLabel::All, RouteLabel::All, CodecLabel::All),
+    }
+}
+
+fn stage_index(
+    stage: Stage,
+    class: ClassLabel,
+    route: RouteLabel,
+    codec: CodecLabel,
+) -> Option<usize> {
+    let (c, r, q) = canonical_labels(stage, class, route, codec);
+    STAGE_METRICS
+        .iter()
+        .position(|&(_, s, sc, sr, sq)| s == stage && sc == c && sr == r && sq == q)
+}
+
+/// Registry name for a stage histogram, `None` if the label combination
+/// is not part of the schema. The DES uses this to emit live-compatible
+/// metric names.
+pub fn stage_metric_name(
+    stage: Stage,
+    class: ClassLabel,
+    route: RouteLabel,
+    codec: CodecLabel,
+) -> Option<&'static str> {
+    stage_index(stage, class, route, codec).map(|i| STAGE_METRICS[i].0)
+}
+
+/// Per-service tracer: mints trace IDs, records spans into the ring(s),
+/// and aggregates durations into the pre-resolved stage histograms.
+pub struct Tracer {
+    epoch: Instant,
+    next_id: AtomicU64,
+    ring: SpanRing,
+    slow: SpanRing,
+    slow_threshold_ns: u64,
+    /// Parallel to [`STAGE_METRICS`]; resolved once at construction so
+    /// the span path never touches the registry's name map.
+    hists: Vec<Arc<Histogram>>,
+}
+
+impl Tracer {
+    pub fn new(metrics: &Registry, capacity: usize, slow_threshold: Duration) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            ring: SpanRing::new(capacity),
+            slow: SpanRing::new(SLOW_RING_CAPACITY),
+            slow_threshold_ns: slow_threshold.as_nanos() as u64,
+            hists: STAGE_METRICS
+                .iter()
+                .map(|&(name, ..)| metrics.histogram(name))
+                .collect(),
+        }
+    }
+
+    /// Mint a fresh process-unique trace ID (non-zero).
+    pub fn mint(&self) -> u64 {
+        // ordering: unique-ID counter; nothing is published through it.
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one stage span. Allocation-free: histogram bucket add +
+    /// ring slot stores.
+    pub fn span(
+        &self,
+        trace_id: u64,
+        stage: Stage,
+        class: ClassLabel,
+        route: RouteLabel,
+        codec: CodecLabel,
+        start: Instant,
+        dur: Duration,
+    ) {
+        let rec = SpanRecord {
+            trace_id,
+            stage,
+            class,
+            route,
+            codec,
+            start_ns: start.saturating_duration_since(self.epoch).as_nanos() as u64,
+            dur_ns: dur.as_nanos() as u64,
+        };
+        if let Some(i) = stage_index(stage, class, route, codec) {
+            self.hists[i].record(rec.dur_ns);
+        }
+        self.ring.push(rec);
+        if rec.dur_ns >= self.slow_threshold_ns {
+            self.slow.push(rec);
+        }
+    }
+
+    /// Recent spans, oldest first.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.ring.snapshot()
+    }
+
+    /// Recent spans at or over the slow threshold, oldest first.
+    pub fn slow_snapshot(&self) -> Vec<SpanRecord> {
+        self.slow.snapshot()
+    }
+
+    pub fn slow_threshold_ns(&self) -> u64 {
+        self.slow_threshold_ns
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.ring.recorded()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.capacity()
+    }
+
+    /// `(name, histogram)` pairs for every stage metric, table order.
+    pub fn stage_histograms(&self) -> impl Iterator<Item = (&'static str, &Arc<Histogram>)> {
+        STAGE_METRICS
+            .iter()
+            .map(|&(name, ..)| name)
+            .zip(self.hists.iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace_id: u64, dur_ns: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id,
+            stage: Stage::Embed,
+            class: ClassLabel::Embed,
+            route: RouteLabel::Npu,
+            codec: CodecLabel::All,
+            start_ns: trace_id * 10,
+            dur_ns,
+        }
+    }
+
+    #[test]
+    fn ring_roundtrips_records_in_order() {
+        let ring = SpanRing::new(8);
+        for i in 0..5 {
+            ring.push(rec(i, i * 100));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 5);
+        for (i, r) in snap.iter().enumerate() {
+            assert_eq!(*r, rec(i as u64, i as u64 * 100));
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_stays_bounded() {
+        let ring = SpanRing::new(4);
+        for i in 0..100 {
+            ring.push(rec(i, 1));
+        }
+        assert_eq!(ring.capacity(), 4);
+        assert_eq!(ring.recorded(), 100);
+        assert_eq!(ring.dropped(), 96);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4, "only the last `capacity` records survive");
+        let ids: Vec<u64> = snap.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![96, 97, 98, 99]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let ring = SpanRing::new(0);
+        ring.push(rec(7, 7));
+        assert_eq!(ring.capacity(), 1);
+        assert_eq!(ring.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn meta_pack_unpack_roundtrips_all_labels() {
+        for &(_, stage, class, route, codec) in STAGE_METRICS {
+            let r = SpanRecord {
+                trace_id: 42,
+                stage,
+                class,
+                route,
+                codec,
+                start_ns: 1,
+                dur_ns: 2,
+            };
+            assert_eq!(SpanRecord::unpack(42, r.meta(), 1, 2), Some(r));
+        }
+    }
+
+    #[test]
+    fn stage_metric_names_unique_and_resolvable() {
+        let mut names: Vec<&str> = STAGE_METRICS.iter().map(|&(n, ..)| n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), STAGE_METRICS.len(), "duplicate metric name");
+        for &(name, stage, class, route, codec) in STAGE_METRICS {
+            assert_eq!(stage_metric_name(stage, class, route, codec), Some(name));
+        }
+        // Labels a stage does not distinguish are projected, not dropped.
+        assert_eq!(
+            stage_metric_name(Stage::Respond, ClassLabel::Embed, RouteLabel::Npu, CodecLabel::F32),
+            Some("trace.respond.all.all.all")
+        );
+        // Unknown scan codec combinations are simply unaggregated.
+        assert_eq!(
+            stage_metric_name(Stage::Scan, ClassLabel::Retrieve, RouteLabel::Npu, CodecLabel::Pq8),
+            None
+        );
+    }
+
+    #[test]
+    fn tracer_ids_unique_across_threads() {
+        let reg = Registry::new();
+        let tr = Arc::new(Tracer::new(&reg, 16, Duration::from_millis(50)));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let tr = Arc::clone(&tr);
+                std::thread::spawn(move || (0..1000).map(|_| tr.mint()).collect::<Vec<u64>>())
+            })
+            .collect();
+        let mut all: Vec<u64> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let before = all.len();
+        all.dedup();
+        assert_eq!(all.len(), before, "trace IDs must be unique");
+        assert!(!all.contains(&0), "0 is reserved for 'untraced'");
+    }
+
+    #[test]
+    fn tracer_feeds_stage_histogram_and_slow_ring() {
+        let reg = Registry::new();
+        let tr = Tracer::new(&reg, 16, Duration::from_micros(10));
+        let t0 = Instant::now();
+        let id = tr.mint();
+        tr.span(
+            id,
+            Stage::Scan,
+            ClassLabel::Retrieve,
+            RouteLabel::Cpu,
+            CodecLabel::Pq8,
+            t0,
+            Duration::from_micros(5),
+        );
+        tr.span(
+            id,
+            Stage::Scan,
+            ClassLabel::Retrieve,
+            RouteLabel::Cpu,
+            CodecLabel::Pq8,
+            t0,
+            Duration::from_micros(50),
+        );
+        assert_eq!(reg.histogram("trace.scan.retrieve.cpu.pq8").count(), 2);
+        assert_eq!(tr.snapshot().len(), 2);
+        let slow = tr.slow_snapshot();
+        assert_eq!(slow.len(), 1, "only the 50us span crosses the threshold");
+        assert_eq!(slow[0].dur_ns, 50_000);
+    }
+
+    #[test]
+    fn concurrent_record_vs_snapshot_never_tears() {
+        // Heavier-weight std counterpart of the loom model in
+        // tests/loom/trace.rs: writers maintain dur == trace_id * 3 and
+        // start == trace_id + 1; any torn read would break the invariant.
+        let ring = Arc::new(SpanRing::new(8));
+        let stop = Arc::new(AtomicU64::new(0));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let ring = Arc::clone(&ring);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut i = w as u64;
+                    // ordering: test shutdown flag only.
+                    while stop.load(Ordering::Relaxed) == 0 {
+                        ring.push(SpanRecord {
+                            trace_id: i,
+                            stage: Stage::Embed,
+                            class: ClassLabel::Embed,
+                            route: RouteLabel::Npu,
+                            codec: CodecLabel::All,
+                            start_ns: i + 1,
+                            dur_ns: i * 3,
+                        });
+                        i += 4;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..2000 {
+            for r in ring.snapshot() {
+                assert_eq!(r.dur_ns, r.trace_id * 3, "torn record: {r:?}");
+                assert_eq!(r.start_ns, r.trace_id + 1, "torn record: {r:?}");
+            }
+        }
+        // ordering: test shutdown flag only.
+        stop.store(1, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+}

@@ -545,6 +545,10 @@ pub struct Response {
     pub status: u16,
     pub reason: &'static str,
     pub body: String,
+    /// `Content-Type` the body serializes under (`application/json` for
+    /// every constructor except [`Response::ok_text`] — content
+    /// negotiation on `/v1/metrics` serves Prometheus text through it).
+    pub content_type: &'static str,
     /// Extra headers (`Retry-After`, `Allow`, `Deprecation`, ...)
     /// appended verbatim by [`Response::serialize_with`].
     pub headers: Vec<(&'static str, String)>,
@@ -552,7 +556,18 @@ pub struct Response {
 
 impl Response {
     pub fn ok_json(body: crate::util::json::Json) -> Response {
-        Response { status: 200, reason: "OK", body: body.to_string(), headers: Vec::new() }
+        Response {
+            status: 200,
+            reason: "OK",
+            body: body.to_string(),
+            content_type: "application/json",
+            headers: Vec::new(),
+        }
+    }
+
+    /// A 200 with a non-JSON body (e.g. Prometheus text exposition).
+    pub fn ok_text(content_type: &'static str, body: String) -> Response {
+        Response { status: 200, reason: "OK", body, content_type, headers: Vec::new() }
     }
 
     /// An error response in the versioned envelope.
@@ -563,7 +578,13 @@ impl Response {
             Json::obj(vec![("code", Json::str(code)), ("message", Json::str(message))]),
         )])
         .to_string();
-        Response { status, reason, body, headers: Vec::new() }
+        Response {
+            status,
+            reason,
+            body,
+            content_type: "application/json",
+            headers: Vec::new(),
+        }
     }
 
     /// Append a header (builder-style).
@@ -626,9 +647,10 @@ impl Response {
     /// lets the client reuse the connection for its next request.
     pub fn serialize_with(&self, keep_alive: bool) -> String {
         let mut out = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
             self.status,
             self.reason,
+            self.content_type,
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         );
@@ -823,6 +845,17 @@ mod tests {
     #[test]
     fn busy_is_503() {
         assert_eq!(Response::busy().status, 503);
+    }
+
+    #[test]
+    fn text_responses_carry_their_content_type() {
+        let r = Response::ok_text("text/plain; version=0.0.4", "x 1\n".into());
+        let s = r.serialize();
+        assert!(s.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(s.ends_with("x 1\n"));
+        // JSON constructors are unchanged.
+        let j = Response::ok_json(crate::util::json::Json::Bool(true)).serialize();
+        assert!(j.contains("Content-Type: application/json"));
     }
 
     /// One byte per read: the trickling head that per-read timeouts

@@ -88,6 +88,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::service::{ServeError, WindVE};
 use crate::ingest::{self, IngestOptions};
+use crate::metrics::trace::{ClassLabel, CodecLabel, RouteLabel, Stage};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 use http::{Conn, Head, Response};
@@ -256,6 +257,47 @@ impl Drop for Server {
     }
 }
 
+/// Per-request context threaded from head parse to response: the trace
+/// ID minted at accept (0 = tracing disabled) and the negotiated
+/// response representation. Shared by both server modes.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ReqCtx {
+    /// Trace ID every span of this request records under.
+    pub(crate) trace: u64,
+    /// `Accept: text/plain` → Prometheus text on `/v1/metrics`.
+    pub(crate) accept_text: bool,
+}
+
+impl ReqCtx {
+    pub(crate) fn new(svc: &WindVE, head: &Head) -> ReqCtx {
+        ReqCtx {
+            trace: svc.mint_trace(),
+            accept_text: head
+                .header("accept")
+                .is_some_and(|a| a.contains("text/plain")),
+        }
+    }
+}
+
+/// Record the respond-stage span: serialize + flush of one response,
+/// attributed request-wide (no class/route/codec at this layer).
+pub(crate) fn record_respond(svc: &WindVE, trace: u64, t0: Instant) {
+    if trace == 0 {
+        return;
+    }
+    if let Some(tr) = svc.tracer() {
+        tr.span(
+            trace,
+            Stage::Respond,
+            ClassLabel::All,
+            RouteLabel::All,
+            CodecLabel::All,
+            t0,
+            t0.elapsed(),
+        );
+    }
+}
+
 /// Serve one connection (threaded mode): keep-alive loop with the
 /// per-connection request bound. Returns when the peer closes, a
 /// framing error forces a close, the idle timeout lapses, or the bound
@@ -303,6 +345,7 @@ fn handle_connection(stream: TcpStream, svc: &WindVE, opts: &ServerOptions) -> R
         served += 1;
         let keep = head.wants_keep_alive() && served < MAX_REQUESTS_PER_CONN;
         let outcome = Router::route(&head.method, &head.path);
+        let ctx = ReqCtx::new(svc, &head);
 
         // The streaming endpoint drives the body itself — never
         // materialized, so it bypasses the read_body_string path.
@@ -337,8 +380,10 @@ fn handle_connection(stream: TcpStream, svc: &WindVE, opts: &ServerOptions) -> R
                 return Ok(());
             }
         };
-        let resp = dispatch_outcome(&outcome, &body, svc, opts.slo);
+        let resp = dispatch_outcome(&outcome, &body, svc, opts.slo, &ctx);
+        let respond_t0 = Instant::now();
         conn.stream_mut().write_all(resp.serialize_with(keep).as_bytes())?;
+        record_respond(svc, ctx.trace, respond_t0);
         if !keep {
             return Ok(());
         }
@@ -350,15 +395,18 @@ fn handle_connection(stream: TcpStream, svc: &WindVE, opts: &ServerOptions) -> R
 
 /// Turn a routing outcome + materialized body into a response. Shared
 /// by both server modes (the reactor calls this from pool workers).
+/// Traced requests carry their ID back as an `X-Trace-Id` header, so a
+/// client can correlate its own request with `GET /v1/trace`.
 pub(crate) fn dispatch_outcome(
     outcome: &RouteOutcome,
     body: &str,
     svc: &WindVE,
     slo: Duration,
+    ctx: &ReqCtx,
 ) -> Response {
-    match outcome {
+    let resp = match outcome {
         RouteOutcome::Match(m) => {
-            let resp = endpoint_response(m, body, svc, slo);
+            let resp = endpoint_response(m, body, svc, slo, ctx);
             if m.deprecated {
                 resp.with_header("Deprecation", "true")
             } else {
@@ -368,19 +416,38 @@ pub(crate) fn dispatch_outcome(
         RouteOutcome::BadParam { message } => Response::invalid_id(message),
         RouteOutcome::MethodNotAllowed { allow } => Response::method_not_allowed(allow),
         RouteOutcome::NotFound => Response::not_found(),
+    };
+    if ctx.trace != 0 {
+        resp.with_header("X-Trace-Id", ctx.trace.to_string())
+    } else {
+        resp
     }
 }
 
-fn endpoint_response(m: &RouteMatch, body: &str, svc: &WindVE, slo: Duration) -> Response {
+fn endpoint_response(
+    m: &RouteMatch,
+    body: &str,
+    svc: &WindVE,
+    slo: Duration,
+    ctx: &ReqCtx,
+) -> Response {
     match m.endpoint {
         Endpoint::Healthz => Response::ok_json(Json::obj(vec![("ok", Json::Bool(true))])),
+        // Content negotiation: `Accept: text/plain` serves the
+        // Prometheus text exposition; the default stays the JSON
+        // snapshot (the historic contract).
+        Endpoint::Metrics if ctx.accept_text => {
+            Response::ok_text("text/plain; version=0.0.4", svc.metrics.prometheus())
+        }
         Endpoint::Metrics => Response::ok_json(svc.metrics.snapshot()),
         Endpoint::IngestStatus => {
             let version = svc.retrieval().map(|e| e.version());
             Response::ok_json(svc.ingest_stats().to_json(version))
         }
         Endpoint::Stats => stats_response(svc),
-        Endpoint::Embed => embed_endpoint(body, svc, slo),
+        Endpoint::Trace => trace_endpoint(svc),
+        Endpoint::Embed => embed_endpoint(body, svc, slo, ctx.trace),
+        Endpoint::Search => search_endpoint(body, svc, slo, ctx.trace),
         Endpoint::CorpusSnapshot => match svc.snapshot_corpus() {
             Ok(watermark) => Response::ok_json(Json::obj(vec![(
                 "watermark",
@@ -477,7 +544,79 @@ fn stats_response(svc: &WindVE) -> Response {
             ]),
         ));
     }
+    if let Some(g) = svc.slo_governor() {
+        fields.push((
+            "slo",
+            Json::obj(vec![
+                ("slo_ms", Json::num(g.slo_nanos() as f64 / 1e6)),
+                ("attainment", Json::num(g.attainment())),
+                ("breached", Json::Bool(g.breached())),
+                ("samples", Json::num(g.samples() as f64)),
+                (
+                    "recommended_npu_depth",
+                    g.recommended_depth().map_or(Json::Null, |d| Json::num(d as f64)),
+                ),
+                ("retunes", Json::num(g.retunes() as f64)),
+            ]),
+        ));
+    }
+    // Per-stage latency quantiles, one object per populated labeled
+    // series (`trace.<stage>.<class>.<route>.<codec>`).
+    if svc.tracer().is_some() {
+        let stages: Vec<(String, Json)> = svc
+            .metrics
+            .histograms()
+            .into_iter()
+            .filter(|(name, h)| name.starts_with("trace.") && h.count() > 0)
+            .map(|(name, h)| {
+                (
+                    name,
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("p50_ns", Json::num(h.quantile(0.50) as f64)),
+                        ("p95_ns", Json::num(h.p95() as f64)),
+                        ("p99_ns", Json::num(h.p99() as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        fields.push(("stages", Json::Obj(stages)));
+    }
     Response::ok_json(Json::obj(fields))
+}
+
+/// `GET /v1/trace`: the recent-span ring plus the slow-query log, newest
+/// data first-class for a human chasing one request by `X-Trace-Id`.
+fn trace_endpoint(svc: &WindVE) -> Response {
+    let Some(tr) = svc.tracer() else {
+        return Response::ok_json(Json::obj(vec![
+            ("enabled", Json::Bool(false)),
+            ("spans", Json::Arr(Vec::new())),
+            ("slow", Json::Arr(Vec::new())),
+        ]));
+    };
+    let span_json = |s: &crate::metrics::SpanRecord| {
+        Json::obj(vec![
+            ("trace_id", Json::num(s.trace_id as f64)),
+            ("stage", Json::str(s.stage.as_str())),
+            ("class", Json::str(s.class.as_str())),
+            ("route", Json::str(s.route.as_str())),
+            ("codec", Json::str(s.codec.as_str())),
+            ("start_ns", Json::num(s.start_ns as f64)),
+            ("dur_ns", Json::num(s.dur_ns as f64)),
+        ])
+    };
+    let spans: Vec<Json> = tr.snapshot().iter().map(span_json).collect();
+    let slow: Vec<Json> = tr.slow_snapshot().iter().map(span_json).collect();
+    Response::ok_json(Json::obj(vec![
+        ("enabled", Json::Bool(true)),
+        ("capacity", Json::num(tr.capacity() as f64)),
+        ("recorded", Json::num(tr.recorded() as f64)),
+        ("dropped", Json::num(tr.dropped() as f64)),
+        ("slow_threshold_ns", Json::num(tr.slow_threshold_ns() as f64)),
+        ("spans", Json::Arr(spans)),
+        ("slow", Json::Arr(slow)),
+    ]))
 }
 
 /// `Retry-After` seconds for a 503: scale with combined queue occupancy
@@ -525,7 +664,7 @@ fn summary(o: &ingest::IngestOutcome) -> String {
 /// text by `Arc<str>` — the only copy is input bytes → shared payload
 /// (escape-free strings are borrowed straight from the body until that
 /// point; no intermediate `String` per text).
-fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration) -> Response {
+fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration, trace: u64) -> Response {
     use crate::ingest::ndjson::{parse_slice, Value};
 
     let parsed = match parse_slice(body.as_bytes()) {
@@ -549,9 +688,10 @@ fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration) -> Response {
     }
 
     // Admit all texts first (each is one Algorithm-1 query), then wait.
+    let t0 = Instant::now();
     let mut tickets = Vec::with_capacity(texts.len());
     for t in &texts {
-        match svc.submit(Arc::clone(t)) {
+        match svc.submit_traced(Arc::clone(t), trace) {
             Ok(ticket) => tickets.push(ticket),
             Err(ServeError::Busy) => {
                 // Busy any → reject the whole request with 'busy' status
@@ -570,10 +710,16 @@ fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration) -> Response {
     let mut routes = Vec::with_capacity(tickets.len());
     for tk in tickets {
         routes.push(tk.route.to_string());
+        let route = tk.route;
         match tk.wait(slo.mul_f64(4.0)) {
-            Ok(v) => embeddings.push(Json::Arr(
-                v.into_iter().map(|x| Json::Num(x as f64)).collect(),
-            )),
+            Ok(v) => {
+                // Feed the live SLO governor the served e2e (admission
+                // through reply) — this is the latency the SLO is about.
+                svc.observe_slo(route, t0.elapsed());
+                embeddings.push(Json::Arr(
+                    v.into_iter().map(|x| Json::Num(x as f64)).collect(),
+                ));
+            }
             Err(e) => return Response::server_error(&e.to_string()),
         }
     }
@@ -583,5 +729,69 @@ fn embed_endpoint(body: &str, svc: &WindVE, slo: Duration) -> Response {
             "routes",
             Json::Arr(routes.into_iter().map(Json::Str).collect()),
         ),
+    ]))
+}
+
+/// `POST /v1/search`: embed the query panel and answer it with one
+/// batched top-k scan (the paper's RAG retrieval path). Carries the
+/// request trace so the span tree covers embed → scan → merge.
+fn search_endpoint(body: &str, svc: &WindVE, slo: Duration, trace: u64) -> Response {
+    use crate::ingest::ndjson::{parse_slice, Value};
+
+    let parsed = match parse_slice(body.as_bytes()) {
+        Ok(v) => v,
+        Err(e) => return Response::bad_request(&format!("bad json: {e}")),
+    };
+    let queries: Vec<String> = match (parsed.get("queries"), parsed.get("query")) {
+        (Some(Value::Arr(items)), _) => items
+            .iter()
+            .filter_map(|q| q.as_str().map(|s| s.to_string()))
+            .collect(),
+        (None, Some(Value::Str(s))) => vec![s.to_string()],
+        _ => {
+            return Response::bad_request(
+                "expected {\"queries\": [...]} or {\"query\": \"...\"}",
+            )
+        }
+    };
+    if queries.is_empty() {
+        return Response::bad_request("no queries");
+    }
+    let k = parsed
+        .get("k")
+        .and_then(|v| v.as_f64())
+        .map(|f| f as usize)
+        .unwrap_or(10)
+        .max(1);
+
+    let results = svc.retrieve_blocking_traced(&queries, k, slo.mul_f64(4.0), trace);
+    // All-BUSY means admission rejected the whole panel — same 503 +
+    // Retry-After contract as /v1/embed. A partial panel still answers.
+    if results.iter().all(|r| matches!(r, Err(ServeError::Busy))) {
+        return Response::busy()
+            .with_header("Retry-After", retry_after_secs(svc).to_string());
+    }
+    let per_query: Vec<Json> = results
+        .into_iter()
+        .map(|r| match r {
+            Ok(hits) => Json::obj(vec![(
+                "hits",
+                Json::Arr(
+                    hits.into_iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("id", Json::num(h.id as f64)),
+                                ("score", Json::num(h.score as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+            Err(e) => Json::obj(vec![("error", Json::str(e.to_string()))]),
+        })
+        .collect();
+    Response::ok_json(Json::obj(vec![
+        ("k", Json::num(k as f64)),
+        ("results", Json::Arr(per_query)),
     ]))
 }

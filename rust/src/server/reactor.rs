@@ -240,12 +240,17 @@ struct ConnState {
     /// kind discriminant when an entry fires: Some → 408, None → idle
     /// close.
     deadline_at: Option<Instant>,
+    /// Respond-stage span in flight: (trace id, flush start). Set when a
+    /// traced response enters the write buffer, recorded when the last
+    /// byte flushes — so the span covers real socket time, not just
+    /// serialization.
+    pending_respond: Option<(u64, Instant)>,
 }
 
 /// Worker → reactor messages (paired with a wake byte).
 enum Msg {
     /// A handler finished: serialize + flush on the owning connection.
-    Response { token: u64, resp: Response, keep: bool },
+    Response { token: u64, resp: Response, keep: bool, trace: u64 },
     /// A detached streaming-ingest connection coming back for
     /// keep-alive.
     Reattach { token: u64, conn: Conn<TcpStream>, served: usize, gen: u64 },
@@ -416,6 +421,7 @@ impl Reactor {
                             gen: 0,
                             interest: READ,
                             deadline_at: None,
+                            pending_respond: None,
                         },
                     );
                     self.arm_idle(token);
@@ -670,16 +676,20 @@ impl Reactor {
         st.interest = 0;
         let _ = self.poller.reregister(fd, token, 0);
         let keep = head.wants_keep_alive() && served + 1 < MAX_REQUESTS_PER_CONN;
+        // Mint the trace on the reactor thread (accept-side), same as the
+        // threaded server: queue_wait measured by workers starts from a
+        // request that already owns its ID.
+        let ctx = super::ReqCtx::new(&self.svc, &head);
         let svc = Arc::clone(&self.svc);
         let slo = self.slo;
         let tx = self.msg_tx.clone();
         let wk = Arc::clone(&self.wake_tx);
         self.pool.execute(move || {
             let resp = match String::from_utf8(body) {
-                Ok(s) => super::dispatch_outcome(&outcome, &s, &svc, slo),
+                Ok(s) => super::dispatch_outcome(&outcome, &s, &svc, slo, &ctx),
                 Err(e) => Response::bad_request(&e.to_string()),
             };
-            let _ = tx.send(Msg::Response { token, resp, keep });
+            let _ = tx.send(Msg::Response { token, resp, keep, trace: ctx.trace });
             wake(&wk);
         });
     }
@@ -736,7 +746,7 @@ impl Reactor {
 
     fn on_msg(&mut self, msg: Msg) {
         match msg {
-            Msg::Response { token, resp, keep } => {
+            Msg::Response { token, resp, keep, trace } => {
                 let st = match self.conns.get_mut(&token) {
                     Some(s) => s,
                     None => return, // conn died while the handler ran
@@ -748,6 +758,7 @@ impl Reactor {
                 st.out_pos = 0;
                 st.close_after_flush = !keep;
                 st.phase = Phase::Flush;
+                st.pending_respond = (trace != 0).then(|| (trace, Instant::now()));
                 self.flush(token);
             }
             Msg::Reattach { token, conn, served, gen } => {
@@ -777,6 +788,7 @@ impl Reactor {
                 gen,
                 interest: READ,
                 deadline_at: None,
+                pending_respond: None,
             },
         );
         if pipelined {
@@ -851,14 +863,17 @@ impl Reactor {
     /// A response fully flushed: close, or rotate back to Head and
     /// immediately drive any pipelined request already buffered.
     fn finish_response(&mut self, token: u64) {
-        let close = match self.conns.get_mut(&token) {
+        let (close, pending) = match self.conns.get_mut(&token) {
             Some(st) => {
                 st.out = Vec::new();
                 st.out_pos = 0;
-                st.close_after_flush
+                (st.close_after_flush, st.pending_respond.take())
             }
             None => return,
         };
+        if let Some((trace, t0)) = pending {
+            super::record_respond(&self.svc, trace, t0);
+        }
         if close {
             self.close(token);
             return;

@@ -32,8 +32,13 @@ pub enum Endpoint {
     Stats,
     /// `GET /v1/ingest/status` — ingest counters.
     IngestStatus,
+    /// `GET /v1/trace` — recent request spans + the slow-query log.
+    Trace,
     /// `POST /v1/embed` — embed a batch of texts.
     Embed,
+    /// `POST /v1/search` — embed a panel of queries and answer them with
+    /// one batched top-k scan (the traced retrieval path).
+    Search,
     /// `POST /v1/corpus` — streaming NDJSON ingest (body never
     /// materialized; both server modes special-case it).
     CorpusIngest,
@@ -106,9 +111,21 @@ static ROUTES: &[Route] = &[
         deprecated: false,
     },
     Route {
+        method: "GET",
+        segs: &[Seg::Lit("v1"), Seg::Lit("trace")],
+        endpoint: Endpoint::Trace,
+        deprecated: false,
+    },
+    Route {
         method: "POST",
         segs: &[Seg::Lit("v1"), Seg::Lit("embed")],
         endpoint: Endpoint::Embed,
+        deprecated: false,
+    },
+    Route {
+        method: "POST",
+        segs: &[Seg::Lit("v1"), Seg::Lit("search")],
+        endpoint: Endpoint::Search,
         deprecated: false,
     },
     Route {
@@ -245,7 +262,9 @@ mod tests {
         assert_eq!(must_match("GET", "/v1/metrics").endpoint, Endpoint::Metrics);
         assert_eq!(must_match("GET", "/v1/stats").endpoint, Endpoint::Stats);
         assert_eq!(must_match("GET", "/v1/ingest/status").endpoint, Endpoint::IngestStatus);
+        assert_eq!(must_match("GET", "/v1/trace").endpoint, Endpoint::Trace);
         assert_eq!(must_match("POST", "/v1/embed").endpoint, Endpoint::Embed);
+        assert_eq!(must_match("POST", "/v1/search").endpoint, Endpoint::Search);
         assert_eq!(must_match("POST", "/v1/corpus").endpoint, Endpoint::CorpusIngest);
         assert_eq!(
             must_match("POST", "/v1/corpus/snapshot").endpoint,

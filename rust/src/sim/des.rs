@@ -28,7 +28,8 @@ use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::queue_manager::{ClassCaps, QueueManager, Route, WorkClass};
 use crate::devices::profile::DeviceProfile;
-use crate::metrics::Histogram;
+use crate::metrics::trace::{stage_metric_name, ClassLabel, CodecLabel, RouteLabel, Stage};
+use crate::metrics::{Histogram, Registry};
 use crate::util::rng::Pcg;
 
 /// Aggregate results of an open-loop run.
@@ -168,6 +169,13 @@ pub struct MixedStats {
     pub cpu_depth: usize,
     /// The calibrated NPU pool the run was bounded by.
     pub npu_depth: usize,
+    /// Per-stage latency histograms under the **live metric schema**
+    /// (`trace.<stage>.<class>.<route>.<codec>`, see
+    /// [`crate::metrics::trace::STAGE_METRICS`]): queue_wait and embed
+    /// per batch leg, scan per retrieval leg, ingest embeds under the
+    /// ingest class. Virtual nanoseconds, so DES scenarios compare
+    /// directly against `/v1/stats` stage quantiles.
+    pub stage_metrics: Registry,
 }
 
 impl MixedStats {
@@ -288,6 +296,11 @@ impl OpenLoopSim {
         let mut cpu_busy = false;
         let mut npu_inflight: Vec<f64> = Vec::new();
         let mut cpu_inflight: Vec<f64> = Vec::new();
+        // Batch dispatch instants: splits each query's e2e latency into
+        // queue_wait (enqueue → dispatch) and embed (dispatch → done)
+        // for the stage histograms.
+        let mut npu_started = 0.0f64;
+        let mut cpu_started = 0.0f64;
         // Scan cost units in flight — equals the manager's retrieval
         // occupancy under admission, and the shadow the accounting
         // *would* have tracked in baseline mode.
@@ -339,6 +352,20 @@ impl OpenLoopSim {
             oversub_events: 0,
             cpu_depth: cpu_pool,
             npu_depth: self.npu_depth,
+            stage_metrics: Registry::new(),
+        };
+
+        // Emit stage latencies under the live names so a DES run and a
+        // `/v1/stats` snapshot are schema-interchangeable (virtual ns).
+        let record_stage = |reg: &Registry,
+                            stage: Stage,
+                            class: ClassLabel,
+                            route: RouteLabel,
+                            codec: CodecLabel,
+                            secs: f64| {
+            if let Some(name) = stage_metric_name(stage, class, route, codec) {
+                reg.histogram(name).record((secs.max(0.0) * 1e9) as u64);
+            }
         };
 
         while let Some(Reverse((tkey, _, tag))) = heap.pop() {
@@ -358,6 +385,7 @@ impl OpenLoopSim {
                         npu_inflight = npu_q.drain(..b).collect();
                         let st = self.npu.noisy_service_time(b, self.qlen, &mut rng);
                         npu_busy = true;
+                        npu_started = now;
                         push(&mut heap, now + st, 1, &mut seq);
                     }
                     if hetero && !cpu_busy && !cpu_q.is_empty() {
@@ -369,22 +397,40 @@ impl OpenLoopSim {
                             .unwrap()
                             .noisy_service_time(b, self.qlen, &mut rng);
                         cpu_busy = true;
+                        cpu_started = now;
                         push(&mut heap, now + st, 2, &mut seq);
                     }
                 }
                 1 | 2 => {
                     let is_npu = tag == 1;
-                    let (inflight, q, busy, depth) = if is_npu {
-                        (&mut npu_inflight, &mut npu_q, &mut npu_busy, self.npu_depth)
+                    let (inflight, q, busy, depth, started) = if is_npu {
+                        (&mut npu_inflight, &mut npu_q, &mut npu_busy, self.npu_depth, &mut npu_started)
                     } else {
-                        (&mut cpu_inflight, &mut cpu_q, &mut cpu_busy, self.cpu_depth)
+                        (&mut cpu_inflight, &mut cpu_q, &mut cpu_busy, self.cpu_depth, &mut cpu_started)
                     };
+                    let route = if is_npu { RouteLabel::Npu } else { RouteLabel::Cpu };
                     for enq in inflight.drain(..) {
                         let lat = now - enq;
                         stats.embed.latency_us.record((lat * 1e6) as u64);
                         if lat > self.slo {
                             stats.embed.slo_violations += 1;
                         }
+                        record_stage(
+                            &stats.stage_metrics,
+                            Stage::QueueWait,
+                            ClassLabel::Embed,
+                            route,
+                            CodecLabel::All,
+                            *started - enq,
+                        );
+                        record_stage(
+                            &stats.stage_metrics,
+                            Stage::Embed,
+                            ClassLabel::Embed,
+                            route,
+                            CodecLabel::All,
+                            now - *started,
+                        );
                         if is_npu {
                             stats.embed.served_npu += 1;
                         } else {
@@ -401,6 +447,7 @@ impl OpenLoopSim {
                         let st = profile.noisy_service_time(b, self.qlen, &mut rng);
                         *inflight = batch;
                         *busy = true;
+                        *started = now;
                         push(&mut heap, now + st, tag, &mut seq);
                     }
                 }
@@ -438,12 +485,28 @@ impl OpenLoopSim {
                     if load.admission {
                         qm.release_class(WorkClass::Retrieve, Route::Cpu, scan_cost);
                     }
+                    record_stage(
+                        &stats.stage_metrics,
+                        Stage::Scan,
+                        ClassLabel::Retrieve,
+                        RouteLabel::Cpu,
+                        CodecLabel::F32,
+                        load.service_time,
+                    );
                 }
                 5 => {
                     stats.retrieve_served += 1;
                     stats.retrieve_served_npu += 1;
                     retr_npu_inflight = retr_npu_inflight.saturating_sub(npu_scan_cost);
                     qm.release_class(WorkClass::Retrieve, Route::Npu, npu_scan_cost);
+                    record_stage(
+                        &stats.stage_metrics,
+                        Stage::Scan,
+                        ClassLabel::Retrieve,
+                        RouteLabel::Npu,
+                        CodecLabel::F32,
+                        load.service_time,
+                    );
                 }
                 6 => {
                     stats.ingest_arrived += 1;
@@ -471,12 +534,28 @@ impl OpenLoopSim {
                     stats.ingest_served += 1;
                     ingest_inflight = ingest_inflight.saturating_sub(ingest_cost);
                     qm.release_class(WorkClass::Ingest, Route::Cpu, ingest_cost);
+                    record_stage(
+                        &stats.stage_metrics,
+                        Stage::Embed,
+                        ClassLabel::Ingest,
+                        RouteLabel::Cpu,
+                        CodecLabel::All,
+                        ingest.service_time,
+                    );
                 }
                 8 => {
                     stats.ingest_served += 1;
                     stats.ingest_served_npu += 1;
                     ingest_npu_inflight = ingest_npu_inflight.saturating_sub(npu_ingest_cost);
                     qm.release_class(WorkClass::Ingest, Route::Npu, npu_ingest_cost);
+                    record_stage(
+                        &stats.stage_metrics,
+                        Stage::Embed,
+                        ClassLabel::Ingest,
+                        RouteLabel::Npu,
+                        CodecLabel::All,
+                        ingest.service_time,
+                    );
                 }
                 _ => unreachable!(),
             }
@@ -906,6 +985,51 @@ mod tests {
         assert_eq!(a.peak_npu_cost, b.peak_npu_cost);
         assert_eq!(a.oversub_events, b.oversub_events);
         assert_eq!(a.embed.reject_rate().to_bits(), b.embed.reject_rate().to_bits());
+    }
+
+    /// The DES emits per-stage histograms under the exact live metric
+    /// schema: every emitted name is one of `STAGE_METRICS`, and the
+    /// stage counts reconcile with the serving counters — a DES run and
+    /// a `/v1/stats` snapshot are directly comparable.
+    #[test]
+    fn stage_metrics_match_live_schema() {
+        use crate::metrics::trace::STAGE_METRICS;
+        let s = sim(true);
+        let embeds: Vec<f64> = (0..200).map(|i| i as f64 * 0.02).collect();
+        let scans: Vec<f64> = (0..40).map(|i| 0.01 + i as f64 * 0.1).collect();
+        let st = s.run_mixed(&offload_load(16), &embeds, &scans);
+
+        let live: Vec<&str> = STAGE_METRICS.iter().map(|&(n, ..)| n).collect();
+        let mut embed_count = 0;
+        let mut wait_count = 0;
+        let mut scan_count = 0;
+        for (name, h) in st.stage_metrics.histograms() {
+            assert!(live.contains(&name.as_str()), "{name} not in the live schema");
+            if name.starts_with("trace.embed.embed.") {
+                embed_count += h.count();
+            }
+            if name.starts_with("trace.queue_wait.embed.") {
+                wait_count += h.count();
+            }
+            if name.starts_with("trace.scan.retrieve.") {
+                scan_count += h.count();
+            }
+        }
+        assert_eq!(embed_count, st.embed.served());
+        assert_eq!(wait_count, st.embed.served());
+        assert_eq!(scan_count, st.retrieve_served);
+        // Both retrieval legs ran, so both labeled series exist.
+        assert!(st.retrieve_served_npu > 0);
+        assert!(st
+            .stage_metrics
+            .histograms()
+            .iter()
+            .any(|(n, h)| n.as_str() == "trace.scan.retrieve.npu.f32" && h.count() > 0));
+        assert!(st
+            .stage_metrics
+            .histograms()
+            .iter()
+            .any(|(n, h)| n.as_str() == "trace.scan.retrieve.cpu.f32" && h.count() > 0));
     }
 
     #[test]

@@ -1,0 +1,91 @@
+//! Loom models for the span-ring seqlock (PR 10): concurrent writers
+//! and a racing snapshot can never surface a torn record — a reader
+//! either sees a slot's four fields from one coherent write or skips
+//! the slot entirely.
+
+use crate::harness::model;
+use loom::sync::Arc;
+use loom::thread;
+use windve::metrics::{ClassLabel, CodecLabel, RouteLabel, SpanRecord, SpanRing, Stage};
+
+/// A record whose fields are all derived from `trace_id` — any mix of
+/// fields from two different writes is detectable.
+fn rec(trace_id: u64) -> SpanRecord {
+    SpanRecord {
+        trace_id,
+        stage: Stage::Embed,
+        class: ClassLabel::Embed,
+        route: RouteLabel::Npu,
+        codec: CodecLabel::All,
+        start_ns: trace_id * 10,
+        dur_ns: trace_id * 3,
+    }
+}
+
+fn coherent(r: &SpanRecord) -> bool {
+    r.start_ns == r.trace_id * 10 && r.dur_ns == r.trace_id * 3
+}
+
+/// Two writers racing a capacity-2 ring while a reader snapshots
+/// mid-flight: every record the snapshot returns is coherent (the
+/// seqlock revalidation discarded anything torn), and the final
+/// snapshot sees both records.
+#[test]
+fn snapshot_never_observes_a_torn_record() {
+    model(|| {
+        let ring = Arc::new(SpanRing::new(2));
+        let writers: Vec<_> = (1..=2u64)
+            .map(|id| {
+                let ring = Arc::clone(&ring);
+                thread::spawn(move || ring.push(rec(id)))
+            })
+            .collect();
+        let reader = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                for r in ring.snapshot() {
+                    assert!(coherent(&r), "torn record surfaced: {r:?}");
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        // At rest the ring holds exactly the two coherent records.
+        let fin = ring.snapshot();
+        assert_eq!(fin.len(), 2);
+        assert!(fin.iter().all(coherent));
+        let mut ids: Vec<u64> = fin.iter().map(|r| r.trace_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2]);
+    });
+}
+
+/// Overwrite-oldest under same-slot contention: three pushes racing a
+/// capacity-1 ring never tear and never exceed the bound. The slot
+/// claim serializes writers, so at most one record survives — coherent
+/// in every schedule — and claim-race losers are dropped, not mixed.
+#[test]
+fn overwrite_oldest_is_bounded_and_coherent() {
+    model(|| {
+        let ring = Arc::new(SpanRing::new(1));
+        let writers: Vec<_> = (1..=3u64)
+            .map(|id| {
+                let ring = Arc::clone(&ring);
+                thread::spawn(move || ring.push(rec(id)))
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        let fin = ring.snapshot();
+        assert!(fin.len() <= 1, "capacity-1 ring held {} records", fin.len());
+        for r in &fin {
+            assert!(coherent(r), "torn record surfaced: {r:?}");
+            assert!((1..=3).contains(&r.trace_id));
+        }
+        assert_eq!(ring.recorded(), 3);
+        assert_eq!(ring.dropped(), 2);
+    });
+}

@@ -31,6 +31,9 @@
 //!   recovery path counts and recovers.
 //! * `cache` — the LRU stats snapshot: `hits + misses == gets`, `len`
 //!   never exceeds capacity, evictions account for the overflow.
+//! * `trace` — the span-ring seqlock: a snapshot racing writers never
+//!   surfaces a torn record, same-slot claim races drop (not mix)
+//!   records, and capacity is a hard bound in every schedule.
 #![cfg(loom)]
 
 mod harness {
@@ -58,3 +61,5 @@ mod guard;
 mod executor;
 #[path = "loom/cache.rs"]
 mod cache;
+#[path = "loom/trace.rs"]
+mod trace;

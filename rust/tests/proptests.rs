@@ -102,6 +102,7 @@ fn prop_device_queue_fifo_conservation() {
                 text: format!("q{i}").into(),
                 class: WorkClass::Embed,
                 enqueued: std::time::Instant::now(),
+                trace: 0,
                 reply: i,
             });
         }
@@ -206,6 +207,46 @@ fn prop_histogram_quantiles_sane() {
         }
         if h.quantile(1.0) > max {
             return Err("p100 exceeds max".into());
+        }
+        Ok(())
+    });
+}
+
+/// Histogram quantile *accuracy*: against the exact order statistic of
+/// the recorded sample, the estimate is never below it and overshoots by
+/// at most one bucket width (~1/32 relative — the log-bucket design
+/// contract the `/v1/stats` stage quantiles rely on).
+#[test]
+fn prop_histogram_quantile_within_bucket_width() {
+    property("histogram quantile within one bucket", 60, |g: &mut Gen| {
+        let h = Histogram::new();
+        let n = g.usize(32, 2000);
+        // Mix magnitudes so both the identity-mapped region and the
+        // log-bucketed region are exercised.
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| match g.usize(0, 2) {
+                0 => g.u64(1, 64),
+                1 => g.u64(64, 100_000),
+                _ => g.u64(100_000, 10_000_000_000),
+            })
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for &q in &[0.5, 0.9, 0.95, 0.99] {
+            let rank = ((q * n as f64).ceil() as usize).max(1) - 1;
+            let exact = vals[rank];
+            let est = h.quantile(q);
+            if est < exact {
+                return Err(format!("q={q}: est {est} below exact {exact}"));
+            }
+            let slack = exact / 32 + 2;
+            if est - exact > slack {
+                return Err(format!(
+                    "q={q}: est {est} vs exact {exact} exceeds bucket width {slack}"
+                ));
+            }
         }
         Ok(())
     });
@@ -331,6 +372,7 @@ fn prop_service_reply_conservation() {
             Box::new(|| Ok(Box::new(CountBackend) as Box<dyn windve::devices::executor::Backend>)),
             Registry::new(),
             None,
+            None,
         );
         let n = g.usize(1, 60);
         let mut rxs = Vec::new();
@@ -341,6 +383,7 @@ fn prop_service_reply_conservation() {
                 text: "x".repeat(i % 17 + 1).into(),
                 class: WorkClass::Embed,
                 enqueued: std::time::Instant::now(),
+                trace: 0,
                 reply: tx,
             });
             rxs.push((i % 17 + 1, rx));

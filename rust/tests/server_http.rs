@@ -861,3 +861,261 @@ fn deprecated_aliases_serve_with_deprecation_header() {
     }
     server.stop();
 }
+
+// ---------------------------------------------------------------------------
+// Observability: request tracing, stage quantiles, Prometheus exposition.
+
+/// One-shot request with extra raw header lines (each must end in
+/// `\r\n`), for content-negotiation tests the fixed-header helpers
+/// can't express.
+fn request_with_headers(
+    addr: std::net::SocketAddr,
+    method: &str,
+    path: &str,
+    extra: &str,
+    body: &str,
+) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream
+        .write_all(
+            format!(
+                "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n{extra}Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let head = raw.split("\r\n\r\n").next().unwrap_or("").to_string();
+    let (status, rbody) = parse_response(&raw);
+    (status, head, rbody)
+}
+
+/// The tentpole acceptance scenario: one `POST /v1/search` produces a
+/// complete span tree — queue_wait → batch_form → embed → scan → merge
+/// → respond, all under the `X-Trace-Id` the response carried — visible
+/// through `GET /v1/trace`, with the stage durations summing to no more
+/// than the client-observed wall time (the stages are disjoint slices
+/// of the request's lifetime).
+#[test]
+fn search_serves_complete_span_tree_via_trace_endpoint() {
+    use windve::testing::pseudo_embedding;
+
+    let (server, _svc, exec) = start_ingest_server(8, 4);
+    for i in 0..8u64 {
+        exec.add(i, &pseudo_embedding(&format!("span doc {i}"), 64));
+    }
+    let t0 = std::time::Instant::now();
+    let (status, head, body) = request_with_head(
+        server.addr(),
+        "POST",
+        "/v1/search",
+        r#"{"queries":["what is a span tree"],"k":3}"#,
+    );
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    assert_eq!(status, 200, "{body}");
+    let trace_id: u64 = header(&head, "X-Trace-Id")
+        .expect("traced response must carry X-Trace-Id")
+        .parse()
+        .unwrap();
+    assert!(trace_id != 0);
+    let v = json::parse(&body).unwrap();
+    let results = v.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 1, "{body}");
+    assert!(!results[0].get("hits").unwrap().as_arr().unwrap().is_empty(), "{body}");
+
+    // The respond span lands just after the response bytes flush, so
+    // poll briefly rather than race the server's last store.
+    let want = ["queue_wait", "batch_form", "embed", "scan", "merge", "respond"];
+    let mut spans: Vec<json::Json> = Vec::new();
+    for _ in 0..50 {
+        let (status, tbody) = request(server.addr(), "GET", "/v1/trace", "");
+        assert_eq!(status, 200, "{tbody}");
+        let t = json::parse(&tbody).unwrap();
+        assert_eq!(t.get("enabled").unwrap().as_bool(), Some(true));
+        spans = t
+            .get("spans")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|s| s.get("trace_id").and_then(|x| x.as_u64()) == Some(trace_id))
+            .cloned()
+            .collect();
+        let have =
+            |st: &str| spans.iter().any(|s| s.get("stage").and_then(|x| x.as_str()) == Some(st));
+        if want.iter().all(|st| have(st)) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for st in want {
+        assert!(
+            spans.iter().any(|s| s.get("stage").and_then(|x| x.as_str()) == Some(st)),
+            "stage {st} missing from span tree: {spans:?}"
+        );
+    }
+    // Labels hold the class/route/codec projection the schema promises.
+    for s in &spans {
+        match s.get("stage").and_then(|x| x.as_str()).unwrap() {
+            "scan" => {
+                assert_eq!(s.get("class").unwrap().as_str(), Some("retrieve"));
+                assert_eq!(s.get("codec").unwrap().as_str(), Some("f32"));
+            }
+            "respond" => assert_eq!(s.get("route").unwrap().as_str(), Some("all")),
+            _ => assert!(matches!(s.get("route").unwrap().as_str(), Some("npu" | "cpu"))),
+        }
+    }
+    // Stage durations are disjoint slices of the request: their sum is
+    // positive and bounded by the client-observed wall time.
+    let sum: u64 = spans.iter().map(|s| s.get("dur_ns").unwrap().as_u64().unwrap()).sum();
+    assert!(sum > 0, "{spans:?}");
+    assert!(sum <= wall_ns, "span sum {sum} ns exceeds wall {wall_ns} ns");
+    server.stop();
+}
+
+/// Content negotiation on `/v1/metrics`: `Accept: text/plain` serves a
+/// parseable Prometheus 0.0.4 exposition with the stage-duration family
+/// populated after traffic, while the default (no Accept) stays JSON.
+#[test]
+fn metrics_content_negotiation_serves_prometheus_text() {
+    let (server, _svc) = start_server(8, 4);
+    let (status, body) =
+        request(server.addr(), "POST", "/v1/embed", r#"{"texts":["prom a","prom b"]}"#);
+    assert_eq!(status, 200, "{body}");
+
+    let (status, head, text) = request_with_headers(
+        server.addr(),
+        "GET",
+        "/v1/metrics",
+        "Accept: text/plain\r\n",
+        "",
+    );
+    assert_eq!(status, 200, "{text}");
+    let ctype = header(&head, "Content-Type").unwrap();
+    assert!(ctype.starts_with("text/plain"), "{ctype}");
+    assert!(ctype.contains("version=0.0.4"), "{ctype}");
+    assert!(text.contains("# TYPE windve_service_accepted counter\n"), "{text}");
+    assert!(text.contains("windve_stage_duration_ns{stage=\"embed\",class=\"embed\","), "{text}");
+    // Every sample line is `name[{labels}] value` — two tokens once the
+    // label block is stripped; that is what a scraper parses.
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let stripped = match (line.find('{'), line.rfind('}')) {
+            (Some(a), Some(b)) if a < b => format!("{}{}", &line[..a], &line[b + 1..]),
+            _ => line.to_string(),
+        };
+        assert_eq!(stripped.split_whitespace().count(), 2, "unparseable line: {line}");
+    }
+
+    // The historic contract survives negotiation: no Accept → JSON.
+    let (status, jbody) = request(server.addr(), "GET", "/v1/metrics", "");
+    assert_eq!(status, 200);
+    assert!(json::parse(&jbody).unwrap().get("service.accepted").is_some(), "{jbody}");
+    server.stop();
+}
+
+fn start_slo_server(slo: Duration) -> (Server, Arc<WindVE>) {
+    let svc = Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 8,
+                cpu_depth: 4,
+                hetero: true,
+                npu_workers: 1,
+                cpu_workers: 1,
+                cpu_pin_cores: None,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+                slo: Some(slo),
+                slo_window: 16,
+                ..ServiceConfig::default()
+            },
+            vec![synth_factory(1)],
+            vec![synth_factory(2)],
+        )
+        .unwrap(),
+    );
+    let server = Server::start("127.0.0.1:0", Arc::clone(&svc), Duration::from_secs(2)).unwrap();
+    (server, svc)
+}
+
+/// `/v1/stats` carries the labeled stage-quantile block and the live
+/// SLO block once traffic has flowed: per-stage p50 ≤ p95 ≤ p99 under
+/// schema names, attainment/breached/recommended-depth from the
+/// governor.
+#[test]
+fn stats_surface_stage_quantiles_and_slo_block() {
+    let (server, _svc) = start_slo_server(Duration::from_millis(250));
+    for i in 0..3 {
+        let (status, body) = request(
+            server.addr(),
+            "POST",
+            "/v1/embed",
+            &format!(r#"{{"texts":["slo probe {i}a","slo probe {i}b"]}}"#),
+        );
+        assert_eq!(status, 200, "{body}");
+    }
+    let (status, body) = request(server.addr(), "GET", "/v1/stats", "");
+    assert_eq!(status, 200, "{body}");
+    let v = json::parse(&body).unwrap();
+
+    let stages = v.get("stages").expect("stages block in /v1/stats").as_obj().unwrap();
+    assert!(!stages.is_empty(), "{body}");
+    let mut saw_embed = false;
+    for (name, q) in stages {
+        assert!(name.starts_with("trace."), "{name}");
+        assert!(q.get("count").unwrap().as_u64().unwrap() > 0, "{name}");
+        let p50 = q.get("p50_ns").unwrap().as_u64().unwrap();
+        let p95 = q.get("p95_ns").unwrap().as_u64().unwrap();
+        let p99 = q.get("p99_ns").unwrap().as_u64().unwrap();
+        assert!(p50 <= p95 && p95 <= p99, "{name}: {p50} {p95} {p99}");
+        saw_embed |= name.starts_with("trace.embed.embed.");
+    }
+    assert!(saw_embed, "no embed stage series after embed traffic: {body}");
+
+    let slo = v.get("slo").expect("slo block in /v1/stats");
+    assert_eq!(slo.get("slo_ms").unwrap().as_f64(), Some(250.0), "{body}");
+    assert!(slo.get("samples").unwrap().as_u64().unwrap() >= 3, "{body}");
+    let att = slo.get("attainment").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&att), "{att}");
+    assert!(slo.get("breached").unwrap().as_bool().is_some(), "{body}");
+    assert!(slo.get("recommended_npu_depth").is_some(), "{body}");
+    assert!(slo.get("retunes").unwrap().as_u64().is_some(), "{body}");
+    server.stop();
+}
+
+/// `trace_capacity: 0` is the untraced baseline: no `X-Trace-Id`, and
+/// `/v1/trace` reports tracing disabled instead of an empty lie.
+#[test]
+fn trace_capacity_zero_disables_tracing() {
+    let svc = Arc::new(
+        WindVE::start(
+            ServiceConfig {
+                npu_depth: 4,
+                cpu_depth: 0,
+                hetero: false,
+                npu_workers: 1,
+                cpu_workers: 0,
+                cache_entries: 0,
+                cache_key_space: (8192, 128),
+                trace_capacity: 0,
+                ..ServiceConfig::default()
+            },
+            vec![synth_factory(1)],
+            vec![],
+        )
+        .unwrap(),
+    );
+    let server = Server::start("127.0.0.1:0", Arc::clone(&svc), Duration::from_secs(2)).unwrap();
+    let (status, head, body) =
+        request_with_head(server.addr(), "POST", "/v1/embed", r#"{"texts":["untraced"]}"#);
+    assert_eq!(status, 200, "{body}");
+    assert!(header(&head, "X-Trace-Id").is_none(), "untraced response carried a trace id");
+    let (status, tbody) = request(server.addr(), "GET", "/v1/trace", "");
+    assert_eq!(status, 200, "{tbody}");
+    let t = json::parse(&tbody).unwrap();
+    assert_eq!(t.get("enabled").unwrap().as_bool(), Some(false));
+    assert!(t.get("spans").unwrap().as_arr().unwrap().is_empty());
+    server.stop();
+}

@@ -91,6 +91,10 @@ const MIGRATED_MODULES: &[&str] = &[
     "src/coordinator/queue_manager.rs",
     "src/coordinator/cache.rs",
     "src/devices/executor.rs",
+    "src/metrics/trace.rs",
+    "src/metrics/histogram.rs",
+    "src/metrics/registry.rs",
+    "src/metrics/slo.rs",
 ];
 
 /// `std::sync` leaves that remain fine in migrated modules: loom swaps
@@ -457,5 +461,21 @@ mod tests {
         assert!(rules("src/coordinator/queue_manager.rs", fine).is_empty());
         // Non-migrated files may import std::sync directly.
         assert!(rules("src/coordinator/batcher.rs", banned).is_empty());
+    }
+
+    /// The metrics subsystem is loom-modeled (the trace-ring seqlock and
+    /// histogram cells), so the whole module family is migrated: raw
+    /// `std::sync` atomics there would silently escape the models.
+    #[test]
+    fn metrics_modules_are_migrated() {
+        let banned = "use std::sync::atomic::AtomicU64;";
+        for file in [
+            "src/metrics/trace.rs",
+            "src/metrics/histogram.rs",
+            "src/metrics/registry.rs",
+            "src/metrics/slo.rs",
+        ] {
+            assert_eq!(rules(file, banned), vec!["std-sync-import"], "{file}");
+        }
     }
 }
